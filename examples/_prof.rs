@@ -1,0 +1,52 @@
+// Manual phase profiler for the DSE campaign hot path (§Perf).
+use qadam::arch::SweepSpec;
+use qadam::dataflow::{map_model, Dataflow};
+use qadam::dnn::{models_for, Dataset};
+use qadam::dse::evaluate_with_synth;
+use qadam::energy::energy_of;
+use qadam::synth::synthesize;
+use std::time::Instant;
+
+fn main() {
+    let spec = SweepSpec::default();
+    let configs = spec.enumerate();
+    let models = models_for(Dataset::ImageNet);
+    // Phase 1: synthesis only.
+    let t = Instant::now();
+    let synths: Vec<_> = configs.iter().map(|c| synthesize(c, 7)).collect();
+    let t_synth = t.elapsed().as_secs_f64();
+    // Phase 2: mapping only.
+    let t = Instant::now();
+    let mut cycle_sum = 0u64;
+    for s in &synths {
+        for m in &models {
+            cycle_sum += map_model(m, &s.config, Dataflow::RowStationary).total_cycles;
+        }
+    }
+    let t_map = t.elapsed().as_secs_f64();
+    // Phase 3: energy only (re-map inside evaluate for apples-to-apples).
+    let t = Instant::now();
+    let mut e_sum = 0.0;
+    for s in &synths {
+        for m in &models {
+            let mapping = map_model(m, &s.config, Dataflow::RowStationary);
+            e_sum += energy_of(&mapping, s).total_uj();
+        }
+    }
+    let t_map_energy = t.elapsed().as_secs_f64();
+    // Phase 4: full evaluate.
+    let t = Instant::now();
+    let mut ppa_sum = 0.0;
+    for s in &synths {
+        for m in &models {
+            ppa_sum += evaluate_with_synth(s, m).perf_per_area;
+        }
+    }
+    let t_eval = t.elapsed().as_secs_f64();
+    println!("configs={} models={}", configs.len(), models.len());
+    println!("synthesis : {:.4}s ({:.1}us/config)", t_synth, 1e6*t_synth/configs.len() as f64);
+    println!("mapping   : {:.4}s ({:.1}us/(config,model))", t_map, 1e6*t_map/(configs.len()*3) as f64);
+    println!("map+energy: {:.4}s", t_map_energy);
+    println!("evaluate  : {:.4}s", t_eval);
+    println!("checks: {} {} {}", cycle_sum, e_sum as u64, ppa_sum as u64);
+}

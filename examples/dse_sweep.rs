@@ -1,0 +1,60 @@
+//! Design-space exploration campaign (the Fig. 4 workflow).
+//!
+//! Shards the full design space across a worker pool, evaluates every
+//! (config × model) pair for a dataset, normalizes against the best INT16
+//! configuration, prints the per-model headline ratios and the dataset
+//! geomean — the numbers §IV-A quotes (4.8×/4.1× perf/area, 4.7×/4× energy).
+//!
+//! Run: `cargo run --release --example dse_sweep [-- cifar10|cifar100|imagenet]`
+
+use qadam::arch::SweepSpec;
+use qadam::coordinator::{default_workers, Coordinator};
+use qadam::dnn::Dataset;
+use qadam::dse;
+use qadam::util::table::{format_sig, Table};
+
+fn main() {
+    let dataset = std::env::args()
+        .nth(1)
+        .and_then(|arg| Dataset::parse(&arg))
+        .unwrap_or(Dataset::Cifar10);
+    let spec = SweepSpec::default();
+    let coordinator = Coordinator::new(default_workers(), 7);
+    println!(
+        "exploring {} design points x {} models on {} workers...",
+        spec.len(),
+        dataset.paper_models().len(),
+        coordinator.workers
+    );
+    let db = coordinator.campaign(&spec, dataset);
+    println!(
+        "done in {:.2}s ({:.0} evaluations/s)\n",
+        db.stats.wall_seconds,
+        db.stats.evals_per_sec()
+    );
+
+    let mut table = Table::new(&["model", "pe", "perf/area gain", "energy gain", "best config"]);
+    for space in &db.spaces {
+        for (pe, ppa_gain, energy_gain) in dse::headline_ratios(&space.evals) {
+            let best = dse::best_perf_per_area(&space.evals, pe).unwrap();
+            table.row(&[
+                space.model_name.clone(),
+                pe.name().into(),
+                format_sig(ppa_gain, 3),
+                format_sig(energy_gain, 3),
+                best.config.id(),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+
+    println!("\n{} geomean vs best INT16 (paper: L1 4.8x/4.7x, L2 4.1x/4.0x):", dataset.name());
+    for (pe, ppa, energy) in db.headline_geomean() {
+        println!(
+            "  {:<10} {}x perf/area   {}x less energy",
+            pe.name(),
+            format_sig(ppa, 3),
+            format_sig(energy, 3)
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! End-to-end driver: the full three-layer stack on a real (small)
+//! workload, proving all layers compose (DESIGN.md §1):
+//!
+//!   L1 Pallas quantized-matmul kernels (inside every conv/fc, fwd + bwd)
+//!   L2 JAX QAT model, AOT-lowered to HLO text by `make artifacts`
+//!   L3 this rust driver: PJRT-compiles the artifacts and runs the whole
+//!      training loop — python never executes here.
+//!
+//! Trains the QAT CNN for a few hundred steps per PE type on synthetic
+//! CIFAR-like data, logs the loss curves, evaluates accuracy, then joins
+//! the measured accuracies with the DSE hardware metrics into the Fig. 5
+//! accuracy-vs-efficiency trade-off. Results recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example qat_end_to_end [-- steps]`
+
+use std::path::Path;
+
+use qadam::arch::SweepSpec;
+use qadam::coordinator::{default_workers, Coordinator};
+use qadam::dnn::{model_for, Dataset, ModelKind};
+use qadam::dse;
+use qadam::quant::PeType;
+use qadam::runtime::{QatDriver, Runtime};
+use qadam::util::table::{format_sig, Table};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let mut runtime = Runtime::new(&artifacts)?;
+    println!(
+        "PJRT runtime up ({} device); training {} steps per PE type\n",
+        runtime.device_count(),
+        steps
+    );
+
+    // --- Train all four PE types through the PJRT artifacts --------------
+    let mut outcomes = Vec::new();
+    for pe in PeType::ALL {
+        let t0 = std::time::Instant::now();
+        let outcome = QatDriver::train(&mut runtime, pe, steps, (steps / 8).max(1))?;
+        let dt = t0.elapsed().as_secs_f64();
+        print!("{:<10} loss:", pe.name());
+        for record in &outcome.loss_curve {
+            print!(" {:.3}", record.loss);
+        }
+        println!(
+            "  -> eval acc {:.3} ({:.1} steps/s)",
+            outcome.final_accuracy,
+            steps as f64 / dt
+        );
+        outcomes.push(outcome);
+    }
+
+    // --- Sanity: every curve must have learned something ------------------
+    for outcome in &outcomes {
+        let first = outcome.loss_curve.first().unwrap().loss;
+        let last = outcome.loss_curve.last().unwrap().loss;
+        assert!(
+            last < first,
+            "{}: loss did not decrease ({first} -> {last})",
+            outcome.pe.name()
+        );
+    }
+
+    // --- Join with DSE hardware metrics (measured Fig. 5 analogue) --------
+    println!("\njoining measured QAT accuracy with DSE hardware efficiency...");
+    let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    let evals =
+        Coordinator::new(default_workers(), 7).explore_model(&SweepSpec::default(), &model);
+    let mut table = Table::new(&[
+        "pe", "measured_acc", "final_loss", "norm_perf_per_area", "norm_energy",
+    ]);
+    let baseline = dse::best_perf_per_area(&evals, PeType::Int16).unwrap();
+    let base_energy = dse::best_energy(&evals, PeType::Int16).unwrap().energy_uj;
+    for outcome in &outcomes {
+        let best = dse::best_perf_per_area(&evals, outcome.pe).unwrap();
+        let best_e = dse::best_energy(&evals, outcome.pe).unwrap();
+        table.row(&[
+            outcome.pe.name().into(),
+            format_sig(outcome.final_accuracy as f64, 3),
+            format_sig(outcome.final_eval_loss as f64, 4),
+            format_sig(best.perf_per_area / baseline.perf_per_area, 3),
+            format_sig(best_e.energy_uj / base_energy, 3),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\nall three layers composed: Pallas kernels -> AOT HLO -> rust/PJRT training loop OK"
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the paper's Fig. 1 flow in ~40 lines.
+//!
+//! Feed accelerator parameters + a DNN configuration into the framework
+//! and read back power, performance, area, utilization, and memory-access
+//! statistics — for all four PE types side by side.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use qadam::arch::AcceleratorConfig;
+use qadam::dataflow::{map_model, Dataflow};
+use qadam::dnn::{model_for, Dataset, ModelKind};
+use qadam::energy::energy_of;
+use qadam::quant::PeType;
+use qadam::synth::synthesize;
+use qadam::util::table::{format_sig, Table};
+
+fn main() {
+    let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    println!(
+        "QADAM quickstart — {} ({}, {} MMACs/inference)\n",
+        model.name,
+        model.dataset.name(),
+        model.total_macs() / 1_000_000
+    );
+
+    let mut table = Table::new(&[
+        "pe", "area_mm2", "power_mw", "clock_ghz", "latency_ms", "util",
+        "chip_uJ", "dram_MB", "perf/area",
+    ]);
+    for pe in PeType::ALL {
+        // 16×16 PE array, 128 KiB GLB, Eyeriss-like scratchpads.
+        let config = AcceleratorConfig { pe, ..Default::default() };
+
+        // 1. "Synthesize" the design (Synopsys DC stand-in).
+        let synth = synthesize(&config, /*seed=*/ 7);
+
+        // 2. Map the DNN with the row-stationary dataflow.
+        let mapping = map_model(&model, &config, Dataflow::RowStationary);
+
+        // 3. Combine into energy + the paper's efficiency metrics.
+        let energy = energy_of(&mapping, &synth);
+        let latency_ms = mapping.latency_s(synth.achieved_clock_ghz) * 1e3;
+        let perf_per_area =
+            (1e3 / latency_ms) / synth.area.total_mm2();
+
+        table.row(&[
+            pe.name().into(),
+            format_sig(synth.area.total_mm2(), 4),
+            format_sig(synth.total_power_mw(), 4),
+            format_sig(synth.achieved_clock_ghz, 3),
+            format_sig(latency_ms, 4),
+            format_sig(mapping.avg_utilization, 3),
+            format_sig(energy.chip_uj(), 4),
+            format_sig(mapping.traffic.dram_bytes as f64 / 1e6, 4),
+            format_sig(perf_per_area, 4),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("\nLightPEs: smallest area, least energy — the paper's headline, in one table.");
+}

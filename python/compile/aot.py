@@ -1,0 +1,179 @@
+"""AOT export: lower the L2 model (with L1 Pallas kernels inside) to HLO
+*text* artifacts the rust runtime loads via PJRT.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts (per PE type ∈ {fp32, int16, lightpe1, lightpe2}):
+
+* ``train_<pe>.hlo.txt`` — one SGD+momentum step:
+  ``(conv1, conv2, fc, m1, m2, m3, images, labels)``
+  → ``(conv1', conv2', fc', m1', m2', m3', loss)``
+* ``eval_<pe>.hlo.txt``  — ``(conv1, conv2, fc, images, labels)``
+  → ``(accuracy, loss)``
+
+Plus ``init.hlo.txt`` (zero-arg → initial params), ``batch.hlo.txt``
+(``(seed) → (images, labels)`` synthetic batch generator, so the rust
+driver needs no RNG of its own), ``kernel_smoke.hlo.txt`` (a small
+quantized matmul for runtime unit tests), and ``manifest.json`` describing
+every artifact's signature.
+
+Run once via ``make artifacts``; python never executes on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import quant_matmul as qm
+from .kernels import ref
+
+PE_TYPES = ref.PE_TYPES
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs():
+    return [spec(model.PARAM_SHAPES[k]) for k in model.param_order()]
+
+
+def batch_specs():
+    images = spec((model.BATCH, model.IMG_HW, model.IMG_HW, model.IMG_C))
+    labels = spec((model.BATCH,), jnp.int32)
+    return images, labels
+
+
+def train_flat(pe_type):
+    """Flat-signature train step (rust passes positional literals)."""
+
+    def fn(conv1, conv2, fc, m1, m2, m3, images, labels):
+        params = {"conv1": conv1, "conv2": conv2, "fc": fc}
+        momentum = {"conv1": m1, "conv2": m2, "fc": m3}
+        loss, grads = jax.value_and_grad(model.loss_fn)(
+            params, images, labels, pe_type
+        )
+        new_m = {k: model.MOMENTUM * momentum[k] + grads[k] for k in params}
+        new_p = {k: params[k] - model.LEARNING_RATE * new_m[k] for k in params}
+        return (
+            new_p["conv1"], new_p["conv2"], new_p["fc"],
+            new_m["conv1"], new_m["conv2"], new_m["fc"],
+            loss,
+        )
+
+    return fn
+
+
+def eval_flat(pe_type):
+    def fn(conv1, conv2, fc, images, labels):
+        params = {"conv1": conv1, "conv2": conv2, "fc": fc}
+        return model.evaluate(params, images, labels, pe_type)
+
+    return fn
+
+
+def init_flat():
+    params = model.init_params(seed=0)
+    return tuple(params[k] for k in model.param_order())
+
+
+def batch_flat(seed):
+    key = jax.random.PRNGKey(seed[0])
+    images, labels = model.synthetic_batch(key)
+    return images, labels
+
+
+def kernel_smoke(x, w):
+    """A small INT16 quantized matmul — the runtime smoke artifact."""
+    scale = ref.act_scale_for(x, "int16")
+    w_q = ref.quantize_weights(w, "int16")
+    return (qm.quant_matmul_fwd_impl(x, w_q, scale, "int16"),)
+
+
+def describe(name, in_specs, n_outputs):
+    return {
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in in_specs
+        ],
+        "n_outputs": n_outputs,
+    }
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--pe", default="all", help="comma-separated PE types or 'all'"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    pe_types = PE_TYPES if args.pe == "all" else tuple(args.pe.split(","))
+
+    manifest = {
+        "batch": model.BATCH,
+        "img_hw": model.IMG_HW,
+        "img_c": model.IMG_C,
+        "num_classes": model.NUM_CLASSES,
+        "param_order": model.param_order(),
+        "param_shapes": {
+            k: list(v) for k, v in model.PARAM_SHAPES.items()
+        },
+        "artifacts": {},
+    }
+
+    def emit(name, fn, in_specs, n_outputs):
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = describe(name, in_specs, n_outputs)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    images, labels = batch_specs()
+
+    for pe in pe_types:
+        emit(
+            f"train_{pe}",
+            train_flat(pe),
+            param_specs() + param_specs() + [images, labels],
+            7,
+        )
+        emit(f"eval_{pe}", eval_flat(pe), param_specs() + [images, labels], 2)
+
+    emit("init", init_flat, [], len(model.param_order()))
+    emit("batch", batch_flat, [spec((1,), jnp.int32)], 2)
+    emit(
+        "kernel_smoke",
+        kernel_smoke,
+        [spec((32, 27)), spec((27, 8))],
+        1,
+    )
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Layer-1 Pallas kernel: quantization-aware tiled matmul.
+
+The paper's compute hot-spot is the PE array's quantized MAC loop. On TPU
+the row-stationary PE grid becomes a VMEM-tiled MXU matmul (DESIGN.md
+§Hardware-Adaptation): `BlockSpec` expresses the GLB→scratchpad schedule the
+paper's dataflow expresses with strips, the per-PE activation quantizer is
+fused into the tile prologue (so quantize-dequantize never round-trips to
+HBM), and accumulation is f32 in the output tile, matching the wide psum
+scratchpad.
+
+Weights arrive **pre-quantized** (`ref.quantize_weights`) exactly as the
+hardware receives them — weight quantization is an offline step.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; on a real TPU the same kernel lowers to MXU ops. Block shapes
+are chosen MXU-aligned (multiples of 8×128 where the problem allows) so the
+TPU estimate in EXPERIMENTS.md §Perf is meaningful.
+
+The kernel is differentiable via a custom VJP (straight-through estimator
+through the activation quantizer), with both backward matmuls also running
+through the Pallas kernel — QAT training lowers to Pallas end to end.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile shapes: MXU-friendly (8×128 lanes); clipped to the problem.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _ceil_to(x, m):
+    return -(-x // m) * m
+
+
+def _kernel(x_ref, w_ref, scale_ref, o_ref, *, pe_type):
+    """One (bm, bn) output tile: fake-quant the x tile, full-K matmul."""
+    x_tile = x_ref[...]
+    if pe_type != "fp32":
+        bits = ref.ACT_BITS[pe_type]
+        qmax = float(2 ** (bits - 1) - 1)
+        scale = scale_ref[0, 0]
+        x_tile = jnp.clip(jnp.round(x_tile / scale), -qmax, qmax) * scale
+    o_ref[...] = jnp.dot(x_tile, w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pad_to(x, rows, cols):
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+@partial(jax.jit, static_argnames=("pe_type", "block_m", "block_n"))
+def quant_matmul_fwd_impl(x, w_q, act_scale, pe_type, block_m=BLOCK_M, block_n=BLOCK_N):
+    """Forward quantized matmul via `pallas_call` (non-differentiable core).
+
+    ``x: (M, K) f32``, ``w_q: (K, N) f32`` (pre-quantized values),
+    ``act_scale: () f32`` → ``(M, N) f32``.
+    """
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 128))
+    m_pad = _ceil_to(m, bm)
+    n_pad = _ceil_to(n, bn)
+    x_p = _pad_to(x, m_pad, k)
+    w_p = _pad_to(w_q, k, n_pad)
+    scale_arr = jnp.reshape(act_scale.astype(jnp.float32), (1, 1))
+    grid = (m_pad // bm, n_pad // bn)
+    out = pl.pallas_call(
+        partial(_kernel, pe_type=pe_type),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(x_p, w_p, scale_arr)
+    return out[:m, :n]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def quant_matmul(x, w_q, act_scale, pe_type):
+    """Differentiable quantized matmul (straight-through estimator).
+
+    Forward: fake-quant(x) @ w_q with f32 accumulation, on the Pallas
+    kernel. Backward: STE passes gradients through the quantizer; both
+    gradient matmuls reuse the Pallas kernel in fp32 mode.
+    """
+    return quant_matmul_fwd_impl(x, w_q, act_scale, pe_type)
+
+
+def _fwd(x, w_q, act_scale, pe_type):
+    out = quant_matmul_fwd_impl(x, w_q, act_scale, pe_type)
+    return out, (x, w_q, act_scale)
+
+
+def _bwd(pe_type, residuals, g):
+    x, w_q, act_scale = residuals
+    one = jnp.float32(1.0)
+    # dL/dx = g @ w_qᵀ (STE: quantizer treated as identity inside the
+    # clipped range; the clip mask is second-order and omitted, standard QAT).
+    dx = quant_matmul_fwd_impl(g, w_q.T, one, "fp32")
+    # dL/dw_q = fake_quant(x)ᵀ @ g — gradient w.r.t. the *quantized* weight,
+    # which the weight-STE then carries to the latent fp32 weight.
+    x_q = ref.fake_quant_act(x, act_scale, pe_type)
+    dw = quant_matmul_fwd_impl(x_q.T, g, one, "fp32")
+    return dx, dw, jnp.zeros_like(act_scale)
+
+
+quant_matmul.defvjp(_fwd, _bwd)
+
+
+def conv2d(x, w, pe_type, stride=1, padding=1):
+    """Quantized conv: im2col + Pallas quant matmul (the L2 building block).
+
+    ``x: (N, H, W, C)``, ``w: (k, k, C, M)`` → ``(N, out, out, M)``.
+    Weight quantization applies the straight-through estimator so the layer
+    is trainable.
+    """
+    k, _, c, m = w.shape
+    w_q = ref.quantize_weights_ste(w, pe_type).reshape(k * k * c, m)
+    patches, out_hw = ref.im2col(x, k, stride, padding)
+    scale = jax.lax.stop_gradient(ref.act_scale_for(patches, pe_type))
+    out = quant_matmul(patches, w_q, scale, pe_type)
+    return out.reshape(x.shape[0], out_hw, out_hw, m)
+
+
+def dense(x, w, pe_type):
+    """Quantized fully-connected layer: ``x: (N, K)``, ``w: (K, M)``."""
+    w_q = ref.quantize_weights_ste(w, pe_type)
+    scale = jax.lax.stop_gradient(ref.act_scale_for(x, pe_type))
+    return quant_matmul(x, w_q, scale, pe_type)
+
+
+def vmem_footprint_bytes(m, k, n, block_m=BLOCK_M, block_n=BLOCK_N):
+    """Estimated VMEM working set of one grid step (f32): x tile + w tile +
+    out tile. Used by the §Perf TPU estimate (interpret mode has no VMEM)."""
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 128))
+    return 4 * (bm * k + k * bn + bm * bn)
+
+
+def mxu_utilization_estimate(m, k, n, block_m=BLOCK_M, block_n=BLOCK_N):
+    """Fraction of MXU lanes a (bm, K)×(K, bn) tile keeps busy (128×128
+    systolic array, 8-row granularity): edge-tile waste only."""
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 128))
+    m_pad = _ceil_to(m, bm)
+    n_pad = _ceil_to(n, bn)
+    useful = m * k * n
+    issued = m_pad * k * n_pad
+    return useful / issued

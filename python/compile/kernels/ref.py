@@ -1,0 +1,133 @@
+"""Pure-jnp oracle for the quantization-aware kernels (Layer-1 reference).
+
+Semantics mirror the rust golden model (`rust/src/quant/`) exactly:
+
+* round-to-nearest-ties-even (``jnp.round``) symmetric affine quantization,
+* power-of-two weight codebooks for the LightPE types built by exhaustive
+  nearest-value search over singles (LightPE-1) or singles + two-term sums
+  (LightPE-2) of seven exponents anchored at the tensor's max-abs,
+* f32 accumulation (the psum scratchpad is wide enough to be exact).
+
+Everything here is build-time only; nothing imports from the runtime path.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+PE_TYPES = ("fp32", "int16", "lightpe1", "lightpe2")
+
+#: Activation bit width per PE type (paper §III-B).
+ACT_BITS = {"fp32": 32, "int16": 16, "lightpe1": 8, "lightpe2": 8}
+#: Number of distinct exponents in the LightPE codebooks (rust `levels`).
+PO2_LEVELS = 7
+
+
+def act_scale_for(x, pe_type):
+    """Per-tensor symmetric activation scale (max-abs calibration)."""
+    if pe_type == "fp32":
+        return jnp.float32(1.0)
+    bits = ACT_BITS[pe_type]
+    qmax = float(2 ** (bits - 1) - 1)
+    max_abs = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    return (max_abs / qmax).astype(jnp.float32)
+
+
+def fake_quant_act(x, scale, pe_type):
+    """Fake-quantize activations: round-ties-even, clip, rescale."""
+    if pe_type == "fp32":
+        return x
+    bits = ACT_BITS[pe_type]
+    qmax = float(2 ** (bits - 1) - 1)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q * scale
+
+
+def po2_codebook(max_abs, pe_type):
+    """Representable weight magnitudes for a LightPE type.
+
+    Exponents span ``[e_max - 6, e_max]`` with ``e_max = ceil(log2(max_abs))``
+    (rust `Po2Quantizer::calibrate`). LightPE-1: singles; LightPE-2: singles
+    plus all two-term sums ``2^e1 + 2^e2`` with ``e2 < e1``. Zero included.
+    """
+    e_max = jnp.ceil(jnp.log2(jnp.maximum(max_abs, 1e-12)))
+    exps = e_max - jnp.arange(PO2_LEVELS, dtype=jnp.float32)  # e_max .. e_max-6
+    singles = 2.0 ** exps
+    if pe_type == "lightpe1":
+        mags = singles
+    elif pe_type == "lightpe2":
+        pair_sums = singles[:, None] + singles[None, :]
+        upper = jnp.triu(pair_sums, k=1)  # e2 < e1 strictly
+        mags = jnp.concatenate([singles, upper[jnp.triu_indices(PO2_LEVELS, k=1)]])
+    else:
+        raise ValueError(f"not a LightPE type: {pe_type}")
+    return jnp.concatenate([jnp.zeros((1,), jnp.float32), mags.astype(jnp.float32)])
+
+
+def quantize_weights(w, pe_type):
+    """Quantize a weight tensor with the PE type's hardware semantics.
+
+    Returns the value-domain quantized weights (what the shift-add or
+    integer datapath effectively multiplies by).
+    """
+    if pe_type == "fp32":
+        return w
+    if pe_type == "int16":
+        qmax = float(2**15 - 1)
+        max_abs = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
+        scale = max_abs / qmax
+        return jnp.clip(jnp.round(w / scale), -qmax, qmax) * scale
+    # LightPE: nearest codebook value, sign restored. Exact zero below the
+    # half-step of the smallest magnitude (rust `zero_threshold`).
+    max_abs = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
+    codebook = po2_codebook(max_abs, pe_type)  # (V,)
+    mag = jnp.abs(w)
+    distance = jnp.abs(mag[..., None] - codebook)  # (..., V)
+    nearest = codebook[jnp.argmin(distance, axis=-1)]
+    return jnp.sign(w) * nearest
+
+
+def quantize_weights_ste(w, pe_type):
+    """Weight fake-quant with a straight-through gradient estimator."""
+    return w + jax.lax.stop_gradient(quantize_weights(w, pe_type) - w)
+
+
+@partial(jax.jit, static_argnames=("pe_type",))
+def quant_matmul_ref(x, w_q, act_scale, pe_type):
+    """Reference quantized matmul: fake-quant activations × pre-quantized
+    weights, f32 accumulation. ``x: (M, K)``, ``w_q: (K, N)``."""
+    x_q = fake_quant_act(x, act_scale, pe_type)
+    return jnp.dot(x_q, w_q, preferred_element_type=jnp.float32)
+
+
+def im2col(x, kernel, stride, padding):
+    """Unfold NHWC feature maps into matmul rows.
+
+    Returns ``(patches, out_hw)`` where ``patches`` has shape
+    ``(N * out_hw * out_hw, kernel * kernel * C)`` matching the weight
+    matrix layout ``(kernel * kernel * C, M)``.
+    """
+    n, h, w, c = x.shape
+    x_pad = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    out_hw = (h + 2 * padding - kernel) // stride + 1
+    idx = jnp.arange(out_hw) * stride
+    # Gather kernel×kernel windows: (N, out, out, k, k, C).
+    rows = idx[:, None] + jnp.arange(kernel)[None, :]  # (out, k)
+    patches = x_pad[:, rows[:, None, :, None], rows[None, :, None, :], :]
+    patches = patches.transpose(0, 1, 2, 3, 4, 5)  # (N, out, out, k, k, C)
+    return patches.reshape(n * out_hw * out_hw, kernel * kernel * c), out_hw
+
+
+def conv2d_ref(x, w, pe_type, stride=1, padding=1):
+    """Quantized conv via im2col + the reference matmul.
+
+    ``x: (N, H, W, C)``, ``w: (k, k, C, M)`` → ``(N, out, out, M)``.
+    """
+    k = w.shape[0]
+    m = w.shape[3]
+    w_q = quantize_weights(w, pe_type).reshape(k * k * w.shape[2], m)
+    patches, out_hw = im2col(x, k, stride, padding)
+    scale = act_scale_for(patches, pe_type)
+    out = quant_matmul_ref(patches, w_q, scale, pe_type)
+    return out.reshape(x.shape[0], out_hw, out_hw, m)

@@ -1,0 +1,151 @@
+"""Layer-2 JAX model: quantization-aware CNN + SGD-momentum train step.
+
+The Fig. 5/6 accuracy axis requires QAT per PE type. Full 200-epoch
+CIFAR/ImageNet runs are out of scope on this box (DESIGN.md §1), so the
+end-to-end driver trains this compact CNN on synthetic CIFAR-like data —
+enough to prove the three-layer stack composes (loss ↓, quantized eval runs
+through the PJRT runtime) and to measure the relative accuracy ordering of
+the PE types.
+
+Architecture (NHWC, ``IMG_HW``×``IMG_HW``×3 inputs, ``NUM_CLASSES`` way):
+
+    conv3×3(3→C1) → ReLU → avgpool2
+  → conv3×3(C1→C2) → ReLU → avgpool2
+  → flatten → dense(→NUM_CLASSES)
+
+Every conv/dense runs through the Pallas quantized matmul with the PE
+type's quantizer (FP32 is the identity path). The train step is a single
+jitted function (SGD + Nesterov-free momentum, the paper's recipe scaled
+down) that `aot.py` lowers to HLO text; python never runs at serve time.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quant_matmul as qm
+from .kernels import ref
+
+IMG_HW = 8
+IMG_C = 3
+C1 = 8
+C2 = 16
+NUM_CLASSES = 10
+BATCH = 32
+#: Training recipe (paper §IV-B, scaled to the synthetic task).
+LEARNING_RATE = 0.05
+MOMENTUM = 0.9
+WEIGHT_DECAY = 5e-4
+
+PARAM_SHAPES = {
+    "conv1": (3, 3, IMG_C, C1),
+    "conv2": (3, 3, C1, C2),
+    "fc": ((IMG_HW // 4) * (IMG_HW // 4) * C2, NUM_CLASSES),
+}
+
+
+def init_params(seed=0):
+    """He-normal initialization, deterministic from the seed."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in PARAM_SHAPES.items():
+        key, sub = jax.random.split(key)
+        fan_in = 1
+        for d in shape[:-1]:
+            fan_in *= d
+        params[name] = (
+            jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        )
+    return params
+
+
+def init_momentum():
+    """Zero momentum buffers matching the parameter tree."""
+    return {k: jnp.zeros(v, jnp.float32) for k, v in PARAM_SHAPES.items()}
+
+
+def avgpool2(x):
+    """2×2 average pooling, NHWC."""
+    n, h, w, c = x.shape
+    return x.reshape(n, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+
+
+def forward(params, images, pe_type):
+    """Logits for a batch of NHWC images under a PE type's quantizers."""
+    x = qm.conv2d(images, params["conv1"], pe_type, stride=1, padding=1)
+    x = jax.nn.relu(x)
+    x = avgpool2(x)
+    x = qm.conv2d(x, params["conv2"], pe_type, stride=1, padding=1)
+    x = jax.nn.relu(x)
+    x = avgpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    return qm.dense(x, params["fc"], pe_type)
+
+
+def loss_fn(params, images, labels, pe_type):
+    """Softmax cross-entropy with L2 weight decay."""
+    logits = forward(params, images, pe_type)
+    log_probs = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(log_probs, labels[:, None], axis=1))
+    l2 = sum(jnp.sum(w * w) for w in params.values())
+    return nll + WEIGHT_DECAY * l2
+
+
+@partial(jax.jit, static_argnames=("pe_type",), donate_argnums=(0, 1))
+def train_step(params, momentum, images, labels, pe_type):
+    """One SGD+momentum step; params/momentum buffers are donated so the
+    AOT executable updates state in place (no copies on the rust side)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, images, labels, pe_type)
+    new_momentum = {
+        k: MOMENTUM * momentum[k] + grads[k] for k in params
+    }
+    new_params = {
+        k: params[k] - LEARNING_RATE * new_momentum[k] for k in params
+    }
+    return new_params, new_momentum, loss
+
+
+@partial(jax.jit, static_argnames=("pe_type",))
+def evaluate(params, images, labels, pe_type):
+    """(mean accuracy, mean loss) over one batch."""
+    logits = forward(params, images, pe_type)
+    accuracy = jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+    log_probs = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(log_probs, labels[:, None], axis=1))
+    return accuracy, nll
+
+
+def synthetic_batch(key):
+    """A synthetic CIFAR-like batch with learnable class structure: each
+    class has a fixed random template; samples are noisy templates. A model
+    that learns must beat 1/NUM_CLASSES accuracy quickly."""
+    template_key = jax.random.PRNGKey(0xC1FA)  # fixed across batches
+    templates = jax.random.normal(
+        template_key, (NUM_CLASSES, IMG_HW, IMG_HW, IMG_C), jnp.float32
+    )
+    label_key, noise_key = jax.random.split(key)
+    labels = jax.random.randint(label_key, (BATCH,), 0, NUM_CLASSES)
+    noise = 0.6 * jax.random.normal(
+        noise_key, (BATCH, IMG_HW, IMG_HW, IMG_C), jnp.float32
+    )
+    return templates[labels] + noise, labels
+
+
+def param_order():
+    """Canonical parameter ordering used by the AOT interface (the rust
+    runtime passes flat argument lists)."""
+    return ["conv1", "conv2", "fc"]
+
+
+def flatten_state(params, momentum):
+    """Flat argument list in the AOT calling convention."""
+    return [params[k] for k in param_order()] + [momentum[k] for k in param_order()]
+
+
+def unflatten_state(flat):
+    """Inverse of :func:`flatten_state`."""
+    names = param_order()
+    params = dict(zip(names, flat[: len(names)]))
+    momentum = dict(zip(names, flat[len(names) :]))
+    return params, momentum

@@ -1,0 +1,6 @@
+"""Pytest bootstrap: make the `compile` package importable from python/."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

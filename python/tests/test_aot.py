@@ -1,0 +1,139 @@
+"""AOT artifact tests: signatures, manifest consistency, HLO-text format.
+
+These run after `make artifacts`; if artifacts are missing they exercise
+the lowering path in-memory instead (so `pytest` is self-contained).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_lowering_in_memory():
+    """The lowering path must produce parseable-looking HLO text with the
+    right entry signature, without touching the filesystem."""
+    lowered = jax.jit(aot.kernel_smoke).lower(
+        aot.spec((32, 27)), aot.spec((27, 8))
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[32,27]" in text
+    assert "f32[27,8]" in text
+
+
+def test_train_flat_signature_consistent():
+    """Flat train step: output pytree arity and shapes match the manifest
+    convention (params, momenta, loss)."""
+    fn = aot.train_flat("int16")
+    images, labels = aot.batch_specs()
+    out = jax.eval_shape(
+        fn,
+        *aot.param_specs(),
+        *aot.param_specs(),
+        images,
+        labels,
+    )
+    assert len(out) == 7
+    for spec_out, name in zip(out[:3], model.param_order()):
+        assert tuple(spec_out.shape) == tuple(model.PARAM_SHAPES[name])
+    assert out[6].shape == ()
+
+
+def test_eval_flat_signature():
+    fn = aot.eval_flat("fp32")
+    images, labels = aot.batch_specs()
+    out = jax.eval_shape(fn, *aot.param_specs(), images, labels)
+    assert len(out) == 2
+    assert out[0].shape == () and out[1].shape == ()
+
+
+def test_train_step_numerics_match_model_module():
+    """The flat AOT wrapper must compute the same update as model.train_step
+    (guards against argument-ordering bugs in the AOT interface)."""
+    params = model.init_params()
+    momentum = model.init_momentum()
+    images, labels = model.synthetic_batch(jax.random.PRNGKey(5))
+    flat_out = aot.train_flat("int16")(
+        params["conv1"], params["conv2"], params["fc"],
+        momentum["conv1"], momentum["conv2"], momentum["fc"],
+        images, labels,
+    )
+    ref_params, ref_momentum, ref_loss = model.train_step(
+        dict(params), dict(momentum), images, labels, "int16"
+    )
+    np.testing.assert_allclose(
+        np.asarray(flat_out[0]), np.asarray(ref_params["conv1"]), atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(flat_out[5]), np.asarray(ref_momentum["fc"]), atol=1e-6
+    )
+    assert abs(float(flat_out[6]) - float(ref_loss)) < 1e-6
+
+
+def test_batch_generator_deterministic_per_seed():
+    a_images, a_labels = aot.batch_flat(jnp.array([7], jnp.int32))
+    b_images, b_labels = aot.batch_flat(jnp.array([7], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(a_images), np.asarray(b_images))
+    np.testing.assert_array_equal(np.asarray(a_labels), np.asarray(b_labels))
+    c_images, _ = aot.batch_flat(jnp.array([8], jnp.int32))
+    assert not np.array_equal(np.asarray(a_images), np.asarray(c_images))
+
+
+def test_kernel_smoke_matches_ref():
+    x = jnp.array(np.random.RandomState(0).randn(32, 27), jnp.float32)
+    w = jnp.array(np.random.RandomState(1).randn(27, 8) * 0.3, jnp.float32)
+    (got,) = aot.kernel_smoke(x, w)
+    w_q = ref.quantize_weights(w, "int16")
+    scale = ref.act_scale_for(x, "int16")
+    want = ref.quant_matmul_ref(x, w_q, scale, "int16")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_manifest_covers_all_artifacts():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    expected = (
+        [f"train_{pe}" for pe in ref.PE_TYPES]
+        + [f"eval_{pe}" for pe in ref.PE_TYPES]
+        + ["init", "batch", "kernel_smoke"]
+    )
+    for name in expected:
+        assert name in manifest["artifacts"], name
+        path = os.path.join(ARTIFACTS, manifest["artifacts"][name]["file"])
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+@needs_artifacts
+def test_manifest_shapes_match_model():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["batch"] == model.BATCH
+    assert manifest["img_hw"] == model.IMG_HW
+    assert manifest["param_order"] == model.param_order()
+    train = manifest["artifacts"]["train_int16"]
+    assert len(train["inputs"]) == 8  # 3 params + 3 momenta + images + labels
+    assert train["inputs"][6]["shape"] == [
+        model.BATCH,
+        model.IMG_HW,
+        model.IMG_HW,
+        model.IMG_C,
+    ]

@@ -1,0 +1,102 @@
+"""L2 model tests: shapes, loss behaviour, and short QAT training runs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def batch(seed=0):
+    return model.synthetic_batch(jax.random.PRNGKey(seed))
+
+
+@pytest.mark.parametrize("pe_type", ref.PE_TYPES)
+def test_forward_shapes(pe_type):
+    params = model.init_params()
+    images, _ = batch()
+    logits = model.forward(params, images, pe_type)
+    assert logits.shape == (model.BATCH, model.NUM_CLASSES)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_loss_positive_and_finite():
+    params = model.init_params()
+    images, labels = batch()
+    for pe_type in ref.PE_TYPES:
+        loss = float(model.loss_fn(params, images, labels, pe_type))
+        assert np.isfinite(loss) and loss > 0.0
+
+
+def test_initial_loss_near_chance():
+    """Untrained model ≈ uniform predictions → loss ≈ ln(10)."""
+    params = model.init_params()
+    images, labels = batch()
+    loss = float(model.loss_fn(params, images, labels, "fp32"))
+    assert abs(loss - np.log(model.NUM_CLASSES)) < 0.8, loss
+
+
+@pytest.mark.parametrize("pe_type", ["fp32", "lightpe1"])
+def test_training_reduces_loss(pe_type):
+    """A short QAT run must reduce the loss for both the float path and the
+    most aggressive quantizer (the STE must deliver useful gradients)."""
+    params = model.init_params()
+    momentum = model.init_momentum()
+    losses = []
+    for step in range(30):
+        images, labels = batch(step)
+        params, momentum, loss = model.train_step(
+            params, momentum, images, labels, pe_type
+        )
+        losses.append(float(loss))
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first * 0.8, f"{pe_type}: loss {first:.3f} → {last:.3f}"
+
+
+def test_trained_accuracy_beats_chance():
+    params = model.init_params()
+    momentum = model.init_momentum()
+    for step in range(40):
+        images, labels = batch(step)
+        params, momentum, _ = model.train_step(
+            params, momentum, images, labels, "int16"
+        )
+    images, labels = batch(999)
+    accuracy, _ = model.evaluate(params, images, labels, "int16")
+    assert float(accuracy) > 2.0 / model.NUM_CLASSES, float(accuracy)
+
+
+def test_synthetic_batches_are_learnable_structure():
+    """Same label ⇒ same template: distances within a class are smaller."""
+    images, labels = batch(0)
+    images = np.asarray(images).reshape(model.BATCH, -1)
+    labels = np.asarray(labels)
+    same, diff = [], []
+    for i in range(model.BATCH):
+        for j in range(i + 1, model.BATCH):
+            d = np.linalg.norm(images[i] - images[j])
+            (same if labels[i] == labels[j] else diff).append(d)
+    if same and diff:
+        assert np.mean(same) < np.mean(diff)
+
+
+def test_state_flatten_roundtrip():
+    params = model.init_params()
+    momentum = model.init_momentum()
+    flat = model.flatten_state(params, momentum)
+    p2, m2 = model.unflatten_state(flat)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(p2[k]))
+        np.testing.assert_array_equal(np.asarray(momentum[k]), np.asarray(m2[k]))
+
+
+def test_avgpool_halves_dims():
+    x = jnp.arange(2 * 8 * 8 * 3, dtype=jnp.float32).reshape(2, 8, 8, 3)
+    out = model.avgpool2(x)
+    assert out.shape == (2, 4, 4, 3)
+    # Top-left 2×2 window average, channel 0.
+    want = float(x[0, 0:2, 0:2, 0].mean())
+    assert abs(float(out[0, 0, 0, 0]) - want) < 1e-6

@@ -1,0 +1,106 @@
+"""Quantizer semantics: properties + exact cross-checks against the rust
+golden model's documented behaviour (rust/src/quant/quantizer.rs)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+floats = st.floats(
+    min_value=-4.0, max_value=4.0, allow_nan=False, allow_infinity=False, width=32
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(floats, min_size=2, max_size=64))
+def test_affine_roundtrip_error_bounded(values):
+    w = jnp.array(values, jnp.float32)
+    w_q = ref.quantize_weights(w, "int16")
+    max_abs = float(jnp.max(jnp.abs(w)))
+    if max_abs < 1e-9:
+        np.testing.assert_array_equal(np.asarray(w_q), np.zeros_like(values))
+        return
+    step = max_abs / (2**15 - 1)
+    err = np.max(np.abs(np.asarray(w_q) - np.asarray(w)))
+    assert err <= step / 2 + 1e-7, f"err {err} > half-step {step / 2}"
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(floats, min_size=2, max_size=64), st.sampled_from(["lightpe1", "lightpe2"]))
+def test_po2_outputs_are_representable(values, pe_type):
+    """Every quantized weight must be ±(sum of ≤ shift_count powers of 2)."""
+    w = jnp.array(values, jnp.float32)
+    max_abs = float(jnp.max(jnp.abs(w)))
+    if max_abs < 1e-9:
+        return
+    codebook = np.asarray(ref.po2_codebook(jnp.float32(max_abs), pe_type))
+    w_q = np.asarray(ref.quantize_weights(w, pe_type))
+    for v in w_q.ravel():
+        assert np.any(np.isclose(abs(v), codebook, rtol=1e-6, atol=1e-12)), (
+            f"{v} not representable for {pe_type}"
+        )
+
+
+def test_lightpe2_superset_of_lightpe1():
+    """LightPE-2's codebook contains LightPE-1's → error never worse."""
+    cb1 = np.asarray(ref.po2_codebook(jnp.float32(1.0), "lightpe1"))
+    cb2 = np.asarray(ref.po2_codebook(jnp.float32(1.0), "lightpe2"))
+    for v in cb1:
+        assert np.any(np.isclose(v, cb2)), f"{v} missing from LightPE-2 codebook"
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(floats, min_size=4, max_size=64))
+def test_lightpe2_error_not_worse_than_lightpe1(values):
+    w = jnp.array(values, jnp.float32)
+    if float(jnp.max(jnp.abs(w))) < 1e-9:
+        return
+    err1 = np.abs(np.asarray(ref.quantize_weights(w, "lightpe1")) - np.asarray(w)).sum()
+    err2 = np.abs(np.asarray(ref.quantize_weights(w, "lightpe2")) - np.asarray(w)).sum()
+    assert err2 <= err1 + 1e-6
+
+
+def test_po2_exact_on_powers_of_two():
+    """Mirrors rust `po2_exact_on_powers`."""
+    w = jnp.array([1.0, 0.5, 0.25, 0.125, -0.5], jnp.float32)
+    w_q = np.asarray(ref.quantize_weights(w, "lightpe1"))
+    np.testing.assert_allclose(w_q, np.asarray(w), rtol=1e-7)
+
+
+def test_po2_two_term_exact_on_sums():
+    """0.75 = 2⁻¹ + 2⁻² — exact for LightPE-2, inexact for LightPE-1
+    (mirrors rust `po2_two_term_beats_one_term`)."""
+    w = jnp.array([0.75, 1.0], jnp.float32)
+    err2 = abs(float(ref.quantize_weights(w, "lightpe2")[0]) - 0.75)
+    err1 = abs(float(ref.quantize_weights(w, "lightpe1")[0]) - 0.75)
+    assert err2 < 1e-7
+    assert err1 > 1e-3
+
+
+def test_round_ties_even_semantics():
+    """jnp.round is ties-to-even — the rust AffineQuantizer contract."""
+    vals = jnp.array([0.5, 1.5, 2.5, -0.5, -1.5], jnp.float32)
+    got = np.asarray(jnp.round(vals))
+    np.testing.assert_array_equal(got, [0.0, 2.0, 2.0, -0.0, -2.0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(ref.PE_TYPES), st.integers(0, 500))
+def test_fake_quant_idempotent(pe_type, seed):
+    """Quantizing an already-quantized tensor is the identity."""
+    w = jnp.array(
+        np.random.RandomState(seed).randn(24).astype(np.float32) * 0.5
+    )
+    once = ref.quantize_weights(w, pe_type)
+    twice = ref.quantize_weights(once, pe_type)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+
+def test_act_scale_covers_max():
+    x = jnp.array([[3.0, -7.0], [1.0, 2.0]], jnp.float32)
+    for pe_type in ("int16", "lightpe1"):
+        bits = ref.ACT_BITS[pe_type]
+        scale = float(ref.act_scale_for(x, pe_type))
+        qmax = 2 ** (bits - 1) - 1
+        assert abs(scale * qmax - 7.0) < 1e-5

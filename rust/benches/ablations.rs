@@ -1,0 +1,135 @@
+//! Ablation benches for the design choices DESIGN.md §7 calls out:
+//!
+//! 1. Row-stationary vs weight-/output-stationary traffic (the §III-A
+//!    "row stationary ... optimize[s] the data movement" claim).
+//! 2. Polynomial-degree model-selection curve (k-fold CV, §III-C).
+//! 3. Scratchpad-size sensitivity at a fixed array size.
+//! 4. Tool-noise amplitude vs surrogate fit quality (robustness).
+
+use qadam::arch::{AcceleratorConfig, ScratchpadCfg, SweepSpec};
+use qadam::bench::section;
+use qadam::dataflow::{alt::map_layer, map_model, Dataflow};
+use qadam::dnn::{model_for, Dataset, Layer, ModelKind};
+use qadam::ppa::regression::cv_rmse;
+use qadam::ppa::{design_features, PpaModel};
+use qadam::quant::PeType;
+use qadam::synth::synthesize_sweep;
+use qadam::util::stats;
+use qadam::util::table::{format_sig, Table};
+
+fn ablation_dataflows() {
+    section("ablation 1 — dataflow traffic (RS vs WS vs OS)");
+    let config = AcceleratorConfig::default();
+    let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    let mut table =
+        Table::new(&["dataflow", "glb_accesses", "dram_MB", "vs_RS_glb", "vs_RS_dram"]);
+    let rs = map_model(&model, &config, Dataflow::RowStationary);
+    for dataflow in
+        [Dataflow::RowStationary, Dataflow::WeightStationary, Dataflow::OutputStationary]
+    {
+        let mapping = map_model(&model, &config, dataflow);
+        table.row(&[
+            dataflow.name().into(),
+            mapping.traffic.glb.total().to_string(),
+            format_sig(mapping.traffic.dram_bytes as f64 / 1e6, 4),
+            format_sig(
+                mapping.traffic.glb.total() as f64 / rs.traffic.glb.total() as f64,
+                3,
+            ),
+            format_sig(
+                mapping.traffic.dram_bytes as f64 / rs.traffic.dram_bytes as f64,
+                3,
+            ),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("RS moves the least data through the hierarchy — §III-A's design choice.\n");
+}
+
+fn ablation_poly_degree() {
+    section("ablation 2 — polynomial degree selection curve (k-fold CV)");
+    let dataset = synthesize_sweep(&SweepSpec::default(), PeType::Int16, 7);
+    let xs: Vec<Vec<f64>> = dataset.records.iter().map(|r| design_features(&r.config)).collect();
+    let mut table = Table::new(&["metric", "degree1_rmse", "degree2_rmse", "degree3_rmse"]);
+    for metric in ["area", "power", "perf"] {
+        let ys = dataset.targets(metric);
+        let rmses: Vec<f64> =
+            (1..=3).map(|degree| cv_rmse(&xs, &ys, degree, 5, 7)).collect();
+        table.row(&[
+            metric.into(),
+            format_sig(rmses[0], 4),
+            format_sig(rmses[1], 4),
+            format_sig(rmses[2], 4),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("degree 2 captures the area/power surface; degree 3 buys little.\n");
+}
+
+fn ablation_spad_sensitivity() {
+    section("ablation 3 — scratchpad size sensitivity (16x16 INT16 array)");
+    let model = model_for(ModelKind::ResNet56, Dataset::Cifar10);
+    let mut table =
+        Table::new(&["filter_spad", "glb_reads", "dram_MB", "cycles", "pe_area_um2"]);
+    for filter_entries in [28, 56, 112, 224, 448] {
+        let config = AcceleratorConfig {
+            spad: ScratchpadCfg { filter_entries, ..Default::default() },
+            ..Default::default()
+        };
+        let mapping = map_model(&model, &config, Dataflow::RowStationary);
+        let synth = qadam::synth::synthesize_clean(&config);
+        table.row(&[
+            filter_entries.to_string(),
+            mapping.traffic.glb.reads.to_string(),
+            format_sig(mapping.traffic.dram_bytes as f64 / 1e6, 4),
+            mapping.total_cycles.to_string(),
+            format_sig(synth.pe.total.area_um2, 4),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("bigger filter spads trade PE area for GLB/DRAM traffic — the paper's knob.\n");
+}
+
+fn ablation_noise_robustness() {
+    section("ablation 4 — tool-noise amplitude vs surrogate fit");
+    // Fit quality across synthesis seeds: the surrogate must be robust to
+    // which synthesis run produced the training data.
+    let mut pearsons = Vec::new();
+    for seed in 0..5 {
+        let dataset = synthesize_sweep(&SweepSpec::default(), PeType::LightPe1, seed);
+        let model = PpaModel::fit(&dataset, 5, seed);
+        pearsons.push(model.reports[0].pearson); // area fit
+    }
+    println!(
+        "area-fit Pearson r across 5 synthesis seeds: mean {} min {} (stable fit)\n",
+        format_sig(stats::mean(&pearsons), 4),
+        format_sig(stats::min(&pearsons), 4)
+    );
+}
+
+fn ablation_single_layer_dataflow_detail() {
+    section("ablation 1b — per-layer dataflow detail (conv3_1 of VGG-16)");
+    let layer = Layer::conv("conv3_1", 8, 256, 256, 3, 1, 1);
+    let config = AcceleratorConfig::default();
+    let mut table = Table::new(&["dataflow", "spad_accesses", "glb_accesses", "utilization"]);
+    for dataflow in
+        [Dataflow::RowStationary, Dataflow::WeightStationary, Dataflow::OutputStationary]
+    {
+        let mapping = map_layer(dataflow, &layer, &config);
+        table.row(&[
+            dataflow.name().into(),
+            mapping.traffic.spad.total().to_string(),
+            mapping.traffic.glb.total().to_string(),
+            format_sig(mapping.utilization, 3),
+        ]);
+    }
+    print!("{}", table.render());
+}
+
+fn main() {
+    ablation_dataflows();
+    ablation_poly_degree();
+    ablation_spad_sensitivity();
+    ablation_noise_robustness();
+    ablation_single_layer_dataflow_detail();
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate **Fig. 2** — the perf/area and energy spread across
+//! PE types and precisions that motivates the framework ("more than 5×
+//! and 35×, respectively"). Prints the figure data + timing.
+
+use qadam::bench::{bench_with, section, BenchConfig};
+use qadam::coordinator::default_workers;
+use qadam::report;
+
+fn main() {
+    section("Fig. 2 — design-space spread across PE types");
+    let workers = default_workers();
+    let mut figure = None;
+    bench_with("fig2_generation", BenchConfig::heavy(), || {
+        figure = Some(report::fig2(workers, 7));
+    });
+    let figure = figure.unwrap();
+    print!("{}", figure.render());
+    println!("\nCSV:\n{}", figure.table.to_csv());
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate **Fig. 3** — actual vs polynomial-estimated power /
+//! performance / area per PE type ("the proposed polynomial model agrees
+//! closely with the actual values extracted from the synthesis tools").
+//! Also times the synthesis sweep vs the fitted-surrogate prediction to
+//! quantify the speed-up the surrogate buys the DSE.
+
+use qadam::arch::SweepSpec;
+use qadam::bench::{bench, bench_with, section, BenchConfig};
+use qadam::ppa::{design_features, PpaModel};
+use qadam::quant::PeType;
+use qadam::report;
+use qadam::synth::synthesize_sweep;
+
+fn main() {
+    section("Fig. 3 — PPA surrogate fit quality");
+    let mut figure = None;
+    bench_with("fig3_generation", BenchConfig::heavy(), || {
+        figure = Some(report::fig3(7));
+    });
+    let figure = figure.unwrap();
+    print!("{}", figure.render());
+    println!("\nCSV:\n{}", figure.table.to_csv());
+
+    section("surrogate speed-up (synthesis vs polynomial prediction)");
+    let spec = SweepSpec::default();
+    let dataset = synthesize_sweep(&spec, PeType::Int16, 7);
+    let model = PpaModel::fit(&dataset, 5, 7);
+    let configs = spec.clone().for_pe(PeType::Int16).enumerate();
+    let synth_result = bench("synthesize_180_configs", || {
+        synthesize_sweep(&spec, PeType::Int16, 7)
+    });
+    let features: Vec<Vec<f64>> = configs.iter().map(design_features).collect();
+    let predict_result = bench("surrogate_predict_180_configs", || {
+        features.iter().map(|x| model.area.predict(x)).sum::<f64>()
+    });
+    println!(
+        "\nsurrogate is {:.0}x faster than re-synthesis (the paper's \"significantly\n\
+         speed up the design space exploration\")",
+        synth_result.summary.p50 / predict_result.summary.p50.max(1e-12)
+    );
+}

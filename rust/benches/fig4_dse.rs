@@ -1,0 +1,29 @@
+//! Bench: regenerate **Fig. 4** — normalized performance-per-area vs
+//! normalized energy for every (model × dataset) panel the paper shows:
+//! {VGG-16, ResNet-20, ResNet-56} × {CIFAR-10, CIFAR-100} and
+//! {VGG-16, ResNet-34, ResNet-50} × ImageNet. Ends with the paper's
+//! summary ratios (LightPE-1 4.8×/4.7×, LightPE-2 4.1×/4×, INT16 1.8×/1.5×
+//! vs FP32).
+
+use qadam::bench::{bench_with, section, BenchConfig};
+use qadam::coordinator::default_workers;
+use qadam::dnn::Dataset;
+use qadam::report;
+
+fn main() {
+    let workers = default_workers();
+    for dataset in Dataset::ALL {
+        section(&format!("Fig. 4 panel — {}", dataset.name()));
+        let mut figure = None;
+        bench_with(
+            &format!("fig4_{}", dataset.name()),
+            BenchConfig { warmup_iters: 0, measure_iters: 1 },
+            || {
+                figure = Some(report::fig4(dataset, workers, 7));
+            },
+        );
+        let figure = figure.unwrap();
+        print!("{}", figure.render());
+        println!("CSV:\n{}", figure.table.to_csv());
+    }
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate **Fig. 5** — Pareto front of top-1 accuracy vs
+//! normalized performance per area for CIFAR-10 and CIFAR-100
+//! ("LightPEs are consistently on Pareto-front ... up to 5.7× and 4.9×
+//! more performance per area when compared to INT16").
+
+use qadam::bench::{bench_with, section, BenchConfig};
+use qadam::coordinator::default_workers;
+use qadam::dnn::Dataset;
+use qadam::report;
+
+fn main() {
+    let workers = default_workers();
+    for dataset in [Dataset::Cifar10, Dataset::Cifar100] {
+        section(&format!("Fig. 5 — accuracy vs perf/area ({})", dataset.name()));
+        let mut figure = None;
+        bench_with(
+            &format!("fig5_{}", dataset.name()),
+            BenchConfig { warmup_iters: 0, measure_iters: 1 },
+            || {
+                figure = Some(report::fig5(dataset, workers, 7));
+            },
+        );
+        let figure = figure.unwrap();
+        print!("{}", figure.render());
+        println!("CSV:\n{}", figure.table.to_csv());
+    }
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate **Fig. 6** — Pareto front of top-1 error vs
+//! normalized energy for CIFAR-10 and CIFAR-100 ("LightPE-1 and LightPE-2
+//! achieve 4.7× and 4× less energy on average ... LightPEs are
+//! systematically on Pareto-front").
+
+use qadam::bench::{bench_with, section, BenchConfig};
+use qadam::coordinator::default_workers;
+use qadam::dnn::Dataset;
+use qadam::report;
+
+fn main() {
+    let workers = default_workers();
+    for dataset in [Dataset::Cifar10, Dataset::Cifar100] {
+        section(&format!("Fig. 6 — error vs energy ({})", dataset.name()));
+        let mut figure = None;
+        bench_with(
+            &format!("fig6_{}", dataset.name()),
+            BenchConfig { warmup_iters: 0, measure_iters: 1 },
+            || {
+                figure = Some(report::fig6(dataset, workers, 7));
+            },
+        );
+        let figure = figure.unwrap();
+        print!("{}", figure.render());
+        println!("CSV:\n{}", figure.table.to_csv());
+    }
+}

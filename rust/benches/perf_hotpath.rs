@@ -1,0 +1,83 @@
+//! Hot-path micro/meso benches for the §Perf pass (EXPERIMENTS.md):
+//!
+//! * mapper throughput (layers/s) — the inner loop of every DSE eval,
+//! * synthesis throughput (configs/s),
+//! * full-campaign throughput (evals/s) at several worker counts,
+//! * PJRT runtime step latency (if artifacts are present),
+//! * cycle-level simulator throughput (MACs/s).
+
+use qadam::arch::{AcceleratorConfig, SweepSpec};
+use qadam::bench::{bench, bench_with, section, BenchConfig};
+use qadam::coordinator::Coordinator;
+use qadam::dataflow::{map_model, Dataflow};
+use qadam::dnn::{model_for, Dataset, ModelKind};
+use qadam::quant::PeType;
+use qadam::sim;
+use qadam::synth;
+use qadam::util::rng::Pcg64;
+
+fn main() {
+    section("L3 hot path — analytical mapper");
+    let config = AcceleratorConfig::default();
+    let cifar = model_for(ModelKind::ResNet56, Dataset::Cifar10);
+    let imagenet = model_for(ModelKind::ResNet50, Dataset::ImageNet);
+    let result = bench("map_resnet56_cifar10", || {
+        map_model(&cifar, &config, Dataflow::RowStationary)
+    });
+    println!(
+        "  -> {:.0} model-mappings/s ({} layers each)",
+        1.0 / result.summary.p50,
+        cifar.layers.len()
+    );
+    bench("map_resnet50_imagenet", || {
+        map_model(&imagenet, &config, Dataflow::RowStationary)
+    });
+
+    section("L3 hot path — synthesis engine");
+    let result = bench("synthesize_one_config", || synth::synthesize(&config, 7));
+    println!("  -> {:.0} syntheses/s", 1.0 / result.summary.p50);
+
+    section("L3 hot path — full campaign scaling (ImageNet, heaviest workload)");
+    for workers in [1, 2, 4, qadam::coordinator::default_workers()] {
+        let coordinator = Coordinator::new(workers, 7);
+        let result = bench_with(
+            &format!("campaign_workers_{workers}"),
+            BenchConfig { warmup_iters: 1, measure_iters: 3 },
+            || coordinator.campaign(&SweepSpec::default(), Dataset::ImageNet),
+        );
+        let evals = SweepSpec::default().len() * 3;
+        println!("  -> {:.0} evals/s at {workers} workers", evals as f64 / result.summary.p50);
+    }
+
+    section("cycle-level simulator");
+    let layer = qadam::dnn::Layer::conv("bench", 16, 8, 16, 3, 1, 1);
+    let mut rng = Pcg64::new(3);
+    let ifmap: Vec<f64> = (0..layer.ifmap_elems()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let weights: Vec<f64> = (0..layer.weights()).map(|_| rng.uniform(-0.5, 0.5)).collect();
+    let sim_config = AcceleratorConfig { pe: PeType::Int16, rows: 6, cols: 16, ..Default::default() };
+    let result = bench_with("simulate_conv_16x16x8_to_16", BenchConfig::heavy(), || {
+        sim::simulate_layer(&layer, &sim_config, &ifmap, &weights)
+    });
+    println!(
+        "  -> {:.1} M simulated MACs/s",
+        layer.macs() as f64 / result.summary.p50 / 1e6
+    );
+
+    section("PJRT runtime (needs `make artifacts`)");
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        let mut runtime = qadam::runtime::Runtime::new(&artifacts).unwrap();
+        runtime.prepare("train_lightpe1").unwrap();
+        runtime.prepare("batch").unwrap();
+        let mut driver =
+            qadam::runtime::QatDriver::new(&mut runtime, PeType::LightPe1).unwrap();
+        let mut step = 0i32;
+        let result = bench_with("qat_train_step_lightpe1", BenchConfig::heavy(), || {
+            step += 1;
+            driver.step(&mut runtime, step).unwrap()
+        });
+        println!("  -> {:.1} train steps/s", 1.0 / result.summary.p50);
+    } else {
+        println!("  skipped (no artifacts)");
+    }
+}

@@ -1,0 +1,241 @@
+//! Accelerator architecture description (the paper's Figure 1 inputs).
+//!
+//! An [`AcceleratorConfig`] fixes every hardware knob the paper sweeps:
+//! PE type / bit precision, PE array dimensions, per-PE scratchpad sizes,
+//! global buffer size, DRAM bandwidth, and target clock. [`SweepSpec`]
+//! enumerates the cross-product design space (§III-C).
+
+pub mod sweep;
+
+pub use sweep::SweepSpec;
+
+use crate::quant::PeType;
+use crate::util::json::{num, obj, s, Json};
+
+/// Per-PE scratchpad configuration, in *entries* (words of the natural
+/// width: ifmap entries are activation-wide, filter entries weight-wide,
+/// psum entries accumulator-wide). Defaults follow Eyeriss's RS PE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ScratchpadCfg {
+    pub ifmap_entries: usize,
+    pub filter_entries: usize,
+    pub psum_entries: usize,
+}
+
+impl Default for ScratchpadCfg {
+    fn default() -> Self {
+        // Eyeriss-like RS PE: 12-entry ifmap spad, 224-entry filter spad,
+        // 24-entry psum spad.
+        Self { ifmap_entries: 12, filter_entries: 224, psum_entries: 24 }
+    }
+}
+
+impl ScratchpadCfg {
+    /// Total scratchpad storage in bits for a given PE type.
+    pub fn total_bits(&self, pe: PeType) -> usize {
+        self.ifmap_entries * pe.act_bits() as usize
+            + self.filter_entries * pe.weight_bits() as usize
+            + self.psum_entries * pe.psum_bits() as usize
+    }
+}
+
+/// A complete accelerator design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AcceleratorConfig {
+    /// Processing element type (fixes all datapath bit widths).
+    pub pe: PeType,
+    /// PE array rows.
+    pub rows: usize,
+    /// PE array columns.
+    pub cols: usize,
+    /// Per-PE scratchpad sizes.
+    pub spad: ScratchpadCfg,
+    /// Global buffer capacity in KiB.
+    pub glb_kib: usize,
+    /// Off-chip DRAM bandwidth in GB/s.
+    pub dram_bw_gbps: f64,
+    /// Target clock in GHz (the synthesis engine reports the achievable
+    /// clock; the design runs at `min(target, achievable)`).
+    pub clock_ghz: f64,
+}
+
+impl Default for AcceleratorConfig {
+    fn default() -> Self {
+        Self {
+            pe: PeType::Int16,
+            rows: 16,
+            cols: 16,
+            spad: ScratchpadCfg::default(),
+            glb_kib: 128,
+            dram_bw_gbps: 8.0,
+            clock_ghz: 2.0,
+        }
+    }
+}
+
+impl AcceleratorConfig {
+    /// Total number of PEs.
+    pub fn num_pes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Global buffer capacity in bytes.
+    pub fn glb_bytes(&self) -> usize {
+        self.glb_kib * 1024
+    }
+
+    /// Peak MACs per cycle (one MAC per PE per cycle under row-stationary).
+    pub fn peak_macs_per_cycle(&self) -> usize {
+        self.num_pes()
+    }
+
+    /// Short identifier used in logs, CSVs, and artifact names.
+    pub fn id(&self) -> String {
+        format!(
+            "{}_r{}c{}_g{}k_i{}f{}p{}_bw{}_ck{}",
+            self.pe.name().replace('-', ""),
+            self.rows,
+            self.cols,
+            self.glb_kib,
+            self.spad.ifmap_entries,
+            self.spad.filter_entries,
+            self.spad.psum_entries,
+            self.dram_bw_gbps as u64,
+            (self.clock_ghz * 10.0) as u64
+        )
+    }
+
+    /// Validate structural invariants; returns a description of the first
+    /// violation, if any.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rows == 0 || self.cols == 0 {
+            return Err("PE array dimensions must be positive".into());
+        }
+        if self.rows > 256 || self.cols > 256 {
+            return Err("PE array dimension exceeds supported maximum (256)".into());
+        }
+        if self.glb_kib == 0 {
+            return Err("global buffer must be non-empty".into());
+        }
+        if self.spad.ifmap_entries == 0
+            || self.spad.filter_entries == 0
+            || self.spad.psum_entries == 0
+        {
+            return Err("scratchpads must be non-empty".into());
+        }
+        if !(self.dram_bw_gbps > 0.0) {
+            return Err("DRAM bandwidth must be positive".into());
+        }
+        if !(self.clock_ghz > 0.0 && self.clock_ghz <= 5.0) {
+            return Err("clock target must be in (0, 5] GHz".into());
+        }
+        Ok(())
+    }
+
+    /// Serialize to JSON (config dumps and DSE result records).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("pe", s(self.pe.name())),
+            ("rows", num(self.rows as f64)),
+            ("cols", num(self.cols as f64)),
+            ("ifmap_spad", num(self.spad.ifmap_entries as f64)),
+            ("filter_spad", num(self.spad.filter_entries as f64)),
+            ("psum_spad", num(self.spad.psum_entries as f64)),
+            ("glb_kib", num(self.glb_kib as f64)),
+            ("dram_bw_gbps", num(self.dram_bw_gbps)),
+            ("clock_ghz", num(self.clock_ghz)),
+        ])
+    }
+
+    /// Deserialize from JSON produced by [`Self::to_json`].
+    pub fn from_json(json: &Json) -> Result<Self, String> {
+        let get_num = |key: &str| -> Result<f64, String> {
+            json.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("missing numeric field '{key}'"))
+        };
+        let pe_name =
+            json.get("pe").and_then(Json::as_str).ok_or("missing field 'pe'")?;
+        let pe = PeType::parse(pe_name).ok_or_else(|| format!("unknown PE type '{pe_name}'"))?;
+        let cfg = Self {
+            pe,
+            rows: get_num("rows")? as usize,
+            cols: get_num("cols")? as usize,
+            spad: ScratchpadCfg {
+                ifmap_entries: get_num("ifmap_spad")? as usize,
+                filter_entries: get_num("filter_spad")? as usize,
+                psum_entries: get_num("psum_spad")? as usize,
+            },
+            glb_kib: get_num("glb_kib")? as usize,
+            dram_bw_gbps: get_num("dram_bw_gbps")?,
+            clock_ghz: get_num("clock_ghz")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(AcceleratorConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut cfg = AcceleratorConfig::default();
+        cfg.rows = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = AcceleratorConfig::default();
+        cfg.glb_kib = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = AcceleratorConfig::default();
+        cfg.dram_bw_gbps = -1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = AcceleratorConfig::default();
+        cfg.clock_ghz = 9.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn spad_bits_scale_with_precision() {
+        let spad = ScratchpadCfg::default();
+        let int16 = spad.total_bits(PeType::Int16);
+        let light1 = spad.total_bits(PeType::LightPe1);
+        let fp32 = spad.total_bits(PeType::Fp32);
+        assert!(fp32 > int16, "FP32 spads must be biggest");
+        assert!(int16 > light1, "LightPE-1 spads must be smallest");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = AcceleratorConfig {
+            pe: PeType::LightPe2,
+            rows: 12,
+            cols: 14,
+            spad: ScratchpadCfg { ifmap_entries: 24, filter_entries: 448, psum_entries: 32 },
+            glb_kib: 256,
+            dram_bw_gbps: 16.0,
+            clock_ghz: 1.2,
+        };
+        let parsed = AcceleratorConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let json = Json::parse(r#"{"pe": "INT16"}"#).unwrap();
+        assert!(AcceleratorConfig::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn id_distinguishes_configs() {
+        let a = AcceleratorConfig::default();
+        let mut b = a.clone();
+        b.rows = 32;
+        assert_ne!(a.id(), b.id());
+    }
+}

@@ -1,0 +1,323 @@
+//! Design-space sweep enumeration (§III-C).
+//!
+//! A [`SweepSpec`] lists candidate values per axis; [`SweepSpec::enumerate`]
+//! yields the full cross-product as concrete [`AcceleratorConfig`]s. The
+//! default space mirrors the paper's: 4 PE types × array sizes × global
+//! buffer sizes × scratchpad variants.
+
+use super::{AcceleratorConfig, ScratchpadCfg};
+use crate::quant::PeType;
+use crate::util::json::{num, obj, s, Json};
+
+/// Candidate values per design-space axis.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub pe_types: Vec<PeType>,
+    /// (rows, cols) pairs.
+    pub array_dims: Vec<(usize, usize)>,
+    pub glb_kib: Vec<usize>,
+    pub spads: Vec<ScratchpadCfg>,
+    pub dram_bw_gbps: Vec<f64>,
+    pub clock_ghz: Vec<f64>,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        Self {
+            pe_types: PeType::ALL.to_vec(),
+            array_dims: vec![(8, 8), (12, 14), (16, 16), (24, 24), (32, 32)],
+            glb_kib: vec![64, 128, 256, 512],
+            spads: vec![
+                ScratchpadCfg { ifmap_entries: 6, filter_entries: 28, psum_entries: 8 },
+                ScratchpadCfg { ifmap_entries: 12, filter_entries: 112, psum_entries: 16 },
+                ScratchpadCfg { ifmap_entries: 12, filter_entries: 224, psum_entries: 24 },
+                ScratchpadCfg { ifmap_entries: 24, filter_entries: 448, psum_entries: 32 },
+            ],
+            dram_bw_gbps: vec![8.0, 16.0, 32.0],
+            clock_ghz: vec![2.0],
+        }
+    }
+}
+
+impl SweepSpec {
+    /// A small spec for fast tests (2 PE types × 2 arrays × 1 of the rest).
+    pub fn tiny() -> Self {
+        Self {
+            pe_types: vec![PeType::Int16, PeType::LightPe1],
+            array_dims: vec![(8, 8), (16, 16)],
+            glb_kib: vec![128],
+            spads: vec![ScratchpadCfg::default()],
+            dram_bw_gbps: vec![8.0],
+            clock_ghz: vec![2.0],
+        }
+    }
+
+    /// Restrict to a single PE type (used by per-type model fitting).
+    pub fn for_pe(mut self, pe: PeType) -> Self {
+        self.pe_types = vec![pe];
+        self
+    }
+
+    /// Number of design points in the cross-product.
+    pub fn len(&self) -> usize {
+        self.pe_types.len()
+            * self.array_dims.len()
+            * self.glb_kib.len()
+            * self.spads.len()
+            * self.dram_bw_gbps.len()
+            * self.clock_ghz.len()
+    }
+
+    /// Whether the spec is degenerate (any empty axis).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the full cross-product.
+    pub fn enumerate(&self) -> Vec<AcceleratorConfig> {
+        let mut out = Vec::with_capacity(self.len());
+        for &pe in &self.pe_types {
+            for &(rows, cols) in &self.array_dims {
+                for &glb_kib in &self.glb_kib {
+                    for &spad in &self.spads {
+                        for &dram_bw_gbps in &self.dram_bw_gbps {
+                            for &clock_ghz in &self.clock_ghz {
+                                out.push(AcceleratorConfig {
+                                    pe,
+                                    rows,
+                                    cols,
+                                    spad,
+                                    glb_kib,
+                                    dram_bw_gbps,
+                                    clock_ghz,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Serialize to JSON (the `--sweep <file>` config format).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "pe_types",
+                Json::Arr(self.pe_types.iter().map(|p| s(p.name())).collect()),
+            ),
+            (
+                "array_dims",
+                Json::Arr(
+                    self.array_dims
+                        .iter()
+                        .map(|&(r, c)| Json::Arr(vec![num(r as f64), num(c as f64)]))
+                        .collect(),
+                ),
+            ),
+            (
+                "glb_kib",
+                Json::Arr(self.glb_kib.iter().map(|&g| num(g as f64)).collect()),
+            ),
+            (
+                "spads",
+                Json::Arr(
+                    self.spads
+                        .iter()
+                        .map(|sp| {
+                            obj(vec![
+                                ("ifmap", num(sp.ifmap_entries as f64)),
+                                ("filter", num(sp.filter_entries as f64)),
+                                ("psum", num(sp.psum_entries as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "dram_bw_gbps",
+                Json::Arr(self.dram_bw_gbps.iter().map(|&b| num(b)).collect()),
+            ),
+            (
+                "clock_ghz",
+                Json::Arr(self.clock_ghz.iter().map(|&c| num(c)).collect()),
+            ),
+        ])
+    }
+
+    /// Deserialize from the JSON produced by [`Self::to_json`]. Missing
+    /// axes fall back to the defaults, so config files can override only
+    /// the axes they care about.
+    pub fn from_json(json: &Json) -> Result<Self, String> {
+        let mut spec = SweepSpec::default();
+        if let Some(items) = json.get("pe_types").and_then(Json::as_arr) {
+            spec.pe_types = items
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .and_then(PeType::parse)
+                        .ok_or_else(|| format!("bad pe type {v:?}"))
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(items) = json.get("array_dims").and_then(Json::as_arr) {
+            spec.array_dims = items
+                .iter()
+                .map(|v| {
+                    let pair = v.as_arr().ok_or("array_dims entries must be [rows, cols]")?;
+                    match (pair.first().and_then(Json::as_i64), pair.get(1).and_then(Json::as_i64))
+                    {
+                        (Some(r), Some(c)) if r > 0 && c > 0 => Ok((r as usize, c as usize)),
+                        _ => Err("array_dims entries must be positive integers".to_string()),
+                    }
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(items) = json.get("glb_kib").and_then(Json::as_arr) {
+            spec.glb_kib = items
+                .iter()
+                .map(|v| v.as_i64().map(|g| g as usize).ok_or("bad glb_kib"))
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(items) = json.get("spads").and_then(Json::as_arr) {
+            spec.spads = items
+                .iter()
+                .map(|v| {
+                    let field = |k: &str| {
+                        v.get(k)
+                            .and_then(Json::as_i64)
+                            .map(|x| x as usize)
+                            .ok_or_else(|| format!("spad entry missing '{k}'"))
+                    };
+                    Ok::<_, String>(ScratchpadCfg {
+                        ifmap_entries: field("ifmap")?,
+                        filter_entries: field("filter")?,
+                        psum_entries: field("psum")?,
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(items) = json.get("dram_bw_gbps").and_then(Json::as_arr) {
+            spec.dram_bw_gbps =
+                items.iter().map(|v| v.as_f64().ok_or("bad dram_bw_gbps")).collect::<Result<_, _>>()?;
+        }
+        if let Some(items) = json.get("clock_ghz").and_then(Json::as_arr) {
+            spec.clock_ghz =
+                items.iter().map(|v| v.as_f64().ok_or("bad clock_ghz")).collect::<Result<_, _>>()?;
+        }
+        if spec.is_empty() {
+            return Err("sweep spec has an empty axis".into());
+        }
+        Ok(spec)
+    }
+
+    /// Load a sweep from a JSON file.
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let json = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&json)
+    }
+
+    /// Enumerate only the i-th shard of `n` (round-robin), for the
+    /// coordinator's leader/worker split.
+    pub fn enumerate_shard(&self, shard: usize, num_shards: usize) -> Vec<AcceleratorConfig> {
+        assert!(num_shards > 0 && shard < num_shards);
+        self.enumerate()
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| i % num_shards == shard)
+            .map(|(_, c)| c)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cross_product_size() {
+        let spec = SweepSpec::default();
+        assert_eq!(spec.enumerate().len(), spec.len());
+        assert_eq!(spec.len(), 4 * 5 * 4 * 4 * 3);
+    }
+
+    #[test]
+    fn all_enumerated_valid() {
+        for cfg in SweepSpec::default().enumerate() {
+            assert!(cfg.validate().is_ok(), "invalid config {}", cfg.id());
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_space() {
+        let spec = SweepSpec::tiny();
+        let all = spec.enumerate();
+        let mut recombined: Vec<_> = (0..3)
+            .flat_map(|shard| spec.enumerate_shard(shard, 3))
+            .map(|c| c.id())
+            .collect();
+        recombined.sort();
+        let mut expected: Vec<_> = all.iter().map(|c| c.id()).collect();
+        expected.sort();
+        assert_eq!(recombined, expected);
+    }
+
+    #[test]
+    fn for_pe_restricts() {
+        let spec = SweepSpec::default().for_pe(PeType::Fp32);
+        assert!(spec.enumerate().iter().all(|c| c.pe == PeType::Fp32));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = SweepSpec::default();
+        let parsed = SweepSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(parsed.len(), spec.len());
+        let a: Vec<String> = spec.enumerate().iter().map(|c| c.id()).collect();
+        let b: Vec<String> = parsed.enumerate().iter().map(|c| c.id()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn partial_json_overrides_one_axis() {
+        let json = Json::parse(r#"{"pe_types": ["LightPE-1"]}"#).unwrap();
+        let spec = SweepSpec::from_json(&json).unwrap();
+        assert_eq!(spec.pe_types, vec![PeType::LightPe1]);
+        // Other axes keep defaults.
+        assert_eq!(spec.glb_kib, SweepSpec::default().glb_kib);
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        for text in [
+            r#"{"pe_types": ["INT99"]}"#,
+            r#"{"array_dims": [[0, 8]]}"#,
+            r#"{"glb_kib": []}"#,
+        ] {
+            let json = Json::parse(text).unwrap();
+            assert!(SweepSpec::from_json(&json).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn from_file_roundtrip() {
+        let dir = std::env::temp_dir().join("qadam_sweep_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sweep.json");
+        std::fs::write(&path, SweepSpec::tiny().to_json().to_string_pretty()).unwrap();
+        let spec = SweepSpec::from_file(&path).unwrap();
+        assert_eq!(spec.len(), SweepSpec::tiny().len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unique_ids() {
+        let all = SweepSpec::default().enumerate();
+        let mut ids: Vec<_> = all.iter().map(|c| c.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), all.len(), "config ids must be unique");
+    }
+}

@@ -1,0 +1,140 @@
+//! Bench harness (offline `criterion` substitute).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, timed iterations, and a statistics summary (mean/p50/p95),
+//! printed in a criterion-like format plus CSV for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Configuration for a bench run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 2, measure_iters: 10 }
+    }
+}
+
+impl BenchConfig {
+    /// Fast config for expensive end-to-end benches.
+    pub fn heavy() -> Self {
+        Self { warmup_iters: 1, measure_iters: 3 }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// criterion-style one-liner.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<40} time: [{} ms  {} ms  {} ms]  (mean ± σ: {} ± {} ms, n={})",
+            self.name,
+            fmt_ms(self.summary.min),
+            fmt_ms(self.summary.p50),
+            fmt_ms(self.summary.max),
+            fmt_ms(self.summary.mean),
+            fmt_ms(self.summary.stddev),
+            self.summary.n,
+        )
+    }
+
+    /// CSV row: name, mean_ms, p50_ms, p95_ms, n.
+    pub fn to_csv_row(&self) -> String {
+        format!(
+            "{},{:.3},{:.3},{:.3},{}",
+            self.name,
+            self.summary.mean * 1e3,
+            self.summary.p50 * 1e3,
+            self.summary.p95 * 1e3,
+            self.summary.n
+        )
+    }
+}
+
+fn fmt_ms(seconds: f64) -> String {
+    format!("{:.3}", seconds * 1e3)
+}
+
+/// Time `f` under `config`, returning the timing summary (seconds).
+pub fn bench_with<R>(name: &str, config: BenchConfig, mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..config.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(config.measure_iters);
+    for _ in 0..config.measure_iters.max(1) {
+        let start = Instant::now();
+        std::hint::black_box(f());
+        samples.push(start.elapsed().as_secs_f64());
+    }
+    let result = BenchResult { name: name.to_string(), summary: Summary::of(&samples) };
+    println!("{}", result.render());
+    result
+}
+
+/// [`bench_with`] under the default config.
+pub fn bench<R>(name: &str, f: impl FnMut() -> R) -> BenchResult {
+    bench_with(name, BenchConfig::default(), f)
+}
+
+/// Print a bench-section header (groups output in `cargo bench` logs).
+pub fn section(title: &str) {
+    println!("\n──── {title} ────");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let result = bench_with(
+            "noop",
+            BenchConfig { warmup_iters: 1, measure_iters: 5 },
+            || 1 + 1,
+        );
+        assert_eq!(result.summary.n, 5);
+        assert!(result.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn render_contains_name_and_units() {
+        let result = bench_with(
+            "render_test",
+            BenchConfig { warmup_iters: 0, measure_iters: 2 },
+            || (),
+        );
+        let line = result.render();
+        assert!(line.contains("render_test"));
+        assert!(line.contains("ms"));
+        let csv = result.to_csv_row();
+        assert_eq!(csv.split(',').count(), 5);
+    }
+
+    #[test]
+    fn timing_orders_workloads() {
+        let cheap = bench_with(
+            "cheap",
+            BenchConfig { warmup_iters: 1, measure_iters: 3 },
+            || (0..100u64).sum::<u64>(),
+        );
+        let costly = bench_with(
+            "costly",
+            BenchConfig { warmup_iters: 1, measure_iters: 3 },
+            // fold with a multiply so LLVM cannot closed-form the loop
+            || (0..2_000_000u64).fold(0u64, |acc, x| acc ^ x.wrapping_mul(0x9E3779B1)),
+        );
+        assert!(costly.summary.p50 >= cheap.summary.p50);
+    }
+}

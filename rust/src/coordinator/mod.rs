@@ -1,0 +1,213 @@
+//! The DSE coordinator: leader/worker orchestration of the paper's
+//! evaluation campaigns (the framework's L3 contribution).
+//!
+//! The leader shards the design space across a worker pool ([`pool`]),
+//! amortizes synthesis per design point across the dataset's model set
+//! (synthesize once, map every model), aggregates results into an
+//! [`EvalDatabase`], and exposes the campaign products the figures need:
+//! normalized spaces, headline ratios, and Pareto fronts. Metrics cover
+//! throughput (design points/s) for the §Perf pass.
+
+pub mod pool;
+
+pub use pool::{default_workers, parallel_map};
+
+use std::time::Instant;
+
+use crate::arch::SweepSpec;
+use crate::dnn::{models_for, Dataset, Model};
+use crate::dse::{self, Evaluation};
+use crate::quant::PeType;
+use crate::synth::synthesize;
+
+/// All evaluations for one (model, dataset) pair.
+#[derive(Debug, Clone)]
+pub struct ModelSpace {
+    pub model_name: String,
+    pub dataset: Dataset,
+    pub evals: Vec<Evaluation>,
+}
+
+/// Campaign results across a dataset's model set.
+#[derive(Debug, Clone)]
+pub struct EvalDatabase {
+    pub dataset: Dataset,
+    pub spaces: Vec<ModelSpace>,
+    pub stats: CampaignStats,
+}
+
+/// Coordinator throughput metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct CampaignStats {
+    pub design_points: usize,
+    pub evaluations: usize,
+    pub wall_seconds: f64,
+    pub workers: usize,
+}
+
+impl CampaignStats {
+    /// Evaluations per second (the §Perf headline for L3).
+    pub fn evals_per_sec(&self) -> f64 {
+        self.evaluations as f64 / self.wall_seconds.max(1e-9)
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct Coordinator {
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self { workers: default_workers(), seed: 0x9ADA }
+    }
+}
+
+impl Coordinator {
+    /// New coordinator with an explicit worker count and seed.
+    pub fn new(workers: usize, seed: u64) -> Self {
+        Self { workers: workers.max(1), seed }
+    }
+
+    /// Run the full campaign for one dataset: every design point ×
+    /// every paper model for that dataset (Fig. 4 panels).
+    ///
+    /// Work unit = one design point: synthesis runs once, then every model
+    /// maps against the same report — the paper's framework evaluates "a
+    /// range of hardware designs and DNN configurations at the same time".
+    pub fn campaign(&self, spec: &SweepSpec, dataset: Dataset) -> EvalDatabase {
+        let models = models_for(dataset);
+        let configs = spec.enumerate();
+        let started = Instant::now();
+        let seed = self.seed;
+        let per_config: Vec<Vec<Evaluation>> =
+            parallel_map(configs, self.workers, |config| {
+                let synth = synthesize(config, seed);
+                models.iter().map(|m| dse::evaluate_with_synth(&synth, m)).collect()
+            });
+        let wall_seconds = started.elapsed().as_secs_f64();
+        let design_points = per_config.len();
+        // Transpose: per-config × per-model → per-model spaces.
+        let mut spaces: Vec<ModelSpace> = models
+            .iter()
+            .map(|m| ModelSpace {
+                model_name: m.name.clone(),
+                dataset,
+                evals: Vec::with_capacity(design_points),
+            })
+            .collect();
+        for config_evals in per_config {
+            for (space, eval) in spaces.iter_mut().zip(config_evals) {
+                space.evals.push(eval);
+            }
+        }
+        let evaluations = design_points * models.len();
+        EvalDatabase {
+            dataset,
+            spaces,
+            stats: CampaignStats {
+                design_points,
+                evaluations,
+                wall_seconds,
+                workers: self.workers,
+            },
+        }
+    }
+
+    /// Evaluate one sweep against one model in parallel (order-preserving).
+    pub fn explore_model(&self, spec: &SweepSpec, model: &Model) -> Vec<Evaluation> {
+        let configs = spec.enumerate();
+        let seed = self.seed;
+        parallel_map(configs, self.workers, |config| dse::evaluate(config, model, seed))
+    }
+}
+
+impl EvalDatabase {
+    /// Headline ratios per model (Fig. 4 summary): the geometric-mean
+    /// across models is the paper's "on average across all workloads".
+    pub fn headline_per_model(&self) -> Vec<(String, Vec<(PeType, f64, f64)>)> {
+        self.spaces
+            .iter()
+            .map(|s| (s.model_name.clone(), dse::headline_ratios(&s.evals)))
+            .collect()
+    }
+
+    /// Geometric-mean headline ratios across this dataset's models:
+    /// (pe, perf/area gain, energy gain).
+    pub fn headline_geomean(&self) -> Vec<(PeType, f64, f64)> {
+        let per_model = self.headline_per_model();
+        PeType::ALL
+            .iter()
+            .filter(|&&pe| {
+                // Skip PE types absent from the explored space.
+                per_model
+                    .iter()
+                    .any(|(_, rs)| rs.iter().any(|(p, _, _)| *p == pe))
+            })
+            .map(|&pe| {
+                let ppa: Vec<f64> = per_model
+                    .iter()
+                    .filter_map(|(_, rs)| {
+                        rs.iter().find(|(p, _, _)| *p == pe).map(|(_, a, _)| *a)
+                    })
+                    .collect();
+                let energy: Vec<f64> = per_model
+                    .iter()
+                    .filter_map(|(_, rs)| {
+                        rs.iter().find(|(p, _, _)| *p == pe).map(|(_, _, e)| *e)
+                    })
+                    .collect();
+                (
+                    pe,
+                    crate::util::stats::geomean(&ppa),
+                    crate::util::stats::geomean(&energy),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn campaign_covers_models_and_space() {
+        let coordinator = Coordinator::new(2, 7);
+        let spec = SweepSpec::tiny();
+        let db = coordinator.campaign(&spec, Dataset::Cifar10);
+        assert_eq!(db.spaces.len(), 3); // VGG-16, ResNet-20, ResNet-56
+        for space in &db.spaces {
+            assert_eq!(space.evals.len(), spec.len());
+        }
+        assert_eq!(db.stats.evaluations, spec.len() * 3);
+        assert!(db.stats.evals_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let spec = SweepSpec::tiny();
+        let model = crate::dnn::model_for(crate::dnn::ModelKind::ResNet20, Dataset::Cifar10);
+        let serial = dse::explore(&spec, &model, 7);
+        let parallel = Coordinator::new(4, 7).explore_model(&spec, &model);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.config.id(), b.config.id());
+            assert_eq!(a.perf_per_area, b.perf_per_area);
+            assert_eq!(a.energy_uj, b.energy_uj);
+        }
+    }
+
+    #[test]
+    fn geomean_headline_sane() {
+        let db = Coordinator::new(2, 7).campaign(&SweepSpec::default(), Dataset::Cifar10);
+        let headline = db.headline_geomean();
+        let light1 = headline.iter().find(|(pe, _, _)| *pe == PeType::LightPe1).unwrap();
+        assert!(light1.1 > 1.5, "LightPE-1 geomean perf/area {}", light1.1);
+        assert!(light1.2 > 1.5, "LightPE-1 geomean energy {}", light1.2);
+        let int16 = headline.iter().find(|(pe, _, _)| *pe == PeType::Int16).unwrap();
+        assert!((int16.1 - 1.0).abs() < 1e-9, "INT16 baseline must be 1.0");
+    }
+}

@@ -1,0 +1,120 @@
+//! Work-stealing-lite thread pool for CPU-bound evaluation jobs.
+//!
+//! Jobs are claimed through a shared atomic cursor (each worker grabs the
+//! next unclaimed index), which self-balances when job costs vary — large
+//! ImageNet models take ~50× longer to map than CIFAR ones, so static
+//! chunking would idle half the pool. Results land in their input slots,
+//! so output order equals input order regardless of scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use by default (leaves one core for the leader).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(4)
+}
+
+/// Run `f` over `jobs` on `workers` threads; results keep input order.
+pub fn parallel_map<T, R, F>(jobs: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    assert!(workers >= 1);
+    let n = jobs.len();
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let jobs_ref = &jobs;
+    let f_ref = &f;
+    let slots_ref = &slots;
+    let cursor_ref = &cursor;
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n.max(1)) {
+            scope.spawn(move || loop {
+                let index = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                if index >= n {
+                    break;
+                }
+                let result = f_ref(&jobs_ref[index]);
+                *slots_ref[index].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("worker must fill its slot"))
+        .collect()
+}
+
+/// Progress counter shared between the leader and workers.
+#[derive(Debug, Default)]
+pub struct Progress {
+    done: AtomicUsize,
+    total: AtomicUsize,
+}
+
+impl Progress {
+    /// New progress tracker for `total` jobs.
+    pub fn new(total: usize) -> Self {
+        Self { done: AtomicUsize::new(0), total: AtomicUsize::new(total) }
+    }
+
+    /// Record one completed job; returns the new completion count.
+    pub fn tick(&self) -> usize {
+        self.done.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// (done, total).
+    pub fn snapshot(&self) -> (usize, usize) {
+        (self.done.load(Ordering::Relaxed), self.total.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<usize> = (0..1000).collect();
+        let results = parallel_map(jobs, 8, |&x| x * 2);
+        assert_eq!(results, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let results = parallel_map(vec![1, 2, 3], 1, |&x| x + 1);
+        assert_eq!(results, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_jobs_ok() {
+        let results: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |&x| x);
+        assert!(results.is_empty());
+    }
+
+    #[test]
+    fn uneven_job_costs_balance() {
+        // Mix of cheap and expensive jobs; correctness, not timing, checked.
+        let jobs: Vec<u64> = (0..64).map(|i| if i % 7 == 0 { 200_000 } else { 10 }).collect();
+        let results = parallel_map(jobs.clone(), 4, |&n| (0..n).sum::<u64>());
+        for (job, result) in jobs.iter().zip(&results) {
+            assert_eq!(*result, job * (job - 1) / 2);
+        }
+    }
+
+    #[test]
+    fn progress_counts() {
+        let progress = Progress::new(10);
+        assert_eq!(progress.snapshot(), (0, 10));
+        assert_eq!(progress.tick(), 1);
+        assert_eq!(progress.tick(), 2);
+        assert_eq!(progress.snapshot(), (2, 10));
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

@@ -1,0 +1,196 @@
+//! Alternative dataflows for the ablation bench (§III-A claims RS optimizes
+//! data movement; `benches/ablations.rs` quantifies that against these).
+//!
+//! Both mappers share the RS compute model (spatial parallelism is the
+//! array, one MAC/PE/cycle) but differ in *which* operand stays resident,
+//! which changes the per-level traffic exactly as in the Eyeriss taxonomy:
+//!
+//! * **Weight stationary (WS)**: weights pinned in PE registers; every psum
+//!   streams through the array to the GLB (no local psum accumulation) and
+//!   ifmaps are re-broadcast per filter pass.
+//! * **Output stationary (OS)**: psums pinned; weights stream from GLB every
+//!   cycle-group (no filter residency), ifmaps stream with modest reuse.
+
+use super::{map_layer_rs, AccessCounts, Dataflow, LayerMapping};
+use crate::arch::AcceleratorConfig;
+use crate::dnn::{Layer, LayerKind};
+use crate::util::ceil_div;
+
+/// Map one layer with the weight-stationary dataflow.
+pub fn map_layer_ws(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
+    let mut mapping = base(layer, config, Dataflow::WeightStationary);
+    if layer.kind == LayerKind::Pool {
+        return mapping;
+    }
+    let s = layer.kernel;
+    let taps = (s * s) as u64;
+    // Weights resident: one tap per PE → weights load once per (m,c) group
+    // rotation; total weight GLB reads = weights × 1.
+    let weight_glb = layer.weights();
+    // Ifmap: re-broadcast once per resident filter group.
+    let m_resident = (config.num_pes() / taps.max(1) as usize).max(1).min(layer.out_c);
+    let m_tiles = ceil_div(layer.out_c, m_resident) as u64;
+    let ifmap_glb = layer.ifmap_elems() * m_tiles;
+    // Psum: streams to GLB every tap — the WS tax: C×taps partial updates
+    // per output element flow through the GLB hierarchy (accumulated in a
+    // GLB-side adder tree every `taps` values → ofmap × C round trips).
+    let psum_glb_writes = layer.ofmap_elems() * layer.in_c as u64;
+    let psum_glb_reads = layer.ofmap_elems() * (layer.in_c as u64 - 1);
+    mapping.traffic.glb = AccessCounts {
+        reads: ifmap_glb + weight_glb + psum_glb_reads,
+        writes: psum_glb_writes + ifmap_glb + weight_glb,
+    };
+    mapping.traffic.glb_weight_reads = weight_glb;
+    // Spad traffic: no psum spad use; ifmap + weight register reads only.
+    mapping.traffic.spad = AccessCounts { reads: 2 * mapping.macs, writes: ifmap_glb + weight_glb };
+    mapping.tiles = (m_tiles as usize, 1, 1);
+    finish(mapping, layer, config, ifmap_glb, weight_glb)
+}
+
+/// Map one layer with the output-stationary dataflow.
+pub fn map_layer_os(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
+    let mut mapping = base(layer, config, Dataflow::OutputStationary);
+    if layer.kind == LayerKind::Pool {
+        return mapping;
+    }
+    // Outputs pinned: each PE owns output pixels; psum never leaves.
+    let psum_glb_writes = layer.ofmap_elems();
+    // Weights stream every reuse-group: re-read once per output tile.
+    let out_tiles = ceil_div(layer.ofmap_elems() as usize, config.num_pes()) as u64;
+    let weight_glb = layer.weights() * out_tiles;
+    // Ifmap: neighboring outputs share rows — reuse ≈ kernel height.
+    let ifmap_glb = layer.ifmap_elems() * ceil_div(layer.kernel, 1) as u64;
+    mapping.traffic.glb = AccessCounts {
+        reads: ifmap_glb + weight_glb,
+        writes: psum_glb_writes + ifmap_glb + weight_glb,
+    };
+    mapping.traffic.glb_weight_reads = weight_glb;
+    mapping.traffic.spad =
+        AccessCounts { reads: 3 * mapping.macs, writes: mapping.macs + ifmap_glb + weight_glb };
+    mapping.tiles = (out_tiles as usize, 1, 1);
+    finish(mapping, layer, config, ifmap_glb, weight_glb)
+}
+
+/// Dispatch by dataflow (RS delegates to the primary mapper).
+pub fn map_layer(dataflow: Dataflow, layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
+    match dataflow {
+        Dataflow::RowStationary => map_layer_rs(layer, config),
+        Dataflow::WeightStationary => map_layer_ws(layer, config),
+        Dataflow::OutputStationary => map_layer_os(layer, config),
+    }
+}
+
+/// Shared compute model: same cycles as RS (the dataflows differ in traffic,
+/// not peak MACs/cycle), so traffic effects isolate cleanly in the ablation.
+fn base(layer: &Layer, config: &AcceleratorConfig, dataflow: Dataflow) -> LayerMapping {
+    let mut mapping = map_layer_rs(layer, config);
+    mapping.dataflow = dataflow;
+    mapping
+}
+
+/// Recompute DRAM traffic and the bandwidth bound after traffic edits.
+fn finish(
+    mut mapping: LayerMapping,
+    layer: &Layer,
+    config: &AcceleratorConfig,
+    ifmap_glb: u64,
+    weight_glb: u64,
+) -> LayerMapping {
+    let act_bytes = |elems: u64| elems * config.pe.act_bits() as u64 / 8;
+    let w_bytes = |elems: u64| (elems * config.pe.weight_bits() as u64).div_ceil(8);
+    // DRAM refetch mirrors GLB refetch when the working set spills.
+    let working_set = act_bytes(layer.ifmap_elems()) + w_bytes(layer.weights());
+    let spill = working_set > config.glb_bytes() as u64;
+    let ifmap_factor = if spill { ifmap_glb.div_ceil(layer.ifmap_elems().max(1)) } else { 1 };
+    let weight_factor = if spill { weight_glb.div_ceil(layer.weights().max(1)) } else { 1 };
+    mapping.traffic.dram_bytes = act_bytes(layer.ifmap_elems()) * ifmap_factor
+        + w_bytes(layer.weights()) * weight_factor
+        + act_bytes(layer.ofmap_elems());
+    let bw_bytes_per_cycle = config.dram_bw_gbps / config.clock_ghz;
+    let dram_cycles = (mapping.traffic.dram_bytes as f64 / bw_bytes_per_cycle).ceil() as u64;
+    mapping.cycles = mapping.compute_cycles.max(dram_cycles).max(1);
+    mapping.utilization = mapping.macs as f64 / (mapping.cycles as f64 * config.num_pes() as f64);
+    mapping
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::PeType;
+
+    fn cfg() -> AcceleratorConfig {
+        AcceleratorConfig { pe: PeType::Int16, ..AcceleratorConfig::default() }
+    }
+
+    fn conv() -> Layer {
+        Layer::conv("c", 32, 32, 64, 3, 1, 1)
+    }
+
+    #[test]
+    fn rs_moves_least_glb_data() {
+        // The paper's §III-A claim, and Eyeriss's: RS minimizes overall
+        // hierarchy traffic vs WS and OS for conv layers.
+        let rs = map_layer(Dataflow::RowStationary, &conv(), &cfg());
+        let ws = map_layer(Dataflow::WeightStationary, &conv(), &cfg());
+        let os = map_layer(Dataflow::OutputStationary, &conv(), &cfg());
+        assert!(
+            rs.traffic.glb.total() < ws.traffic.glb.total(),
+            "RS {} vs WS {}",
+            rs.traffic.glb.total(),
+            ws.traffic.glb.total()
+        );
+        assert!(
+            rs.traffic.glb.total() < os.traffic.glb.total(),
+            "RS {} vs OS {}",
+            rs.traffic.glb.total(),
+            os.traffic.glb.total()
+        );
+    }
+
+    #[test]
+    fn ws_psum_traffic_dominates() {
+        let ws = map_layer(Dataflow::WeightStationary, &conv(), &cfg());
+        // WS streams C partial updates per output element.
+        let conv_layer = conv();
+        assert!(ws.traffic.glb.writes >= conv_layer.ofmap_elems() * conv_layer.in_c as u64);
+    }
+
+    #[test]
+    fn os_never_spills_psums() {
+        let os = map_layer(Dataflow::OutputStationary, &conv(), &cfg());
+        let rs = map_layer(Dataflow::RowStationary, &conv(), &cfg());
+        // OS writes each output exactly once; RS may spill.
+        let conv_layer = conv();
+        let os_psum_writes = conv_layer.ofmap_elems();
+        assert!(os.traffic.glb.writes >= os_psum_writes);
+        let _ = rs;
+    }
+
+    #[test]
+    fn all_dataflows_same_macs() {
+        for df in [Dataflow::RowStationary, Dataflow::WeightStationary, Dataflow::OutputStationary]
+        {
+            assert_eq!(map_layer(df, &conv(), &cfg()).macs, conv().macs());
+        }
+    }
+
+    #[test]
+    fn dataflow_tags_propagate() {
+        assert_eq!(
+            map_layer(Dataflow::WeightStationary, &conv(), &cfg()).dataflow,
+            Dataflow::WeightStationary
+        );
+        assert_eq!(
+            map_layer(Dataflow::OutputStationary, &conv(), &cfg()).dataflow,
+            Dataflow::OutputStationary
+        );
+    }
+
+    #[test]
+    fn pool_layers_identical_across_dataflows() {
+        let pool = Layer::pool("p", 32, 64, 2, 2);
+        let rs = map_layer(Dataflow::RowStationary, &pool, &cfg());
+        let ws = map_layer(Dataflow::WeightStationary, &pool, &cfg());
+        assert_eq!(rs.traffic.dram_bytes, ws.traffic.dram_bytes);
+    }
+}

@@ -1,0 +1,347 @@
+//! Analytical dataflow mapper: maps DNN layers onto the PE array and counts
+//! cycles, utilization, and per-level memory accesses (the paper's Fig. 1
+//! outputs: "statistics on hardware utilization and memory accesses").
+//!
+//! The primary dataflow is **row stationary** (Eyeriss, §III-A): a strip of
+//! `R` PEs computes one output row by sliding filter rows over ifmap rows;
+//! strips replicate vertically across the array, output rows spread across
+//! columns. The mapping is sensitive to every swept knob: array dims set
+//! spatial parallelism, scratchpad sizes set temporal reuse (tile residency),
+//! GLB size sets DRAM refetch, bit precision sets traffic bytes.
+//!
+//! [`alt`] provides weight-stationary and output-stationary mappers for the
+//! paper's "RS optimizes data movement" ablation.
+
+pub mod alt;
+pub mod network;
+
+pub use network::{map_model, ModelMapping};
+
+use crate::arch::AcceleratorConfig;
+use crate::dnn::{Layer, LayerKind};
+use crate::util::ceil_div;
+
+/// GLB service bandwidth in bytes/cycle: four 128-bit banked ports
+/// (Eyeriss-class global buffers are multi-banked precisely so the array
+/// does not starve).
+pub const GLB_BYTES_PER_CYCLE: f64 = 64.0;
+
+/// Which dataflow mapped a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    RowStationary,
+    WeightStationary,
+    OutputStationary,
+}
+
+impl Dataflow {
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataflow::RowStationary => "row-stationary",
+            Dataflow::WeightStationary => "weight-stationary",
+            Dataflow::OutputStationary => "output-stationary",
+        }
+    }
+}
+
+/// Access counts at one storage level (element granularity).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct AccessCounts {
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl AccessCounts {
+    /// Total accesses.
+    pub fn total(&self) -> u64 {
+        self.reads + self.writes
+    }
+}
+
+/// Per-level traffic statistics for one mapped layer.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TrafficStats {
+    /// Per-PE scratchpad accesses (all three spads combined).
+    pub spad: AccessCounts,
+    /// Global buffer accesses.
+    pub glb: AccessCounts,
+    /// Of `glb.reads`, how many move *weights* (they cost `weight_bits`
+    /// per element, not `act_bits` — the 4-bit LightPE-1 weights are 4×
+    /// cheaper per element than INT16's).
+    pub glb_weight_reads: u64,
+    /// DRAM traffic in **bytes** (precision-dependent).
+    pub dram_bytes: u64,
+}
+
+/// The mapper's result for one layer on one configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerMapping {
+    pub layer_name: String,
+    pub dataflow: Dataflow,
+    /// MACs in the layer.
+    pub macs: u64,
+    /// Cycles to execute the layer (compute- or bandwidth-bound).
+    pub cycles: u64,
+    /// Compute-only cycles (no bandwidth stall).
+    pub compute_cycles: u64,
+    /// Average PE-array utilization in [0, 1]: MACs / (cycles × PEs).
+    pub utilization: f64,
+    /// Traffic statistics.
+    pub traffic: TrafficStats,
+    /// Tiling detail: (m_tiles, c_tiles, e_tiles) temporal tile counts.
+    pub tiles: (usize, usize, usize),
+}
+
+impl LayerMapping {
+    /// Latency in seconds at a clock (GHz).
+    pub fn latency_s(&self, clock_ghz: f64) -> f64 {
+        self.cycles as f64 / (clock_ghz * 1e9)
+    }
+}
+
+/// Map one layer with the row-stationary dataflow.
+///
+/// Pooling layers do no MACs but still move their feature maps through the
+/// hierarchy; they are modeled as pure traffic.
+pub fn map_layer_rs(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
+    if layer.kind == LayerKind::Pool {
+        return map_pool(layer, config);
+    }
+    let r = layer.kernel; // filter rows (= S columns; square)
+    let s = layer.kernel;
+    let e = layer.out_hw(); // output rows
+    let f = layer.out_hw(); // output columns
+    let c = layer.in_c;
+    let m = layer.out_c;
+    let macs = layer.macs();
+
+    // --- Spatial mapping -------------------------------------------------
+    // A strip of R PEs produces one output row for one (m, c) pair; strips
+    // stack vertically, output rows spread across columns.
+    let strip_height = r.min(config.rows);
+    let r_folds = ceil_div(r, strip_height); // temporal fold if R > rows
+    let strips = (config.rows / strip_height).max(1);
+    let e_spatial = e.min(config.cols);
+
+    // --- Temporal tiling (scratchpad residency) --------------------------
+    // Filter spad holds `filter_entries` weights per PE: filter *rows* of S
+    // weights, one row per resident (m, c) pair. Channels co-resident come
+    // from the ifmap spad; the m-extent is what residency is left after
+    // covering those channels.
+    let rows_resident_per_pe = (config.spad.filter_entries / s.max(1)).max(1);
+    let c_resident = (config.spad.ifmap_entries / s.max(1)).max(1).min(c.max(1));
+    let c_tiles = ceil_div(c, c_resident);
+    let mc_resident = strips * rows_resident_per_pe;
+    let m_resident = (mc_resident / c_resident).max(1).min(m.max(1));
+    let m_tiles = ceil_div(m, m_resident);
+    // Psum spad bounds the output-row chunk a strip accumulates locally.
+    let f_chunk = config.spad.psum_entries.min(f.max(1)).max(1);
+    let f_spills = ceil_div(f, f_chunk); // chunks per output row
+    let e_tiles = ceil_div(e, e_spatial);
+
+    // --- Cycles -----------------------------------------------------------
+    // Each pass: active strips × e_spatial PEs compute F×S MACs per
+    // primitive; passes cover (m × c) pairs and output-row tiles.
+    let mc_per_pass = strips;
+    let passes = ceil_div(m * c, mc_per_pass) as u64 * e_tiles as u64 * r_folds as u64;
+    let compute_cycles = passes * (f as u64) * (s as u64);
+    // Boundary waste is captured by the ceil terms; utilization follows.
+
+    // --- Traffic ----------------------------------------------------------
+    // Scratchpad: ifmap read + filter read + psum read&write per MAC, plus
+    // spad fill writes (one write per element entering the spad from GLB).
+    let spad_reads = 3 * macs; // ifmap + filter + psum read
+    let spad_writes = macs; // psum write
+    // GLB→spad fills, with reuse: ifmap rows broadcast once per m-tile;
+    // filters re-fetched once per output-row tile; psums spill when channel
+    // accumulation is interrupted (c_tiles > 1) or rows chunk (f_spills).
+    let ifmap_glb_reads = layer.ifmap_elems() * m_tiles as u64;
+    let filter_glb_reads = layer.weights() * e_tiles as u64;
+    let psum_spill_rounds = (c_tiles as u64 - 1) + (f_spills as u64 - 1);
+    let psum_glb_writes = layer.ofmap_elems() * (psum_spill_rounds + 1);
+    let psum_glb_reads = layer.ofmap_elems() * psum_spill_rounds;
+    let glb = AccessCounts {
+        reads: ifmap_glb_reads + filter_glb_reads + psum_glb_reads,
+        writes: psum_glb_writes + ifmap_glb_reads + filter_glb_reads, // fills written into GLB once
+    };
+    let spad = AccessCounts {
+        reads: spad_reads,
+        writes: spad_writes + ifmap_glb_reads + filter_glb_reads,
+    };
+
+    // DRAM: ifmap + weights + ofmap move once if the GLB can cache the
+    // ifmap alongside one filter tile across the m-tile passes; otherwise
+    // the ifmap is re-fetched from DRAM for every filter tile.
+    let act_bytes = |elems: u64| elems * config.pe.act_bits() as u64 / 8;
+    let w_bytes = |elems: u64| (elems * config.pe.weight_bits() as u64).div_ceil(8);
+    let cached_set_bytes = act_bytes(layer.ifmap_elems())
+        + w_bytes(layer.weights() / m_tiles.max(1) as u64);
+    let ifmap_refetch =
+        if cached_set_bytes <= config.glb_bytes() as u64 { 1 } else { m_tiles as u64 };
+    let dram_bytes = act_bytes(layer.ifmap_elems()) * ifmap_refetch
+        + w_bytes(layer.weights())
+        + act_bytes(layer.ofmap_elems());
+
+    // --- Bandwidth bounds ---------------------------------------------------
+    // DRAM: the configured off-chip bandwidth.
+    let bw_bytes_per_cycle = config.dram_bw_gbps / config.clock_ghz; // GB/s ÷ Gcycle/s
+    let dram_cycles = (dram_bytes as f64 / bw_bytes_per_cycle).ceil() as u64;
+    // GLB: a banked buffer serves GLB_BYTES_PER_CYCLE across its ports;
+    // designs with tiny scratchpads hammer the GLB and stall here — the
+    // physical cost of trading spad area for traffic.
+    let glb_bytes_moved =
+        glb.total() as f64 * config.pe.act_bits() as f64 / 8.0;
+    let glb_cycles = (glb_bytes_moved / GLB_BYTES_PER_CYCLE).ceil() as u64;
+    let cycles = compute_cycles.max(dram_cycles).max(glb_cycles).max(1);
+    let utilization = macs as f64 / (cycles as f64 * config.num_pes() as f64);
+
+    LayerMapping {
+        layer_name: layer.name.clone(),
+        dataflow: Dataflow::RowStationary,
+        macs,
+        cycles,
+        compute_cycles,
+        utilization,
+        traffic: TrafficStats { spad, glb, glb_weight_reads: filter_glb_reads, dram_bytes },
+        tiles: (m_tiles, c_tiles, e_tiles),
+    }
+}
+
+/// Pooling: no MACs; feature map streams GLB↔DRAM and through the array.
+fn map_pool(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
+    let act_bytes = |elems: u64| elems * config.pe.act_bits() as u64 / 8;
+    let dram_bytes = act_bytes(layer.ifmap_elems()) + act_bytes(layer.ofmap_elems());
+    let glb = AccessCounts { reads: layer.ifmap_elems(), writes: layer.ofmap_elems() };
+    // Pool compares/averages at one element per PE per cycle.
+    let compute_cycles =
+        ceil_div(layer.ifmap_elems() as usize, config.num_pes()).max(1) as u64;
+    let bw_bytes_per_cycle = config.dram_bw_gbps / config.clock_ghz;
+    let dram_cycles = (dram_bytes as f64 / bw_bytes_per_cycle).ceil() as u64;
+    let cycles = compute_cycles.max(dram_cycles).max(1);
+    LayerMapping {
+        layer_name: layer.name.clone(),
+        dataflow: Dataflow::RowStationary,
+        macs: 0,
+        cycles,
+        compute_cycles,
+        utilization: 0.0,
+        traffic: TrafficStats { spad: AccessCounts::default(), glb, glb_weight_reads: 0, dram_bytes },
+        tiles: (1, 1, 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ScratchpadCfg;
+    use crate::quant::PeType;
+
+    fn cfg() -> AcceleratorConfig {
+        AcceleratorConfig::default()
+    }
+
+    fn conv() -> Layer {
+        Layer::conv("c", 32, 16, 32, 3, 1, 1)
+    }
+
+    #[test]
+    fn utilization_in_unit_interval() {
+        let mapping = map_layer_rs(&conv(), &cfg());
+        assert!(mapping.utilization > 0.0 && mapping.utilization <= 1.0);
+    }
+
+    #[test]
+    fn cycles_lower_bounded_by_ideal() {
+        let mapping = map_layer_rs(&conv(), &cfg());
+        let ideal = mapping.macs / cfg().num_pes() as u64;
+        assert!(mapping.cycles >= ideal, "cycles {} < ideal {}", mapping.cycles, ideal);
+    }
+
+    #[test]
+    fn bigger_array_fewer_cycles() {
+        let small = map_layer_rs(&conv(), &AcceleratorConfig { rows: 8, cols: 8, ..cfg() });
+        let big = map_layer_rs(&conv(), &AcceleratorConfig { rows: 32, cols: 32, ..cfg() });
+        assert!(big.cycles < small.cycles);
+    }
+
+    #[test]
+    fn bigger_filter_spad_fewer_ifmap_refetches() {
+        let small_spad = AcceleratorConfig {
+            spad: ScratchpadCfg { ifmap_entries: 12, filter_entries: 6, psum_entries: 24 },
+            ..cfg()
+        };
+        let large_spad = AcceleratorConfig {
+            spad: ScratchpadCfg { ifmap_entries: 12, filter_entries: 448, psum_entries: 24 },
+            ..cfg()
+        };
+        let a = map_layer_rs(&conv(), &small_spad);
+        let b = map_layer_rs(&conv(), &large_spad);
+        assert!(
+            b.traffic.glb.reads < a.traffic.glb.reads,
+            "bigger filter spad must cut GLB traffic: {} vs {}",
+            b.traffic.glb.reads,
+            a.traffic.glb.reads
+        );
+    }
+
+    #[test]
+    fn lower_precision_less_dram_traffic() {
+        let int16 = map_layer_rs(&conv(), &AcceleratorConfig { pe: PeType::Int16, ..cfg() });
+        let light1 = map_layer_rs(&conv(), &AcceleratorConfig { pe: PeType::LightPe1, ..cfg() });
+        assert!(light1.traffic.dram_bytes < int16.traffic.dram_bytes / 2 + 1);
+    }
+
+    #[test]
+    fn small_glb_forces_refetch() {
+        // Big ImageNet-ish layer with a tiny GLB must refetch the ifmap.
+        let layer = Layer::conv("big", 56, 256, 256, 3, 1, 1);
+        let tiny_glb = AcceleratorConfig { glb_kib: 16, ..cfg() };
+        let big_glb = AcceleratorConfig { glb_kib: 4096, ..cfg() };
+        let a = map_layer_rs(&layer, &tiny_glb);
+        let b = map_layer_rs(&layer, &big_glb);
+        assert!(a.traffic.dram_bytes > b.traffic.dram_bytes);
+    }
+
+    #[test]
+    fn bandwidth_bound_when_starved() {
+        let starved = AcceleratorConfig { dram_bw_gbps: 0.05, ..cfg() };
+        let mapping = map_layer_rs(&conv(), &starved);
+        assert!(mapping.cycles > mapping.compute_cycles);
+        assert!(mapping.utilization < 0.5);
+    }
+
+    #[test]
+    fn spad_traffic_scales_with_macs() {
+        let mapping = map_layer_rs(&conv(), &cfg());
+        assert!(mapping.traffic.spad.reads >= 3 * mapping.macs);
+        assert!(mapping.traffic.spad.writes >= mapping.macs);
+    }
+
+    #[test]
+    fn fc_layer_maps() {
+        let fc = Layer::fc("fc", 512, 10);
+        let mapping = map_layer_rs(&fc, &cfg());
+        assert_eq!(mapping.macs, 5120);
+        assert!(mapping.cycles > 0);
+    }
+
+    #[test]
+    fn pool_layer_pure_traffic() {
+        let pool = Layer::pool("p", 32, 64, 2, 2);
+        let mapping = map_layer_rs(&pool, &cfg());
+        assert_eq!(mapping.macs, 0);
+        assert!(mapping.traffic.dram_bytes > 0);
+        assert_eq!(mapping.utilization, 0.0);
+    }
+
+    #[test]
+    fn kernel_larger_than_array_folds() {
+        // 7×7 stem on an 4-row array: R folds temporally, still completes.
+        let stem = Layer::conv("stem", 224, 3, 64, 7, 2, 3);
+        let narrow = AcceleratorConfig { rows: 4, cols: 16, ..cfg() };
+        let mapping = map_layer_rs(&stem, &narrow);
+        assert!(mapping.cycles > 0);
+        assert!(mapping.utilization <= 1.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Whole-network mapping: run the layer mapper over a model and aggregate.
+
+use super::{alt::map_layer, Dataflow, LayerMapping, TrafficStats};
+use crate::arch::AcceleratorConfig;
+use crate::dnn::Model;
+
+/// Aggregated mapping of a full model on one configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMapping {
+    pub model_name: String,
+    pub dataflow: Dataflow,
+    pub layers: Vec<LayerMapping>,
+    pub total_macs: u64,
+    pub total_cycles: u64,
+    pub traffic: TrafficStats,
+    /// MAC-weighted average utilization.
+    pub avg_utilization: f64,
+}
+
+impl ModelMapping {
+    /// End-to-end inference latency (s) at a clock (GHz).
+    pub fn latency_s(&self, clock_ghz: f64) -> f64 {
+        self.total_cycles as f64 / (clock_ghz * 1e9)
+    }
+
+    /// Throughput in inferences/s at a clock (GHz).
+    pub fn inferences_per_s(&self, clock_ghz: f64) -> f64 {
+        1.0 / self.latency_s(clock_ghz)
+    }
+
+    /// Effective GMAC/s at a clock (GHz).
+    pub fn effective_gmacs(&self, clock_ghz: f64) -> f64 {
+        self.total_macs as f64 / self.latency_s(clock_ghz) / 1e9
+    }
+}
+
+/// Map every layer of `model` and aggregate **totals only** — the DSE
+/// hot-path variant: no per-layer records are materialized (`layers` is
+/// empty), which avoids one `Vec` + one `String` per layer per evaluation
+/// (≈35% of campaign time before this fast path existed; EXPERIMENTS.md
+/// §Perf).
+pub fn map_model_totals(
+    model: &Model,
+    config: &AcceleratorConfig,
+    dataflow: Dataflow,
+) -> ModelMapping {
+    let mut total_macs = 0u64;
+    let mut total_cycles = 0u64;
+    let mut traffic = TrafficStats::default();
+    for layer in &model.layers {
+        let m = map_layer(dataflow, layer, config);
+        total_macs += m.macs;
+        total_cycles += m.cycles;
+        traffic.spad.reads += m.traffic.spad.reads;
+        traffic.spad.writes += m.traffic.spad.writes;
+        traffic.glb.reads += m.traffic.glb.reads;
+        traffic.glb.writes += m.traffic.glb.writes;
+        traffic.glb_weight_reads += m.traffic.glb_weight_reads;
+        traffic.dram_bytes += m.traffic.dram_bytes;
+    }
+    let avg_utilization = if total_cycles == 0 {
+        0.0
+    } else {
+        total_macs as f64 / (total_cycles as f64 * config.num_pes() as f64)
+    };
+    ModelMapping {
+        model_name: model.name.clone(),
+        dataflow,
+        layers: Vec::new(),
+        total_macs,
+        total_cycles,
+        traffic,
+        avg_utilization,
+    }
+}
+
+/// Map every layer of `model` and aggregate.
+pub fn map_model(model: &Model, config: &AcceleratorConfig, dataflow: Dataflow) -> ModelMapping {
+    let layers: Vec<LayerMapping> =
+        model.layers.iter().map(|l| map_layer(dataflow, l, config)).collect();
+    let total_macs = layers.iter().map(|m| m.macs).sum();
+    let total_cycles = layers.iter().map(|m| m.cycles).sum();
+    let traffic = layers.iter().fold(TrafficStats::default(), |mut acc, m| {
+        acc.spad.reads += m.traffic.spad.reads;
+        acc.spad.writes += m.traffic.spad.writes;
+        acc.glb.reads += m.traffic.glb.reads;
+        acc.glb.writes += m.traffic.glb.writes;
+        acc.glb_weight_reads += m.traffic.glb_weight_reads;
+        acc.dram_bytes += m.traffic.dram_bytes;
+        acc
+    });
+    let avg_utilization = if total_cycles == 0 {
+        0.0
+    } else {
+        total_macs as f64 / (total_cycles as f64 * config.num_pes() as f64)
+    };
+    ModelMapping {
+        model_name: model.name.clone(),
+        dataflow,
+        layers,
+        total_macs,
+        total_cycles,
+        traffic,
+        avg_utilization,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{model_for, Dataset, ModelKind};
+
+    #[test]
+    fn aggregates_are_sums() {
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let config = AcceleratorConfig::default();
+        let mapping = map_model(&model, &config, Dataflow::RowStationary);
+        assert_eq!(mapping.total_macs, model.total_macs());
+        assert_eq!(mapping.layers.len(), model.layers.len());
+        let cycle_sum: u64 = mapping.layers.iter().map(|l| l.cycles).sum();
+        assert_eq!(mapping.total_cycles, cycle_sum);
+    }
+
+    #[test]
+    fn latency_and_throughput_consistent() {
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let mapping = map_model(&model, &AcceleratorConfig::default(), Dataflow::RowStationary);
+        let latency = mapping.latency_s(1.0);
+        assert!(latency > 0.0);
+        let throughput = mapping.inferences_per_s(1.0);
+        assert!((throughput * latency - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        for kind in [ModelKind::Vgg16, ModelKind::ResNet20, ModelKind::ResNet56] {
+            let model = model_for(kind, Dataset::Cifar10);
+            let mapping =
+                map_model(&model, &AcceleratorConfig::default(), Dataflow::RowStationary);
+            assert!(mapping.avg_utilization > 0.0 && mapping.avg_utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn imagenet_models_map() {
+        let model = model_for(ModelKind::ResNet50, Dataset::ImageNet);
+        let mapping = map_model(&model, &AcceleratorConfig::default(), Dataflow::RowStationary);
+        assert!(mapping.total_cycles > 1_000_000, "ResNet-50 should be millions of cycles");
+        assert!(mapping.traffic.dram_bytes > model.total_weights());
+    }
+}

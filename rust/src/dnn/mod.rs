@@ -1,0 +1,190 @@
+//! DNN workload descriptions: layer shapes for the paper's model zoo.
+//!
+//! The evaluation (§IV) iterates VGG-16, ResNet-20, ResNet-34, ResNet-50
+//! and ResNet-56 over CIFAR-10, CIFAR-100 and ImageNet. This module holds
+//! the layer-wise configurations ([`Layer`]) and the zoo constructors
+//! ([`zoo`]); the dataflow mapper consumes them layer by layer.
+
+pub mod zoo;
+
+pub use zoo::{model_for, models_for, Dataset, ModelKind};
+
+/// Layer kind; the mapper treats FC as a 1×1 conv over a 1×1 ifmap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    FullyConnected,
+    /// Pooling moves data but does no MACs; it still costs memory traffic.
+    Pool,
+}
+
+/// One layer's shape parameters (NCHW, square spatial dims).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input feature map height = width.
+    pub in_hw: usize,
+    /// Input channels.
+    pub in_c: usize,
+    /// Output channels (filters).
+    pub out_c: usize,
+    /// Filter height = width.
+    pub kernel: usize,
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl Layer {
+    /// Convolution layer constructor.
+    pub fn conv(
+        name: &str,
+        in_hw: usize,
+        in_c: usize,
+        out_c: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    ) -> Self {
+        Self { name: name.into(), kind: LayerKind::Conv, in_hw, in_c, out_c, kernel, stride, padding }
+    }
+
+    /// Fully-connected layer constructor (`in_features → out_features`).
+    pub fn fc(name: &str, in_features: usize, out_features: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::FullyConnected,
+            in_hw: 1,
+            in_c: in_features,
+            out_c: out_features,
+            kernel: 1,
+            stride: 1,
+            padding: 0,
+        }
+    }
+
+    /// Pooling layer constructor.
+    pub fn pool(name: &str, in_hw: usize, in_c: usize, kernel: usize, stride: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Pool,
+            in_hw,
+            in_c,
+            out_c: in_c,
+            kernel,
+            stride,
+            padding: 0,
+        }
+    }
+
+    /// Output feature-map height (= width).
+    pub fn out_hw(&self) -> usize {
+        (self.in_hw + 2 * self.padding - self.kernel) / self.stride + 1
+    }
+
+    /// Multiply-accumulates for one inference of this layer.
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Pool => 0,
+            _ => {
+                let out = self.out_hw() as u64;
+                out * out
+                    * self.out_c as u64
+                    * self.in_c as u64
+                    * (self.kernel * self.kernel) as u64
+            }
+        }
+    }
+
+    /// Number of weights (no bias, matching the paper's MAC counting).
+    pub fn weights(&self) -> u64 {
+        match self.kind {
+            LayerKind::Pool => 0,
+            _ => self.out_c as u64 * self.in_c as u64 * (self.kernel * self.kernel) as u64,
+        }
+    }
+
+    /// Input feature-map element count.
+    pub fn ifmap_elems(&self) -> u64 {
+        (self.in_hw * self.in_hw * self.in_c) as u64
+    }
+
+    /// Output feature-map element count.
+    pub fn ofmap_elems(&self) -> u64 {
+        let out = self.out_hw() as u64;
+        out * out * self.out_c as u64
+    }
+}
+
+/// A named model: ordered layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    pub name: String,
+    pub dataset: Dataset,
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    /// Total MACs per inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// Total weights.
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(Layer::weights).sum()
+    }
+
+    /// Only layers that do MACs (mapper input).
+    pub fn compute_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.kind != LayerKind::Pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_shape() {
+        // 32×32, 3×3, stride 1, pad 1 → 32×32.
+        let layer = Layer::conv("c", 32, 3, 16, 3, 1, 1);
+        assert_eq!(layer.out_hw(), 32);
+        // 32×32, 3×3, stride 2, pad 1 → 16×16.
+        let down = Layer::conv("d", 32, 16, 32, 3, 2, 1);
+        assert_eq!(down.out_hw(), 16);
+        // 224×224, 7×7, stride 2, pad 3 → 112×112 (ResNet stem).
+        let stem = Layer::conv("stem", 224, 3, 64, 7, 2, 3);
+        assert_eq!(stem.out_hw(), 112);
+    }
+
+    #[test]
+    fn conv_macs_formula() {
+        let layer = Layer::conv("c", 8, 4, 16, 3, 1, 1);
+        // 8*8 output positions × 16 filters × 4 channels × 9 taps
+        assert_eq!(layer.macs(), 8 * 8 * 16 * 4 * 9);
+    }
+
+    #[test]
+    fn fc_as_matvec() {
+        let fc = Layer::fc("fc", 512, 10);
+        assert_eq!(fc.macs(), 5120);
+        assert_eq!(fc.weights(), 5120);
+        assert_eq!(fc.out_hw(), 1);
+    }
+
+    #[test]
+    fn pool_is_mac_free() {
+        let pool = Layer::pool("p", 32, 64, 2, 2);
+        assert_eq!(pool.macs(), 0);
+        assert_eq!(pool.out_hw(), 16);
+        assert_eq!(pool.ofmap_elems(), 16 * 16 * 64);
+    }
+
+    #[test]
+    fn fmap_sizes() {
+        let layer = Layer::conv("c", 32, 3, 16, 3, 1, 1);
+        assert_eq!(layer.ifmap_elems(), 32 * 32 * 3);
+        assert_eq!(layer.ofmap_elems(), 32 * 32 * 16);
+    }
+}

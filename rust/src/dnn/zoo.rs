@@ -1,0 +1,379 @@
+//! Model zoo: the paper's five networks at their evaluated resolutions.
+//!
+//! * CIFAR-10 / CIFAR-100 (32×32): VGG-16 (CIFAR variant), ResNet-20,
+//!   ResNet-56 (He et al.'s CIFAR family, §IV-A).
+//! * ImageNet (224×224): VGG-16, ResNet-34, ResNet-50.
+//!
+//! Layer tables follow the original papers; BN/ReLU are folded (no MACs),
+//! biases omitted, matching the paper's MAC accounting.
+
+use super::{Layer, Model};
+
+/// Evaluation dataset (fixes input resolution and class count).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    Cifar10,
+    Cifar100,
+    ImageNet,
+}
+
+impl Dataset {
+    /// All datasets in the paper's order.
+    pub const ALL: [Dataset; 3] = [Dataset::Cifar10, Dataset::Cifar100, Dataset::ImageNet];
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataset::Cifar10 => "CIFAR-10",
+            Dataset::Cifar100 => "CIFAR-100",
+            Dataset::ImageNet => "ImageNet",
+        }
+    }
+
+    /// Parse a user-facing name.
+    pub fn parse(text: &str) -> Option<Dataset> {
+        let key: String =
+            text.chars().filter(|c| c.is_ascii_alphanumeric()).collect::<String>().to_lowercase();
+        match key.as_str() {
+            "cifar10" => Some(Dataset::Cifar10),
+            "cifar100" => Some(Dataset::Cifar100),
+            "imagenet" => Some(Dataset::ImageNet),
+            _ => None,
+        }
+    }
+
+    /// Input resolution (height = width).
+    pub fn input_hw(self) -> usize {
+        match self {
+            Dataset::Cifar10 | Dataset::Cifar100 => 32,
+            Dataset::ImageNet => 224,
+        }
+    }
+
+    /// Number of classes.
+    pub fn classes(self) -> usize {
+        match self {
+            Dataset::Cifar10 => 10,
+            Dataset::Cifar100 => 100,
+            Dataset::ImageNet => 1000,
+        }
+    }
+
+    /// The models the paper evaluates on this dataset (Fig. 4 panels).
+    pub fn paper_models(self) -> Vec<ModelKind> {
+        match self {
+            Dataset::Cifar10 | Dataset::Cifar100 => {
+                vec![ModelKind::Vgg16, ModelKind::ResNet20, ModelKind::ResNet56]
+            }
+            Dataset::ImageNet => {
+                vec![ModelKind::Vgg16, ModelKind::ResNet34, ModelKind::ResNet50]
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Dataset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Model family member.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Vgg16,
+    ResNet20,
+    ResNet34,
+    ResNet50,
+    ResNet56,
+}
+
+impl ModelKind {
+    /// Display name matching the paper.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Vgg16 => "VGG-16",
+            ModelKind::ResNet20 => "ResNet-20",
+            ModelKind::ResNet34 => "ResNet-34",
+            ModelKind::ResNet50 => "ResNet-50",
+            ModelKind::ResNet56 => "ResNet-56",
+        }
+    }
+
+    /// Parse a user-facing name.
+    pub fn parse(text: &str) -> Option<ModelKind> {
+        let key: String =
+            text.chars().filter(|c| c.is_ascii_alphanumeric()).collect::<String>().to_lowercase();
+        match key.as_str() {
+            "vgg16" => Some(ModelKind::Vgg16),
+            "resnet20" => Some(ModelKind::ResNet20),
+            "resnet34" => Some(ModelKind::ResNet34),
+            "resnet50" => Some(ModelKind::ResNet50),
+            "resnet56" => Some(ModelKind::ResNet56),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Build a model for a dataset.
+pub fn model_for(kind: ModelKind, dataset: Dataset) -> Model {
+    match kind {
+        ModelKind::Vgg16 => vgg16(dataset),
+        ModelKind::ResNet20 => resnet_cifar(20, dataset),
+        ModelKind::ResNet56 => resnet_cifar(56, dataset),
+        ModelKind::ResNet34 => resnet34(dataset),
+        ModelKind::ResNet50 => resnet50(dataset),
+    }
+}
+
+/// All (model, dataset) pairs the paper evaluates on a dataset.
+pub fn models_for(dataset: Dataset) -> Vec<Model> {
+    dataset.paper_models().into_iter().map(|k| model_for(k, dataset)).collect()
+}
+
+fn vgg16(dataset: Dataset) -> Model {
+    let mut layers = Vec::new();
+    let mut hw = dataset.input_hw();
+    let mut in_c = 3;
+    // (num convs, out channels) per VGG-16 stage.
+    let stages = [(2usize, 64usize), (2, 128), (3, 256), (3, 512), (3, 512)];
+    for (stage_idx, &(convs, out_c)) in stages.iter().enumerate() {
+        for conv_idx in 0..convs {
+            layers.push(Layer::conv(
+                &format!("conv{}_{}", stage_idx + 1, conv_idx + 1),
+                hw,
+                in_c,
+                out_c,
+                3,
+                1,
+                1,
+            ));
+            in_c = out_c;
+        }
+        layers.push(Layer::pool(&format!("pool{}", stage_idx + 1), hw, in_c, 2, 2));
+        hw /= 2;
+    }
+    // Classifier: ImageNet uses the original 4096-wide FCs over 7×7×512;
+    // the CIFAR variant (Simonyan-style at 32×32) flattens 1×1×512.
+    match dataset {
+        Dataset::ImageNet => {
+            layers.push(Layer::fc("fc6", hw * hw * in_c, 4096));
+            layers.push(Layer::fc("fc7", 4096, 4096));
+            layers.push(Layer::fc("fc8", 4096, dataset.classes()));
+        }
+        _ => {
+            layers.push(Layer::fc("fc6", hw * hw * in_c, 512));
+            layers.push(Layer::fc("fc7", 512, dataset.classes()));
+        }
+    }
+    Model { name: "VGG-16".into(), dataset, layers }
+}
+
+/// He et al.'s CIFAR ResNet family: depth = 6n+2, stages of n basic blocks
+/// at widths {16, 32, 64} over {32, 16, 8} spatial dims.
+fn resnet_cifar(depth: usize, dataset: Dataset) -> Model {
+    assert!(depth % 6 == 2, "CIFAR ResNet depth must be 6n+2");
+    assert!(dataset != Dataset::ImageNet, "CIFAR ResNet is a 32×32 model");
+    let n = (depth - 2) / 6;
+    let mut layers = vec![Layer::conv("conv1", 32, 3, 16, 3, 1, 1)];
+    let mut hw = 32;
+    let mut in_c = 16;
+    for (stage_idx, &width) in [16usize, 32, 64].iter().enumerate() {
+        for block in 0..n {
+            let stride = if stage_idx > 0 && block == 0 { 2 } else { 1 };
+            let prefix = format!("s{}b{}", stage_idx + 1, block + 1);
+            layers.push(Layer::conv(&format!("{prefix}_conv1"), hw, in_c, width, 3, stride, 1));
+            let out_hw = layers.last().unwrap().out_hw();
+            layers.push(Layer::conv(&format!("{prefix}_conv2"), out_hw, width, width, 3, 1, 1));
+            if stride == 2 || in_c != width {
+                // Projection shortcut (1×1, stride 2).
+                layers.push(Layer::conv(&format!("{prefix}_proj"), hw, in_c, width, 1, stride, 0));
+            }
+            hw = out_hw;
+            in_c = width;
+        }
+    }
+    layers.push(Layer::pool("avgpool", hw, in_c, hw, hw));
+    layers.push(Layer::fc("fc", in_c, dataset.classes()));
+    Model { name: format!("ResNet-{depth}"), dataset, layers }
+}
+
+/// ImageNet ResNet-34: basic blocks [3, 4, 6, 3] at {64, 128, 256, 512}.
+fn resnet34(dataset: Dataset) -> Model {
+    let mut layers = vec![
+        Layer::conv("conv1", dataset.input_hw(), 3, 64, 7, 2, 3),
+        Layer::pool("maxpool", 112, 64, 3, 2),
+    ];
+    let mut hw = 56;
+    let mut in_c = 64;
+    let stages: [(usize, usize); 4] = [(3, 64), (4, 128), (6, 256), (3, 512)];
+    for (stage_idx, &(blocks, width)) in stages.iter().enumerate() {
+        for block in 0..blocks {
+            let stride = if stage_idx > 0 && block == 0 { 2 } else { 1 };
+            let prefix = format!("s{}b{}", stage_idx + 1, block + 1);
+            layers.push(Layer::conv(&format!("{prefix}_conv1"), hw, in_c, width, 3, stride, 1));
+            let out_hw = layers.last().unwrap().out_hw();
+            layers.push(Layer::conv(&format!("{prefix}_conv2"), out_hw, width, width, 3, 1, 1));
+            if stride == 2 || in_c != width {
+                layers.push(Layer::conv(&format!("{prefix}_proj"), hw, in_c, width, 1, stride, 0));
+            }
+            hw = out_hw;
+            in_c = width;
+        }
+    }
+    layers.push(Layer::pool("avgpool", hw, in_c, hw, hw));
+    layers.push(Layer::fc("fc", in_c, dataset.classes()));
+    Model { name: "ResNet-34".into(), dataset, layers }
+}
+
+/// ImageNet ResNet-50: bottleneck blocks [3, 4, 6, 3], expansion 4.
+fn resnet50(dataset: Dataset) -> Model {
+    let mut layers = vec![
+        Layer::conv("conv1", dataset.input_hw(), 3, 64, 7, 2, 3),
+        Layer::pool("maxpool", 112, 64, 3, 2),
+    ];
+    let mut hw = 56;
+    let mut in_c = 64;
+    let stages: [(usize, usize); 4] = [(3, 64), (4, 128), (6, 256), (3, 512)];
+    for (stage_idx, &(blocks, width)) in stages.iter().enumerate() {
+        let out_c = width * 4;
+        for block in 0..blocks {
+            let stride = if stage_idx > 0 && block == 0 { 2 } else { 1 };
+            let prefix = format!("s{}b{}", stage_idx + 1, block + 1);
+            layers.push(Layer::conv(&format!("{prefix}_conv1"), hw, in_c, width, 1, 1, 0));
+            layers.push(Layer::conv(&format!("{prefix}_conv2"), hw, width, width, 3, stride, 1));
+            let out_hw = layers.last().unwrap().out_hw();
+            layers.push(Layer::conv(&format!("{prefix}_conv3"), out_hw, width, out_c, 1, 1, 0));
+            if stride == 2 || in_c != out_c {
+                layers.push(Layer::conv(&format!("{prefix}_proj"), hw, in_c, out_c, 1, stride, 0));
+            }
+            hw = out_hw;
+            in_c = out_c;
+        }
+    }
+    layers.push(Layer::pool("avgpool", hw, in_c, hw, hw));
+    layers.push(Layer::fc("fc", in_c, dataset.classes()));
+    Model { name: "ResNet-50".into(), dataset, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_properties() {
+        assert_eq!(Dataset::Cifar10.input_hw(), 32);
+        assert_eq!(Dataset::Cifar100.classes(), 100);
+        assert_eq!(Dataset::ImageNet.input_hw(), 224);
+        assert_eq!(Dataset::parse("CIFAR-10"), Some(Dataset::Cifar10));
+    }
+
+    #[test]
+    fn resnet20_has_correct_depth() {
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        // 20 weight layers on the main path: conv1 + 18 block convs + fc.
+        let main_path = model
+            .layers
+            .iter()
+            .filter(|l| l.kind != super::super::LayerKind::Pool && !l.name.contains("proj"))
+            .count();
+        assert_eq!(main_path, 20);
+    }
+
+    #[test]
+    fn resnet56_has_correct_depth() {
+        let model = model_for(ModelKind::ResNet56, Dataset::Cifar10);
+        let main_path = model
+            .layers
+            .iter()
+            .filter(|l| l.kind != super::super::LayerKind::Pool && !l.name.contains("proj"))
+            .count();
+        assert_eq!(main_path, 56);
+    }
+
+    #[test]
+    fn resnet20_macs_near_published() {
+        // ResNet-20/CIFAR-10 ≈ 40.8 M MACs (He et al. report ~0.27 GFLOPs
+        // ≈ 41 M MACs incl. shortcuts).
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let macs = model.total_macs() as f64;
+        assert!((3.5e7..5.0e7).contains(&macs), "ResNet-20 MACs {macs:.3e}");
+    }
+
+    #[test]
+    fn vgg16_imagenet_macs_near_published() {
+        // VGG-16/ImageNet ≈ 15.5 G MACs.
+        let model = model_for(ModelKind::Vgg16, Dataset::ImageNet);
+        let macs = model.total_macs() as f64;
+        assert!((1.4e10..1.7e10).contains(&macs), "VGG-16 MACs {macs:.3e}");
+    }
+
+    #[test]
+    fn resnet50_macs_near_published() {
+        // ResNet-50/ImageNet ≈ 4.1 G MACs.
+        let model = model_for(ModelKind::ResNet50, Dataset::ImageNet);
+        let macs = model.total_macs() as f64;
+        assert!((3.5e9..4.6e9).contains(&macs), "ResNet-50 MACs {macs:.3e}");
+    }
+
+    #[test]
+    fn resnet34_macs_near_published() {
+        // ResNet-34/ImageNet ≈ 3.6 G MACs.
+        let model = model_for(ModelKind::ResNet34, Dataset::ImageNet);
+        let macs = model.total_macs() as f64;
+        assert!((3.2e9..4.1e9).contains(&macs), "ResNet-34 MACs {macs:.3e}");
+    }
+
+    #[test]
+    fn vgg16_cifar_weights_dominated_by_conv() {
+        let model = model_for(ModelKind::Vgg16, Dataset::Cifar10);
+        let total = model.total_weights();
+        assert!((1.4e7..1.6e7).contains(&(total as f64)), "VGG-16/CIFAR params {total}");
+    }
+
+    #[test]
+    fn shapes_chain_correctly() {
+        // Every layer's input must match the previous compute layer's output.
+        for dataset in Dataset::ALL {
+            for model in models_for(dataset) {
+                let mut prev_hw: Option<usize> = None;
+                for layer in &model.layers {
+                    if let Some(_hw) = prev_hw {
+                        // Projection layers branch from the block input, so only
+                        // check monotonic non-increase of spatial dims.
+                        assert!(
+                            layer.in_hw <= model.layers[0].in_hw,
+                            "{}: layer {} grows spatially",
+                            model.name,
+                            layer.name
+                        );
+                    }
+                    prev_hw = Some(layer.out_hw());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_models_per_dataset() {
+        assert_eq!(Dataset::Cifar10.paper_models().len(), 3);
+        assert!(Dataset::ImageNet.paper_models().contains(&ModelKind::ResNet50));
+        assert!(!Dataset::ImageNet.paper_models().contains(&ModelKind::ResNet20));
+    }
+
+    #[test]
+    fn fc_classes_match_dataset() {
+        for dataset in Dataset::ALL {
+            for model in models_for(dataset) {
+                let fc = model.layers.last().unwrap();
+                assert_eq!(fc.out_c, dataset.classes(), "{} on {}", model.name, dataset);
+            }
+        }
+    }
+}

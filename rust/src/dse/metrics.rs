@@ -1,0 +1,156 @@
+//! Pareto-front quality metrics: hypervolume, coverage, and front
+//! distance. Used by the DSE campaign summaries to *quantify* "LightPEs
+//! achieve a better Pareto-frontier" (§III-B) instead of eyeballing it.
+
+use super::{dominates, Orientation};
+
+/// 2-D hypervolume (area dominated by the front, bounded by a reference
+/// point). Orientations fix which direction is "better" per axis; the
+/// reference point must be dominated by every front point.
+///
+/// Points are internally mapped so both axes maximize, then the standard
+/// staircase sweep computes the dominated area.
+pub fn hypervolume_2d(
+    points: &[(f64, f64)],
+    reference: (f64, f64),
+    orientations: (Orientation, Orientation),
+) -> f64 {
+    if points.is_empty() {
+        return 0.0;
+    }
+    // Map to maximize-maximize space relative to the reference.
+    let tf = |v: f64, r: f64, o: Orientation| match o {
+        Orientation::Maximize => v - r,
+        Orientation::Minimize => r - v,
+    };
+    let mut mapped: Vec<(f64, f64)> = points
+        .iter()
+        .map(|&(x, y)| (tf(x, reference.0, orientations.0), tf(y, reference.1, orientations.1)))
+        .filter(|&(x, y)| x > 0.0 && y > 0.0)
+        .collect();
+    if mapped.is_empty() {
+        return 0.0;
+    }
+    // Staircase sweep: descending x, track best y seen.
+    mapped.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut volume = 0.0;
+    let mut prev_x = mapped[0].0;
+    let mut best_y = 0.0f64;
+    for &(x, y) in &mapped {
+        if x < prev_x {
+            volume += (prev_x - x) * best_y;
+            prev_x = x;
+        }
+        best_y = best_y.max(y);
+    }
+    volume += prev_x * best_y;
+    volume
+}
+
+/// Coverage C(a, b): fraction of `b` dominated by at least one point of
+/// `a` (Zitzler's binary coverage indicator). 1.0 = `a` completely covers
+/// `b`; not symmetric.
+pub fn coverage(
+    a: &[Vec<f64>],
+    b: &[Vec<f64>],
+    orientations: &[Orientation],
+) -> f64 {
+    if b.is_empty() {
+        return 0.0;
+    }
+    let covered = b
+        .iter()
+        .filter(|point| a.iter().any(|other| dominates(other, point, orientations)))
+        .count();
+    covered as f64 / b.len() as f64
+}
+
+/// Generational distance: mean Euclidean distance from each point of
+/// `approx` to its nearest point of `reference_front` (lower = closer).
+pub fn generational_distance(approx: &[Vec<f64>], reference_front: &[Vec<f64>]) -> f64 {
+    if approx.is_empty() || reference_front.is_empty() {
+        return f64::INFINITY;
+    }
+    let total: f64 = approx
+        .iter()
+        .map(|p| {
+            reference_front
+                .iter()
+                .map(|q| {
+                    p.iter().zip(q).map(|(a, b)| (a - b).powi(2)).sum::<f64>().sqrt()
+                })
+                .fold(f64::INFINITY, f64::min)
+        })
+        .sum();
+    total / approx.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use Orientation::{Maximize, Minimize};
+
+    #[test]
+    fn hypervolume_single_point() {
+        // Max-max: point (2, 3) vs reference (0, 0) dominates a 2×3 box.
+        let hv = hypervolume_2d(&[(2.0, 3.0)], (0.0, 0.0), (Maximize, Maximize));
+        assert!((hv - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_staircase() {
+        // Two non-dominating points: (3,1) and (1,3) vs ref (0,0):
+        // area = 3*1 + (3-1)... staircase: 3×1 box ∪ 1×3 box = 3 + 2 = 5.
+        let hv =
+            hypervolume_2d(&[(3.0, 1.0), (1.0, 3.0)], (0.0, 0.0), (Maximize, Maximize));
+        assert!((hv - 5.0).abs() < 1e-12, "hv {hv}");
+    }
+
+    #[test]
+    fn hypervolume_dominated_point_adds_nothing() {
+        let base = hypervolume_2d(&[(3.0, 3.0)], (0.0, 0.0), (Maximize, Maximize));
+        let with_dominated =
+            hypervolume_2d(&[(3.0, 3.0), (1.0, 1.0)], (0.0, 0.0), (Maximize, Maximize));
+        assert!((base - with_dominated).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_minimize_axes() {
+        // Min-min: point (1, 1) vs reference (4, 4) dominates a 3×3 box.
+        let hv = hypervolume_2d(&[(1.0, 1.0)], (4.0, 4.0), (Minimize, Minimize));
+        assert!((hv - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_points_outside_reference_ignored() {
+        let hv = hypervolume_2d(&[(-1.0, 5.0)], (0.0, 0.0), (Maximize, Maximize));
+        assert_eq!(hv, 0.0);
+    }
+
+    #[test]
+    fn coverage_basics() {
+        let o = [Maximize, Minimize];
+        let a = vec![vec![5.0, 1.0]];
+        let b = vec![vec![4.0, 2.0], vec![6.0, 0.5]];
+        // a dominates b[0] but not b[1].
+        assert!((coverage(&a, &b, &o) - 0.5).abs() < 1e-12);
+        assert_eq!(coverage(&b, &a, &o), 1.0); // b[1] dominates a[0]
+    }
+
+    #[test]
+    fn generational_distance_zero_on_same_front() {
+        let front = vec![vec![1.0, 2.0], vec![3.0, 0.5]];
+        assert!(generational_distance(&front, &front) < 1e-12);
+    }
+
+    #[test]
+    fn generational_distance_grows_with_gap() {
+        let reference = vec![vec![0.0, 0.0]];
+        let near = vec![vec![0.1, 0.0]];
+        let far = vec![vec![5.0, 0.0]];
+        assert!(
+            generational_distance(&near, &reference)
+                < generational_distance(&far, &reference)
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! Design-space exploration engine (§IV-A).
+//!
+//! Evaluates every design point of a sweep against a DNN workload —
+//! synthesis (area/power/clock) × dataflow mapping (cycles/traffic) ×
+//! energy — and produces the paper's two efficiency axes per point:
+//! **performance per area** (inferences/s/mm²) and **energy per inference**
+//! (on-chip µJ). [`normalize`] rescales a space against the best-INT16
+//! baseline exactly as Figs. 4–6 do; [`pareto`] extracts Pareto fronts.
+
+pub mod metrics;
+pub mod pareto;
+
+pub use metrics::{coverage, generational_distance, hypervolume_2d};
+pub use pareto::{dominates, pareto_front, Orientation};
+
+use crate::arch::{AcceleratorConfig, SweepSpec};
+use crate::dataflow::{map_model, Dataflow};
+use crate::dnn::Model;
+use crate::energy::energy_of;
+use crate::quant::PeType;
+use crate::synth::{synthesize, SynthReport};
+
+/// One fully evaluated design point for one DNN workload.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub config: AcceleratorConfig,
+    /// Total die area (mm²).
+    pub area_mm2: f64,
+    /// Achieved clock (GHz).
+    pub clock_ghz: f64,
+    /// End-to-end inference latency (ms).
+    pub latency_ms: f64,
+    /// Throughput (inferences/s).
+    pub inf_per_s: f64,
+    /// Performance per area (inferences/s per mm²) — Fig. 4/5 x-axis.
+    pub perf_per_area: f64,
+    /// On-chip energy per inference (µJ) — Fig. 4/6 energy axis.
+    pub energy_uj: f64,
+    /// DRAM energy per inference (µJ), reported separately (DESIGN.md §1).
+    pub dram_energy_uj: f64,
+    /// Average PE-array utilization.
+    pub utilization: f64,
+}
+
+/// Evaluate one configuration on one model.
+pub fn evaluate(config: &AcceleratorConfig, model: &Model, seed: u64) -> Evaluation {
+    let synth = synthesize(config, seed);
+    evaluate_with_synth(&synth, model)
+}
+
+/// Evaluate using an existing synthesis report (lets callers amortize
+/// synthesis across the per-dataset model set).
+pub fn evaluate_with_synth(synth: &SynthReport, model: &Model) -> Evaluation {
+    let config = &synth.config;
+    // Totals-only mapping: the hot path needs aggregates, not per-layer
+    // records (§Perf optimization 1).
+    let mapping = crate::dataflow::network::map_model_totals(
+        model,
+        config,
+        Dataflow::RowStationary,
+    );
+    let energy = energy_of(&mapping, synth);
+    let latency_s = mapping.latency_s(synth.achieved_clock_ghz);
+    let inf_per_s = 1.0 / latency_s;
+    Evaluation {
+        config: config.clone(),
+        area_mm2: synth.area.total_mm2(),
+        clock_ghz: synth.achieved_clock_ghz,
+        latency_ms: latency_s * 1e3,
+        inf_per_s,
+        perf_per_area: inf_per_s / synth.area.total_mm2(),
+        energy_uj: energy.chip_uj(),
+        dram_energy_uj: energy.dram_uj,
+        utilization: mapping.avg_utilization,
+    }
+}
+
+/// Explore a full sweep against one model (single-threaded reference path;
+/// the coordinator parallelizes this across workers).
+pub fn explore(spec: &SweepSpec, model: &Model, seed: u64) -> Vec<Evaluation> {
+    spec.enumerate().iter().map(|config| evaluate(config, model, seed)).collect()
+}
+
+/// The best (highest perf/area) evaluation for a PE type, if any.
+pub fn best_perf_per_area(evals: &[Evaluation], pe: PeType) -> Option<&Evaluation> {
+    evals
+        .iter()
+        .filter(|e| e.config.pe == pe)
+        .max_by(|a, b| a.perf_per_area.partial_cmp(&b.perf_per_area).unwrap())
+}
+
+/// The best (lowest energy) evaluation for a PE type, if any.
+pub fn best_energy(evals: &[Evaluation], pe: PeType) -> Option<&Evaluation> {
+    evals
+        .iter()
+        .filter(|e| e.config.pe == pe)
+        .min_by(|a, b| a.energy_uj.partial_cmp(&b.energy_uj).unwrap())
+}
+
+/// A design point normalized against the best-INT16 baseline (Fig. 4 axes:
+/// higher `norm_perf_per_area` is better; lower `norm_energy` is better).
+#[derive(Debug, Clone)]
+pub struct NormalizedPoint {
+    pub pe: PeType,
+    pub config_id: String,
+    pub norm_perf_per_area: f64,
+    pub norm_energy: f64,
+}
+
+/// Normalize a whole space against the best-INT16-by-perf/area baseline
+/// (the paper's normalization: "with respect to the INT16 hardware
+/// configuration with the highest performance per area").
+pub fn normalize(evals: &[Evaluation]) -> Vec<NormalizedPoint> {
+    let baseline = best_perf_per_area(evals, PeType::Int16)
+        .expect("design space must contain INT16 points");
+    let base_ppa = baseline.perf_per_area;
+    let base_energy = baseline.energy_uj;
+    evals
+        .iter()
+        .map(|e| NormalizedPoint {
+            pe: e.config.pe,
+            config_id: e.config.id(),
+            norm_perf_per_area: e.perf_per_area / base_ppa,
+            norm_energy: e.energy_uj / base_energy,
+        })
+        .collect()
+}
+
+/// Headline ratios for a design space (the Fig. 4 summary numbers):
+/// per PE type, (best perf/area ÷ best INT16 perf/area,
+///               best-INT16 energy ÷ best energy).
+pub fn headline_ratios(evals: &[Evaluation]) -> Vec<(PeType, f64, f64)> {
+    let base = best_perf_per_area(evals, PeType::Int16)
+        .expect("design space must contain INT16 points");
+    let base_energy_best = best_energy(evals, PeType::Int16).unwrap();
+    PeType::ALL
+        .iter()
+        .filter_map(|&pe| {
+            let best_ppa = best_perf_per_area(evals, pe)?;
+            let best_e = best_energy(evals, pe)?;
+            Some((
+                pe,
+                best_ppa.perf_per_area / base.perf_per_area,
+                base_energy_best.energy_uj / best_e.energy_uj,
+            ))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{model_for, Dataset, ModelKind};
+
+    fn space() -> Vec<Evaluation> {
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        explore(&SweepSpec::default(), &model, 7)
+    }
+
+    #[test]
+    fn explore_covers_sweep() {
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let spec = SweepSpec::tiny();
+        let evals = explore(&spec, &model, 7);
+        assert_eq!(evals.len(), spec.len());
+        assert!(evals.iter().all(|e| e.perf_per_area > 0.0 && e.energy_uj > 0.0));
+    }
+
+    #[test]
+    fn lightpe_wins_both_axes() {
+        // The paper's central result: LightPEs beat INT16 and FP32 on both
+        // perf/area and energy at their respective best points.
+        let evals = space();
+        let ratios = headline_ratios(&evals);
+        let get = |pe: PeType| ratios.iter().find(|(p, _, _)| *p == pe).unwrap();
+        let (_, l1_ppa, l1_energy) = get(PeType::LightPe1);
+        let (_, l2_ppa, l2_energy) = get(PeType::LightPe2);
+        let (_, fp32_ppa, fp32_energy) = get(PeType::Fp32);
+        assert!(*l1_ppa > 1.5, "LightPE-1 perf/area ratio {l1_ppa}");
+        assert!(*l2_ppa > 1.5, "LightPE-2 perf/area ratio {l2_ppa}");
+        assert!(*l1_energy > 1.5, "LightPE-1 energy gain {l1_energy}");
+        assert!(*l2_energy > 1.2, "LightPE-2 energy gain {l2_energy}");
+        assert!(*fp32_ppa < 1.0, "FP32 must lose to INT16: {fp32_ppa}");
+        assert!(*fp32_energy < 1.0, "FP32 energy must be worse: {fp32_energy}");
+        // Ordering: LightPE-1 ≥ LightPE-2 on both.
+        assert!(l1_ppa >= l2_ppa);
+        assert!(l1_energy >= l2_energy);
+    }
+
+    #[test]
+    fn normalization_baseline_is_unity() {
+        let evals = space();
+        let normalized = normalize(&evals);
+        let best = normalized
+            .iter()
+            .filter(|p| p.pe == PeType::Int16)
+            .map(|p| p.norm_perf_per_area)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!((best - 1.0).abs() < 1e-12, "best INT16 must normalize to 1.0, got {best}");
+    }
+
+    #[test]
+    fn best_selectors_agree_with_scan() {
+        let evals = space();
+        let best = best_perf_per_area(&evals, PeType::LightPe1).unwrap();
+        for e in evals.iter().filter(|e| e.config.pe == PeType::LightPe1) {
+            assert!(e.perf_per_area <= best.perf_per_area + 1e-12);
+        }
+        let beste = best_energy(&evals, PeType::Fp32).unwrap();
+        for e in evals.iter().filter(|e| e.config.pe == PeType::Fp32) {
+            assert!(e.energy_uj >= beste.energy_uj - 1e-12);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let a = explore(&SweepSpec::tiny(), &model, 3);
+        let b = explore(&SweepSpec::tiny(), &model, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.perf_per_area, y.perf_per_area);
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Pareto-front extraction (Figs. 4–6).
+//!
+//! Generic over the orientation of each axis so the same routine serves
+//! "maximize perf/area vs maximize accuracy" (Fig. 5) and "minimize energy
+//! vs minimize error" (Fig. 6).
+
+/// Whether an objective is to be maximized or minimized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Orientation {
+    Maximize,
+    Minimize,
+}
+
+impl Orientation {
+    /// Does value `a` dominate-or-tie `b` on this axis?
+    fn at_least_as_good(self, a: f64, b: f64) -> bool {
+        match self {
+            Orientation::Maximize => a >= b,
+            Orientation::Minimize => a <= b,
+        }
+    }
+
+    /// Is value `a` strictly better than `b` on this axis?
+    fn strictly_better(self, a: f64, b: f64) -> bool {
+        match self {
+            Orientation::Maximize => a > b,
+            Orientation::Minimize => a < b,
+        }
+    }
+}
+
+/// Does point `a` dominate point `b` (at least as good on every axis,
+/// strictly better on at least one)?
+pub fn dominates(a: &[f64], b: &[f64], orientations: &[Orientation]) -> bool {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), orientations.len());
+    let mut strictly = false;
+    for ((&x, &y), &o) in a.iter().zip(b).zip(orientations) {
+        if !o.at_least_as_good(x, y) {
+            return false;
+        }
+        if o.strictly_better(x, y) {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Indices of the Pareto-optimal points in `points` under `orientations`.
+/// Duplicated points are all kept (none dominates its copy). Output is
+/// sorted ascending by the first axis for plotting.
+pub fn pareto_front(points: &[Vec<f64>], orientations: &[Orientation]) -> Vec<usize> {
+    let mut front: Vec<usize> = (0..points.len())
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, other)| j != i && dominates(other, &points[i], orientations))
+        })
+        .collect();
+    front.sort_by(|&a, &b| points[a][0].partial_cmp(&points[b][0]).unwrap());
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use Orientation::{Maximize, Minimize};
+
+    #[test]
+    fn dominance_basics() {
+        let o = [Maximize, Minimize];
+        assert!(dominates(&[2.0, 1.0], &[1.0, 2.0], &o));
+        assert!(!dominates(&[1.0, 2.0], &[2.0, 1.0], &o));
+        // Equal points do not dominate each other.
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0], &o));
+        // Better on one axis, worse on the other: no dominance.
+        assert!(!dominates(&[2.0, 3.0], &[1.0, 1.0], &o));
+    }
+
+    #[test]
+    fn front_of_tradeoff_curve() {
+        // Classic trade-off: (perf ↑, energy ↓); the knee points survive.
+        let points = vec![
+            vec![1.0, 1.0], // front (lowest energy)
+            vec![2.0, 2.0], // front
+            vec![3.0, 4.0], // front (highest perf)
+            vec![2.0, 3.0], // dominated by (2,2)
+            vec![1.5, 5.0], // dominated by (2,2)
+        ];
+        let front = pareto_front(&points, &[Maximize, Minimize]);
+        assert_eq!(front, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn single_point_is_front() {
+        let front = pareto_front(&[vec![1.0, 1.0]], &[Maximize, Minimize]);
+        assert_eq!(front, vec![0]);
+    }
+
+    #[test]
+    fn all_equal_points_kept() {
+        let points = vec![vec![1.0, 1.0]; 3];
+        let front = pareto_front(&points, &[Maximize, Minimize]);
+        assert_eq!(front.len(), 3);
+    }
+
+    #[test]
+    fn orientation_flip_flips_front() {
+        let points = vec![vec![1.0, 1.0], vec![2.0, 2.0]];
+        let max_both = pareto_front(&points, &[Maximize, Maximize]);
+        assert_eq!(max_both, vec![1]);
+        let min_both = pareto_front(&points, &[Minimize, Minimize]);
+        assert_eq!(min_both, vec![0]);
+    }
+
+    #[test]
+    fn three_axis_dominance() {
+        let o = [Maximize, Minimize, Maximize];
+        assert!(dominates(&[2.0, 1.0, 5.0], &[2.0, 1.0, 4.0], &o));
+        assert!(!dominates(&[2.0, 1.0, 4.0], &[2.0, 1.0, 5.0], &o));
+    }
+
+    #[test]
+    fn front_sorted_by_first_axis() {
+        let points = vec![vec![3.0, 4.0], vec![1.0, 1.0], vec![2.0, 2.0]];
+        let front = pareto_front(&points, &[Maximize, Minimize]);
+        let xs: Vec<f64> = front.iter().map(|&i| points[i][0]).collect();
+        assert_eq!(xs, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,33 @@
+//! # QADAM — Quantization-Aware DNN Accelerator Modeling for Pareto-Optimality
+//!
+//! A reproduction of the QADAM framework (Inci et al., cs.AR 2022): a highly
+//! parameterized, quantization-aware power, performance, and area (PPA)
+//! modeling and design-space-exploration framework for spatial-array DNN
+//! accelerators.
+//!
+//! The crate is organized as substrates (technology models, a synthesis
+//! engine, an RTL generator, a cycle-level simulator), the analytical core
+//! (row-stationary dataflow mapper, energy model, polynomial PPA surrogates),
+//! and the exploration layer (DSE engine, Pareto analysis, a leader/worker
+//! coordinator, and a PJRT runtime that executes the AOT-compiled JAX/Pallas
+//! quantization-aware training artifacts).
+//!
+//! See `DESIGN.md` for the module inventory and the per-experiment index.
+
+pub mod util;
+pub mod tech;
+pub mod quant;
+pub mod arch;
+pub mod synth;
+pub mod rtl;
+pub mod dnn;
+pub mod dataflow;
+pub mod energy;
+pub mod sim;
+pub mod ppa;
+pub mod dse;
+pub mod accuracy;
+pub mod coordinator;
+pub mod runtime;
+pub mod report;
+pub mod bench;

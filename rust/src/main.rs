@@ -1,0 +1,294 @@
+//! `qadam` — the command-line launcher for the QADAM framework.
+//!
+//! Subcommands map one-to-one onto the paper's workflow (Fig. 1): feed
+//! accelerator parameters + DNN configurations, get PPA results, DSE
+//! scatter data, Pareto fronts, generated RTL, simulation traces, and the
+//! QAT training driver.
+
+use std::path::Path;
+
+use qadam::arch::{AcceleratorConfig, SweepSpec};
+use qadam::coordinator::{default_workers, Coordinator};
+use qadam::dataflow::{map_model, Dataflow};
+use qadam::dnn::{model_for, Dataset, ModelKind};
+use qadam::dse;
+use qadam::energy::energy_of;
+use qadam::ppa::PpaModel;
+use qadam::quant::PeType;
+use qadam::report;
+use qadam::rtl;
+use qadam::runtime::{QatDriver, Runtime};
+use qadam::sim;
+use qadam::synth;
+use qadam::util::cli::Command;
+use qadam::util::log::{self, Level};
+use qadam::util::rng::Pcg64;
+use qadam::util::table::{format_sig, Table};
+
+fn cli() -> Command {
+    Command::new("qadam", "quantization-aware PPA modeling & DSE for DNN accelerators")
+        .opt("log-level", "info", "error|warn|info|debug|trace")
+        .opt("seed", "7", "rng / synthesis-noise seed")
+        .opt("workers", "0", "worker threads (0 = cores-1)")
+        .sub(
+            Command::new("synth", "synthesize one design point (DC stand-in)")
+                .opt("pe", "int16", "fp32|int16|lightpe1|lightpe2")
+                .opt("rows", "16", "PE array rows")
+                .opt("cols", "16", "PE array cols")
+                .opt("glb-kib", "128", "global buffer KiB"),
+        )
+        .sub(
+            Command::new("ppa", "evaluate PPA of one design on one model")
+                .opt("pe", "int16", "PE type")
+                .opt("model", "resnet20", "vgg16|resnet20|resnet34|resnet50|resnet56")
+                .opt("dataset", "cifar10", "cifar10|cifar100|imagenet"),
+        )
+        .sub(
+            Command::new("fit", "fit polynomial PPA surrogates (k-fold CV)")
+                .opt("folds", "5", "cross-validation folds"),
+        )
+        .sub(
+            Command::new("dse", "design-space exploration campaign")
+                .opt("dataset", "cifar10", "cifar10|cifar100|imagenet")
+                .opt("sweep", "", "JSON sweep-config file (empty = default space)"),
+        )
+        .sub(
+            Command::new("pareto", "Pareto-front analysis (Figs. 5/6)")
+                .opt("dataset", "cifar10", "cifar10|cifar100")
+                .opt("metric", "perf-per-area", "perf-per-area|energy"),
+        )
+        .sub(
+            Command::new("rtl", "generate Verilog for a design point")
+                .opt("pe", "lightpe1", "PE type")
+                .opt("rows", "16", "PE array rows")
+                .opt("cols", "16", "PE array cols")
+                .opt("out", "rtl_out", "output directory"),
+        )
+        .sub(
+            Command::new("sim", "cycle-level functional simulation (VCS stand-in)")
+                .opt("pe", "int16", "PE type")
+                .opt("hw", "8", "ifmap height/width")
+                .opt("in-c", "3", "input channels")
+                .opt("out-c", "8", "output channels"),
+        )
+        .sub(
+            Command::new("train", "QAT training via the PJRT runtime")
+                .opt("pe", "lightpe1", "PE type")
+                .opt("steps", "100", "training steps")
+                .opt("artifacts", "artifacts", "artifacts directory"),
+        )
+        .sub(
+            Command::new("report", "regenerate a paper figure")
+                .opt("fig", "4", "2|3|4|5|6")
+                .opt("dataset", "cifar10", "dataset for figs 4-6"),
+        )
+}
+
+fn main() -> anyhow::Result<()> {
+    log::init_from_env();
+    let matches = cli().parse_or_exit();
+    if let Some(level) = Level::parse(matches.get_str("log-level")) {
+        log::set_level(level);
+    }
+    let seed: u64 = matches.get_usize("seed") as u64;
+    let workers = match matches.get_usize("workers") {
+        0 => default_workers(),
+        n => n,
+    };
+
+    match matches.subcommand() {
+        "synth" => {
+            let config = AcceleratorConfig {
+                pe: PeType::parse(matches.get_str("pe")).expect("bad --pe"),
+                rows: matches.get_usize("rows"),
+                cols: matches.get_usize("cols"),
+                glb_kib: matches.get_usize("glb-kib"),
+                ..Default::default()
+            };
+            let report = synth::synthesize(&config, seed);
+            let mut table = Table::new(&["metric", "value"]);
+            table.row(&["design".into(), config.id()]);
+            table.row(&["area_mm2".into(), format_sig(report.area.total_mm2(), 4)]);
+            table.row(&["  pe_array_mm2".into(), format_sig(report.area.pe_array_um2 / 1e6, 4)]);
+            table.row(&["  glb_mm2".into(), format_sig(report.area.glb_um2 / 1e6, 4)]);
+            table.row(&["power_mw".into(), format_sig(report.total_power_mw(), 4)]);
+            table.row(&["  leakage_mw".into(), format_sig(report.leakage_power_mw, 4)]);
+            table.row(&["max_clock_ghz".into(), format_sig(report.max_clock_ghz, 4)]);
+            table.row(&["peak_gmacs".into(), format_sig(report.peak_gmacs(), 4)]);
+            print!("{}", table.render());
+        }
+        "ppa" => {
+            let config = AcceleratorConfig {
+                pe: PeType::parse(matches.get_str("pe")).expect("bad --pe"),
+                ..Default::default()
+            };
+            let dataset = Dataset::parse(matches.get_str("dataset")).expect("bad --dataset");
+            let kind = ModelKind::parse(matches.get_str("model")).expect("bad --model");
+            let model = model_for(kind, dataset);
+            let synth_report = synth::synthesize(&config, seed);
+            let mapping = map_model(&model, &config, Dataflow::RowStationary);
+            let energy = energy_of(&mapping, &synth_report);
+            let eval = dse::evaluate_with_synth(&synth_report, &model);
+            let mut table = Table::new(&["metric", "value"]);
+            table.row(&["model".into(), model.name.clone()]);
+            table.row(&["total_macs".into(), mapping.total_macs.to_string()]);
+            table.row(&["cycles".into(), mapping.total_cycles.to_string()]);
+            table.row(&["utilization".into(), format_sig(mapping.avg_utilization, 3)]);
+            table.row(&["latency_ms".into(), format_sig(eval.latency_ms, 4)]);
+            table.row(&["inf_per_s".into(), format_sig(eval.inf_per_s, 4)]);
+            table.row(&["perf_per_area".into(), format_sig(eval.perf_per_area, 4)]);
+            table.row(&["chip_energy_uj".into(), format_sig(energy.chip_uj(), 4)]);
+            table.row(&["dram_energy_uj".into(), format_sig(energy.dram_uj, 4)]);
+            table.row(&["dram_bytes".into(), mapping.traffic.dram_bytes.to_string()]);
+            table.row(&["glb_accesses".into(), mapping.traffic.glb.total().to_string()]);
+            print!("{}", table.render());
+        }
+        "fit" => {
+            let folds = matches.get_usize("folds");
+            for pe in PeType::ALL {
+                let dataset = synth::synthesize_sweep(&SweepSpec::default(), pe, seed);
+                let model = PpaModel::fit(&dataset, folds, seed);
+                for report in &model.reports {
+                    println!(
+                        "{:<10} {:<6} degree={} r={} R2={} MAPE={}%",
+                        pe.name(),
+                        report.metric,
+                        report.degree,
+                        format_sig(report.pearson, 4),
+                        format_sig(report.r_squared, 4),
+                        format_sig(report.mape, 3),
+                    );
+                }
+            }
+        }
+        "dse" => {
+            let dataset = Dataset::parse(matches.get_str("dataset")).expect("bad --dataset");
+            let sweep_path = matches.get_str("sweep");
+            let spec = if sweep_path.is_empty() {
+                SweepSpec::default()
+            } else {
+                SweepSpec::from_file(Path::new(sweep_path))
+                    .unwrap_or_else(|e| panic!("loading sweep '{sweep_path}': {e}"))
+            };
+            let db = Coordinator::new(workers, seed).campaign(&spec, dataset);
+            println!(
+                "{} design points x {} models in {:.2}s ({:.0} evals/s, {} workers)",
+                db.stats.design_points,
+                db.spaces.len(),
+                db.stats.wall_seconds,
+                db.stats.evals_per_sec(),
+                db.stats.workers
+            );
+            for (pe, ppa, energy) in db.headline_geomean() {
+                println!(
+                    "  {:<10} {}x perf/area, {}x less energy vs best INT16",
+                    pe.name(),
+                    format_sig(ppa, 3),
+                    format_sig(energy, 3)
+                );
+            }
+            // Quantified Pareto quality per model: hypervolume of each PE
+            // type's normalized (perf/area ↑, energy ↓) cloud.
+            for space in &db.spaces {
+                let normalized = dse::normalize(&space.evals);
+                print!("  {:<10} hypervolume:", space.model_name);
+                for pe in PeType::ALL {
+                    let points: Vec<(f64, f64)> = normalized
+                        .iter()
+                        .filter(|p| p.pe == pe)
+                        .map(|p| (p.norm_perf_per_area, p.norm_energy))
+                        .collect();
+                    let hv = dse::hypervolume_2d(
+                        &points,
+                        (0.0, 10.0),
+                        (dse::Orientation::Maximize, dse::Orientation::Minimize),
+                    );
+                    print!(" {}={}", pe.name(), format_sig(hv, 3));
+                }
+                println!();
+            }
+        }
+        "pareto" => {
+            let dataset = Dataset::parse(matches.get_str("dataset")).expect("bad --dataset");
+            let figure = if matches.get_str("metric") == "energy" {
+                report::fig6(dataset, workers, seed)
+            } else {
+                report::fig5(dataset, workers, seed)
+            };
+            print!("{}", figure.render());
+        }
+        "rtl" => {
+            let config = AcceleratorConfig {
+                pe: PeType::parse(matches.get_str("pe")).expect("bad --pe"),
+                rows: matches.get_usize("rows"),
+                cols: matches.get_usize("cols"),
+                ..Default::default()
+            };
+            let bundle = rtl::generate(&config);
+            let out = matches.get_str("out").to_string();
+            let paths = rtl::write_bundle(&bundle, Path::new(&out))?;
+            for path in paths {
+                println!("wrote {}", path.display());
+            }
+        }
+        "sim" => {
+            let pe = PeType::parse(matches.get_str("pe")).expect("bad --pe");
+            let config = AcceleratorConfig { pe, ..Default::default() };
+            let layer = qadam::dnn::Layer::conv(
+                "cli",
+                matches.get_usize("hw"),
+                matches.get_usize("in-c"),
+                matches.get_usize("out-c"),
+                3,
+                1,
+                1,
+            );
+            let mut rng = Pcg64::new(seed);
+            let ifmap: Vec<f64> =
+                (0..layer.ifmap_elems()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let weights: Vec<f64> =
+                (0..layer.weights()).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            let result = sim::simulate_layer(&layer, &config, &ifmap, &weights);
+            println!(
+                "cycles={} utilization={} verified={} max_quant_err={}",
+                result.cycles,
+                format_sig(result.utilization, 3),
+                result.verified,
+                format_sig(result.max_abs_error, 3)
+            );
+        }
+        "train" => {
+            let pe = PeType::parse(matches.get_str("pe")).expect("bad --pe");
+            let steps = matches.get_usize("steps");
+            let dir = matches.get_str("artifacts").to_string();
+            let mut runtime = Runtime::new(Path::new(&dir))?;
+            let outcome = QatDriver::train(&mut runtime, pe, steps, (steps / 10).max(1))?;
+            for record in &outcome.loss_curve {
+                println!("step {:>5}  loss {:.4}", record.step, record.loss);
+            }
+            println!(
+                "{}: final accuracy {:.3} eval-loss {:.4} after {} steps",
+                pe.name(),
+                outcome.final_accuracy,
+                outcome.final_eval_loss,
+                outcome.steps
+            );
+        }
+        "report" => {
+            let dataset = Dataset::parse(matches.get_str("dataset")).expect("bad --dataset");
+            let figure = match matches.get_str("fig") {
+                "2" => report::fig2(workers, seed),
+                "3" => report::fig3(seed),
+                "4" => report::fig4(dataset, workers, seed),
+                "5" => report::fig5(dataset, workers, seed),
+                "6" => report::fig6(dataset, workers, seed),
+                other => anyhow::bail!("unknown figure '{other}'"),
+            };
+            print!("{}", figure.render());
+        }
+        _ => {
+            println!("{}", cli().help());
+        }
+    }
+    Ok(())
+}

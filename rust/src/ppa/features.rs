@@ -1,0 +1,75 @@
+//! Design-point feature extraction for the PPA surrogates.
+//!
+//! Features are chosen so degree-2 polynomials can express the synthesis
+//! engine's dominant terms: PE count (area ∝ rows×cols), storage bits
+//! (∝ spad entries × bit width), GLB capacity and its square root (the
+//! CACTI access-energy term), and bandwidth.
+
+use crate::arch::AcceleratorConfig;
+
+/// Names of the features returned by [`design_features`] (for reports).
+pub const FEATURE_NAMES: [&str; 8] = [
+    "num_pes",
+    "rows_plus_cols",
+    "glb_kib",
+    "sqrt_glb_kib",
+    "ifmap_spad_bits",
+    "filter_spad_bits",
+    "psum_spad_bits",
+    "dram_bw_gbps",
+];
+
+/// Extract the raw (degree-1) feature vector for a configuration.
+///
+/// PE type is *not* a feature: the paper fits a separate model per PE type
+/// (Fig. 3 has one series per type), so all datapath-width effects are
+/// absorbed into the per-type coefficients.
+pub fn design_features(config: &AcceleratorConfig) -> Vec<f64> {
+    let pe = config.pe;
+    vec![
+        config.num_pes() as f64,
+        (config.rows + config.cols) as f64,
+        config.glb_kib as f64,
+        (config.glb_kib as f64).sqrt(),
+        (config.spad.ifmap_entries * pe.act_bits() as usize) as f64,
+        (config.spad.filter_entries * pe.weight_bits() as usize) as f64,
+        (config.spad.psum_entries * pe.psum_bits() as usize) as f64,
+        config.dram_bw_gbps,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::PeType;
+
+    #[test]
+    fn feature_count_matches_names() {
+        let x = design_features(&AcceleratorConfig::default());
+        assert_eq!(x.len(), FEATURE_NAMES.len());
+    }
+
+    #[test]
+    fn features_respond_to_knobs() {
+        let base = AcceleratorConfig::default();
+        let x0 = design_features(&base);
+        let bigger = AcceleratorConfig { rows: base.rows * 2, ..base.clone() };
+        let x1 = design_features(&bigger);
+        assert!(x1[0] > x0[0]); // num_pes
+        assert!(x1[1] > x0[1]); // rows+cols
+        assert_eq!(x1[2], x0[2]); // glb untouched
+    }
+
+    #[test]
+    fn spad_bits_feature_sees_precision() {
+        let int16 = design_features(&AcceleratorConfig {
+            pe: PeType::Int16,
+            ..AcceleratorConfig::default()
+        });
+        let light1 = design_features(&AcceleratorConfig {
+            pe: PeType::LightPe1,
+            ..AcceleratorConfig::default()
+        });
+        assert!(int16[5] > light1[5], "filter spad bits must shrink at 4-bit weights");
+    }
+}

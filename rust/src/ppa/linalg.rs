@@ -1,0 +1,191 @@
+//! Dense linear algebra for the regression fits: symmetric positive
+//! definite solves via Cholesky decomposition (ridge-regularized normal
+//! equations are SPD by construction).
+
+/// A dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Element access.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Element assignment.
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Build from rows.
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        assert!(!rows.is_empty());
+        let cols = rows[0].len();
+        assert!(rows.iter().all(|r| r.len() == cols), "ragged rows");
+        Self { rows: rows.len(), cols, data: rows.concat() }
+    }
+}
+
+/// Compute the Gram matrix `XᵀX` and moment vector `Xᵀy` in one pass.
+pub fn normal_equations(x: &Matrix, y: &[f64]) -> (Matrix, Vec<f64>) {
+    assert_eq!(x.rows, y.len());
+    let p = x.cols;
+    let mut gram = Matrix::zeros(p, p);
+    let mut moment = vec![0.0; p];
+    for r in 0..x.rows {
+        let row = &x.data[r * p..(r + 1) * p];
+        for i in 0..p {
+            moment[i] += row[i] * y[r];
+            // Symmetric: fill upper triangle, mirror after.
+            for j in i..p {
+                gram.data[i * p + j] += row[i] * row[j];
+            }
+        }
+    }
+    for i in 0..p {
+        for j in 0..i {
+            gram.data[i * p + j] = gram.data[j * p + i];
+        }
+    }
+    (gram, moment)
+}
+
+/// Cholesky decomposition `A = L·Lᵀ` of an SPD matrix. Returns `None` if
+/// the matrix is not (numerically) positive definite.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A·w = b` for SPD `A` via Cholesky (forward + back substitution).
+pub fn solve_spd(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    // Forward: L·z = b.
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l.get(i, k) * z[k];
+        }
+        z[i] = sum / l.get(i, i);
+    }
+    // Back: Lᵀ·w = z.
+    let mut w = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = z[i];
+        for k in i + 1..n {
+            sum -= l.get(k, i) * w[k];
+        }
+        w[i] = sum / l.get(i, i);
+    }
+    Some(w)
+}
+
+/// Solve the ridge regression `(XᵀX + λI)·w = Xᵀy`.
+pub fn ridge_fit(x: &Matrix, y: &[f64], lambda: f64) -> Option<Vec<f64>> {
+    let (mut gram, moment) = normal_equations(x, y);
+    for i in 0..gram.rows {
+        let d = gram.data[i * gram.cols + i];
+        gram.data[i * gram.cols + i] = d + lambda;
+    }
+    solve_spd(&gram, &moment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_of_identity() {
+        let mut a = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            a.set(i, i, 1.0);
+        }
+        let l = cholesky(&a).unwrap();
+        assert_eq!(l, a);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Matrix::zeros(2, 2);
+        a.set(0, 0, 1.0);
+        a.set(1, 1, -1.0);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_known_system() {
+        // A = [[4, 2], [2, 3]], b = [10, 8] → w = [1.75, 1.5].
+        let mut a = Matrix::zeros(2, 2);
+        a.set(0, 0, 4.0);
+        a.set(0, 1, 2.0);
+        a.set(1, 0, 2.0);
+        a.set(1, 1, 3.0);
+        let w = solve_spd(&a, &[10.0, 8.0]).unwrap();
+        assert!((w[0] - 1.75).abs() < 1e-12);
+        assert!((w[1] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ridge_recovers_exact_linear_model() {
+        // y = 3x₀ - 2x₁ + 1 (with intercept column).
+        let rows: Vec<Vec<f64>> = (0..20)
+            .map(|i| {
+                let x0 = i as f64;
+                let x1 = (i * 7 % 5) as f64;
+                vec![1.0, x0, x1]
+            })
+            .collect();
+        let y: Vec<f64> = rows.iter().map(|r| 1.0 + 3.0 * r[1] - 2.0 * r[2]).collect();
+        let x = Matrix::from_rows(&rows);
+        let w = ridge_fit(&x, &y, 1e-9).unwrap();
+        assert!((w[0] - 1.0).abs() < 1e-6);
+        assert!((w[1] - 3.0).abs() < 1e-6);
+        assert!((w[2] + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normal_equations_symmetric() {
+        let x = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let (gram, _) = normal_equations(&x, &[1.0, 2.0, 3.0]);
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(gram.get(i, j), gram.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_rejected() {
+        Matrix::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

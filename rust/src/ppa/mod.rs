@@ -1,0 +1,110 @@
+//! Polynomial PPA surrogate models (§III-C, Fig. 3).
+//!
+//! The paper fits polynomial regression models to the synthesis data and
+//! selects the model with k-fold cross-validation (Mosteller–Tukey). This
+//! module provides:
+//!
+//! * [`features`] — design-point feature extraction,
+//! * [`linalg`] — dense linear algebra (Cholesky-solved ridge normal
+//!   equations; no external crates),
+//! * [`regression`] — polynomial expansion, fitting, k-fold CV model
+//!   selection, and fit metrics (R², MAPE, Pearson correlation).
+//!
+//! A fitted [`PpaModel`] predicts area / power / max-clock for unseen
+//! configurations ~10⁴× faster than re-running the synthesis engine, which
+//! is what makes the large DSE sweeps of Fig. 4 cheap.
+
+pub mod features;
+pub mod linalg;
+pub mod regression;
+
+pub use features::design_features;
+pub use regression::{kfold_select, FitReport, PolyModel};
+
+use crate::arch::AcceleratorConfig;
+use crate::quant::PeType;
+use crate::synth::SynthDataset;
+
+/// A per-PE-type trio of fitted surrogates: area (mm²), power (mW),
+/// performance (max clock, GHz).
+#[derive(Debug, Clone)]
+pub struct PpaModel {
+    pub pe: PeType,
+    pub area: PolyModel,
+    pub power: PolyModel,
+    pub perf: PolyModel,
+    /// Held-out fit quality per metric (from k-fold CV).
+    pub reports: Vec<FitReport>,
+}
+
+impl PpaModel {
+    /// Fit all three metrics from a synthesis dataset with k-fold CV model
+    /// selection over polynomial degrees 1..=3.
+    pub fn fit(dataset: &SynthDataset, folds: usize, seed: u64) -> Self {
+        let xs: Vec<Vec<f64>> =
+            dataset.records.iter().map(|r| design_features(&r.config)).collect();
+        let mut models = Vec::new();
+        let mut reports = Vec::new();
+        for metric in ["area", "power", "perf"] {
+            let ys = dataset.targets(metric);
+            let (model, report) = kfold_select(&xs, &ys, folds, seed, metric);
+            models.push(model);
+            reports.push(report);
+        }
+        let perf = models.pop().unwrap();
+        let power = models.pop().unwrap();
+        let area = models.pop().unwrap();
+        Self { pe: dataset.pe, area, power, perf, reports }
+    }
+
+    /// Predict (area mm², power mW, max clock GHz) for a configuration.
+    pub fn predict(&self, config: &AcceleratorConfig) -> (f64, f64, f64) {
+        assert_eq!(config.pe, self.pe, "model fitted for a different PE type");
+        let x = design_features(config);
+        (self.area.predict(&x), self.power.predict(&x), self.perf.predict(&x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::SweepSpec;
+    use crate::synth::synthesize_sweep;
+
+    #[test]
+    fn fitted_model_correlates_with_synthesis() {
+        let spec = SweepSpec::default();
+        let dataset = synthesize_sweep(&spec, PeType::Int16, 3);
+        let model = PpaModel::fit(&dataset, 5, 0);
+        // In-sample correlation must be high for all three metrics —
+        // the paper's "agrees closely with the actual values".
+        for report in &model.reports {
+            assert!(
+                report.pearson > 0.95,
+                "{}: r = {} (expected > 0.95)",
+                report.metric,
+                report.pearson
+            );
+        }
+    }
+
+    #[test]
+    fn predictions_positive_and_sane() {
+        let dataset = synthesize_sweep(&SweepSpec::default(), PeType::LightPe1, 3);
+        let model = PpaModel::fit(&dataset, 5, 0);
+        for record in &dataset.records {
+            let (area, power, perf) = model.predict(&record.config);
+            assert!(area > 0.0 && power > 0.0 && perf > 0.0);
+            assert!(crate::util::rel_diff(area, record.area_mm2) < 0.5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different PE type")]
+    fn pe_type_mismatch_panics() {
+        let dataset = synthesize_sweep(&SweepSpec::default(), PeType::Int16, 3);
+        let model = PpaModel::fit(&dataset, 3, 0);
+        let config = AcceleratorConfig { pe: PeType::Fp32, ..AcceleratorConfig::default() };
+        model.predict(&config);
+    }
+}

@@ -1,0 +1,245 @@
+//! Polynomial regression with k-fold cross-validated model selection.
+//!
+//! Feature standardization → polynomial expansion (pure powers + pairwise
+//! interactions at degree 2; cubes at degree 3) → ridge fit via the normal
+//! equations. [`kfold_select`] picks the degree with the lowest held-out
+//! RMSE, the paper's Mosteller–Tukey model-selection step.
+
+use super::linalg::{ridge_fit, Matrix};
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+
+/// A fitted polynomial model over standardized raw features.
+#[derive(Debug, Clone)]
+pub struct PolyModel {
+    pub degree: usize,
+    pub lambda: f64,
+    /// Per-raw-feature standardization: (mean, stddev).
+    pub scaler: Vec<(f64, f64)>,
+    /// Weights over the expanded basis (intercept first).
+    pub weights: Vec<f64>,
+}
+
+/// Held-out fit quality (k-fold CV aggregate + in-sample correlation).
+#[derive(Debug, Clone)]
+pub struct FitReport {
+    pub metric: String,
+    pub degree: usize,
+    /// Cross-validated RMSE (held-out).
+    pub cv_rmse: f64,
+    /// In-sample R².
+    pub r_squared: f64,
+    /// In-sample MAPE (%).
+    pub mape: f64,
+    /// In-sample Pearson correlation (the "agrees closely" of Fig. 3).
+    pub pearson: f64,
+    /// Candidate degrees and their CV RMSEs (the model-selection curve).
+    pub selection_curve: Vec<(usize, f64)>,
+}
+
+/// Expand a standardized feature vector to the polynomial basis.
+///
+/// Degree 1: `[1, z₁..z_p]`. Degree 2 adds squares and pairwise products.
+/// Degree 3 adds cubes (full cubic interactions would explode the basis
+/// beyond what ~10² synthesis samples support).
+pub fn expand(z: &[f64], degree: usize) -> Vec<f64> {
+    let p = z.len();
+    let mut out = Vec::with_capacity(1 + p * degree + if degree >= 2 { p * (p - 1) / 2 } else { 0 });
+    out.push(1.0);
+    out.extend_from_slice(z);
+    if degree >= 2 {
+        for i in 0..p {
+            for j in i..p {
+                out.push(z[i] * z[j]);
+            }
+        }
+    }
+    if degree >= 3 {
+        for &v in z {
+            out.push(v * v * v);
+        }
+    }
+    out
+}
+
+fn fit_scaler(xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+    let p = xs[0].len();
+    (0..p)
+        .map(|j| {
+            let column: Vec<f64> = xs.iter().map(|x| x[j]).collect();
+            let mean = stats::mean(&column);
+            let sd = stats::stddev(&column).max(1e-12);
+            (mean, sd)
+        })
+        .collect()
+}
+
+fn standardize(x: &[f64], scaler: &[(f64, f64)]) -> Vec<f64> {
+    x.iter().zip(scaler).map(|(v, (m, s))| (v - m) / s).collect()
+}
+
+impl PolyModel {
+    /// Fit at a fixed degree with ridge regularization.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], degree: usize, lambda: f64) -> PolyModel {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let scaler = fit_scaler(xs);
+        let expanded: Vec<Vec<f64>> =
+            xs.iter().map(|x| expand(&standardize(x, &scaler), degree)).collect();
+        let design = Matrix::from_rows(&expanded);
+        let weights = ridge_fit(&design, ys, lambda)
+            .expect("ridge normal equations must be SPD with lambda > 0");
+        PolyModel { degree, lambda, scaler, weights }
+    }
+
+    /// Predict the target for a raw feature vector.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let basis = expand(&standardize(x, &self.scaler), self.degree);
+        basis.iter().zip(&self.weights).map(|(b, w)| b * w).sum()
+    }
+
+    /// Predictions over a raw feature matrix.
+    pub fn predict_all(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+}
+
+/// K-fold cross-validated RMSE at a fixed degree.
+pub fn cv_rmse(xs: &[Vec<f64>], ys: &[f64], degree: usize, folds: usize, seed: u64) -> f64 {
+    assert!(folds >= 2 && xs.len() >= folds);
+    let n = xs.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    Pcg64::new(seed).shuffle(&mut order);
+    let mut sq_err_sum = 0.0;
+    for fold in 0..folds {
+        let held: Vec<usize> =
+            order.iter().cloned().skip(fold).step_by(folds).collect();
+        let held_set: std::collections::HashSet<usize> = held.iter().cloned().collect();
+        let train_x: Vec<Vec<f64>> = (0..n)
+            .filter(|i| !held_set.contains(i))
+            .map(|i| xs[i].clone())
+            .collect();
+        let train_y: Vec<f64> =
+            (0..n).filter(|i| !held_set.contains(i)).map(|i| ys[i]).collect();
+        let model = PolyModel::fit(&train_x, &train_y, degree, 1e-6);
+        for &i in &held {
+            sq_err_sum += (model.predict(&xs[i]) - ys[i]).powi(2);
+        }
+    }
+    (sq_err_sum / n as f64).sqrt()
+}
+
+/// Select the polynomial degree (1..=3) by k-fold CV, refit on all data,
+/// and report fit quality — the paper's model-selection procedure.
+pub fn kfold_select(
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    folds: usize,
+    seed: u64,
+    metric: &str,
+) -> (PolyModel, FitReport) {
+    let mut selection_curve = Vec::new();
+    for degree in 1..=3 {
+        // Degree 3 needs enough samples per fold to stay overdetermined.
+        let basis_size = expand(&vec![0.0; xs[0].len()], degree).len();
+        if xs.len() * (folds - 1) / folds <= basis_size {
+            break;
+        }
+        selection_curve.push((degree, cv_rmse(xs, ys, degree, folds, seed)));
+    }
+    assert!(!selection_curve.is_empty(), "not enough samples for any degree");
+    let &(best_degree, best_rmse) = selection_curve
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    let model = PolyModel::fit(xs, ys, best_degree, 1e-6);
+    let predictions = model.predict_all(xs);
+    let report = FitReport {
+        metric: metric.to_string(),
+        degree: best_degree,
+        cv_rmse: best_rmse,
+        r_squared: stats::r_squared(ys, &predictions),
+        mape: stats::mape(ys, &predictions),
+        pearson: stats::pearson(ys, &predictions),
+        selection_curve,
+    };
+    (model, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_quadratic(n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Pcg64::new(5);
+        let xs: Vec<Vec<f64>> =
+            (0..n).map(|_| vec![rng.uniform(0.0, 10.0), rng.uniform(0.0, 5.0)]).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 2.0 + 0.5 * x[0] + 1.5 * x[1] + 0.25 * x[0] * x[1] + 0.1 * x[0] * x[0])
+            .collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn degree2_fits_quadratic_exactly() {
+        let (xs, ys) = synthetic_quadratic(100);
+        let model = PolyModel::fit(&xs, &ys, 2, 1e-9);
+        let preds = model.predict_all(&xs);
+        assert!(stats::r_squared(&ys, &preds) > 0.999999);
+    }
+
+    #[test]
+    fn degree1_underfits_quadratic() {
+        let (xs, ys) = synthetic_quadratic(100);
+        let lin = PolyModel::fit(&xs, &ys, 1, 1e-9);
+        let quad = PolyModel::fit(&xs, &ys, 2, 1e-9);
+        let rmse = |m: &PolyModel| stats::rmse(&ys, &m.predict_all(&xs));
+        assert!(rmse(&lin) > 10.0 * rmse(&quad));
+    }
+
+    #[test]
+    fn kfold_selects_degree_2_for_quadratic_data() {
+        let (xs, ys) = synthetic_quadratic(120);
+        let (model, report) = kfold_select(&xs, &ys, 5, 0, "test");
+        assert!(model.degree >= 2, "selected degree {}", model.degree);
+        assert!(report.r_squared > 0.999);
+        assert!(report.selection_curve.len() >= 2);
+    }
+
+    #[test]
+    fn cv_rmse_positive_and_stable() {
+        let (xs, ys) = synthetic_quadratic(80);
+        let a = cv_rmse(&xs, &ys, 2, 4, 3);
+        let b = cv_rmse(&xs, &ys, 2, 4, 3);
+        assert_eq!(a, b, "same seed must give same folds");
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn expansion_sizes() {
+        let z = vec![0.0; 4];
+        assert_eq!(expand(&z, 1).len(), 1 + 4);
+        assert_eq!(expand(&z, 2).len(), 1 + 4 + 10);
+        assert_eq!(expand(&z, 3).len(), 1 + 4 + 10 + 4);
+    }
+
+    #[test]
+    fn standardization_centers_features() {
+        let xs = vec![vec![10.0], vec![20.0], vec![30.0]];
+        let scaler = fit_scaler(&xs);
+        let z = standardize(&[20.0], &scaler);
+        assert!(z[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_fit_still_correlates() {
+        let (xs, mut ys) = synthetic_quadratic(150);
+        let mut rng = Pcg64::new(11);
+        for y in &mut ys {
+            *y *= rng.lognormal(0.0, 0.05);
+        }
+        let (_, report) = kfold_select(&xs, &ys, 5, 0, "noisy");
+        assert!(report.pearson > 0.98, "pearson {}", report.pearson);
+    }
+}

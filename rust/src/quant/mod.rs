@@ -1,0 +1,212 @@
+//! Quantization numerics: PE types and their quantizers.
+//!
+//! The paper's design space has four processing-element types (§III-B):
+//!
+//! * **FP32** — IEEE-754 single-precision multiply-accumulate.
+//! * **INT16** — 16-bit uniform affine (symmetric) weights and activations.
+//! * **LightPE-1** — 8-bit activations, 4-bit power-of-two weights; the
+//!   multiplier is replaced by **one shift** (LightNN-1 style, ref [6]).
+//! * **LightPE-2** — 8-bit activations, 8-bit weights encoded as the sum of
+//!   **two** powers of two; the multiplier is two shifts and an add
+//!   (LightNN-2 style).
+//!
+//! These semantics are shared by the cycle-level simulator's golden model,
+//! the synthesis engine (which sizes datapaths from the bit widths), and
+//! mirrored exactly by the Pallas kernels in `python/compile/kernels/`.
+
+pub mod quantizer;
+
+pub use quantizer::{AffineQuantizer, Po2Quantizer, QuantizedTensor};
+
+/// Processing element type — the paper's primary design-space axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PeType {
+    Fp32,
+    Int16,
+    LightPe1,
+    LightPe2,
+}
+
+impl PeType {
+    /// All PE types in the paper's presentation order.
+    pub const ALL: [PeType; 4] = [PeType::Fp32, PeType::Int16, PeType::LightPe1, PeType::LightPe2];
+
+    /// Display name matching the paper's figures.
+    pub fn name(self) -> &'static str {
+        match self {
+            PeType::Fp32 => "FP32",
+            PeType::Int16 => "INT16",
+            PeType::LightPe1 => "LightPE-1",
+            PeType::LightPe2 => "LightPE-2",
+        }
+    }
+
+    /// Parse a user-facing name (case/dash insensitive).
+    pub fn parse(text: &str) -> Option<PeType> {
+        let key: String =
+            text.chars().filter(|c| c.is_ascii_alphanumeric()).collect::<String>().to_lowercase();
+        match key.as_str() {
+            "fp32" | "float32" => Some(PeType::Fp32),
+            "int16" => Some(PeType::Int16),
+            "lightpe1" | "light1" | "lpe1" => Some(PeType::LightPe1),
+            "lightpe2" | "light2" | "lpe2" => Some(PeType::LightPe2),
+            _ => None,
+        }
+    }
+
+    /// Activation datapath width in bits.
+    pub fn act_bits(self) -> u32 {
+        match self {
+            PeType::Fp32 => 32,
+            PeType::Int16 => 16,
+            PeType::LightPe1 | PeType::LightPe2 => 8,
+        }
+    }
+
+    /// Weight storage width in bits.
+    pub fn weight_bits(self) -> u32 {
+        match self {
+            PeType::Fp32 => 32,
+            PeType::Int16 => 16,
+            PeType::LightPe1 => 4,
+            PeType::LightPe2 => 8,
+        }
+    }
+
+    /// Partial-sum accumulator width in bits (sized so accumulation over the
+    /// largest supported reduction depth cannot overflow).
+    pub fn psum_bits(self) -> u32 {
+        match self {
+            PeType::Fp32 => 32,
+            PeType::Int16 => 48,
+            PeType::LightPe1 => 24,
+            PeType::LightPe2 => 24,
+        }
+    }
+
+    /// Whether the multiplier is replaced by shift-add hardware.
+    pub fn is_shift_add(self) -> bool {
+        matches!(self, PeType::LightPe1 | PeType::LightPe2)
+    }
+
+    /// Whether the datapath is floating-point.
+    pub fn is_float(self) -> bool {
+        matches!(self, PeType::Fp32)
+    }
+
+    /// Number of shift units in the MAC (0 for multiplier-based PEs).
+    pub fn shift_count(self) -> u32 {
+        match self {
+            PeType::LightPe1 => 1,
+            PeType::LightPe2 => 2,
+            _ => 0,
+        }
+    }
+}
+
+impl std::fmt::Display for PeType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Multiply `activation × weight` exactly as the PE hardware would, given
+/// already-quantized integer codes. Used by the simulator golden model.
+///
+/// * `Int16`: plain integer product.
+/// * `LightPe1`: weight code is (sign, exponent) — one arithmetic shift.
+/// * `LightPe2`: weight code is (sign, e1, e2) — two shifts and an add.
+pub fn pe_multiply(pe: PeType, activation: i64, weight: QuantWeight) -> i64 {
+    match (pe, weight) {
+        (PeType::Int16, QuantWeight::Code(w)) => activation * w,
+        (PeType::LightPe1, QuantWeight::Shift { sign, exp }) => {
+            sign as i64 * (activation << exp)
+        }
+        (PeType::LightPe2, QuantWeight::TwoShift { sign, exp_hi, exp_lo }) => {
+            let hi = activation << exp_hi;
+            let lo = match exp_lo {
+                Some(e) => activation << e,
+                None => 0,
+            };
+            sign as i64 * (hi + lo)
+        }
+        (PeType::Fp32, QuantWeight::Code(w)) => activation * w, // exact path unused for fp
+        _ => panic!("weight encoding does not match PE type {pe}"),
+    }
+}
+
+/// Hardware weight encodings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantWeight {
+    /// Plain two's-complement code (FP32 mantissa path / INT16).
+    Code(i64),
+    /// `sign * 2^exp` (LightPE-1).
+    Shift { sign: i8, exp: u32 },
+    /// `sign * (2^exp_hi + 2^exp_lo)` with optional second term (LightPE-2).
+    TwoShift { sign: i8, exp_hi: u32, exp_lo: Option<u32> },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for pe in PeType::ALL {
+            assert_eq!(PeType::parse(pe.name()), Some(pe));
+        }
+        assert_eq!(PeType::parse("lightpe-1"), Some(PeType::LightPe1));
+        assert_eq!(PeType::parse("nope"), None);
+    }
+
+    #[test]
+    fn bit_widths_match_paper() {
+        assert_eq!(PeType::LightPe1.act_bits(), 8);
+        assert_eq!(PeType::LightPe1.weight_bits(), 4);
+        assert_eq!(PeType::LightPe2.act_bits(), 8);
+        assert_eq!(PeType::LightPe2.weight_bits(), 8);
+        assert_eq!(PeType::Int16.act_bits(), 16);
+        assert_eq!(PeType::Fp32.weight_bits(), 32);
+    }
+
+    #[test]
+    fn shift_multiply_matches_integer_multiply() {
+        // LightPE-1: weight 8 = 2^3.
+        let product = pe_multiply(PeType::LightPe1, 5, QuantWeight::Shift { sign: 1, exp: 3 });
+        assert_eq!(product, 40);
+        let negative =
+            pe_multiply(PeType::LightPe1, 5, QuantWeight::Shift { sign: -1, exp: 1 });
+        assert_eq!(negative, -10);
+    }
+
+    #[test]
+    fn two_shift_multiply() {
+        // LightPE-2: weight 12 = 2^3 + 2^2.
+        let product = pe_multiply(
+            PeType::LightPe2,
+            7,
+            QuantWeight::TwoShift { sign: 1, exp_hi: 3, exp_lo: Some(2) },
+        );
+        assert_eq!(product, 84);
+        // Single-term encoding (exp_lo absent): weight 4.
+        let single = pe_multiply(
+            PeType::LightPe2,
+            7,
+            QuantWeight::TwoShift { sign: 1, exp_hi: 2, exp_lo: None },
+        );
+        assert_eq!(single, 28);
+    }
+
+    #[test]
+    fn psum_width_covers_deep_reductions() {
+        // Worst-case INT16 product is ~2^30; 2^18 accumulations need 48 bits.
+        assert!(PeType::Int16.psum_bits() >= 16 + 16 + 16);
+        assert!(PeType::LightPe1.psum_bits() >= 8 + 7 + 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn mismatched_encoding_panics() {
+        pe_multiply(PeType::Int16, 1, QuantWeight::Shift { sign: 1, exp: 0 });
+    }
+}

@@ -1,0 +1,305 @@
+//! Quantizer implementations: uniform affine (symmetric) and power-of-two.
+//!
+//! The rust side quantizes with *round-to-nearest, ties-to-even* to match
+//! `jnp.round` in the Pallas reference kernels bit-for-bit, so the simulator
+//! golden model and the L1 kernel oracle agree.
+
+use super::{PeType, QuantWeight};
+
+/// Round half to even (banker's rounding) — matches `jnp.round`.
+pub fn round_ties_even(x: f64) -> f64 {
+    let floor = x.floor();
+    let frac = x - floor;
+    if frac > 0.5 {
+        floor + 1.0
+    } else if frac < 0.5 {
+        floor
+    } else if (floor as i64) % 2 == 0 {
+        floor
+    } else {
+        floor + 1.0
+    }
+}
+
+/// Symmetric uniform affine quantizer over `[-max_abs, max_abs]` with
+/// `bits`-wide signed codes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AffineQuantizer {
+    pub bits: u32,
+    pub scale: f64,
+}
+
+impl AffineQuantizer {
+    /// Calibrate from the max-abs of the data (per-tensor symmetric).
+    pub fn calibrate(bits: u32, data: &[f64]) -> Self {
+        assert!(bits >= 2 && bits <= 32);
+        let max_abs = data.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-12);
+        let qmax = ((1i64 << (bits - 1)) - 1) as f64;
+        Self { bits, scale: max_abs / qmax }
+    }
+
+    /// Quantizer with an explicit scale.
+    pub fn with_scale(bits: u32, scale: f64) -> Self {
+        assert!(scale > 0.0);
+        Self { bits, scale }
+    }
+
+    /// Largest positive code.
+    pub fn qmax(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    /// Quantize a real value to an integer code (saturating).
+    pub fn quantize(&self, x: f64) -> i64 {
+        let q = round_ties_even(x / self.scale) as i64;
+        q.clamp(-self.qmax(), self.qmax())
+    }
+
+    /// Dequantize a code back to a real value.
+    pub fn dequantize(&self, q: i64) -> f64 {
+        q as f64 * self.scale
+    }
+
+    /// Fake-quantize (quantize then dequantize) — the QAT forward op.
+    pub fn fake_quantize(&self, x: f64) -> f64 {
+        self.dequantize(self.quantize(x))
+    }
+}
+
+/// Power-of-two quantizer for LightPE weights.
+///
+/// * LightPE-1 (4-bit codes): values `±2^e`, `e ∈ [e_min, e_min+6]`, plus
+///   exact zero — one barrel shift in hardware.
+/// * LightPE-2 (8-bit codes): values `±(2^e1 + 2^e2)` or `±2^e1` — two
+///   shifts and one add.
+///
+/// Exponents are *negative powers* for sub-unity weights: the hardware
+/// folds the layer-wide `2^e_min` factor into the output scale, so shifts
+/// are non-negative integers at the PE.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Po2Quantizer {
+    pub pe: PeType,
+    /// Smallest representable exponent (layer-calibrated).
+    pub e_min: i32,
+    /// Number of distinct exponents available.
+    pub levels: u32,
+}
+
+impl Po2Quantizer {
+    /// Calibrate exponent range from the weight distribution's max-abs.
+    pub fn calibrate(pe: PeType, weights: &[f64]) -> Self {
+        assert!(pe.is_shift_add(), "Po2Quantizer is for LightPE types");
+        let max_abs = weights.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1e-12);
+        // Top exponent covers max_abs; levels span the code space.
+        let e_max = max_abs.log2().ceil() as i32;
+        let levels = match pe {
+            PeType::LightPe1 => 7, // 4-bit: sign + 3-bit exponent code (one reserved for zero)
+            PeType::LightPe2 => 7, // 8-bit: sign + two 3-bit exponent fields + zero flag
+            _ => unreachable!(),
+        };
+        Self { pe, e_min: e_max - levels as i32 + 1, levels }
+    }
+
+    fn exponent_range(&self) -> (i32, i32) {
+        (self.e_min, self.e_min + self.levels as i32 - 1)
+    }
+
+    /// Quantize a real weight to the nearest representable value, returning
+    /// both the real value and the hardware encoding (shifts are relative to
+    /// `e_min`, hence non-negative).
+    pub fn quantize(&self, w: f64) -> (f64, QuantWeight) {
+        let sign = if w < 0.0 { -1i8 } else { 1i8 };
+        let mag = w.abs();
+        let (e_lo, e_hi) = self.exponent_range();
+        let zero_threshold = 2f64.powi(e_lo) / 2.0;
+        if mag < zero_threshold {
+            return (
+                0.0,
+                match self.pe {
+                    PeType::LightPe1 => QuantWeight::Shift { sign: 0, exp: 0 },
+                    _ => QuantWeight::TwoShift { sign: 0, exp_hi: 0, exp_lo: None },
+                },
+            );
+        }
+        match self.pe {
+            PeType::LightPe1 => {
+                // Nearest single power of two in value space.
+                let mut best = (f64::INFINITY, e_lo);
+                for e in e_lo..=e_hi {
+                    let v = 2f64.powi(e);
+                    let err = (v - mag).abs();
+                    if err < best.0 {
+                        best = (err, e);
+                    }
+                }
+                let value = sign as f64 * 2f64.powi(best.1);
+                let encoding =
+                    QuantWeight::Shift { sign, exp: (best.1 - e_lo) as u32 };
+                (value, encoding)
+            }
+            PeType::LightPe2 => {
+                // Nearest single or two-term sum of powers of two.
+                let mut best: (f64, f64, u32, Option<u32>) = (f64::INFINITY, 0.0, 0, None);
+                for e1 in e_lo..=e_hi {
+                    let v1 = 2f64.powi(e1);
+                    let err1 = (v1 - mag).abs();
+                    if err1 < best.0 {
+                        best = (err1, v1, (e1 - e_lo) as u32, None);
+                    }
+                    for e2 in e_lo..e1 {
+                        let v2 = v1 + 2f64.powi(e2);
+                        let err2 = (v2 - mag).abs();
+                        if err2 < best.0 {
+                            best = (err2, v2, (e1 - e_lo) as u32, Some((e2 - e_lo) as u32));
+                        }
+                    }
+                }
+                let value = sign as f64 * best.1;
+                (value, QuantWeight::TwoShift { sign, exp_hi: best.2, exp_lo: best.3 })
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Fake-quantize a weight (value domain only).
+    pub fn fake_quantize(&self, w: f64) -> f64 {
+        self.quantize(w).0
+    }
+
+    /// The layer-wide output scale factor `2^e_min` the hardware folds out.
+    pub fn output_scale(&self) -> f64 {
+        2f64.powi(self.e_min)
+    }
+}
+
+/// A quantized tensor: integer codes plus the shared scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedTensor {
+    pub codes: Vec<i64>,
+    pub scale: f64,
+    pub bits: u32,
+}
+
+impl QuantizedTensor {
+    /// Quantize a real tensor with a calibrated symmetric affine quantizer.
+    pub fn from_f64(bits: u32, data: &[f64]) -> Self {
+        let q = AffineQuantizer::calibrate(bits, data);
+        Self { codes: data.iter().map(|&x| q.quantize(x)).collect(), scale: q.scale, bits }
+    }
+
+    /// Dequantize back to real values.
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.codes.iter().map(|&c| c as f64 * self.scale).collect()
+    }
+
+    /// Worst-case quantization error bound: half a step.
+    pub fn error_bound(&self) -> f64 {
+        self.scale / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_ties_even_matches_numpy() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), -0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(0.49), 0.0);
+        assert_eq!(round_ties_even(0.51), 1.0);
+    }
+
+    #[test]
+    fn affine_roundtrip_error_bounded() {
+        let data: Vec<f64> = (0..100).map(|i| (i as f64 - 50.0) / 17.0).collect();
+        let q = AffineQuantizer::calibrate(8, &data);
+        for &x in &data {
+            let err = (q.fake_quantize(x) - x).abs();
+            assert!(err <= q.scale / 2.0 + 1e-12, "err {err} scale {}", q.scale);
+        }
+    }
+
+    #[test]
+    fn affine_saturates() {
+        let q = AffineQuantizer::with_scale(8, 0.1);
+        assert_eq!(q.quantize(1e9), q.qmax());
+        assert_eq!(q.quantize(-1e9), -q.qmax());
+    }
+
+    #[test]
+    fn affine_higher_bits_lower_error() {
+        let data: Vec<f64> = (0..1000).map(|i| ((i * 37) % 997) as f64 / 99.0 - 5.0).collect();
+        let mut last_err = f64::INFINITY;
+        for bits in [4, 8, 16] {
+            let q = AffineQuantizer::calibrate(bits, &data);
+            let err: f64 =
+                data.iter().map(|&x| (q.fake_quantize(x) - x).abs()).sum::<f64>() / 1000.0;
+            assert!(err < last_err, "bits={bits} err={err} last={last_err}");
+            last_err = err;
+        }
+    }
+
+    #[test]
+    fn po2_exact_on_powers() {
+        let q = Po2Quantizer { pe: PeType::LightPe1, e_min: -6, levels: 7 };
+        for e in -6..=0 {
+            let w = 2f64.powi(e);
+            let (v, enc) = q.quantize(w);
+            assert_eq!(v, w);
+            match enc {
+                QuantWeight::Shift { sign: 1, exp } => assert_eq!(exp as i32, e + 6),
+                other => panic!("unexpected encoding {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn po2_two_term_beats_one_term() {
+        // 0.75 = 2^-1 + 2^-2 is exact for LightPE-2, inexact for LightPE-1.
+        let q1 = Po2Quantizer { pe: PeType::LightPe1, e_min: -6, levels: 7 };
+        let q2 = Po2Quantizer { pe: PeType::LightPe2, e_min: -6, levels: 7 };
+        let err1 = (q1.fake_quantize(0.75) - 0.75).abs();
+        let err2 = (q2.fake_quantize(0.75) - 0.75).abs();
+        assert!(err2 < 1e-12, "LightPE-2 should be exact on 0.75, err {err2}");
+        assert!(err1 > 1e-3, "LightPE-1 cannot represent 0.75 exactly");
+    }
+
+    #[test]
+    fn po2_zero_below_threshold() {
+        let q = Po2Quantizer { pe: PeType::LightPe1, e_min: -6, levels: 7 };
+        let (v, enc) = q.quantize(1e-9);
+        assert_eq!(v, 0.0);
+        assert_eq!(enc, QuantWeight::Shift { sign: 0, exp: 0 });
+    }
+
+    #[test]
+    fn po2_sign_preserved() {
+        let q = Po2Quantizer { pe: PeType::LightPe2, e_min: -6, levels: 7 };
+        let (v, _) = q.quantize(-0.5);
+        assert!(v < 0.0);
+        assert_eq!(v, -0.5);
+    }
+
+    #[test]
+    fn po2_calibration_covers_max() {
+        let weights: Vec<f64> = vec![0.9, -0.4, 0.02, 0.3];
+        let q = Po2Quantizer::calibrate(PeType::LightPe1, &weights);
+        // Max representable must reach at least max_abs.
+        let top = 2f64.powi(q.e_min + q.levels as i32 - 1);
+        assert!(top >= 0.9, "top representable {top}");
+    }
+
+    #[test]
+    fn quantized_tensor_roundtrip() {
+        let data = vec![0.1, -0.5, 0.33, 0.0, 0.49];
+        let qt = QuantizedTensor::from_f64(8, &data);
+        let back = qt.to_f64();
+        for (orig, rec) in data.iter().zip(&back) {
+            assert!((orig - rec).abs() <= qt.error_bound() + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! rust hot path. Python never runs here — the artifacts in `artifacts/`
+//! are self-contained XLA programs (see `python/compile/aot.py`).
+//!
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` (the pattern from /opt/xla-example/load_hlo);
+//! executables are compiled once and cached, execution converts between
+//! [`Tensor`] and `xla::Literal` at the boundary.
+
+pub mod tensor;
+pub mod qat;
+
+pub use qat::QatDriver;
+pub use tensor::Tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Input/output signature of one artifact (from `manifest.json`).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub input_dtypes: Vec<String>,
+    pub n_outputs: usize,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch: usize,
+    pub img_hw: usize,
+    pub img_c: usize,
+    pub num_classes: usize,
+    pub param_order: Vec<String>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let get_usize = |key: &str| -> Result<usize> {
+            json.get(key)
+                .and_then(Json::as_i64)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("manifest missing '{key}'"))
+        };
+        let param_order: Vec<String> = json
+            .get("param_order")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing param_order"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+        let mut artifacts = HashMap::new();
+        if let Some(Json::Obj(map)) = json.get("artifacts") {
+            for (name, spec) in map {
+                let file = spec
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                    .to_string();
+                let inputs = spec
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?;
+                let mut input_shapes = Vec::new();
+                let mut input_dtypes = Vec::new();
+                for input in inputs {
+                    let shape: Vec<usize> = input
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_i64().map(|v| v as usize))
+                        .collect();
+                    input_shapes.push(shape);
+                    input_dtypes.push(
+                        input
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .unwrap_or("float32")
+                            .to_string(),
+                    );
+                }
+                let n_outputs = spec
+                    .get("n_outputs")
+                    .and_then(Json::as_i64)
+                    .ok_or_else(|| anyhow!("artifact {name} missing n_outputs"))?
+                    as usize;
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        name: name.clone(),
+                        file,
+                        input_shapes,
+                        input_dtypes,
+                        n_outputs,
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            batch: get_usize("batch")?,
+            img_hw: get_usize("img_hw")?,
+            img_c: get_usize("img_c")?,
+            num_classes: get_usize("num_classes")?,
+            param_order,
+            artifacts,
+        })
+    }
+}
+
+/// The PJRT runtime: a CPU client plus a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (compiles lazily).
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, executables: HashMap::new() })
+    }
+
+    /// Number of PJRT devices (CPU client: 1).
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Compile (and cache) an artifact's executable.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let computation = xla::XlaComputation::from_proto(&proto);
+        let executable = self.client.compile(&computation)?;
+        self.executables.insert(name.to_string(), executable);
+        Ok(())
+    }
+
+    /// Execute an artifact with positional tensor inputs; returns the
+    /// flattened outputs (the AOT side lowers with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.prepare(name)?;
+        let spec = &self.manifest.artifacts[name];
+        if inputs.len() != spec.input_shapes.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                spec.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (tensor, shape)) in inputs.iter().zip(&spec.input_shapes).enumerate() {
+            if tensor.shape() != shape.as_slice() {
+                bail!(
+                    "artifact '{name}' input {i}: expected shape {:?}, got {:?}",
+                    shape,
+                    tensor.shape()
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
+        let executable = &self.executables[name];
+        let result = executable.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let elements = tuple.to_tuple()?;
+        if elements.len() != spec.n_outputs {
+            bail!(
+                "artifact '{name}': expected {} outputs, got {}",
+                spec.n_outputs,
+                elements.len()
+            );
+        }
+        elements.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Artifact names available in the manifest (sorted).
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/runtime_e2e.rs
+    // (they require `make artifacts`). Manifest parsing is testable inline.
+
+    #[test]
+    fn manifest_parse_minimal() {
+        let dir = std::env::temp_dir().join("qadam_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "batch": 32, "img_hw": 8, "img_c": 3, "num_classes": 10,
+              "param_order": ["conv1", "conv2", "fc"],
+              "param_shapes": {"conv1": [3,3,3,8]},
+              "artifacts": {
+                "kernel_smoke": {
+                  "file": "kernel_smoke.hlo.txt",
+                  "inputs": [{"shape": [32, 27], "dtype": "float32"},
+                             {"shape": [27, 8], "dtype": "float32"}],
+                  "n_outputs": 1
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        assert_eq!(manifest.batch, 32);
+        assert_eq!(manifest.param_order, vec!["conv1", "conv2", "fc"]);
+        let spec = &manifest.artifacts["kernel_smoke"];
+        assert_eq!(spec.input_shapes, vec![vec![32, 27], vec![27, 8]]);
+        assert_eq!(spec.n_outputs, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_missing_fields_rejected() {
+        let dir = std::env::temp_dir().join("qadam_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"batch": 1}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

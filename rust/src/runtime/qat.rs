@@ -1,0 +1,112 @@
+//! QAT driver: the rust-side training loop over the AOT train/eval
+//! artifacts — the end-to-end path behind Figs. 5/6's accuracy axis and
+//! `examples/qat_end_to_end.rs`.
+//!
+//! State (params + momenta) lives in host [`Tensor`]s and cycles through
+//! the PJRT executable each step; the synthetic batch generator is itself
+//! an artifact (`batch.hlo.txt`), so the whole loop is XLA programs driven
+//! by rust — python appears nowhere.
+
+use anyhow::{anyhow, Result};
+
+use super::{Runtime, Tensor};
+use crate::quant::PeType;
+
+/// Map a rust PE type to the artifact naming convention.
+pub fn pe_artifact_key(pe: PeType) -> &'static str {
+    match pe {
+        PeType::Fp32 => "fp32",
+        PeType::Int16 => "int16",
+        PeType::LightPe1 => "lightpe1",
+        PeType::LightPe2 => "lightpe2",
+    }
+}
+
+/// One recorded training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+}
+
+/// Result of a QAT run.
+#[derive(Debug, Clone)]
+pub struct QatOutcome {
+    pub pe: PeType,
+    pub steps: usize,
+    pub loss_curve: Vec<StepRecord>,
+    pub final_accuracy: f32,
+    pub final_eval_loss: f32,
+}
+
+/// Driver owning the model state between steps.
+pub struct QatDriver {
+    pe: PeType,
+    params: Vec<Tensor>,
+    momentum: Vec<Tensor>,
+}
+
+impl QatDriver {
+    /// Initialize from the `init` artifact (deterministic He init).
+    pub fn new(runtime: &mut Runtime, pe: PeType) -> Result<QatDriver> {
+        let params = runtime.execute("init", &[])?;
+        let momentum = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        Ok(QatDriver { pe, params, momentum })
+    }
+
+    /// One training step on the batch generated from `seed`.
+    pub fn step(&mut self, runtime: &mut Runtime, seed: i32) -> Result<f32> {
+        let batch = runtime.execute("batch", &[Tensor::i32(&[1], vec![seed])])?;
+        let mut inputs = Vec::with_capacity(self.params.len() * 2 + 2);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.momentum.iter().cloned());
+        inputs.extend(batch);
+        let name = format!("train_{}", pe_artifact_key(self.pe));
+        let mut outputs = runtime.execute(&name, &inputs)?;
+        let loss = outputs
+            .pop()
+            .ok_or_else(|| anyhow!("train step returned no outputs"))?
+            .scalar_f32()?;
+        let n = self.params.len();
+        self.momentum = outputs.split_off(n);
+        self.params = outputs;
+        Ok(loss)
+    }
+
+    /// Evaluate on the batch generated from `seed`: (accuracy, loss).
+    pub fn evaluate(&self, runtime: &mut Runtime, seed: i32) -> Result<(f32, f32)> {
+        let batch = runtime.execute("batch", &[Tensor::i32(&[1], vec![seed])])?;
+        let mut inputs = self.params.clone();
+        inputs.extend(batch);
+        let name = format!("eval_{}", pe_artifact_key(self.pe));
+        let outputs = runtime.execute(&name, &inputs)?;
+        Ok((outputs[0].scalar_f32()?, outputs[1].scalar_f32()?))
+    }
+
+    /// Run a full training loop, recording the loss curve and final eval.
+    pub fn train(
+        runtime: &mut Runtime,
+        pe: PeType,
+        steps: usize,
+        log_every: usize,
+    ) -> Result<QatOutcome> {
+        let mut driver = QatDriver::new(runtime, pe)?;
+        let mut loss_curve = Vec::new();
+        for step in 0..steps {
+            let loss = driver.step(runtime, step as i32)?;
+            if step % log_every == 0 || step + 1 == steps {
+                loss_curve.push(StepRecord { step, loss });
+            }
+        }
+        let (final_accuracy, final_eval_loss) = driver.evaluate(runtime, 999)?;
+        Ok(QatOutcome { pe, steps, loss_curve, final_accuracy, final_eval_loss })
+    }
+
+    /// Current parameter tensors (for inspection/serialization).
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+}
+
+// Integration tests for the driver live in rust/tests/runtime_e2e.rs —
+// they need compiled artifacts and a PJRT client.

@@ -1,0 +1,139 @@
+//! Host tensors and conversion to/from `xla::Literal`.
+//!
+//! The runtime's calling convention is flat positional argument lists of
+//! f32/i32 tensors (see `python/compile/aot.py`); this module is the only
+//! place that touches the PJRT literal API, so the rest of L3 stays
+//! backend-agnostic.
+
+use anyhow::{bail, Result};
+
+/// A host-side dense tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    /// f32 tensor; checks element count against the shape.
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    /// i32 tensor; checks element count against the shape.
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    /// Zero-filled f32 tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    /// Scalar f32 extraction (rank-0 or single-element tensors).
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            Tensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            _ => bail!("not a scalar f32 tensor"),
+        }
+    }
+
+    /// Shape accessor.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// Whether the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// f32 data view (errors on dtype mismatch).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Convert to an `xla::Literal`.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let literal = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        if dims.len() == 1 {
+            return Ok(literal);
+        }
+        Ok(literal.reshape(&dims)?)
+    }
+
+    /// Convert from an `xla::Literal` (f32 or i32; other dtypes rejected).
+    pub fn from_literal(literal: &xla::Literal) -> Result<Tensor> {
+        let shape = literal.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 {
+                shape: dims,
+                data: literal.to_vec::<f32>()?,
+            }),
+            xla::ElementType::S32 => Ok(Tensor::I32 {
+                shape: dims,
+                data: literal.to_vec::<i32>()?,
+            }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let literal = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&literal).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let t = Tensor::i32(&[4], vec![1, -2, 3, -4]);
+        let literal = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&literal).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let t = Tensor::f32(&[], vec![2.5]);
+        assert_eq!(t.scalar_f32().unwrap(), 2.5);
+        let not_scalar = Tensor::f32(&[2], vec![1.0, 2.0]);
+        assert!(not_scalar.scalar_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::f32(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = Tensor::zeros(&[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

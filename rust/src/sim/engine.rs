@@ -1,0 +1,180 @@
+//! Cycle-level row-stationary simulation engine.
+//!
+//! Walks the actual pass structure of the RS mapping: each pass assigns
+//! (filter-row strips × output-row columns) to the physical array, then
+//! advances cycle by cycle through the 1-D convolution primitives (F output
+//! columns × S filter taps per PE). Every MAC goes through the hardware
+//! multiply path from [`super::golden`], so the final feature map is
+//! bit-identical to the quantized golden model — the "functional
+//! verification" of §III-C.
+
+use super::golden::{golden_conv, ifmap_index, quantize_tensors, weight_index};
+use crate::arch::AcceleratorConfig;
+use crate::dnn::{Layer, LayerKind};
+use crate::util::ceil_div;
+
+/// Simulation outcome for one layer.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Cycles consumed (compute passes; fills are pipelined).
+    pub cycles: u64,
+    /// Total MACs issued (must equal the layer's MAC count).
+    pub mac_count: u64,
+    /// Average array utilization.
+    pub utilization: f64,
+    /// Output feature map (value domain, dequantized).
+    pub ofmap: Vec<f64>,
+    /// Max |sim − quantized golden| (should be ≈ 0).
+    pub max_divergence: f64,
+    /// Max |sim − unquantized golden| (the quantization error).
+    pub max_abs_error: f64,
+    /// Whether the simulated output matched the quantized golden model.
+    pub verified: bool,
+}
+
+/// Simulate one layer on one configuration with concrete tensors.
+pub fn simulate_layer(
+    layer: &Layer,
+    config: &AcceleratorConfig,
+    ifmap: &[f64],
+    weights: &[f64],
+) -> SimResult {
+    assert_eq!(layer.kind, LayerKind::Conv, "simulator handles conv layers");
+    assert_eq!(ifmap.len() as u64, layer.ifmap_elems());
+    assert_eq!(weights.len() as u64, layer.weights());
+
+    let q = quantize_tensors(config.pe, layer, ifmap, weights);
+    let r = layer.kernel;
+    let s = layer.kernel;
+    let e = layer.out_hw();
+    let f = layer.out_hw();
+
+    // Spatial folding mirrors the analytical mapper.
+    let strip_height = r.min(config.rows);
+    let strips = (config.rows / strip_height).max(1);
+    let e_spatial = e.min(config.cols);
+    let r_folds = ceil_div(r, strip_height);
+
+    let mut ofmap = vec![0.0f64; layer.ofmap_elems() as usize];
+    let mut cycles: u64 = 0;
+
+    // Enumerate (m, c) work units; strips take them in groups per pass.
+    let mc_units: Vec<(usize, usize)> = (0..layer.out_c)
+        .flat_map(|m| (0..layer.in_c).map(move |c| (m, c)))
+        .collect();
+
+    for mc_chunk in mc_units.chunks(strips) {
+        for e_base in (0..e).step_by(e_spatial) {
+            let e_count = e_spatial.min(e - e_base);
+            for fold in 0..r_folds {
+                // One pass: strips × e_count columns active. Each PE runs
+                // the 1-D primitive: F output columns × S taps.
+                let kh_base = fold * strip_height;
+                let kh_count = strip_height.min(r - kh_base);
+                for tap in 0..s {
+                    for out_col in 0..f {
+                        // One cycle: every active PE does one MAC.
+                        cycles += 1;
+                        for &(m, c) in mc_chunk {
+                            for kh_off in 0..kh_count {
+                                let kh = kh_base + kh_off;
+                                for e_off in 0..e_count {
+                                    let oh = e_base + e_off;
+                                    let ih = (oh * layer.stride + kh) as i64
+                                        - layer.padding as i64;
+                                    let iw = (out_col * layer.stride + tap) as i64
+                                        - layer.padding as i64;
+                                    if let Some(ai) = ifmap_index(layer, c, ih, iw) {
+                                        let wi = weight_index(layer, m, c, kh, tap);
+                                        ofmap[(m * e + oh) * f + out_col] +=
+                                            q.multiply_values(ai, wi);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Scoreboard: quantized golden (same multiply path) and fp golden.
+    let golden_q = q.dequantized_conv(layer);
+    let golden_fp = golden_conv(layer, ifmap, weights);
+    let max_divergence = ofmap
+        .iter()
+        .zip(&golden_q)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    let max_abs_error = ofmap
+        .iter()
+        .zip(&golden_fp)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+
+    let utilization = layer.macs() as f64 / (cycles as f64 * config.num_pes() as f64);
+
+    SimResult {
+        cycles,
+        mac_count: layer.macs(),
+        utilization,
+        ofmap,
+        max_divergence,
+        max_abs_error,
+        verified: max_divergence < 1e-9,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::PeType;
+    use crate::util::rng::Pcg64;
+
+    fn run(pe: PeType, rows: usize, cols: usize, seed: u64) -> SimResult {
+        let layer = Layer::conv("t", 6, 2, 3, 3, 1, 1);
+        let mut rng = Pcg64::new(seed);
+        let ifmap: Vec<f64> =
+            (0..layer.ifmap_elems()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let weights: Vec<f64> =
+            (0..layer.weights()).map(|_| rng.uniform(-0.5, 0.5)).collect();
+        let config = AcceleratorConfig { pe, rows, cols, ..Default::default() };
+        simulate_layer(&layer, &config, &ifmap, &weights)
+    }
+
+    #[test]
+    fn verified_for_every_pe_type() {
+        for pe in PeType::ALL {
+            let result = run(pe, 6, 6, 42);
+            assert!(result.verified, "{}: divergence {}", pe.name(), result.max_divergence);
+        }
+    }
+
+    #[test]
+    fn fp32_exact_vs_unquantized() {
+        let result = run(PeType::Fp32, 6, 6, 7);
+        assert!(result.max_abs_error < 1e-12);
+    }
+
+    #[test]
+    fn cycles_scale_down_with_array_size() {
+        let small = run(PeType::Int16, 3, 3, 9);
+        let large = run(PeType::Int16, 9, 6, 9);
+        assert!(large.cycles < small.cycles);
+        // Same functional output regardless of array shape.
+        let max_diff = small
+            .ofmap
+            .iter()
+            .zip(&large.ofmap)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_diff < 1e-9, "array shape must not change numerics");
+    }
+
+    #[test]
+    fn utilization_drops_on_oversized_array() {
+        let fitted = run(PeType::Int16, 6, 6, 11);
+        let oversized = run(PeType::Int16, 32, 32, 11);
+        assert!(oversized.utilization < fitted.utilization);
+    }
+}

@@ -1,0 +1,252 @@
+//! Golden reference for the simulator: direct convolution with the exact
+//! hardware quantizer semantics from [`crate::quant`].
+
+use crate::dnn::Layer;
+use crate::quant::{
+    pe_multiply, AffineQuantizer, PeType, Po2Quantizer, QuantWeight,
+};
+
+/// A layer's tensors quantized for a PE type, with hardware encodings.
+#[derive(Debug, Clone)]
+pub struct QuantizedLayer {
+    pub pe: PeType,
+    /// Activation codes (integer domain; fp32 passes raw bits through f64).
+    pub act_codes: Vec<i64>,
+    /// Raw activations (fp32 path).
+    pub act_raw: Vec<f64>,
+    /// Weight hardware encodings.
+    pub weight_codes: Vec<QuantWeight>,
+    /// Weight real values after fake-quantization.
+    pub weight_values: Vec<f64>,
+    /// Activation scale (code → value).
+    pub act_scale: f64,
+    /// Weight quantization step (affine scale or po2 output scale).
+    pub weight_step: f64,
+}
+
+/// Quantize a layer's ifmap and weights for a PE type.
+pub fn quantize_tensors(
+    pe: PeType,
+    _layer: &Layer,
+    ifmap: &[f64],
+    weights: &[f64],
+) -> QuantizedLayer {
+    match pe {
+        PeType::Fp32 => QuantizedLayer {
+            pe,
+            act_codes: Vec::new(),
+            act_raw: ifmap.to_vec(),
+            weight_codes: Vec::new(),
+            weight_values: weights.to_vec(),
+            act_scale: 0.0,
+            weight_step: 0.0,
+        },
+        PeType::Int16 => {
+            let aq = AffineQuantizer::calibrate(16, ifmap);
+            let wq = AffineQuantizer::calibrate(16, weights);
+            QuantizedLayer {
+                pe,
+                act_codes: ifmap.iter().map(|&x| aq.quantize(x)).collect(),
+                act_raw: ifmap.to_vec(),
+                weight_codes: weights
+                    .iter()
+                    .map(|&w| QuantWeight::Code(wq.quantize(w)))
+                    .collect(),
+                weight_values: weights.iter().map(|&w| wq.fake_quantize(w)).collect(),
+                act_scale: aq.scale,
+                weight_step: wq.scale,
+            }
+        }
+        PeType::LightPe1 | PeType::LightPe2 => {
+            let aq = AffineQuantizer::calibrate(8, ifmap);
+            let wq = Po2Quantizer::calibrate(pe, weights);
+            let mut codes = Vec::with_capacity(weights.len());
+            let mut values = Vec::with_capacity(weights.len());
+            for &w in weights {
+                let (value, code) = wq.quantize(w);
+                codes.push(code);
+                values.push(value);
+            }
+            QuantizedLayer {
+                pe,
+                act_codes: ifmap.iter().map(|&x| aq.quantize(x)).collect(),
+                act_raw: ifmap.to_vec(),
+                weight_codes: codes,
+                weight_values: values,
+                act_scale: aq.scale,
+                weight_step: wq.output_scale(),
+            }
+        }
+    }
+}
+
+impl QuantizedLayer {
+    /// Hardware MAC over integer codes at a flat (act index, weight index);
+    /// returns the integer-domain product (fp32 path multiplies reals and
+    /// returns them via the value-domain accessor instead).
+    pub fn multiply_codes(&self, act_idx: usize, weight_idx: usize) -> i64 {
+        pe_multiply(self.pe, self.act_codes[act_idx], self.weight_codes[weight_idx])
+    }
+
+    /// Value-domain product for an (act, weight) pair — what the integer
+    /// product dequantizes to. Shared by the simulator scoreboard.
+    pub fn multiply_values(&self, act_idx: usize, weight_idx: usize) -> f64 {
+        match self.pe {
+            PeType::Fp32 => self.act_raw[act_idx] * self.weight_values[weight_idx],
+            PeType::Int16 => {
+                // code product × both scales.
+                let q = self.multiply_codes(act_idx, weight_idx);
+                q as f64 * self.act_scale * self.weight_step
+            }
+            PeType::LightPe1 | PeType::LightPe2 => {
+                let q = self.multiply_codes(act_idx, weight_idx);
+                q as f64 * self.act_scale * self.weight_step
+            }
+        }
+    }
+
+    /// Full dequantized convolution using the hardware multiply path.
+    pub fn dequantized_conv(&self, layer: &Layer) -> Vec<f64> {
+        conv_with(layer, |act_idx, weight_idx| self.multiply_values(act_idx, weight_idx))
+    }
+}
+
+/// Index an NCHW ifmap element, `None` when (h, w) falls in padding.
+pub fn ifmap_index(layer: &Layer, c: usize, h: i64, w: i64) -> Option<usize> {
+    let hw = layer.in_hw as i64;
+    if h < 0 || w < 0 || h >= hw || w >= hw {
+        return None;
+    }
+    Some(c * layer.in_hw * layer.in_hw + h as usize * layer.in_hw + w as usize)
+}
+
+/// Index a weight element (m, c, kh, kw).
+pub fn weight_index(layer: &Layer, m: usize, c: usize, kh: usize, kw: usize) -> usize {
+    ((m * layer.in_c + c) * layer.kernel + kh) * layer.kernel + kw
+}
+
+/// Direct convolution parameterized by the multiply op (value domain).
+fn conv_with(layer: &Layer, mul: impl Fn(usize, usize) -> f64) -> Vec<f64> {
+    let out_hw = layer.out_hw();
+    let mut output = vec![0.0f64; layer.ofmap_elems() as usize];
+    for m in 0..layer.out_c {
+        for oh in 0..out_hw {
+            for ow in 0..out_hw {
+                let mut acc = 0.0;
+                for c in 0..layer.in_c {
+                    for kh in 0..layer.kernel {
+                        for kw in 0..layer.kernel {
+                            let ih = (oh * layer.stride + kh) as i64 - layer.padding as i64;
+                            let iw = (ow * layer.stride + kw) as i64 - layer.padding as i64;
+                            if let Some(ai) = ifmap_index(layer, c, ih, iw) {
+                                acc += mul(ai, weight_index(layer, m, c, kh, kw));
+                            }
+                        }
+                    }
+                }
+                output[(m * out_hw + oh) * out_hw + ow] = acc;
+            }
+        }
+    }
+    output
+}
+
+/// Unquantized (f64) direct convolution — the numerical ground truth.
+pub fn golden_conv(layer: &Layer, ifmap: &[f64], weights: &[f64]) -> Vec<f64> {
+    assert_eq!(ifmap.len() as u64, layer.ifmap_elems());
+    assert_eq!(weights.len() as u64, layer.weights());
+    conv_with(layer, |ai, wi| ifmap[ai] * weights[wi])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn layer() -> Layer {
+        Layer::conv("g", 5, 2, 3, 3, 1, 1)
+    }
+
+    fn inputs(seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let l = layer();
+        let mut rng = Pcg64::new(seed);
+        (
+            (0..l.ifmap_elems()).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+            (0..l.weights()).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+        )
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1×1 conv, single channel, weight 1.0 → output == input.
+        let l = Layer::conv("id", 4, 1, 1, 1, 1, 0);
+        let ifmap: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let out = golden_conv(&l, &ifmap, &[1.0]);
+        assert_eq!(out, ifmap);
+    }
+
+    #[test]
+    fn padding_zeroes_border_contributions() {
+        // All-ones input & kernel: corner output sums only the in-bounds taps.
+        let l = Layer::conv("pad", 3, 1, 1, 3, 1, 1);
+        let out = golden_conv(&l, &vec![1.0; 9], &vec![1.0; 9]);
+        assert_eq!(out[0], 4.0); // corner: 2×2 window in bounds
+        assert_eq!(out[4], 9.0); // center: full 3×3
+    }
+
+    #[test]
+    fn fp32_quantization_is_identity() {
+        let (ifmap, weights) = inputs(1);
+        let q = quantize_tensors(PeType::Fp32, &layer(), &ifmap, &weights);
+        let exact = golden_conv(&layer(), &ifmap, &weights);
+        let deq = q.dequantized_conv(&layer());
+        for (a, b) in exact.iter().zip(&deq) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn int16_error_small() {
+        let (ifmap, weights) = inputs(2);
+        let q = quantize_tensors(PeType::Int16, &layer(), &ifmap, &weights);
+        let exact = golden_conv(&layer(), &ifmap, &weights);
+        let deq = q.dequantized_conv(&layer());
+        let max_err =
+            exact.iter().zip(&deq).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+        assert!(max_err < 1e-3, "INT16 max err {max_err}");
+    }
+
+    #[test]
+    fn lightpe1_coarser_than_lightpe2() {
+        let (ifmap, weights) = inputs(3);
+        let exact = golden_conv(&layer(), &ifmap, &weights);
+        let err = |pe: PeType| {
+            let q = quantize_tensors(pe, &layer(), &ifmap, &weights);
+            let deq = q.dequantized_conv(&layer());
+            exact.iter().zip(&deq).map(|(a, b)| (a - b).abs()).sum::<f64>()
+        };
+        assert!(err(PeType::LightPe1) > err(PeType::LightPe2));
+    }
+
+    #[test]
+    fn integer_codes_match_value_domain_int16() {
+        // The integer MAC path dequantizes to exactly the value-domain MAC.
+        let (ifmap, weights) = inputs(4);
+        let q = quantize_tensors(PeType::Int16, &layer(), &ifmap, &weights);
+        for (ai, wi) in [(0usize, 0usize), (3, 7), (10, 17)] {
+            let via_codes =
+                q.multiply_codes(ai, wi) as f64 * q.act_scale * q.weight_step;
+            let via_values = q.multiply_values(ai, wi);
+            assert!((via_codes - via_values).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn weight_index_layout() {
+        let l = layer();
+        assert_eq!(weight_index(&l, 0, 0, 0, 0), 0);
+        assert_eq!(weight_index(&l, 0, 0, 0, 1), 1);
+        assert_eq!(weight_index(&l, 0, 1, 0, 0), 9);
+        assert_eq!(weight_index(&l, 1, 0, 0, 0), 18);
+    }
+}

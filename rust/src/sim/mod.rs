@@ -1,0 +1,108 @@
+//! Cycle-level functional simulator — the Synopsys VCS stand-in
+//! (DESIGN.md §1, paper §III-C "functional verification and timing").
+//!
+//! Simulates the 2-D PE array executing one convolution layer under the
+//! row-stationary dataflow at cycle granularity: strips of `R` PEs slide
+//! filter rows over ifmap rows, psums accumulate down each strip, and the
+//! result is checked against a golden direct-convolution reference that
+//! uses the same quantizer semantics as the hardware ([`golden`]).
+//!
+//! The simulator serves two purposes the analytical mapper cannot:
+//! functional verification of the PE numerics (including the LightPE
+//! shift-add path), and an independent cycle count that cross-checks the
+//! mapper's compute-cycle model on small layers.
+
+pub mod golden;
+pub mod engine;
+
+pub use engine::{simulate_layer, SimResult};
+pub use golden::{golden_conv, quantize_tensors, QuantizedLayer};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::AcceleratorConfig;
+    use crate::dataflow::map_layer_rs;
+    use crate::dnn::Layer;
+    use crate::quant::PeType;
+    use crate::util::rng::Pcg64;
+
+    fn small_layer() -> Layer {
+        Layer::conv("sim_test", 8, 3, 4, 3, 1, 1)
+    }
+
+    fn random_inputs(layer: &Layer, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let ifmap: Vec<f64> =
+            (0..layer.ifmap_elems()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let weights: Vec<f64> =
+            (0..layer.weights()).map(|_| rng.uniform(-0.5, 0.5)).collect();
+        (ifmap, weights)
+    }
+
+    #[test]
+    fn simulator_matches_golden_for_all_pe_types() {
+        let layer = small_layer();
+        let (ifmap, weights) = random_inputs(&layer, 1);
+        for pe in PeType::ALL {
+            let config = AcceleratorConfig { pe, rows: 6, cols: 8, ..Default::default() };
+            let result = simulate_layer(&layer, &config, &ifmap, &weights);
+            assert!(
+                result.verified,
+                "{}: simulator output diverges from golden (max err {})",
+                pe.name(),
+                result.max_abs_error
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_types_have_bounded_error_vs_fp() {
+        // The quantized golden output must track the unquantized conv within
+        // the accumulated quantization error bound.
+        let layer = small_layer();
+        let (ifmap, weights) = random_inputs(&layer, 2);
+        let exact = golden_conv(&layer, &ifmap, &weights);
+        for pe in [PeType::Int16, PeType::LightPe2] {
+            let q = quantize_tensors(pe, &layer, &ifmap, &weights);
+            let quantized = q.dequantized_conv(&layer);
+            let max_err = exact
+                .iter()
+                .zip(&quantized)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            // Per-MAC error ≤ act_step·|w| + wgt_step·|a| summed over C·K².
+            let reduction = (layer.in_c * layer.kernel * layer.kernel) as f64;
+            let bound = reduction * (q.act_scale + q.weight_step) * 2.0;
+            assert!(max_err < bound, "{}: err {} bound {}", pe.name(), max_err, bound);
+        }
+    }
+
+    #[test]
+    fn cycle_count_close_to_mapper_estimate() {
+        // The mapper is analytical; the simulator walks real passes. They
+        // must agree within 2× on compute cycles for a compute-bound layer.
+        let layer = small_layer();
+        let (ifmap, weights) = random_inputs(&layer, 3);
+        let config = AcceleratorConfig { rows: 6, cols: 8, ..Default::default() };
+        let sim = simulate_layer(&layer, &config, &ifmap, &weights);
+        let mapped = map_layer_rs(&layer, &config);
+        let ratio = sim.cycles as f64 / mapped.compute_cycles as f64;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "sim {} vs mapper {} (ratio {ratio})",
+            sim.cycles,
+            mapped.compute_cycles
+        );
+    }
+
+    #[test]
+    fn utilization_reported() {
+        let layer = small_layer();
+        let (ifmap, weights) = random_inputs(&layer, 4);
+        let config = AcceleratorConfig { rows: 6, cols: 8, ..Default::default() };
+        let sim = simulate_layer(&layer, &config, &ifmap, &weights);
+        assert!(sim.utilization > 0.0 && sim.utilization <= 1.0);
+        assert!(sim.mac_count == layer.macs());
+    }
+}

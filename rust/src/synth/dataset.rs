@@ -1,0 +1,118 @@
+//! Synthesis dataset generation for PPA model fitting (§III-C).
+//!
+//! The paper runs DC over the swept design space and fits polynomial
+//! regression models to the resulting (config → power/perf/area) samples.
+//! [`synthesize_sweep`] is that data-collection loop over our synthesis
+//! engine; the output feeds [`crate::ppa`].
+
+use super::{synthesize, SynthReport};
+use crate::arch::{AcceleratorConfig, SweepSpec};
+use crate::quant::PeType;
+
+/// One (design point → synthesis results) sample.
+#[derive(Debug, Clone)]
+pub struct SynthRecord {
+    pub config: AcceleratorConfig,
+    /// Total area (mm²).
+    pub area_mm2: f64,
+    /// Total power (mW) at the reference activity.
+    pub power_mw: f64,
+    /// Achievable clock (GHz) — the "performance" axis of Fig. 3 (per-PE
+    /// performance is clock × 1 MAC/cycle).
+    pub max_clock_ghz: f64,
+}
+
+impl SynthRecord {
+    /// Build from a synthesis report.
+    pub fn from_report(report: &SynthReport) -> Self {
+        Self {
+            config: report.config.clone(),
+            area_mm2: report.area.total_mm2(),
+            power_mw: report.total_power_mw(),
+            max_clock_ghz: report.max_clock_ghz,
+        }
+    }
+}
+
+/// A labeled synthesis dataset for one PE type (Fig. 3 fits each PE type
+/// separately).
+#[derive(Debug, Clone)]
+pub struct SynthDataset {
+    pub pe: PeType,
+    pub records: Vec<SynthRecord>,
+}
+
+impl SynthDataset {
+    /// Observation vector for a named target metric.
+    pub fn targets(&self, metric: &str) -> Vec<f64> {
+        self.records
+            .iter()
+            .map(|r| match metric {
+                "area" => r.area_mm2,
+                "power" => r.power_mw,
+                "perf" => r.max_clock_ghz,
+                other => panic!("unknown metric '{other}'"),
+            })
+            .collect()
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Whether the dataset is empty.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+/// Run the synthesis engine over every design point of `spec` restricted to
+/// `pe`, with tool noise keyed by `seed`.
+pub fn synthesize_sweep(spec: &SweepSpec, pe: PeType, seed: u64) -> SynthDataset {
+    let records = spec
+        .clone()
+        .for_pe(pe)
+        .enumerate()
+        .iter()
+        .map(|config| SynthRecord::from_report(&synthesize(config, seed)))
+        .collect();
+    SynthDataset { pe, records }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_space() {
+        let spec = SweepSpec::tiny();
+        let ds = synthesize_sweep(&spec, PeType::Int16, 1);
+        assert_eq!(ds.len(), spec.clone().for_pe(PeType::Int16).len());
+        assert!(ds.records.iter().all(|r| r.config.pe == PeType::Int16));
+    }
+
+    #[test]
+    fn targets_extract_metrics() {
+        let ds = synthesize_sweep(&SweepSpec::tiny(), PeType::Int16, 1);
+        for metric in ["area", "power", "perf"] {
+            let ys = ds.targets(metric);
+            assert_eq!(ys.len(), ds.len());
+            assert!(ys.iter().all(|&y| y > 0.0), "{metric} must be positive");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown metric")]
+    fn unknown_metric_panics() {
+        let ds = synthesize_sweep(&SweepSpec::tiny(), PeType::Int16, 1);
+        ds.targets("latency");
+    }
+
+    #[test]
+    fn dataset_deterministic_per_seed() {
+        let a = synthesize_sweep(&SweepSpec::tiny(), PeType::LightPe1, 9);
+        let b = synthesize_sweep(&SweepSpec::tiny(), PeType::LightPe1, 9);
+        assert_eq!(a.targets("area"), b.targets("area"));
+    }
+}

@@ -1,0 +1,255 @@
+//! Synthesis engine — the Synopsys Design Compiler stand-in (DESIGN.md §1).
+//!
+//! Composes a gate-level cost estimate for a full accelerator design point
+//! from the [`crate::tech`] component models, exactly the quantities the
+//! paper extracts from DC + FreePDK45 (§III-C): **area**, **power** (at a
+//! reference activity), and **achievable clock**. A seeded multiplicative
+//! tool-noise model ([`noise`]) emulates run-to-run synthesis variance so
+//! that the polynomial PPA surrogates (Fig. 3) have something non-trivial
+//! to fit.
+
+pub mod netlist;
+pub mod noise;
+pub mod dataset;
+
+pub use dataset::{synthesize_sweep, SynthDataset, SynthRecord};
+pub use netlist::{mac_unit, pe_netlist, PeNetlist};
+
+use crate::arch::AcceleratorConfig;
+use crate::tech::{self, SramMacro, NODE_45NM};
+
+/// Reference switching activity used for the synthesis power report
+/// (fraction of PEs toggling per cycle); matches a mid-utilization layer.
+pub const REFERENCE_ACTIVITY: f64 = 0.5;
+
+/// Reference clock for the synthesis power report (GHz). DC reports power
+/// at the stated clock constraint, identical across designs, so Fig. 3's
+/// power axis compares energy-per-cycle × a common frequency — not each
+/// design's achieved frequency.
+pub const REFERENCE_CLOCK_GHZ: f64 = 1.0;
+
+/// Area breakdown of a synthesized accelerator (µm²).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaBreakdown {
+    pub pe_array_um2: f64,
+    pub glb_um2: f64,
+    pub noc_um2: f64,
+    pub controller_um2: f64,
+}
+
+impl AreaBreakdown {
+    /// Total area in µm².
+    pub fn total_um2(&self) -> f64 {
+        self.pe_array_um2 + self.glb_um2 + self.noc_um2 + self.controller_um2
+    }
+
+    /// Total area in mm².
+    pub fn total_mm2(&self) -> f64 {
+        self.total_um2() / 1e6
+    }
+}
+
+/// The synthesis "report" for one design point — what DC would print.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthReport {
+    /// The synthesized configuration.
+    pub config: AcceleratorConfig,
+    /// Area breakdown.
+    pub area: AreaBreakdown,
+    /// Dynamic power at [`REFERENCE_ACTIVITY`] and the achieved clock (mW).
+    pub dynamic_power_mw: f64,
+    /// Leakage power (mW).
+    pub leakage_power_mw: f64,
+    /// Maximum achievable clock from the critical path (GHz).
+    pub max_clock_ghz: f64,
+    /// Clock the design closes timing at: `min(target, achievable)` (GHz).
+    pub achieved_clock_ghz: f64,
+    /// Per-PE netlist detail (single PE).
+    pub pe: PeNetlist,
+    /// Global buffer macro.
+    pub glb: SramMacro,
+}
+
+impl SynthReport {
+    /// Total power (mW).
+    pub fn total_power_mw(&self) -> f64 {
+        self.dynamic_power_mw + self.leakage_power_mw
+    }
+
+    /// Peak throughput in GMAC/s at the achieved clock.
+    pub fn peak_gmacs(&self) -> f64 {
+        self.config.num_pes() as f64 * self.achieved_clock_ghz
+    }
+
+    /// Peak performance per area (GMAC/s per mm²) — the paper's headline
+    /// efficiency axis.
+    pub fn peak_perf_per_area(&self) -> f64 {
+        self.peak_gmacs() / self.area.total_mm2()
+    }
+}
+
+/// Synthesize a design point deterministically (no tool noise) — the
+/// "ideal" composition used by unit tests and the energy model.
+pub fn synthesize_clean(config: &AcceleratorConfig) -> SynthReport {
+    config.validate().expect("invalid accelerator config");
+    let pe = pe_netlist(config);
+    let num_pes = config.num_pes() as f64;
+
+    // Global buffer: banked SRAM macro, 128-bit port.
+    let glb = tech::sram::build_sram(config.glb_bytes() * 8, 128);
+
+    // NoC: row/column broadcast buses (Eyeriss-style X/Y buses). Area scales
+    // with perimeter × flit width; energy accounted per transfer in the
+    // energy model — here it contributes area + leakage only.
+    let flit_bits = (config.pe.act_bits().max(config.pe.psum_bits())) as f64;
+    let noc_um2 = (config.rows + config.cols) as f64 * flit_bits * 18.0
+        + num_pes * flit_bits * 1.1; // per-PE router taps
+
+    let controller = tech::control_logic(64);
+
+    let area = AreaBreakdown {
+        pe_array_um2: pe.total.area_um2 * num_pes,
+        glb_um2: glb.area_um2,
+        noc_um2,
+        controller_um2: controller.area_um2,
+    };
+
+    // Critical path: MAC datapath vs scratchpad access vs GLB access, plus
+    // the array broadcast-bus wire delay (grows with the array perimeter —
+    // this is why wide arrays close timing slower in real synthesis runs).
+    let wire_ns = 0.0035 * (config.rows + config.cols) as f64;
+    let critical_ns = pe
+        .critical_path_ns()
+        .max(glb.access_ns * 0.9) // GLB is pipelined; 90% of access in one stage
+        + wire_ns;
+    let max_clock_ghz = 1.0 / critical_ns;
+    let achieved_clock_ghz = config.clock_ghz.min(max_clock_ghz);
+
+    // Dynamic power: per-cycle energy of active PEs (MAC + local spad
+    // traffic) + amortized GLB traffic, at the reference activity and the
+    // reference clock (the DC report convention — see REFERENCE_CLOCK_GHZ).
+    let pe_cycle_pj = pe.energy_per_mac_pj();
+    let glb_cycle_pj = glb.read_pj * 0.08; // ~1 GLB access / 12 MACs / PE (RS reuse)
+    let dynamic_power_mw = REFERENCE_ACTIVITY
+        * num_pes
+        * (pe_cycle_pj + glb_cycle_pj)
+        * REFERENCE_CLOCK_GHZ; // pJ × GHz = mW
+
+    // Leakage: logic area + SRAM macros.
+    let logic_area = area.pe_array_um2 * (1.0 - pe.storage_area_fraction())
+        + area.noc_um2
+        + area.controller_um2;
+    let leakage_power_mw = tech::logic_leakage_mw(&NODE_45NM, logic_area)
+        + pe.spad_leakage_mw() * num_pes
+        + glb.leakage_mw;
+
+    SynthReport {
+        config: config.clone(),
+        area,
+        dynamic_power_mw,
+        leakage_power_mw,
+        max_clock_ghz,
+        achieved_clock_ghz,
+        pe,
+        glb,
+    }
+}
+
+/// Synthesize with the tool-noise model applied (the "actual" values of
+/// Fig. 3). Deterministic per (config, seed).
+pub fn synthesize(config: &AcceleratorConfig, seed: u64) -> SynthReport {
+    let mut report = synthesize_clean(config);
+    noise::apply(&mut report, seed);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::SweepSpec;
+    use crate::quant::PeType;
+
+    fn cfg(pe: PeType) -> AcceleratorConfig {
+        AcceleratorConfig { pe, ..AcceleratorConfig::default() }
+    }
+
+    #[test]
+    fn area_ordering_matches_paper() {
+        // Fig. 3 bottom chart: FP32 highest area, LightPEs lowest.
+        let fp32 = synthesize_clean(&cfg(PeType::Fp32));
+        let int16 = synthesize_clean(&cfg(PeType::Int16));
+        let light1 = synthesize_clean(&cfg(PeType::LightPe1));
+        let light2 = synthesize_clean(&cfg(PeType::LightPe2));
+        assert!(fp32.area.total_um2() > int16.area.total_um2());
+        assert!(int16.area.total_um2() > light2.area.total_um2());
+        assert!(light2.area.total_um2() >= light1.area.total_um2());
+    }
+
+    #[test]
+    fn power_ordering_matches_paper() {
+        let fp32 = synthesize_clean(&cfg(PeType::Fp32));
+        let int16 = synthesize_clean(&cfg(PeType::Int16));
+        let light1 = synthesize_clean(&cfg(PeType::LightPe1));
+        assert!(fp32.total_power_mw() > int16.total_power_mw());
+        assert!(int16.total_power_mw() > light1.total_power_mw());
+    }
+
+    #[test]
+    fn lightpe_clocks_faster() {
+        // Shift-add datapath is shorter than a 16-bit multiply.
+        let int16 = synthesize_clean(&cfg(PeType::Int16));
+        let light1 = synthesize_clean(&cfg(PeType::LightPe1));
+        assert!(light1.max_clock_ghz > int16.max_clock_ghz);
+    }
+
+    #[test]
+    fn achieved_clock_capped_by_target() {
+        let report = synthesize_clean(&cfg(PeType::LightPe1));
+        assert!(report.achieved_clock_ghz <= report.config.clock_ghz + 1e-12);
+        assert!(report.achieved_clock_ghz <= report.max_clock_ghz + 1e-12);
+    }
+
+    #[test]
+    fn area_scales_with_array() {
+        let small = synthesize_clean(&AcceleratorConfig { rows: 8, cols: 8, ..cfg(PeType::Int16) });
+        let big =
+            synthesize_clean(&AcceleratorConfig { rows: 32, cols: 32, ..cfg(PeType::Int16) });
+        let ratio = big.area.pe_array_um2 / small.area.pe_array_um2;
+        assert!((ratio - 16.0).abs() < 1e-6, "PE array area must scale ×16, got {ratio}");
+    }
+
+    #[test]
+    fn noise_is_deterministic_and_small() {
+        let config = cfg(PeType::Int16);
+        let a = synthesize(&config, 7);
+        let b = synthesize(&config, 7);
+        assert_eq!(a.area.total_um2(), b.area.total_um2());
+        let clean = synthesize_clean(&config);
+        let rel = crate::util::rel_diff(a.area.total_um2(), clean.area.total_um2());
+        assert!(rel < 0.25, "noise should be bounded, got {rel}");
+        // Different seed → different noise.
+        let c = synthesize(&config, 8);
+        assert_ne!(a.area.total_um2(), c.area.total_um2());
+    }
+
+    #[test]
+    fn perf_per_area_spread_covers_paper_range() {
+        // Fig. 2: >5× spread in perf/area across the space.
+        let reports: Vec<SynthReport> =
+            SweepSpec::default().enumerate().iter().map(synthesize_clean).collect();
+        let ppa: Vec<f64> = reports.iter().map(|r| r.peak_perf_per_area()).collect();
+        let spread = crate::util::stats::max(&ppa) / crate::util::stats::min(&ppa);
+        assert!(spread > 5.0, "peak perf/area spread {spread} must exceed 5×");
+    }
+
+    #[test]
+    fn glb_dominates_at_large_buffer_small_array() {
+        let report = synthesize_clean(&AcceleratorConfig {
+            rows: 8,
+            cols: 8,
+            glb_kib: 512,
+            ..cfg(PeType::LightPe1)
+        });
+        assert!(report.area.glb_um2 > report.area.pe_array_um2);
+    }
+}

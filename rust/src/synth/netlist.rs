@@ -1,0 +1,218 @@
+//! PE netlist composition: MAC datapaths and scratchpads per PE type.
+//!
+//! Mirrors the paper's §III-A PE microarchitecture: each PE holds an ifmap
+//! scratchpad, a filter scratchpad, a psum scratchpad, and a MAC unit that
+//! is either a conventional multiplier+adder (FP32, INT16) or a shift-add
+//! unit (LightPE-1/2, §III-B).
+
+use crate::arch::AcceleratorConfig;
+use crate::quant::PeType;
+use crate::tech::{self, Component, SramMacro, NODE_45NM};
+
+/// The MAC datapath for a PE type, as a composed [`Component`].
+///
+/// The multiply and accumulate halves are **pipelined** (a register between
+/// them, as DC would retime a 2-stage MAC), so the critical path is the
+/// *longest stage*, not the full chain — areas and energies still sum.
+///
+/// * FP32: fp32 multiplier ‖ fp32 adder stages.
+/// * INT16: 16×16 multiplier ‖ 48-bit accumulate adder.
+/// * LightPE-1: sign unit → one barrel shift (act 8b shifted into 16b)
+///   ‖ 24-bit accumulate adder.
+/// * LightPE-2: two parallel barrel shifts → 16-bit combine adder →
+///   sign unit ‖ 24-bit accumulate adder.
+pub fn mac_unit(pe: PeType) -> Component {
+    let pipeline = |stage1: Component, stage2: Component, width: u32| {
+        let reg = tech::register(width);
+        Component {
+            area_um2: stage1.area_um2 + stage2.area_um2 + reg.area_um2,
+            energy_pj: stage1.energy_pj + stage2.energy_pj + reg.energy_pj,
+            delay_ns: stage1.delay_ns.max(stage2.delay_ns) + reg.delay_ns,
+        }
+    };
+    match pe {
+        PeType::Fp32 => pipeline(tech::fp_multiplier(32), tech::fp_adder(32), 32),
+        PeType::Int16 => pipeline(
+            tech::int_multiplier(16),
+            tech::int_adder(PeType::Int16.psum_bits()),
+            PeType::Int16.psum_bits(),
+        ),
+        PeType::LightPe1 => pipeline(
+            tech::sign_unit(16).then(tech::barrel_shifter(16, 3)),
+            tech::int_adder(PeType::LightPe1.psum_bits()),
+            PeType::LightPe1.psum_bits(),
+        ),
+        PeType::LightPe2 => pipeline(
+            tech::barrel_shifter(16, 3)
+                .plus(tech::barrel_shifter(16, 3))
+                .then(tech::int_adder(16))
+                .then(tech::sign_unit(16)),
+            tech::int_adder(PeType::LightPe2.psum_bits()),
+            PeType::LightPe2.psum_bits(),
+        ),
+    }
+}
+
+/// A fully composed PE: MAC + three scratchpads + local control.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeNetlist {
+    pub pe_type: PeType,
+    pub mac: Component,
+    pub ifmap_spad: SramMacro,
+    pub filter_spad: SramMacro,
+    pub psum_spad: SramMacro,
+    pub control: Component,
+    /// Aggregate component (areas summed; delay = datapath critical path).
+    pub total: Component,
+}
+
+/// Compose the PE netlist for a configuration.
+pub fn pe_netlist(config: &AcceleratorConfig) -> PeNetlist {
+    let pe = config.pe;
+    let mac = mac_unit(pe);
+    let spad = &config.spad;
+    // PE scratchpads synthesize to register files (Eyeriss-style), keeping
+    // area/energy monotone in bit width across PE types.
+    let ifmap_spad = tech::sram::build_regfile(
+        spad.ifmap_entries * pe.act_bits() as usize,
+        pe.act_bits() as usize,
+    );
+    let filter_spad = tech::sram::build_regfile(
+        spad.filter_entries * pe.weight_bits() as usize,
+        pe.weight_bits() as usize,
+    );
+    let psum_spad = tech::sram::build_regfile(
+        spad.psum_entries * pe.psum_bits() as usize,
+        pe.psum_bits() as usize,
+    );
+    let control = tech::control_logic(16);
+    let total = Component {
+        area_um2: mac.area_um2
+            + ifmap_spad.area_um2
+            + filter_spad.area_um2
+            + psum_spad.area_um2
+            + control.area_um2,
+        energy_pj: 0.0, // energy accounted per-access, not as a lump
+        delay_ns: mac.delay_ns,
+    };
+    PeNetlist { pe_type: pe, mac, ifmap_spad, filter_spad, psum_spad, control, total }
+}
+
+impl PeNetlist {
+    /// Critical path through the PE (ns): spad read → MAC → psum write.
+    pub fn critical_path_ns(&self) -> f64 {
+        // Reads are pipelined with compute; the longer of (spad access) and
+        // (MAC datapath) sets the stage time.
+        let spad_ns = self
+            .ifmap_spad
+            .access_ns
+            .max(self.filter_spad.access_ns)
+            .max(self.psum_spad.access_ns);
+        self.mac.delay_ns.max(spad_ns)
+    }
+
+    /// Energy of one MAC *including* the local scratchpad traffic it
+    /// implies under row-stationary reuse: one ifmap read, one filter read,
+    /// one psum read + write per MAC (psum is read-modify-write).
+    pub fn energy_per_mac_pj(&self) -> f64 {
+        self.mac.energy_pj
+            + self.ifmap_spad.read_pj
+            + self.filter_spad.read_pj
+            + self.psum_spad.read_pj
+            + self.psum_spad.write_pj
+    }
+
+    /// Fraction of PE area that is storage (used to split leakage between
+    /// the logic and SRAM models).
+    pub fn storage_area_fraction(&self) -> f64 {
+        let storage =
+            self.ifmap_spad.area_um2 + self.filter_spad.area_um2 + self.psum_spad.area_um2;
+        storage / self.total.area_um2
+    }
+
+    /// Scratchpad leakage for one PE (mW).
+    pub fn spad_leakage_mw(&self) -> f64 {
+        self.ifmap_spad.leakage_mw(&NODE_45NM)
+            + self.filter_spad.leakage_mw(&NODE_45NM)
+            + self.psum_spad.leakage_mw(&NODE_45NM)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ScratchpadCfg;
+
+    #[test]
+    fn mac_area_ordering() {
+        let fp32 = mac_unit(PeType::Fp32);
+        let int16 = mac_unit(PeType::Int16);
+        let light1 = mac_unit(PeType::LightPe1);
+        let light2 = mac_unit(PeType::LightPe2);
+        assert!(fp32.area_um2 > int16.area_um2);
+        assert!(int16.area_um2 > light2.area_um2);
+        assert!(light2.area_um2 > light1.area_um2);
+    }
+
+    #[test]
+    fn mac_energy_ordering() {
+        let fp32 = mac_unit(PeType::Fp32);
+        let int16 = mac_unit(PeType::Int16);
+        let light1 = mac_unit(PeType::LightPe1);
+        assert!(fp32.energy_pj > int16.energy_pj);
+        assert!(int16.energy_pj > 3.0 * light1.energy_pj, "shift-add must be ≫ cheaper");
+    }
+
+    #[test]
+    fn shift_add_shorter_critical_path() {
+        assert!(mac_unit(PeType::LightPe1).delay_ns < mac_unit(PeType::Int16).delay_ns);
+        assert!(mac_unit(PeType::Int16).delay_ns < mac_unit(PeType::Fp32).delay_ns);
+    }
+
+    #[test]
+    fn pe_netlist_spads_scale_with_bits() {
+        let mk = |pe| {
+            pe_netlist(&AcceleratorConfig { pe, ..AcceleratorConfig::default() })
+        };
+        let int16 = mk(PeType::Int16);
+        let light1 = mk(PeType::LightPe1);
+        assert!(int16.filter_spad.area_um2 > light1.filter_spad.area_um2);
+        assert!(int16.ifmap_spad.area_um2 > light1.ifmap_spad.area_um2);
+    }
+
+    #[test]
+    fn energy_per_mac_includes_spads() {
+        let net = pe_netlist(&AcceleratorConfig::default());
+        assert!(net.energy_per_mac_pj() > net.mac.energy_pj);
+    }
+
+    #[test]
+    fn storage_fraction_in_unit_interval() {
+        for pe in PeType::ALL {
+            let net = pe_netlist(&AcceleratorConfig { pe, ..AcceleratorConfig::default() });
+            let f = net.storage_area_fraction();
+            assert!(f > 0.0 && f < 1.0, "{pe}: storage fraction {f}");
+        }
+    }
+
+    #[test]
+    fn bigger_spads_bigger_pe() {
+        let small = pe_netlist(&AcceleratorConfig {
+            spad: ScratchpadCfg { ifmap_entries: 12, filter_entries: 112, psum_entries: 16 },
+            ..AcceleratorConfig::default()
+        });
+        let large = pe_netlist(&AcceleratorConfig {
+            spad: ScratchpadCfg { ifmap_entries: 24, filter_entries: 448, psum_entries: 32 },
+            ..AcceleratorConfig::default()
+        });
+        assert!(large.total.area_um2 > small.total.area_um2);
+    }
+
+    #[test]
+    fn critical_path_at_least_mac_delay() {
+        for pe in PeType::ALL {
+            let net = pe_netlist(&AcceleratorConfig { pe, ..AcceleratorConfig::default() });
+            assert!(net.critical_path_ns() >= net.mac.delay_ns);
+        }
+    }
+}

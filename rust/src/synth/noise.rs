@@ -1,0 +1,135 @@
+//! Synthesis tool-noise model.
+//!
+//! Real synthesis runs are not a smooth function of the RTL parameters:
+//! placement seeds, mapping heuristics, and timing-closure effort inject
+//! run-to-run variance, and corner configurations synthesize slightly off
+//! the trend (e.g. very wide arrays route worse). The paper's Fig. 3 fits
+//! polynomial models *to that noisy data*; this module reproduces the
+//! noise so the fit quality numbers are meaningful rather than exact.
+//!
+//! Noise is **deterministic** per (config, seed): the stream is keyed by a
+//! hash of the config id, so re-"synthesizing" the same design reproduces
+//! the same report, exactly like re-running DC with the same seed.
+
+use super::SynthReport;
+use crate::util::rng::Pcg64;
+
+/// Multiplicative noise sigma for area (lognormal).
+pub const AREA_SIGMA: f64 = 0.03;
+/// Multiplicative noise sigma for power.
+pub const POWER_SIGMA: f64 = 0.05;
+/// Multiplicative noise sigma for the achievable clock.
+pub const CLOCK_SIGMA: f64 = 0.015;
+
+/// FNV-1a hash of the config id (stable across runs and platforms).
+fn fnv1a(text: &str) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for byte in text.bytes() {
+        hash ^= byte as u64;
+        hash = hash.wrapping_mul(0x1000_0000_01b3);
+    }
+    hash
+}
+
+/// Apply tool noise to a clean report in place.
+pub fn apply(report: &mut SynthReport, seed: u64) {
+    let key = fnv1a(&report.config.id()) ^ seed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let mut rng = Pcg64::with_stream(key, seed);
+
+    // Systematic effects first (they bias, not just scatter):
+    // 1. Routing congestion penalty for very wide arrays — wirelength grows
+    //    superlinearly, DC pads the array area.
+    let pes = report.config.num_pes() as f64;
+    let congestion = 1.0 + 0.015 * (pes / 256.0).max(1.0).ln();
+    // 2. Large GLB macros close timing slightly worse (longer wires to the
+    //    array edge), costing clock.
+    let glb_penalty = 1.0 - 0.01 * (report.config.glb_kib as f64 / 128.0).max(1.0).ln();
+
+    let area_factor = congestion * rng.lognormal(0.0, AREA_SIGMA);
+    let power_factor = rng.lognormal(0.0, POWER_SIGMA);
+    let clock_factor = glb_penalty * rng.lognormal(0.0, CLOCK_SIGMA);
+
+    report.area.pe_array_um2 *= area_factor;
+    report.area.noc_um2 *= area_factor;
+    report.area.glb_um2 *= rng.lognormal(0.0, AREA_SIGMA * 0.5); // macros vary less
+    report.dynamic_power_mw *= power_factor;
+    report.leakage_power_mw *= rng.lognormal(0.0, POWER_SIGMA * 0.6);
+    report.max_clock_ghz *= clock_factor;
+    report.achieved_clock_ghz = report.config.clock_ghz.min(report.max_clock_ghz);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::AcceleratorConfig;
+    use crate::synth::synthesize_clean;
+    use crate::util::stats;
+
+    #[test]
+    fn deterministic_per_config_and_seed() {
+        let config = AcceleratorConfig::default();
+        let mut a = synthesize_clean(&config);
+        let mut b = synthesize_clean(&config);
+        apply(&mut a, 42);
+        apply(&mut b, 42);
+        assert_eq!(a.area.total_um2(), b.area.total_um2());
+        assert_eq!(a.dynamic_power_mw, b.dynamic_power_mw);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let config = AcceleratorConfig::default();
+        let mut a = synthesize_clean(&config);
+        let mut b = synthesize_clean(&config);
+        apply(&mut a, 1);
+        apply(&mut b, 2);
+        assert_ne!(a.area.total_um2(), b.area.total_um2());
+    }
+
+    #[test]
+    fn noise_unbiased_and_bounded() {
+        let config = AcceleratorConfig::default();
+        let clean = synthesize_clean(&config).area.total_um2();
+        let ratios: Vec<f64> = (0..200)
+            .map(|seed| {
+                let mut r = synthesize_clean(&config);
+                apply(&mut r, seed);
+                r.area.total_um2() / clean
+            })
+            .collect();
+        let mean = stats::mean(&ratios);
+        // Mean within a few % of the (slightly >1, congestion-biased) center.
+        assert!(mean > 0.97 && mean < 1.10, "mean ratio {mean}");
+        assert!(stats::max(&ratios) < 1.25);
+        assert!(stats::min(&ratios) > 0.8);
+    }
+
+    #[test]
+    fn achieved_clock_stays_consistent() {
+        let config = AcceleratorConfig::default();
+        for seed in 0..50 {
+            let mut r = synthesize_clean(&config);
+            apply(&mut r, seed);
+            assert!(r.achieved_clock_ghz <= r.max_clock_ghz + 1e-12);
+            assert!(r.achieved_clock_ghz <= r.config.clock_ghz + 1e-12);
+        }
+    }
+
+    #[test]
+    fn congestion_biases_large_arrays_up() {
+        let small = AcceleratorConfig { rows: 8, cols: 8, ..AcceleratorConfig::default() };
+        let large = AcceleratorConfig { rows: 32, cols: 32, ..AcceleratorConfig::default() };
+        let bias = |config: &AcceleratorConfig| {
+            let clean = synthesize_clean(config).area.pe_array_um2;
+            let noisy: Vec<f64> = (0..100)
+                .map(|seed| {
+                    let mut r = synthesize_clean(config);
+                    apply(&mut r, seed);
+                    r.area.pe_array_um2 / clean
+                })
+                .collect();
+            stats::mean(&noisy)
+        };
+        assert!(bias(&large) > bias(&small), "large arrays must synthesize with more overhead");
+    }
+}

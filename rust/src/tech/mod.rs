@@ -1,0 +1,272 @@
+//! 45 nm technology models — the FreePDK45 stand-in (DESIGN.md §1).
+//!
+//! The paper synthesizes designs with Synopsys Design Compiler against the
+//! open-source FreePDK45 kit. Neither is available here, so this module
+//! provides analytical standard-cell component models **anchored on
+//! published 45 nm datapoints** (energy/area table in M. Horowitz,
+//! "Computing's energy problem (and what we can do about it)", ISSCC 2014)
+//! with textbook scaling laws between the anchors:
+//!
+//! * integer adder — energy/area ∝ bits, delay ∝ log(bits)
+//! * integer multiplier — energy ∝ bits², area ∝ bits^1.8
+//! * FP add/mul — interpolated between the fp16/fp32 anchors
+//! * barrel shifter — area ∝ bits·log(bits) (mux tree)
+//! * registers / register files — linear in bits
+//! * SRAM macros — CACTI-style √capacity access energy (see [`sram`])
+//!
+//! All areas in µm², energies in pJ, delays in ns, leakage in mW.
+
+pub mod sram;
+
+pub use sram::SramMacro;
+
+/// Operating point and global constants of the modeled node.
+#[derive(Debug, Clone, Copy)]
+pub struct TechNode {
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Logic leakage power density (mW per µm²).
+    pub logic_leakage_mw_per_um2: f64,
+    /// DRAM access energy (pJ per byte transferred).
+    pub dram_pj_per_byte: f64,
+    /// Wire energy for on-chip NoC traversal (pJ per byte per mm).
+    pub wire_pj_per_byte_mm: f64,
+}
+
+/// The default 45 nm node used throughout (FreePDK45-like, 0.9 V nominal).
+pub const NODE_45NM: TechNode = TechNode {
+    vdd: 0.9,
+    logic_leakage_mw_per_um2: 1.0e-7, // 0.1 nW/µm²
+    dram_pj_per_byte: 160.0,          // ~1.3 nJ / 64-bit access
+    wire_pj_per_byte_mm: 0.5,
+};
+
+/// A synthesized datapath component: the unit of netlist composition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Component {
+    /// Silicon area (µm²).
+    pub area_um2: f64,
+    /// Dynamic energy per operation (pJ).
+    pub energy_pj: f64,
+    /// Propagation delay (ns) — sets the critical path.
+    pub delay_ns: f64,
+}
+
+impl Component {
+    /// The zero component (identity for [`Component::plus`]).
+    pub const ZERO: Component = Component { area_um2: 0.0, energy_pj: 0.0, delay_ns: 0.0 };
+
+    /// Parallel composition: areas/energies add, delay is the max.
+    pub fn plus(self, other: Component) -> Component {
+        Component {
+            area_um2: self.area_um2 + other.area_um2,
+            energy_pj: self.energy_pj + other.energy_pj,
+            delay_ns: self.delay_ns.max(other.delay_ns),
+        }
+    }
+
+    /// Series composition: areas/energies add, delays add (cascade).
+    pub fn then(self, other: Component) -> Component {
+        Component {
+            area_um2: self.area_um2 + other.area_um2,
+            energy_pj: self.energy_pj + other.energy_pj,
+            delay_ns: self.delay_ns + other.delay_ns,
+        }
+    }
+
+    /// Replicate `n` copies operating in parallel.
+    pub fn times(self, n: usize) -> Component {
+        Component {
+            area_um2: self.area_um2 * n as f64,
+            energy_pj: self.energy_pj * n as f64,
+            delay_ns: self.delay_ns,
+        }
+    }
+}
+
+fn log2(x: f64) -> f64 {
+    x.max(1.0).log2()
+}
+
+/// Ripple-free (parallel-prefix) integer adder.
+///
+/// Anchors: 8-bit = 0.03 pJ / 36 µm²; 32-bit = 0.1 pJ / 137 µm².
+pub fn int_adder(bits: u32) -> Component {
+    let b = bits as f64;
+    Component {
+        area_um2: 4.3 * b,
+        energy_pj: 0.00345 * b,
+        delay_ns: 0.06 + 0.035 * log2(b),
+    }
+}
+
+/// Array integer multiplier.
+///
+/// Anchors: 8-bit = 0.2 pJ / 282 µm²; 32-bit = 3.1 pJ / 3495 µm².
+/// Energy fits ∝ b^1.98, area ∝ b^1.81 between the anchors.
+pub fn int_multiplier(bits: u32) -> Component {
+    let b = bits as f64;
+    Component {
+        area_um2: 6.54 * b.powf(1.81),
+        energy_pj: 0.00324 * b.powf(1.98),
+        delay_ns: 0.20 + 0.12 * log2(b),
+    }
+}
+
+/// Asymmetric integer multiplier (`a_bits × w_bits`); modeled as the
+/// geometric-mean square multiplier (standard DC synthesis behaviour for
+/// rectangular Booth arrays).
+pub fn int_multiplier_asym(a_bits: u32, w_bits: u32) -> Component {
+    let eff = ((a_bits as f64) * (w_bits as f64)).sqrt();
+    let b = eff;
+    Component {
+        area_um2: 6.54 * b.powf(1.81),
+        energy_pj: 0.00324 * b.powf(1.98),
+        delay_ns: 0.20 + 0.12 * log2(b),
+    }
+}
+
+/// Floating-point adder. Anchors: fp16 = 0.4 pJ / 1360 µm²;
+/// fp32 = 0.9 pJ / 4184 µm².
+pub fn fp_adder(bits: u32) -> Component {
+    let t = ((bits as f64) - 16.0) / 16.0; // 0 at fp16, 1 at fp32
+    Component {
+        area_um2: crate::util::lerp(1360.0, 4184.0, t),
+        energy_pj: crate::util::lerp(0.4, 0.9, t),
+        delay_ns: 0.55 + 0.25 * t,
+    }
+}
+
+/// Floating-point multiplier. Anchors: fp16 = 1.1 pJ / 1640 µm²;
+/// fp32 = 3.7 pJ / 7700 µm².
+pub fn fp_multiplier(bits: u32) -> Component {
+    let t = ((bits as f64) - 16.0) / 16.0;
+    Component {
+        area_um2: crate::util::lerp(1640.0, 7700.0, t),
+        energy_pj: crate::util::lerp(1.1, 3.7, t),
+        delay_ns: 0.70 + 0.35 * t,
+    }
+}
+
+/// Barrel shifter over `data_bits` with `shift_bits` of control — the
+/// LightPE "multiplier". Mux-tree: `data_bits × shift_bits` 2:1 muxes.
+pub fn barrel_shifter(data_bits: u32, shift_bits: u32) -> Component {
+    let muxes = (data_bits as f64) * (shift_bits as f64);
+    Component {
+        area_um2: 1.9 * muxes,         // ~1.9 µm² per 2:1 mux incl. wiring
+        energy_pj: 0.0011 * muxes,     // switched-cap per mux level
+        delay_ns: 0.03 + 0.022 * shift_bits as f64,
+    }
+}
+
+/// Flip-flop register bank (`bits` wide): pipeline/output registers.
+pub fn register(bits: u32) -> Component {
+    let b = bits as f64;
+    Component { area_um2: 4.5 * b, energy_pj: 0.0018 * b, delay_ns: 0.04 }
+}
+
+/// Two's-complement negate/conditional-invert stage (sign handling in
+/// shift-add PEs): an XOR row plus carry-in.
+pub fn sign_unit(bits: u32) -> Component {
+    let b = bits as f64;
+    Component { area_um2: 1.4 * b, energy_pj: 0.0006 * b, delay_ns: 0.05 }
+}
+
+/// Control/FSM overhead for a block with ~`states` states — decoders,
+/// counters, handshake.
+pub fn control_logic(states: u32) -> Component {
+    let s = (states as f64).max(2.0);
+    Component {
+        area_um2: 60.0 + 22.0 * s * log2(s),
+        energy_pj: 0.002 + 0.0008 * s,
+        delay_ns: 0.12,
+    }
+}
+
+/// Leakage power (mW) of `area_um2` of logic at the node.
+pub fn logic_leakage_mw(node: &TechNode, area_um2: f64) -> f64 {
+    node.logic_leakage_mw_per_um2 * area_um2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rel_diff;
+
+    #[test]
+    fn adder_hits_anchors() {
+        let a8 = int_adder(8);
+        let a32 = int_adder(32);
+        assert!(rel_diff(a8.energy_pj, 0.03) < 0.15, "8b add energy {}", a8.energy_pj);
+        assert!(rel_diff(a8.area_um2, 36.0) < 0.15, "8b add area {}", a8.area_um2);
+        assert!(rel_diff(a32.energy_pj, 0.10) < 0.15);
+        assert!(rel_diff(a32.area_um2, 137.0) < 0.15);
+    }
+
+    #[test]
+    fn multiplier_hits_anchors() {
+        let m8 = int_multiplier(8);
+        let m32 = int_multiplier(32);
+        assert!(rel_diff(m8.energy_pj, 0.2) < 0.15, "8b mult energy {}", m8.energy_pj);
+        assert!(rel_diff(m8.area_um2, 282.0) < 0.15, "8b mult area {}", m8.area_um2);
+        assert!(rel_diff(m32.energy_pj, 3.1) < 0.15, "32b mult energy {}", m32.energy_pj);
+        assert!(rel_diff(m32.area_um2, 3495.0) < 0.15, "32b mult area {}", m32.area_um2);
+    }
+
+    #[test]
+    fn fp_hits_anchors() {
+        assert!(rel_diff(fp_adder(32).energy_pj, 0.9) < 0.01);
+        assert!(rel_diff(fp_multiplier(32).area_um2, 7700.0) < 0.01);
+        assert!(rel_diff(fp_adder(16).energy_pj, 0.4) < 0.01);
+    }
+
+    #[test]
+    fn shifter_cheaper_than_multiplier() {
+        let shift = barrel_shifter(16, 3);
+        let mult = int_multiplier(16);
+        assert!(shift.area_um2 < mult.area_um2 / 5.0);
+        assert!(shift.energy_pj < mult.energy_pj / 5.0);
+        assert!(shift.delay_ns < mult.delay_ns);
+    }
+
+    #[test]
+    fn asym_multiplier_between_square_sizes() {
+        let asym = int_multiplier_asym(16, 4);
+        let m8 = int_multiplier(8);
+        // geomean(16,4) = 8 → identical to the 8-bit square multiplier.
+        assert!(rel_diff(asym.area_um2, m8.area_um2) < 1e-9);
+    }
+
+    #[test]
+    fn composition_laws() {
+        let a = int_adder(16);
+        let b = register(16);
+        let parallel = a.plus(b);
+        assert!(rel_diff(parallel.area_um2, a.area_um2 + b.area_um2) < 1e-12);
+        assert_eq!(parallel.delay_ns, a.delay_ns.max(b.delay_ns));
+        let series = a.then(b);
+        assert!(rel_diff(series.delay_ns, a.delay_ns + b.delay_ns) < 1e-12);
+        let four = a.times(4);
+        assert!(rel_diff(four.area_um2, 4.0 * a.area_um2) < 1e-12);
+        assert_eq!(four.delay_ns, a.delay_ns);
+    }
+
+    #[test]
+    fn scaling_monotone_in_bits() {
+        for f in [int_adder as fn(u32) -> Component, int_multiplier, register] {
+            let mut last = 0.0;
+            for bits in [4, 8, 16, 32] {
+                let c = f(bits);
+                assert!(c.area_um2 > last);
+                last = c.area_um2;
+            }
+        }
+    }
+
+    #[test]
+    fn leakage_linear_in_area() {
+        let l1 = logic_leakage_mw(&NODE_45NM, 1000.0);
+        let l2 = logic_leakage_mw(&NODE_45NM, 2000.0);
+        assert!(rel_diff(l2, 2.0 * l1) < 1e-12);
+    }
+}

@@ -1,0 +1,184 @@
+//! CACTI-style SRAM / register-file macro model.
+//!
+//! Calibrated to the standard 45 nm datapoints (Horowitz ISSCC'14): a
+//! 64-bit read from 8 KiB ≈ 10 pJ, 32 KiB ≈ 20 pJ, 1 MiB ≈ 100 pJ — i.e.
+//! access energy ∝ word_bits × √capacity. Small arrays (≤ ~1 Kib) are
+//! modeled as flip-flop register files instead, which is what synthesis
+//! does with small scratchpads: lower access energy, higher per-bit area.
+
+use super::{Component, TechNode};
+
+/// Kind of storage macro the "synthesis tool" would infer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacroKind {
+    /// 6T SRAM array with decoder/sense-amp periphery.
+    Sram,
+    /// Flip-flop based register file (small arrays).
+    RegFile,
+}
+
+/// A synthesized storage macro.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SramMacro {
+    pub kind: MacroKind,
+    /// Total capacity in bits.
+    pub capacity_bits: usize,
+    /// Read/write word width in bits.
+    pub word_bits: usize,
+    /// Area (µm²) including periphery.
+    pub area_um2: f64,
+    /// Energy per read access (pJ).
+    pub read_pj: f64,
+    /// Energy per write access (pJ).
+    pub write_pj: f64,
+    /// Access latency (ns).
+    pub access_ns: f64,
+    /// Leakage power (mW).
+    pub leakage_mw: f64,
+}
+
+/// Register-file threshold: arrays at or below this size synthesize to FFs.
+pub const REGFILE_THRESHOLD_BITS: usize = 1024;
+
+const SRAM_CELL_UM2: f64 = 0.525; // 6T cell at 45 nm incl. array overhead
+const SRAM_PERIPHERY_UM2_PER_SQRT_BIT: f64 = 14.0;
+const SRAM_READ_PJ_PER_WORDBIT_SQRTBIT: f64 = 6.1e-4;
+const SRAM_LEAKAGE_MW_PER_BIT: f64 = 2.4e-6; // ≈ 20 mW / MiB
+const REGFILE_UM2_PER_BIT: f64 = 5.2;
+const REGFILE_READ_PJ_PER_BIT: f64 = 0.0021;
+const REGFILE_LEAKAGE_MW_PER_BIT: f64 = 4.0e-6;
+
+/// Build the storage macro a synthesis run would produce for the given
+/// capacity and word width.
+pub fn build(capacity_bits: usize, word_bits: usize) -> SramMacro {
+    assert!(capacity_bits > 0 && word_bits > 0);
+    if capacity_bits <= REGFILE_THRESHOLD_BITS {
+        build_regfile(capacity_bits, word_bits)
+    } else {
+        build_sram(capacity_bits, word_bits)
+    }
+}
+
+/// Force a register-file macro regardless of capacity (Eyeriss-style PE
+/// scratchpads are register files; synthesis maps them to FF arrays).
+pub fn build_regfile(capacity_bits: usize, word_bits: usize) -> SramMacro {
+    assert!(capacity_bits > 0 && word_bits > 0);
+    let read_pj = REGFILE_READ_PJ_PER_BIT * word_bits as f64;
+    SramMacro {
+        kind: MacroKind::RegFile,
+        capacity_bits,
+        word_bits,
+        area_um2: REGFILE_UM2_PER_BIT * capacity_bits as f64,
+        read_pj,
+        write_pj: read_pj * 1.1,
+        access_ns: 0.15,
+        leakage_mw: REGFILE_LEAKAGE_MW_PER_BIT * capacity_bits as f64,
+    }
+}
+
+/// Force an SRAM macro regardless of capacity (global buffers).
+pub fn build_sram(capacity_bits: usize, word_bits: usize) -> SramMacro {
+    assert!(capacity_bits > 0 && word_bits > 0);
+    let bits = capacity_bits as f64;
+    let read_pj = SRAM_READ_PJ_PER_WORDBIT_SQRTBIT * word_bits as f64 * bits.sqrt();
+    SramMacro {
+        kind: MacroKind::Sram,
+        capacity_bits,
+        word_bits,
+        area_um2: SRAM_CELL_UM2 * bits + SRAM_PERIPHERY_UM2_PER_SQRT_BIT * bits.sqrt(),
+        read_pj,
+        write_pj: read_pj * 1.2,
+        access_ns: 0.25 + 0.05 * (bits / 65536.0).max(1.0).log2(),
+        leakage_mw: SRAM_LEAKAGE_MW_PER_BIT * bits,
+    }
+}
+
+impl SramMacro {
+    /// As a [`Component`] for netlist composition (read path; energy is the
+    /// read energy — the synthesis engine accounts writes separately).
+    pub fn as_component(&self) -> Component {
+        Component { area_um2: self.area_um2, energy_pj: self.read_pj, delay_ns: self.access_ns }
+    }
+
+    /// Total leakage at a node (macro model already holds the 45 nm value;
+    /// `node` is accepted for future multi-node support).
+    pub fn leakage_mw(&self, _node: &TechNode) -> f64 {
+        self.leakage_mw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rel_diff;
+
+    const KIB: usize = 8 * 1024;
+
+    #[test]
+    fn calibration_anchors() {
+        // 8 KiB, 64-bit word ≈ 10 pJ/read.
+        let m8k = build(8 * KIB, 64);
+        assert!(rel_diff(m8k.read_pj, 10.0) < 0.10, "8KiB read {}", m8k.read_pj);
+        // 32 KiB ≈ 20 pJ.
+        let m32k = build(32 * KIB, 64);
+        assert!(rel_diff(m32k.read_pj, 20.0) < 0.10, "32KiB read {}", m32k.read_pj);
+        // 1 MiB ≈ 100 pJ (√ scaling gives ~113; within 15%).
+        let m1m = build(1024 * KIB, 64);
+        assert!(rel_diff(m1m.read_pj, 100.0) < 0.15, "1MiB read {}", m1m.read_pj);
+    }
+
+    #[test]
+    fn small_arrays_are_regfiles() {
+        assert_eq!(build(512, 16).kind, MacroKind::RegFile);
+        assert_eq!(build(REGFILE_THRESHOLD_BITS, 16).kind, MacroKind::RegFile);
+        assert_eq!(build(REGFILE_THRESHOLD_BITS + 1, 16).kind, MacroKind::Sram);
+    }
+
+    #[test]
+    fn regfile_access_cheaper_but_area_denser_per_bit() {
+        let rf = build(1024, 16);
+        let sram = build(64 * KIB, 16);
+        assert!(rf.read_pj < sram.read_pj);
+        let rf_area_per_bit = rf.area_um2 / rf.capacity_bits as f64;
+        let sram_area_per_bit = sram.area_um2 / sram.capacity_bits as f64;
+        assert!(rf_area_per_bit > sram_area_per_bit);
+    }
+
+    #[test]
+    fn energy_scales_with_sqrt_capacity() {
+        let a = build(16 * KIB, 64);
+        let b = build(64 * KIB, 64);
+        assert!(rel_diff(b.read_pj / a.read_pj, 2.0) < 0.05);
+    }
+
+    #[test]
+    fn energy_linear_in_word_width() {
+        let narrow = build(64 * KIB, 32);
+        let wide = build(64 * KIB, 128);
+        assert!(rel_diff(wide.read_pj / narrow.read_pj, 4.0) < 0.05);
+    }
+
+    #[test]
+    fn writes_cost_more_than_reads() {
+        for m in [build(512, 16), build(64 * KIB, 64)] {
+            assert!(m.write_pj > m.read_pj);
+        }
+    }
+
+    #[test]
+    fn leakage_proportional_to_capacity() {
+        let a = build(8 * KIB, 64);
+        let b = build(16 * KIB, 64);
+        assert!(rel_diff(b.leakage_mw / a.leakage_mw, 2.0) < 0.05);
+    }
+
+    #[test]
+    fn area_monotone_in_capacity() {
+        let mut last = 0.0;
+        for kib in [1, 2, 8, 64, 256, 1024] {
+            let m = build(kib * KIB, 64);
+            assert!(m.area_um2 > last);
+            last = m.area_um2;
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Declarative command-line parser (offline substitute for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--opt value` / `--opt=value`, defaults,
+//! required options, and generated `--help` text. Used by the `qadam` binary
+//! and the example drivers.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Argument parsing error (also carries generated help output).
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    required: bool,
+    is_flag: bool,
+}
+
+/// A command (or subcommand) description.
+#[derive(Debug, Clone)]
+pub struct Command {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    subs: Vec<Command>,
+}
+
+/// Parse result: matched subcommand path and option values.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    /// Subcommand chain, e.g. `["qadam", "dse"]`.
+    pub path: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    /// Positional arguments left over after options.
+    pub positional: Vec<String>,
+}
+
+impl Matches {
+    /// The matched leaf subcommand name (empty for the root).
+    pub fn subcommand(&self) -> &str {
+        self.path.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// String value of an option (set or default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Required string value; panics with a clear message if missing
+    /// (parser guarantees presence for `required` options).
+    pub fn get_str(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("option --{name} missing (declare a default?)"))
+    }
+
+    /// Parsed numeric value of an option.
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get_str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("option --{name} is not a number"))
+    }
+
+    /// Parsed integer value of an option.
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get_str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("option --{name} is not an integer"))
+    }
+
+    /// Whether a boolean flag was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+impl Command {
+    /// New command with a one-line description.
+    pub fn new(name: &str, about: &str) -> Self {
+        Self { name: name.into(), about: about.into(), opts: Vec::new(), subs: Vec::new() }
+    }
+
+    /// Add an option taking a value, with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            required: false,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Add a required option taking a value.
+    pub fn opt_required(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            required: true,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Add a boolean flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            required: false,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Add a subcommand.
+    pub fn sub(mut self, sub: Command) -> Self {
+        self.subs.push(sub);
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} ", self.name, self.about, self.name);
+        if !self.subs.is_empty() {
+            out.push_str("<SUBCOMMAND> ");
+        }
+        out.push_str("[OPTIONS]\n");
+        if !self.subs.is_empty() {
+            out.push_str("\nSUBCOMMANDS:\n");
+            for sub in &self.subs {
+                out.push_str(&format!("  {:<14} {}\n", sub.name, sub.about));
+            }
+        }
+        if !self.opts.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for opt in &self.opts {
+                let left = if opt.is_flag {
+                    format!("--{}", opt.name)
+                } else if let Some(d) = &opt.default {
+                    format!("--{} <v={}>", opt.name, d)
+                } else {
+                    format!("--{} <v> (required)", opt.name)
+                };
+                out.push_str(&format!("  {left:<28} {}\n", opt.help));
+            }
+        }
+        out
+    }
+
+    /// Parse an argument list (excluding `argv[0]`).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut matches = Matches {
+            path: vec![self.name.clone()],
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        };
+        self.parse_into(args, &mut matches)?;
+        Ok(matches)
+    }
+
+    /// Parse `std::env::args()`, printing help/errors and exiting as needed.
+    pub fn parse_or_exit(&self) -> Matches {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&args) {
+            Ok(m) => m,
+            Err(e) => {
+                if e.0 == "help" {
+                    println!("{}", self.help());
+                    std::process::exit(0);
+                }
+                eprintln!("error: {e}\n\n{}", self.help());
+                std::process::exit(2);
+            }
+        }
+    }
+
+    fn parse_into(&self, args: &[String], matches: &mut Matches) -> Result<(), CliError> {
+        // Seed defaults for this command level.
+        for opt in &self.opts {
+            if let Some(default) = &opt.default {
+                matches.values.insert(opt.name.clone(), default.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError("help".into()));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_value) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                if spec.is_flag {
+                    matches.flags.insert(name.to_string(), true);
+                } else {
+                    let value = match inline_value {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    matches.values.insert(name.to_string(), value);
+                }
+            } else if let Some(sub) = self.subs.iter().find(|s| s.name == *arg) {
+                matches.path.push(sub.name.clone());
+                return sub.parse_into(&args[i + 1..], matches);
+            } else {
+                matches.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        for opt in &self.opts {
+            if opt.required && !matches.values.contains_key(&opt.name) {
+                return Err(CliError(format!("missing required option --{}", opt.name)));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("qadam", "test")
+            .opt("seed", "42", "rng seed")
+            .flag("verbose", "chatty")
+            .sub(
+                Command::new("dse", "run dse")
+                    .opt("model", "resnet20", "dnn model")
+                    .opt_required("dataset", "dataset name"),
+            )
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(m.get_str("seed"), "42");
+        assert!(!m.flag("verbose"));
+        assert_eq!(m.subcommand(), "qadam");
+    }
+
+    #[test]
+    fn subcommand_and_values() {
+        let m = cmd()
+            .parse(&argv(&["dse", "--dataset", "cifar10", "--model=vgg16"]))
+            .unwrap();
+        assert_eq!(m.subcommand(), "dse");
+        assert_eq!(m.get_str("dataset"), "cifar10");
+        assert_eq!(m.get_str("model"), "vgg16");
+    }
+
+    #[test]
+    fn required_enforced() {
+        assert!(cmd().parse(&argv(&["dse"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn flags_and_numbers() {
+        let m = cmd().parse(&argv(&["--verbose", "--seed", "7"])).unwrap();
+        assert!(m.flag("verbose"));
+        assert_eq!(m.get_usize("seed"), 7);
+        assert_eq!(m.get_f64("seed"), 7.0);
+    }
+
+    #[test]
+    fn positional_collected() {
+        let m = cmd().parse(&argv(&["extra1", "extra2"])).unwrap();
+        assert_eq!(m.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn help_mentions_subcommands_and_options() {
+        let help = cmd().help();
+        assert!(help.contains("dse"));
+        assert!(help.contains("--seed"));
+    }
+}

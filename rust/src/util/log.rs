@@ -1,0 +1,133 @@
+//! Leveled stderr logger with wall-clock offsets.
+//!
+//! Level is process-global and settable from the CLI (`--log-level`) or the
+//! `QADAM_LOG` environment variable (error|warn|info|debug|trace).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Severity levels, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    /// Parse a level name (case-insensitive); `None` for unknown names.
+    pub fn parse(text: &str) -> Option<Level> {
+        match text.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the process-global maximum level.
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Initialize from `QADAM_LOG` if set.
+pub fn init_from_env() {
+    if let Ok(text) = std::env::var("QADAM_LOG") {
+        if let Some(level) = Level::parse(&text) {
+            set_level(level);
+        }
+    }
+}
+
+/// Whether `level` is currently enabled.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+fn start_instant() -> Instant {
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Log a preformatted message at `level` (prefer the macros).
+pub fn log(level: Level, module: &str, message: &str) {
+    if enabled(level) {
+        let elapsed = start_instant().elapsed();
+        eprintln!(
+            "[{:>9.3}s {} {}] {}",
+            elapsed.as_secs_f64(),
+            level.tag(),
+            module,
+            message
+        );
+    }
+}
+
+/// Log at INFO.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, module_path!(), &format!($($arg)*))
+    };
+}
+
+/// Log at WARN.
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), &format!($($arg)*))
+    };
+}
+
+/// Log at DEBUG.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn ordering_is_sane() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info < Level::Debug);
+    }
+}

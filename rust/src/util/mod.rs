@@ -1,0 +1,79 @@
+//! Offline-substitute utility substrates.
+//!
+//! The build environment has no crates.io access beyond the vendored `xla`
+//! dependency closure, so the conventional ecosystem crates are replaced by
+//! small, tested, from-scratch implementations (see DESIGN.md §1):
+//!
+//! * [`rng`]   — PCG64 pseudo-random generator + distributions (for `rand`)
+//! * [`stats`] — descriptive statistics and summaries
+//! * [`json`]  — JSON parser/writer (for `serde_json`)
+//! * [`cli`]   — declarative command-line parser (for `clap`)
+//! * [`prop`]  — property-testing mini-framework with shrinking (for `proptest`)
+//! * [`table`] — aligned ASCII table and scatter-plot rendering
+//! * [`log`]   — leveled stderr logger
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod cli;
+pub mod prop;
+pub mod table;
+pub mod log;
+
+/// Round `x` up to the next multiple of `m` (`m > 0`).
+pub fn ceil_to(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Ceiling division for `usize`.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Linear interpolation between `a` and `b` at parameter `t ∈ [0, 1]`.
+pub fn lerp(a: f64, b: f64, t: f64) -> f64 {
+    a + (b - a) * t
+}
+
+/// Relative difference `|a - b| / max(|a|, |b|, eps)` — symmetric, safe at 0.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    let denom = a.abs().max(b.abs()).max(1e-30);
+    (a - b).abs() / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_to_rounds_up() {
+        assert_eq!(ceil_to(0, 4), 0);
+        assert_eq!(ceil_to(1, 4), 4);
+        assert_eq!(ceil_to(4, 4), 4);
+        assert_eq!(ceil_to(5, 4), 8);
+    }
+
+    #[test]
+    fn ceil_div_matches_manual() {
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(3, 3), 1);
+        assert_eq!(ceil_div(7, 3), 3);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        assert_eq!(lerp(2.0, 10.0, 0.0), 2.0);
+        assert_eq!(lerp(2.0, 10.0, 1.0), 10.0);
+        assert_eq!(lerp(2.0, 10.0, 0.5), 6.0);
+    }
+
+    #[test]
+    fn rel_diff_symmetric_and_zero_safe() {
+        assert_eq!(rel_diff(0.0, 0.0), 0.0);
+        assert!((rel_diff(1.0, 2.0) - 0.5).abs() < 1e-12);
+        assert_eq!(rel_diff(3.0, 4.0), rel_diff(4.0, 3.0));
+    }
+}

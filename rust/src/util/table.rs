@@ -1,0 +1,239 @@
+//! Aligned ASCII tables and terminal scatter plots.
+//!
+//! Every figure-regeneration bench prints both a CSV block (machine
+//! readable, diffable against the paper's series) and a terminal rendering
+//! through this module.
+
+/// Column-aligned ASCII table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Table with the given column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Append a row of formatted f64 cells after a label.
+    pub fn row_labeled(&mut self, label: &str, values: &[f64]) -> &mut Self {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|v| format_sig(*v, 4)));
+        self.row(&cells)
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with aligned columns and a separator under the header.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<width$}", cells[i], width = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (no quoting needed for our numeric content).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format with `sig` significant digits (plain notation for sane ranges).
+pub fn format_sig(value: f64, sig: usize) -> String {
+    if value == 0.0 {
+        return "0".to_string();
+    }
+    if !value.is_finite() {
+        return format!("{value}");
+    }
+    let magnitude = value.abs().log10().floor() as i32;
+    if !(-4..=9).contains(&magnitude) {
+        return format!("{value:.*e}", sig.saturating_sub(1));
+    }
+    let decimals = (sig as i32 - 1 - magnitude).max(0) as usize;
+    format!("{value:.decimals$}")
+}
+
+/// One named series of (x, y) points for a scatter plot.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub marker: char,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render a multi-series scatter plot on a character grid, with axis labels
+/// and an optional log-log transform — enough to eyeball the paper's
+/// figures in a terminal.
+pub fn scatter(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+    loglog: bool,
+) -> String {
+    let tf = |v: f64| if loglog { v.max(1e-12).log10() } else { v };
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|&(x, y)| (tf(x), tf(y))))
+        .collect();
+    if all.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 - x0 < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if y1 - y0 < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for &(px, py) in &s.points {
+            let (px, py) = (tf(px), tf(py));
+            let col = (((px - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let row = (((py - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - row.min(height - 1);
+            grid[row][col.min(width - 1)] = s.marker;
+        }
+    }
+    let mut out = format!("{title}\n");
+    let legend: Vec<String> =
+        series.iter().map(|s| format!("{}={}", s.marker, s.name)).collect();
+    out.push_str(&format!("  [{}]{}\n", legend.join(" "), if loglog { " (log-log)" } else { "" }));
+    for (i, row) in grid.iter().enumerate() {
+        let ylab = if i == 0 {
+            format_sig(if loglog { 10f64.powf(y1) } else { y1 }, 3)
+        } else if i == height - 1 {
+            format_sig(if loglog { 10f64.powf(y0) } else { y0 }, 3)
+        } else {
+            String::new()
+        };
+        out.push_str(&format!("{ylab:>9} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{:>9} +{}+\n{:>9}  {:<w$}{}\n",
+        "",
+        "-".repeat(width),
+        "",
+        format_sig(if loglog { 10f64.powf(x0) } else { x0 }, 3),
+        format_sig(if loglog { 10f64.powf(x1) } else { x1 }, 3),
+        w = width.saturating_sub(8),
+    ));
+    out.push_str(&format!("{:>9}  x: {xlabel}   y: {ylabel}\n", ""));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let text = t.render();
+        assert!(text.contains("name"));
+        assert!(text.lines().count() >= 4);
+        // All rendered rows same width or less than header+sep line.
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[1].starts_with('-'));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_checks_arity() {
+        Table::new(&["a", "b"]).row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new(&["x", "y"]);
+        t.row_labeled("1.5", &[2.5]);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("x,y\n"));
+    }
+
+    #[test]
+    fn format_sig_ranges() {
+        assert_eq!(format_sig(0.0, 3), "0");
+        assert_eq!(format_sig(1234.0, 4), "1234");
+        assert_eq!(format_sig(0.001234, 3), "0.00123");
+        assert!(format_sig(1.0e12, 3).contains('e'));
+    }
+
+    #[test]
+    fn scatter_contains_markers_and_legend() {
+        let s = vec![
+            Series { name: "a".into(), marker: '*', points: vec![(1.0, 1.0), (2.0, 4.0)] },
+            Series { name: "b".into(), marker: 'o', points: vec![(3.0, 2.0)] },
+        ];
+        let plot = scatter("demo", "x", "y", &s, 40, 10, false);
+        assert!(plot.contains('*'));
+        assert!(plot.contains('o'));
+        assert!(plot.contains("*=a"));
+    }
+
+    #[test]
+    fn scatter_empty_is_graceful() {
+        let plot = scatter("none", "x", "y", &[], 10, 5, true);
+        assert!(plot.contains("no data"));
+    }
+}

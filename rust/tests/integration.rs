@@ -1,0 +1,171 @@
+//! Cross-module integration tests: the full modeling pipeline
+//! (synth → dataflow → energy → dse → report) plus RTL/simulator
+//! consistency — everything except the PJRT runtime (see runtime_e2e.rs).
+
+use qadam::arch::{AcceleratorConfig, SweepSpec};
+use qadam::coordinator::Coordinator;
+use qadam::dataflow::{map_model, Dataflow};
+use qadam::dnn::{model_for, models_for, Dataset, ModelKind};
+use qadam::dse;
+use qadam::energy::energy_of;
+use qadam::ppa::PpaModel;
+use qadam::quant::PeType;
+use qadam::report;
+use qadam::rtl;
+use qadam::sim;
+use qadam::synth::{synthesize, synthesize_sweep};
+use qadam::util::rng::Pcg64;
+
+#[test]
+fn full_pipeline_for_every_model_and_pe() {
+    // Every (paper model × PE type) must flow through the whole pipeline
+    // and produce finite, positive metrics.
+    for dataset in Dataset::ALL {
+        for model in models_for(dataset) {
+            for pe in PeType::ALL {
+                let config = AcceleratorConfig { pe, ..Default::default() };
+                let synth = synthesize(&config, 3);
+                let mapping = map_model(&model, &config, Dataflow::RowStationary);
+                let energy = energy_of(&mapping, &synth);
+                assert!(mapping.total_cycles > 0, "{} {pe}", model.name);
+                assert!(mapping.avg_utilization > 0.0 && mapping.avg_utilization <= 1.0);
+                assert!(energy.chip_uj().is_finite() && energy.chip_uj() > 0.0);
+                assert!(energy.dram_uj > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn paper_headline_shape_holds_everywhere() {
+    // The paper's central ordering must hold for every (model, dataset)
+    // panel: LightPE-1 ≥ LightPE-2 > INT16 > FP32 on both axes.
+    let coordinator = Coordinator::new(2, 7);
+    for dataset in [Dataset::Cifar10, Dataset::ImageNet] {
+        let db = coordinator.campaign(&SweepSpec::default(), dataset);
+        for space in &db.spaces {
+            let ratios = dse::headline_ratios(&space.evals);
+            let get = |pe: PeType| {
+                ratios
+                    .iter()
+                    .find(|(p, _, _)| *p == pe)
+                    .map(|(_, a, b)| (*a, *b))
+                    .unwrap()
+            };
+            let (l1_ppa, l1_energy) = get(PeType::LightPe1);
+            let (l2_ppa, l2_energy) = get(PeType::LightPe2);
+            let (fp_ppa, fp_energy) = get(PeType::Fp32);
+            assert!(l1_ppa >= l2_ppa, "{}: L1 {l1_ppa} < L2 {l2_ppa}", space.model_name);
+            assert!(l2_ppa > 1.0, "{}: LightPE-2 must beat INT16", space.model_name);
+            assert!(fp_ppa < 1.0, "{}: FP32 must lose to INT16", space.model_name);
+            assert!(l1_energy >= l2_energy && l2_energy > 1.0 && fp_energy < 1.0);
+        }
+    }
+}
+
+#[test]
+fn surrogate_agrees_with_synthesis_out_of_sample() {
+    // Fit on the default sweep, predict a config *outside* it.
+    let dataset = synthesize_sweep(&SweepSpec::default(), PeType::Int16, 5);
+    let model = PpaModel::fit(&dataset, 5, 5);
+    let unseen = AcceleratorConfig {
+        pe: PeType::Int16,
+        rows: 20,
+        cols: 20,
+        glb_kib: 192,
+        ..Default::default()
+    };
+    let actual = synthesize(&unseen, 5);
+    let (area, power, perf) = model.predict(&unseen);
+    assert!(qadam::util::rel_diff(area, actual.area.total_mm2()) < 0.25, "area {area} vs {}", actual.area.total_mm2());
+    assert!(qadam::util::rel_diff(power, actual.total_power_mw()) < 0.35, "power {power} vs {}", actual.total_power_mw());
+    assert!(qadam::util::rel_diff(perf, actual.max_clock_ghz) < 0.25, "perf {perf} vs {}", actual.max_clock_ghz);
+}
+
+#[test]
+fn simulator_validates_mapper_on_odd_shapes() {
+    // Mapper's compute-cycle model vs the cycle-level simulator across
+    // awkward layer shapes (stride-2, 1×1 kernels, narrow arrays).
+    let shapes = [
+        qadam::dnn::Layer::conv("s2", 9, 2, 5, 3, 2, 1),
+        qadam::dnn::Layer::conv("k1", 7, 4, 6, 1, 1, 0),
+        qadam::dnn::Layer::conv("deep", 5, 8, 4, 3, 1, 1),
+    ];
+    let config = AcceleratorConfig { rows: 5, cols: 7, ..Default::default() };
+    let mut rng = Pcg64::new(17);
+    for layer in &shapes {
+        let ifmap: Vec<f64> = (0..layer.ifmap_elems()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let weights: Vec<f64> = (0..layer.weights()).map(|_| rng.uniform(-0.5, 0.5)).collect();
+        let sim_result = sim::simulate_layer(layer, &config, &ifmap, &weights);
+        assert!(sim_result.verified, "{}: sim diverged", layer.name);
+        let mapped = qadam::dataflow::map_layer_rs(layer, &config);
+        let ratio = sim_result.cycles as f64 / mapped.compute_cycles as f64;
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "{}: sim {} vs mapper {}",
+            layer.name,
+            sim_result.cycles,
+            mapped.compute_cycles
+        );
+    }
+}
+
+#[test]
+fn rtl_generated_for_every_sweep_point_is_wellformed() {
+    for config in SweepSpec::tiny().enumerate() {
+        let bundle = rtl::generate(&config);
+        assert_eq!(bundle.files.len(), 5);
+        for file in &bundle.files {
+            assert_eq!(
+                file.count_token("module"),
+                file.count_token("endmodule"),
+                "{} in {}",
+                file.name,
+                config.id()
+            );
+        }
+    }
+}
+
+#[test]
+fn figures_2_through_6_generate() {
+    // Smoke the full report layer (small worker count to keep CI fast).
+    let fig2 = report::fig2(2, 7);
+    assert!(!fig2.table.is_empty());
+    let fig3 = report::fig3(7);
+    assert_eq!(fig3.table.len(), 12); // 4 PE types × 3 metrics
+    let fig4 = report::fig4(Dataset::Cifar10, 2, 7);
+    assert_eq!(fig4.table.len(), 12); // 3 models × 4 PE types
+    let fig5 = report::fig5(Dataset::Cifar100, 2, 7);
+    assert_eq!(fig5.table.len(), 12);
+    let fig6 = report::fig6(Dataset::Cifar10, 2, 7);
+    assert_eq!(fig6.table.len(), 12);
+}
+
+#[test]
+fn accuracy_registry_joins_with_dse() {
+    // The Fig. 5 join: every CIFAR model × PE type must have both an
+    // accuracy entry and a best-config evaluation.
+    let db = Coordinator::new(2, 7).campaign(&SweepSpec::tiny(), Dataset::Cifar10);
+    for space in &db.spaces {
+        let kind = ModelKind::parse(&space.model_name).unwrap();
+        for pe in [PeType::Int16, PeType::LightPe1] {
+            assert!(qadam::accuracy::registry(kind, Dataset::Cifar10, pe).is_some());
+            assert!(dse::best_perf_per_area(&space.evals, pe).is_some());
+        }
+    }
+}
+
+#[test]
+fn energy_breakdown_consistent_with_totals() {
+    let config = AcceleratorConfig::default();
+    let model = model_for(ModelKind::Vgg16, Dataset::Cifar10);
+    let synth = synthesize(&config, 11);
+    let mapping = map_model(&model, &config, Dataflow::RowStationary);
+    let energy = energy_of(&mapping, &synth);
+    assert!((energy.chip_uj() + energy.dram_uj - energy.total_uj()).abs() < 1e-9);
+    // DSE evaluation must agree with the direct pipeline.
+    let eval = dse::evaluate_with_synth(&synth, &model);
+    assert!((eval.energy_uj - energy.chip_uj()).abs() < 1e-9);
+    assert!((eval.dram_energy_uj - energy.dram_uj).abs() < 1e-9);
+}

@@ -1,0 +1,262 @@
+//! Property-based tests over the framework's invariants, using the
+//! in-repo shrinking property-test harness (`qadam::util::prop`).
+//!
+//! Covered invariants:
+//! * quantizers: bounded error, idempotence, monotone-in-bits accuracy;
+//! * mapper: utilization ∈ (0, 1], cycles ≥ ideal, traffic conservation,
+//!   monotone responses to array/scratchpad/bandwidth knobs;
+//! * synthesis: positivity, monotone area in every size knob;
+//! * Pareto: front members are mutually non-dominating and dominate the
+//!   rest; normalization keeps the baseline at 1.0;
+//! * regression: prediction exactness on polynomial ground truth.
+
+use qadam::arch::{AcceleratorConfig, ScratchpadCfg};
+use qadam::dataflow::map_layer_rs;
+use qadam::dnn::Layer;
+use qadam::dse::{dominates, pareto_front, Orientation};
+use qadam::quant::{AffineQuantizer, PeType, Po2Quantizer};
+use qadam::synth::synthesize_clean;
+use qadam::util::prop::{check, check_with, f64_in, pair, usize_in, vec_of, Config};
+use qadam::util::rng::Pcg64;
+
+// ---------------------------------------------------------------- quantizers
+
+#[test]
+fn prop_affine_error_within_half_step() {
+    let gen = pair(usize_in(3, 16), f64_in(-8.0, 8.0));
+    check(&gen, |&(bits, x)| {
+        let q = AffineQuantizer::with_scale(bits as u32, 0.05);
+        let err = (q.fake_quantize(x) - x).abs();
+        // Inside the representable range, error ≤ half a step.
+        let limit = q.scale * q.qmax() as f64;
+        if x.abs() <= limit {
+            err <= q.scale / 2.0 + 1e-12
+        } else {
+            // Saturation: error bounded by the overshoot.
+            (q.fake_quantize(x).abs() - limit).abs() < 1e-9
+        }
+    });
+}
+
+#[test]
+fn prop_affine_idempotent() {
+    let gen = f64_in(-4.0, 4.0);
+    check(&gen, |&x| {
+        let q = AffineQuantizer::with_scale(8, 0.03);
+        let once = q.fake_quantize(x);
+        (q.fake_quantize(once) - once).abs() < 1e-12
+    });
+}
+
+#[test]
+fn prop_po2_representable_and_idempotent() {
+    let gen = vec_of(f64_in(-2.0, 2.0), 2, 32);
+    check(&gen, |weights| {
+        let max_abs = weights.iter().fold(0.0f64, |m, &w| m.max(w.abs()));
+        if max_abs < 1e-9 {
+            return true;
+        }
+        for pe in [PeType::LightPe1, PeType::LightPe2] {
+            let q = Po2Quantizer::calibrate(pe, weights);
+            for &w in weights {
+                let (v, _) = q.quantize(w);
+                let (v2, _) = q.quantize(v);
+                if (v - v2).abs() > 1e-12 {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_lightpe2_never_worse_than_lightpe1() {
+    let gen = vec_of(f64_in(-2.0, 2.0), 2, 24);
+    check(&gen, |weights| {
+        let max_abs = weights.iter().fold(0.0f64, |m, &w| m.max(w.abs()));
+        if max_abs < 1e-9 {
+            return true;
+        }
+        let q1 = Po2Quantizer::calibrate(PeType::LightPe1, weights);
+        let q2 = Po2Quantizer::calibrate(PeType::LightPe2, weights);
+        let err = |q: &Po2Quantizer| -> f64 {
+            weights.iter().map(|&w| (q.fake_quantize(w) - w).abs()).sum()
+        };
+        err(&q2) <= err(&q1) + 1e-9
+    });
+}
+
+// -------------------------------------------------------------------- mapper
+
+fn random_layer(seed: &(usize, usize, usize, usize)) -> Layer {
+    let &(hw, in_c, out_c, kernel) = seed;
+    let kernel = kernel.min(hw); // keep geometry valid
+    Layer::conv("prop", hw, in_c, out_c, kernel, 1, kernel / 2)
+}
+
+#[test]
+fn prop_mapper_invariants() {
+    let gen = pair(
+        pair(usize_in(4, 64), usize_in(1, 64)),
+        pair(usize_in(1, 128), usize_in(1, 5)),
+    );
+    check_with(&Config { cases: 128, ..Default::default() }, &gen, |&((hw, in_c), (out_c, k))| {
+        let layer = random_layer(&(hw, in_c, out_c, k));
+        let config = AcceleratorConfig::default();
+        let mapping = map_layer_rs(&layer, &config);
+        let ideal = layer.macs().div_ceil(config.num_pes() as u64);
+        mapping.utilization > 0.0
+            && mapping.utilization <= 1.0 + 1e-12
+            && mapping.cycles >= ideal
+            && mapping.cycles >= mapping.compute_cycles.min(mapping.cycles)
+            && mapping.traffic.spad.reads >= 3 * mapping.macs
+            && mapping.traffic.glb.reads >= mapping.traffic.glb_weight_reads
+            && mapping.traffic.dram_bytes > 0
+    });
+}
+
+#[test]
+fn prop_bigger_array_never_slower() {
+    let gen = pair(usize_in(8, 48), usize_in(8, 128));
+    check_with(&Config { cases: 64, ..Default::default() }, &gen, |&(hw, out_c)| {
+        let layer = Layer::conv("p", hw, 16, out_c, 3, 1, 1);
+        let small = AcceleratorConfig { rows: 8, cols: 8, ..Default::default() };
+        let big = AcceleratorConfig { rows: 32, cols: 32, ..Default::default() };
+        map_layer_rs(&layer, &big).compute_cycles <= map_layer_rs(&layer, &small).compute_cycles
+    });
+}
+
+#[test]
+fn prop_more_bandwidth_never_slower() {
+    let gen = pair(usize_in(8, 56), usize_in(8, 256));
+    check_with(&Config { cases: 64, ..Default::default() }, &gen, |&(hw, channels)| {
+        let layer = Layer::conv("p", hw, channels, channels, 3, 1, 1);
+        let slow = AcceleratorConfig { dram_bw_gbps: 4.0, ..Default::default() };
+        let fast = AcceleratorConfig { dram_bw_gbps: 64.0, ..Default::default() };
+        map_layer_rs(&layer, &fast).cycles <= map_layer_rs(&layer, &slow).cycles
+    });
+}
+
+#[test]
+fn prop_bigger_spads_never_more_glb_traffic() {
+    let gen = pair(usize_in(8, 48), usize_in(8, 128));
+    check_with(&Config { cases: 64, ..Default::default() }, &gen, |&(hw, out_c)| {
+        let layer = Layer::conv("p", hw, 32, out_c, 3, 1, 1);
+        let small = AcceleratorConfig {
+            spad: ScratchpadCfg { ifmap_entries: 6, filter_entries: 28, psum_entries: 8 },
+            ..Default::default()
+        };
+        let big = AcceleratorConfig {
+            spad: ScratchpadCfg { ifmap_entries: 24, filter_entries: 448, psum_entries: 32 },
+            ..Default::default()
+        };
+        map_layer_rs(&layer, &big).traffic.glb.reads
+            <= map_layer_rs(&layer, &small).traffic.glb.reads
+    });
+}
+
+// ----------------------------------------------------------------- synthesis
+
+#[test]
+fn prop_synthesis_monotone_in_size_knobs() {
+    let gen = pair(pair(usize_in(4, 32), usize_in(4, 32)), usize_in(64, 512));
+    check_with(&Config { cases: 48, ..Default::default() }, &gen, |&((rows, cols), glb)| {
+        let base = AcceleratorConfig { rows, cols, glb_kib: glb, ..Default::default() };
+        let bigger_array =
+            AcceleratorConfig { rows: rows + 4, ..base.clone() };
+        let bigger_glb = AcceleratorConfig { glb_kib: glb + 64, ..base.clone() };
+        let area = |c: &AcceleratorConfig| synthesize_clean(c).area.total_um2();
+        area(&bigger_array) > area(&base) && area(&bigger_glb) > area(&base)
+    });
+}
+
+#[test]
+fn prop_synthesis_positive_everywhere() {
+    let gen = pair(pair(usize_in(1, 64), usize_in(1, 64)), usize_in(1, 1024));
+    check_with(&Config { cases: 64, ..Default::default() }, &gen, |&((rows, cols), glb)| {
+        let config = AcceleratorConfig { rows, cols, glb_kib: glb, ..Default::default() };
+        let report = synthesize_clean(&config);
+        report.area.total_um2() > 0.0
+            && report.dynamic_power_mw > 0.0
+            && report.leakage_power_mw > 0.0
+            && report.max_clock_ghz > 0.0
+    });
+}
+
+// -------------------------------------------------------------------- pareto
+
+#[test]
+fn prop_pareto_front_mutually_nondominating() {
+    let gen = vec_of(pair(f64_in(0.0, 10.0), f64_in(0.0, 10.0)), 1, 40);
+    let orientations = [Orientation::Maximize, Orientation::Minimize];
+    check(&gen, |points| {
+        let coords: Vec<Vec<f64>> = points.iter().map(|&(x, y)| vec![x, y]).collect();
+        let front = pareto_front(&coords, &orientations);
+        if front.is_empty() {
+            return false; // non-empty input must yield a non-empty front
+        }
+        // No front member dominates another.
+        for &i in &front {
+            for &j in &front {
+                if i != j && dominates(&coords[i], &coords[j], &orientations) {
+                    return false;
+                }
+            }
+        }
+        // Every non-front point is dominated by some front member.
+        for idx in 0..coords.len() {
+            if !front.contains(&idx)
+                && !front.iter().any(|&f| dominates(&coords[f], &coords[idx], &orientations))
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+// ---------------------------------------------------------------- regression
+
+#[test]
+fn prop_regression_exact_on_linear_ground_truth() {
+    // For random linear data, a degree-1 fit must reproduce targets.
+    let gen = usize_in(1, 10_000);
+    check_with(&Config { cases: 32, ..Default::default() }, &gen, |&seed| {
+        let mut rng = Pcg64::new(seed as u64);
+        let xs: Vec<Vec<f64>> =
+            (0..30).map(|_| vec![rng.uniform(0.0, 5.0), rng.uniform(0.0, 5.0)]).collect();
+        let (a, b, c) = (rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0));
+        let ys: Vec<f64> = xs.iter().map(|x| a + b * x[0] + c * x[1]).collect();
+        let model = qadam::ppa::PolyModel::fit(&xs, &ys, 1, 1e-10);
+        xs.iter().zip(&ys).all(|(x, &y)| (model.predict(x) - y).abs() < 1e-6)
+    });
+}
+
+// --------------------------------------------------------- failure injection
+
+#[test]
+fn prop_config_validation_rejects_degenerate() {
+    let gen = usize_in(0, 3);
+    check(&gen, |&which| {
+        let mut config = AcceleratorConfig::default();
+        match which {
+            0 => config.rows = 0,
+            1 => config.glb_kib = 0,
+            2 => config.spad.psum_entries = 0,
+            _ => config.dram_bw_gbps = 0.0,
+        }
+        config.validate().is_err()
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_configs() {
+    let gen = pair(pair(usize_in(1, 64), usize_in(1, 64)), usize_in(1, 512));
+    check(&gen, |&((rows, cols), glb)| {
+        let config = AcceleratorConfig { rows, cols, glb_kib: glb, ..Default::default() };
+        let json = config.to_json().to_string_pretty();
+        let parsed = qadam::util::json::Json::parse(&json).unwrap();
+        AcceleratorConfig::from_json(&parsed).unwrap() == config
+    });
+}

@@ -1,0 +1,109 @@
+//! End-to-end runtime tests: load the AOT artifacts (built by
+//! `make artifacts`) into the PJRT CPU client and execute them from rust.
+//! Skipped gracefully when artifacts are missing.
+
+use std::path::{Path, PathBuf};
+
+use qadam::quant::PeType;
+use qadam::runtime::{QatDriver, Runtime, Tensor};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping runtime e2e: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn kernel_smoke_executes_and_matches_quantized_matmul() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut runtime = Runtime::new(&dir).unwrap();
+    // Deterministic inputs; golden computed with the rust quantizers.
+    let m = 32;
+    let k = 27;
+    let n = 8;
+    let mut rng = qadam::util::rng::Pcg64::new(11);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.uniform(-0.4, 0.4) as f32).collect();
+    let outputs = runtime
+        .execute(
+            "kernel_smoke",
+            &[Tensor::f32(&[m, k], x.clone()), Tensor::f32(&[k, n], w.clone())],
+        )
+        .unwrap();
+    assert_eq!(outputs.len(), 1);
+    assert_eq!(outputs[0].shape(), &[m, n]);
+
+    // Golden: INT16 fake-quant matmul with the rust quantizer semantics.
+    let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let wf: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+    let aq = qadam::quant::AffineQuantizer::calibrate(16, &xf);
+    let wq = qadam::quant::AffineQuantizer::calibrate(16, &wf);
+    let got = outputs[0].as_f32().unwrap();
+    for row in 0..m {
+        for col in 0..n {
+            let mut acc = 0.0f64;
+            for inner in 0..k {
+                acc += aq.fake_quantize(xf[row * k + inner])
+                    * wq.fake_quantize(wf[inner * n + col]);
+            }
+            let err = (acc - got[row * n + col] as f64).abs();
+            assert!(err < 2e-3, "({row},{col}): rust {acc} vs xla {}", got[row * n + col]);
+        }
+    }
+}
+
+#[test]
+fn init_artifact_produces_param_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut runtime = Runtime::new(&dir).unwrap();
+    let params = runtime.execute("init", &[]).unwrap();
+    assert_eq!(params.len(), runtime.manifest.param_order.len());
+    // conv1 must be 3x3x3x8 per the manifest's model constants.
+    assert_eq!(params[0].shape(), &[3, 3, 3, 8]);
+}
+
+#[test]
+fn batch_artifact_deterministic_per_seed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut runtime = Runtime::new(&dir).unwrap();
+    let a = runtime.execute("batch", &[Tensor::i32(&[1], vec![3])]).unwrap();
+    let b = runtime.execute("batch", &[Tensor::i32(&[1], vec![3])]).unwrap();
+    assert_eq!(a[0], b[0]);
+    let c = runtime.execute("batch", &[Tensor::i32(&[1], vec![4])]).unwrap();
+    assert_ne!(a[0], c[0]);
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut runtime = Runtime::new(&dir).unwrap();
+    let result = runtime.execute("kernel_smoke", &[Tensor::zeros(&[2, 2])]);
+    assert!(result.is_err(), "arity mismatch must error");
+    let result = runtime.execute(
+        "kernel_smoke",
+        &[Tensor::zeros(&[2, 2]), Tensor::zeros(&[27, 8])],
+    );
+    assert!(result.is_err(), "shape mismatch must error");
+    assert!(runtime.execute("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn qat_short_run_reduces_loss_for_every_pe_type() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut runtime = Runtime::new(&dir).unwrap();
+    for pe in [PeType::Fp32, PeType::LightPe1] {
+        let outcome = QatDriver::train(&mut runtime, pe, 20, 5).unwrap();
+        let first = outcome.loss_curve.first().unwrap().loss;
+        let last = outcome.loss_curve.last().unwrap().loss;
+        assert!(
+            last < first,
+            "{}: loss must decrease ({first} -> {last})",
+            pe.name()
+        );
+        assert!(outcome.final_accuracy >= 0.0 && outcome.final_accuracy <= 1.0);
+    }
+}
