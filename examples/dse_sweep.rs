@@ -1,42 +1,62 @@
-//! Design-space exploration campaign (the Fig. 4 workflow).
+//! Design-space exploration campaign (the Fig. 4 workflow) through the
+//! unified [`Explorer`] API.
 //!
-//! Shards the full design space across a worker pool, evaluates every
-//! (config × model) pair for a dataset, normalizes against the best INT16
-//! configuration, prints the per-model headline ratios and the dataset
-//! geomean — the numbers §IV-A quotes (4.8×/4.1× perf/area, 4.7×/4× energy).
+//! Streams the design space across a worker pool with live progress,
+//! evaluates every (config × model) pair for a dataset, normalizes against
+//! the best INT16 configuration, prints the per-model headline ratios and
+//! the dataset geomean — the numbers §IV-A quotes (4.8×/4.1× perf/area,
+//! 4.7×/4× energy).
 //!
 //! Run: `cargo run --release --example dse_sweep [-- cifar10|cifar100|imagenet]`
 
 use qadam::arch::SweepSpec;
-use qadam::coordinator::{default_workers, Coordinator};
 use qadam::dnn::Dataset;
 use qadam::dse;
+use qadam::explore::Explorer;
 use qadam::util::table::{format_sig, Table};
 
-fn main() {
+fn main() -> qadam::Result<()> {
     let dataset = std::env::args()
         .nth(1)
         .and_then(|arg| Dataset::parse(&arg))
         .unwrap_or(Dataset::Cifar10);
     let spec = SweepSpec::default();
-    let coordinator = Coordinator::new(default_workers(), 7);
+    let explorer = Explorer::over(spec.clone()).dataset(dataset).seed(7);
     println!(
-        "exploring {} design points x {} models on {} workers...",
-        spec.len(),
+        "exploring {} design points x {} models...",
+        explorer.design_points(),
         dataset.paper_models().len(),
-        coordinator.workers
     );
-    let db = coordinator.campaign(&spec, dataset);
+
+    // Streaming pass: consume design points as they finish (no full-space
+    // buffering) — here just a progress line every 100 points.
+    let progress_every = 100;
+    let stats = explorer.stream(|point| {
+        if (point.index + 1) % progress_every == 0 {
+            println!("  evaluated {:>5} / {} design points", point.index + 1, spec.len());
+        }
+    })?;
     println!(
-        "done in {:.2}s ({:.0} evaluations/s)\n",
+        "streamed {} points in {:.2}s ({:.0} evaluations/s)",
+        stats.design_points,
+        stats.wall_seconds,
+        stats.evals_per_sec()
+    );
+
+    // Aggregated pass for the figure products (same pipeline, same seed,
+    // bit-identical results).
+    let db = explorer.run()?;
+    println!(
+        "aggregated in {:.2}s ({:.0} evaluations/s)\n",
         db.stats.wall_seconds,
         db.stats.evals_per_sec()
     );
 
     let mut table = Table::new(&["model", "pe", "perf/area gain", "energy gain", "best config"]);
     for space in &db.spaces {
-        for (pe, ppa_gain, energy_gain) in dse::headline_ratios(&space.evals) {
-            let best = dse::best_perf_per_area(&space.evals, pe).unwrap();
+        for (pe, ppa_gain, energy_gain) in dse::headline_ratios(&space.evals)? {
+            let best = dse::best_perf_per_area(&space.evals, pe)
+                .expect("headline ratios imply a best config");
             table.row(&[
                 space.model_name.clone(),
                 pe.name().into(),
@@ -49,7 +69,7 @@ fn main() {
     print!("{}", table.render());
 
     println!("\n{} geomean vs best INT16 (paper: L1 4.8x/4.7x, L2 4.1x/4.0x):", dataset.name());
-    for (pe, ppa, energy) in db.headline_geomean() {
+    for (pe, ppa, energy) in db.headline_geomean()? {
         println!(
             "  {:<10} {}x perf/area   {}x less energy",
             pe.name(),
@@ -57,4 +77,5 @@ fn main() {
             format_sig(energy, 3)
         );
     }
+    Ok(())
 }

@@ -11,21 +11,23 @@
 //! Run: `cargo run --release --example edge_deployment`
 
 use qadam::arch::SweepSpec;
-use qadam::coordinator::{default_workers, Coordinator};
 use qadam::dnn::Dataset;
 use qadam::dse::{pareto_front, Orientation};
+use qadam::explore::Explorer;
 use qadam::quant::PeType;
 use qadam::util::table::{format_sig, Table};
 
 const AREA_BUDGET_MM2: f64 = 6.0;
 const POWER_BUDGET_MW: f64 = 600.0;
 
-fn main() {
+fn main() -> qadam::Result<()> {
     println!(
         "edge budget: ≤ {AREA_BUDGET_MM2} mm², ≤ {POWER_BUDGET_MW} mW — workload: VGG-16 + ResNet-56 / CIFAR-100\n"
     );
-    let coordinator = Coordinator::new(default_workers(), 7);
-    let db = coordinator.campaign(&SweepSpec::default(), Dataset::Cifar100);
+    let db = Explorer::over(SweepSpec::default())
+        .dataset(Dataset::Cifar100)
+        .seed(7)
+        .run()?;
 
     // Combine the two target models per config: worst-case latency, summed
     // energy (the device alternates between them).
@@ -103,4 +105,5 @@ fn main() {
         "\n{light_on_front}/{} front points are LightPE designs — quantization-aware PEs dominate the edge regime.",
         front.len()
     );
+    Ok(())
 }

@@ -16,18 +16,20 @@
 use std::path::Path;
 
 use qadam::arch::SweepSpec;
-use qadam::coordinator::{default_workers, Coordinator};
 use qadam::dnn::{model_for, Dataset, ModelKind};
 use qadam::dse;
+use qadam::explore::Explorer;
 use qadam::quant::PeType;
 use qadam::runtime::{QatDriver, Runtime};
 use qadam::util::table::{format_sig, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> qadam::Result<()> {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
     let artifacts = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !artifacts.join("manifest.json").exists() {
-        anyhow::bail!("artifacts missing — run `make artifacts` first");
+        return Err(qadam::Error::Unsupported(
+            "artifacts missing — run `make artifacts` first".into(),
+        ));
     }
     let mut runtime = Runtime::new(&artifacts)?;
     println!(
@@ -68,8 +70,8 @@ fn main() -> anyhow::Result<()> {
     // --- Join with DSE hardware metrics (measured Fig. 5 analogue) --------
     println!("\njoining measured QAT accuracy with DSE hardware efficiency...");
     let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
-    let evals =
-        Coordinator::new(default_workers(), 7).explore_model(&SweepSpec::default(), &model);
+    let db = Explorer::over(SweepSpec::default()).model(model).seed(7).run()?;
+    let evals = &db.spaces[0].evals;
     let mut table = Table::new(&[
         "pe", "measured_acc", "final_loss", "norm_perf_per_area", "norm_energy",
     ]);

@@ -15,7 +15,7 @@ use qadam::quant::PeType;
 use qadam::rtl;
 use qadam::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> qadam::Result<()> {
     let out_root = Path::new("rtl_out");
     let mut table =
         Table::new(&["pe", "files", "total_lines", "multiplies", "shifts", "dir"]);

@@ -11,7 +11,7 @@ fn main() {
     let workers = default_workers();
     let mut figure = None;
     bench_with("fig2_generation", BenchConfig::heavy(), || {
-        figure = Some(report::fig2(workers, 7));
+        figure = Some(report::fig2(workers, 7).expect("fig2 generation"));
     });
     let figure = figure.unwrap();
     print!("{}", figure.render());

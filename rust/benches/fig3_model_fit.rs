@@ -15,7 +15,7 @@ fn main() {
     section("Fig. 3 — PPA surrogate fit quality");
     let mut figure = None;
     bench_with("fig3_generation", BenchConfig::heavy(), || {
-        figure = Some(report::fig3(7));
+        figure = Some(report::fig3(7).expect("fig3 generation"));
     });
     let figure = figure.unwrap();
     print!("{}", figure.render());

@@ -19,7 +19,7 @@ fn main() {
             &format!("fig4_{}", dataset.name()),
             BenchConfig { warmup_iters: 0, measure_iters: 1 },
             || {
-                figure = Some(report::fig4(dataset, workers, 7));
+                figure = Some(report::fig4(dataset, workers, 7).expect("fig4 generation"));
             },
         );
         let figure = figure.unwrap();

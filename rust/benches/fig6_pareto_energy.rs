@@ -17,7 +17,7 @@ fn main() {
             &format!("fig6_{}", dataset.name()),
             BenchConfig { warmup_iters: 0, measure_iters: 1 },
             || {
-                figure = Some(report::fig6(dataset, workers, 7));
+                figure = Some(report::fig6(dataset, workers, 7).expect("fig6 generation"));
             },
         );
         let figure = figure.unwrap();

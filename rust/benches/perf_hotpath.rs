@@ -8,9 +8,9 @@
 
 use qadam::arch::{AcceleratorConfig, SweepSpec};
 use qadam::bench::{bench, bench_with, section, BenchConfig};
-use qadam::coordinator::Coordinator;
 use qadam::dataflow::{map_model, Dataflow};
 use qadam::dnn::{model_for, Dataset, ModelKind};
+use qadam::explore::Explorer;
 use qadam::quant::PeType;
 use qadam::sim;
 use qadam::synth;
@@ -39,11 +39,14 @@ fn main() {
 
     section("L3 hot path — full campaign scaling (ImageNet, heaviest workload)");
     for workers in [1, 2, 4, qadam::coordinator::default_workers()] {
-        let coordinator = Coordinator::new(workers, 7);
+        let explorer = Explorer::over(SweepSpec::default())
+            .dataset(Dataset::ImageNet)
+            .workers(workers)
+            .seed(7);
         let result = bench_with(
             &format!("campaign_workers_{workers}"),
             BenchConfig { warmup_iters: 1, measure_iters: 3 },
-            || coordinator.campaign(&SweepSpec::default(), Dataset::ImageNet),
+            || explorer.run().expect("campaign"),
         );
         let evals = SweepSpec::default().len() * 3;
         println!("  -> {:.0} evals/s at {workers} workers", evals as f64 / result.summary.p50);
@@ -63,7 +66,12 @@ fn main() {
         layer.macs() as f64 / result.summary.p50 / 1e6
     );
 
-    section("PJRT runtime (needs `make artifacts`)");
+    section("PJRT runtime (needs `make artifacts` and the `pjrt` feature)");
+    bench_pjrt_runtime();
+}
+
+#[cfg(feature = "pjrt")]
+fn bench_pjrt_runtime() {
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if artifacts.join("manifest.json").exists() {
         let mut runtime = qadam::runtime::Runtime::new(&artifacts).unwrap();
@@ -80,4 +88,9 @@ fn main() {
     } else {
         println!("  skipped (no artifacts)");
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn bench_pjrt_runtime() {
+    println!("  skipped (built without the `pjrt` feature)");
 }

@@ -7,8 +7,9 @@
 
 pub mod sweep;
 
-pub use sweep::SweepSpec;
+pub use sweep::{SweepIter, SweepSpec};
 
+use crate::error::{Error, Result};
 use crate::quant::PeType;
 use crate::util::json::{num, obj, s, Json};
 
@@ -105,29 +106,30 @@ impl AcceleratorConfig {
         )
     }
 
-    /// Validate structural invariants; returns a description of the first
-    /// violation, if any.
-    pub fn validate(&self) -> Result<(), String> {
+    /// Validate structural invariants; returns [`Error::InvalidConfig`]
+    /// describing the first violation, if any.
+    pub fn validate(&self) -> Result<()> {
+        let invalid = |msg: &str| Err(Error::InvalidConfig(msg.into()));
         if self.rows == 0 || self.cols == 0 {
-            return Err("PE array dimensions must be positive".into());
+            return invalid("PE array dimensions must be positive");
         }
         if self.rows > 256 || self.cols > 256 {
-            return Err("PE array dimension exceeds supported maximum (256)".into());
+            return invalid("PE array dimension exceeds supported maximum (256)");
         }
         if self.glb_kib == 0 {
-            return Err("global buffer must be non-empty".into());
+            return invalid("global buffer must be non-empty");
         }
         if self.spad.ifmap_entries == 0
             || self.spad.filter_entries == 0
             || self.spad.psum_entries == 0
         {
-            return Err("scratchpads must be non-empty".into());
+            return invalid("scratchpads must be non-empty");
         }
-        if !(self.dram_bw_gbps > 0.0) {
-            return Err("DRAM bandwidth must be positive".into());
+        if self.dram_bw_gbps.is_nan() || self.dram_bw_gbps <= 0.0 {
+            return invalid("DRAM bandwidth must be positive");
         }
         if !(self.clock_ghz > 0.0 && self.clock_ghz <= 5.0) {
-            return Err("clock target must be in (0, 5] GHz".into());
+            return invalid("clock target must be in (0, 5] GHz");
         }
         Ok(())
     }
@@ -148,15 +150,18 @@ impl AcceleratorConfig {
     }
 
     /// Deserialize from JSON produced by [`Self::to_json`].
-    pub fn from_json(json: &Json) -> Result<Self, String> {
-        let get_num = |key: &str| -> Result<f64, String> {
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let get_num = |key: &str| -> Result<f64> {
             json.get(key)
                 .and_then(Json::as_f64)
-                .ok_or_else(|| format!("missing numeric field '{key}'"))
+                .ok_or_else(|| Error::ParseError(format!("missing numeric field '{key}'")))
         };
-        let pe_name =
-            json.get("pe").and_then(Json::as_str).ok_or("missing field 'pe'")?;
-        let pe = PeType::parse(pe_name).ok_or_else(|| format!("unknown PE type '{pe_name}'"))?;
+        let pe_name = json
+            .get("pe")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::ParseError("missing field 'pe'".into()))?;
+        let pe = PeType::parse(pe_name)
+            .ok_or_else(|| Error::ParseError(format!("unknown PE type '{pe_name}'")))?;
         let cfg = Self {
             pe,
             rows: get_num("rows")? as usize,
@@ -195,6 +200,9 @@ mod tests {
         let mut cfg = AcceleratorConfig::default();
         cfg.dram_bw_gbps = -1.0;
         assert!(cfg.validate().is_err());
+        let mut cfg = AcceleratorConfig::default();
+        cfg.dram_bw_gbps = f64::NAN;
+        assert!(cfg.validate().is_err(), "NaN bandwidth must be rejected");
         let mut cfg = AcceleratorConfig::default();
         cfg.clock_ghz = 9.0;
         assert!(cfg.validate().is_err());

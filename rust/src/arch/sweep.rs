@@ -1,11 +1,17 @@
 //! Design-space sweep enumeration (§III-C).
 //!
-//! A [`SweepSpec`] lists candidate values per axis; [`SweepSpec::enumerate`]
-//! yields the full cross-product as concrete [`AcceleratorConfig`]s. The
-//! default space mirrors the paper's: 4 PE types × array sizes × global
-//! buffer sizes × scratchpad variants.
+//! A [`SweepSpec`] lists candidate values per axis; iteration yields the
+//! full cross-product as concrete [`AcceleratorConfig`]s. The space is
+//! *lazily* enumerated: [`SweepSpec::iter`] decodes design points from a
+//! mixed-radix index in O(1) memory, [`SweepSpec::get`] addresses any
+//! point directly, and [`SweepSpec::shard_iter`] exposes a round-robin
+//! shard view without materializing the space (the coordinator's
+//! leader/worker split, and the substrate for future distributed shards).
+//! The default space mirrors the paper's: 4 PE types × array sizes ×
+//! global buffer sizes × scratchpad variants.
 
 use super::{AcceleratorConfig, ScratchpadCfg};
+use crate::error::{Error, Result};
 use crate::quant::PeType;
 use crate::util::json::{num, obj, s, Json};
 
@@ -73,31 +79,62 @@ impl SweepSpec {
         self.len() == 0
     }
 
-    /// Materialize the full cross-product.
-    pub fn enumerate(&self) -> Vec<AcceleratorConfig> {
-        let mut out = Vec::with_capacity(self.len());
-        for &pe in &self.pe_types {
-            for &(rows, cols) in &self.array_dims {
-                for &glb_kib in &self.glb_kib {
-                    for &spad in &self.spads {
-                        for &dram_bw_gbps in &self.dram_bw_gbps {
-                            for &clock_ghz in &self.clock_ghz {
-                                out.push(AcceleratorConfig {
-                                    pe,
-                                    rows,
-                                    cols,
-                                    spad,
-                                    glb_kib,
-                                    dram_bw_gbps,
-                                    clock_ghz,
-                                });
-                            }
-                        }
-                    }
-                }
-            }
+    /// Decode the `index`-th design point of the cross-product without
+    /// materializing anything. Point order matches nested loops with
+    /// `pe_types` outermost and `clock_ghz` innermost; `None` when
+    /// `index >= self.len()`.
+    pub fn get(&self, index: usize) -> Option<AcceleratorConfig> {
+        if index >= self.len() {
+            return None;
         }
-        out
+        // Mixed-radix decode, least-significant (innermost) axis first.
+        let mut rest = index;
+        let mut digit = |len: usize| {
+            let d = rest % len;
+            rest /= len;
+            d
+        };
+        let clock_ghz = self.clock_ghz[digit(self.clock_ghz.len())];
+        let dram_bw_gbps = self.dram_bw_gbps[digit(self.dram_bw_gbps.len())];
+        let spad = self.spads[digit(self.spads.len())];
+        let glb_kib = self.glb_kib[digit(self.glb_kib.len())];
+        let (rows, cols) = self.array_dims[digit(self.array_dims.len())];
+        let pe = self.pe_types[rest];
+        Some(AcceleratorConfig { pe, rows, cols, spad, glb_kib, dram_bw_gbps, clock_ghz })
+    }
+
+    /// Lazy iterator over the cross-product (O(1) memory; `nth` is O(1)).
+    pub fn iter(&self) -> SweepIter<'_> {
+        SweepIter { spec: self, next: 0, end: self.len() }
+    }
+
+    /// Lazy round-robin shard view: the design points whose index `i`
+    /// satisfies `i % num_shards == shard`, in index order — the same
+    /// points `iter().skip(shard).step_by(num_shards)` would yield, but
+    /// index-addressed so it stays O(1) per point.
+    ///
+    /// # Panics
+    /// If `num_shards == 0` or `shard >= num_shards`.
+    pub fn shard_iter(
+        &self,
+        shard: usize,
+        num_shards: usize,
+    ) -> impl ExactSizeIterator<Item = AcceleratorConfig> + '_ {
+        assert!(
+            num_shards > 0 && shard < num_shards,
+            "shard {shard} out of range for {num_shards} shards"
+        );
+        let len = self.len();
+        let count = if shard < len { (len - shard).div_ceil(num_shards) } else { 0 };
+        (0..count).map(move |pos| {
+            self.get(shard + pos * num_shards).expect("shard index within cross-product")
+        })
+    }
+
+    /// Materialize the full cross-product. Prefer [`Self::iter`] on hot
+    /// paths — this allocates one `Vec` entry per design point.
+    pub fn enumerate(&self) -> Vec<AcceleratorConfig> {
+        self.iter().collect()
     }
 
     /// Serialize to JSON (the `--sweep <file>` config format).
@@ -149,7 +186,7 @@ impl SweepSpec {
     /// Deserialize from the JSON produced by [`Self::to_json`]. Missing
     /// axes fall back to the defaults, so config files can override only
     /// the axes they care about.
-    pub fn from_json(json: &Json) -> Result<Self, String> {
+    pub fn from_json(json: &Json) -> Result<Self> {
         let mut spec = SweepSpec::default();
         if let Some(items) = json.get("pe_types").and_then(Json::as_arr) {
             spec.pe_types = items
@@ -157,28 +194,36 @@ impl SweepSpec {
                 .map(|v| {
                     v.as_str()
                         .and_then(PeType::parse)
-                        .ok_or_else(|| format!("bad pe type {v:?}"))
+                        .ok_or_else(|| Error::ParseError(format!("bad pe type {v:?}")))
                 })
-                .collect::<Result<_, _>>()?;
+                .collect::<Result<_>>()?;
         }
         if let Some(items) = json.get("array_dims").and_then(Json::as_arr) {
             spec.array_dims = items
                 .iter()
                 .map(|v| {
-                    let pair = v.as_arr().ok_or("array_dims entries must be [rows, cols]")?;
+                    let pair = v.as_arr().ok_or_else(|| {
+                        Error::ParseError("array_dims entries must be [rows, cols]".into())
+                    })?;
                     match (pair.first().and_then(Json::as_i64), pair.get(1).and_then(Json::as_i64))
                     {
                         (Some(r), Some(c)) if r > 0 && c > 0 => Ok((r as usize, c as usize)),
-                        _ => Err("array_dims entries must be positive integers".to_string()),
+                        _ => Err(Error::ParseError(
+                            "array_dims entries must be positive integers".into(),
+                        )),
                     }
                 })
-                .collect::<Result<_, _>>()?;
+                .collect::<Result<_>>()?;
         }
         if let Some(items) = json.get("glb_kib").and_then(Json::as_arr) {
             spec.glb_kib = items
                 .iter()
-                .map(|v| v.as_i64().map(|g| g as usize).ok_or("bad glb_kib"))
-                .collect::<Result<_, _>>()?;
+                .map(|v| {
+                    v.as_i64()
+                        .map(|g| g as usize)
+                        .ok_or_else(|| Error::ParseError("bad glb_kib".into()))
+                })
+                .collect::<Result<_>>()?;
         }
         if let Some(items) = json.get("spads").and_then(Json::as_arr) {
             spec.spads = items
@@ -188,47 +233,102 @@ impl SweepSpec {
                         v.get(k)
                             .and_then(Json::as_i64)
                             .map(|x| x as usize)
-                            .ok_or_else(|| format!("spad entry missing '{k}'"))
+                            .ok_or_else(|| Error::ParseError(format!("spad entry missing '{k}'")))
                     };
-                    Ok::<_, String>(ScratchpadCfg {
+                    Ok(ScratchpadCfg {
                         ifmap_entries: field("ifmap")?,
                         filter_entries: field("filter")?,
                         psum_entries: field("psum")?,
                     })
                 })
-                .collect::<Result<_, _>>()?;
+                .collect::<Result<_>>()?;
         }
         if let Some(items) = json.get("dram_bw_gbps").and_then(Json::as_arr) {
-            spec.dram_bw_gbps =
-                items.iter().map(|v| v.as_f64().ok_or("bad dram_bw_gbps")).collect::<Result<_, _>>()?;
+            spec.dram_bw_gbps = items
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| Error::ParseError("bad dram_bw_gbps".into())))
+                .collect::<Result<_>>()?;
         }
         if let Some(items) = json.get("clock_ghz").and_then(Json::as_arr) {
-            spec.clock_ghz =
-                items.iter().map(|v| v.as_f64().ok_or("bad clock_ghz")).collect::<Result<_, _>>()?;
+            spec.clock_ghz = items
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| Error::ParseError("bad clock_ghz".into())))
+                .collect::<Result<_>>()?;
         }
         if spec.is_empty() {
-            return Err("sweep spec has an empty axis".into());
+            return Err(Error::InvalidConfig("sweep spec has an empty axis".into()));
         }
         Ok(spec)
     }
 
     /// Load a sweep from a JSON file.
-    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
-        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
-        let json = Json::parse(&text).map_err(|e| e.to_string())?;
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text)?;
         Self::from_json(&json)
     }
 
-    /// Enumerate only the i-th shard of `n` (round-robin), for the
-    /// coordinator's leader/worker split.
+    /// Enumerate only the i-th shard of `n` (round-robin).
+    #[deprecated(
+        since = "0.2.0",
+        note = "materializes the shard; use the lazy `shard_iter` instead"
+    )]
     pub fn enumerate_shard(&self, shard: usize, num_shards: usize) -> Vec<AcceleratorConfig> {
-        assert!(num_shards > 0 && shard < num_shards);
-        self.enumerate()
-            .into_iter()
-            .enumerate()
-            .filter(|(i, _)| i % num_shards == shard)
-            .map(|(_, c)| c)
-            .collect()
+        self.shard_iter(shard, num_shards).collect()
+    }
+}
+
+/// Lazy iterator over a [`SweepSpec`] cross-product (see [`SweepSpec::iter`]).
+#[derive(Debug, Clone)]
+pub struct SweepIter<'a> {
+    spec: &'a SweepSpec,
+    next: usize,
+    end: usize,
+}
+
+impl Iterator for SweepIter<'_> {
+    type Item = AcceleratorConfig;
+
+    fn next(&mut self) -> Option<AcceleratorConfig> {
+        if self.next >= self.end {
+            return None;
+        }
+        let config = self.spec.get(self.next);
+        self.next += 1;
+        config
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let remaining = self.end - self.next;
+        (remaining, Some(remaining))
+    }
+
+    fn nth(&mut self, n: usize) -> Option<AcceleratorConfig> {
+        // Clamp so an overshooting skip cannot push `next` past `end`
+        // (which would underflow `size_hint`).
+        self.next = self.next.saturating_add(n).min(self.end);
+        self.next()
+    }
+}
+
+impl ExactSizeIterator for SweepIter<'_> {}
+
+impl DoubleEndedIterator for SweepIter<'_> {
+    fn next_back(&mut self) -> Option<AcceleratorConfig> {
+        if self.next >= self.end {
+            return None;
+        }
+        self.end -= 1;
+        self.spec.get(self.end)
+    }
+}
+
+impl<'a> IntoIterator for &'a SweepSpec {
+    type Item = AcceleratorConfig;
+    type IntoIter = SweepIter<'a>;
+
+    fn into_iter(self) -> SweepIter<'a> {
+        self.iter()
     }
 }
 
@@ -240,12 +340,75 @@ mod tests {
     fn cross_product_size() {
         let spec = SweepSpec::default();
         assert_eq!(spec.enumerate().len(), spec.len());
+        assert_eq!(spec.iter().len(), spec.len());
         assert_eq!(spec.len(), 4 * 5 * 4 * 4 * 3);
     }
 
     #[test]
+    fn lazy_iter_matches_nested_loops() {
+        // Golden reference: the eager nested-loop cross-product the lazy
+        // decoder must reproduce exactly (order included).
+        let spec = SweepSpec::default();
+        let mut golden = Vec::with_capacity(spec.len());
+        for &pe in &spec.pe_types {
+            for &(rows, cols) in &spec.array_dims {
+                for &glb_kib in &spec.glb_kib {
+                    for &spad in &spec.spads {
+                        for &dram_bw_gbps in &spec.dram_bw_gbps {
+                            for &clock_ghz in &spec.clock_ghz {
+                                golden.push(AcceleratorConfig {
+                                    pe,
+                                    rows,
+                                    cols,
+                                    spad,
+                                    glb_kib,
+                                    dram_bw_gbps,
+                                    clock_ghz,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let lazy: Vec<AcceleratorConfig> = spec.iter().collect();
+        assert_eq!(lazy, golden);
+    }
+
+    #[test]
+    fn get_addresses_points_randomly() {
+        let spec = SweepSpec::default();
+        let all = spec.enumerate();
+        for index in [0, 1, 7, 63, spec.len() - 1] {
+            assert_eq!(spec.get(index).unwrap(), all[index], "index {index}");
+        }
+        assert!(spec.get(spec.len()).is_none());
+    }
+
+    #[test]
+    fn iter_nth_matches_skip() {
+        let spec = SweepSpec::default();
+        let via_nth = spec.iter().nth(17).unwrap();
+        let via_skip = spec.enumerate()[17].clone();
+        assert_eq!(via_nth, via_skip);
+        // nth past the end terminates cleanly and leaves a sane length.
+        let mut overshot = spec.iter();
+        assert!(overshot.nth(spec.len() + 5).is_none());
+        assert_eq!(overshot.len(), 0);
+    }
+
+    #[test]
+    fn iter_is_double_ended() {
+        let spec = SweepSpec::tiny();
+        let forward: Vec<String> = spec.iter().map(|c| c.id()).collect();
+        let mut backward: Vec<String> = spec.iter().rev().map(|c| c.id()).collect();
+        backward.reverse();
+        assert_eq!(forward, backward);
+    }
+
+    #[test]
     fn all_enumerated_valid() {
-        for cfg in SweepSpec::default().enumerate() {
+        for cfg in &SweepSpec::default() {
             assert!(cfg.validate().is_ok(), "invalid config {}", cfg.id());
         }
     }
@@ -255,7 +418,7 @@ mod tests {
         let spec = SweepSpec::tiny();
         let all = spec.enumerate();
         let mut recombined: Vec<_> = (0..3)
-            .flat_map(|shard| spec.enumerate_shard(shard, 3))
+            .flat_map(|shard| spec.shard_iter(shard, 3))
             .map(|c| c.id())
             .collect();
         recombined.sort();
@@ -265,9 +428,44 @@ mod tests {
     }
 
     #[test]
+    fn shard_iter_matches_skip_step_by() {
+        let spec = SweepSpec::default();
+        for (shard, num_shards) in [(0, 1), (0, 3), (2, 3), (4, 5)] {
+            let lazy: Vec<String> =
+                spec.shard_iter(shard, num_shards).map(|c| c.id()).collect();
+            let reference: Vec<String> = spec
+                .iter()
+                .skip(shard)
+                .step_by(num_shards)
+                .map(|c| c.id())
+                .collect();
+            assert_eq!(lazy, reference, "shard {shard}/{num_shards}");
+            assert_eq!(
+                spec.shard_iter(shard, num_shards).len(),
+                reference.len(),
+                "shard {shard}/{num_shards} ExactSizeIterator length"
+            );
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_enumerate_shard_still_partitions() {
+        let spec = SweepSpec::tiny();
+        let mut recombined: Vec<_> = (0..3)
+            .flat_map(|shard| spec.enumerate_shard(shard, 3))
+            .map(|c| c.id())
+            .collect();
+        recombined.sort();
+        let mut expected: Vec<_> = spec.iter().map(|c| c.id()).collect();
+        expected.sort();
+        assert_eq!(recombined, expected);
+    }
+
+    #[test]
     fn for_pe_restricts() {
         let spec = SweepSpec::default().for_pe(PeType::Fp32);
-        assert!(spec.enumerate().iter().all(|c| c.pe == PeType::Fp32));
+        assert!(spec.iter().all(|c| c.pe == PeType::Fp32));
     }
 
     #[test]
@@ -275,8 +473,8 @@ mod tests {
         let spec = SweepSpec::default();
         let parsed = SweepSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(parsed.len(), spec.len());
-        let a: Vec<String> = spec.enumerate().iter().map(|c| c.id()).collect();
-        let b: Vec<String> = parsed.enumerate().iter().map(|c| c.id()).collect();
+        let a: Vec<String> = spec.iter().map(|c| c.id()).collect();
+        let b: Vec<String> = parsed.iter().map(|c| c.id()).collect();
         assert_eq!(a, b);
     }
 
@@ -290,14 +488,15 @@ mod tests {
     }
 
     #[test]
-    fn bad_json_rejected() {
-        for text in [
-            r#"{"pe_types": ["INT99"]}"#,
-            r#"{"array_dims": [[0, 8]]}"#,
-            r#"{"glb_kib": []}"#,
+    fn bad_json_rejected_with_typed_errors() {
+        for (text, kind) in [
+            (r#"{"pe_types": ["INT99"]}"#, "parse_error"),
+            (r#"{"array_dims": [[0, 8]]}"#, "parse_error"),
+            (r#"{"glb_kib": []}"#, "invalid_config"),
         ] {
             let json = Json::parse(text).unwrap();
-            assert!(SweepSpec::from_json(&json).is_err(), "{text}");
+            let err = SweepSpec::from_json(&json).unwrap_err();
+            assert_eq!(err.kind(), kind, "{text}");
         }
     }
 
@@ -313,11 +512,18 @@ mod tests {
     }
 
     #[test]
+    fn from_file_missing_is_io_error() {
+        let err =
+            SweepSpec::from_file(std::path::Path::new("/nonexistent/sweep.json")).unwrap_err();
+        assert_eq!(err.kind(), "io");
+    }
+
+    #[test]
     fn unique_ids() {
-        let all = SweepSpec::default().enumerate();
-        let mut ids: Vec<_> = all.iter().map(|c| c.id()).collect();
+        let mut ids: Vec<_> = SweepSpec::default().iter().map(|c| c.id()).collect();
+        let total = ids.len();
         ids.sort();
         ids.dedup();
-        assert_eq!(ids.len(), all.len(), "config ids must be unique");
+        assert_eq!(ids.len(), total, "config ids must be unique");
     }
 }

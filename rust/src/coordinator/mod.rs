@@ -1,58 +1,27 @@
 //! The DSE coordinator: leader/worker orchestration of the paper's
 //! evaluation campaigns (the framework's L3 contribution).
 //!
-//! The leader shards the design space across a worker pool ([`pool`]),
-//! amortizes synthesis per design point across the dataset's model set
-//! (synthesize once, map every model), aggregates results into an
-//! [`EvalDatabase`], and exposes the campaign products the figures need:
-//! normalized spaces, headline ratios, and Pareto fronts. Metrics cover
-//! throughput (design points/s) for the §Perf pass.
+//! The campaign pipeline now lives in [`crate::explore::Explorer`] — one
+//! streaming, fallible entry point shared by the CLI, the report
+//! generator, the benches, and the examples. This module keeps the worker
+//! pool ([`pool`]) and the legacy [`Coordinator`] façade, whose
+//! `campaign`/`explore_model` methods are thin deprecated shims over the
+//! explorer (the aggregate types are re-exported for source
+//! compatibility).
 
 pub mod pool;
 
 pub use pool::{default_workers, parallel_map};
 
-use std::time::Instant;
+// Source compatibility: these aggregates moved to `crate::explore`.
+pub use crate::explore::{CampaignStats, EvalDatabase, ModelSpace};
 
 use crate::arch::SweepSpec;
-use crate::dnn::{models_for, Dataset, Model};
-use crate::dse::{self, Evaluation};
-use crate::quant::PeType;
-use crate::synth::synthesize;
+use crate::dnn::{Dataset, Model};
+use crate::dse::Evaluation;
+use crate::explore::Explorer;
 
-/// All evaluations for one (model, dataset) pair.
-#[derive(Debug, Clone)]
-pub struct ModelSpace {
-    pub model_name: String,
-    pub dataset: Dataset,
-    pub evals: Vec<Evaluation>,
-}
-
-/// Campaign results across a dataset's model set.
-#[derive(Debug, Clone)]
-pub struct EvalDatabase {
-    pub dataset: Dataset,
-    pub spaces: Vec<ModelSpace>,
-    pub stats: CampaignStats,
-}
-
-/// Coordinator throughput metrics.
-#[derive(Debug, Clone, Copy)]
-pub struct CampaignStats {
-    pub design_points: usize,
-    pub evaluations: usize,
-    pub wall_seconds: f64,
-    pub workers: usize,
-}
-
-impl CampaignStats {
-    /// Evaluations per second (the §Perf headline for L3).
-    pub fn evals_per_sec(&self) -> f64 {
-        self.evaluations as f64 / self.wall_seconds.max(1e-9)
-    }
-}
-
-/// Coordinator configuration.
+/// Coordinator configuration (legacy façade over [`Explorer`]).
 #[derive(Debug, Clone)]
 pub struct Coordinator {
     pub workers: usize,
@@ -74,107 +43,51 @@ impl Coordinator {
     /// Run the full campaign for one dataset: every design point ×
     /// every paper model for that dataset (Fig. 4 panels).
     ///
-    /// Work unit = one design point: synthesis runs once, then every model
-    /// maps against the same report — the paper's framework evaluates "a
-    /// range of hardware designs and DNN configurations at the same time".
+    /// # Panics
+    /// On a degenerate sweep (empty axis). Use [`Explorer::run`] for the
+    /// fallible equivalent.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `Explorer::over(spec).dataset(dataset).workers(n).seed(s).run()`"
+    )]
     pub fn campaign(&self, spec: &SweepSpec, dataset: Dataset) -> EvalDatabase {
-        let models = models_for(dataset);
-        let configs = spec.enumerate();
-        let started = Instant::now();
-        let seed = self.seed;
-        let per_config: Vec<Vec<Evaluation>> =
-            parallel_map(configs, self.workers, |config| {
-                let synth = synthesize(config, seed);
-                models.iter().map(|m| dse::evaluate_with_synth(&synth, m)).collect()
-            });
-        let wall_seconds = started.elapsed().as_secs_f64();
-        let design_points = per_config.len();
-        // Transpose: per-config × per-model → per-model spaces.
-        let mut spaces: Vec<ModelSpace> = models
-            .iter()
-            .map(|m| ModelSpace {
-                model_name: m.name.clone(),
-                dataset,
-                evals: Vec::with_capacity(design_points),
-            })
-            .collect();
-        for config_evals in per_config {
-            for (space, eval) in spaces.iter_mut().zip(config_evals) {
-                space.evals.push(eval);
-            }
-        }
-        let evaluations = design_points * models.len();
-        EvalDatabase {
-            dataset,
-            spaces,
-            stats: CampaignStats {
-                design_points,
-                evaluations,
-                wall_seconds,
-                workers: self.workers,
-            },
-        }
+        Explorer::over(spec.clone())
+            .dataset(dataset)
+            .workers(self.workers)
+            .seed(self.seed)
+            .run()
+            .expect("legacy campaign requires a non-degenerate sweep")
     }
 
     /// Evaluate one sweep against one model in parallel (order-preserving).
+    ///
+    /// # Panics
+    /// On a degenerate sweep (empty axis). Use [`Explorer::run`] for the
+    /// fallible equivalent.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `Explorer::over(spec).model(model).workers(n).seed(s).run()`"
+    )]
     pub fn explore_model(&self, spec: &SweepSpec, model: &Model) -> Vec<Evaluation> {
-        let configs = spec.enumerate();
-        let seed = self.seed;
-        parallel_map(configs, self.workers, |config| dse::evaluate(config, model, seed))
-    }
-}
-
-impl EvalDatabase {
-    /// Headline ratios per model (Fig. 4 summary): the geometric-mean
-    /// across models is the paper's "on average across all workloads".
-    pub fn headline_per_model(&self) -> Vec<(String, Vec<(PeType, f64, f64)>)> {
-        self.spaces
-            .iter()
-            .map(|s| (s.model_name.clone(), dse::headline_ratios(&s.evals)))
-            .collect()
-    }
-
-    /// Geometric-mean headline ratios across this dataset's models:
-    /// (pe, perf/area gain, energy gain).
-    pub fn headline_geomean(&self) -> Vec<(PeType, f64, f64)> {
-        let per_model = self.headline_per_model();
-        PeType::ALL
-            .iter()
-            .filter(|&&pe| {
-                // Skip PE types absent from the explored space.
-                per_model
-                    .iter()
-                    .any(|(_, rs)| rs.iter().any(|(p, _, _)| *p == pe))
-            })
-            .map(|&pe| {
-                let ppa: Vec<f64> = per_model
-                    .iter()
-                    .filter_map(|(_, rs)| {
-                        rs.iter().find(|(p, _, _)| *p == pe).map(|(_, a, _)| *a)
-                    })
-                    .collect();
-                let energy: Vec<f64> = per_model
-                    .iter()
-                    .filter_map(|(_, rs)| {
-                        rs.iter().find(|(p, _, _)| *p == pe).map(|(_, _, e)| *e)
-                    })
-                    .collect();
-                (
-                    pe,
-                    crate::util::stats::geomean(&ppa),
-                    crate::util::stats::geomean(&energy),
-                )
-            })
-            .collect()
+        let db = Explorer::over(spec.clone())
+            .model(model.clone())
+            .workers(self.workers)
+            .seed(self.seed)
+            .run()
+            .expect("legacy explore_model requires a non-degenerate sweep");
+        db.spaces.into_iter().next().map(|space| space.evals).unwrap_or_default()
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::dse;
+    use crate::quant::PeType;
 
     #[test]
-    fn campaign_covers_models_and_space() {
+    fn legacy_campaign_covers_models_and_space() {
         let coordinator = Coordinator::new(2, 7);
         let spec = SweepSpec::tiny();
         let db = coordinator.campaign(&spec, Dataset::Cifar10);
@@ -187,10 +100,33 @@ mod tests {
     }
 
     #[test]
-    fn parallel_matches_serial() {
+    fn legacy_shims_match_explorer_bit_for_bit() {
+        let spec = SweepSpec::tiny();
+        let coordinator = Coordinator::new(4, 7);
+        let legacy = coordinator.campaign(&spec, Dataset::Cifar10);
+        let new = Explorer::over(spec.clone())
+            .dataset(Dataset::Cifar10)
+            .workers(4)
+            .seed(7)
+            .run()
+            .unwrap();
+        assert_eq!(legacy.spaces.len(), new.spaces.len());
+        for (a, b) in legacy.spaces.iter().zip(&new.spaces) {
+            assert_eq!(a.model_name, b.model_name);
+            for (x, y) in a.evals.iter().zip(&b.evals) {
+                assert_eq!(x.config.id(), y.config.id());
+                assert_eq!(x.perf_per_area, y.perf_per_area);
+                assert_eq!(x.energy_uj, y.energy_uj);
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_explore_model_preserves_order() {
         let spec = SweepSpec::tiny();
         let model = crate::dnn::model_for(crate::dnn::ModelKind::ResNet20, Dataset::Cifar10);
-        let serial = dse::explore(&spec, &model, 7);
+        let serial: Vec<dse::Evaluation> =
+            spec.iter().map(|c| dse::evaluate(&c, &model, 7)).collect();
         let parallel = Coordinator::new(4, 7).explore_model(&spec, &model);
         assert_eq!(serial.len(), parallel.len());
         for (a, b) in serial.iter().zip(&parallel) {
@@ -202,8 +138,13 @@ mod tests {
 
     #[test]
     fn geomean_headline_sane() {
-        let db = Coordinator::new(2, 7).campaign(&SweepSpec::default(), Dataset::Cifar10);
-        let headline = db.headline_geomean();
+        let db = Explorer::over(SweepSpec::default())
+            .dataset(Dataset::Cifar10)
+            .workers(2)
+            .seed(7)
+            .run()
+            .unwrap();
+        let headline = db.headline_geomean().unwrap();
         let light1 = headline.iter().find(|(pe, _, _)| *pe == PeType::LightPe1).unwrap();
         assert!(light1.1 > 1.5, "LightPE-1 geomean perf/area {}", light1.1);
         assert!(light1.2 > 1.5, "LightPE-1 geomean energy {}", light1.2);

@@ -1,11 +1,14 @@
 //! Design-space exploration engine (§IV-A).
 //!
-//! Evaluates every design point of a sweep against a DNN workload —
+//! Evaluates a design point of a sweep against a DNN workload —
 //! synthesis (area/power/clock) × dataflow mapping (cycles/traffic) ×
 //! energy — and produces the paper's two efficiency axes per point:
 //! **performance per area** (inferences/s/mm²) and **energy per inference**
 //! (on-chip µJ). [`normalize`] rescales a space against the best-INT16
 //! baseline exactly as Figs. 4–6 do; [`pareto`] extracts Pareto fronts.
+//!
+//! Campaign orchestration lives in [`crate::explore::Explorer`]; this
+//! module owns the per-point evaluation math and the normalization.
 
 pub mod metrics;
 pub mod pareto;
@@ -14,9 +17,10 @@ pub use metrics::{coverage, generational_distance, hypervolume_2d};
 pub use pareto::{dominates, pareto_front, Orientation};
 
 use crate::arch::{AcceleratorConfig, SweepSpec};
-use crate::dataflow::{map_model, Dataflow};
+use crate::dataflow::Dataflow;
 use crate::dnn::Model;
 use crate::energy::energy_of;
+use crate::error::{Error, Result};
 use crate::quant::PeType;
 use crate::synth::{synthesize, SynthReport};
 
@@ -75,10 +79,14 @@ pub fn evaluate_with_synth(synth: &SynthReport, model: &Model) -> Evaluation {
     }
 }
 
-/// Explore a full sweep against one model (single-threaded reference path;
-/// the coordinator parallelizes this across workers).
+/// Explore a full sweep against one model (single-threaded reference path).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `explore::Explorer::over(spec).model(model)` (parallel, streaming), \
+            or iterate `spec.iter()` with `evaluate` for the serial reference"
+)]
 pub fn explore(spec: &SweepSpec, model: &Model, seed: u64) -> Vec<Evaluation> {
-    spec.enumerate().iter().map(|config| evaluate(config, model, seed)).collect()
+    spec.iter().map(|config| evaluate(&config, model, seed)).collect()
 }
 
 /// The best (highest perf/area) evaluation for a PE type, if any.
@@ -86,7 +94,7 @@ pub fn best_perf_per_area(evals: &[Evaluation], pe: PeType) -> Option<&Evaluatio
     evals
         .iter()
         .filter(|e| e.config.pe == pe)
-        .max_by(|a, b| a.perf_per_area.partial_cmp(&b.perf_per_area).unwrap())
+        .max_by(|a, b| a.perf_per_area.total_cmp(&b.perf_per_area))
 }
 
 /// The best (lowest energy) evaluation for a PE type, if any.
@@ -94,7 +102,7 @@ pub fn best_energy(evals: &[Evaluation], pe: PeType) -> Option<&Evaluation> {
     evals
         .iter()
         .filter(|e| e.config.pe == pe)
-        .min_by(|a, b| a.energy_uj.partial_cmp(&b.energy_uj).unwrap())
+        .min_by(|a, b| a.energy_uj.total_cmp(&b.energy_uj))
 }
 
 /// A design point normalized against the best-INT16 baseline (Fig. 4 axes:
@@ -109,13 +117,15 @@ pub struct NormalizedPoint {
 
 /// Normalize a whole space against the best-INT16-by-perf/area baseline
 /// (the paper's normalization: "with respect to the INT16 hardware
-/// configuration with the highest performance per area").
-pub fn normalize(evals: &[Evaluation]) -> Vec<NormalizedPoint> {
-    let baseline = best_perf_per_area(evals, PeType::Int16)
-        .expect("design space must contain INT16 points");
+/// configuration with the highest performance per area"). Returns
+/// [`Error::MissingBaseline`] when the space has no INT16 evaluations.
+pub fn normalize(evals: &[Evaluation]) -> Result<Vec<NormalizedPoint>> {
+    let baseline = best_perf_per_area(evals, PeType::Int16).ok_or_else(|| {
+        Error::MissingBaseline("normalize: design space has no INT16 evaluations".into())
+    })?;
     let base_ppa = baseline.perf_per_area;
     let base_energy = baseline.energy_uj;
-    evals
+    Ok(evals
         .iter()
         .map(|e| NormalizedPoint {
             pe: e.config.pe,
@@ -123,17 +133,21 @@ pub fn normalize(evals: &[Evaluation]) -> Vec<NormalizedPoint> {
             norm_perf_per_area: e.perf_per_area / base_ppa,
             norm_energy: e.energy_uj / base_energy,
         })
-        .collect()
+        .collect())
 }
 
 /// Headline ratios for a design space (the Fig. 4 summary numbers):
 /// per PE type, (best perf/area ÷ best INT16 perf/area,
-///               best-INT16 energy ÷ best energy).
-pub fn headline_ratios(evals: &[Evaluation]) -> Vec<(PeType, f64, f64)> {
-    let base = best_perf_per_area(evals, PeType::Int16)
-        .expect("design space must contain INT16 points");
-    let base_energy_best = best_energy(evals, PeType::Int16).unwrap();
-    PeType::ALL
+///               best-INT16 energy ÷ best energy). Returns
+/// [`Error::MissingBaseline`] when the space has no INT16 evaluations.
+pub fn headline_ratios(evals: &[Evaluation]) -> Result<Vec<(PeType, f64, f64)>> {
+    let base = best_perf_per_area(evals, PeType::Int16).ok_or_else(|| {
+        Error::MissingBaseline("headline_ratios: design space has no INT16 evaluations".into())
+    })?;
+    let base_energy_best = best_energy(evals, PeType::Int16).ok_or_else(|| {
+        Error::MissingBaseline("headline_ratios: design space has no INT16 evaluations".into())
+    })?;
+    Ok(PeType::ALL
         .iter()
         .filter_map(|&pe| {
             let best_ppa = best_perf_per_area(evals, pe)?;
@@ -144,26 +158,44 @@ pub fn headline_ratios(evals: &[Evaluation]) -> Vec<(PeType, f64, f64)> {
                 base_energy_best.energy_uj / best_e.energy_uj,
             ))
         })
-        .collect()
+        .collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dnn::{model_for, Dataset, ModelKind};
+    use crate::explore::Explorer;
+
+    fn serial_space(spec: &SweepSpec, seed: u64) -> Vec<Evaluation> {
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        spec.iter().map(|config| evaluate(&config, &model, seed)).collect()
+    }
 
     fn space() -> Vec<Evaluation> {
-        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
-        explore(&SweepSpec::default(), &model, 7)
+        serial_space(&SweepSpec::default(), 7)
     }
 
     #[test]
-    fn explore_covers_sweep() {
-        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    fn serial_evaluation_covers_sweep() {
         let spec = SweepSpec::tiny();
-        let evals = explore(&spec, &model, 7);
+        let evals = serial_space(&spec, 7);
         assert_eq!(evals.len(), spec.len());
         assert!(evals.iter().all(|e| e.perf_per_area > 0.0 && e.energy_uj > 0.0));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_explore_matches_explorer() {
+        let spec = SweepSpec::tiny();
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let legacy = explore(&spec, &model, 7);
+        let db = Explorer::over(spec).model(model).workers(2).seed(7).run().unwrap();
+        assert_eq!(legacy.len(), db.spaces[0].evals.len());
+        for (a, b) in legacy.iter().zip(&db.spaces[0].evals) {
+            assert_eq!(a.config.id(), b.config.id());
+            assert_eq!(a.perf_per_area, b.perf_per_area);
+        }
     }
 
     #[test]
@@ -171,7 +203,7 @@ mod tests {
         // The paper's central result: LightPEs beat INT16 and FP32 on both
         // perf/area and energy at their respective best points.
         let evals = space();
-        let ratios = headline_ratios(&evals);
+        let ratios = headline_ratios(&evals).unwrap();
         let get = |pe: PeType| ratios.iter().find(|(p, _, _)| *p == pe).unwrap();
         let (_, l1_ppa, l1_energy) = get(PeType::LightPe1);
         let (_, l2_ppa, l2_energy) = get(PeType::LightPe2);
@@ -190,13 +222,23 @@ mod tests {
     #[test]
     fn normalization_baseline_is_unity() {
         let evals = space();
-        let normalized = normalize(&evals);
+        let normalized = normalize(&evals).unwrap();
         let best = normalized
             .iter()
             .filter(|p| p.pe == PeType::Int16)
             .map(|p| p.norm_perf_per_area)
             .fold(f64::NEG_INFINITY, f64::max);
         assert!((best - 1.0).abs() < 1e-12, "best INT16 must normalize to 1.0, got {best}");
+    }
+
+    #[test]
+    fn missing_int16_baseline_is_typed_error() {
+        let spec = SweepSpec { pe_types: vec![PeType::Fp32], ..SweepSpec::tiny() };
+        let evals = serial_space(&spec, 7);
+        assert!(matches!(normalize(&evals), Err(Error::MissingBaseline(_))));
+        assert!(matches!(headline_ratios(&evals), Err(Error::MissingBaseline(_))));
+        // The empty space is also baseline-free, not a panic.
+        assert!(matches!(normalize(&[]), Err(Error::MissingBaseline(_))));
     }
 
     #[test]
@@ -214,9 +256,8 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
-        let a = explore(&SweepSpec::tiny(), &model, 3);
-        let b = explore(&SweepSpec::tiny(), &model, 3);
+        let a = serial_space(&SweepSpec::tiny(), 3);
+        let b = serial_space(&SweepSpec::tiny(), 3);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.perf_per_area, y.perf_per_area);
         }

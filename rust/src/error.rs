@@ -1,0 +1,121 @@
+//! Crate-wide typed error (`qadam::Error`) and result alias.
+//!
+//! Every fallible public API in the analytical core and the exploration
+//! layer returns [`Error`] instead of `Result<_, String>` or panicking:
+//! config validation ([`Error::InvalidConfig`]), input parsing
+//! ([`Error::ParseError`]), the paper's INT16 normalization baseline
+//! ([`Error::MissingBaseline`]), filesystem access ([`Error::Io`]), and
+//! the PJRT runtime ([`Error::Runtime`] / [`Error::Unsupported`]).
+
+use std::fmt;
+
+use crate::util::json::JsonError;
+
+/// Crate-wide result alias; the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// The unified QADAM error type.
+#[derive(Debug)]
+pub enum Error {
+    /// A structurally invalid configuration: zero-sized PE arrays, empty
+    /// sweep axes, out-of-range shard indices, unsupported datasets.
+    InvalidConfig(String),
+    /// Malformed input: JSON config files, CLI values, artifact manifests.
+    ParseError(String),
+    /// A design space has no INT16 evaluations to normalize against
+    /// (Figs. 4-6 rescale "with respect to the INT16 hardware
+    /// configuration with the highest performance per area").
+    MissingBaseline(String),
+    /// Filesystem failure (config files, RTL bundles, artifacts).
+    Io(std::io::Error),
+    /// PJRT runtime failure: artifact loading, compilation, execution,
+    /// or tensor shape/dtype mismatches.
+    Runtime(String),
+    /// The requested capability is not compiled into this build (e.g. the
+    /// `pjrt` feature for the XLA-backed runtime).
+    Unsupported(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            Error::ParseError(msg) => write!(f, "parse error: {msg}"),
+            Error::MissingBaseline(msg) => write!(f, "missing INT16 baseline: {msg}"),
+            Error::Io(err) => write!(f, "io error: {err}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Unsupported(msg) => write!(f, "unsupported: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(err) => Some(err),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(err: std::io::Error) -> Self {
+        Error::Io(err)
+    }
+}
+
+impl From<JsonError> for Error {
+    fn from(err: JsonError) -> Self {
+        Error::ParseError(err.to_string())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(err: xla::Error) -> Self {
+        Error::Runtime(err.to_string())
+    }
+}
+
+impl Error {
+    /// Short machine-readable kind tag (log filtering and test assertions).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Error::InvalidConfig(_) => "invalid_config",
+            Error::ParseError(_) => "parse_error",
+            Error::MissingBaseline(_) => "missing_baseline",
+            Error::Io(_) => "io",
+            Error::Runtime(_) => "runtime",
+            Error::Unsupported(_) => "unsupported",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_by_kind() {
+        let err = Error::InvalidConfig("rows must be positive".into());
+        assert!(err.to_string().contains("invalid configuration"));
+        let err = Error::MissingBaseline("no INT16 points".into());
+        assert!(err.to_string().contains("INT16"));
+        assert_eq!(err.kind(), "missing_baseline");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let err: Error = io.into();
+        assert_eq!(err.kind(), "io");
+        assert!(std::error::Error::source(&err).is_some());
+    }
+
+    #[test]
+    fn json_errors_become_parse_errors() {
+        let parse_failure = crate::util::json::Json::parse("{").unwrap_err();
+        let err: Error = parse_failure.into();
+        assert_eq!(err.kind(), "parse_error");
+    }
+}

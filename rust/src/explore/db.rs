@@ -1,0 +1,89 @@
+//! Campaign result aggregation: per-model evaluation spaces, throughput
+//! stats, and the headline figures-of-merit the paper's plots need.
+//!
+//! Produced by [`Explorer::run`](super::Explorer::run); previously owned
+//! by the coordinator, which now re-exports these types.
+
+use crate::dnn::Dataset;
+use crate::dse::{self, Evaluation};
+use crate::error::Result;
+use crate::quant::PeType;
+
+/// All evaluations for one (model, dataset) pair.
+#[derive(Debug, Clone)]
+pub struct ModelSpace {
+    pub model_name: String,
+    pub dataset: Dataset,
+    pub evals: Vec<Evaluation>,
+}
+
+/// Campaign results across a model set.
+#[derive(Debug, Clone)]
+pub struct EvalDatabase {
+    pub dataset: Dataset,
+    pub spaces: Vec<ModelSpace>,
+    pub stats: CampaignStats,
+}
+
+/// Campaign throughput metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct CampaignStats {
+    pub design_points: usize,
+    pub evaluations: usize,
+    pub wall_seconds: f64,
+    pub workers: usize,
+}
+
+impl CampaignStats {
+    /// Evaluations per second (the §Perf headline for L3).
+    pub fn evals_per_sec(&self) -> f64 {
+        self.evaluations as f64 / self.wall_seconds.max(1e-9)
+    }
+}
+
+impl EvalDatabase {
+    /// Headline ratios per model (Fig. 4 summary): the geometric-mean
+    /// across models is the paper's "on average across all workloads".
+    /// Fails with [`Error::MissingBaseline`](crate::Error::MissingBaseline)
+    /// when a space has no INT16 points.
+    pub fn headline_per_model(&self) -> Result<Vec<(String, Vec<(PeType, f64, f64)>)>> {
+        self.spaces
+            .iter()
+            .map(|s| Ok((s.model_name.clone(), dse::headline_ratios(&s.evals)?)))
+            .collect()
+    }
+
+    /// Geometric-mean headline ratios across this dataset's models:
+    /// (pe, perf/area gain, energy gain).
+    pub fn headline_geomean(&self) -> Result<Vec<(PeType, f64, f64)>> {
+        let per_model = self.headline_per_model()?;
+        Ok(PeType::ALL
+            .iter()
+            .filter(|&&pe| {
+                // Skip PE types absent from the explored space.
+                per_model
+                    .iter()
+                    .any(|(_, rs)| rs.iter().any(|(p, _, _)| *p == pe))
+            })
+            .map(|&pe| {
+                let ppa: Vec<f64> = per_model
+                    .iter()
+                    .filter_map(|(_, rs)| {
+                        rs.iter().find(|(p, _, _)| *p == pe).map(|(_, a, _)| *a)
+                    })
+                    .collect();
+                let energy: Vec<f64> = per_model
+                    .iter()
+                    .filter_map(|(_, rs)| {
+                        rs.iter().find(|(p, _, _)| *p == pe).map(|(_, _, e)| *e)
+                    })
+                    .collect();
+                (
+                    pe,
+                    crate::util::stats::geomean(&ppa),
+                    crate::util::stats::geomean(&energy),
+                )
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,391 @@
+//! Unified design-space exploration API (§IV-A) — the single entry point
+//! every DSE consumer (CLI, coordinator, report generator, benches,
+//! examples) goes through.
+//!
+//! [`Explorer`] is a builder over a [`SweepSpec`]: pick the model set (or
+//! a whole dataset's paper models), a worker count, a seed, and optionally
+//! a round-robin shard of the space, then either
+//!
+//! * [`Explorer::run`] — evaluate everything into an [`EvalDatabase`], or
+//! * [`Explorer::stream`] — consume [`PointResult`]s incrementally, in
+//!   design-point order, while workers are still evaluating the rest.
+//!
+//! Either way the pipeline is the same: design points are decoded lazily
+//! from the sweep's mixed-radix index (no full-space materialization), one
+//! [`SynthReport`](crate::synth::SynthReport) is amortized per design
+//! point across the entire model set (synthesize once, map every model),
+//! and evaluation is spread over a self-balancing worker pool. Results are
+//! deterministic for a fixed seed regardless of worker count.
+//!
+//! ```no_run
+//! use qadam::arch::SweepSpec;
+//! use qadam::dnn::Dataset;
+//! use qadam::explore::Explorer;
+//!
+//! let db = Explorer::over(SweepSpec::default())
+//!     .dataset(Dataset::Cifar10)
+//!     .workers(8)
+//!     .seed(7)
+//!     .run()?;
+//! for (pe, ppa, energy) in db.headline_geomean()? {
+//!     println!("{pe}: {ppa:.2}x perf/area, {energy:.2}x less energy");
+//! }
+//! # Ok::<(), qadam::Error>(())
+//! ```
+
+pub mod db;
+
+pub use db::{CampaignStats, EvalDatabase, ModelSpace};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::arch::{AcceleratorConfig, SweepSpec};
+use crate::coordinator::pool::default_workers;
+use crate::dnn::{models_for, Dataset, Model};
+use crate::dse::{self, Evaluation};
+use crate::error::{Error, Result};
+use crate::synth::synthesize;
+
+/// One fully evaluated design point, streamed as soon as it is ready.
+#[derive(Debug, Clone)]
+pub struct PointResult {
+    /// Index of this point in the sweep's cross-product order.
+    pub index: usize,
+    pub config: AcceleratorConfig,
+    /// One evaluation per model, in the explorer's model order.
+    pub evals: Vec<Evaluation>,
+}
+
+/// Builder for a design-space exploration campaign.
+#[derive(Debug, Clone)]
+pub struct Explorer {
+    spec: SweepSpec,
+    models: Vec<Model>,
+    dataset: Option<Dataset>,
+    workers: usize,
+    seed: u64,
+    shard: (usize, usize),
+}
+
+impl Explorer {
+    /// Start a campaign over a design space. Defaults: no models (set via
+    /// [`Self::models`], [`Self::model`], or [`Self::dataset`]), all cores
+    /// minus one, the coordinator's historical seed, the whole space.
+    pub fn over(spec: SweepSpec) -> Self {
+        Self {
+            spec,
+            models: Vec::new(),
+            dataset: None,
+            workers: default_workers(),
+            seed: 0x9ADA,
+            shard: (0, 1),
+        }
+    }
+
+    /// Explore against an explicit model set (replaces any prior set).
+    pub fn models(mut self, models: Vec<Model>) -> Self {
+        self.models = models;
+        self
+    }
+
+    /// Add a single model to the workload set.
+    pub fn model(mut self, model: Model) -> Self {
+        self.models.push(model);
+        self
+    }
+
+    /// Explore against a dataset's full paper model set (Fig. 4 panels);
+    /// replaces any prior model set and labels the database.
+    pub fn dataset(mut self, dataset: Dataset) -> Self {
+        self.dataset = Some(dataset);
+        self.models = models_for(dataset);
+        self
+    }
+
+    /// Worker thread count (`0` = cores minus one).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = if workers == 0 { default_workers() } else { workers };
+        self
+    }
+
+    /// Seed for the synthesis noise model (determinism knob).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Restrict to the round-robin shard `shard` of `num_shards` (the
+    /// leader/worker split; composes with [`SweepSpec::shard_iter`]).
+    pub fn shard(mut self, shard: usize, num_shards: usize) -> Self {
+        self.shard = (shard, num_shards);
+        self
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.spec.is_empty() {
+            return Err(Error::InvalidConfig("sweep spec has an empty axis".into()));
+        }
+        if self.models.is_empty() {
+            return Err(Error::InvalidConfig(
+                "no models to evaluate: call .models(), .model(), or .dataset()".into(),
+            ));
+        }
+        let (shard, num_shards) = self.shard;
+        if num_shards == 0 || shard >= num_shards {
+            return Err(Error::InvalidConfig(format!(
+                "shard {shard} out of range for {num_shards} shards"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Number of design points this explorer will evaluate (shard-aware).
+    pub fn design_points(&self) -> usize {
+        let (shard, num_shards) = self.shard;
+        let len = self.spec.len();
+        if num_shards == 0 || shard >= len {
+            0
+        } else {
+            (len - shard).div_ceil(num_shards)
+        }
+    }
+
+    /// Evaluate every design point and aggregate per-model spaces — the
+    /// campaign product the figures consume.
+    pub fn run(&self) -> Result<EvalDatabase> {
+        let mut spaces: Vec<ModelSpace> = self
+            .models
+            .iter()
+            .map(|m| ModelSpace {
+                model_name: m.name.clone(),
+                dataset: m.dataset,
+                evals: Vec::with_capacity(self.design_points()),
+            })
+            .collect();
+        let stats = self.stream(|point| {
+            for (space, eval) in spaces.iter_mut().zip(point.evals) {
+                space.evals.push(eval);
+            }
+        })?;
+        let dataset = self.dataset.unwrap_or(self.models[0].dataset);
+        Ok(EvalDatabase { dataset, spaces, stats })
+    }
+
+    /// Evaluate the space, delivering each design point to `sink` in
+    /// cross-product order as soon as it (and all earlier points) is
+    /// ready. Memory is bounded: workers never run more than a small
+    /// window ahead of the sink, so at most O(workers) results are ever
+    /// buffered and nothing is retained after the sink returns —
+    /// million-point campaigns can stream to disk, sockets, or running
+    /// aggregations.
+    pub fn stream(&self, mut sink: impl FnMut(PointResult)) -> Result<CampaignStats> {
+        self.validate()?;
+        let (shard, num_shards) = self.shard;
+        let total = self.design_points();
+        let spec = &self.spec;
+        let models = &self.models;
+        let seed = self.seed;
+        let worker_count = self.workers.min(total.max(1));
+        // Max positions a worker may run ahead of the last delivered one;
+        // caps the reorder buffer even when one point is pathologically
+        // slower than the rest.
+        let window = worker_count * 4;
+        let started = Instant::now();
+        let cursor = AtomicUsize::new(0);
+        let cursor_ref = &cursor;
+        let delivered = AtomicUsize::new(0);
+        let delivered_ref = &delivered;
+        let stop = AtomicBool::new(false);
+        let stop_ref = &stop;
+        let (tx, rx) = mpsc::channel::<(usize, PointResult)>();
+        std::thread::scope(|scope| {
+            for _ in 0..worker_count {
+                let tx = tx.clone();
+                scope.spawn(move || loop {
+                    // Claim the next unevaluated position (self-balancing
+                    // across uneven per-point costs, like the pool).
+                    let pos = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                    if pos >= total {
+                        break;
+                    }
+                    // Throttle: wait until the sink has caught up to within
+                    // `window`. The worker holding the lowest undelivered
+                    // position never waits, so progress is guaranteed.
+                    while pos >= delivered_ref.load(Ordering::Acquire) + window {
+                        if stop_ref.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        std::thread::park_timeout(Duration::from_millis(1));
+                    }
+                    let index = shard + pos * num_shards;
+                    let config = spec.get(index).expect("shard index within cross-product");
+                    let synth = synthesize(&config, seed);
+                    let evals: Vec<Evaluation> =
+                        models.iter().map(|m| dse::evaluate_with_synth(&synth, m)).collect();
+                    if tx.send((pos, PointResult { index, config, evals })).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            // Release throttled workers on any receiver exit, including a
+            // sink panic — otherwise scope join would hang.
+            struct StopGuard<'a>(&'a AtomicBool);
+            impl Drop for StopGuard<'_> {
+                fn drop(&mut self) {
+                    self.0.store(true, Ordering::Relaxed);
+                }
+            }
+            let _guard = StopGuard(stop_ref);
+            // Reorder out-of-order completions so the sink observes the
+            // deterministic cross-product order.
+            let mut pending: BTreeMap<usize, PointResult> = BTreeMap::new();
+            let mut next = 0usize;
+            for (pos, result) in rx {
+                pending.insert(pos, result);
+                while let Some(ready) = pending.remove(&next) {
+                    sink(ready);
+                    next += 1;
+                    delivered_ref.store(next, Ordering::Release);
+                }
+            }
+            debug_assert!(pending.is_empty(), "all streamed points must be delivered");
+        });
+        Ok(CampaignStats {
+            design_points: total,
+            evaluations: total * self.models.len(),
+            wall_seconds: started.elapsed().as_secs_f64(),
+            workers: self.workers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{model_for, ModelKind};
+    use crate::quant::PeType;
+
+    #[test]
+    fn run_covers_models_and_space() {
+        let spec = SweepSpec::tiny();
+        let db = Explorer::over(spec.clone())
+            .dataset(Dataset::Cifar10)
+            .workers(2)
+            .seed(7)
+            .run()
+            .unwrap();
+        assert_eq!(db.spaces.len(), 3); // VGG-16, ResNet-20, ResNet-56
+        for space in &db.spaces {
+            assert_eq!(space.evals.len(), spec.len());
+        }
+        assert_eq!(db.stats.evaluations, spec.len() * 3);
+        assert!(db.stats.evals_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn run_matches_serial_evaluate_point_for_point() {
+        let spec = SweepSpec::tiny();
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let serial: Vec<Evaluation> =
+            spec.iter().map(|c| dse::evaluate(&c, &model, 7)).collect();
+        let db = Explorer::over(spec).model(model).workers(4).seed(7).run().unwrap();
+        let parallel = &db.spaces[0].evals;
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(parallel) {
+            assert_eq!(a.config.id(), b.config.id());
+            assert_eq!(a.perf_per_area, b.perf_per_area);
+            assert_eq!(a.energy_uj, b.energy_uj);
+        }
+    }
+
+    #[test]
+    fn stream_delivers_points_in_order() {
+        let spec = SweepSpec::tiny();
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let explorer = Explorer::over(spec.clone()).model(model).workers(4).seed(7);
+        let mut indices = Vec::new();
+        let stats = explorer
+            .stream(|point| {
+                assert_eq!(point.evals.len(), 1);
+                indices.push(point.index);
+            })
+            .unwrap();
+        assert_eq!(indices, (0..spec.len()).collect::<Vec<_>>());
+        assert_eq!(stats.design_points, spec.len());
+    }
+
+    #[test]
+    fn sharded_streams_partition_the_space() {
+        let spec = SweepSpec::tiny();
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let mut seen = Vec::new();
+        for shard in 0..3 {
+            Explorer::over(spec.clone())
+                .model(model.clone())
+                .workers(2)
+                .shard(shard, 3)
+                .stream(|point| seen.push(point.index))
+                .unwrap();
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..spec.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_model_set_is_invalid_config() {
+        let err = Explorer::over(SweepSpec::tiny()).run().unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+    }
+
+    #[test]
+    fn empty_axis_is_invalid_config() {
+        let mut spec = SweepSpec::tiny();
+        spec.glb_kib.clear();
+        let err = Explorer::over(spec).dataset(Dataset::Cifar10).run().unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+    }
+
+    #[test]
+    fn bad_shard_is_invalid_config() {
+        let err = Explorer::over(SweepSpec::tiny())
+            .dataset(Dataset::Cifar10)
+            .shard(3, 3)
+            .run()
+            .unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+    }
+
+    #[test]
+    fn int16_free_space_explores_but_has_no_baseline() {
+        let spec = SweepSpec { pe_types: vec![PeType::LightPe1], ..SweepSpec::tiny() };
+        let db = Explorer::over(spec)
+            .model(model_for(ModelKind::ResNet20, Dataset::Cifar10))
+            .workers(2)
+            .run()
+            .unwrap();
+        // Exploration itself succeeds; the paper normalization cannot.
+        assert!(!db.spaces[0].evals.is_empty());
+        let err = db.headline_geomean().unwrap_err();
+        assert_eq!(err.kind(), "missing_baseline");
+        let err = dse::normalize(&db.spaces[0].evals).unwrap_err();
+        assert!(matches!(err, Error::MissingBaseline(_)));
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let spec = SweepSpec::tiny();
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let one = Explorer::over(spec.clone()).model(model.clone()).workers(1).seed(3);
+        let many = Explorer::over(spec).model(model).workers(8).seed(3);
+        let a = one.run().unwrap();
+        let b = many.run().unwrap();
+        for (x, y) in a.spaces[0].evals.iter().zip(&b.spaces[0].evals) {
+            assert_eq!(x.perf_per_area, y.perf_per_area);
+            assert_eq!(x.energy_uj, y.energy_uj);
+        }
+    }
+}

@@ -8,12 +8,17 @@
 //! The crate is organized as substrates (technology models, a synthesis
 //! engine, an RTL generator, a cycle-level simulator), the analytical core
 //! (row-stationary dataflow mapper, energy model, polynomial PPA surrogates),
-//! and the exploration layer (DSE engine, Pareto analysis, a leader/worker
-//! coordinator, and a PJRT runtime that executes the AOT-compiled JAX/Pallas
-//! quantization-aware training artifacts).
+//! and the exploration layer (the unified [`explore::Explorer`] API, Pareto
+//! analysis, a leader/worker coordinator, and a PJRT runtime that executes
+//! the AOT-compiled JAX/Pallas quantization-aware training artifacts).
+//!
+//! Every DSE campaign — CLI, report generator, benches, examples — goes
+//! through [`explore::Explorer`]; fallible APIs return the crate-wide
+//! typed [`Error`].
 //!
 //! See `DESIGN.md` for the module inventory and the per-experiment index.
 
+pub mod error;
 pub mod util;
 pub mod tech;
 pub mod quant;
@@ -27,7 +32,11 @@ pub mod sim;
 pub mod ppa;
 pub mod dse;
 pub mod accuracy;
+pub mod explore;
 pub mod coordinator;
 pub mod runtime;
 pub mod report;
 pub mod bench;
+
+pub use error::{Error, Result};
+pub use explore::Explorer;

@@ -3,16 +3,18 @@
 //! Subcommands map one-to-one onto the paper's workflow (Fig. 1): feed
 //! accelerator parameters + DNN configurations, get PPA results, DSE
 //! scatter data, Pareto fronts, generated RTL, simulation traces, and the
-//! QAT training driver.
+//! QAT training driver. Every campaign runs through the unified
+//! [`Explorer`] API; failures surface as typed [`qadam::Error`]s.
 
 use std::path::Path;
 
 use qadam::arch::{AcceleratorConfig, SweepSpec};
-use qadam::coordinator::{default_workers, Coordinator};
+use qadam::coordinator::default_workers;
 use qadam::dataflow::{map_model, Dataflow};
 use qadam::dnn::{model_for, Dataset, ModelKind};
 use qadam::dse;
 use qadam::energy::energy_of;
+use qadam::explore::Explorer;
 use qadam::ppa::PpaModel;
 use qadam::quant::PeType;
 use qadam::report;
@@ -24,6 +26,7 @@ use qadam::util::cli::Command;
 use qadam::util::log::{self, Level};
 use qadam::util::rng::Pcg64;
 use qadam::util::table::{format_sig, Table};
+use qadam::{Error, Result};
 
 fn cli() -> Command {
     Command::new("qadam", "quantization-aware PPA modeling & DSE for DNN accelerators")
@@ -50,7 +53,8 @@ fn cli() -> Command {
         .sub(
             Command::new("dse", "design-space exploration campaign")
                 .opt("dataset", "cifar10", "cifar10|cifar100|imagenet")
-                .opt("sweep", "", "JSON sweep-config file (empty = default space)"),
+                .opt("sweep", "", "JSON sweep-config file (empty = default space)")
+                .opt("shard", "", "run only shard I of N (format: I/N)"),
         )
         .sub(
             Command::new("pareto", "Pareto-front analysis (Figs. 5/6)")
@@ -84,7 +88,27 @@ fn cli() -> Command {
         )
 }
 
-fn main() -> anyhow::Result<()> {
+fn parse_pe(text: &str) -> Result<PeType> {
+    PeType::parse(text).ok_or_else(|| Error::ParseError(format!("bad --pe '{text}'")))
+}
+
+fn parse_dataset(text: &str) -> Result<Dataset> {
+    Dataset::parse(text).ok_or_else(|| Error::ParseError(format!("bad --dataset '{text}'")))
+}
+
+/// Parse an `I/N` shard designator ("2/8" = shard 2 of 8).
+fn parse_shard(text: &str) -> Result<(usize, usize)> {
+    let bad = || Error::ParseError(format!("bad --shard '{text}' (expected I/N, e.g. 0/4)"));
+    let (i, n) = text.split_once('/').ok_or_else(bad)?;
+    let shard: usize = i.trim().parse().map_err(|_| bad())?;
+    let num_shards: usize = n.trim().parse().map_err(|_| bad())?;
+    if num_shards == 0 || shard >= num_shards {
+        return Err(bad());
+    }
+    Ok((shard, num_shards))
+}
+
+fn main() -> Result<()> {
     log::init_from_env();
     let matches = cli().parse_or_exit();
     if let Some(level) = Level::parse(matches.get_str("log-level")) {
@@ -99,12 +123,13 @@ fn main() -> anyhow::Result<()> {
     match matches.subcommand() {
         "synth" => {
             let config = AcceleratorConfig {
-                pe: PeType::parse(matches.get_str("pe")).expect("bad --pe"),
+                pe: parse_pe(matches.get_str("pe"))?,
                 rows: matches.get_usize("rows"),
                 cols: matches.get_usize("cols"),
                 glb_kib: matches.get_usize("glb-kib"),
                 ..Default::default()
             };
+            config.validate()?;
             let report = synth::synthesize(&config, seed);
             let mut table = Table::new(&["metric", "value"]);
             table.row(&["design".into(), config.id()]);
@@ -119,11 +144,13 @@ fn main() -> anyhow::Result<()> {
         }
         "ppa" => {
             let config = AcceleratorConfig {
-                pe: PeType::parse(matches.get_str("pe")).expect("bad --pe"),
+                pe: parse_pe(matches.get_str("pe"))?,
                 ..Default::default()
             };
-            let dataset = Dataset::parse(matches.get_str("dataset")).expect("bad --dataset");
-            let kind = ModelKind::parse(matches.get_str("model")).expect("bad --model");
+            let dataset = parse_dataset(matches.get_str("dataset"))?;
+            let kind = ModelKind::parse(matches.get_str("model")).ok_or_else(|| {
+                Error::ParseError(format!("bad --model '{}'", matches.get_str("model")))
+            })?;
             let model = model_for(kind, dataset);
             let synth_report = synth::synthesize(&config, seed);
             let mapping = map_model(&model, &config, Dataflow::RowStationary);
@@ -162,15 +189,22 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "dse" => {
-            let dataset = Dataset::parse(matches.get_str("dataset")).expect("bad --dataset");
+            let dataset = parse_dataset(matches.get_str("dataset"))?;
             let sweep_path = matches.get_str("sweep");
             let spec = if sweep_path.is_empty() {
                 SweepSpec::default()
             } else {
-                SweepSpec::from_file(Path::new(sweep_path))
-                    .unwrap_or_else(|e| panic!("loading sweep '{sweep_path}': {e}"))
+                SweepSpec::from_file(Path::new(sweep_path))?
             };
-            let db = Coordinator::new(workers, seed).campaign(&spec, dataset);
+            let mut explorer =
+                Explorer::over(spec).dataset(dataset).workers(workers).seed(seed);
+            let shard_arg = matches.get_str("shard");
+            let sharded = !shard_arg.is_empty();
+            if sharded {
+                let (shard, num_shards) = parse_shard(shard_arg)?;
+                explorer = explorer.shard(shard, num_shards);
+            }
+            let db = explorer.run()?;
             println!(
                 "{} design points x {} models in {:.2}s ({:.0} evals/s, {} workers)",
                 db.stats.design_points,
@@ -179,51 +213,68 @@ fn main() -> anyhow::Result<()> {
                 db.stats.evals_per_sec(),
                 db.stats.workers
             );
-            for (pe, ppa, energy) in db.headline_geomean() {
-                println!(
-                    "  {:<10} {}x perf/area, {}x less energy vs best INT16",
-                    pe.name(),
-                    format_sig(ppa, 3),
-                    format_sig(energy, 3)
-                );
-            }
-            // Quantified Pareto quality per model: hypervolume of each PE
-            // type's normalized (perf/area ↑, energy ↓) cloud.
-            for space in &db.spaces {
-                let normalized = dse::normalize(&space.evals);
-                print!("  {:<10} hypervolume:", space.model_name);
-                for pe in PeType::ALL {
-                    let points: Vec<(f64, f64)> = normalized
-                        .iter()
-                        .filter(|p| p.pe == pe)
-                        .map(|p| (p.norm_perf_per_area, p.norm_energy))
-                        .collect();
-                    let hv = dse::hypervolume_2d(
-                        &points,
-                        (0.0, 10.0),
-                        (dse::Orientation::Maximize, dse::Orientation::Minimize),
-                    );
-                    print!(" {}={}", pe.name(), format_sig(hv, 3));
+            if sharded {
+                // A shard sees only part of the space, so its local best
+                // INT16 is not the campaign baseline; normalized summaries
+                // would be incomparable across shards. Report raw bests.
+                println!("  (shard output: normalize after merging all shards)");
+                for space in &db.spaces {
+                    print!("  {:<10} best perf/area:", space.model_name);
+                    for pe in PeType::ALL {
+                        if let Some(best) = dse::best_perf_per_area(&space.evals, pe) {
+                            print!(" {}={}", pe.name(), format_sig(best.perf_per_area, 3));
+                        }
+                    }
+                    println!();
                 }
-                println!();
+            } else {
+                for (pe, ppa, energy) in db.headline_geomean()? {
+                    println!(
+                        "  {:<10} {}x perf/area, {}x less energy vs best INT16",
+                        pe.name(),
+                        format_sig(ppa, 3),
+                        format_sig(energy, 3)
+                    );
+                }
+                // Quantified Pareto quality per model: hypervolume of each
+                // PE type's normalized (perf/area ↑, energy ↓) cloud.
+                for space in &db.spaces {
+                    let normalized = dse::normalize(&space.evals)?;
+                    print!("  {:<10} hypervolume:", space.model_name);
+                    for pe in PeType::ALL {
+                        let points: Vec<(f64, f64)> = normalized
+                            .iter()
+                            .filter(|p| p.pe == pe)
+                            .map(|p| (p.norm_perf_per_area, p.norm_energy))
+                            .collect();
+                        let hv = dse::hypervolume_2d(
+                            &points,
+                            (0.0, 10.0),
+                            (dse::Orientation::Maximize, dse::Orientation::Minimize),
+                        );
+                        print!(" {}={}", pe.name(), format_sig(hv, 3));
+                    }
+                    println!();
+                }
             }
         }
         "pareto" => {
-            let dataset = Dataset::parse(matches.get_str("dataset")).expect("bad --dataset");
+            let dataset = parse_dataset(matches.get_str("dataset"))?;
             let figure = if matches.get_str("metric") == "energy" {
-                report::fig6(dataset, workers, seed)
+                report::fig6(dataset, workers, seed)?
             } else {
-                report::fig5(dataset, workers, seed)
+                report::fig5(dataset, workers, seed)?
             };
             print!("{}", figure.render());
         }
         "rtl" => {
             let config = AcceleratorConfig {
-                pe: PeType::parse(matches.get_str("pe")).expect("bad --pe"),
+                pe: parse_pe(matches.get_str("pe"))?,
                 rows: matches.get_usize("rows"),
                 cols: matches.get_usize("cols"),
                 ..Default::default()
             };
+            config.validate()?;
             let bundle = rtl::generate(&config);
             let out = matches.get_str("out").to_string();
             let paths = rtl::write_bundle(&bundle, Path::new(&out))?;
@@ -232,7 +283,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "sim" => {
-            let pe = PeType::parse(matches.get_str("pe")).expect("bad --pe");
+            let pe = parse_pe(matches.get_str("pe"))?;
             let config = AcceleratorConfig { pe, ..Default::default() };
             let layer = qadam::dnn::Layer::conv(
                 "cli",
@@ -258,7 +309,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
         "train" => {
-            let pe = PeType::parse(matches.get_str("pe")).expect("bad --pe");
+            let pe = parse_pe(matches.get_str("pe"))?;
             let steps = matches.get_usize("steps");
             let dir = matches.get_str("artifacts").to_string();
             let mut runtime = Runtime::new(Path::new(&dir))?;
@@ -275,14 +326,16 @@ fn main() -> anyhow::Result<()> {
             );
         }
         "report" => {
-            let dataset = Dataset::parse(matches.get_str("dataset")).expect("bad --dataset");
+            let dataset = parse_dataset(matches.get_str("dataset"))?;
             let figure = match matches.get_str("fig") {
-                "2" => report::fig2(workers, seed),
-                "3" => report::fig3(seed),
-                "4" => report::fig4(dataset, workers, seed),
-                "5" => report::fig5(dataset, workers, seed),
-                "6" => report::fig6(dataset, workers, seed),
-                other => anyhow::bail!("unknown figure '{other}'"),
+                "2" => report::fig2(workers, seed)?,
+                "3" => report::fig3(seed)?,
+                "4" => report::fig4(dataset, workers, seed)?,
+                "5" => report::fig5(dataset, workers, seed)?,
+                "6" => report::fig6(dataset, workers, seed)?,
+                other => {
+                    return Err(Error::ParseError(format!("unknown figure '{other}'")));
+                }
             };
             print!("{}", figure.render());
         }

@@ -1,12 +1,15 @@
 //! Figure regeneration (§IV): one function per paper figure, producing a
 //! CSV table plus a terminal scatter rendering. Shared by the CLI
-//! (`qadam report`) and the benches (`rust/benches/fig*.rs`).
+//! (`qadam report`) and the benches (`rust/benches/fig*.rs`). All figure
+//! builders run their campaigns through [`Explorer`] and surface typed
+//! [`Error`]s instead of panicking.
 
 use crate::accuracy;
 use crate::arch::SweepSpec;
-use crate::coordinator::Coordinator;
-use crate::dnn::Dataset;
-use crate::dse::{self, Orientation};
+use crate::dnn::{Dataset, Model};
+use crate::dse::{self, Evaluation, Orientation};
+use crate::error::{Error, Result};
+use crate::explore::Explorer;
 use crate::ppa::PpaModel;
 use crate::quant::PeType;
 use crate::synth::synthesize_sweep;
@@ -42,11 +45,22 @@ fn marker_for(pe: PeType) -> char {
     }
 }
 
+/// Run the default sweep against one model (the single-space campaigns
+/// behind Figs. 2 and the QAT join).
+fn explore_single(model: Model, workers: usize, seed: u64) -> Result<Vec<Evaluation>> {
+    let db = Explorer::over(SweepSpec::default())
+        .model(model)
+        .workers(workers)
+        .seed(seed)
+        .run()?;
+    Ok(db.spaces.into_iter().next().map(|space| space.evals).unwrap_or_default())
+}
+
 /// **Fig. 2** — perf/area and energy spread across PE types & precisions
 /// ("performance per area and energy varies more than 5× and 35×").
-pub fn fig2(workers: usize, seed: u64) -> Figure {
+pub fn fig2(workers: usize, seed: u64) -> Result<Figure> {
     let model = crate::dnn::model_for(crate::dnn::ModelKind::ResNet20, Dataset::Cifar10);
-    let evals = Coordinator::new(workers, seed).explore_model(&SweepSpec::default(), &model);
+    let evals = explore_single(model, workers, seed)?;
     let mut table = Table::new(&["pe", "min_ppa", "max_ppa", "min_energy_uj", "max_energy_uj"]);
     let mut series = Vec::new();
     for pe in PeType::ALL {
@@ -75,7 +89,7 @@ pub fn fig2(workers: usize, seed: u64) -> Figure {
     let all_energy: Vec<f64> = evals.iter().map(|e| e.energy_uj).collect();
     let ppa_spread = stats::max(&all_ppa) / stats::min(&all_ppa);
     let energy_spread = stats::max(&all_energy) / stats::min(&all_energy);
-    Figure {
+    Ok(Figure {
         id: "Fig. 2 — design-space spread (ResNet-20 / CIFAR-10)".into(),
         plot: scatter(
             "perf/area vs energy across the design space",
@@ -94,11 +108,11 @@ pub fn fig2(workers: usize, seed: u64) -> Figure {
             ),
             format!("energy spread: {}x (paper: >35x)", format_sig(energy_spread, 3)),
         ],
-    }
+    })
 }
 
 /// **Fig. 3** — actual vs polynomial-estimated power/perf/area per PE type.
-pub fn fig3(seed: u64) -> Figure {
+pub fn fig3(seed: u64) -> Result<Figure> {
     let spec = SweepSpec::default();
     let mut table =
         Table::new(&["pe", "metric", "degree", "pearson_r", "r2", "mape_pct", "cv_rmse"]);
@@ -137,7 +151,7 @@ pub fn fig3(seed: u64) -> Figure {
                 .collect(),
         });
     }
-    Figure {
+    Ok(Figure {
         id: "Fig. 3 — PPA model fit (actual vs estimated)".into(),
         plot: scatter(
             "actual vs estimated area (diagonal = perfect)",
@@ -153,25 +167,29 @@ pub fn fig3(seed: u64) -> Figure {
             "worst-case Pearson r across all PE types & metrics: {} (paper: \"agrees closely\")",
             format_sig(worst_r, 4)
         )],
-    }
+    })
 }
 
 /// **Fig. 4** — normalized perf/area vs normalized energy per (model,
 /// dataset); summary = the paper's average gains vs best INT16.
-pub fn fig4(dataset: Dataset, workers: usize, seed: u64) -> Figure {
-    let db = Coordinator::new(workers, seed).campaign(&SweepSpec::default(), dataset);
+pub fn fig4(dataset: Dataset, workers: usize, seed: u64) -> Result<Figure> {
+    let db = Explorer::over(SweepSpec::default())
+        .dataset(dataset)
+        .workers(workers)
+        .seed(seed)
+        .run()?;
     let mut table = Table::new(&["model", "pe", "norm_perf_per_area", "norm_energy_gain"]);
     let mut series: Vec<Series> = PeType::ALL
         .iter()
         .map(|&pe| Series { name: pe.name().into(), marker: marker_for(pe), points: vec![] })
         .collect();
     for space in &db.spaces {
-        let normalized = dse::normalize(&space.evals);
+        let normalized = dse::normalize(&space.evals)?;
         for point in &normalized {
             let idx = PeType::ALL.iter().position(|&p| p == point.pe).unwrap();
             series[idx].points.push((point.norm_perf_per_area, point.norm_energy));
         }
-        for (pe, ppa_gain, energy_gain) in dse::headline_ratios(&space.evals) {
+        for (pe, ppa_gain, energy_gain) in dse::headline_ratios(&space.evals)? {
             table.row(&[
                 space.model_name.clone(),
                 pe.name().into(),
@@ -181,7 +199,7 @@ pub fn fig4(dataset: Dataset, workers: usize, seed: u64) -> Figure {
         }
     }
     let mut summary = Vec::new();
-    for (pe, ppa, energy) in db.headline_geomean() {
+    for (pe, ppa, energy) in db.headline_geomean()? {
         summary.push(format!(
             "{}: {}x perf/area, {}x less energy vs best INT16 (geomean)",
             pe.name(),
@@ -190,7 +208,7 @@ pub fn fig4(dataset: Dataset, workers: usize, seed: u64) -> Figure {
         ));
     }
     summary.push("paper: LightPE-1 4.8x/4.7x, LightPE-2 4.1x/4.0x, INT16 vs FP32 1.8x/1.5x".into());
-    Figure {
+    Ok(Figure {
         id: format!("Fig. 4 — normalized DSE ({})", dataset.name()),
         plot: scatter(
             "normalized perf/area vs normalized energy",
@@ -203,22 +221,30 @@ pub fn fig4(dataset: Dataset, workers: usize, seed: u64) -> Figure {
         ),
         table,
         summary,
-    }
+    })
 }
 
 /// **Fig. 5** — Pareto front: accuracy vs normalized perf/area (CIFAR).
-pub fn fig5(dataset: Dataset, workers: usize, seed: u64) -> Figure {
+pub fn fig5(dataset: Dataset, workers: usize, seed: u64) -> Result<Figure> {
     pareto_figure(dataset, workers, seed, true)
 }
 
 /// **Fig. 6** — Pareto front: top-1 error vs normalized energy (CIFAR).
-pub fn fig6(dataset: Dataset, workers: usize, seed: u64) -> Figure {
+pub fn fig6(dataset: Dataset, workers: usize, seed: u64) -> Result<Figure> {
     pareto_figure(dataset, workers, seed, false)
 }
 
-fn pareto_figure(dataset: Dataset, workers: usize, seed: u64, perf_axis: bool) -> Figure {
-    assert!(dataset != Dataset::ImageNet, "Figs. 5/6 are CIFAR-only in the paper");
-    let db = Coordinator::new(workers, seed).campaign(&SweepSpec::default(), dataset);
+fn pareto_figure(dataset: Dataset, workers: usize, seed: u64, perf_axis: bool) -> Result<Figure> {
+    if dataset == Dataset::ImageNet {
+        return Err(Error::InvalidConfig(
+            "Figs. 5/6 are CIFAR-only in the paper".into(),
+        ));
+    }
+    let db = Explorer::over(SweepSpec::default())
+        .dataset(dataset)
+        .workers(workers)
+        .seed(seed)
+        .run()?;
     let mut table = Table::new(&["model", "pe", "x_metric", "top1_or_err", "on_pareto_front"]);
     let mut series: Vec<Series> = PeType::ALL
         .iter()
@@ -227,20 +253,34 @@ fn pareto_figure(dataset: Dataset, workers: usize, seed: u64, perf_axis: bool) -
     let mut light_on_front = 0usize;
     let mut fronts = 0usize;
     for space in &db.spaces {
-        let model_kind = crate::dnn::ModelKind::parse(&space.model_name).unwrap();
-        let baseline = dse::best_perf_per_area(&space.evals, PeType::Int16).unwrap();
+        let model_kind = crate::dnn::ModelKind::parse(&space.model_name).ok_or_else(|| {
+            Error::ParseError(format!("unknown model name '{}'", space.model_name))
+        })?;
+        let missing_baseline = || {
+            Error::MissingBaseline(format!(
+                "{}: no INT16 evaluations for the Fig. 5/6 baseline",
+                space.model_name
+            ))
+        };
+        let baseline =
+            dse::best_perf_per_area(&space.evals, PeType::Int16).ok_or_else(missing_baseline)?;
         // One point per PE type: its best config on the figure's hardware
         // axis (highest perf/area for Fig. 5, lowest energy for Fig. 6).
         let mut points: Vec<(PeType, f64, f64)> = Vec::new();
         for pe in PeType::ALL {
-            let accuracy = accuracy::registry(model_kind, dataset, pe)
-                .expect("registry covers CIFAR figures");
+            let accuracy = accuracy::registry(model_kind, dataset, pe).ok_or_else(|| {
+                Error::InvalidConfig(format!(
+                    "accuracy registry has no entry for {model_kind} / {dataset} / {pe}"
+                ))
+            })?;
             let (x, y) = if perf_axis {
-                let best = dse::best_perf_per_area(&space.evals, pe).unwrap();
+                let best =
+                    dse::best_perf_per_area(&space.evals, pe).ok_or_else(missing_baseline)?;
                 (best.perf_per_area / baseline.perf_per_area, accuracy.top1)
             } else {
-                let best = dse::best_energy(&space.evals, pe).unwrap();
-                let base_energy = dse::best_energy(&space.evals, PeType::Int16).unwrap();
+                let best = dse::best_energy(&space.evals, pe).ok_or_else(missing_baseline)?;
+                let base_energy = dse::best_energy(&space.evals, PeType::Int16)
+                    .ok_or_else(missing_baseline)?;
                 (best.energy_uj / base_energy.energy_uj, accuracy.top1_error())
             };
             points.push((pe, x, y));
@@ -282,14 +322,14 @@ fn pareto_figure(dataset: Dataset, workers: usize, seed: u64, perf_axis: bool) -
             "top-1 err %",
         )
     };
-    Figure {
+    Ok(Figure {
         id,
         plot: scatter("per-PE-type best points + Pareto front", xlabel, ylabel, &series, 64, 16, false),
         table,
         summary: vec![format!(
             "LightPE on the Pareto front in {light_on_front}/{fronts} model panels (paper: consistently)"
         )],
-    }
+    })
 }
 
 #[cfg(test)]
@@ -298,7 +338,7 @@ mod tests {
 
     #[test]
     fn fig2_spreads_exceed_paper_bounds() {
-        let figure = fig2(2, 7);
+        let figure = fig2(2, 7).unwrap();
         assert!(figure.summary[0].contains("paper"));
         // Parse the spread values back out of the summary.
         let ppa_spread: f64 =
@@ -308,14 +348,14 @@ mod tests {
 
     #[test]
     fn fig4_table_nonempty_and_renders() {
-        let figure = fig4(Dataset::Cifar10, 2, 7);
+        let figure = fig4(Dataset::Cifar10, 2, 7).unwrap();
         assert!(figure.table.len() >= 12); // 3 models × 4 PE types
         assert!(figure.render().contains("Fig. 4"));
     }
 
     #[test]
     fn fig5_lightpe_always_on_front() {
-        let figure = fig5(Dataset::Cifar10, 2, 7);
+        let figure = fig5(Dataset::Cifar10, 2, 7).unwrap();
         assert!(
             figure.summary[0].contains("3/3"),
             "LightPE must be on every CIFAR-10 front: {}",
@@ -324,8 +364,9 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "CIFAR-only")]
-    fn fig5_rejects_imagenet() {
-        fig5(Dataset::ImageNet, 1, 7);
+    fn fig5_rejects_imagenet_with_typed_error() {
+        let err = fig5(Dataset::ImageNet, 1, 7).unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        assert!(err.to_string().contains("CIFAR-only"));
     }
 }

@@ -6,9 +6,14 @@
 //! `PjRtClient::compile` (the pattern from /opt/xla-example/load_hlo);
 //! executables are compiled once and cached, execution converts between
 //! [`Tensor`] and `xla::Literal` at the boundary.
+//!
+//! The XLA backend needs the vendored `xla` crate and is gated behind the
+//! `pjrt` cargo feature. Without it, [`Runtime`] still parses manifests
+//! but `prepare`/`execute` return [`Error::Unsupported`], so offline
+//! builds compile and every other subsystem stays fully functional.
 
-pub mod tensor;
 pub mod qat;
+pub mod tensor;
 
 pub use qat::QatDriver;
 pub use tensor::Tensor;
@@ -16,8 +21,7 @@ pub use tensor::Tensor;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::error::{Error, Result};
 use crate::util::json::Json;
 
 /// Input/output signature of one artifact (from `manifest.json`).
@@ -44,19 +48,20 @@ pub struct Manifest {
 impl Manifest {
     /// Parse `manifest.json` from an artifacts directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading manifest in {}", dir.display()))?;
-        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)?;
+        let json = Json::parse(&text)
+            .map_err(|e| Error::ParseError(format!("manifest {}: {e}", path.display())))?;
         let get_usize = |key: &str| -> Result<usize> {
             json.get(key)
                 .and_then(Json::as_i64)
                 .map(|v| v as usize)
-                .ok_or_else(|| anyhow!("manifest missing '{key}'"))
+                .ok_or_else(|| Error::ParseError(format!("manifest missing '{key}'")))
         };
         let param_order: Vec<String> = json
             .get("param_order")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing param_order"))?
+            .ok_or_else(|| Error::ParseError("manifest missing param_order".into()))?
             .iter()
             .filter_map(|v| v.as_str().map(String::from))
             .collect();
@@ -66,12 +71,14 @@ impl Manifest {
                 let file = spec
                     .get("file")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                    .ok_or_else(|| Error::ParseError(format!("artifact {name} missing file")))?
                     .to_string();
                 let inputs = spec
                     .get("inputs")
                     .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?;
+                    .ok_or_else(|| {
+                        Error::ParseError(format!("artifact {name} missing inputs"))
+                    })?;
                 let mut input_shapes = Vec::new();
                 let mut input_dtypes = Vec::new();
                 for input in inputs {
@@ -94,8 +101,9 @@ impl Manifest {
                 let n_outputs = spec
                     .get("n_outputs")
                     .and_then(Json::as_i64)
-                    .ok_or_else(|| anyhow!("artifact {name} missing n_outputs"))?
-                    as usize;
+                    .ok_or_else(|| {
+                        Error::ParseError(format!("artifact {name} missing n_outputs"))
+                    })? as usize;
                 artifacts.insert(
                     name.clone(),
                     ArtifactSpec {
@@ -120,27 +128,47 @@ impl Manifest {
 }
 
 /// The PJRT runtime: a CPU client plus a compiled-executable cache.
+/// Without the `pjrt` feature this is a manifest-only stub whose
+/// `prepare`/`execute` fail with [`Error::Unsupported`].
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
     /// Create a runtime over an artifacts directory (compiles lazily).
+    #[cfg(feature = "pjrt")]
     pub fn new(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu()?;
         Ok(Runtime { client, dir: dir.to_path_buf(), manifest, executables: HashMap::new() })
     }
 
-    /// Number of PJRT devices (CPU client: 1).
+    /// Create a manifest-only stub runtime (no `pjrt` feature).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime { dir: dir.to_path_buf(), manifest })
+    }
+
+    /// Number of PJRT devices (CPU client: 1; stub: 0).
     pub fn device_count(&self) -> usize {
-        self.client.device_count()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.device_count()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            0
+        }
     }
 
     /// Compile (and cache) an artifact's executable.
+    #[cfg(feature = "pjrt")]
     pub fn prepare(&mut self, name: &str) -> Result<()> {
         if self.executables.contains_key(name) {
             return Ok(());
@@ -149,16 +177,27 @@ impl Runtime {
             .manifest
             .artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact '{name}'")))?;
         let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let text_path = path
+            .to_str()
+            .ok_or_else(|| Error::Runtime(format!("non-utf8 path {}", path.display())))?;
+        let proto = xla::HloModuleProto::from_text_file(text_path)
+            .map_err(|e| Error::Runtime(format!("loading HLO text {}: {e}", path.display())))?;
         let computation = xla::XlaComputation::from_proto(&proto);
         let executable = self.client.compile(&computation)?;
         self.executables.insert(name.to_string(), executable);
         Ok(())
+    }
+
+    /// Stub: the XLA backend is not compiled in.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        Err(Error::Unsupported(format!(
+            "cannot compile artifact '{name}' from {}: this build lacks the 'pjrt' \
+             feature (vendored xla crate)",
+            self.dir.display()
+        )))
     }
 
     /// Execute an artifact with positional tensor inputs; returns the
@@ -167,35 +206,58 @@ impl Runtime {
         self.prepare(name)?;
         let spec = &self.manifest.artifacts[name];
         if inputs.len() != spec.input_shapes.len() {
-            bail!(
+            return Err(Error::Runtime(format!(
                 "artifact '{name}' expects {} inputs, got {}",
                 spec.input_shapes.len(),
                 inputs.len()
-            );
+            )));
         }
         for (i, (tensor, shape)) in inputs.iter().zip(&spec.input_shapes).enumerate() {
             if tensor.shape() != shape.as_slice() {
-                bail!(
+                return Err(Error::Runtime(format!(
                     "artifact '{name}' input {i}: expected shape {:?}, got {:?}",
                     shape,
                     tensor.shape()
-                );
+                )));
             }
         }
+        let n_outputs = spec.n_outputs;
+        self.execute_prepared(name, inputs, n_outputs)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn execute_prepared(
+        &mut self,
+        name: &str,
+        inputs: &[Tensor],
+        n_outputs: usize,
+    ) -> Result<Vec<Tensor>> {
         let literals: Vec<xla::Literal> =
             inputs.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
         let executable = &self.executables[name];
         let result = executable.execute::<xla::Literal>(&literals)?;
         let tuple = result[0][0].to_literal_sync()?;
         let elements = tuple.to_tuple()?;
-        if elements.len() != spec.n_outputs {
-            bail!(
-                "artifact '{name}': expected {} outputs, got {}",
-                spec.n_outputs,
+        if elements.len() != n_outputs {
+            return Err(Error::Runtime(format!(
+                "artifact '{name}': expected {n_outputs} outputs, got {}",
                 elements.len()
-            );
+            )));
         }
         elements.iter().map(Tensor::from_literal).collect()
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn execute_prepared(
+        &mut self,
+        name: &str,
+        _inputs: &[Tensor],
+        _n_outputs: usize,
+    ) -> Result<Vec<Tensor>> {
+        // Unreachable in practice: `prepare` already failed.
+        Err(Error::Unsupported(format!(
+            "cannot execute artifact '{name}': this build lacks the 'pjrt' feature"
+        )))
     }
 
     /// Artifact names available in the manifest (sorted).
@@ -211,14 +273,20 @@ mod tests {
     use super::*;
 
     // Runtime tests that need artifacts live in rust/tests/runtime_e2e.rs
-    // (they require `make artifacts`). Manifest parsing is testable inline.
+    // (they require `make artifacts` and the `pjrt` feature). Manifest
+    // parsing and the stub error path are testable inline.
+
+    fn write_manifest(dir_name: &str, body: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(dir_name);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        dir
+    }
 
     #[test]
     fn manifest_parse_minimal() {
-        let dir = std::env::temp_dir().join("qadam_manifest_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(
-            dir.join("manifest.json"),
+        let dir = write_manifest(
+            "qadam_manifest_test",
             r#"{
               "batch": 32, "img_hw": 8, "img_c": 3, "num_classes": 10,
               "param_order": ["conv1", "conv2", "fc"],
@@ -232,8 +300,7 @@ mod tests {
                 }
               }
             }"#,
-        )
-        .unwrap();
+        );
         let manifest = Manifest::load(&dir).unwrap();
         assert_eq!(manifest.batch, 32);
         assert_eq!(manifest.param_order, vec!["conv1", "conv2", "fc"]);
@@ -245,10 +312,36 @@ mod tests {
 
     #[test]
     fn manifest_missing_fields_rejected() {
-        let dir = std::env::temp_dir().join("qadam_manifest_bad");
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(dir.join("manifest.json"), r#"{"batch": 1}"#).unwrap();
-        assert!(Manifest::load(&dir).is_err());
+        let dir = write_manifest("qadam_manifest_bad", r#"{"batch": 1}"#);
+        let err = Manifest::load(&dir).unwrap_err();
+        assert_eq!(err.kind(), "parse_error");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_missing_dir_is_io_error() {
+        let err = Manifest::load(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert_eq!(err.kind(), "io");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unsupported() {
+        let dir = write_manifest(
+            "qadam_manifest_stub",
+            r#"{
+              "batch": 1, "img_hw": 8, "img_c": 3, "num_classes": 10,
+              "param_order": [],
+              "artifacts": {
+                "init": {"file": "init.hlo.txt", "inputs": [], "n_outputs": 1}
+              }
+            }"#,
+        );
+        let mut runtime = Runtime::new(&dir).unwrap();
+        assert_eq!(runtime.device_count(), 0);
+        assert_eq!(runtime.artifact_names(), vec!["init"]);
+        let err = runtime.execute("init", &[]).unwrap_err();
+        assert_eq!(err.kind(), "unsupported");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

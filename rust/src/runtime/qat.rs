@@ -7,9 +7,8 @@
 //! an artifact (`batch.hlo.txt`), so the whole loop is XLA programs driven
 //! by rust — python appears nowhere.
 
-use anyhow::{anyhow, Result};
-
 use super::{Runtime, Tensor};
+use crate::error::{Error, Result};
 use crate::quant::PeType;
 
 /// Map a rust PE type to the artifact naming convention.
@@ -65,7 +64,7 @@ impl QatDriver {
         let mut outputs = runtime.execute(&name, &inputs)?;
         let loss = outputs
             .pop()
-            .ok_or_else(|| anyhow!("train step returned no outputs"))?
+            .ok_or_else(|| Error::Runtime("train step returned no outputs".into()))?
             .scalar_f32()?;
         let n = self.params.len();
         self.momentum = outputs.split_off(n);

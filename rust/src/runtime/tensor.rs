@@ -5,7 +5,7 @@
 //! place that touches the PJRT literal API, so the rest of L3 stays
 //! backend-agnostic.
 
-use anyhow::{bail, Result};
+use crate::error::{Error, Result};
 
 /// A host-side dense tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
@@ -36,7 +36,7 @@ impl Tensor {
     pub fn scalar_f32(&self) -> Result<f32> {
         match self {
             Tensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
-            _ => bail!("not a scalar f32 tensor"),
+            _ => Err(Error::Runtime("not a scalar f32 tensor".into())),
         }
     }
 
@@ -61,11 +61,12 @@ impl Tensor {
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Tensor::F32 { data, .. } => Ok(data),
-            _ => bail!("tensor is not f32"),
+            _ => Err(Error::Runtime("tensor is not f32".into())),
         }
     }
 
     /// Convert to an `xla::Literal`.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let literal = match self {
@@ -79,6 +80,7 @@ impl Tensor {
     }
 
     /// Convert from an `xla::Literal` (f32 or i32; other dtypes rejected).
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(literal: &xla::Literal) -> Result<Tensor> {
         let shape = literal.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -91,7 +93,9 @@ impl Tensor {
                 shape: dims,
                 data: literal.to_vec::<i32>()?,
             }),
-            other => bail!("unsupported literal element type {other:?}"),
+            other => Err(Error::Runtime(format!(
+                "unsupported literal element type {other:?}"
+            ))),
         }
     }
 }
@@ -100,6 +104,7 @@ impl Tensor {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn roundtrip_f32() {
         let t = Tensor::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
@@ -108,6 +113,7 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn roundtrip_i32() {
         let t = Tensor::i32(&[4], vec![1, -2, 3, -4]);

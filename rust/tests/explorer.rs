@@ -1,0 +1,185 @@
+//! Cross-module tests for the unified `Explorer` API and the lazy
+//! `SweepSpec` iteration underneath it: property tests that the lazy
+//! cross-product matches an eager golden reference, equivalence of
+//! `Explorer::run` with the serial path and the legacy coordinator, and
+//! typed-error behavior for baseline-free spaces.
+
+use qadam::arch::{AcceleratorConfig, SweepSpec};
+use qadam::dnn::{model_for, Dataset, ModelKind};
+use qadam::dse;
+use qadam::explore::Explorer;
+use qadam::quant::PeType;
+use qadam::util::prop::{check_with, pair, usize_in, Config};
+use qadam::Error;
+
+/// Eager golden reference: the nested-loop cross-product the lazy decoder
+/// must reproduce exactly, order included.
+fn golden_cross_product(spec: &SweepSpec) -> Vec<AcceleratorConfig> {
+    let mut out = Vec::with_capacity(spec.len());
+    for &pe in &spec.pe_types {
+        for &(rows, cols) in &spec.array_dims {
+            for &glb_kib in &spec.glb_kib {
+                for &spad in &spec.spads {
+                    for &dram_bw_gbps in &spec.dram_bw_gbps {
+                        for &clock_ghz in &spec.clock_ghz {
+                            out.push(AcceleratorConfig {
+                                pe,
+                                rows,
+                                cols,
+                                spad,
+                                glb_kib,
+                                dram_bw_gbps,
+                                clock_ghz,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Truncate the default spec's axes to randomized lengths.
+fn random_subspec(npe: usize, ndims: usize, nglb: usize, nbw: usize) -> SweepSpec {
+    let d = SweepSpec::default();
+    SweepSpec {
+        pe_types: d.pe_types[..npe.min(d.pe_types.len())].to_vec(),
+        array_dims: d.array_dims[..ndims.min(d.array_dims.len())].to_vec(),
+        glb_kib: d.glb_kib[..nglb.min(d.glb_kib.len())].to_vec(),
+        spads: d.spads[..2].to_vec(),
+        dram_bw_gbps: d.dram_bw_gbps[..nbw.min(d.dram_bw_gbps.len())].to_vec(),
+        clock_ghz: d.clock_ghz.clone(),
+    }
+}
+
+#[test]
+fn prop_lazy_iter_matches_eager_cross_product() {
+    let gen = pair(pair(usize_in(1, 4), usize_in(1, 5)), pair(usize_in(1, 4), usize_in(1, 3)));
+    check_with(
+        &Config { cases: 64, ..Default::default() },
+        &gen,
+        |&((npe, ndims), (nglb, nbw))| {
+            let spec = random_subspec(npe, ndims, nglb, nbw);
+            let golden = golden_cross_product(&spec);
+            if spec.iter().len() != golden.len() || spec.len() != golden.len() {
+                return false;
+            }
+            spec.iter().zip(&golden).all(|(lazy, eager)| lazy == *eager)
+        },
+    );
+}
+
+#[test]
+fn prop_shard_iters_partition_every_space() {
+    let gen = pair(pair(usize_in(1, 4), usize_in(1, 5)), usize_in(1, 7));
+    check_with(
+        &Config { cases: 48, ..Default::default() },
+        &gen,
+        |&((npe, ndims), num_shards)| {
+            let spec = random_subspec(npe, ndims, 2, 2);
+            let mut recombined: Vec<String> = (0..num_shards)
+                .flat_map(|shard| spec.shard_iter(shard, num_shards))
+                .map(|c| c.id())
+                .collect();
+            recombined.sort();
+            let mut expected: Vec<String> = spec.iter().map(|c| c.id()).collect();
+            expected.sort();
+            recombined == expected
+        },
+    );
+}
+
+#[test]
+fn explorer_run_matches_serial_evaluate() {
+    let spec = SweepSpec::tiny();
+    let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    let serial: Vec<dse::Evaluation> =
+        spec.iter().map(|c| dse::evaluate(&c, &model, 7)).collect();
+    let db = Explorer::over(spec).model(model).workers(4).seed(7).run().unwrap();
+    let parallel = &db.spaces[0].evals;
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(parallel) {
+        assert_eq!(a.config.id(), b.config.id());
+        assert_eq!(a.perf_per_area, b.perf_per_area);
+        assert_eq!(a.energy_uj, b.energy_uj);
+        assert_eq!(a.latency_ms, b.latency_ms);
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn explorer_run_reproduces_legacy_campaign_bit_for_bit() {
+    let spec = SweepSpec::tiny();
+    let legacy = qadam::coordinator::Coordinator::new(3, 7).campaign(&spec, Dataset::Cifar10);
+    let new = Explorer::over(spec)
+        .dataset(Dataset::Cifar10)
+        .workers(3)
+        .seed(7)
+        .run()
+        .unwrap();
+    assert_eq!(legacy.spaces.len(), new.spaces.len());
+    for (a, b) in legacy.spaces.iter().zip(&new.spaces) {
+        assert_eq!(a.model_name, b.model_name);
+        assert_eq!(a.evals.len(), b.evals.len());
+        for (x, y) in a.evals.iter().zip(&b.evals) {
+            assert_eq!(x.config.id(), y.config.id());
+            assert_eq!(x.perf_per_area, y.perf_per_area);
+            assert_eq!(x.energy_uj, y.energy_uj);
+            assert_eq!(x.dram_energy_uj, y.dram_energy_uj);
+            assert_eq!(x.utilization, y.utilization);
+        }
+    }
+}
+
+#[test]
+fn stream_equals_run() {
+    let spec = SweepSpec::tiny();
+    let explorer = Explorer::over(spec)
+        .dataset(Dataset::Cifar10)
+        .workers(4)
+        .seed(7);
+    let mut streamed: Vec<(usize, String, Vec<f64>)> = Vec::new();
+    explorer
+        .stream(|point| {
+            let energies = point.evals.iter().map(|e| e.energy_uj).collect();
+            streamed.push((point.index, point.config.id(), energies));
+        })
+        .unwrap();
+    let db = explorer.run().unwrap();
+    // Transpose the database back to per-point order and compare.
+    for (pos, (index, config_id, energies)) in streamed.iter().enumerate() {
+        assert_eq!(*index, pos);
+        for (space, energy) in db.spaces.iter().zip(energies) {
+            assert_eq!(space.evals[pos].config.id(), *config_id);
+            assert_eq!(space.evals[pos].energy_uj, *energy);
+        }
+    }
+}
+
+#[test]
+fn int16_free_space_yields_missing_baseline_not_panic() {
+    let spec = SweepSpec { pe_types: vec![PeType::LightPe1, PeType::Fp32], ..SweepSpec::tiny() };
+    let db = Explorer::over(spec)
+        .model(model_for(ModelKind::ResNet20, Dataset::Cifar10))
+        .workers(2)
+        .seed(7)
+        .run()
+        .unwrap();
+    let evals = &db.spaces[0].evals;
+    assert!(!evals.is_empty());
+    assert!(matches!(dse::normalize(evals), Err(Error::MissingBaseline(_))));
+    assert!(matches!(dse::headline_ratios(evals), Err(Error::MissingBaseline(_))));
+    assert!(matches!(db.headline_geomean(), Err(Error::MissingBaseline(_))));
+}
+
+#[test]
+fn degenerate_sweep_yields_invalid_config() {
+    let mut spec = SweepSpec::tiny();
+    spec.dram_bw_gbps.clear();
+    let err = Explorer::over(spec)
+        .dataset(Dataset::Cifar10)
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, Error::InvalidConfig(_)));
+}

@@ -3,11 +3,11 @@
 //! consistency — everything except the PJRT runtime (see runtime_e2e.rs).
 
 use qadam::arch::{AcceleratorConfig, SweepSpec};
-use qadam::coordinator::Coordinator;
 use qadam::dataflow::{map_model, Dataflow};
 use qadam::dnn::{model_for, models_for, Dataset, ModelKind};
 use qadam::dse;
 use qadam::energy::energy_of;
+use qadam::explore::Explorer;
 use qadam::ppa::PpaModel;
 use qadam::quant::PeType;
 use qadam::report;
@@ -40,11 +40,15 @@ fn full_pipeline_for_every_model_and_pe() {
 fn paper_headline_shape_holds_everywhere() {
     // The paper's central ordering must hold for every (model, dataset)
     // panel: LightPE-1 ≥ LightPE-2 > INT16 > FP32 on both axes.
-    let coordinator = Coordinator::new(2, 7);
     for dataset in [Dataset::Cifar10, Dataset::ImageNet] {
-        let db = coordinator.campaign(&SweepSpec::default(), dataset);
+        let db = Explorer::over(SweepSpec::default())
+            .dataset(dataset)
+            .workers(2)
+            .seed(7)
+            .run()
+            .unwrap();
         for space in &db.spaces {
-            let ratios = dse::headline_ratios(&space.evals);
+            let ratios = dse::headline_ratios(&space.evals).unwrap();
             let get = |pe: PeType| {
                 ratios
                     .iter()
@@ -130,15 +134,15 @@ fn rtl_generated_for_every_sweep_point_is_wellformed() {
 #[test]
 fn figures_2_through_6_generate() {
     // Smoke the full report layer (small worker count to keep CI fast).
-    let fig2 = report::fig2(2, 7);
+    let fig2 = report::fig2(2, 7).unwrap();
     assert!(!fig2.table.is_empty());
-    let fig3 = report::fig3(7);
+    let fig3 = report::fig3(7).unwrap();
     assert_eq!(fig3.table.len(), 12); // 4 PE types × 3 metrics
-    let fig4 = report::fig4(Dataset::Cifar10, 2, 7);
+    let fig4 = report::fig4(Dataset::Cifar10, 2, 7).unwrap();
     assert_eq!(fig4.table.len(), 12); // 3 models × 4 PE types
-    let fig5 = report::fig5(Dataset::Cifar100, 2, 7);
+    let fig5 = report::fig5(Dataset::Cifar100, 2, 7).unwrap();
     assert_eq!(fig5.table.len(), 12);
-    let fig6 = report::fig6(Dataset::Cifar10, 2, 7);
+    let fig6 = report::fig6(Dataset::Cifar10, 2, 7).unwrap();
     assert_eq!(fig6.table.len(), 12);
 }
 
@@ -146,7 +150,12 @@ fn figures_2_through_6_generate() {
 fn accuracy_registry_joins_with_dse() {
     // The Fig. 5 join: every CIFAR model × PE type must have both an
     // accuracy entry and a best-config evaluation.
-    let db = Coordinator::new(2, 7).campaign(&SweepSpec::tiny(), Dataset::Cifar10);
+    let db = Explorer::over(SweepSpec::tiny())
+        .dataset(Dataset::Cifar10)
+        .workers(2)
+        .seed(7)
+        .run()
+        .unwrap();
     for space in &db.spaces {
         let kind = ModelKind::parse(&space.model_name).unwrap();
         for pe in [PeType::Int16, PeType::LightPe1] {

@@ -1,6 +1,8 @@
 //! End-to-end runtime tests: load the AOT artifacts (built by
 //! `make artifacts`) into the PJRT CPU client and execute them from rust.
-//! Skipped gracefully when artifacts are missing.
+//! Skipped gracefully when artifacts are missing; compiled only with the
+//! `pjrt` feature (the XLA-backed runtime).
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 
