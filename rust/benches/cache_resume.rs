@@ -1,0 +1,74 @@
+//! Bench: the persistence layer — cold campaigns vs warm content-addressed
+//! cache hits, and the overhead of checkpoint journaling. The warm-cache
+//! number is the "near-free repeat campaign" headline behind
+//! `qadam dse --cache`; the journal number bounds what `--resume` costs an
+//! uninterrupted run.
+
+use std::sync::{Arc, Mutex};
+
+use qadam::arch::SweepSpec;
+use qadam::bench::{bench_with, section, BenchConfig};
+use qadam::dnn::Dataset;
+use qadam::explore::{Explorer, PointCache};
+
+fn main() {
+    let spec = SweepSpec::default();
+
+    section("content-addressed point cache");
+    let cold = bench_with("dse_cold_no_cache", BenchConfig::heavy(), || {
+        Explorer::over(spec.clone())
+            .dataset(Dataset::Cifar10)
+            .seed(7)
+            .run()
+            .expect("cold campaign")
+    });
+    println!("{}", cold.render());
+
+    let cache = Arc::new(Mutex::new(PointCache::new()));
+    // One warm-up campaign fills the cache; the measured runs are all hits.
+    Explorer::over(spec.clone())
+        .dataset(Dataset::Cifar10)
+        .seed(7)
+        .cache(cache.clone())
+        .run()
+        .expect("cache warm-up");
+    let warm = bench_with("dse_warm_cache_all_hits", BenchConfig::heavy(), || {
+        Explorer::over(spec.clone())
+            .dataset(Dataset::Cifar10)
+            .seed(7)
+            .cache(cache.clone())
+            .run()
+            .expect("warm campaign")
+    });
+    println!("{}", warm.render());
+    println!(
+        "warm-cache speedup: {:.1}x ({} cached design points)",
+        cold.summary.mean / warm.summary.mean.max(1e-9),
+        cache.lock().unwrap().len()
+    );
+
+    section("checkpoint journal overhead");
+    let dir = std::env::temp_dir().join("qadam_bench_checkpoint");
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    let journaled = bench_with("dse_checkpoint_every_64", BenchConfig::heavy(), || {
+        let path = dir.join("bench.journal");
+        let _ = std::fs::remove_file(&path);
+        Explorer::over(spec.clone())
+            .dataset(Dataset::Cifar10)
+            .seed(7)
+            .checkpoint(&path, 64)
+            .run()
+            .expect("journaled campaign")
+    });
+    println!("{}", journaled.render());
+    println!(
+        "journal overhead vs cold: {:+.1}%",
+        (journaled.summary.mean / cold.summary.mean - 1.0) * 100.0
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!("CSV:");
+    for result in [&cold, &warm, &journaled] {
+        println!("{}", result.to_csv_row());
+    }
+}

@@ -261,6 +261,15 @@ impl SweepSpec {
         Ok(spec)
     }
 
+    /// Stable 64-bit fingerprint of the design space: FNV-1a over the
+    /// canonical JSON rendering (sorted keys, shortest round-trip
+    /// numbers), so it survives process restarts and platform changes.
+    /// Checkpoint journals embed it to reject resumes against a different
+    /// space (`explore::persist`).
+    pub fn fingerprint(&self) -> u64 {
+        crate::util::fnv1a_64(self.to_json().to_string_canonical().as_bytes())
+    }
+
     /// Load a sweep from a JSON file.
     pub fn from_file(path: &std::path::Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)?;
@@ -516,6 +525,21 @@ mod tests {
         let err =
             SweepSpec::from_file(std::path::Path::new("/nonexistent/sweep.json")).unwrap_err();
         assert_eq!(err.kind(), "io");
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_axis_sensitive() {
+        let spec = SweepSpec::tiny();
+        assert_eq!(spec.fingerprint(), SweepSpec::tiny().fingerprint());
+        let mut wider = SweepSpec::tiny();
+        wider.glb_kib.push(256);
+        assert_ne!(spec.fingerprint(), wider.fingerprint());
+        let mut faster = SweepSpec::tiny();
+        faster.clock_ghz = vec![1.5];
+        assert_ne!(spec.fingerprint(), faster.fingerprint());
+        // Round-tripping through JSON preserves the fingerprint.
+        let reparsed = SweepSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec.fingerprint(), reparsed.fingerprint());
     }
 
     #[test]

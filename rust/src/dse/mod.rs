@@ -25,7 +25,11 @@ use crate::quant::PeType;
 use crate::synth::{synthesize, SynthReport};
 
 /// One fully evaluated design point for one DNN workload.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares every metric bit-for-bit (f64 equality), which is
+/// exactly what the persistence round-trip and cache-equivalence tests
+/// need; see `explore::persist` for the JSON serialization.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Evaluation {
     pub config: AcceleratorConfig,
     /// Total die area (mm²).

@@ -10,7 +10,7 @@ use crate::error::Result;
 use crate::quant::PeType;
 
 /// All evaluations for one (model, dataset) pair.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpace {
     pub model_name: String,
     pub dataset: Dataset,
@@ -18,15 +18,25 @@ pub struct ModelSpace {
 }
 
 /// Campaign results across a model set.
-#[derive(Debug, Clone)]
+///
+/// Serialization (`to_json`/`from_json`/`save`/`load`) lives in
+/// [`crate::explore::persist`]; the persisted form drops the transient
+/// throughput fields (`wall_seconds`, `workers`) so identical campaigns
+/// always produce byte-identical files.
+#[derive(Debug, Clone, PartialEq)]
 pub struct EvalDatabase {
     pub dataset: Dataset,
+    /// Round-robin shard this database covers: `(shard, num_shards)`,
+    /// `(0, 1)` for the whole space. Persisted, because a shard's local
+    /// best INT16 is not the campaign baseline — normalization over a
+    /// partial space would silently produce wrong figures.
+    pub shard: (usize, usize),
     pub spaces: Vec<ModelSpace>,
     pub stats: CampaignStats,
 }
 
 /// Campaign throughput metrics.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CampaignStats {
     pub design_points: usize,
     pub evaluations: usize,
@@ -42,11 +52,28 @@ impl CampaignStats {
 }
 
 impl EvalDatabase {
+    /// Guard for the paper normalizations: a shard's local best INT16 is
+    /// not the campaign baseline, so normalized summaries over a partial
+    /// space are rejected instead of silently wrong.
+    pub fn ensure_whole_space(&self) -> Result<()> {
+        if self.shard.1 > 1 {
+            return Err(crate::error::Error::InvalidConfig(format!(
+                "database covers shard {}/{} of the design space; merge all shards before \
+                 normalizing against the INT16 baseline",
+                self.shard.0, self.shard.1
+            )));
+        }
+        Ok(())
+    }
+
     /// Headline ratios per model (Fig. 4 summary): the geometric-mean
     /// across models is the paper's "on average across all workloads".
     /// Fails with [`Error::MissingBaseline`](crate::Error::MissingBaseline)
-    /// when a space has no INT16 points.
+    /// when a space has no INT16 points, and with
+    /// [`Error::InvalidConfig`](crate::Error::InvalidConfig) on a sharded
+    /// database (see [`Self::ensure_whole_space`]).
     pub fn headline_per_model(&self) -> Result<Vec<(String, Vec<(PeType, f64, f64)>)>> {
+        self.ensure_whole_space()?;
         self.spaces
             .iter()
             .map(|s| Ok((s.model_name.clone(), dse::headline_ratios(&s.evals)?)))

@@ -17,6 +17,13 @@
 //! and evaluation is spread over a self-balancing worker pool. Results are
 //! deterministic for a fixed seed regardless of worker count.
 //!
+//! Campaigns are also *persistent* ([`persist`]): [`Explorer::cache`]
+//! consults a content-addressed [`PointCache`] before synthesizing,
+//! [`Explorer::checkpoint`] journals every delivered point so a killed
+//! campaign resumes from the last flushed one, and the resulting
+//! [`EvalDatabase`] saves/loads as schema-versioned canonical JSON
+//! (`qadam dse --save/--load/--resume`).
+//!
 //! ```no_run
 //! use qadam::arch::SweepSpec;
 //! use qadam::dnn::Dataset;
@@ -34,12 +41,15 @@
 //! ```
 
 pub mod db;
+pub mod persist;
 
 pub use db::{CampaignStats, EvalDatabase, ModelSpace};
+pub use persist::{point_key, PointCache, SCHEMA_VERSION};
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::arch::{AcceleratorConfig, SweepSpec};
@@ -68,6 +78,8 @@ pub struct Explorer {
     workers: usize,
     seed: u64,
     shard: (usize, usize),
+    cache: Option<Arc<Mutex<PointCache>>>,
+    checkpoint: Option<(PathBuf, usize)>,
 }
 
 impl Explorer {
@@ -82,6 +94,8 @@ impl Explorer {
             workers: default_workers(),
             seed: 0x9ADA,
             shard: (0, 1),
+            cache: None,
+            checkpoint: None,
         }
     }
 
@@ -121,6 +135,30 @@ impl Explorer {
     /// leader/worker split; composes with [`SweepSpec::shard_iter`]).
     pub fn shard(mut self, shard: usize, num_shards: usize) -> Self {
         self.shard = (shard, num_shards);
+        self
+    }
+
+    /// Consult (and fill) a content-addressed [`PointCache`] instead of
+    /// re-synthesizing design points already evaluated under the same
+    /// `(config, seed, model set)` key — see [`persist::point_key`].
+    /// Cached results are bit-identical to recomputation, so warm-cache
+    /// campaigns produce exactly the same database as cold ones. The
+    /// cache is shared: clone the `Arc` across concurrent campaigns over
+    /// overlapping spaces to amortize their synthesis work.
+    pub fn cache(mut self, cache: Arc<Mutex<PointCache>>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Journal every delivered design point to `path`, flushing every
+    /// `every_n` points (`0` is treated as `1`). If the journal already
+    /// exists it must match this campaign (sweep fingerprint, seed,
+    /// shard, model set — else [`Error::InvalidConfig`]); its flushed
+    /// prefix is replayed without re-evaluation and the campaign resumes
+    /// from the first unjournaled point, yielding a byte-identical
+    /// database to an uninterrupted run.
+    pub fn checkpoint(mut self, path: impl Into<PathBuf>, every_n: usize) -> Self {
+        self.checkpoint = Some((path.into(), every_n.max(1)));
         self
     }
 
@@ -171,7 +209,21 @@ impl Explorer {
             }
         })?;
         let dataset = self.dataset.unwrap_or(self.models[0].dataset);
-        Ok(EvalDatabase { dataset, spaces, stats })
+        Ok(EvalDatabase { dataset, shard: self.shard, spaces, stats })
+    }
+
+    /// The identity pinned in checkpoint journal headers; only valid
+    /// after [`Self::validate`] (needs a non-empty model set).
+    fn manifest(&self) -> persist::CampaignManifest {
+        persist::CampaignManifest {
+            spec_fingerprint: self.spec.fingerprint(),
+            seed: self.seed,
+            shard: self.shard.0,
+            num_shards: self.shard.1,
+            total: self.design_points(),
+            dataset: self.dataset.unwrap_or(self.models[0].dataset).name().to_string(),
+            models: self.models.iter().map(|m| m.name.clone()).collect(),
+        }
     }
 
     /// Evaluate the space, delivering each design point to `sink` in
@@ -180,26 +232,50 @@ impl Explorer {
     /// window ahead of the sink, so at most O(workers) results are ever
     /// buffered and nothing is retained after the sink returns —
     /// million-point campaigns can stream to disk, sockets, or running
-    /// aggregations.
+    /// aggregations. (A [`Self::checkpoint`] resume is the exception: the
+    /// journaled prefix is loaded eagerly before replay.)
     pub fn stream(&self, mut sink: impl FnMut(PointResult)) -> Result<CampaignStats> {
         self.validate()?;
         let (shard, num_shards) = self.shard;
         let total = self.design_points();
+        let started = Instant::now();
+        // Checkpointing: open (or resume) the journal and replay the
+        // flushed prefix through the sink without re-evaluating it.
+        let mut journal: Option<persist::JournalWriter> = None;
+        let mut start_pos = 0usize;
+        if let Some((path, every_n)) = &self.checkpoint {
+            let (writer, replayed) =
+                persist::JournalWriter::open(path, &self.manifest(), *every_n)?;
+            start_pos = replayed.len();
+            for point in replayed {
+                // The journal holds bit-exact results, so replayed points
+                // also warm the cache — a resumed campaign must leave it
+                // as complete as an uninterrupted one would.
+                if let Some(cache) = self.cache.as_ref() {
+                    let key = persist::point_key(&point.config, self.seed, &self.models);
+                    lock_cache(cache).store(key, point.evals.clone());
+                }
+                sink(point);
+            }
+            journal = Some(writer);
+        }
         let spec = &self.spec;
         let models = &self.models;
         let seed = self.seed;
-        let worker_count = self.workers.min(total.max(1));
+        let cache = self.cache.as_ref();
+        let remaining = total - start_pos;
+        let worker_count = self.workers.min(remaining.max(1));
         // Max positions a worker may run ahead of the last delivered one;
         // caps the reorder buffer even when one point is pathologically
         // slower than the rest.
         let window = worker_count * 4;
-        let started = Instant::now();
-        let cursor = AtomicUsize::new(0);
+        let cursor = AtomicUsize::new(start_pos);
         let cursor_ref = &cursor;
-        let delivered = AtomicUsize::new(0);
+        let delivered = AtomicUsize::new(start_pos);
         let delivered_ref = &delivered;
         let stop = AtomicBool::new(false);
         let stop_ref = &stop;
+        let mut journal_err: Option<Error> = None;
         let (tx, rx) = mpsc::channel::<(usize, PointResult)>();
         std::thread::scope(|scope| {
             for _ in 0..worker_count {
@@ -222,9 +298,7 @@ impl Explorer {
                     }
                     let index = shard + pos * num_shards;
                     let config = spec.get(index).expect("shard index within cross-product");
-                    let synth = synthesize(&config, seed);
-                    let evals: Vec<Evaluation> =
-                        models.iter().map(|m| dse::evaluate_with_synth(&synth, m)).collect();
+                    let evals = evaluate_point(&config, models, seed, cache);
                     if tx.send((pos, PointResult { index, config, evals })).is_err() {
                         break;
                     }
@@ -243,17 +317,34 @@ impl Explorer {
             // Reorder out-of-order completions so the sink observes the
             // deterministic cross-product order.
             let mut pending: BTreeMap<usize, PointResult> = BTreeMap::new();
-            let mut next = 0usize;
-            for (pos, result) in rx {
+            let mut next = start_pos;
+            'recv: for (pos, result) in rx {
                 pending.insert(pos, result);
                 while let Some(ready) = pending.remove(&next) {
+                    if let Some(writer) = journal.as_mut() {
+                        if let Err(err) = writer.append(&ready) {
+                            // Abandon the campaign: the guard releases the
+                            // workers, and the error surfaces after join.
+                            journal_err = Some(err);
+                            break 'recv;
+                        }
+                    }
                     sink(ready);
                     next += 1;
                     delivered_ref.store(next, Ordering::Release);
                 }
             }
-            debug_assert!(pending.is_empty(), "all streamed points must be delivered");
+            debug_assert!(
+                journal_err.is_some() || pending.is_empty(),
+                "all streamed points must be delivered"
+            );
         });
+        if let Some(err) = journal_err {
+            return Err(err);
+        }
+        if let Some(writer) = journal {
+            writer.finish()?;
+        }
         Ok(CampaignStats {
             design_points: total,
             evaluations: total * self.models.len(),
@@ -261,6 +352,38 @@ impl Explorer {
             workers: self.workers,
         })
     }
+}
+
+/// Evaluate one design point against the model set, consulting the
+/// content-addressed cache when present (a hit skips synthesis and
+/// mapping entirely; the pipeline's determinism makes hits bit-identical
+/// to recomputation).
+fn evaluate_point(
+    config: &AcceleratorConfig,
+    models: &[Model],
+    seed: u64,
+    cache: Option<&Arc<Mutex<PointCache>>>,
+) -> Vec<Evaluation> {
+    let key = cache.map(|_| persist::point_key(config, seed, models));
+    if let (Some(cache), Some(key)) = (cache, key) {
+        if let Some(hit) = lock_cache(cache).lookup(key) {
+            return hit;
+        }
+    }
+    let synth = synthesize(config, seed);
+    let evals: Vec<Evaluation> =
+        models.iter().map(|m| dse::evaluate_with_synth(&synth, m)).collect();
+    if let (Some(cache), Some(key)) = (cache, key) {
+        lock_cache(cache).store(key, evals.clone());
+    }
+    evals
+}
+
+/// Lock the shared cache, recovering from poisoning (a panicked worker
+/// elsewhere must not take the whole campaign down with it). The single
+/// locking policy for every cache consumer — workers, replay, the CLI.
+pub fn lock_cache(cache: &Mutex<PointCache>) -> MutexGuard<'_, PointCache> {
+    cache.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 #[cfg(test)]

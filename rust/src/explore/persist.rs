@@ -1,0 +1,848 @@
+//! Campaign persistence: the schema-versioned JSON serialization of the
+//! exploration artifacts, the content-addressed point cache, and the
+//! append-only checkpoint journal behind resumable campaigns.
+//!
+//! Three durable artifacts, all written through [`crate::util::json`] in
+//! its canonical form (sorted keys, shortest round-trip numbers) so that
+//! identical campaigns produce byte-identical, diffable files:
+//!
+//! * **Evaluation database** — [`EvalDatabase::save`]/[`EvalDatabase::load`]
+//!   persist a whole campaign (`qadam dse --save/--load`); the report
+//!   generator can re-render Figs. 4–6 from disk without re-running.
+//! * **Point cache** — [`PointCache`] maps [`point_key`] (a stable FNV-1a
+//!   digest of design point × synth seed × model set) to the full
+//!   evaluation vector, turning repeat campaigns over overlapping spaces
+//!   into near-free lookups. `Explorer::cache` wires it into the workers.
+//! * **Checkpoint journal** — [`JournalWriter`] appends one JSON line per
+//!   delivered design point during `Explorer::stream`; a killed campaign
+//!   resumes from the last flushed point and produces a byte-identical
+//!   database to an uninterrupted run. The header pins a
+//!   [`CampaignManifest`] (sweep fingerprint, seed, shard, model set) and
+//!   resume against a different campaign is rejected with
+//!   [`Error::InvalidConfig`].
+//!
+//! Every loader returns typed errors — [`Error::Io`] for filesystem
+//! failures, [`Error::ParseError`] for truncated or garbled content —
+//! and never panics on corrupt input. Two deliberate leniencies, both
+//! for the exact crash the journal exists to survive: a journal whose
+//! *final* line is an incomplete fragment (the torn write of a killed
+//! process) drops that fragment and re-evaluates from there, and a
+//! journal killed before its header line was flushed is restarted from
+//! scratch. Database and cache saves are atomic (temp file + rename),
+//! so a crash mid-save never destroys the previous valid artifact.
+//!
+//! All persisted documents carry `{"kind": ..., "schema": N}`; readers
+//! reject unknown kinds and future schema versions with a parse error
+//! instead of misinterpreting the payload.
+
+use std::collections::BTreeMap;
+use std::fs::{self, OpenOptions};
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use super::db::{CampaignStats, EvalDatabase, ModelSpace};
+use super::PointResult;
+use crate::dnn::{Dataset, Model};
+use crate::dse::Evaluation;
+use crate::error::{Error, Result};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::Fnv64;
+
+/// Version of every persisted document (database, cache, journal).
+/// Bump on any change to the serialized field set; readers reject other
+/// versions with [`Error::ParseError`] rather than guessing.
+pub const SCHEMA_VERSION: usize = 1;
+
+// ---------------------------------------------------------------------------
+// Field access helpers (typed errors instead of panics).
+
+fn field_f64(json: &Json, key: &str) -> Result<f64> {
+    json.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::ParseError(format!("missing numeric field '{key}'")))
+}
+
+fn field_usize(json: &Json, key: &str) -> Result<usize> {
+    json.get(key)
+        .and_then(Json::as_i64)
+        .filter(|v| *v >= 0)
+        .map(|v| v as usize)
+        .ok_or_else(|| Error::ParseError(format!("missing integer field '{key}'")))
+}
+
+fn field_str<'a>(json: &'a Json, key: &str) -> Result<&'a str> {
+    json.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::ParseError(format!("missing string field '{key}'")))
+}
+
+fn field_arr<'a>(json: &'a Json, key: &str) -> Result<&'a [Json]> {
+    json.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::ParseError(format!("missing array field '{key}'")))
+}
+
+fn field_u64_hex(json: &Json, key: &str) -> Result<u64> {
+    let text = field_str(json, key)?;
+    u64::from_str_radix(text, 16)
+        .map_err(|_| Error::ParseError(format!("field '{key}' is not a hex u64: '{text}'")))
+}
+
+fn hex(value: u64) -> String {
+    format!("{value:016x}")
+}
+
+fn field_dataset(json: &Json, key: &str) -> Result<Dataset> {
+    let name = field_str(json, key)?;
+    Dataset::parse(name)
+        .ok_or_else(|| Error::ParseError(format!("unknown dataset '{name}' in field '{key}'")))
+}
+
+/// Validate the `{"kind", "schema"}` envelope shared by all artifacts.
+fn check_envelope(json: &Json, kind: &str) -> Result<()> {
+    let found = field_str(json, "kind")?;
+    if found != kind {
+        return Err(Error::ParseError(format!(
+            "expected a '{kind}' document, found kind '{found}'"
+        )));
+    }
+    let schema = field_usize(json, "schema")?;
+    if schema != SCHEMA_VERSION {
+        return Err(Error::ParseError(format!(
+            "unsupported {kind} schema version {schema} (this build reads version \
+             {SCHEMA_VERSION}; regenerate the file)"
+        )));
+    }
+    Ok(())
+}
+
+fn envelope(kind: &str) -> Vec<(&str, Json)> {
+    vec![("kind", s(kind)), ("schema", num(SCHEMA_VERSION as f64))]
+}
+
+/// Write `text` to `path` atomically: temp sibling + rename, so a crash
+/// mid-save never leaves a torn file where a valid artifact used to be.
+fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fs::create_dir_all(parent)?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    fs::write(&tmp, text)?;
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation / ModelSpace / CampaignStats / EvalDatabase serialization.
+
+impl Evaluation {
+    /// Serialize every metric plus the originating config. Numbers use
+    /// the shortest round-trip rendering, so `from_json(to_json(e)) == e`
+    /// bit-for-bit.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("config", self.config.to_json()),
+            ("area_mm2", num(self.area_mm2)),
+            ("clock_ghz", num(self.clock_ghz)),
+            ("latency_ms", num(self.latency_ms)),
+            ("inf_per_s", num(self.inf_per_s)),
+            ("perf_per_area", num(self.perf_per_area)),
+            ("energy_uj", num(self.energy_uj)),
+            ("dram_energy_uj", num(self.dram_energy_uj)),
+            ("utilization", num(self.utilization)),
+        ])
+    }
+
+    /// Deserialize from [`Self::to_json`] output.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let config_json = json
+            .get("config")
+            .ok_or_else(|| Error::ParseError("evaluation missing field 'config'".into()))?;
+        Ok(Self {
+            config: crate::arch::AcceleratorConfig::from_json(config_json)?,
+            area_mm2: field_f64(json, "area_mm2")?,
+            clock_ghz: field_f64(json, "clock_ghz")?,
+            latency_ms: field_f64(json, "latency_ms")?,
+            inf_per_s: field_f64(json, "inf_per_s")?,
+            perf_per_area: field_f64(json, "perf_per_area")?,
+            energy_uj: field_f64(json, "energy_uj")?,
+            dram_energy_uj: field_f64(json, "dram_energy_uj")?,
+            utilization: field_f64(json, "utilization")?,
+        })
+    }
+}
+
+impl ModelSpace {
+    /// Serialize the model label and its evaluation space.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model_name", s(&self.model_name)),
+            ("dataset", s(self.dataset.name())),
+            ("evals", Json::Arr(self.evals.iter().map(Evaluation::to_json).collect())),
+        ])
+    }
+
+    /// Deserialize from [`Self::to_json`] output.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        Ok(Self {
+            model_name: field_str(json, "model_name")?.to_string(),
+            dataset: field_dataset(json, "dataset")?,
+            evals: field_arr(json, "evals")?
+                .iter()
+                .map(Evaluation::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+impl CampaignStats {
+    /// Serialize the campaign-shape fields only. `wall_seconds` and
+    /// `workers` are transient throughput observations — persisting them
+    /// would make byte-identical campaigns produce differing files — so
+    /// they are dropped here and zeroed by [`Self::from_json`].
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("design_points", num(self.design_points as f64)),
+            ("evaluations", num(self.evaluations as f64)),
+        ])
+    }
+
+    /// Deserialize from [`Self::to_json`] output (transient fields zero).
+    pub fn from_json(json: &Json) -> Result<Self> {
+        Ok(Self {
+            design_points: field_usize(json, "design_points")?,
+            evaluations: field_usize(json, "evaluations")?,
+            wall_seconds: 0.0,
+            workers: 0,
+        })
+    }
+}
+
+impl EvalDatabase {
+    /// Serialize the whole campaign to a schema-versioned document,
+    /// including the shard identity (a shard's local best INT16 is not
+    /// the campaign baseline, so loaders must know the coverage).
+    pub fn to_json(&self) -> Json {
+        let mut fields = envelope("qadam.evaldb");
+        fields.push(("dataset", s(self.dataset.name())));
+        fields.push(("shard", num(self.shard.0 as f64)));
+        fields.push(("num_shards", num(self.shard.1 as f64)));
+        fields.push(("spaces", Json::Arr(self.spaces.iter().map(ModelSpace::to_json).collect())));
+        fields.push(("stats", self.stats.to_json()));
+        obj(fields)
+    }
+
+    /// Deserialize from [`Self::to_json`] output; rejects other document
+    /// kinds and schema versions with [`Error::ParseError`].
+    pub fn from_json(json: &Json) -> Result<Self> {
+        check_envelope(json, "qadam.evaldb")?;
+        let stats_json = json
+            .get("stats")
+            .ok_or_else(|| Error::ParseError("database missing field 'stats'".into()))?;
+        let shard = (field_usize(json, "shard")?, field_usize(json, "num_shards")?);
+        if shard.1 == 0 || shard.0 >= shard.1 {
+            return Err(Error::ParseError(format!(
+                "database has invalid shard designator {}/{}",
+                shard.0, shard.1
+            )));
+        }
+        Ok(Self {
+            dataset: field_dataset(json, "dataset")?,
+            shard,
+            spaces: field_arr(json, "spaces")?
+                .iter()
+                .map(ModelSpace::from_json)
+                .collect::<Result<_>>()?,
+            stats: CampaignStats::from_json(stats_json)?,
+        })
+    }
+
+    /// Write the database as pretty-printed canonical JSON (atomic:
+    /// temp file + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.to_json().to_string_pretty())
+    }
+
+    /// Load a database written by [`Self::save`]. Missing files are
+    /// [`Error::Io`]; truncated or garbled ones are [`Error::ParseError`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = fs::read_to_string(path)?;
+        let json = Json::parse(&text)
+            .map_err(|e| Error::ParseError(format!("{}: {e}", path.display())))?;
+        Self::from_json(&json)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Content-addressed point cache.
+
+/// Content address of one unit of exploration work: the evaluation of a
+/// design point against a model set under a synthesis seed.
+///
+/// The key is a streaming FNV-1a 64-bit digest over (1) the canonical
+/// JSON of the [`AcceleratorConfig`](crate::arch::AcceleratorConfig),
+/// (2) the little-endian seed bytes, and (3) per model: name, dataset,
+/// and the kind + full shape of every layer — every input that the
+/// deterministic `synthesize` + `evaluate_with_synth` pipeline consumes
+/// (the mapper tiles each layer's geometry against the config, so totals
+/// alone would alias distinct models). Equal inputs therefore always
+/// hash equal across runs and platforms, and any field change produces a
+/// different key.
+pub fn point_key(config: &crate::arch::AcceleratorConfig, seed: u64, models: &[Model]) -> u64 {
+    let mut hasher = Fnv64::new();
+    hasher.update(config.to_json().to_string_canonical().as_bytes());
+    hasher.update(&seed.to_le_bytes());
+    for model in models {
+        hasher.update(model.name.as_bytes());
+        hasher.update(model.dataset.name().as_bytes());
+        hasher.update(&(model.layers.len() as u64).to_le_bytes());
+        for layer in &model.layers {
+            let kind_tag: u8 = match layer.kind {
+                crate::dnn::LayerKind::Conv => 0,
+                crate::dnn::LayerKind::FullyConnected => 1,
+                crate::dnn::LayerKind::Pool => 2,
+            };
+            hasher.update(&[kind_tag]);
+            for dim in
+                [layer.in_hw, layer.in_c, layer.out_c, layer.kernel, layer.stride, layer.padding]
+            {
+                hasher.update(&(dim as u64).to_le_bytes());
+            }
+        }
+    }
+    hasher.finish()
+}
+
+/// Content-addressed cache of fully evaluated design points, keyed by
+/// [`point_key`]. `Explorer::cache` consults it before synthesizing, so
+/// repeat campaigns over overlapping spaces skip the synthesis + mapping
+/// pipeline entirely; hits are bit-identical to recomputation because the
+/// pipeline is deterministic in the key's inputs.
+#[derive(Debug, Clone, Default)]
+pub struct PointCache {
+    entries: BTreeMap<u64, Vec<Evaluation>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PointCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of cached design points.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total cached evaluations across all design points.
+    pub fn total_evaluations(&self) -> usize {
+        self.entries.values().map(Vec::len).sum()
+    }
+
+    /// Lookups served from the cache since construction/load.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that missed since construction/load.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Counted lookup: clones the cached evaluations on hit.
+    pub fn lookup(&mut self, key: u64) -> Option<Vec<Evaluation>> {
+        match self.entries.get(&key) {
+            Some(evals) => {
+                self.hits += 1;
+                Some(evals.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Uncounted read access.
+    pub fn get(&self, key: u64) -> Option<&[Evaluation]> {
+        self.entries.get(&key).map(Vec::as_slice)
+    }
+
+    /// Insert (or replace) the evaluations for a key.
+    pub fn store(&mut self, key: u64, evals: Vec<Evaluation>) {
+        self.entries.insert(key, evals);
+    }
+
+    /// Drop all entries and reset the hit/miss counters.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Serialize to a schema-versioned document (counters are runtime
+    /// state and are not persisted). Keys render as fixed-width hex so
+    /// the entry order — and thus the file — is canonical.
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|(key, evals)| {
+                obj(vec![
+                    ("key", s(&hex(*key))),
+                    ("evals", Json::Arr(evals.iter().map(Evaluation::to_json).collect())),
+                ])
+            })
+            .collect();
+        let mut fields = envelope("qadam.pointcache");
+        fields.push(("entries", Json::Arr(entries)));
+        obj(fields)
+    }
+
+    /// Deserialize from [`Self::to_json`] output.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        check_envelope(json, "qadam.pointcache")?;
+        let mut cache = Self::new();
+        for entry in field_arr(json, "entries")? {
+            let key = field_u64_hex(entry, "key")?;
+            let evals = field_arr(entry, "evals")?
+                .iter()
+                .map(Evaluation::from_json)
+                .collect::<Result<_>>()?;
+            cache.entries.insert(key, evals);
+        }
+        Ok(cache)
+    }
+
+    /// Write the cache as pretty-printed canonical JSON (atomic: temp
+    /// file + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.to_json().to_string_pretty())
+    }
+
+    /// Load a cache written by [`Self::save`]; counters start at zero.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = fs::read_to_string(path)?;
+        let json = Json::parse(&text)
+            .map_err(|e| Error::ParseError(format!("{}: {e}", path.display())))?;
+        Self::from_json(&json)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint journal.
+
+/// Identity of a campaign, pinned in the journal header. Resuming
+/// validates every field so a journal can never be replayed into a
+/// campaign it was not written for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignManifest {
+    /// [`SweepSpec::fingerprint`](crate::arch::SweepSpec::fingerprint).
+    pub spec_fingerprint: u64,
+    pub seed: u64,
+    pub shard: usize,
+    pub num_shards: usize,
+    /// Design points in this (shard of the) campaign.
+    pub total: usize,
+    pub dataset: String,
+    /// Model names in evaluation order.
+    pub models: Vec<String>,
+}
+
+impl CampaignManifest {
+    /// Serialize as the journal header payload.
+    pub fn to_json(&self) -> Json {
+        let mut fields = envelope("qadam.journal");
+        fields.push(("spec_fingerprint", s(&hex(self.spec_fingerprint))));
+        fields.push(("seed", s(&hex(self.seed))));
+        fields.push(("shard", num(self.shard as f64)));
+        fields.push(("num_shards", num(self.num_shards as f64)));
+        fields.push(("total", num(self.total as f64)));
+        fields.push(("dataset", s(&self.dataset)));
+        fields.push(("models", Json::Arr(self.models.iter().map(|m| s(m)).collect())));
+        obj(fields)
+    }
+
+    /// Deserialize a journal header payload.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        check_envelope(json, "qadam.journal")?;
+        Ok(Self {
+            spec_fingerprint: field_u64_hex(json, "spec_fingerprint")?,
+            seed: field_u64_hex(json, "seed")?,
+            shard: field_usize(json, "shard")?,
+            num_shards: field_usize(json, "num_shards")?,
+            total: field_usize(json, "total")?,
+            dataset: field_str(json, "dataset")?.to_string(),
+            models: field_arr(json, "models")?
+                .iter()
+                .map(|m| {
+                    m.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| Error::ParseError("manifest model names must be strings".into()))
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Reject a journal written for a different campaign.
+    fn ensure_matches(&self, journal: &CampaignManifest) -> Result<()> {
+        let mismatch = |field: &str, journal_val: String, campaign_val: String| {
+            Err(Error::InvalidConfig(format!(
+                "checkpoint journal was written for a different campaign: {field} differs \
+                 (journal: {journal_val}, this campaign: {campaign_val})"
+            )))
+        };
+        if journal.spec_fingerprint != self.spec_fingerprint {
+            return mismatch(
+                "sweep fingerprint",
+                hex(journal.spec_fingerprint),
+                hex(self.spec_fingerprint),
+            );
+        }
+        if journal.seed != self.seed {
+            return mismatch("seed", journal.seed.to_string(), self.seed.to_string());
+        }
+        if (journal.shard, journal.num_shards) != (self.shard, self.num_shards) {
+            return mismatch(
+                "shard",
+                format!("{}/{}", journal.shard, journal.num_shards),
+                format!("{}/{}", self.shard, self.num_shards),
+            );
+        }
+        if journal.total != self.total {
+            return mismatch("design-point count", journal.total.to_string(), self.total.to_string());
+        }
+        if journal.dataset != self.dataset {
+            return mismatch("dataset", journal.dataset.clone(), self.dataset.clone());
+        }
+        if journal.models != self.models {
+            return mismatch(
+                "model set",
+                journal.models.join(","),
+                self.models.join(","),
+            );
+        }
+        Ok(())
+    }
+}
+
+fn entry_to_json(pos: usize, point: &PointResult) -> Json {
+    obj(vec![
+        ("pos", num(pos as f64)),
+        ("index", num(point.index as f64)),
+        ("evals", Json::Arr(point.evals.iter().map(Evaluation::to_json).collect())),
+    ])
+}
+
+fn entry_from_json(json: &Json) -> Result<(usize, PointResult)> {
+    let pos = field_usize(json, "pos")?;
+    let index = field_usize(json, "index")?;
+    let evals: Vec<Evaluation> = field_arr(json, "evals")?
+        .iter()
+        .map(Evaluation::from_json)
+        .collect::<Result<_>>()?;
+    let config = evals
+        .first()
+        .map(|e| e.config.clone())
+        .ok_or_else(|| Error::ParseError("journal entry has no evaluations".into()))?;
+    Ok((pos, PointResult { index, config, evals }))
+}
+
+/// Parse the journal body: header + contiguous entries. Returns the
+/// replayable points and the byte length of the valid prefix (everything
+/// after it — at most one torn trailing fragment — is discarded on
+/// resume). Corruption anywhere else is [`Error::ParseError`].
+fn parse_journal(text: &str, campaign: &CampaignManifest) -> Result<(Vec<PointResult>, usize)> {
+    let mut segments = text.split_inclusive('\n');
+    let header_line = segments
+        .next()
+        .ok_or_else(|| Error::ParseError("checkpoint journal is empty".into()))?;
+    if !header_line.ends_with('\n') {
+        return Err(Error::ParseError(
+            "checkpoint journal header is truncated (no complete header line)".into(),
+        ));
+    }
+    let header = Json::parse(header_line.trim_end())
+        .map_err(|e| Error::ParseError(format!("checkpoint journal header: {e}")))?;
+    let journal_manifest = CampaignManifest::from_json(&header)?;
+    campaign.ensure_matches(&journal_manifest)?;
+    let mut valid_len = header_line.len();
+    let mut entries: Vec<PointResult> = Vec::new();
+    for segment in segments {
+        if !segment.ends_with('\n') {
+            // Torn trailing write of a killed run: not flushed, so the
+            // resumed campaign re-evaluates from here.
+            break;
+        }
+        let entry_no = entries.len();
+        let json = Json::parse(segment.trim_end())
+            .map_err(|e| Error::ParseError(format!("checkpoint journal entry {entry_no}: {e}")))?;
+        let (pos, point) = entry_from_json(&json)?;
+        if pos != entry_no {
+            return Err(Error::ParseError(format!(
+                "checkpoint journal entries out of order: expected pos {entry_no}, found {pos}"
+            )));
+        }
+        if point.index != campaign.shard + pos * campaign.num_shards {
+            return Err(Error::ParseError(format!(
+                "checkpoint journal entry {entry_no} has index {} but the campaign maps pos \
+                 {pos} to index {}",
+                point.index,
+                campaign.shard + pos * campaign.num_shards
+            )));
+        }
+        if point.evals.len() != campaign.models.len() {
+            return Err(Error::ParseError(format!(
+                "checkpoint journal entry {entry_no} has {} evaluations for {} models",
+                point.evals.len(),
+                campaign.models.len()
+            )));
+        }
+        if entries.len() >= campaign.total {
+            return Err(Error::ParseError(format!(
+                "checkpoint journal has more entries than the campaign's {} design points",
+                campaign.total
+            )));
+        }
+        entries.push(point);
+        valid_len += segment.len();
+    }
+    Ok((entries, valid_len))
+}
+
+/// Append-only writer for the checkpoint journal. Created (or resumed)
+/// by [`JournalWriter::open`]; `Explorer::stream` appends each delivered
+/// point and flushes every `every_n` entries, so a killed campaign loses
+/// at most `every_n - 1` points of work.
+#[derive(Debug)]
+pub struct JournalWriter {
+    out: BufWriter<fs::File>,
+    next_pos: usize,
+    every_n: usize,
+    since_flush: usize,
+}
+
+impl JournalWriter {
+    /// Open a journal for the given campaign. A missing file starts a
+    /// fresh journal (header flushed immediately); an existing one is
+    /// validated against `manifest`, its flushed points are returned for
+    /// replay, and any torn trailing fragment is truncated away before
+    /// appending continues.
+    pub fn open(
+        path: &Path,
+        manifest: &CampaignManifest,
+        every_n: usize,
+    ) -> Result<(Self, Vec<PointResult>)> {
+        let every_n = every_n.max(1);
+        if path.exists() {
+            let text = fs::read_to_string(path)?;
+            // A kill between file creation and the header flush leaves an
+            // empty file or a torn header line. That is exactly the crash
+            // the journal exists to survive, so start the journal over
+            // instead of wedging every future resume on a parse error.
+            // The suspect file is renamed aside, never deleted — if it was
+            // actually a mistyped `--resume` path pointing at some other
+            // newline-less file, the data survives as `<path>.torn`.
+            // (A *complete* header line that fails to parse is genuine
+            // corruption and still errors below.)
+            let torn_header = match text.split_inclusive('\n').next() {
+                None => true,
+                Some(line) => !line.ends_with('\n'),
+            };
+            if torn_header {
+                let mut aside = path.as_os_str().to_os_string();
+                aside.push(".torn");
+                fs::rename(path, std::path::PathBuf::from(aside))?;
+                return Self::open(path, manifest, every_n);
+            }
+            let (entries, valid_len) = parse_journal(&text, manifest)?;
+            let mut file = OpenOptions::new().write(true).open(path)?;
+            file.set_len(valid_len as u64)?;
+            file.seek(SeekFrom::Start(valid_len as u64))?;
+            let next_pos = entries.len();
+            let writer = Self { out: BufWriter::new(file), next_pos, every_n, since_flush: 0 };
+            Ok((writer, entries))
+        } else {
+            if let Some(parent) = path.parent() {
+                if !parent.as_os_str().is_empty() {
+                    fs::create_dir_all(parent)?;
+                }
+            }
+            let file = OpenOptions::new().write(true).create_new(true).open(path)?;
+            let mut out = BufWriter::new(file);
+            out.write_all(manifest.to_json().to_string_canonical().as_bytes())?;
+            out.write_all(b"\n")?;
+            out.flush()?;
+            let writer = Self { out, next_pos: 0, every_n, since_flush: 0 };
+            Ok((writer, Vec::new()))
+        }
+    }
+
+    /// Append one delivered point; flushes every `every_n` appends.
+    pub fn append(&mut self, point: &PointResult) -> Result<()> {
+        let line = entry_to_json(self.next_pos, point).to_string_canonical();
+        self.out.write_all(line.as_bytes())?;
+        self.out.write_all(b"\n")?;
+        self.next_pos += 1;
+        self.since_flush += 1;
+        if self.since_flush >= self.every_n {
+            self.out.flush()?;
+            self.since_flush = 0;
+        }
+        Ok(())
+    }
+
+    /// Final flush at campaign completion.
+    pub fn finish(mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::AcceleratorConfig;
+    use crate::quant::PeType;
+
+    fn sample_eval(seed: u64) -> Evaluation {
+        let config = AcceleratorConfig { rows: 8 + (seed as usize % 8), ..Default::default() };
+        crate::dse::evaluate(&config, &crate::dnn::model_for(
+            crate::dnn::ModelKind::ResNet20,
+            Dataset::Cifar10,
+        ), seed)
+    }
+
+    #[test]
+    fn evaluation_round_trips_bit_for_bit() {
+        let eval = sample_eval(7);
+        let text = eval.to_json().to_string_canonical();
+        let parsed = Evaluation::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, eval);
+    }
+
+    #[test]
+    fn database_round_trips_and_normalizes_transients() {
+        let db = EvalDatabase {
+            dataset: Dataset::Cifar10,
+            shard: (0, 1),
+            spaces: vec![ModelSpace {
+                model_name: "ResNet-20".into(),
+                dataset: Dataset::Cifar10,
+                evals: vec![sample_eval(1), sample_eval(2)],
+            }],
+            stats: CampaignStats {
+                design_points: 2,
+                evaluations: 2,
+                wall_seconds: 1.25,
+                workers: 4,
+            },
+        };
+        let text = db.to_json().to_string_pretty();
+        let parsed = EvalDatabase::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed.dataset, db.dataset);
+        assert_eq!(parsed.spaces, db.spaces);
+        assert_eq!(parsed.stats.design_points, 2);
+        // Transient throughput fields are not persisted.
+        assert_eq!(parsed.stats.wall_seconds, 0.0);
+        assert_eq!(parsed.stats.workers, 0);
+        // Re-serializing the parsed database is byte-identical.
+        assert_eq!(parsed.to_json().to_string_pretty(), text);
+    }
+
+    #[test]
+    fn envelope_rejects_wrong_kind_and_future_schema() {
+        let wrong_kind = Json::parse(r#"{"kind": "qadam.pointcache", "schema": 1}"#).unwrap();
+        assert_eq!(EvalDatabase::from_json(&wrong_kind).unwrap_err().kind(), "parse_error");
+        let future =
+            Json::parse(r#"{"kind": "qadam.evaldb", "schema": 99, "dataset": "CIFAR-10"}"#)
+                .unwrap();
+        assert_eq!(EvalDatabase::from_json(&future).unwrap_err().kind(), "parse_error");
+    }
+
+    #[test]
+    fn manifest_round_trips_and_detects_mismatch() {
+        let manifest = CampaignManifest {
+            spec_fingerprint: 0xdead_beef_0123_4567,
+            seed: u64::MAX - 3, // exercises > 2^53 (why seeds persist as hex)
+            shard: 1,
+            num_shards: 4,
+            total: 12,
+            dataset: "CIFAR-10".into(),
+            models: vec!["VGG-16".into(), "ResNet-20".into()],
+        };
+        let parsed = CampaignManifest::from_json(&manifest.to_json()).unwrap();
+        assert_eq!(parsed, manifest);
+        let mut other = manifest.clone();
+        other.seed ^= 1;
+        let err = manifest.ensure_matches(&other).unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        assert!(err.to_string().contains("seed"));
+    }
+
+    #[test]
+    fn point_key_is_stable_and_input_sensitive() {
+        let config = AcceleratorConfig::default();
+        let models = vec![crate::dnn::model_for(crate::dnn::ModelKind::ResNet20, Dataset::Cifar10)];
+        let key = point_key(&config, 7, &models);
+        assert_eq!(key, point_key(&config.clone(), 7, &models));
+        assert_ne!(key, point_key(&config, 8, &models), "seed must change the key");
+        let mut other = config.clone();
+        other.pe = PeType::LightPe1;
+        assert_ne!(key, point_key(&other, 7, &models), "pe type must change the key");
+        assert_ne!(key, point_key(&config, 7, &[]), "model set must change the key");
+    }
+
+    #[test]
+    fn point_key_sees_layer_geometry_not_just_totals() {
+        use crate::dnn::{Layer, Model};
+        let custom = |layers| Model { name: "custom".into(), dataset: Dataset::Cifar10, layers };
+        // Same name, dataset, layer count, total MACs, and total weights —
+        // only the per-layer shape differs. The mapper tiles shapes, so
+        // these evaluate differently and must not share a cache entry.
+        let a = custom(vec![Layer::fc("fc", 100, 2)]);
+        let b = custom(vec![Layer::fc("fc", 50, 4)]);
+        assert_eq!(a.total_macs(), b.total_macs());
+        assert_eq!(a.total_weights(), b.total_weights());
+        let config = AcceleratorConfig::default();
+        assert_ne!(point_key(&config, 7, &[a]), point_key(&config, 7, &[b]));
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let mut cache = PointCache::new();
+        let evals = vec![sample_eval(3)];
+        assert!(cache.lookup(42).is_none());
+        cache.store(42, evals.clone());
+        assert_eq!(cache.lookup(42).unwrap(), evals);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.total_evaluations(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!((cache.hits(), cache.misses()), (0, 0));
+    }
+
+    #[test]
+    fn cache_round_trips_through_json() {
+        let mut cache = PointCache::new();
+        cache.store(7, vec![sample_eval(1)]);
+        cache.store(u64::MAX, vec![sample_eval(2), sample_eval(3)]);
+        let text = cache.to_json().to_string_pretty();
+        let parsed = PointCache::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed.get(7).unwrap(), cache.get(7).unwrap());
+        assert_eq!(parsed.get(u64::MAX).unwrap(), cache.get(u64::MAX).unwrap());
+        assert_eq!((parsed.hits(), parsed.misses()), (0, 0));
+    }
+}

@@ -7,6 +7,7 @@
 //! [`Explorer`] API; failures surface as typed [`qadam::Error`]s.
 
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 use qadam::arch::{AcceleratorConfig, SweepSpec};
 use qadam::coordinator::default_workers;
@@ -14,7 +15,7 @@ use qadam::dataflow::{map_model, Dataflow};
 use qadam::dnn::{model_for, Dataset, ModelKind};
 use qadam::dse;
 use qadam::energy::energy_of;
-use qadam::explore::Explorer;
+use qadam::explore::{EvalDatabase, Explorer, PointCache};
 use qadam::ppa::PpaModel;
 use qadam::quant::PeType;
 use qadam::report;
@@ -54,7 +55,17 @@ fn cli() -> Command {
             Command::new("dse", "design-space exploration campaign")
                 .opt("dataset", "cifar10", "cifar10|cifar100|imagenet")
                 .opt("sweep", "", "JSON sweep-config file (empty = default space)")
-                .opt("shard", "", "run only shard I of N (format: I/N)"),
+                .opt("shard", "", "run only shard I of N (format: I/N)")
+                .opt("save", "", "write the evaluation database to this JSON file")
+                .opt("load", "", "summarize a saved database instead of running")
+                .opt("resume", "", "checkpoint journal path (resumes if present)")
+                .opt("every", "16", "flush the checkpoint journal every N points")
+                .opt("cache", "", "content-addressed point-cache file (reused & updated)"),
+        )
+        .sub(
+            Command::new("cache", "inspect or clear a point-cache file")
+                .opt("file", "qadam_cache.json", "cache file path")
+                .flag("clear", "delete the cache file"),
         )
         .sub(
             Command::new("pareto", "Pareto-front analysis (Figs. 5/6)")
@@ -84,7 +95,8 @@ fn cli() -> Command {
         .sub(
             Command::new("report", "regenerate a paper figure")
                 .opt("fig", "4", "2|3|4|5|6")
-                .opt("dataset", "cifar10", "dataset for figs 4-6"),
+                .opt("dataset", "cifar10", "dataset for figs 4-6")
+                .opt("load", "", "render figs 4-6 from a saved database (no re-run)"),
         )
 }
 
@@ -189,31 +201,83 @@ fn main() -> Result<()> {
             }
         }
         "dse" => {
-            let dataset = parse_dataset(matches.get_str("dataset"))?;
-            let sweep_path = matches.get_str("sweep");
-            let spec = if sweep_path.is_empty() {
-                SweepSpec::default()
-            } else {
-                SweepSpec::from_file(Path::new(sweep_path))?
-            };
-            let mut explorer =
-                Explorer::over(spec).dataset(dataset).workers(workers).seed(seed);
+            let load_path = matches.get_str("load").to_string();
             let shard_arg = matches.get_str("shard");
-            let sharded = !shard_arg.is_empty();
-            if sharded {
-                let (shard, num_shards) = parse_shard(shard_arg)?;
-                explorer = explorer.shard(shard, num_shards);
-            }
-            let db = explorer.run()?;
-            println!(
-                "{} design points x {} models in {:.2}s ({:.0} evals/s, {} workers)",
-                db.stats.design_points,
-                db.spaces.len(),
-                db.stats.wall_seconds,
-                db.stats.evals_per_sec(),
-                db.stats.workers
-            );
-            if sharded {
+            let db = if !load_path.is_empty() {
+                // --load summarizes an existing database; campaign-shaping
+                // flags would be silently ignored, so reject them (also
+                // the defaulted ones — `was_set` sees through defaults).
+                for conflicting in ["dataset", "sweep", "shard", "resume", "cache", "every"] {
+                    if matches.was_set(conflicting) {
+                        return Err(Error::InvalidConfig(format!(
+                            "--load summarizes a saved database; --{conflicting} only applies \
+                             to a live campaign"
+                        )));
+                    }
+                }
+                let db = EvalDatabase::load(Path::new(&load_path))?;
+                println!(
+                    "loaded {} design points x {} models from {load_path}",
+                    db.stats.design_points,
+                    db.spaces.len()
+                );
+                db
+            } else {
+                let dataset = parse_dataset(matches.get_str("dataset"))?;
+                let sweep_path = matches.get_str("sweep");
+                let spec = if sweep_path.is_empty() {
+                    SweepSpec::default()
+                } else {
+                    SweepSpec::from_file(Path::new(sweep_path))?
+                };
+                let mut explorer =
+                    Explorer::over(spec).dataset(dataset).workers(workers).seed(seed);
+                if !shard_arg.is_empty() {
+                    let (shard, num_shards) = parse_shard(shard_arg)?;
+                    explorer = explorer.shard(shard, num_shards);
+                }
+                let resume_path = matches.get_str("resume");
+                if !resume_path.is_empty() {
+                    explorer =
+                        explorer.checkpoint(Path::new(resume_path), matches.get_usize("every"));
+                }
+                let cache_path = matches.get_str("cache").to_string();
+                let cache = if cache_path.is_empty() {
+                    None
+                } else {
+                    let path = Path::new(&cache_path);
+                    let loaded =
+                        if path.exists() { PointCache::load(path)? } else { PointCache::new() };
+                    Some(Arc::new(Mutex::new(loaded)))
+                };
+                if let Some(cache) = &cache {
+                    explorer = explorer.cache(cache.clone());
+                }
+                let db = explorer.run()?;
+                println!(
+                    "{} design points x {} models in {:.2}s ({:.0} evals/s, {} workers)",
+                    db.stats.design_points,
+                    db.spaces.len(),
+                    db.stats.wall_seconds,
+                    db.stats.evals_per_sec(),
+                    db.stats.workers
+                );
+                if let Some(cache) = cache {
+                    let cache = qadam::explore::lock_cache(&cache);
+                    cache.save(Path::new(&cache_path))?;
+                    println!(
+                        "cache: {} design points ({} hits / {} misses this run), saved to \
+                         {cache_path}",
+                        cache.len(),
+                        cache.hits(),
+                        cache.misses()
+                    );
+                }
+                db
+            };
+            // The database records its own coverage, so a loaded shard is
+            // summarized exactly like a live sharded run.
+            if db.shard.1 > 1 {
                 // A shard sees only part of the space, so its local best
                 // INT16 is not the campaign baseline; normalized summaries
                 // would be incomparable across shards. Report raw bests.
@@ -256,6 +320,34 @@ fn main() -> Result<()> {
                     }
                     println!();
                 }
+            }
+            let save_path = matches.get_str("save");
+            if !save_path.is_empty() {
+                db.save(Path::new(save_path))?;
+                println!("saved evaluation database to {save_path}");
+            }
+        }
+        "cache" => {
+            let file = matches.get_str("file");
+            let path = Path::new(file);
+            if matches.flag("clear") {
+                if path.exists() {
+                    std::fs::remove_file(path)?;
+                    println!("removed {file}");
+                } else {
+                    println!("{file}: no cache file");
+                }
+            } else if !path.exists() {
+                println!("{file}: no cache file");
+            } else {
+                let cache = PointCache::load(path)?;
+                let bytes = std::fs::metadata(path)?.len();
+                println!(
+                    "{file}: {} cached design points, {} evaluations, {} bytes",
+                    cache.len(),
+                    cache.total_evaluations(),
+                    bytes
+                );
             }
         }
         "pareto" => {
@@ -326,15 +418,33 @@ fn main() -> Result<()> {
             );
         }
         "report" => {
-            let dataset = parse_dataset(matches.get_str("dataset"))?;
-            let figure = match matches.get_str("fig") {
-                "2" => report::fig2(workers, seed)?,
-                "3" => report::fig3(seed)?,
-                "4" => report::fig4(dataset, workers, seed)?,
-                "5" => report::fig5(dataset, workers, seed)?,
-                "6" => report::fig6(dataset, workers, seed)?,
-                other => {
-                    return Err(Error::ParseError(format!("unknown figure '{other}'")));
+            let load_path = matches.get_str("load");
+            let figure = if load_path.is_empty() {
+                let dataset = parse_dataset(matches.get_str("dataset"))?;
+                match matches.get_str("fig") {
+                    "2" => report::fig2(workers, seed)?,
+                    "3" => report::fig3(seed)?,
+                    "4" => report::fig4(dataset, workers, seed)?,
+                    "5" => report::fig5(dataset, workers, seed)?,
+                    "6" => report::fig6(dataset, workers, seed)?,
+                    other => {
+                        return Err(Error::ParseError(format!("unknown figure '{other}'")));
+                    }
+                }
+            } else {
+                // Figures 4-6 consume only the persisted evaluations, so a
+                // saved database reproduces the live-run figure exactly.
+                let db = EvalDatabase::load(Path::new(load_path))?;
+                match matches.get_str("fig") {
+                    "4" => report::fig4_from_db(&db)?,
+                    "5" => report::fig5_from_db(&db)?,
+                    "6" => report::fig6_from_db(&db)?,
+                    other => {
+                        return Err(Error::InvalidConfig(format!(
+                            "--load renders figs 4-6 from a saved database; fig '{other}' \
+                             requires a live run"
+                        )));
+                    }
                 }
             };
             print!("{}", figure.render());

@@ -9,7 +9,7 @@ use crate::arch::SweepSpec;
 use crate::dnn::{Dataset, Model};
 use crate::dse::{self, Evaluation, Orientation};
 use crate::error::{Error, Result};
-use crate::explore::Explorer;
+use crate::explore::{EvalDatabase, Explorer};
 use crate::ppa::PpaModel;
 use crate::quant::PeType;
 use crate::synth::synthesize_sweep;
@@ -178,6 +178,14 @@ pub fn fig4(dataset: Dataset, workers: usize, seed: u64) -> Result<Figure> {
         .workers(workers)
         .seed(seed)
         .run()?;
+    fig4_from_db(&db)
+}
+
+/// **Fig. 4** from a saved campaign database (`qadam report --fig 4
+/// --load db.json`) — renders exactly what the live run would, since the
+/// figure consumes nothing beyond the persisted evaluations.
+pub fn fig4_from_db(db: &EvalDatabase) -> Result<Figure> {
+    db.ensure_whole_space()?;
     let mut table = Table::new(&["model", "pe", "norm_perf_per_area", "norm_energy_gain"]);
     let mut series: Vec<Series> = PeType::ALL
         .iter()
@@ -209,7 +217,7 @@ pub fn fig4(dataset: Dataset, workers: usize, seed: u64) -> Result<Figure> {
     }
     summary.push("paper: LightPE-1 4.8x/4.7x, LightPE-2 4.1x/4.0x, INT16 vs FP32 1.8x/1.5x".into());
     Ok(Figure {
-        id: format!("Fig. 4 — normalized DSE ({})", dataset.name()),
+        id: format!("Fig. 4 — normalized DSE ({})", db.dataset.name()),
         plot: scatter(
             "normalized perf/area vs normalized energy",
             "norm perf/area (vs best INT16)",
@@ -229,9 +237,19 @@ pub fn fig5(dataset: Dataset, workers: usize, seed: u64) -> Result<Figure> {
     pareto_figure(dataset, workers, seed, true)
 }
 
+/// **Fig. 5** from a saved campaign database.
+pub fn fig5_from_db(db: &EvalDatabase) -> Result<Figure> {
+    pareto_figure_from_db(db, true)
+}
+
 /// **Fig. 6** — Pareto front: top-1 error vs normalized energy (CIFAR).
 pub fn fig6(dataset: Dataset, workers: usize, seed: u64) -> Result<Figure> {
     pareto_figure(dataset, workers, seed, false)
+}
+
+/// **Fig. 6** from a saved campaign database.
+pub fn fig6_from_db(db: &EvalDatabase) -> Result<Figure> {
+    pareto_figure_from_db(db, false)
 }
 
 fn pareto_figure(dataset: Dataset, workers: usize, seed: u64, perf_axis: bool) -> Result<Figure> {
@@ -245,6 +263,17 @@ fn pareto_figure(dataset: Dataset, workers: usize, seed: u64, perf_axis: bool) -
         .workers(workers)
         .seed(seed)
         .run()?;
+    pareto_figure_from_db(&db, perf_axis)
+}
+
+fn pareto_figure_from_db(db: &EvalDatabase, perf_axis: bool) -> Result<Figure> {
+    db.ensure_whole_space()?;
+    let dataset = db.dataset;
+    if dataset == Dataset::ImageNet {
+        return Err(Error::InvalidConfig(
+            "Figs. 5/6 are CIFAR-only in the paper".into(),
+        ));
+    }
     let mut table = Table::new(&["model", "pe", "x_metric", "top1_or_err", "on_pareto_front"]);
     let mut series: Vec<Series> = PeType::ALL
         .iter()
@@ -368,5 +397,44 @@ mod tests {
         let err = fig5(Dataset::ImageNet, 1, 7).unwrap_err();
         assert_eq!(err.kind(), "invalid_config");
         assert!(err.to_string().contains("CIFAR-only"));
+    }
+
+    #[test]
+    fn figs_from_db_survive_json_round_trip() {
+        use crate::arch::SweepSpec;
+        use crate::quant::PeType;
+        use crate::util::json::Json;
+        // All four PE types so Figs. 4/5/6 have every best-point defined.
+        let spec = SweepSpec { pe_types: PeType::ALL.to_vec(), ..SweepSpec::tiny() };
+        let db = Explorer::over(spec)
+            .dataset(Dataset::Cifar10)
+            .workers(2)
+            .seed(7)
+            .run()
+            .unwrap();
+        let loaded =
+            EvalDatabase::from_json(&Json::parse(&db.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        // Saved-and-reloaded databases reproduce the live figures exactly.
+        assert_eq!(fig4_from_db(&loaded).unwrap().render(), fig4_from_db(&db).unwrap().render());
+        assert_eq!(fig5_from_db(&loaded).unwrap().render(), fig5_from_db(&db).unwrap().render());
+        assert_eq!(fig6_from_db(&loaded).unwrap().render(), fig6_from_db(&db).unwrap().render());
+    }
+
+    #[test]
+    fn figs_from_db_reject_imagenet() {
+        let db = EvalDatabase {
+            dataset: Dataset::ImageNet,
+            shard: (0, 1),
+            spaces: Vec::new(),
+            stats: crate::explore::CampaignStats {
+                design_points: 0,
+                evaluations: 0,
+                wall_seconds: 0.0,
+                workers: 0,
+            },
+        };
+        assert_eq!(fig5_from_db(&db).unwrap_err().kind(), "invalid_config");
+        assert_eq!(fig6_from_db(&db).unwrap_err().kind(), "invalid_config");
     }
 }

@@ -4,7 +4,7 @@
 //! required options, and generated `--help` text. Used by the `qadam` binary
 //! and the example drivers.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 
 /// Argument parsing error (also carries generated help output).
@@ -44,6 +44,8 @@ pub struct Matches {
     pub path: Vec<String>,
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
+    /// Options the user passed explicitly (vs. seeded defaults).
+    explicit: BTreeSet<String>,
     /// Positional arguments left over after options.
     pub positional: Vec<String>,
 }
@@ -83,6 +85,14 @@ impl Matches {
     /// Whether a boolean flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Whether the user explicitly passed `--name` on the command line
+    /// (false when the value merely comes from the declared default) —
+    /// lets subcommands reject contradictory flag combinations even for
+    /// options that carry defaults.
+    pub fn was_set(&self, name: &str) -> bool {
+        self.explicit.contains(name)
     }
 }
 
@@ -169,6 +179,7 @@ impl Command {
             path: vec![self.name.clone()],
             values: BTreeMap::new(),
             flags: BTreeMap::new(),
+            explicit: BTreeSet::new(),
             positional: Vec::new(),
         };
         self.parse_into(args, &mut matches)?;
@@ -214,6 +225,7 @@ impl Command {
                     .iter()
                     .find(|o| o.name == name)
                     .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                matches.explicit.insert(name.to_string());
                 if spec.is_flag {
                     matches.flags.insert(name.to_string(), true);
                 } else {
@@ -270,6 +282,18 @@ mod tests {
         assert_eq!(m.get_str("seed"), "42");
         assert!(!m.flag("verbose"));
         assert_eq!(m.subcommand(), "qadam");
+    }
+
+    #[test]
+    fn was_set_distinguishes_defaults_from_explicit() {
+        let m = cmd().parse(&argv(&[])).unwrap();
+        assert!(!m.was_set("seed"), "default must not count as explicitly set");
+        let m = cmd().parse(&argv(&["--seed", "7", "--verbose"])).unwrap();
+        assert!(m.was_set("seed"));
+        assert!(m.was_set("verbose"));
+        let m = cmd().parse(&argv(&["dse", "--dataset", "cifar10"])).unwrap();
+        assert!(m.was_set("dataset"));
+        assert!(!m.was_set("model"), "subcommand default must not count as set");
     }
 
     #[test]

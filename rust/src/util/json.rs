@@ -102,6 +102,15 @@ impl Json {
         out
     }
 
+    /// Canonical rendering: compact, object keys in sorted order (the
+    /// `BTreeMap` invariant), numbers in their shortest round-trip form.
+    /// Two structurally equal values always render to identical bytes, so
+    /// this form is safe to hash (sweep fingerprints, point-cache keys)
+    /// and to diff across runs.
+    pub fn to_string_canonical(&self) -> String {
+        self.to_string_compact()
+    }
+
     /// Pretty rendering with 2-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
@@ -473,5 +482,22 @@ mod tests {
     fn integers_render_without_fraction() {
         assert_eq!(num(5.0).to_string_compact(), "5");
         assert_eq!(num(5.25).to_string_compact(), "5.25");
+    }
+
+    #[test]
+    fn canonical_form_is_key_order_independent() {
+        let a = Json::parse(r#"{"b": 1, "a": 2}"#).unwrap();
+        let b = Json::parse(r#"{"a": 2, "b": 1}"#).unwrap();
+        assert_eq!(a.to_string_canonical(), b.to_string_canonical());
+        assert_eq!(a.to_string_canonical(), r#"{"a":2,"b":1}"#);
+    }
+
+    #[test]
+    fn canonical_floats_round_trip_exactly() {
+        for x in [0.1, 1.0 / 3.0, 2.0f64.powi(-40), 9.87654321e8, -5.5] {
+            let text = num(x).to_string_canonical();
+            let parsed = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(parsed.to_bits(), x.to_bits(), "{text}");
+        }
     }
 }

@@ -43,6 +43,49 @@ pub fn rel_diff(a: f64, b: f64) -> f64 {
     (a - b).abs() / denom
 }
 
+/// Streaming 64-bit FNV-1a hasher. Unlike `std::hash`, the digest is
+/// stable across platforms, compiler versions, and process runs, so it is
+/// safe to persist (sweep fingerprints, point-cache keys).
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    /// Fresh hasher at the FNV offset basis.
+    pub fn new() -> Self {
+        Self(Self::OFFSET)
+    }
+
+    /// Absorb bytes.
+    pub fn update(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+        self
+    }
+
+    /// Current digest.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot 64-bit FNV-1a hash of a byte string.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut hasher = Fnv64::new();
+    hasher.update(bytes);
+    hasher.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,5 +118,25 @@ mod tests {
         assert_eq!(rel_diff(0.0, 0.0), 0.0);
         assert!((rel_diff(1.0, 2.0) - 0.5).abs() < 1e-12);
         assert_eq!(rel_diff(3.0, 4.0), rel_diff(4.0, 3.0));
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv_streaming_equals_one_shot() {
+        let mut hasher = Fnv64::new();
+        hasher.update(b"qadam").update(b"::").update(b"persist");
+        assert_eq!(hasher.finish(), fnv1a_64(b"qadam::persist"));
+    }
+
+    #[test]
+    fn fnv_distinguishes_nearby_inputs() {
+        assert_ne!(fnv1a_64(b"seed=7"), fnv1a_64(b"seed=8"));
     }
 }

@@ -1,13 +1,17 @@
 //! Cross-module tests for the unified `Explorer` API and the lazy
 //! `SweepSpec` iteration underneath it: property tests that the lazy
 //! cross-product matches an eager golden reference, equivalence of
-//! `Explorer::run` with the serial path and the legacy coordinator, and
-//! typed-error behavior for baseline-free spaces.
+//! `Explorer::run` with the serial path and the legacy coordinator,
+//! typed-error behavior for baseline-free spaces, and the differential
+//! persistence guarantees (warm cache ≡ cold run, resumed checkpoint ≡
+//! uninterrupted run, bit-for-bit).
+
+use std::sync::{Arc, Mutex};
 
 use qadam::arch::{AcceleratorConfig, SweepSpec};
 use qadam::dnn::{model_for, Dataset, ModelKind};
 use qadam::dse;
-use qadam::explore::Explorer;
+use qadam::explore::{Explorer, PointCache};
 use qadam::quant::PeType;
 use qadam::util::prop::{check_with, pair, usize_in, Config};
 use qadam::Error;
@@ -182,4 +186,74 @@ fn degenerate_sweep_yields_invalid_config() {
         .run()
         .unwrap_err();
     assert!(matches!(err, Error::InvalidConfig(_)));
+}
+
+#[test]
+fn warm_point_cache_run_is_bit_identical_to_cold() {
+    let spec = SweepSpec::tiny();
+    let cold = Explorer::over(spec.clone())
+        .dataset(Dataset::Cifar10)
+        .workers(3)
+        .seed(7)
+        .run()
+        .unwrap();
+    let reference = cold.to_json().to_string_pretty();
+    let cache = Arc::new(Mutex::new(PointCache::new()));
+    let build = || {
+        Explorer::over(spec.clone())
+            .dataset(Dataset::Cifar10)
+            .workers(3)
+            .seed(7)
+            .cache(cache.clone())
+    };
+    let first = build().run().unwrap(); // fills the cache
+    let second = build().run().unwrap(); // served entirely from it
+    assert_eq!(first.to_json().to_string_pretty(), reference);
+    assert_eq!(second.to_json().to_string_pretty(), reference);
+    let guard = cache.lock().unwrap();
+    assert_eq!(guard.len(), spec.len());
+    assert_eq!(guard.misses() as usize, spec.len(), "cold pass misses once per point");
+    assert_eq!(guard.hits() as usize, spec.len(), "warm pass hits every point");
+}
+
+#[test]
+fn resumed_checkpoint_run_is_byte_identical_to_uninterrupted() {
+    let dir = std::env::temp_dir()
+        .join(format!("qadam_explorer_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("campaign.journal");
+    let build = || {
+        Explorer::over(SweepSpec::tiny()).dataset(Dataset::Cifar10).workers(3).seed(7)
+    };
+    let uninterrupted = build().run().unwrap();
+    let reference = uninterrupted.to_json().to_string_pretty();
+
+    // A full checkpointed run matches the plain run.
+    let full = build().checkpoint(&journal, 1).run().unwrap();
+    assert_eq!(full.to_json().to_string_pretty(), reference);
+
+    // Simulate a mid-campaign kill: keep the header plus the first three
+    // flushed entries, then a torn trailing fragment of the fourth.
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let lines: Vec<&str> = text.split_inclusive('\n').collect();
+    assert!(lines.len() > 4, "tiny campaign must journal several points");
+    let mut partial: String = lines[..4].concat();
+    partial.push_str("{\"evals\":[{\"area_m"); // killed mid-write
+    std::fs::write(&journal, &partial).unwrap();
+
+    // Resume: the flushed prefix replays in order without re-evaluation,
+    // the tail is recomputed, and the database is byte-identical.
+    let mut delivered = Vec::new();
+    let explorer = build().checkpoint(&journal, 2);
+    explorer.stream(|point| delivered.push(point.index)).unwrap();
+    assert_eq!(delivered, (0..SweepSpec::tiny().len()).collect::<Vec<_>>());
+    let resumed = explorer.run().unwrap();
+    assert_eq!(resumed.to_json().to_string_pretty(), reference);
+
+    // The journal is complete again: a further resume replays everything
+    // (zero evaluation work) and still reproduces the same bytes.
+    let replayed = build().checkpoint(&journal, 5).run().unwrap();
+    assert_eq!(replayed.to_json().to_string_pretty(), reference);
+    let _ = std::fs::remove_dir_all(&dir);
 }

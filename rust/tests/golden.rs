@@ -1,0 +1,246 @@
+//! Golden-snapshot regression suite: pins the `evaluate` numerics, the
+//! INT16 normalization, the headline ratios, and the Fig. 5/6 Pareto
+//! fronts bit-for-bit over a small pinned sweep.
+//!
+//! Cached campaign results (`explore::persist`) are only trustworthy if
+//! the evaluation math is frozen, so any numeric drift — an energy-model
+//! tweak, a synthesis-noise change, a float reassociation — fails these
+//! tests until the fixtures are deliberately regenerated with
+//!
+//! ```text
+//! QADAM_BLESS=1 cargo test --test golden
+//! ```
+//!
+//! and the resulting `rust/tests/golden/*.json` diffs are reviewed and
+//! committed. A missing fixture is blessed on first run (and should be
+//! committed); a present fixture is compared byte-for-byte, and on
+//! mismatch the fresh rendering is written next to it as `<name>.new`.
+//! Every test also recomputes its snapshot twice and asserts the two
+//! renderings agree, so even the blessing run proves determinism.
+
+use std::fs;
+use std::path::PathBuf;
+
+use qadam::accuracy;
+use qadam::arch::{ScratchpadCfg, SweepSpec};
+use qadam::dnn::{model_for, Dataset, ModelKind};
+use qadam::dse::{self, Orientation};
+use qadam::explore::{EvalDatabase, Explorer};
+use qadam::quant::PeType;
+use qadam::util::json::{num, obj, s, Json};
+
+const SEED: u64 = 7;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// The pinned sweep: all four PE types over two array sizes — small
+/// enough to snapshot wholesale, wide enough that the INT16 baseline,
+/// the LightPE wins, and every Fig. 5/6 best-point exist.
+fn pinned_spec() -> SweepSpec {
+    SweepSpec {
+        pe_types: PeType::ALL.to_vec(),
+        array_dims: vec![(8, 8), (16, 16)],
+        glb_kib: vec![128],
+        spads: vec![ScratchpadCfg::default()],
+        dram_bw_gbps: vec![8.0],
+        clock_ghz: vec![2.0],
+    }
+}
+
+fn pinned_db() -> EvalDatabase {
+    Explorer::over(pinned_spec())
+        .dataset(Dataset::Cifar10)
+        .workers(2)
+        .seed(SEED)
+        .run()
+        .expect("pinned campaign")
+}
+
+/// Compare `rendered` against the checked-in fixture, blessing it when
+/// missing or when `QADAM_BLESS=1`. With `QADAM_GOLDEN_REQUIRE=1` (the
+/// CI gate) a missing fixture is still written — so it can be collected
+/// as an artifact and committed — but the test FAILS instead of
+/// vacuously passing against its own fresh output.
+fn assert_snapshot(name: &str, rendered: &str) {
+    let dir = golden_dir();
+    fs::create_dir_all(&dir).expect("golden fixture dir");
+    let path = dir.join(name);
+    let bless = std::env::var("QADAM_BLESS").map(|v| v == "1").unwrap_or(false);
+    let require = std::env::var("QADAM_GOLDEN_REQUIRE").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        fs::write(&path, rendered).expect("write golden fixture");
+        if !bless {
+            if require {
+                panic!(
+                    "golden fixture '{name}' is not committed; a fresh rendering was written \
+                     to {} — review and commit it to arm the drift gate",
+                    path.display()
+                );
+            }
+            eprintln!(
+                "golden: blessed missing fixture '{name}' — commit {} to pin these numerics",
+                path.display()
+            );
+        }
+        return;
+    }
+    let expected = fs::read_to_string(&path).expect("read golden fixture");
+    if rendered != expected {
+        let new_path = dir.join(format!("{name}.new"));
+        fs::write(&new_path, rendered).expect("write drift rendering");
+        panic!(
+            "golden snapshot '{name}' drifted from the checked-in fixture.\n\
+             fresh rendering written to {}.\n\
+             If the numeric change is intentional, regenerate with \
+             `QADAM_BLESS=1 cargo test --test golden` and commit the diff.",
+            new_path.display()
+        );
+    }
+}
+
+/// Snapshot of the raw `evaluate` outputs (every metric, full f64
+/// precision) for ResNet-20 across the pinned sweep.
+#[test]
+fn golden_evaluate_outputs() {
+    let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    let render = || {
+        let evals: Vec<Json> = pinned_spec()
+            .iter()
+            .map(|config| dse::evaluate(&config, &model, SEED).to_json())
+            .collect();
+        Json::Arr(evals).to_string_pretty()
+    };
+    let first = render();
+    assert_eq!(first, render(), "evaluate must be deterministic given (config, model, seed)");
+    assert_snapshot("evaluate_resnet20.json", &first);
+}
+
+/// Snapshot of the paper's normalization: per-model headline ratios and
+/// the full normalized ResNet-20 cloud, all at full precision.
+#[test]
+fn golden_headline_ratios_and_normalization() {
+    let render = || {
+        let db = pinned_db();
+        let mut models = Vec::new();
+        for space in &db.spaces {
+            let ratios: Vec<Json> = dse::headline_ratios(&space.evals)
+                .expect("pinned sweep has an INT16 baseline")
+                .into_iter()
+                .map(|(pe, ppa, energy)| {
+                    obj(vec![
+                        ("pe", s(pe.name())),
+                        ("perf_per_area_gain", num(ppa)),
+                        ("energy_gain", num(energy)),
+                    ])
+                })
+                .collect();
+            models.push(obj(vec![
+                ("model", s(&space.model_name)),
+                ("headline", Json::Arr(ratios)),
+            ]));
+        }
+        let resnet20 = db
+            .spaces
+            .iter()
+            .find(|space| space.model_name == "ResNet-20")
+            .expect("ResNet-20 space");
+        let normalized: Vec<Json> = dse::normalize(&resnet20.evals)
+            .expect("pinned sweep has an INT16 baseline")
+            .into_iter()
+            .map(|p| {
+                obj(vec![
+                    ("config", s(&p.config_id)),
+                    ("pe", s(p.pe.name())),
+                    ("norm_perf_per_area", num(p.norm_perf_per_area)),
+                    ("norm_energy", num(p.norm_energy)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("per_model", Json::Arr(models)),
+            ("resnet20_normalized", Json::Arr(normalized)),
+        ])
+        .to_string_pretty()
+    };
+    let first = render();
+    assert_eq!(first, render(), "normalization must be deterministic");
+    assert_snapshot("headline_ratios.json", &first);
+}
+
+/// Snapshot of the Fig. 5 (accuracy vs perf/area) and Fig. 6 (error vs
+/// energy) per-model best points and Pareto-front membership.
+#[test]
+fn golden_fig45_pareto_fronts() {
+    let render = || {
+        let db = pinned_db();
+        let mut panels = Vec::new();
+        for space in &db.spaces {
+            let kind = ModelKind::parse(&space.model_name).expect("paper model name");
+            let baseline = dse::best_perf_per_area(&space.evals, PeType::Int16)
+                .expect("pinned sweep has INT16 points");
+            let base_energy =
+                dse::best_energy(&space.evals, PeType::Int16).expect("INT16 energy baseline");
+            for (figure, orientations) in [
+                ("fig5", [Orientation::Maximize, Orientation::Maximize]),
+                ("fig6", [Orientation::Minimize, Orientation::Minimize]),
+            ] {
+                let points: Vec<(PeType, f64, f64)> = PeType::ALL
+                    .iter()
+                    .map(|&pe| {
+                        let entry = accuracy::registry(kind, Dataset::Cifar10, pe)
+                            .expect("registry covers CIFAR-10");
+                        if figure == "fig5" {
+                            let best = dse::best_perf_per_area(&space.evals, pe)
+                                .expect("pinned sweep covers every PE type");
+                            (pe, best.perf_per_area / baseline.perf_per_area, entry.top1)
+                        } else {
+                            let best = dse::best_energy(&space.evals, pe)
+                                .expect("pinned sweep covers every PE type");
+                            (pe, best.energy_uj / base_energy.energy_uj, entry.top1_error())
+                        }
+                    })
+                    .collect();
+                let coords: Vec<Vec<f64>> =
+                    points.iter().map(|&(_, x, y)| vec![x, y]).collect();
+                let front = dse::pareto_front(&coords, &orientations);
+                let rendered: Vec<Json> = points
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, &(pe, x, y))| {
+                        obj(vec![
+                            ("pe", s(pe.name())),
+                            ("x", num(x)),
+                            ("y", num(y)),
+                            ("on_front", Json::Bool(front.contains(&idx))),
+                        ])
+                    })
+                    .collect();
+                panels.push(obj(vec![
+                    ("model", s(&space.model_name)),
+                    ("figure", s(figure)),
+                    ("points", Json::Arr(rendered)),
+                ]));
+            }
+        }
+        Json::Arr(panels).to_string_pretty()
+    };
+    let first = render();
+    assert_eq!(first, render(), "Pareto extraction must be deterministic");
+    assert_snapshot("fig45_pareto_fronts.json", &first);
+}
+
+/// The paper's qualitative shape must hold on the pinned sweep even
+/// before any fixture exists: LightPEs beat the INT16 baseline on both
+/// axes. Guards against blessing a nonsensical snapshot.
+#[test]
+fn pinned_sweep_preserves_paper_shape() {
+    let db = pinned_db();
+    for space in &db.spaces {
+        let ratios = dse::headline_ratios(&space.evals).unwrap();
+        let light1 = ratios.iter().find(|(pe, _, _)| *pe == PeType::LightPe1).unwrap();
+        assert!(light1.1 > 1.0, "{}: LightPE-1 perf/area gain {}", space.model_name, light1.1);
+        assert!(light1.2 > 1.0, "{}: LightPE-1 energy gain {}", space.model_name, light1.2);
+    }
+}

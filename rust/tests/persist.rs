@@ -1,0 +1,341 @@
+//! Persistence-layer tests: property tests for the JSON round-trip and
+//! the content-addressed cache key, plus corrupt-input behavior — every
+//! truncated/garbled artifact must surface a typed error, never a panic,
+//! and a checkpoint journal from a different campaign must be rejected.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use qadam::arch::{AcceleratorConfig, ScratchpadCfg, SweepSpec};
+use qadam::dnn::{models_for, Dataset};
+use qadam::dse::Evaluation;
+use qadam::explore::{point_key, CampaignStats, EvalDatabase, Explorer, ModelSpace, PointCache};
+use qadam::quant::PeType;
+use qadam::util::json::Json;
+use qadam::util::prop::{check_with, Config, Gen};
+use qadam::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// Generators (structurally valid, numerically arbitrary).
+
+fn random_config(rng: &mut Pcg64) -> AcceleratorConfig {
+    AcceleratorConfig {
+        pe: *rng.choose(&PeType::ALL),
+        rows: 1 + rng.below(64) as usize,
+        cols: 1 + rng.below(64) as usize,
+        spad: ScratchpadCfg {
+            ifmap_entries: 1 + rng.below(64) as usize,
+            filter_entries: 1 + rng.below(512) as usize,
+            psum_entries: 1 + rng.below(64) as usize,
+        },
+        glb_kib: 1 + rng.below(1024) as usize,
+        dram_bw_gbps: rng.uniform(0.5, 64.0),
+        clock_ghz: rng.uniform(0.1, 5.0),
+    }
+}
+
+fn random_eval(rng: &mut Pcg64) -> Evaluation {
+    Evaluation {
+        config: random_config(rng),
+        area_mm2: rng.uniform(1e-3, 500.0),
+        clock_ghz: rng.uniform(0.1, 5.0),
+        latency_ms: rng.uniform(1e-4, 1e4),
+        inf_per_s: rng.uniform(1e-2, 1e6),
+        perf_per_area: rng.uniform(1e-6, 1e5),
+        energy_uj: rng.uniform(1e-3, 1e7),
+        dram_energy_uj: rng.uniform(1e-3, 1e7),
+        utilization: rng.uniform(0.0, 1.0),
+    }
+}
+
+fn random_db(rng: &mut Pcg64) -> EvalDatabase {
+    let dataset = *rng.choose(&Dataset::ALL);
+    let spaces: Vec<ModelSpace> = (0..1 + rng.below(3) as usize)
+        .map(|i| ModelSpace {
+            model_name: format!("model-{i}"),
+            dataset,
+            evals: (0..rng.below(4)).map(|_| random_eval(rng)).collect(),
+        })
+        .collect();
+    let design_points = spaces.iter().map(|s| s.evals.len()).max().unwrap_or(0);
+    let evaluations = spaces.iter().map(|s| s.evals.len()).sum();
+    let num_shards = 1 + rng.below(4) as usize;
+    EvalDatabase {
+        dataset,
+        shard: (rng.below(num_shards as u64) as usize, num_shards),
+        spaces,
+        // The persisted normal form: transient throughput fields zeroed.
+        stats: CampaignStats { design_points, evaluations, wall_seconds: 0.0, workers: 0 },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property tests.
+
+#[test]
+fn prop_evaluation_json_round_trips_bit_for_bit() {
+    let gen = Gen::new(random_eval, |_| Vec::new());
+    check_with(&Config { cases: 96, ..Default::default() }, &gen, |eval| {
+        let text = eval.to_json().to_string_compact();
+        match Json::parse(&text).ok().and_then(|json| Evaluation::from_json(&json).ok()) {
+            Some(parsed) => parsed == *eval,
+            None => false,
+        }
+    });
+}
+
+#[test]
+fn prop_database_json_round_trips_and_reserializes_identically() {
+    let gen = Gen::new(random_db, |_| Vec::new());
+    check_with(&Config { cases: 32, ..Default::default() }, &gen, |db| {
+        let text = db.to_json().to_string_pretty();
+        match Json::parse(&text).ok().and_then(|json| EvalDatabase::from_json(&json).ok()) {
+            Some(parsed) => parsed == *db && parsed.to_json().to_string_pretty() == text,
+            None => false,
+        }
+    });
+}
+
+#[test]
+fn prop_cache_key_stable_and_sensitive_to_every_field() {
+    let models = models_for(Dataset::Cifar10);
+    let gen = Gen::new(random_config, |_| Vec::new());
+    check_with(&Config { cases: 96, ..Default::default() }, &gen, |config| {
+        let key = point_key(config, 7, &models);
+        // Stability: structural equality implies key equality.
+        if key != point_key(&config.clone(), 7, &models) {
+            return false;
+        }
+        // Sensitivity: any config field change must change the key.
+        let mutations: Vec<AcceleratorConfig> = vec![
+            {
+                let mut c = config.clone();
+                c.pe = if c.pe == PeType::Fp32 { PeType::Int16 } else { PeType::Fp32 };
+                c
+            },
+            {
+                let mut c = config.clone();
+                c.rows += 1;
+                c
+            },
+            {
+                let mut c = config.clone();
+                c.cols += 1;
+                c
+            },
+            {
+                let mut c = config.clone();
+                c.spad.ifmap_entries += 1;
+                c
+            },
+            {
+                let mut c = config.clone();
+                c.spad.filter_entries += 1;
+                c
+            },
+            {
+                let mut c = config.clone();
+                c.spad.psum_entries += 1;
+                c
+            },
+            {
+                let mut c = config.clone();
+                c.glb_kib += 1;
+                c
+            },
+            {
+                let mut c = config.clone();
+                c.dram_bw_gbps += 0.5;
+                c
+            },
+            {
+                let mut c = config.clone();
+                c.clock_ghz *= 0.5;
+                c
+            },
+        ];
+        if mutations.iter().any(|mutated| point_key(mutated, 7, &models) == key) {
+            return false;
+        }
+        // The seed and the model set are part of the address too.
+        point_key(config, 8, &models) != key && point_key(config, 7, &models[..1]) != key
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Corrupt-input behavior (typed errors, never panics).
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qadam_persist_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn small_db() -> EvalDatabase {
+    Explorer::over(SweepSpec::tiny())
+        .dataset(Dataset::Cifar10)
+        .workers(2)
+        .seed(7)
+        .run()
+        .unwrap()
+}
+
+#[test]
+fn corrupt_database_files_yield_typed_errors() {
+    let dir = temp_dir("db");
+    // Missing file → Io.
+    assert_eq!(EvalDatabase::load(&dir.join("missing.json")).unwrap_err().kind(), "io");
+    // Garbage → ParseError.
+    let garbage = dir.join("garbage.json");
+    fs::write(&garbage, "{not json!").unwrap();
+    assert_eq!(EvalDatabase::load(&garbage).unwrap_err().kind(), "parse_error");
+    // Truncated (torn save) → ParseError.
+    let db = small_db();
+    let full = dir.join("db.json");
+    db.save(&full).unwrap();
+    let text = fs::read_to_string(&full).unwrap();
+    let truncated = dir.join("truncated.json");
+    fs::write(&truncated, &text[..text.len() / 2]).unwrap();
+    assert_eq!(EvalDatabase::load(&truncated).unwrap_err().kind(), "parse_error");
+    // Wrong document kind → ParseError.
+    let cache_file = dir.join("cache.json");
+    PointCache::new().save(&cache_file).unwrap();
+    assert_eq!(EvalDatabase::load(&cache_file).unwrap_err().kind(), "parse_error");
+    // Future schema version → ParseError.
+    let future = dir.join("future.json");
+    fs::write(&future, text.replacen("\"schema\": 1", "\"schema\": 99", 1)).unwrap();
+    assert_eq!(EvalDatabase::load(&future).unwrap_err().kind(), "parse_error");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_cache_files_yield_typed_errors() {
+    let dir = temp_dir("cache");
+    assert_eq!(PointCache::load(&dir.join("missing.json")).unwrap_err().kind(), "io");
+    let bad = dir.join("bad.json");
+    fs::write(&bad, "[1, 2").unwrap();
+    assert_eq!(PointCache::load(&bad).unwrap_err().kind(), "parse_error");
+    let bad_key = dir.join("bad_key.json");
+    fs::write(
+        &bad_key,
+        r#"{"kind":"qadam.pointcache","schema":1,"entries":[{"key":"zzzz","evals":[]}]}"#,
+    )
+    .unwrap();
+    assert_eq!(PointCache::load(&bad_key).unwrap_err().kind(), "parse_error");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_or_mismatched_journals_yield_typed_errors() {
+    let dir = temp_dir("journal");
+    let journal = dir.join("campaign.journal");
+    let explorer =
+        || Explorer::over(SweepSpec::tiny()).dataset(Dataset::Cifar10).workers(2).seed(7);
+    // Produce a complete, healthy journal.
+    explorer().checkpoint(&journal, 1).run().unwrap();
+    let text = fs::read_to_string(&journal).unwrap();
+    let lines: Vec<&str> = text.split_inclusive('\n').collect();
+    assert!(lines.len() >= 3, "tiny campaign must journal several points");
+
+    // Garbled middle entry (newline-terminated) → ParseError.
+    let mut garbled = String::new();
+    for (i, line) in lines.iter().enumerate() {
+        if i == 2 {
+            garbled.push_str("{garbled}\n");
+        } else {
+            garbled.push_str(line);
+        }
+    }
+    fs::write(&journal, &garbled).unwrap();
+    assert_eq!(explorer().checkpoint(&journal, 1).run().unwrap_err().kind(), "parse_error");
+
+    // A garbled-but-complete header line → ParseError.
+    fs::write(&journal, "{garbled header}\n").unwrap();
+    assert_eq!(explorer().checkpoint(&journal, 1).run().unwrap_err().kind(), "parse_error");
+
+    // A torn header (killed between create and flush, no newline) is the
+    // crash case: the suspect file is renamed aside (never deleted), the
+    // journal restarts fresh, and the campaign succeeds.
+    fs::write(&journal, &lines[0][..lines[0].len() / 2]).unwrap();
+    let restarted = explorer().checkpoint(&journal, 1).run().unwrap();
+    assert_eq!(
+        restarted.to_json().to_string_pretty(),
+        explorer().run().unwrap().to_json().to_string_pretty()
+    );
+    assert!(dir.join("campaign.journal.torn").exists(), "torn file must be preserved aside");
+    // ... and an empty file behaves the same way.
+    fs::write(&journal, "").unwrap();
+    explorer().checkpoint(&journal, 1).run().unwrap();
+
+    // Same journal, different seed → InvalidConfig (campaign mismatch).
+    fs::write(&journal, &text).unwrap();
+    let err = Explorer::over(SweepSpec::tiny())
+        .dataset(Dataset::Cifar10)
+        .workers(2)
+        .seed(8)
+        .checkpoint(&journal, 1)
+        .run()
+        .unwrap_err();
+    assert_eq!(err.kind(), "invalid_config");
+
+    // Same journal, different sweep → InvalidConfig (fingerprint mismatch).
+    let mut wider = SweepSpec::tiny();
+    wider.glb_kib.push(256);
+    let err = Explorer::over(wider)
+        .dataset(Dataset::Cifar10)
+        .workers(2)
+        .seed(7)
+        .checkpoint(&journal, 1)
+        .run()
+        .unwrap_err();
+    assert_eq!(err.kind(), "invalid_config");
+    assert!(err.to_string().contains("fingerprint"), "{err}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharded_database_round_trips_shard_and_refuses_normalization() {
+    let db = Explorer::over(SweepSpec::tiny())
+        .dataset(Dataset::Cifar10)
+        .workers(2)
+        .seed(7)
+        .shard(1, 3)
+        .run()
+        .unwrap();
+    assert_eq!(db.shard, (1, 3));
+    let parsed =
+        EvalDatabase::from_json(&Json::parse(&db.to_json().to_string_pretty()).unwrap()).unwrap();
+    assert_eq!(parsed.shard, (1, 3));
+    // A shard's local best INT16 is not the campaign baseline: normalized
+    // summaries must refuse rather than silently produce wrong ratios.
+    assert_eq!(parsed.headline_geomean().unwrap_err().kind(), "invalid_config");
+}
+
+#[test]
+fn cache_reloaded_from_disk_serves_identical_results() {
+    let dir = temp_dir("cache_reuse");
+    let cache_file = dir.join("cache.json");
+    let run = |cache: Arc<Mutex<PointCache>>| {
+        Explorer::over(SweepSpec::tiny())
+            .dataset(Dataset::Cifar10)
+            .workers(2)
+            .seed(7)
+            .cache(cache)
+            .run()
+            .unwrap()
+    };
+    let cache = Arc::new(Mutex::new(PointCache::new()));
+    let cold = run(cache.clone());
+    cache.lock().unwrap().save(&cache_file).unwrap();
+    let reloaded = Arc::new(Mutex::new(PointCache::load(&cache_file).unwrap()));
+    let warm = run(reloaded.clone());
+    // The disk round-trip preserves every bit of every evaluation.
+    assert_eq!(warm.to_json().to_string_pretty(), cold.to_json().to_string_pretty());
+    let guard = reloaded.lock().unwrap();
+    assert_eq!(guard.misses(), 0, "every lookup must hit the reloaded cache");
+    assert_eq!(guard.hits() as usize, cold.stats.design_points);
+    drop(guard);
+    let _ = fs::remove_dir_all(&dir);
+}
