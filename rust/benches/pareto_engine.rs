@@ -1,0 +1,81 @@
+//! Bench: the online Pareto engine vs the post-hoc quadratic scan, and
+//! non-exhaustive search strategies vs the exhaustive walk.
+//!
+//! Two claims to quantify: (1) streaming dominance pruning turns front
+//! maintenance from O(n²)-after-the-fact into O(front) per insert, so
+//! the front is available live at a fraction of the batch cost; (2) a
+//! `random:N` / `halving:K` strategy campaign does work proportional to
+//! its selection, not to the cross-product.
+
+use qadam::bench::{bench, bench_with, section, BenchConfig};
+use qadam::dnn::{model_for, Dataset, ModelKind};
+use qadam::dse::{pareto_front, pareto_front_reference, Orientation};
+use qadam::explore::Explorer;
+use qadam::pareto::{FrontCore, RandomSample, SuccessiveHalving};
+use qadam::util::rng::Pcg64;
+
+fn synthetic_cloud(n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            // Correlated trade-off cloud: perf up, energy up, plus noise —
+            // produces realistic front sizes (tens, not thousands).
+            let x = rng.uniform(0.0, 100.0);
+            let y = x * rng.uniform(0.5, 1.5) + rng.uniform(0.0, 20.0);
+            vec![x, y]
+        })
+        .collect()
+}
+
+fn main() {
+    let orientations = [Orientation::Maximize, Orientation::Minimize];
+
+    section("front maintenance: streaming engine vs post-hoc scan");
+    for &n in &[1_000usize, 10_000] {
+        let cloud = synthetic_cloud(n, 42);
+        bench(&format!("stream_insert_{n}"), || {
+            let mut front = FrontCore::new(orientations.to_vec());
+            for point in &cloud {
+                front.insert(point.clone(), ());
+            }
+            front.len()
+        });
+        bench(&format!("batch_engine_{n}"), || pareto_front(&cloud, &orientations).len());
+        // The quadratic oracle only at the smaller size (it is the point
+        // of the comparison, not something to wait on).
+        if n <= 1_000 {
+            bench(&format!("batch_reference_{n}"), || {
+                pareto_front_reference(&cloud, &orientations).len()
+            });
+        }
+    }
+
+    section("campaign wall-clock: exhaustive vs strategy walks");
+    let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    let build = || {
+        Explorer::over(qadam::arch::SweepSpec::default())
+            .model(model.clone())
+            .workers(0)
+            .seed(7)
+    };
+    let config = BenchConfig { warmup_iters: 0, measure_iters: 2 };
+    bench_with("campaign_exhaustive", config, || {
+        build().run().expect("exhaustive campaign").stats.evaluations
+    });
+    bench_with("campaign_random_32", config, || {
+        build()
+            .strategy(RandomSample { n: 32, seed: 11 })
+            .run()
+            .expect("random campaign")
+            .stats
+            .evaluations
+    });
+    bench_with("campaign_halving_32", config, || {
+        build()
+            .strategy(SuccessiveHalving { keep: 32, rounds: 3 })
+            .run()
+            .expect("halving campaign")
+            .stats
+            .evaluations
+    });
+}

@@ -21,8 +21,11 @@ use crate::quant::PeType;
 /// A (model, dataset, pe) → top-1 accuracy entry.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AccuracyEntry {
+    /// Model architecture.
     pub model: ModelKind,
+    /// Training/evaluation dataset.
     pub dataset: Dataset,
+    /// PE type the model was quantization-aware trained for.
     pub pe: PeType,
     /// Mean top-1 accuracy in percent.
     pub top1: f64,

@@ -18,8 +18,11 @@ use crate::util::json::{num, obj, s, Json};
 /// psum entries accumulator-wide). Defaults follow Eyeriss's RS PE.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ScratchpadCfg {
+    /// Input-feature-map entries (activation-wide words).
     pub ifmap_entries: usize,
+    /// Filter-weight entries (weight-wide words).
     pub filter_entries: usize,
+    /// Partial-sum entries (accumulator-wide words).
     pub psum_entries: usize,
 }
 

@@ -16,14 +16,36 @@ use crate::quant::PeType;
 use crate::util::json::{num, obj, s, Json};
 
 /// Candidate values per design-space axis.
+///
+/// The cross-product is enumerated lazily: [`Self::get`] decodes any
+/// point from its mixed-radix index in O(1), so iteration, random
+/// access, and shard views never materialize the space.
+///
+/// ```
+/// use qadam::arch::SweepSpec;
+///
+/// let spec = SweepSpec::tiny();
+/// assert_eq!(spec.len(), 4); // 2 PE types × 2 array sizes
+/// // Random access agrees with iteration order.
+/// let third = spec.get(2).unwrap();
+/// assert_eq!(spec.iter().nth(2).unwrap(), third);
+/// // Shards partition the space without materializing it.
+/// let counts: usize = (0..3).map(|s| spec.shard_iter(s, 3).len()).sum();
+/// assert_eq!(counts, spec.len());
+/// ```
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
+    /// Candidate PE types.
     pub pe_types: Vec<PeType>,
     /// (rows, cols) pairs.
     pub array_dims: Vec<(usize, usize)>,
+    /// Candidate global-buffer capacities (KiB).
     pub glb_kib: Vec<usize>,
+    /// Candidate per-PE scratchpad configurations.
     pub spads: Vec<ScratchpadCfg>,
+    /// Candidate DRAM bandwidths (GB/s).
     pub dram_bw_gbps: Vec<f64>,
+    /// Candidate clock targets (GHz).
     pub clock_ghz: Vec<f64>,
 }
 

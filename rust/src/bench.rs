@@ -11,7 +11,9 @@ use crate::util::stats::Summary;
 /// Configuration for a bench run.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchConfig {
+    /// Untimed warmup iterations before measurement.
     pub warmup_iters: usize,
+    /// Timed iterations aggregated into the summary.
     pub measure_iters: usize,
 }
 
@@ -31,7 +33,9 @@ impl BenchConfig {
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Timing statistics over the measured iterations.
     pub summary: Summary,
 }
 

@@ -24,7 +24,9 @@ use crate::explore::Explorer;
 /// Coordinator configuration (legacy façade over [`Explorer`]).
 #[derive(Debug, Clone)]
 pub struct Coordinator {
+    /// Worker thread count.
     pub workers: usize,
+    /// Synthesis-noise seed.
     pub seed: u64,
 }
 
@@ -46,6 +48,27 @@ impl Coordinator {
     /// # Panics
     /// On a degenerate sweep (empty axis). Use [`Explorer::run`] for the
     /// fallible equivalent.
+    ///
+    /// # Migration
+    ///
+    /// Move the constructor arguments into the builder; the result is
+    /// bit-identical and degenerate sweeps become a typed error instead
+    /// of a panic:
+    ///
+    /// ```
+    /// use qadam::arch::SweepSpec;
+    /// use qadam::dnn::Dataset;
+    /// use qadam::explore::Explorer;
+    ///
+    /// // Before: Coordinator::new(4, 7).campaign(&spec, Dataset::Cifar10)
+    /// let db = Explorer::over(SweepSpec::tiny())
+    ///     .dataset(Dataset::Cifar10)
+    ///     .workers(4)
+    ///     .seed(7)
+    ///     .run()?;
+    /// # assert_eq!(db.spaces.len(), 3);
+    /// # Ok::<(), qadam::Error>(())
+    /// ```
     #[deprecated(
         since = "0.2.0",
         note = "use `Explorer::over(spec).dataset(dataset).workers(n).seed(s).run()`"
@@ -64,6 +87,28 @@ impl Coordinator {
     /// # Panics
     /// On a degenerate sweep (empty axis). Use [`Explorer::run`] for the
     /// fallible equivalent.
+    ///
+    /// # Migration
+    ///
+    /// The evaluation vector lives in the database's single model space;
+    /// order and every metric bit are unchanged:
+    ///
+    /// ```
+    /// use qadam::arch::SweepSpec;
+    /// use qadam::dnn::{model_for, Dataset, ModelKind};
+    /// use qadam::explore::Explorer;
+    ///
+    /// let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    /// // Before: Coordinator::new(4, 7).explore_model(&spec, &model)
+    /// let db = Explorer::over(SweepSpec::tiny())
+    ///     .model(model)
+    ///     .workers(4)
+    ///     .seed(7)
+    ///     .run()?;
+    /// let evals = &db.spaces[0].evals;
+    /// # assert_eq!(evals.len(), SweepSpec::tiny().len());
+    /// # Ok::<(), qadam::Error>(())
+    /// ```
     #[deprecated(
         since = "0.2.0",
         note = "use `Explorer::over(spec).model(model).workers(n).seed(s).run()`"

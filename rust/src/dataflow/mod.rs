@@ -29,8 +29,11 @@ pub const GLB_BYTES_PER_CYCLE: f64 = 64.0;
 /// Which dataflow mapped a layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dataflow {
+    /// Eyeriss-style row-stationary (the paper's dataflow).
     RowStationary,
+    /// Weights pinned in the array, activations streamed.
     WeightStationary,
+    /// Output partial sums pinned, inputs streamed.
     OutputStationary,
 }
 
@@ -48,7 +51,9 @@ impl Dataflow {
 /// Access counts at one storage level (element granularity).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct AccessCounts {
+    /// Element reads at this level.
     pub reads: u64,
+    /// Element writes at this level.
     pub writes: u64,
 }
 
@@ -77,7 +82,9 @@ pub struct TrafficStats {
 /// The mapper's result for one layer on one configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerMapping {
+    /// Name of the mapped layer.
     pub layer_name: String,
+    /// Dataflow that produced this mapping.
     pub dataflow: Dataflow,
     /// MACs in the layer.
     pub macs: u64,

@@ -7,11 +7,17 @@ use crate::dnn::Model;
 /// Aggregated mapping of a full model on one configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelMapping {
+    /// Name of the mapped model.
     pub model_name: String,
+    /// Dataflow that produced this mapping.
     pub dataflow: Dataflow,
+    /// Per-layer mappings (empty on the totals-only fast path).
     pub layers: Vec<LayerMapping>,
+    /// MACs per inference, summed over compute layers.
     pub total_macs: u64,
+    /// End-to-end cycles per inference.
     pub total_cycles: u64,
+    /// Aggregated memory traffic across all layers.
     pub traffic: TrafficStats,
     /// MAC-weighted average utilization.
     pub avg_utilization: f64,

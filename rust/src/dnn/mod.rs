@@ -12,7 +12,9 @@ pub use zoo::{model_for, models_for, Dataset, ModelKind};
 /// Layer kind; the mapper treats FC as a 1×1 conv over a 1×1 ifmap.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LayerKind {
+    /// 2-D convolution.
     Conv,
+    /// Fully-connected (dense) layer.
     FullyConnected,
     /// Pooling moves data but does no MACs; it still costs memory traffic.
     Pool,
@@ -21,7 +23,9 @@ pub enum LayerKind {
 /// One layer's shape parameters (NCHW, square spatial dims).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Layer {
+    /// Layer label (unique within its model).
     pub name: String,
+    /// Layer kind (conv / FC / pool).
     pub kind: LayerKind,
     /// Input feature map height = width.
     pub in_hw: usize,
@@ -31,7 +35,9 @@ pub struct Layer {
     pub out_c: usize,
     /// Filter height = width.
     pub kernel: usize,
+    /// Spatial stride.
     pub stride: usize,
+    /// Zero padding on each border.
     pub padding: usize,
 }
 
@@ -119,8 +125,11 @@ impl Layer {
 /// A named model: ordered layers.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Model {
+    /// Display name matching the paper's figures (e.g. `"ResNet-20"`).
     pub name: String,
+    /// Dataset this model instance targets (fixes the input shape).
     pub dataset: Dataset,
+    /// Ordered layer stack.
     pub layers: Vec<Layer>,
 }
 

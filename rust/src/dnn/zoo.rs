@@ -12,8 +12,11 @@ use super::{Layer, Model};
 /// Evaluation dataset (fixes input resolution and class count).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dataset {
+    /// CIFAR-10: 32×32 RGB, 10 classes.
     Cifar10,
+    /// CIFAR-100: 32×32 RGB, 100 classes.
     Cifar100,
+    /// ImageNet (ILSVRC): 224×224 RGB, 1000 classes.
     ImageNet,
 }
 
@@ -81,10 +84,15 @@ impl std::fmt::Display for Dataset {
 /// Model family member.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ModelKind {
+    /// VGG-16.
     Vgg16,
+    /// ResNet-20 (CIFAR-class).
     ResNet20,
+    /// ResNet-34 (ImageNet-class).
     ResNet34,
+    /// ResNet-50 (ImageNet-class).
     ResNet50,
+    /// ResNet-56 (CIFAR-class).
     ResNet56,
 }
 

@@ -14,7 +14,7 @@ pub mod metrics;
 pub mod pareto;
 
 pub use metrics::{coverage, generational_distance, hypervolume_2d};
-pub use pareto::{dominates, pareto_front, Orientation};
+pub use pareto::{dominates, pareto_front, pareto_front_reference, Orientation};
 
 use crate::arch::{AcceleratorConfig, SweepSpec};
 use crate::dataflow::Dataflow;
@@ -31,6 +31,7 @@ use crate::synth::{synthesize, SynthReport};
 /// need; see `explore::persist` for the JSON serialization.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Evaluation {
+    /// The hardware design point this evaluation measured.
     pub config: AcceleratorConfig,
     /// Total die area (mm²).
     pub area_mm2: f64,
@@ -84,6 +85,27 @@ pub fn evaluate_with_synth(synth: &SynthReport, model: &Model) -> Evaluation {
 }
 
 /// Explore a full sweep against one model (single-threaded reference path).
+///
+/// # Migration
+///
+/// Replace direct calls with the builder — it parallelizes, streams, and
+/// returns typed errors instead of panicking on degenerate spaces:
+///
+/// ```
+/// use qadam::arch::SweepSpec;
+/// use qadam::dnn::{model_for, Dataset, ModelKind};
+/// use qadam::explore::Explorer;
+///
+/// let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+/// // Before: let evals = qadam::dse::explore(&spec, &model, 7);
+/// let db = Explorer::over(SweepSpec::tiny()).model(model).seed(7).run()?;
+/// let evals = &db.spaces[0].evals; // same order, bit-identical metrics
+/// # assert_eq!(evals.len(), SweepSpec::tiny().len());
+/// # Ok::<(), qadam::Error>(())
+/// ```
+///
+/// For a serial reference path without the builder, iterate the lazy
+/// sweep directly: `spec.iter().map(|c| dse::evaluate(&c, &model, seed))`.
 #[deprecated(
     since = "0.2.0",
     note = "use `explore::Explorer::over(spec).model(model)` (parallel, streaming), \
@@ -94,28 +116,43 @@ pub fn explore(spec: &SweepSpec, model: &Model, seed: u64) -> Vec<Evaluation> {
 }
 
 /// The best (highest perf/area) evaluation for a PE type, if any.
+///
+/// Routed through the online engine: a single-objective
+/// [`ParetoFront`](crate::pareto::ParetoFront) keeps every tied maximum,
+/// and the historical `max_by` tie-breaking (the *latest* of equal
+/// bests) is preserved by picking the highest sequence number.
 pub fn best_perf_per_area(evals: &[Evaluation], pe: PeType) -> Option<&Evaluation> {
-    evals
-        .iter()
-        .filter(|e| e.config.pe == pe)
-        .max_by(|a, b| a.perf_per_area.total_cmp(&b.perf_per_area))
+    let mut front = crate::pareto::ParetoFront::<1, &Evaluation>::new([Orientation::Maximize]);
+    for eval in evals.iter().filter(|e| e.config.pe == pe) {
+        front.insert([eval.perf_per_area], eval);
+    }
+    front.entries().iter().max_by_key(|entry| entry.seq).map(|entry| entry.payload)
 }
 
 /// The best (lowest energy) evaluation for a PE type, if any.
+///
+/// Routed through the online engine like [`best_perf_per_area`]; the
+/// historical `min_by` tie-breaking (the *earliest* of equal bests) is
+/// preserved by picking the lowest sequence number.
 pub fn best_energy(evals: &[Evaluation], pe: PeType) -> Option<&Evaluation> {
-    evals
-        .iter()
-        .filter(|e| e.config.pe == pe)
-        .min_by(|a, b| a.energy_uj.total_cmp(&b.energy_uj))
+    let mut front = crate::pareto::ParetoFront::<1, &Evaluation>::new([Orientation::Minimize]);
+    for eval in evals.iter().filter(|e| e.config.pe == pe) {
+        front.insert([eval.energy_uj], eval);
+    }
+    front.entries().iter().min_by_key(|entry| entry.seq).map(|entry| entry.payload)
 }
 
 /// A design point normalized against the best-INT16 baseline (Fig. 4 axes:
 /// higher `norm_perf_per_area` is better; lower `norm_energy` is better).
 #[derive(Debug, Clone)]
 pub struct NormalizedPoint {
+    /// PE type of the underlying design point.
     pub pe: PeType,
+    /// [`AcceleratorConfig::id`] of the underlying design point.
     pub config_id: String,
+    /// Perf/area relative to the best-INT16 baseline (higher is better).
     pub norm_perf_per_area: f64,
+    /// Energy relative to the best-INT16 baseline (lower is better).
     pub norm_energy: f64,
 }
 

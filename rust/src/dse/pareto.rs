@@ -1,55 +1,50 @@
 //! Pareto-front extraction (Figs. 4–6).
 //!
-//! Generic over the orientation of each axis so the same routine serves
-//! "maximize perf/area vs maximize accuracy" (Fig. 5) and "minimize energy
-//! vs minimize error" (Fig. 6).
+//! The dominance rules and [`Orientation`] now live in the online engine
+//! ([`crate::pareto::front`]) and are re-exported here for source
+//! compatibility. [`pareto_front`] — the batch entry point every figure
+//! uses — is routed through that engine: it streams the points into a
+//! [`FrontCore`](crate::pareto::FrontCore) and reads the survivors back,
+//! so the post-hoc and streaming paths are one implementation. The
+//! original quadratic scan survives as [`pareto_front_reference`], the
+//! oracle the property suite compares the engine against.
 
-/// Whether an objective is to be maximized or minimized.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Orientation {
-    Maximize,
-    Minimize,
-}
+pub use crate::pareto::front::{dominates, Orientation};
 
-impl Orientation {
-    /// Does value `a` dominate-or-tie `b` on this axis?
-    fn at_least_as_good(self, a: f64, b: f64) -> bool {
-        match self {
-            Orientation::Maximize => a >= b,
-            Orientation::Minimize => a <= b,
-        }
-    }
-
-    /// Is value `a` strictly better than `b` on this axis?
-    fn strictly_better(self, a: f64, b: f64) -> bool {
-        match self {
-            Orientation::Maximize => a > b,
-            Orientation::Minimize => a < b,
-        }
-    }
-}
-
-/// Does point `a` dominate point `b` (at least as good on every axis,
-/// strictly better on at least one)?
-pub fn dominates(a: &[f64], b: &[f64], orientations: &[Orientation]) -> bool {
-    assert_eq!(a.len(), b.len());
-    assert_eq!(a.len(), orientations.len());
-    let mut strictly = false;
-    for ((&x, &y), &o) in a.iter().zip(b).zip(orientations) {
-        if !o.at_least_as_good(x, y) {
-            return false;
-        }
-        if o.strictly_better(x, y) {
-            strictly = true;
-        }
-    }
-    strictly
-}
+use crate::pareto::FrontCore;
 
 /// Indices of the Pareto-optimal points in `points` under `orientations`.
 /// Duplicated points are all kept (none dominates its copy). Output is
-/// sorted ascending by the first axis for plotting.
+/// sorted ascending by the first axis (ties keep index order), the
+/// figures' plotting order.
+///
+/// Routed through the online engine, so this is definitionally identical
+/// to streaming the same points into a
+/// [`ParetoFront`](crate::pareto::ParetoFront) — the golden and property
+/// suites additionally pin it against [`pareto_front_reference`].
+///
+/// # Panics
+/// If any point's axis count disagrees with `orientations`, or any
+/// coordinate is NaN.
 pub fn pareto_front(points: &[Vec<f64>], orientations: &[Orientation]) -> Vec<usize> {
+    if points.is_empty() {
+        return Vec::new();
+    }
+    let mut front = FrontCore::new(orientations.to_vec());
+    for point in points {
+        assert!(
+            point.iter().all(|v| !v.is_nan()),
+            "pareto_front requires NaN-free coordinates"
+        );
+        front.insert(point.clone(), ());
+    }
+    front.indices()
+}
+
+/// The original post-hoc O(n²) scan, kept verbatim as the differential
+/// oracle: the engine-routed [`pareto_front`] must agree with it
+/// bit-for-bit (membership and order) on every input.
+pub fn pareto_front_reference(points: &[Vec<f64>], orientations: &[Orientation]) -> Vec<usize> {
     let mut front: Vec<usize> = (0..points.len())
         .filter(|&i| {
             !points
@@ -127,5 +122,25 @@ mod tests {
         let front = pareto_front(&points, &[Maximize, Minimize]);
         let xs: Vec<f64> = front.iter().map(|&i| points[i][0]).collect();
         assert_eq!(xs, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn engine_agrees_with_reference_on_tie_heavy_input() {
+        // Duplicates, first-axis ties, and three axes — the cases where
+        // ordering subtleties would show up first.
+        let points = vec![
+            vec![1.0, 2.0, 3.0],
+            vec![1.0, 2.0, 3.0],
+            vec![1.0, 1.0, 4.0],
+            vec![2.0, 2.0, 2.0],
+            vec![0.5, 0.5, 0.5],
+        ];
+        let o = [Maximize, Minimize, Maximize];
+        assert_eq!(pareto_front(&points, &o), pareto_front_reference(&points, &o));
+    }
+
+    #[test]
+    fn empty_input_is_empty_front() {
+        assert!(pareto_front(&[], &[Maximize]).is_empty());
     }
 }

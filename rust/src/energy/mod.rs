@@ -11,10 +11,15 @@ use crate::tech::NODE_45NM;
 /// Energy breakdown for one (config, model) evaluation, in µJ.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EnergyBreakdown {
+    /// MAC (datapath) switching energy.
     pub mac_uj: f64,
+    /// Per-PE scratchpad access energy.
     pub spad_uj: f64,
+    /// Global buffer access energy.
     pub glb_uj: f64,
+    /// Off-chip DRAM access energy (reported separately from chip energy).
     pub dram_uj: f64,
+    /// Leakage energy over the inference's runtime.
     pub leakage_uj: f64,
 }
 

@@ -12,8 +12,11 @@ use crate::quant::PeType;
 /// All evaluations for one (model, dataset) pair.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpace {
+    /// Model these evaluations belong to.
     pub model_name: String,
+    /// Dataset the model instance targets.
     pub dataset: Dataset,
+    /// One evaluation per explored design point, in cross-product order.
     pub evals: Vec<Evaluation>,
 }
 
@@ -25,22 +28,36 @@ pub struct ModelSpace {
 /// always produce byte-identical files.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EvalDatabase {
+    /// Dataset of the campaign's workload set.
     pub dataset: Dataset,
     /// Round-robin shard this database covers: `(shard, num_shards)`,
     /// `(0, 1)` for the whole space. Persisted, because a shard's local
     /// best INT16 is not the campaign baseline — normalization over a
     /// partial space would silently produce wrong figures.
     pub shard: (usize, usize),
+    /// Descriptor of the search strategy that produced this database
+    /// (`"exhaustive"` for a full walk). Persisted for the same reason
+    /// as `shard`: a strategy-sampled space may not contain the
+    /// campaign's true best INT16, so normalizing against the sample's
+    /// local best would silently produce wrong figures.
+    pub strategy: String,
+    /// Per-model evaluation spaces, in the campaign's model order.
     pub spaces: Vec<ModelSpace>,
+    /// Campaign throughput metrics.
     pub stats: CampaignStats,
 }
 
 /// Campaign throughput metrics.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CampaignStats {
+    /// Design points actually evaluated (the strategy's selection size
+    /// when a non-exhaustive strategy ran).
     pub design_points: usize,
+    /// Total evaluations (`design_points` × model count).
     pub evaluations: usize,
+    /// Wall-clock duration of the campaign (transient; not persisted).
     pub wall_seconds: f64,
+    /// Worker threads used (transient; not persisted).
     pub workers: usize,
 }
 
@@ -52,15 +69,29 @@ impl CampaignStats {
 }
 
 impl EvalDatabase {
-    /// Guard for the paper normalizations: a shard's local best INT16 is
-    /// not the campaign baseline, so normalized summaries over a partial
-    /// space are rejected instead of silently wrong.
+    /// Whether this database covers its whole design space: one shard of
+    /// one, walked exhaustively (no sampling strategy).
+    pub fn is_whole_space(&self) -> bool {
+        self.shard.1 <= 1 && self.strategy == "exhaustive"
+    }
+
+    /// Guard for the paper normalizations: a shard's (or a sampled
+    /// subset's) local best INT16 is not the campaign baseline, so
+    /// normalized summaries over a partial space are rejected instead of
+    /// silently wrong.
     pub fn ensure_whole_space(&self) -> Result<()> {
         if self.shard.1 > 1 {
             return Err(crate::error::Error::InvalidConfig(format!(
                 "database covers shard {}/{} of the design space; merge all shards before \
                  normalizing against the INT16 baseline",
                 self.shard.0, self.shard.1
+            )));
+        }
+        if self.strategy != "exhaustive" {
+            return Err(crate::error::Error::InvalidConfig(format!(
+                "database was sampled by strategy '{}'; its local best INT16 is not the \
+                 campaign baseline — rerun exhaustively to normalize",
+                self.strategy
             )));
         }
         Ok(())

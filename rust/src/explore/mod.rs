@@ -24,16 +24,26 @@
 //! [`EvalDatabase`] saves/loads as schema-versioned canonical JSON
 //! (`qadam dse --save/--load/--resume`).
 //!
-//! ```no_run
+//! Campaigns compose with the Pareto engine ([`crate::pareto`]):
+//! [`Explorer::strategy`] walks a selected subspace instead of the full
+//! cross-product ([`RandomSample`](crate::pareto::RandomSample),
+//! [`SuccessiveHalving`](crate::pareto::SuccessiveHalving)), and
+//! [`Explorer::frontier`] maintains per-model streaming Pareto fronts
+//! that are observable live while workers are still evaluating.
+//!
+//! ```
 //! use qadam::arch::SweepSpec;
 //! use qadam::dnn::Dataset;
 //! use qadam::explore::Explorer;
 //!
-//! let db = Explorer::over(SweepSpec::default())
+//! // A small but real campaign: every point of the tiny sweep against
+//! // CIFAR-10's paper model set.
+//! let db = Explorer::over(SweepSpec::tiny())
 //!     .dataset(Dataset::Cifar10)
-//!     .workers(8)
+//!     .workers(2)
 //!     .seed(7)
 //!     .run()?;
+//! assert_eq!(db.spaces.len(), 3); // VGG-16, ResNet-20, ResNet-56
 //! for (pe, ppa, energy) in db.headline_geomean()? {
 //!     println!("{pe}: {ppa:.2}x perf/area, {energy:.2}x less energy");
 //! }
@@ -57,6 +67,7 @@ use crate::coordinator::pool::default_workers;
 use crate::dnn::{models_for, Dataset, Model};
 use crate::dse::{self, Evaluation};
 use crate::error::{Error, Result};
+use crate::pareto::{CampaignFrontier, FrontierBinding, Selection, Strategy, StrategyContext};
 use crate::synth::synthesize;
 
 /// One fully evaluated design point, streamed as soon as it is ready.
@@ -64,6 +75,7 @@ use crate::synth::synthesize;
 pub struct PointResult {
     /// Index of this point in the sweep's cross-product order.
     pub index: usize,
+    /// The decoded design point.
     pub config: AcceleratorConfig,
     /// One evaluation per model, in the explorer's model order.
     pub evals: Vec<Evaluation>,
@@ -80,6 +92,8 @@ pub struct Explorer {
     shard: (usize, usize),
     cache: Option<Arc<Mutex<PointCache>>>,
     checkpoint: Option<(PathBuf, usize)>,
+    strategy: Option<Arc<dyn Strategy>>,
+    frontier: Option<Arc<Mutex<CampaignFrontier>>>,
 }
 
 impl Explorer {
@@ -96,6 +110,8 @@ impl Explorer {
             shard: (0, 1),
             cache: None,
             checkpoint: None,
+            strategy: None,
+            frontier: None,
         }
     }
 
@@ -162,6 +178,36 @@ impl Explorer {
         self
     }
 
+    /// Walk only the design points a [`Strategy`] selects instead of the
+    /// full cross-product — e.g.
+    /// [`RandomSample`](crate::pareto::RandomSample)`{n, seed}` touches
+    /// exactly `n` points of a million-point space. Selection happens
+    /// once, up front, and is deterministic in the strategy's own
+    /// parameters; the checkpoint journal pins the strategy's
+    /// [`descriptor`](Strategy::descriptor) so a resume under a
+    /// different strategy is rejected. Composes with [`Self::shard`]
+    /// (the strategy selects within this process's shard).
+    pub fn strategy(mut self, strategy: impl Strategy + 'static) -> Self {
+        self.strategy = Some(Arc::new(strategy));
+        self
+    }
+
+    /// Maintain live per-model Pareto fronts over (perf/area ↑, energy ↓)
+    /// while the campaign streams: every delivered point is offered to
+    /// the shared [`CampaignFrontier`], so another thread can inspect
+    /// the frontier mid-campaign, and only O(front) of a huge sweep is
+    /// retained when the sink discards the rest. The frontier is bound
+    /// to this campaign's identity (sweep fingerprint, seed, shard,
+    /// strategy, model set) on first use — attaching it to a different
+    /// campaign is [`Error::InvalidConfig`] — and observation is
+    /// position-cursored, so checkpoint replays and reattached frontiers
+    /// end up exactly as an uninterrupted campaign would, never
+    /// double-counted.
+    pub fn frontier(mut self, frontier: Arc<Mutex<CampaignFrontier>>) -> Self {
+        self.frontier = Some(frontier);
+        self
+    }
+
     fn validate(&self) -> Result<()> {
         if self.spec.is_empty() {
             return Err(Error::InvalidConfig("sweep spec has an empty axis".into()));
@@ -180,7 +226,10 @@ impl Explorer {
         Ok(())
     }
 
-    /// Number of design points this explorer will evaluate (shard-aware).
+    /// Number of design points in this explorer's shard of the space,
+    /// *before* any [`Self::strategy`] selection (a strategy can only
+    /// shrink the walk; [`CampaignStats::design_points`] reports what a
+    /// campaign actually evaluated).
     pub fn design_points(&self) -> usize {
         let (shard, num_shards) = self.shard;
         let len = self.spec.len();
@@ -191,16 +240,19 @@ impl Explorer {
         }
     }
 
-    /// Evaluate every design point and aggregate per-model spaces — the
-    /// campaign product the figures consume.
+    /// Evaluate every selected design point and aggregate per-model
+    /// spaces — the campaign product the figures consume.
     pub fn run(&self) -> Result<EvalDatabase> {
+        // A strategy may select a tiny fraction of a huge space, so only
+        // pre-size the spaces for exhaustive walks.
+        let capacity = if self.strategy.is_some() { 0 } else { self.design_points() };
         let mut spaces: Vec<ModelSpace> = self
             .models
             .iter()
             .map(|m| ModelSpace {
                 model_name: m.name.clone(),
                 dataset: m.dataset,
-                evals: Vec::with_capacity(self.design_points()),
+                evals: Vec::with_capacity(capacity),
             })
             .collect();
         let stats = self.stream(|point| {
@@ -209,26 +261,47 @@ impl Explorer {
             }
         })?;
         let dataset = self.dataset.unwrap_or(self.models[0].dataset);
-        Ok(EvalDatabase { dataset, shard: self.shard, spaces, stats })
+        // Coverage, not intent: a strategy whose selection degraded to
+        // the whole space (e.g. `random:N` with N ≥ the space) produced a
+        // complete database, which must stay normalizable.
+        let strategy = if stats.design_points == self.design_points() {
+            "exhaustive".to_string()
+        } else {
+            self.strategy_descriptor()
+        };
+        Ok(EvalDatabase { dataset, shard: self.shard, strategy, spaces, stats })
+    }
+
+    /// The campaign's strategy identity (`"exhaustive"` when none is
+    /// set) — the single source for the journal manifest and the
+    /// frontier binding, which must agree exactly for resumes to work.
+    fn strategy_descriptor(&self) -> String {
+        self.strategy
+            .as_ref()
+            .map_or_else(|| "exhaustive".to_string(), |s| s.descriptor())
     }
 
     /// The identity pinned in checkpoint journal headers; only valid
-    /// after [`Self::validate`] (needs a non-empty model set).
-    fn manifest(&self) -> persist::CampaignManifest {
+    /// after [`Self::validate`] (needs a non-empty model set). `total`
+    /// is the strategy-selected point count this campaign delivers.
+    fn manifest(&self, total: usize) -> persist::CampaignManifest {
         persist::CampaignManifest {
             spec_fingerprint: self.spec.fingerprint(),
             seed: self.seed,
             shard: self.shard.0,
             num_shards: self.shard.1,
-            total: self.design_points(),
+            total,
             dataset: self.dataset.unwrap_or(self.models[0].dataset).name().to_string(),
             models: self.models.iter().map(|m| m.name.clone()).collect(),
+            strategy: self.strategy_descriptor(),
         }
     }
 
-    /// Evaluate the space, delivering each design point to `sink` in
-    /// cross-product order as soon as it (and all earlier points) is
-    /// ready. Memory is bounded: workers never run more than a small
+    /// Evaluate the (strategy-selected subset of the) space, delivering
+    /// each design point to `sink` in cross-product order as soon as it
+    /// (and all earlier points) is ready. With a [`Self::strategy`] the
+    /// walk visits only the selected positions, still in ascending index
+    /// order. Memory is bounded: workers never run more than a small
     /// window ahead of the sink, so at most O(workers) results are ever
     /// buffered and nothing is retained after the sink returns —
     /// million-point campaigns can stream to disk, sockets, or running
@@ -237,23 +310,70 @@ impl Explorer {
     pub fn stream(&self, mut sink: impl FnMut(PointResult)) -> Result<CampaignStats> {
         self.validate()?;
         let (shard, num_shards) = self.shard;
-        let total = self.design_points();
+        let space_positions = self.design_points();
+        // Strategy selection: which shard positions this campaign visits.
+        // Runs once, up front, so the walk itself stays lazy.
+        let selection = match &self.strategy {
+            None => Selection::All,
+            Some(strategy) => {
+                let ctx = StrategyContext {
+                    spec: &self.spec,
+                    models: &self.models,
+                    seed: self.seed,
+                    shard: self.shard,
+                    positions: space_positions,
+                };
+                let selected = strategy.select(&ctx)?;
+                selected.validate(space_positions)?;
+                selected
+            }
+        };
+        let total = selection.len(space_positions);
+        let subset: Option<&[usize]> = match &selection {
+            Selection::All => None,
+            Selection::Subset(positions) => Some(positions),
+        };
+        // Delivery position -> cross-product index, through the strategy
+        // selection; shared by the workers and the journal validation.
+        let index_for = move |pos: usize| {
+            let position = subset.map_or(pos, |positions| positions[pos]);
+            shard + position * num_shards
+        };
         let started = Instant::now();
+        // Live frontier: bind the campaign identity before any delivery
+        // (a frontier bound to a different campaign is rejected here).
+        if let Some(frontier) = &self.frontier {
+            let binding = FrontierBinding {
+                spec_fingerprint: self.spec.fingerprint(),
+                seed: self.seed,
+                shard: self.shard,
+                dataset: self.dataset.unwrap_or(self.models[0].dataset).name().to_string(),
+                strategy: self.strategy_descriptor(),
+                models: self.models.iter().map(|m| m.name.clone()).collect(),
+            };
+            lock_shared(frontier).begin(&binding)?;
+        }
         // Checkpointing: open (or resume) the journal and replay the
         // flushed prefix through the sink without re-evaluating it.
         let mut journal: Option<persist::JournalWriter> = None;
         let mut start_pos = 0usize;
         if let Some((path, every_n)) = &self.checkpoint {
             let (writer, replayed) =
-                persist::JournalWriter::open(path, &self.manifest(), *every_n)?;
+                persist::JournalWriter::open(path, &self.manifest(total), *every_n, &index_for)?;
             start_pos = replayed.len();
-            for point in replayed {
+            for (pos, point) in replayed.into_iter().enumerate() {
                 // The journal holds bit-exact results, so replayed points
-                // also warm the cache — a resumed campaign must leave it
-                // as complete as an uninterrupted one would.
+                // also warm the cache and the frontier — a resumed
+                // campaign must leave both as complete as an
+                // uninterrupted one would. `observe_at` skips positions a
+                // reattached frontier already archived, so nothing is
+                // double-counted.
                 if let Some(cache) = self.cache.as_ref() {
                     let key = persist::point_key(&point.config, self.seed, &self.models);
-                    lock_cache(cache).store(key, point.evals.clone());
+                    lock_shared(cache).store(key, point.evals.clone());
+                }
+                if let Some(frontier) = &self.frontier {
+                    lock_shared(frontier).observe_at(pos, point.index, &point.evals)?;
                 }
                 sink(point);
             }
@@ -275,7 +395,8 @@ impl Explorer {
         let delivered_ref = &delivered;
         let stop = AtomicBool::new(false);
         let stop_ref = &stop;
-        let mut journal_err: Option<Error> = None;
+        let index_for_ref = &index_for;
+        let mut abort_err: Option<Error> = None;
         let (tx, rx) = mpsc::channel::<(usize, PointResult)>();
         std::thread::scope(|scope| {
             for _ in 0..worker_count {
@@ -296,7 +417,7 @@ impl Explorer {
                         }
                         std::thread::park_timeout(Duration::from_millis(1));
                     }
-                    let index = shard + pos * num_shards;
+                    let index = index_for_ref(pos);
                     let config = spec.get(index).expect("shard index within cross-product");
                     let evals = evaluate_point(&config, models, seed, cache);
                     if tx.send((pos, PointResult { index, config, evals })).is_err() {
@@ -325,7 +446,15 @@ impl Explorer {
                         if let Err(err) = writer.append(&ready) {
                             // Abandon the campaign: the guard releases the
                             // workers, and the error surfaces after join.
-                            journal_err = Some(err);
+                            abort_err = Some(err);
+                            break 'recv;
+                        }
+                    }
+                    if let Some(frontier) = &self.frontier {
+                        let observed =
+                            lock_shared(frontier).observe_at(next, ready.index, &ready.evals);
+                        if let Err(err) = observed {
+                            abort_err = Some(err);
                             break 'recv;
                         }
                     }
@@ -335,11 +464,11 @@ impl Explorer {
                 }
             }
             debug_assert!(
-                journal_err.is_some() || pending.is_empty(),
+                abort_err.is_some() || pending.is_empty(),
                 "all streamed points must be delivered"
             );
         });
-        if let Some(err) = journal_err {
+        if let Some(err) = abort_err {
             return Err(err);
         }
         if let Some(writer) = journal {
@@ -366,7 +495,7 @@ fn evaluate_point(
 ) -> Vec<Evaluation> {
     let key = cache.map(|_| persist::point_key(config, seed, models));
     if let (Some(cache), Some(key)) = (cache, key) {
-        if let Some(hit) = lock_cache(cache).lookup(key) {
+        if let Some(hit) = lock_shared(cache).lookup(key) {
             return hit;
         }
     }
@@ -374,16 +503,23 @@ fn evaluate_point(
     let evals: Vec<Evaluation> =
         models.iter().map(|m| dse::evaluate_with_synth(&synth, m)).collect();
     if let (Some(cache), Some(key)) = (cache, key) {
-        lock_cache(cache).store(key, evals.clone());
+        lock_shared(cache).store(key, evals.clone());
     }
     evals
 }
 
-/// Lock the shared cache, recovering from poisoning (a panicked worker
-/// elsewhere must not take the whole campaign down with it). The single
-/// locking policy for every cache consumer — workers, replay, the CLI.
+/// Lock a campaign-shared resource (point cache, live frontier),
+/// recovering from poisoning — a panicked worker elsewhere must not take
+/// the whole campaign down with it. The single locking policy for every
+/// shared-handle consumer: workers, replay, the CLI.
+pub fn lock_shared<T>(shared: &Mutex<T>) -> MutexGuard<'_, T> {
+    shared.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Lock the shared point cache — [`lock_shared`] under its historical
+/// name, kept for source compatibility.
 pub fn lock_cache(cache: &Mutex<PointCache>) -> MutexGuard<'_, PointCache> {
-    cache.lock().unwrap_or_else(PoisonError::into_inner)
+    lock_shared(cache)
 }
 
 #[cfg(test)]
@@ -496,6 +632,57 @@ mod tests {
         assert_eq!(err.kind(), "missing_baseline");
         let err = dse::normalize(&db.spaces[0].evals).unwrap_err();
         assert!(matches!(err, Error::MissingBaseline(_)));
+    }
+
+    #[test]
+    fn random_strategy_touches_only_n_points() {
+        let spec = SweepSpec::default();
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let explorer = Explorer::over(spec.clone())
+            .model(model)
+            .workers(2)
+            .seed(7)
+            .strategy(crate::pareto::RandomSample { n: 5, seed: 11 });
+        let db = explorer.run().unwrap();
+        assert_eq!(db.stats.design_points, 5);
+        assert_eq!(db.spaces[0].evals.len(), 5);
+        // Every evaluated config is a genuine member of the sweep, and
+        // indices stream in ascending cross-product order.
+        let mut indices = Vec::new();
+        explorer.stream(|point| indices.push(point.index)).unwrap();
+        assert_eq!(indices.len(), 5);
+        assert!(indices.windows(2).all(|w| w[0] < w[1]));
+        assert!(*indices.last().unwrap() < spec.len());
+    }
+
+    #[test]
+    fn frontier_tracks_streamed_points_live() {
+        use crate::pareto::CampaignFrontier;
+        let spec = SweepSpec::tiny();
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let frontier = Arc::new(Mutex::new(CampaignFrontier::new()));
+        Explorer::over(spec.clone())
+            .model(model.clone())
+            .workers(2)
+            .seed(7)
+            .frontier(frontier.clone())
+            .run()
+            .unwrap();
+        let guard = lock_shared(&frontier);
+        assert_eq!(guard.models().len(), 1);
+        let front = guard.models()[0].front();
+        assert!(!front.is_empty());
+        assert_eq!(front.offered(), spec.len(), "every streamed point must be offered");
+        // The streamed front equals the post-hoc front of the serial space.
+        let evals: Vec<Evaluation> =
+            spec.iter().map(|c| dse::evaluate(&c, &model, 7)).collect();
+        let points: Vec<Vec<f64>> =
+            evals.iter().map(|e| vec![e.perf_per_area, e.energy_uj]).collect();
+        let batch = dse::pareto_front(
+            &points,
+            &[dse::Orientation::Maximize, dse::Orientation::Minimize],
+        );
+        assert_eq!(front.indices(), batch);
     }
 
     #[test]

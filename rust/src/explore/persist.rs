@@ -48,13 +48,18 @@ use crate::error::{Error, Result};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::Fnv64;
 
-/// Version of every persisted document (database, cache, journal).
-/// Bump on any change to the serialized field set; readers reject other
-/// versions with [`Error::ParseError`] rather than guessing.
-pub const SCHEMA_VERSION: usize = 1;
+/// Version of every persisted document (database, cache, journal,
+/// frontier). Bump on any change to the serialized field set; readers
+/// reject other versions with [`Error::ParseError`] rather than
+/// guessing. History: v1 — initial persistence layer; v2 — checkpoint
+/// manifests pin the campaign's search strategy and the streaming
+/// frontier document (`qadam.frontier`) joined the family.
+pub const SCHEMA_VERSION: usize = 2;
 
 // ---------------------------------------------------------------------------
-// Field access helpers (typed errors instead of panics).
+// Field access helpers (typed errors instead of panics). Crate-visible:
+// the frontier archive (`crate::pareto::frontier`) persists through the
+// same canonical layer.
 
 fn field_f64(json: &Json, key: &str) -> Result<f64> {
     json.get(key)
@@ -62,7 +67,7 @@ fn field_f64(json: &Json, key: &str) -> Result<f64> {
         .ok_or_else(|| Error::ParseError(format!("missing numeric field '{key}'")))
 }
 
-fn field_usize(json: &Json, key: &str) -> Result<usize> {
+pub(crate) fn field_usize(json: &Json, key: &str) -> Result<usize> {
     json.get(key)
         .and_then(Json::as_i64)
         .filter(|v| *v >= 0)
@@ -70,13 +75,13 @@ fn field_usize(json: &Json, key: &str) -> Result<usize> {
         .ok_or_else(|| Error::ParseError(format!("missing integer field '{key}'")))
 }
 
-fn field_str<'a>(json: &'a Json, key: &str) -> Result<&'a str> {
+pub(crate) fn field_str<'a>(json: &'a Json, key: &str) -> Result<&'a str> {
     json.get(key)
         .and_then(Json::as_str)
         .ok_or_else(|| Error::ParseError(format!("missing string field '{key}'")))
 }
 
-fn field_arr<'a>(json: &'a Json, key: &str) -> Result<&'a [Json]> {
+pub(crate) fn field_arr<'a>(json: &'a Json, key: &str) -> Result<&'a [Json]> {
     json.get(key)
         .and_then(Json::as_arr)
         .ok_or_else(|| Error::ParseError(format!("missing array field '{key}'")))
@@ -99,7 +104,7 @@ fn field_dataset(json: &Json, key: &str) -> Result<Dataset> {
 }
 
 /// Validate the `{"kind", "schema"}` envelope shared by all artifacts.
-fn check_envelope(json: &Json, kind: &str) -> Result<()> {
+pub(crate) fn check_envelope(json: &Json, kind: &str) -> Result<()> {
     let found = field_str(json, "kind")?;
     if found != kind {
         return Err(Error::ParseError(format!(
@@ -116,13 +121,13 @@ fn check_envelope(json: &Json, kind: &str) -> Result<()> {
     Ok(())
 }
 
-fn envelope(kind: &str) -> Vec<(&str, Json)> {
+pub(crate) fn envelope(kind: &str) -> Vec<(&str, Json)> {
     vec![("kind", s(kind)), ("schema", num(SCHEMA_VERSION as f64))]
 }
 
 /// Write `text` to `path` atomically: temp sibling + rename, so a crash
 /// mid-save never leaves a torn file where a valid artifact used to be.
-fn write_atomic(path: &Path, text: &str) -> Result<()> {
+pub(crate) fn write_atomic(path: &Path, text: &str) -> Result<()> {
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             fs::create_dir_all(parent)?;
@@ -224,13 +229,15 @@ impl CampaignStats {
 
 impl EvalDatabase {
     /// Serialize the whole campaign to a schema-versioned document,
-    /// including the shard identity (a shard's local best INT16 is not
-    /// the campaign baseline, so loaders must know the coverage).
+    /// including the shard identity and strategy descriptor (a shard's —
+    /// or a sampled subset's — local best INT16 is not the campaign
+    /// baseline, so loaders must know the coverage).
     pub fn to_json(&self) -> Json {
         let mut fields = envelope("qadam.evaldb");
         fields.push(("dataset", s(self.dataset.name())));
         fields.push(("shard", num(self.shard.0 as f64)));
         fields.push(("num_shards", num(self.shard.1 as f64)));
+        fields.push(("strategy", s(&self.strategy)));
         fields.push(("spaces", Json::Arr(self.spaces.iter().map(ModelSpace::to_json).collect())));
         fields.push(("stats", self.stats.to_json()));
         obj(fields)
@@ -253,6 +260,7 @@ impl EvalDatabase {
         Ok(Self {
             dataset: field_dataset(json, "dataset")?,
             shard,
+            strategy: field_str(json, "strategy")?.to_string(),
             spaces: field_arr(json, "spaces")?
                 .iter()
                 .map(ModelSpace::from_json)
@@ -322,6 +330,23 @@ pub fn point_key(config: &crate::arch::AcceleratorConfig, seed: u64, models: &[M
 /// repeat campaigns over overlapping spaces skip the synthesis + mapping
 /// pipeline entirely; hits are bit-identical to recomputation because the
 /// pipeline is deterministic in the key's inputs.
+///
+/// ```
+/// use qadam::arch::AcceleratorConfig;
+/// use qadam::dnn::{model_for, Dataset, ModelKind};
+/// use qadam::explore::{point_key, PointCache};
+///
+/// let config = AcceleratorConfig::default();
+/// let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+/// let key = point_key(&config, 7, std::slice::from_ref(&model));
+///
+/// let mut cache = PointCache::new();
+/// assert!(cache.lookup(key).is_none()); // cold: a miss
+/// let evals = vec![qadam::dse::evaluate(&config, &model, 7)];
+/// cache.store(key, evals.clone());
+/// assert_eq!(cache.lookup(key).unwrap(), evals); // warm: bit-identical
+/// assert_eq!((cache.hits(), cache.misses()), (1, 1));
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct PointCache {
     entries: BTreeMap<u64, Vec<Evaluation>>,
@@ -450,14 +475,24 @@ impl PointCache {
 pub struct CampaignManifest {
     /// [`SweepSpec::fingerprint`](crate::arch::SweepSpec::fingerprint).
     pub spec_fingerprint: u64,
+    /// Synthesis-noise seed of the campaign.
     pub seed: u64,
+    /// Round-robin shard this campaign covers.
     pub shard: usize,
+    /// Total number of round-robin shards.
     pub num_shards: usize,
-    /// Design points in this (shard of the) campaign.
+    /// Design points this (shard of the) campaign will deliver — the
+    /// strategy's selection size, not the raw space size.
     pub total: usize,
+    /// Dataset label of the workload set.
     pub dataset: String,
     /// Model names in evaluation order.
     pub models: Vec<String>,
+    /// [`Strategy::descriptor`](crate::pareto::Strategy::descriptor) of
+    /// the campaign's search strategy (`"exhaustive"` when none is set).
+    /// Resuming under a different strategy would replay points the new
+    /// selection never visits, so mismatches are rejected.
+    pub strategy: String,
 }
 
 impl CampaignManifest {
@@ -471,6 +506,7 @@ impl CampaignManifest {
         fields.push(("total", num(self.total as f64)));
         fields.push(("dataset", s(&self.dataset)));
         fields.push(("models", Json::Arr(self.models.iter().map(|m| s(m)).collect())));
+        fields.push(("strategy", s(&self.strategy)));
         obj(fields)
     }
 
@@ -492,6 +528,7 @@ impl CampaignManifest {
                         .ok_or_else(|| Error::ParseError("manifest model names must be strings".into()))
                 })
                 .collect::<Result<_>>()?,
+            strategy: field_str(json, "strategy")?.to_string(),
         })
     }
 
@@ -521,7 +558,8 @@ impl CampaignManifest {
             );
         }
         if journal.total != self.total {
-            return mismatch("design-point count", journal.total.to_string(), self.total.to_string());
+            let (j, c) = (journal.total.to_string(), self.total.to_string());
+            return mismatch("design-point count", j, c);
         }
         if journal.dataset != self.dataset {
             return mismatch("dataset", journal.dataset.clone(), self.dataset.clone());
@@ -532,6 +570,9 @@ impl CampaignManifest {
                 journal.models.join(","),
                 self.models.join(","),
             );
+        }
+        if journal.strategy != self.strategy {
+            return mismatch("search strategy", journal.strategy.clone(), self.strategy.clone());
         }
         Ok(())
     }
@@ -562,8 +603,16 @@ fn entry_from_json(json: &Json) -> Result<(usize, PointResult)> {
 /// Parse the journal body: header + contiguous entries. Returns the
 /// replayable points and the byte length of the valid prefix (everything
 /// after it — at most one torn trailing fragment — is discarded on
-/// resume). Corruption anywhere else is [`Error::ParseError`].
-fn parse_journal(text: &str, campaign: &CampaignManifest) -> Result<(Vec<PointResult>, usize)> {
+/// resume). `index_for` maps a delivery position to the cross-product
+/// index the campaign's strategy selection assigns it (affine for
+/// exhaustive campaigns, a subset walk otherwise); entries that
+/// contradict it are corruption. Corruption anywhere else is
+/// [`Error::ParseError`] too.
+fn parse_journal(
+    text: &str,
+    campaign: &CampaignManifest,
+    index_for: &dyn Fn(usize) -> usize,
+) -> Result<(Vec<PointResult>, usize)> {
     let mut segments = text.split_inclusive('\n');
     let header_line = segments
         .next()
@@ -594,12 +643,18 @@ fn parse_journal(text: &str, campaign: &CampaignManifest) -> Result<(Vec<PointRe
                 "checkpoint journal entries out of order: expected pos {entry_no}, found {pos}"
             )));
         }
-        if point.index != campaign.shard + pos * campaign.num_shards {
+        if entries.len() >= campaign.total {
+            return Err(Error::ParseError(format!(
+                "checkpoint journal has more entries than the campaign's {} design points",
+                campaign.total
+            )));
+        }
+        let expected_index = index_for(pos);
+        if point.index != expected_index {
             return Err(Error::ParseError(format!(
                 "checkpoint journal entry {entry_no} has index {} but the campaign maps pos \
-                 {pos} to index {}",
-                point.index,
-                campaign.shard + pos * campaign.num_shards
+                 {pos} to index {expected_index}",
+                point.index
             )));
         }
         if point.evals.len() != campaign.models.len() {
@@ -607,12 +662,6 @@ fn parse_journal(text: &str, campaign: &CampaignManifest) -> Result<(Vec<PointRe
                 "checkpoint journal entry {entry_no} has {} evaluations for {} models",
                 point.evals.len(),
                 campaign.models.len()
-            )));
-        }
-        if entries.len() >= campaign.total {
-            return Err(Error::ParseError(format!(
-                "checkpoint journal has more entries than the campaign's {} design points",
-                campaign.total
             )));
         }
         entries.push(point);
@@ -638,11 +687,15 @@ impl JournalWriter {
     /// fresh journal (header flushed immediately); an existing one is
     /// validated against `manifest`, its flushed points are returned for
     /// replay, and any torn trailing fragment is truncated away before
-    /// appending continues.
+    /// appending continues. `index_for` maps a delivery position to its
+    /// cross-product index under the campaign's strategy selection
+    /// (entries are validated against it; see the explorer's stream
+    /// pipeline, the only caller).
     pub fn open(
         path: &Path,
         manifest: &CampaignManifest,
         every_n: usize,
+        index_for: &dyn Fn(usize) -> usize,
     ) -> Result<(Self, Vec<PointResult>)> {
         let every_n = every_n.max(1);
         if path.exists() {
@@ -664,9 +717,9 @@ impl JournalWriter {
                 let mut aside = path.as_os_str().to_os_string();
                 aside.push(".torn");
                 fs::rename(path, std::path::PathBuf::from(aside))?;
-                return Self::open(path, manifest, every_n);
+                return Self::open(path, manifest, every_n, index_for);
             }
-            let (entries, valid_len) = parse_journal(&text, manifest)?;
+            let (entries, valid_len) = parse_journal(&text, manifest, index_for)?;
             let mut file = OpenOptions::new().write(true).open(path)?;
             file.set_len(valid_len as u64)?;
             file.seek(SeekFrom::Start(valid_len as u64))?;
@@ -737,6 +790,7 @@ mod tests {
         let db = EvalDatabase {
             dataset: Dataset::Cifar10,
             shard: (0, 1),
+            strategy: "exhaustive".into(),
             spaces: vec![ModelSpace {
                 model_name: "ResNet-20".into(),
                 dataset: Dataset::Cifar10,
@@ -781,6 +835,7 @@ mod tests {
             total: 12,
             dataset: "CIFAR-10".into(),
             models: vec!["VGG-16".into(), "ResNet-20".into()],
+            strategy: "random:12:9".into(),
         };
         let parsed = CampaignManifest::from_json(&manifest.to_json()).unwrap();
         assert_eq!(parsed, manifest);
@@ -789,6 +844,11 @@ mod tests {
         let err = manifest.ensure_matches(&other).unwrap_err();
         assert_eq!(err.kind(), "invalid_config");
         assert!(err.to_string().contains("seed"));
+        let mut other = manifest.clone();
+        other.strategy = "exhaustive".into();
+        let err = manifest.ensure_matches(&other).unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        assert!(err.to_string().contains("strategy"));
     }
 
     #[test]

@@ -8,15 +8,21 @@
 //! The crate is organized as substrates (technology models, a synthesis
 //! engine, an RTL generator, a cycle-level simulator), the analytical core
 //! (row-stationary dataflow mapper, energy model, polynomial PPA surrogates),
-//! and the exploration layer (the unified [`explore::Explorer`] API, Pareto
-//! analysis, a leader/worker coordinator, and a PJRT runtime that executes
-//! the AOT-compiled JAX/Pallas quantization-aware training artifacts).
+//! and the exploration layer (the unified [`explore::Explorer`] API, the
+//! online [`pareto`] engine with pluggable search strategies, a
+//! leader/worker coordinator, and a PJRT runtime that executes the
+//! AOT-compiled JAX/Pallas quantization-aware training artifacts).
 //!
 //! Every DSE campaign — CLI, report generator, benches, examples — goes
 //! through [`explore::Explorer`]; fallible APIs return the crate-wide
-//! typed [`Error`].
+//! typed [`Error`]. Pareto fronts are maintained incrementally by
+//! [`pareto::ParetoFront`] as points stream out of a campaign, and
+//! non-exhaustive [`pareto::Strategy`] walks make million-point spaces
+//! tractable.
 //!
 //! See `DESIGN.md` for the module inventory and the per-experiment index.
+
+#![warn(missing_docs)]
 
 pub mod error;
 pub mod util;
@@ -31,6 +37,7 @@ pub mod energy;
 pub mod sim;
 pub mod ppa;
 pub mod dse;
+pub mod pareto;
 pub mod accuracy;
 pub mod explore;
 pub mod coordinator;
@@ -40,3 +47,4 @@ pub mod bench;
 
 pub use error::{Error, Result};
 pub use explore::Explorer;
+pub use pareto::ParetoFront;

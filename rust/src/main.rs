@@ -16,6 +16,7 @@ use qadam::dnn::{model_for, Dataset, ModelKind};
 use qadam::dse;
 use qadam::energy::energy_of;
 use qadam::explore::{EvalDatabase, Explorer, PointCache};
+use qadam::pareto::{CampaignFrontier, RandomSample, SuccessiveHalving};
 use qadam::ppa::PpaModel;
 use qadam::quant::PeType;
 use qadam::report;
@@ -56,6 +57,8 @@ fn cli() -> Command {
                 .opt("dataset", "cifar10", "cifar10|cifar100|imagenet")
                 .opt("sweep", "", "JSON sweep-config file (empty = default space)")
                 .opt("shard", "", "run only shard I of N (format: I/N)")
+                .opt("strategy", "exhaustive", "exhaustive|random:N[:SEED]|halving:KEEP[:ROUNDS]")
+                .opt("frontier", "", "write the streaming Pareto frontier to this JSON file")
                 .opt("save", "", "write the evaluation database to this JSON file")
                 .opt("load", "", "summarize a saved database instead of running")
                 .opt("resume", "", "checkpoint journal path (resumes if present)")
@@ -118,6 +121,72 @@ fn parse_shard(text: &str) -> Result<(usize, usize)> {
         return Err(bad());
     }
     Ok((shard, num_shards))
+}
+
+/// Parse a `--strategy` descriptor and attach it to the explorer:
+/// `exhaustive`, `random:N[:SEED]` (SEED defaults to the campaign seed),
+/// or `halving:KEEP[:ROUNDS]` (ROUNDS defaults to 3).
+fn apply_strategy(explorer: Explorer, text: &str, campaign_seed: u64) -> Result<Explorer> {
+    let bad = |detail: &str| {
+        Error::ParseError(format!(
+            "bad --strategy '{text}' ({detail}; expected exhaustive, random:N[:SEED], \
+             or halving:KEEP[:ROUNDS])"
+        ))
+    };
+    let mut parts = text.split(':');
+    let kind = parts.next().unwrap_or("");
+    let arg1 = parts.next();
+    let arg2 = parts.next();
+    if parts.next().is_some() {
+        return Err(bad("too many parameters"));
+    }
+    let parse_num = |value: Option<&str>, name: &str| -> Result<Option<u64>> {
+        match value {
+            None => Ok(None),
+            Some(v) => v
+                .trim()
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| bad(&format!("{name} is not an integer"))),
+        }
+    };
+    match kind {
+        "exhaustive" => {
+            if arg1.is_some() {
+                return Err(bad("exhaustive takes no parameters"));
+            }
+            // No strategy attached: the explorer's default walk *is*
+            // exhaustive, and leaving it unset keeps `run()`'s eval-vector
+            // pre-sizing (the manifest descriptor is "exhaustive" either
+            // way, so journals are interchangeable).
+            Ok(explorer)
+        }
+        "random" => {
+            let n = parse_num(arg1, "N")?.ok_or_else(|| bad("random needs N"))? as usize;
+            let seed = parse_num(arg2, "SEED")?.unwrap_or(campaign_seed);
+            Ok(explorer.strategy(RandomSample { n, seed }))
+        }
+        "halving" => {
+            let keep = parse_num(arg1, "KEEP")?.ok_or_else(|| bad("halving needs KEEP"))? as usize;
+            let rounds = parse_num(arg2, "ROUNDS")?.unwrap_or(3) as usize;
+            Ok(explorer.strategy(SuccessiveHalving { keep, rounds }))
+        }
+        _ => Err(bad("unknown strategy")),
+    }
+}
+
+/// Per-model best raw perf/area by PE type — the summary for databases
+/// that cannot be normalized (partial coverage or no INT16 baseline).
+fn print_raw_bests(db: &EvalDatabase) {
+    for space in &db.spaces {
+        print!("  {:<10} best perf/area:", space.model_name);
+        for pe in PeType::ALL {
+            if let Some(best) = dse::best_perf_per_area(&space.evals, pe) {
+                print!(" {}={}", pe.name(), format_sig(best.perf_per_area, 3));
+            }
+        }
+        println!();
+    }
 }
 
 fn main() -> Result<()> {
@@ -207,7 +276,11 @@ fn main() -> Result<()> {
                 // --load summarizes an existing database; campaign-shaping
                 // flags would be silently ignored, so reject them (also
                 // the defaulted ones — `was_set` sees through defaults).
-                for conflicting in ["dataset", "sweep", "shard", "resume", "cache", "every"] {
+                let campaign_flags = [
+                    "dataset", "sweep", "shard", "strategy", "frontier", "resume", "cache",
+                    "every",
+                ];
+                for conflicting in campaign_flags {
                     if matches.was_set(conflicting) {
                         return Err(Error::InvalidConfig(format!(
                             "--load summarizes a saved database; --{conflicting} only applies \
@@ -235,6 +308,16 @@ fn main() -> Result<()> {
                 if !shard_arg.is_empty() {
                     let (shard, num_shards) = parse_shard(shard_arg)?;
                     explorer = explorer.shard(shard, num_shards);
+                }
+                explorer = apply_strategy(explorer, matches.get_str("strategy"), seed)?;
+                let frontier_path = matches.get_str("frontier").to_string();
+                let frontier = if frontier_path.is_empty() {
+                    None
+                } else {
+                    Some(Arc::new(Mutex::new(CampaignFrontier::new())))
+                };
+                if let Some(frontier) = &frontier {
+                    explorer = explorer.frontier(frontier.clone());
                 }
                 let resume_path = matches.get_str("resume");
                 if !resume_path.is_empty() {
@@ -273,52 +356,78 @@ fn main() -> Result<()> {
                         cache.misses()
                     );
                 }
+                if let Some(frontier) = frontier {
+                    let frontier = qadam::explore::lock_shared(&frontier);
+                    frontier.save(Path::new(&frontier_path))?;
+                    print!("frontier: saved to {frontier_path} —");
+                    for model in frontier.models() {
+                        print!(" {}: {} points", model.model_name(), model.front().len());
+                    }
+                    println!();
+                }
                 db
             };
-            // The database records its own coverage, so a loaded shard is
-            // summarized exactly like a live sharded run.
-            if db.shard.1 > 1 {
-                // A shard sees only part of the space, so its local best
-                // INT16 is not the campaign baseline; normalized summaries
-                // would be incomparable across shards. Report raw bests.
-                println!("  (shard output: normalize after merging all shards)");
-                for space in &db.spaces {
-                    print!("  {:<10} best perf/area:", space.model_name);
-                    for pe in PeType::ALL {
-                        if let Some(best) = dse::best_perf_per_area(&space.evals, pe) {
-                            print!(" {}={}", pe.name(), format_sig(best.perf_per_area, 3));
-                        }
-                    }
-                    println!();
-                }
-            } else {
-                for (pe, ppa, energy) in db.headline_geomean()? {
+            // The database records its own coverage (shard + strategy), so
+            // a loaded partial database is summarized exactly like a live
+            // partial run.
+            if !db.is_whole_space() {
+                // A shard or a strategy-sampled subset sees only part of
+                // the space, so its local best INT16 is not the campaign
+                // baseline; normalized summaries would be silently wrong.
+                // Report raw bests instead.
+                if db.shard.1 > 1 {
+                    println!("  (shard output: normalize after merging all shards)");
+                } else {
                     println!(
-                        "  {:<10} {}x perf/area, {}x less energy vs best INT16",
-                        pe.name(),
-                        format_sig(ppa, 3),
-                        format_sig(energy, 3)
+                        "  (sampled by strategy '{}': raw bests only; rerun exhaustively to \
+                         normalize)",
+                        db.strategy
                     );
                 }
-                // Quantified Pareto quality per model: hypervolume of each
-                // PE type's normalized (perf/area ↑, energy ↓) cloud.
-                for space in &db.spaces {
-                    let normalized = dse::normalize(&space.evals)?;
-                    print!("  {:<10} hypervolume:", space.model_name);
-                    for pe in PeType::ALL {
-                        let points: Vec<(f64, f64)> = normalized
-                            .iter()
-                            .filter(|p| p.pe == pe)
-                            .map(|p| (p.norm_perf_per_area, p.norm_energy))
-                            .collect();
-                        let hv = dse::hypervolume_2d(
-                            &points,
-                            (0.0, 10.0),
-                            (dse::Orientation::Maximize, dse::Orientation::Minimize),
-                        );
-                        print!(" {}={}", pe.name(), format_sig(hv, 3));
+                print_raw_bests(&db);
+            } else {
+                match db.headline_geomean() {
+                    Ok(headline) => {
+                        for (pe, ppa, energy) in headline {
+                            println!(
+                                "  {:<10} {}x perf/area, {}x less energy vs best INT16",
+                                pe.name(),
+                                format_sig(ppa, 3),
+                                format_sig(energy, 3)
+                            );
+                        }
+                        // Quantified Pareto quality per model: hypervolume of
+                        // each PE type's normalized (perf/area ↑, energy ↓)
+                        // cloud.
+                        for space in &db.spaces {
+                            let normalized = dse::normalize(&space.evals)?;
+                            print!("  {:<10} hypervolume:", space.model_name);
+                            for pe in PeType::ALL {
+                                let points: Vec<(f64, f64)> = normalized
+                                    .iter()
+                                    .filter(|p| p.pe == pe)
+                                    .map(|p| (p.norm_perf_per_area, p.norm_energy))
+                                    .collect();
+                                let hv = dse::hypervolume_2d(
+                                    &points,
+                                    (0.0, 10.0),
+                                    (dse::Orientation::Maximize, dse::Orientation::Minimize),
+                                );
+                                print!(" {}={}", pe.name(), format_sig(hv, 3));
+                            }
+                            println!();
+                        }
                     }
-                    println!();
+                    // A custom --sweep may legitimately contain no INT16
+                    // points; report raw bests instead of failing the
+                    // whole (already completed) campaign.
+                    Err(Error::MissingBaseline(_)) => {
+                        println!(
+                            "  (explored space has no INT16 baseline: reporting raw bests)"
+                        );
+                        print_raw_bests(&db);
+                    }
+                    Err(err) => return Err(err),
                 }
             }
             let save_path = matches.get_str("save");

@@ -1,0 +1,627 @@
+//! The online Pareto front: incremental dominance pruning with exact,
+//! epsilon, and budgeted archive modes.
+//!
+//! [`FrontCore`] is the runtime-dimension engine (axis count fixed at
+//! construction); [`ParetoFront`] is the const-generic typed wrapper the
+//! rest of the crate uses. In the default *exact* mode the maintained
+//! front is provably identical — membership **and** extraction order —
+//! to the post-hoc batch computation [`crate::dse::pareto_front`] runs
+//! over the full point set, which is what lets the streaming figures
+//! reproduce the paper's Fig. 5/6 fronts byte-for-byte (see the golden
+//! and property suites).
+
+use crate::util::stats;
+
+/// Whether an objective is to be maximized or minimized.
+///
+/// This is the canonical home of the orientation type; `dse::pareto`
+/// re-exports it for source compatibility.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Orientation {
+    /// Larger values are better (e.g. performance per area, accuracy).
+    Maximize,
+    /// Smaller values are better (e.g. energy per inference, error).
+    Minimize,
+}
+
+impl Orientation {
+    /// Does value `a` dominate-or-tie `b` on this axis?
+    pub fn at_least_as_good(self, a: f64, b: f64) -> bool {
+        match self {
+            Orientation::Maximize => a >= b,
+            Orientation::Minimize => a <= b,
+        }
+    }
+
+    /// Is value `a` strictly better than `b` on this axis?
+    pub fn strictly_better(self, a: f64, b: f64) -> bool {
+        match self {
+            Orientation::Maximize => a > b,
+            Orientation::Minimize => a < b,
+        }
+    }
+
+    /// Map `v` into maximize-space (negate minimized axes) so generic
+    /// geometry (gaps, hypervolume) can assume "larger is better".
+    fn to_max_space(self, v: f64) -> f64 {
+        match self {
+            Orientation::Maximize => v,
+            Orientation::Minimize => -v,
+        }
+    }
+}
+
+/// Does point `a` dominate point `b` under `orientations` (at least as
+/// good on every axis, strictly better on at least one)?
+///
+/// # Panics
+/// If the three slices disagree on length.
+pub fn dominates(a: &[f64], b: &[f64], orientations: &[Orientation]) -> bool {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), orientations.len());
+    let mut strictly = false;
+    for ((&x, &y), &o) in a.iter().zip(b).zip(orientations) {
+        if !o.at_least_as_good(x, y) {
+            return false;
+        }
+        if o.strictly_better(x, y) {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// One surviving point of a front: its coordinates, the sequence number
+/// of the offer that produced it, and the caller's payload.
+#[derive(Debug, Clone)]
+pub struct FrontEntry<P> {
+    /// Objective coordinates, one per axis.
+    pub point: Vec<f64>,
+    /// Zero-based offer sequence number: the value of
+    /// [`FrontCore::offered`] when this point was inserted. When every
+    /// point of a set is offered exactly once, `seq` equals the point's
+    /// index in that set.
+    pub seq: usize,
+    /// Caller-supplied payload (design-point index, evaluation, …).
+    pub payload: P,
+}
+
+/// What happened to an offered point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InsertOutcome {
+    /// The point joined the front (possibly pruning dominated entries).
+    Added,
+    /// An existing entry (epsilon-)dominates the point; nothing changed.
+    Dominated,
+    /// The point joined a budgeted front but was immediately evicted as
+    /// the lowest-contribution entry.
+    Evicted,
+    /// The point carried a NaN coordinate and was rejected. (The batch
+    /// reference computation panics on NaN instead; the engine refuses
+    /// the point so a single bad evaluation cannot poison a campaign.)
+    Invalid,
+}
+
+/// Runtime-dimension online Pareto front.
+///
+/// `insert` costs O(front) comparisons: a candidate dominated by any
+/// entry is rejected, otherwise entries it dominates are pruned and the
+/// candidate joins. Ties (exactly equal points) do not dominate each
+/// other, so duplicates are all kept — matching the batch semantics.
+///
+/// Two optional relaxations, both off by default:
+///
+/// * **Epsilon-dominance** ([`Self::with_epsilon`]): a candidate is also
+///   rejected when an existing entry is within `epsilon` of weakly
+///   dominating it, bounding the archive's resolution (Laumanns-style
+///   epsilon archive). The kept front is then an epsilon-approximation
+///   of the exact one.
+/// * **Budget** ([`Self::with_capacity`]): the front never exceeds N
+///   entries; on overflow the entry with the smallest contribution is
+///   evicted (exact exclusive 2-D hypervolume for two axes, crowding
+///   distance otherwise; boundary entries are never evicted).
+///
+/// Only the default exact mode guarantees bit-identity with the batch
+/// computation.
+#[derive(Debug, Clone)]
+pub struct FrontCore<P = ()> {
+    orientations: Vec<Orientation>,
+    epsilon: Option<Vec<f64>>,
+    capacity: Option<usize>,
+    entries: Vec<FrontEntry<P>>,
+    offered: usize,
+    pruned: usize,
+    evicted: usize,
+}
+
+impl<P> FrontCore<P> {
+    /// Empty front over the given axes.
+    ///
+    /// # Panics
+    /// If `orientations` is empty.
+    pub fn new(orientations: Vec<Orientation>) -> Self {
+        assert!(!orientations.is_empty(), "a Pareto front needs at least one axis");
+        Self {
+            orientations,
+            epsilon: None,
+            capacity: None,
+            entries: Vec::new(),
+            offered: 0,
+            pruned: 0,
+            evicted: 0,
+        }
+    }
+
+    /// Enable epsilon-dominance with a per-axis tolerance (finite,
+    /// non-negative). With `epsilon = 0` this rejects exact duplicates
+    /// (weak dominance), which already diverges from the exact mode.
+    ///
+    /// # Panics
+    /// If the length disagrees with the axis count or any tolerance is
+    /// negative or non-finite.
+    pub fn with_epsilon(mut self, epsilon: Vec<f64>) -> Self {
+        assert_eq!(epsilon.len(), self.orientations.len());
+        assert!(epsilon.iter().all(|e| e.is_finite() && *e >= 0.0), "epsilon must be >= 0");
+        self.epsilon = Some(epsilon);
+        self
+    }
+
+    /// Bound the archive to at most `capacity` entries (budgeted mode).
+    ///
+    /// # Panics
+    /// If `capacity` is zero.
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        assert!(capacity > 0, "a budgeted front needs capacity >= 1");
+        self.capacity = Some(capacity);
+        self
+    }
+
+    /// Number of entries currently on the front.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the front holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Axis orientations this front was built with.
+    pub fn orientations(&self) -> &[Orientation] {
+        &self.orientations
+    }
+
+    /// Total points offered to [`Self::insert`] so far.
+    pub fn offered(&self) -> usize {
+        self.offered
+    }
+
+    /// Entries pruned because a later point dominated them.
+    pub fn pruned(&self) -> usize {
+        self.pruned
+    }
+
+    /// Entries evicted by the capacity budget.
+    pub fn evicted(&self) -> usize {
+        self.evicted
+    }
+
+    /// Surviving entries in insertion order.
+    pub fn entries(&self) -> &[FrontEntry<P>] {
+        &self.entries
+    }
+
+    /// Surviving entries sorted ascending by the first axis, ties broken
+    /// by sequence number — the plotting order, and exactly the order the
+    /// batch computation's stable sort produces.
+    pub fn sorted(&self) -> Vec<&FrontEntry<P>> {
+        let mut out: Vec<&FrontEntry<P>> = self.entries.iter().collect();
+        out.sort_by(|a, b| {
+            a.point[0]
+                .partial_cmp(&b.point[0])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.seq.cmp(&b.seq))
+        });
+        out
+    }
+
+    /// Sequence numbers of the surviving entries in [`Self::sorted`]
+    /// order. When every point of a slice was offered exactly once, this
+    /// is the same index list [`crate::dse::pareto_front`] returns.
+    pub fn indices(&self) -> Vec<usize> {
+        self.sorted().iter().map(|e| e.seq).collect()
+    }
+
+    /// Offer one point. See [`InsertOutcome`] for the possible fates and
+    /// the type-level docs for the dominance rules. The sequence number
+    /// consumed is the pre-call value of [`Self::offered`], which
+    /// advances on every offer regardless of outcome.
+    ///
+    /// # Panics
+    /// If `point` disagrees with the axis count.
+    pub fn insert(&mut self, point: Vec<f64>, payload: P) -> InsertOutcome {
+        assert_eq!(point.len(), self.orientations.len());
+        let seq = self.offered;
+        self.offered += 1;
+        if point.iter().any(|v| v.is_nan()) {
+            return InsertOutcome::Invalid;
+        }
+        let rejected = match &self.epsilon {
+            None => self
+                .entries
+                .iter()
+                .any(|e| dominates(&e.point, &point, &self.orientations)),
+            Some(eps) => self.entries.iter().any(|e| {
+                e.point.iter().zip(&point).zip(&self.orientations).zip(eps).all(
+                    |(((&have, &new), &o), &tol)| match o {
+                        Orientation::Maximize => have + tol >= new,
+                        Orientation::Minimize => have - tol <= new,
+                    },
+                )
+            }),
+        };
+        if rejected {
+            return InsertOutcome::Dominated;
+        }
+        let before = self.entries.len();
+        let orientations = &self.orientations;
+        self.entries.retain(|e| !dominates(&point, &e.point, orientations));
+        self.pruned += before - self.entries.len();
+        self.entries.push(FrontEntry { point, seq, payload });
+        if let Some(capacity) = self.capacity {
+            if self.entries.len() > capacity {
+                let victim = self.lowest_contribution();
+                let evicted_new = self.entries[victim].seq == seq;
+                self.entries.remove(victim);
+                self.evicted += 1;
+                if evicted_new {
+                    return InsertOutcome::Evicted;
+                }
+            }
+        }
+        InsertOutcome::Added
+    }
+
+    /// Crate-internal: re-append a persisted entry verbatim, skipping
+    /// dominance/epsilon/budget checks, so reloading an archive never
+    /// drops points the original insertion order kept.
+    pub(crate) fn restore(&mut self, point: Vec<f64>, payload: P) {
+        assert_eq!(point.len(), self.orientations.len());
+        let seq = self.offered;
+        self.offered += 1;
+        self.entries.push(FrontEntry { point, seq, payload });
+    }
+
+    /// 2-D hypervolume dominated by the front relative to `reference`
+    /// (see [`crate::dse::hypervolume_2d`]); `None` unless the front has
+    /// exactly two axes.
+    pub fn hypervolume_2d(&self, reference: (f64, f64)) -> Option<f64> {
+        if self.orientations.len() != 2 {
+            return None;
+        }
+        let points: Vec<(f64, f64)> =
+            self.entries.iter().map(|e| (e.point[0], e.point[1])).collect();
+        Some(crate::dse::metrics::hypervolume_2d(
+            &points,
+            reference,
+            (self.orientations[0], self.orientations[1]),
+        ))
+    }
+
+    /// Index (into `entries`) of the budget-eviction victim: smallest
+    /// contribution, ties broken toward the newest entry so established
+    /// archive points are preferred.
+    fn lowest_contribution(&self) -> usize {
+        let contributions = if self.orientations.len() == 2 {
+            self.exclusive_hypervolume_2d()
+        } else {
+            self.crowding_distances()
+        };
+        let mut victim = 0usize;
+        for i in 1..self.entries.len() {
+            let worse = contributions[i] < contributions[victim]
+                || (contributions[i] == contributions[victim]
+                    && self.entries[i].seq > self.entries[victim].seq);
+            if worse {
+                victim = i;
+            }
+        }
+        victim
+    }
+
+    /// Exact exclusive 2-D hypervolume contribution per entry: in the
+    /// staircase sorted by the first axis, an inner point's exclusive
+    /// box is (gap to its left neighbor) × (gap to its right neighbor);
+    /// boundary points contribute infinity (never evicted). Duplicate
+    /// points contribute zero and are evicted first.
+    fn exclusive_hypervolume_2d(&self) -> Vec<f64> {
+        let n = self.entries.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        let m0 = |i: usize| self.orientations[0].to_max_space(self.entries[i].point[0]);
+        let m1 = |i: usize| self.orientations[1].to_max_space(self.entries[i].point[1]);
+        order.sort_by(|&a, &b| {
+            m0(a)
+                .partial_cmp(&m0(b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(self.entries[a].seq.cmp(&self.entries[b].seq))
+        });
+        let mut out = vec![f64::INFINITY; n];
+        for (rank, &i) in order.iter().enumerate() {
+            if rank == 0 || rank == n - 1 {
+                continue; // boundary: protected
+            }
+            let left = order[rank - 1];
+            let right = order[rank + 1];
+            // Ascending first axis on a clean 2-D front means descending
+            // second axis, so the right neighbor bounds this entry's
+            // exclusive height and the left neighbor its width.
+            out[i] = (m0(i) - m0(left)).max(0.0) * (m1(i) - m1(right)).max(0.0);
+        }
+        out
+    }
+
+    /// NSGA-II crowding distance per entry (the K≠2 budget heuristic):
+    /// per axis, boundary points get infinity and inner points the
+    /// normalized gap between their sorted neighbors.
+    fn crowding_distances(&self) -> Vec<f64> {
+        let n = self.entries.len();
+        let mut out = vec![0.0f64; n];
+        for axis in 0..self.orientations.len() {
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                self.entries[a].point[axis]
+                    .partial_cmp(&self.entries[b].point[axis])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(self.entries[a].seq.cmp(&self.entries[b].seq))
+            });
+            let values: Vec<f64> = order.iter().map(|&i| self.entries[i].point[axis]).collect();
+            let span = stats::max(&values) - stats::min(&values);
+            out[order[0]] = f64::INFINITY;
+            out[order[n - 1]] = f64::INFINITY;
+            if span <= 0.0 {
+                continue;
+            }
+            for rank in 1..n - 1 {
+                let gap = (values[rank + 1] - values[rank - 1]) / span;
+                let i = order[rank];
+                if out[i].is_finite() {
+                    out[i] += gap;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Typed online Pareto front over `K` objectives with payload `P` — the
+/// engine behind the streaming Fig. 5/6 fronts and the live campaign
+/// frontier (see [`crate::pareto`] for the module overview).
+///
+/// A thin wrapper over [`FrontCore`]: same semantics, but the axis count
+/// is checked at compile time.
+///
+/// ```
+/// use qadam::pareto::{Orientation, ParetoFront};
+///
+/// // Maximize the first axis, minimize the second (perf ↑, energy ↓).
+/// let mut front = ParetoFront::<2>::new([Orientation::Maximize, Orientation::Minimize]);
+/// front.insert([1.0, 1.0], ());
+/// front.insert([2.0, 2.0], ()); // trade-off: kept
+/// front.insert([1.5, 0.5], ()); // dominates (1.0, 1.0): prunes it
+/// front.insert([0.5, 3.0], ()); // dominated: rejected
+/// assert_eq!(front.len(), 2);
+/// // Extraction order matches the batch computation: ascending first
+/// // axis, and `seq` is the insertion index of each survivor.
+/// assert_eq!(front.indices(), vec![2, 1]);
+/// ```
+#[derive(Debug, Clone)]
+pub struct ParetoFront<const K: usize, P = ()> {
+    core: FrontCore<P>,
+}
+
+impl<const K: usize, P> ParetoFront<K, P> {
+    /// Empty front over `K` axes.
+    ///
+    /// # Panics
+    /// If `K` is zero.
+    pub fn new(orientations: [Orientation; K]) -> Self {
+        Self { core: FrontCore::new(orientations.to_vec()) }
+    }
+
+    /// Enable epsilon-dominance — see [`FrontCore::with_epsilon`].
+    pub fn with_epsilon(mut self, epsilon: [f64; K]) -> Self {
+        self.core = self.core.with_epsilon(epsilon.to_vec());
+        self
+    }
+
+    /// Bound the archive size — see [`FrontCore::with_capacity`].
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.core = self.core.with_capacity(capacity);
+        self
+    }
+
+    /// Offer one point — see [`FrontCore::insert`].
+    pub fn insert(&mut self, point: [f64; K], payload: P) -> InsertOutcome {
+        self.core.insert(point.to_vec(), payload)
+    }
+
+    /// Number of entries currently on the front.
+    pub fn len(&self) -> usize {
+        self.core.len()
+    }
+
+    /// Whether the front holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.core.is_empty()
+    }
+
+    /// Total points offered so far.
+    pub fn offered(&self) -> usize {
+        self.core.offered()
+    }
+
+    /// Surviving entries in insertion order.
+    pub fn entries(&self) -> &[FrontEntry<P>] {
+        self.core.entries()
+    }
+
+    /// Entries sorted for plotting — see [`FrontCore::sorted`].
+    pub fn sorted(&self) -> Vec<&FrontEntry<P>> {
+        self.core.sorted()
+    }
+
+    /// Surviving sequence numbers in sorted order — see
+    /// [`FrontCore::indices`].
+    pub fn indices(&self) -> Vec<usize> {
+        self.core.indices()
+    }
+
+    /// The underlying runtime-dimension engine.
+    pub fn core(&self) -> &FrontCore<P> {
+        &self.core
+    }
+
+    /// Crate-internal: re-append a persisted entry verbatim — see
+    /// [`FrontCore::restore`].
+    pub(crate) fn restore(&mut self, point: [f64; K], payload: P) {
+        self.core.restore(point.to_vec(), payload);
+    }
+}
+
+impl<P> ParetoFront<2, P> {
+    /// 2-D hypervolume relative to `reference` — see
+    /// [`FrontCore::hypervolume_2d`].
+    pub fn hypervolume(&self, reference: (f64, f64)) -> f64 {
+        self.core.hypervolume_2d(reference).expect("two-axis front")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use Orientation::{Maximize, Minimize};
+
+    fn exact2() -> FrontCore<()> {
+        FrontCore::new(vec![Maximize, Minimize])
+    }
+
+    #[test]
+    fn insert_prunes_and_rejects() {
+        let mut front = exact2();
+        assert_eq!(front.insert(vec![1.0, 1.0], ()), InsertOutcome::Added);
+        assert_eq!(front.insert(vec![2.0, 2.0], ()), InsertOutcome::Added);
+        assert_eq!(front.insert(vec![1.5, 0.5], ()), InsertOutcome::Added);
+        assert_eq!(front.insert(vec![0.5, 3.0], ()), InsertOutcome::Dominated);
+        assert_eq!(front.len(), 2);
+        assert_eq!(front.pruned(), 1);
+        assert_eq!(front.offered(), 4);
+    }
+
+    #[test]
+    fn duplicates_are_all_kept() {
+        let mut front = exact2();
+        for _ in 0..3 {
+            assert_eq!(front.insert(vec![1.0, 1.0], ()), InsertOutcome::Added);
+        }
+        assert_eq!(front.len(), 3);
+        assert_eq!(front.indices(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn nan_is_rejected_not_archived() {
+        let mut front = exact2();
+        assert_eq!(front.insert(vec![f64::NAN, 1.0], ()), InsertOutcome::Invalid);
+        assert!(front.is_empty());
+        assert_eq!(front.offered(), 1, "invalid offers still consume a sequence number");
+    }
+
+    #[test]
+    fn indices_match_batch_reference() {
+        let points = vec![
+            vec![1.0, 1.0],
+            vec![2.0, 2.0],
+            vec![3.0, 4.0],
+            vec![2.0, 3.0],
+            vec![1.5, 5.0],
+        ];
+        let mut front = exact2();
+        for p in &points {
+            front.insert(p.clone(), ());
+        }
+        let reference = crate::dse::pareto_front_reference(&points, &[Maximize, Minimize]);
+        assert_eq!(front.indices(), reference);
+    }
+
+    #[test]
+    fn epsilon_collapses_near_duplicates() {
+        let mut front = FrontCore::new(vec![Maximize, Minimize]).with_epsilon(vec![0.5, 0.5]);
+        assert_eq!(front.insert(vec![1.0, 1.0], ()), InsertOutcome::Added);
+        // Within epsilon of the archived point on both axes: dropped.
+        assert_eq!(front.insert(vec![1.3, 0.8], ()), InsertOutcome::Dominated);
+        // Clearly better on the first axis: kept.
+        assert_eq!(front.insert(vec![2.0, 1.2], ()), InsertOutcome::Added);
+        assert_eq!(front.len(), 2);
+    }
+
+    #[test]
+    fn budget_bounds_front_and_keeps_extremes() {
+        let mut front = FrontCore::new(vec![Maximize, Minimize]).with_capacity(3);
+        // A clean staircase of 6 mutually non-dominated points.
+        for i in 0..6 {
+            let x = i as f64;
+            front.insert(vec![x, x * x / 10.0 + x], ());
+        }
+        assert_eq!(front.len(), 3);
+        assert_eq!(front.evicted(), 3);
+        let sorted = front.sorted();
+        // Boundary points (best on each axis) are never evicted.
+        assert_eq!(sorted[0].point[0], 0.0);
+        assert_eq!(sorted[sorted.len() - 1].point[0], 5.0);
+    }
+
+    #[test]
+    fn budget_evicts_duplicates_first() {
+        let mut front = FrontCore::new(vec![Maximize, Minimize]).with_capacity(3);
+        front.insert(vec![0.0, 0.0], ());
+        front.insert(vec![5.0, 5.0], ());
+        front.insert(vec![2.0, 1.0], ());
+        // A duplicate of an inner point has zero contribution and is the
+        // newest zero-contribution entry, so it is evicted immediately.
+        assert_eq!(front.insert(vec![2.0, 1.0], ()), InsertOutcome::Evicted);
+        assert_eq!(front.len(), 3);
+    }
+
+    #[test]
+    fn crowding_path_used_for_three_axes() {
+        // (x, x, x/2) under [max, min, max]: larger x is better on axes
+        // 0 and 2 but worse on axis 1, so all points are non-dominated.
+        let mut front =
+            FrontCore::new(vec![Maximize, Minimize, Maximize]).with_capacity(4);
+        for i in 0..8 {
+            let x = i as f64;
+            front.insert(vec![x, x, x * 0.5], ());
+        }
+        assert_eq!(front.len(), 4);
+        assert_eq!(front.evicted(), 4);
+    }
+
+    #[test]
+    fn typed_wrapper_delegates() {
+        let mut front = ParetoFront::<2, u32>::new([Maximize, Minimize]);
+        front.insert([1.0, 1.0], 7);
+        front.insert([2.0, 0.5], 9);
+        assert_eq!(front.len(), 1, "second point dominates the first");
+        assert_eq!(front.entries()[0].payload, 9);
+        assert!(front.hypervolume((0.0, 2.0)) > 0.0);
+    }
+
+    #[test]
+    fn one_axis_front_keeps_all_tied_bests() {
+        let mut front = FrontCore::new(vec![Maximize]);
+        for v in [1.0, 3.0, 3.0, 2.0] {
+            front.insert(vec![v], ());
+        }
+        let seqs: Vec<usize> = front.entries().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![1, 2], "both maxima survive, dominated values pruned");
+    }
+}

@@ -1,0 +1,524 @@
+//! The live campaign frontier: per-model streaming Pareto fronts over
+//! the paper's two hardware axes, maintained while a campaign runs.
+//!
+//! Attach a shared handle with
+//! [`Explorer::frontier`](crate::explore::Explorer::frontier) and the
+//! explorer inserts every delivered evaluation into a per-model
+//! [`ParetoFront`] over **(performance per area ↑, energy per inference
+//! ↓)** — so the frontier is inspectable mid-campaign from another
+//! thread, and a million-point sweep only ever retains O(front) of its
+//! results. Fronts persist through the same schema-versioned
+//! canonical-JSON layer as every other campaign artifact
+//! (`qadam dse --frontier front.json`), so saved fronts diff cleanly.
+
+use std::path::Path;
+
+use super::front::{Orientation, ParetoFront};
+use crate::dse::Evaluation;
+use crate::error::{Error, Result};
+use crate::explore::persist::{
+    check_envelope, envelope, field_arr, field_str, field_usize, write_atomic,
+};
+use crate::util::json::{num, obj, s, Json};
+
+/// The frontier's fixed objectives: maximize performance per area,
+/// minimize on-chip energy per inference (the paper's §III axes).
+pub const OBJECTIVES: [Orientation; 2] = [Orientation::Maximize, Orientation::Minimize];
+
+/// Identity of the campaign a frontier is bound to — the same fields the
+/// checkpoint journal's manifest pins (minus the point count). Rebinding
+/// a frontier to a campaign with any differing field is rejected, so
+/// fronts from incomparable campaigns can never silently merge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierBinding {
+    /// [`SweepSpec::fingerprint`](crate::arch::SweepSpec::fingerprint).
+    pub spec_fingerprint: u64,
+    /// Synthesis-noise seed of the campaign.
+    pub seed: u64,
+    /// Round-robin shard designator `(shard, num_shards)`.
+    pub shard: (usize, usize),
+    /// Dataset label of the workload set.
+    pub dataset: String,
+    /// Search-strategy descriptor (`"exhaustive"` when none is set).
+    pub strategy: String,
+    /// Model names in evaluation order.
+    pub models: Vec<String>,
+}
+
+impl FrontierBinding {
+    fn ensure_matches(&self, other: &FrontierBinding) -> Result<()> {
+        if self == other {
+            return Ok(());
+        }
+        Err(Error::InvalidConfig(format!(
+            "frontier was bound to a different campaign (bound: sweep {:016x}, seed {}, \
+             shard {}/{}, {}, strategy '{}'; this campaign: sweep {:016x}, seed {}, shard \
+             {}/{}, {}, strategy '{}')",
+            self.spec_fingerprint,
+            self.seed,
+            self.shard.0,
+            self.shard.1,
+            self.dataset,
+            self.strategy,
+            other.spec_fingerprint,
+            other.seed,
+            other.shard.0,
+            other.shard.1,
+            other.dataset,
+            other.strategy,
+        )))
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("spec_fingerprint", s(&format!("{:016x}", self.spec_fingerprint))),
+            ("seed", s(&format!("{:016x}", self.seed))),
+            ("shard", num(self.shard.0 as f64)),
+            ("num_shards", num(self.shard.1 as f64)),
+            ("dataset", s(&self.dataset)),
+            ("strategy", s(&self.strategy)),
+            ("models", Json::Arr(self.models.iter().map(|m| s(m)).collect())),
+        ])
+    }
+
+    fn from_json(json: &Json) -> Result<Self> {
+        let hex_field = |key: &str| -> Result<u64> {
+            let text = field_str(json, key)?;
+            u64::from_str_radix(text, 16).map_err(|_| {
+                Error::ParseError(format!("frontier binding field '{key}' is not a hex u64"))
+            })
+        };
+        Ok(Self {
+            spec_fingerprint: hex_field("spec_fingerprint")?,
+            seed: hex_field("seed")?,
+            shard: (field_usize(json, "shard")?, field_usize(json, "num_shards")?),
+            dataset: field_str(json, "dataset")?.to_string(),
+            strategy: field_str(json, "strategy")?.to_string(),
+            models: field_arr(json, "models")?
+                .iter()
+                .map(|m| {
+                    m.as_str().map(str::to_string).ok_or_else(|| {
+                        Error::ParseError("frontier binding model names must be strings".into())
+                    })
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One archived design point: where it sits in the sweep and its full
+/// evaluation (so saved fronts can be re-plotted without the database).
+#[derive(Debug, Clone)]
+pub struct FrontSample {
+    /// Cross-product index of the design point in its sweep.
+    pub index: usize,
+    /// The complete evaluation that put this point on the front.
+    pub eval: Evaluation,
+}
+
+/// One model's streaming front.
+#[derive(Debug, Clone)]
+pub struct ModelFrontier {
+    model_name: String,
+    front: ParetoFront<2, FrontSample>,
+}
+
+impl ModelFrontier {
+    /// The workload model this front belongs to.
+    pub fn model_name(&self) -> &str {
+        &self.model_name
+    }
+
+    /// The underlying two-objective front.
+    pub fn front(&self) -> &ParetoFront<2, FrontSample> {
+        &self.front
+    }
+}
+
+/// Per-model streaming Pareto fronts for one campaign (see the module
+/// docs). Created empty; the explorer binds the model set at stream
+/// start and feeds every delivered point.
+#[derive(Debug, Clone, Default)]
+pub struct CampaignFrontier {
+    epsilon: Option<[f64; 2]>,
+    capacity: Option<usize>,
+    binding: Option<FrontierBinding>,
+    /// Campaign-ordered observation cursor: how many delivery positions
+    /// [`Self::observe_at`] has consumed. Checkpoint replay (and the
+    /// re-delivery of journal-lost tail points) re-offers bit-identical
+    /// evaluations of positions below this cursor, so they are skipped
+    /// instead of archived twice.
+    observed: usize,
+    models: Vec<ModelFrontier>,
+}
+
+impl CampaignFrontier {
+    /// Empty frontier in exact mode.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Use epsilon-dominance archives (see
+    /// [`ParetoFront::with_epsilon`]); must be set before the first
+    /// campaign binds the frontier.
+    pub fn with_epsilon(mut self, epsilon: [f64; 2]) -> Self {
+        self.epsilon = Some(epsilon);
+        self
+    }
+
+    /// Bound each model's archive to `capacity` entries (see
+    /// [`ParetoFront::with_capacity`]).
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = Some(capacity);
+        self
+    }
+
+    fn make_front(&self) -> ParetoFront<2, FrontSample> {
+        let mut front = ParetoFront::new(OBJECTIVES);
+        if let Some(epsilon) = self.epsilon {
+            front = front.with_epsilon(epsilon);
+        }
+        if let Some(capacity) = self.capacity {
+            front = front.with_capacity(capacity);
+        }
+        front
+    }
+
+    /// Bind the frontier to a campaign (called by the explorer at stream
+    /// start). A fresh frontier records the campaign identity and
+    /// creates one empty front per model; a frontier that is already
+    /// bound — e.g. reattached across a checkpoint resume, or reloaded
+    /// from disk — must match the campaign *exactly* (sweep fingerprint,
+    /// seed, shard, dataset, strategy, model set) or the campaign is
+    /// rejected with [`Error::InvalidConfig`]: fronts from incomparable
+    /// campaigns never merge.
+    pub fn begin(&mut self, binding: &FrontierBinding) -> Result<()> {
+        match &self.binding {
+            None => {
+                self.models = binding
+                    .models
+                    .iter()
+                    .map(|name| ModelFrontier {
+                        model_name: name.clone(),
+                        front: self.make_front(),
+                    })
+                    .collect();
+                self.binding = Some(binding.clone());
+                Ok(())
+            }
+            Some(bound) => bound.ensure_matches(binding),
+        }
+    }
+
+    /// The campaign this frontier is bound to, once [`Self::begin`] ran.
+    pub fn binding(&self) -> Option<&FrontierBinding> {
+        self.binding.as_ref()
+    }
+
+    /// Delivery positions consumed by [`Self::observe_at`] so far.
+    pub fn observed(&self) -> usize {
+        self.observed
+    }
+
+    /// Low-level insertion: feed one design point's evaluations (in the
+    /// campaign's model order) unconditionally. Does not advance the
+    /// [`Self::observed`] cursor — campaign code goes through
+    /// [`Self::observe_at`], which is what makes resumes idempotent.
+    pub fn observe(&mut self, index: usize, evals: &[Evaluation]) -> Result<()> {
+        if evals.len() != self.models.len() {
+            return Err(Error::InvalidConfig(format!(
+                "frontier holds {} model fronts but the point carries {} evaluations",
+                self.models.len(),
+                evals.len()
+            )));
+        }
+        for (model, eval) in self.models.iter_mut().zip(evals) {
+            model.front.insert(
+                [eval.perf_per_area, eval.energy_uj],
+                FrontSample { index, eval: eval.clone() },
+            );
+        }
+        Ok(())
+    }
+
+    /// Campaign-ordered observation of delivery position `pos` (the
+    /// explorer calls this once per streamed point, in order). Positions
+    /// below the [`Self::observed`] cursor are skipped: campaigns are
+    /// deterministic, so a checkpoint replay — or the re-delivery of
+    /// points whose journal lines were lost to a crash — re-offers
+    /// bit-identical evaluations the frontier has already archived.
+    /// A position *above* the cursor means the frontier is out of sync
+    /// with the campaign and is rejected.
+    pub fn observe_at(&mut self, pos: usize, index: usize, evals: &[Evaluation]) -> Result<()> {
+        if pos < self.observed {
+            return Ok(());
+        }
+        if pos > self.observed {
+            return Err(Error::InvalidConfig(format!(
+                "frontier has observed {} points but the campaign delivered position {pos}; \
+                 it was not produced by a prefix of this campaign",
+                self.observed
+            )));
+        }
+        self.observed += 1;
+        self.observe(index, evals)
+    }
+
+    /// Per-model fronts, in the campaign's model order.
+    pub fn models(&self) -> &[ModelFrontier] {
+        &self.models
+    }
+
+    /// Whether no campaign has bound this frontier yet.
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Total archived points across all model fronts.
+    pub fn total_points(&self) -> usize {
+        self.models.iter().map(|m| m.front.len()).sum()
+    }
+
+    /// Serialize to a schema-versioned canonical document. Points render
+    /// in plotting order (ascending perf/area, insertion order on ties),
+    /// so equal fronts always produce byte-identical, diffable files.
+    pub fn to_json(&self) -> Json {
+        let mut fields = envelope("qadam.frontier");
+        fields.push((
+            "epsilon",
+            match self.epsilon {
+                None => Json::Null,
+                Some([a, b]) => Json::Arr(vec![num(a), num(b)]),
+            },
+        ));
+        fields.push((
+            "capacity",
+            match self.capacity {
+                None => Json::Null,
+                Some(n) => num(n as f64),
+            },
+        ));
+        fields.push((
+            "campaign",
+            match &self.binding {
+                None => Json::Null,
+                Some(binding) => binding.to_json(),
+            },
+        ));
+        fields.push(("observed", num(self.observed as f64)));
+        let models: Vec<Json> = self
+            .models
+            .iter()
+            .map(|model| {
+                let points: Vec<Json> = model
+                    .front
+                    .sorted()
+                    .into_iter()
+                    .map(|entry| {
+                        obj(vec![
+                            ("index", num(entry.payload.index as f64)),
+                            ("eval", entry.payload.eval.to_json()),
+                        ])
+                    })
+                    .collect();
+                obj(vec![
+                    ("model_name", s(&model.model_name)),
+                    ("points", Json::Arr(points)),
+                ])
+            })
+            .collect();
+        fields.push(("models", Json::Arr(models)));
+        obj(fields)
+    }
+
+    /// Deserialize from [`Self::to_json`] output. Entries are restored
+    /// verbatim (no dominance re-check), so `save` → `load` → `save`
+    /// is byte-identical in every archive mode.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        check_envelope(json, "qadam.frontier")?;
+        let epsilon = match json.get("epsilon") {
+            None | Some(Json::Null) => None,
+            Some(value) => {
+                let pair = value.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                    Error::ParseError("frontier epsilon must be a two-element array".into())
+                })?;
+                let get = |j: &Json| {
+                    j.as_f64().filter(|e| e.is_finite() && *e >= 0.0).ok_or_else(|| {
+                        Error::ParseError(
+                            "frontier epsilon entries must be finite numbers >= 0".into(),
+                        )
+                    })
+                };
+                Some([get(&pair[0])?, get(&pair[1])?])
+            }
+        };
+        let capacity = match json.get("capacity") {
+            None | Some(Json::Null) => None,
+            // Validate here: a garbled value would otherwise trip the
+            // `with_capacity` assert instead of the typed-error contract.
+            Some(_) => match field_usize(json, "capacity")? {
+                0 => {
+                    return Err(Error::ParseError(
+                        "frontier capacity must be at least 1".into(),
+                    ))
+                }
+                n => Some(n),
+            },
+        };
+        let binding = match json.get("campaign") {
+            None | Some(Json::Null) => None,
+            Some(value) => Some(FrontierBinding::from_json(value)?),
+        };
+        let observed = field_usize(json, "observed")?;
+        let mut frontier =
+            CampaignFrontier { epsilon, capacity, binding, observed, models: Vec::new() };
+        for model_json in field_arr(json, "models")? {
+            let mut model = ModelFrontier {
+                model_name: field_str(model_json, "model_name")?.to_string(),
+                front: frontier.make_front(),
+            };
+            for point in field_arr(model_json, "points")? {
+                let index = field_usize(point, "index")?;
+                let eval_json = point.get("eval").ok_or_else(|| {
+                    Error::ParseError("frontier point missing field 'eval'".into())
+                })?;
+                let eval = Evaluation::from_json(eval_json)?;
+                model
+                    .front
+                    .restore([eval.perf_per_area, eval.energy_uj], FrontSample { index, eval });
+            }
+            frontier.models.push(model);
+        }
+        Ok(frontier)
+    }
+
+    /// Write the frontier as pretty-printed canonical JSON (atomic:
+    /// temp file + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.to_json().to_string_pretty())
+    }
+
+    /// Load a frontier written by [`Self::save`]. Missing files are
+    /// [`Error::Io`]; garbled ones are [`Error::ParseError`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text)
+            .map_err(|e| Error::ParseError(format!("{}: {e}", path.display())))?;
+        Self::from_json(&json)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::AcceleratorConfig;
+    use crate::dnn::{model_for, Dataset, ModelKind};
+
+    fn eval_with(rows: usize, seed: u64) -> Evaluation {
+        let config = AcceleratorConfig { rows, ..Default::default() };
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        crate::dse::evaluate(&config, &model, seed)
+    }
+
+    fn binding_for(items: &[&str]) -> FrontierBinding {
+        FrontierBinding {
+            spec_fingerprint: 0xABCD,
+            seed: 7,
+            shard: (0, 1),
+            dataset: "CIFAR-10".into(),
+            strategy: "exhaustive".into(),
+            models: items.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    #[test]
+    fn begin_binds_and_rebinds_only_matching_campaigns() {
+        let mut frontier = CampaignFrontier::new();
+        frontier.begin(&binding_for(&["A", "B"])).unwrap();
+        assert_eq!(frontier.models().len(), 2);
+        frontier.begin(&binding_for(&["A", "B"])).unwrap();
+        let err = frontier.begin(&binding_for(&["A", "C"])).unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        // Same models but a different campaign identity is rejected too.
+        let mut other_seed = binding_for(&["A", "B"]);
+        other_seed.seed = 8;
+        assert_eq!(frontier.begin(&other_seed).unwrap_err().kind(), "invalid_config");
+        let mut other_space = binding_for(&["A", "B"]);
+        other_space.spec_fingerprint ^= 1;
+        assert_eq!(frontier.begin(&other_space).unwrap_err().kind(), "invalid_config");
+    }
+
+    #[test]
+    fn observe_requires_one_eval_per_model() {
+        let mut frontier = CampaignFrontier::new();
+        frontier.begin(&binding_for(&["A", "B"])).unwrap();
+        let err = frontier.observe(0, &[eval_with(8, 1)]).unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        frontier.observe(0, &[eval_with(8, 1), eval_with(16, 1)]).unwrap();
+        assert_eq!(frontier.total_points(), 2);
+    }
+
+    #[test]
+    fn observe_at_skips_replayed_positions_and_rejects_gaps() {
+        let mut frontier = CampaignFrontier::new();
+        frontier.begin(&binding_for(&["ResNet-20"])).unwrap();
+        frontier.observe_at(0, 0, &[eval_with(8, 1)]).unwrap();
+        frontier.observe_at(1, 1, &[eval_with(16, 1)]).unwrap();
+        let points_before = frontier.total_points();
+        // Replay of already-observed positions is a no-op…
+        frontier.observe_at(0, 0, &[eval_with(8, 1)]).unwrap();
+        frontier.observe_at(1, 1, &[eval_with(16, 1)]).unwrap();
+        assert_eq!(frontier.total_points(), points_before);
+        assert_eq!(frontier.observed(), 2);
+        // …and a position gap means a desynchronized frontier.
+        let err = frontier.observe_at(3, 3, &[eval_with(24, 1)]).unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+    }
+
+    #[test]
+    fn frontier_round_trips_byte_for_byte() {
+        let mut frontier = CampaignFrontier::new();
+        frontier.begin(&binding_for(&["ResNet-20"])).unwrap();
+        for (i, rows) in [8, 12, 16, 24, 32].iter().enumerate() {
+            frontier.observe_at(i, i, &[eval_with(*rows, 7)]).unwrap();
+        }
+        let text = frontier.to_json().to_string_pretty();
+        let reloaded = CampaignFrontier::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(reloaded.to_json().to_string_pretty(), text);
+        assert_eq!(reloaded.total_points(), frontier.total_points());
+        assert_eq!(reloaded.observed(), 5);
+        assert_eq!(reloaded.binding(), frontier.binding());
+    }
+
+    #[test]
+    fn bounded_frontier_round_trips_its_settings() {
+        let mut frontier = CampaignFrontier::new().with_epsilon([0.1, 0.1]).with_capacity(3);
+        frontier.begin(&binding_for(&["ResNet-20"])).unwrap();
+        for (i, rows) in [8, 12, 16, 24, 32].iter().enumerate() {
+            frontier.observe_at(i, i, &[eval_with(*rows, 7)]).unwrap();
+        }
+        assert!(frontier.total_points() <= 3);
+        let text = frontier.to_json().to_string_pretty();
+        let reloaded = CampaignFrontier::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(reloaded.to_json().to_string_pretty(), text);
+    }
+
+    #[test]
+    fn wrong_kind_is_rejected() {
+        let wrong = Json::parse(r#"{"kind": "qadam.evaldb", "schema": 2}"#).unwrap();
+        assert_eq!(CampaignFrontier::from_json(&wrong).unwrap_err().kind(), "parse_error");
+    }
+
+    #[test]
+    fn corrupt_settings_yield_typed_errors_not_panics() {
+        for text in [
+            r#"{"kind":"qadam.frontier","schema":2,"capacity":0,"epsilon":null,"models":[]}"#,
+            r#"{"kind":"qadam.frontier","schema":2,"capacity":null,"epsilon":[-1.0,0.0],"models":[]}"#,
+            r#"{"kind":"qadam.frontier","schema":2,"capacity":null,"epsilon":[1.0],"models":[]}"#,
+        ] {
+            let json = Json::parse(text).unwrap();
+            let err = CampaignFrontier::from_json(&json).unwrap_err();
+            assert_eq!(err.kind(), "parse_error", "{text}");
+        }
+    }
+}

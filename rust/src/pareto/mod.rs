@@ -1,0 +1,38 @@
+//! Online multi-objective Pareto engine and pluggable search strategies.
+//!
+//! QADAM's headline result is a Pareto front over accuracy × perf/area ×
+//! energy (Figs. 5–6). The seed reproduction computed those fronts
+//! post-hoc over a fully materialized database; this module makes the
+//! frontier an *online* object and the walk of the design space a
+//! *strategy*, so million-point spaces become tractable:
+//!
+//! * [`front`] — [`ParetoFront`]`<const K>` maintains a dominance-pruned
+//!   frontier incrementally, O(front) per insert, with deterministic
+//!   tie-breaking so the streamed front is byte-identical to the batch
+//!   computation ([`crate::dse::pareto_front`], now itself routed
+//!   through this engine). Epsilon-dominance and budgeted (top-N
+//!   contribution) archive variants bound memory when exactness is not
+//!   required.
+//! * [`strategy`] — the [`Strategy`] trait decides *which* design points
+//!   a campaign evaluates: [`Exhaustive`], [`RandomSample`] (n points,
+//!   seeded), or [`SuccessiveHalving`] over a cheap analytic PPA proxy.
+//!   Attach with [`Explorer::strategy`](crate::explore::Explorer::strategy)
+//!   or `qadam dse --strategy random:1000`.
+//! * [`frontier`] — [`CampaignFrontier`] wires per-model fronts into the
+//!   explorer's streaming delivery
+//!   ([`Explorer::frontier`](crate::explore::Explorer::frontier)), so the
+//!   front is available *live during* a campaign and persists through
+//!   the canonical-JSON layer (`qadam dse --frontier front.json`).
+//!
+//! See `DESIGN.md` §5 for the data structures and the strategy contract.
+
+pub mod front;
+pub mod frontier;
+pub mod strategy;
+
+pub use front::{dominates, FrontCore, FrontEntry, InsertOutcome, Orientation, ParetoFront};
+pub use frontier::{CampaignFrontier, FrontierBinding, FrontSample, ModelFrontier, OBJECTIVES};
+pub use strategy::{
+    proxy_perf_per_area, Exhaustive, RandomSample, Selection, Strategy, StrategyContext,
+    SuccessiveHalving,
+};

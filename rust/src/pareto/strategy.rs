@@ -1,0 +1,384 @@
+//! Pluggable search strategies: which design points a campaign actually
+//! evaluates.
+//!
+//! A [`Strategy`] maps a (sharded) design space to a [`Selection`] of
+//! shard positions *before* any evaluation happens, so the
+//! [`Explorer`](crate::explore::Explorer) can walk a subspace instead of
+//! the full cross-product. Selections are deterministic functions of the
+//! strategy's own parameters, which is what lets checkpoint journals pin
+//! a strategy [`descriptor`](Strategy::descriptor) and resume exactly
+//! the campaign they were written for.
+//!
+//! Built-in strategies:
+//!
+//! * [`Exhaustive`] — every point (the default when no strategy is set).
+//! * [`RandomSample`] — `n` distinct points drawn without replacement
+//!   from a seeded PCG64; the classic QUIDAM-style subsampling baseline.
+//! * [`SuccessiveHalving`] — ranks candidates with a cheap analytic
+//!   perf/area proxy at increasing model fidelity, halving the pool each
+//!   round, so the expensive synthesis + mapping pipeline only ever runs
+//!   on the survivors.
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use crate::arch::{AcceleratorConfig, SweepSpec};
+use crate::dnn::Model;
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// Everything a strategy may consult when selecting points. Borrowed
+/// from the explorer for the duration of the selection only.
+#[derive(Debug, Clone, Copy)]
+pub struct StrategyContext<'a> {
+    /// The design space being explored.
+    pub spec: &'a SweepSpec,
+    /// The workload model set, in evaluation order.
+    pub models: &'a [Model],
+    /// The campaign's synthesis seed (strategies needing randomness
+    /// should carry their own seed so the descriptor pins it).
+    pub seed: u64,
+    /// Round-robin shard designator `(shard, num_shards)`.
+    pub shard: (usize, usize),
+    /// Number of shard positions available (the shard-aware point count);
+    /// shard position `p` maps to cross-product index
+    /// `shard + p * num_shards`.
+    pub positions: usize,
+}
+
+impl StrategyContext<'_> {
+    /// Decode the design point at shard position `pos`.
+    ///
+    /// # Panics
+    /// If `pos >= self.positions`.
+    pub fn config_at(&self, pos: usize) -> AcceleratorConfig {
+        let (shard, num_shards) = self.shard;
+        self.spec.get(shard + pos * num_shards).expect("shard position within cross-product")
+    }
+}
+
+/// The outcome of a strategy: which shard positions to evaluate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Selection {
+    /// Every position in the (sharded) space, enumerated lazily — the
+    /// exhaustive walk never materializes the space.
+    All,
+    /// An explicit subset of shard positions. Must be strictly ascending
+    /// and within bounds; the explorer rejects malformed selections with
+    /// [`Error::InvalidConfig`].
+    Subset(Vec<usize>),
+}
+
+impl Selection {
+    /// Number of positions selected, given the space holds `positions`.
+    pub fn len(&self, positions: usize) -> usize {
+        match self {
+            Selection::All => positions,
+            Selection::Subset(subset) => subset.len(),
+        }
+    }
+
+    /// Validate a subset against the space: strictly ascending, in
+    /// bounds, non-empty.
+    pub fn validate(&self, positions: usize) -> Result<()> {
+        let Selection::Subset(subset) = self else { return Ok(()) };
+        if subset.is_empty() {
+            return Err(Error::InvalidConfig("strategy selected no design points".into()));
+        }
+        let ascending = subset.windows(2).all(|w| w[0] < w[1]);
+        if !ascending || *subset.last().expect("non-empty") >= positions {
+            return Err(Error::InvalidConfig(
+                "strategy selection must be strictly ascending shard positions \
+                 within the design space"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A design-space search strategy. Implementations must be deterministic
+/// in their own fields: the same strategy over the same space always
+/// selects the same points (the checkpoint journal pins
+/// [`Self::descriptor`] and replays against it).
+pub trait Strategy: fmt::Debug + Send + Sync {
+    /// Stable one-line identity (name + parameters), e.g.
+    /// `random:1000:7`. Pinned in checkpoint-journal manifests; two
+    /// strategies with equal descriptors must produce equal selections.
+    fn descriptor(&self) -> String;
+
+    /// Choose the shard positions to evaluate.
+    fn select(&self, ctx: &StrategyContext<'_>) -> Result<Selection>;
+}
+
+/// Evaluate every design point — the default campaign behavior, made
+/// explicit so `--strategy exhaustive` round-trips.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Exhaustive;
+
+impl Strategy for Exhaustive {
+    fn descriptor(&self) -> String {
+        "exhaustive".into()
+    }
+
+    fn select(&self, _ctx: &StrategyContext<'_>) -> Result<Selection> {
+        Ok(Selection::All)
+    }
+}
+
+/// Evaluate `n` design points drawn uniformly without replacement.
+///
+/// Sampling uses Floyd's algorithm over a PCG64 stream seeded by
+/// `seed` alone, so the selection depends only on `(n, seed, space
+/// size)` — rerunning the same campaign touches the same points. When
+/// `n` covers the whole space the selection degrades to
+/// [`Selection::All`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RandomSample {
+    /// Number of design points to evaluate.
+    pub n: usize,
+    /// Sampling seed (independent of the synthesis seed).
+    pub seed: u64,
+}
+
+impl Strategy for RandomSample {
+    fn descriptor(&self) -> String {
+        format!("random:{}:{}", self.n, self.seed)
+    }
+
+    fn select(&self, ctx: &StrategyContext<'_>) -> Result<Selection> {
+        if self.n == 0 {
+            return Err(Error::InvalidConfig("random strategy needs n >= 1".into()));
+        }
+        if self.n >= ctx.positions {
+            return Ok(Selection::All);
+        }
+        // Floyd's sampling: n distinct values from [0, positions) with
+        // exactly n RNG draws; BTreeSet keeps the result ascending.
+        let mut rng = Pcg64::new(self.seed);
+        let mut chosen: BTreeSet<usize> = BTreeSet::new();
+        for j in (ctx.positions - self.n)..ctx.positions {
+            let t = rng.below(j as u64 + 1) as usize;
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        Ok(Selection::Subset(chosen.into_iter().collect()))
+    }
+}
+
+/// Successive halving over a cheap analytic perf/area proxy.
+///
+/// All candidates start in the pool; each round re-scores the survivors
+/// with [`proxy_perf_per_area`] at increasing model fidelity (the number
+/// of workload layers the proxy considers doubles every round until the
+/// full model set is in view) and keeps the better-scoring half, until
+/// at most `keep` candidates remain. Only those survivors reach the real
+/// synthesis + mapping pipeline, so the expensive work scales with
+/// `keep`, not with the space.
+///
+/// The proxy is deliberately crude — datapath-width area estimates and a
+/// row-stationary occupancy guess — but it is monotone enough to steer
+/// the pool toward the high-perf/area region, and it is exact about
+/// which points were selected: the selection is a deterministic function
+/// of `(keep, rounds, space, model set)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SuccessiveHalving {
+    /// Number of surviving candidates to fully evaluate.
+    pub keep: usize,
+    /// Halving rounds (the last round always scores at full fidelity).
+    pub rounds: usize,
+}
+
+impl Strategy for SuccessiveHalving {
+    fn descriptor(&self) -> String {
+        format!("halving:{}:{}", self.keep, self.rounds)
+    }
+
+    fn select(&self, ctx: &StrategyContext<'_>) -> Result<Selection> {
+        if self.keep == 0 || self.rounds == 0 {
+            return Err(Error::InvalidConfig(
+                "halving strategy needs keep >= 1 and rounds >= 1".into(),
+            ));
+        }
+        if self.keep >= ctx.positions {
+            return Ok(Selection::All);
+        }
+        let max_layers = ctx
+            .models
+            .iter()
+            .map(|m| m.compute_layers().count())
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let mut survivors: Vec<usize> = (0..ctx.positions).collect();
+        for round in 0..self.rounds {
+            if survivors.len() <= self.keep {
+                break;
+            }
+            // Fidelity ladder: 1/2^(rounds-1-round) of the layers, so the
+            // final round always scores the full workload.
+            let shift = self.rounds - 1 - round;
+            let layer_budget = (max_layers >> shift.min(63)).max(1);
+            let mut scored: Vec<(f64, usize)> = survivors
+                .iter()
+                .map(|&pos| {
+                    (proxy_perf_per_area(&ctx.config_at(pos), ctx.models, layer_budget), pos)
+                })
+                .collect();
+            // Best proxy score first; ties resolve to the lower position
+            // so the ranking is total and deterministic.
+            scored.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.1.cmp(&b.1))
+            });
+            let target = if round + 1 == self.rounds {
+                self.keep
+            } else {
+                (survivors.len() / 2).max(self.keep)
+            };
+            survivors = scored.into_iter().take(target).map(|(_, pos)| pos).collect();
+        }
+        survivors.truncate(self.keep);
+        survivors.sort_unstable();
+        Ok(Selection::Subset(survivors))
+    }
+}
+
+/// Cheap analytic perf/area proxy (arbitrary units, higher is better):
+/// no synthesis, no mapper — datapath bit-width area estimates and a
+/// row-stationary occupancy guess over the first `layer_budget` compute
+/// layers of each model. O(layers) per call.
+pub fn proxy_perf_per_area(
+    config: &AcceleratorConfig,
+    models: &[Model],
+    layer_budget: usize,
+) -> f64 {
+    let pe = config.pe;
+    // Area proxy: a multiplier scales with act×weight bits, a shift-add
+    // datapath with the shifter count; scratchpads and the GLB add their
+    // storage bits at SRAM-ish density.
+    let mac_units = if pe.is_shift_add() {
+        pe.act_bits() as f64 * (4.0 + 4.0 * pe.shift_count() as f64)
+    } else {
+        pe.act_bits() as f64 * pe.weight_bits() as f64
+    };
+    let pe_units = mac_units + 0.25 * config.spad.total_bits(pe) as f64;
+    let area = config.num_pes() as f64 * pe_units + 4.0 * config.glb_bytes() as f64;
+    // Perf proxy: ideal MAC cycles inflated by a row-stationary occupancy
+    // guess (kernel rows fill array rows, output rows fill columns).
+    let mut cycles = 0.0f64;
+    for model in models {
+        for layer in model.compute_layers().take(layer_budget) {
+            let rows_busy = (layer.kernel as f64 / config.rows as f64).min(1.0);
+            let cols_busy = (layer.out_hw() as f64 / config.cols as f64).min(1.0);
+            let occupancy = (rows_busy * cols_busy).max(1e-3);
+            cycles += layer.macs() as f64 / (config.num_pes() as f64 * occupancy);
+        }
+    }
+    if cycles <= 0.0 {
+        return 0.0;
+    }
+    let inferences_per_s = config.clock_ghz * 1e9 / cycles;
+    inferences_per_s / area
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::{models_for, Dataset};
+
+    fn ctx<'a>(spec: &'a SweepSpec, models: &'a [Model]) -> StrategyContext<'a> {
+        StrategyContext { spec, models, seed: 7, shard: (0, 1), positions: spec.len() }
+    }
+
+    #[test]
+    fn exhaustive_selects_all() {
+        let spec = SweepSpec::tiny();
+        let models = models_for(Dataset::Cifar10);
+        assert_eq!(Exhaustive.select(&ctx(&spec, &models)).unwrap(), Selection::All);
+        assert_eq!(Exhaustive.descriptor(), "exhaustive");
+    }
+
+    #[test]
+    fn random_sample_is_deterministic_and_in_bounds() {
+        let spec = SweepSpec::default();
+        let models = models_for(Dataset::Cifar10);
+        let strategy = RandomSample { n: 17, seed: 42 };
+        let a = strategy.select(&ctx(&spec, &models)).unwrap();
+        let b = strategy.select(&ctx(&spec, &models)).unwrap();
+        assert_eq!(a, b, "same seed must select the same points");
+        let Selection::Subset(positions) = a else { panic!("expected a subset") };
+        assert_eq!(positions.len(), 17);
+        assert!(positions.windows(2).all(|w| w[0] < w[1]), "ascending & distinct");
+        assert!(*positions.last().unwrap() < spec.len());
+        let c = RandomSample { n: 17, seed: 43 }.select(&ctx(&spec, &models)).unwrap();
+        assert_ne!(a, c, "different seeds should (overwhelmingly) differ");
+    }
+
+    #[test]
+    fn random_sample_covering_space_is_all() {
+        let spec = SweepSpec::tiny();
+        let models = models_for(Dataset::Cifar10);
+        let selection =
+            RandomSample { n: spec.len() + 5, seed: 1 }.select(&ctx(&spec, &models)).unwrap();
+        assert_eq!(selection, Selection::All);
+    }
+
+    #[test]
+    fn random_sample_rejects_zero() {
+        let spec = SweepSpec::tiny();
+        let models = models_for(Dataset::Cifar10);
+        let err = RandomSample { n: 0, seed: 1 }.select(&ctx(&spec, &models)).unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+    }
+
+    #[test]
+    fn halving_keeps_exactly_keep_points() {
+        let spec = SweepSpec::default();
+        let models = models_for(Dataset::Cifar10);
+        let strategy = SuccessiveHalving { keep: 9, rounds: 3 };
+        let Selection::Subset(positions) = strategy.select(&ctx(&spec, &models)).unwrap()
+        else {
+            panic!("expected a subset")
+        };
+        assert_eq!(positions.len(), 9);
+        assert!(positions.windows(2).all(|w| w[0] < w[1]));
+        // Deterministic: a second run selects the same survivors.
+        let again = strategy.select(&ctx(&spec, &models)).unwrap();
+        assert_eq!(again, Selection::Subset(positions));
+    }
+
+    #[test]
+    fn halving_prefers_high_proxy_scores() {
+        let spec = SweepSpec::default();
+        let models = models_for(Dataset::Cifar10);
+        let context = ctx(&spec, &models);
+        let Selection::Subset(positions) =
+            SuccessiveHalving { keep: 8, rounds: 2 }.select(&context).unwrap()
+        else {
+            panic!("expected a subset")
+        };
+        // Survivors should score at least as well (at full fidelity) as
+        // the median of the space — the proxy actually steered.
+        let full = spec.len();
+        let score =
+            |pos: usize| proxy_perf_per_area(&context.config_at(pos), &models, usize::MAX);
+        let mut all: Vec<f64> = (0..full).map(score).collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = all[full / 2];
+        let surviving_best = positions.iter().map(|&p| score(p)).fold(f64::MIN, f64::max);
+        assert!(surviving_best >= median, "halving survivors must not all be below median");
+    }
+
+    #[test]
+    fn selection_validation_catches_malformed_subsets() {
+        assert!(Selection::Subset(vec![]).validate(10).is_err());
+        assert!(Selection::Subset(vec![3, 3]).validate(10).is_err());
+        assert!(Selection::Subset(vec![5, 2]).validate(10).is_err());
+        assert!(Selection::Subset(vec![2, 10]).validate(10).is_err());
+        assert!(Selection::Subset(vec![0, 2, 9]).validate(10).is_ok());
+        assert!(Selection::All.validate(0).is_ok());
+    }
+}

@@ -5,8 +5,11 @@
 /// A dense row-major matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Matrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Elements, row-major, `rows * cols` long.
     pub data: Vec<f64>,
 }
 

@@ -29,9 +29,13 @@ use crate::synth::SynthDataset;
 /// performance (max clock, GHz).
 #[derive(Debug, Clone)]
 pub struct PpaModel {
+    /// PE type the surrogates were fitted for.
     pub pe: PeType,
+    /// Area surrogate (mm²).
     pub area: PolyModel,
+    /// Power surrogate (mW).
     pub power: PolyModel,
+    /// Performance surrogate (max clock, GHz).
     pub perf: PolyModel,
     /// Held-out fit quality per metric (from k-fold CV).
     pub reports: Vec<FitReport>,

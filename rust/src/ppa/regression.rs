@@ -12,7 +12,9 @@ use crate::util::stats;
 /// A fitted polynomial model over standardized raw features.
 #[derive(Debug, Clone)]
 pub struct PolyModel {
+    /// Polynomial basis degree.
     pub degree: usize,
+    /// Ridge regularization strength.
     pub lambda: f64,
     /// Per-raw-feature standardization: (mean, stddev).
     pub scaler: Vec<(f64, f64)>,
@@ -23,7 +25,9 @@ pub struct PolyModel {
 /// Held-out fit quality (k-fold CV aggregate + in-sample correlation).
 #[derive(Debug, Clone)]
 pub struct FitReport {
+    /// Metric label (`"area"`, `"power"`, `"perf"`).
     pub metric: String,
+    /// Selected polynomial degree.
     pub degree: usize,
     /// Cross-validated RMSE (held-out).
     pub cv_rmse: f64,

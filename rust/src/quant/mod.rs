@@ -21,9 +21,13 @@ pub use quantizer::{AffineQuantizer, Po2Quantizer, QuantizedTensor};
 /// Processing element type — the paper's primary design-space axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum PeType {
+    /// IEEE-754 single-precision multiply-accumulate.
     Fp32,
+    /// 16-bit uniform affine (symmetric) weights and activations.
     Int16,
+    /// 8-bit activations, 4-bit power-of-two weights; one shift per MAC.
     LightPe1,
+    /// 8-bit activations, 8-bit sum-of-two-powers weights; two shifts + add.
     LightPe2,
 }
 

@@ -25,7 +25,9 @@ pub fn round_ties_even(x: f64) -> f64 {
 /// `bits`-wide signed codes.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AffineQuantizer {
+    /// Signed code width in bits.
     pub bits: u32,
+    /// Real value of one code step.
     pub scale: f64,
 }
 
@@ -78,6 +80,7 @@ impl AffineQuantizer {
 /// are non-negative integers at the PE.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Po2Quantizer {
+    /// Target PE type (fixes the exponent budget).
     pub pe: PeType,
     /// Smallest representable exponent (layer-calibrated).
     pub e_min: i32,
@@ -175,8 +178,11 @@ impl Po2Quantizer {
 /// A quantized tensor: integer codes plus the shared scale.
 #[derive(Debug, Clone, PartialEq)]
 pub struct QuantizedTensor {
+    /// Integer codes, one per element.
     pub codes: Vec<i64>,
+    /// Shared real value of one code step.
     pub scale: f64,
+    /// Signed code width in bits.
     pub bits: u32,
 }
 

@@ -19,9 +19,13 @@ use crate::util::table::{format_sig, scatter, Series, Table};
 /// A regenerated figure: CSV table, terminal plot, and summary lines.
 #[derive(Debug, Clone)]
 pub struct Figure {
+    /// Figure identifier and caption (e.g. `"Fig. 4 — normalized DSE"`).
     pub id: String,
+    /// The figure's data as an aligned, CSV-exportable table.
     pub table: Table,
+    /// Terminal scatter rendering.
     pub plot: String,
+    /// Headline takeaways, one line each, with the paper's claims.
     pub summary: Vec<String>,
 }
 
@@ -320,6 +324,9 @@ fn pareto_figure_from_db(db: &EvalDatabase, perf_axis: bool) -> Result<Figure> {
         } else {
             [Orientation::Minimize, Orientation::Minimize]
         };
+        // `dse::pareto_front` is itself routed through the streaming
+        // engine, so this is the online-front computation — pinned
+        // against the post-hoc oracle by the golden suite.
         let front = dse::pareto_front(&coords, &orientations);
         fronts += 1;
         if front.iter().any(|&i| points[i].0.is_shift_add()) {
@@ -426,6 +433,7 @@ mod tests {
         let db = EvalDatabase {
             dataset: Dataset::ImageNet,
             shard: (0, 1),
+            strategy: "exhaustive".into(),
             spaces: Vec::new(),
             stats: crate::explore::CampaignStats {
                 design_points: 0,

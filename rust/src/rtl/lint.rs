@@ -18,7 +18,9 @@ use super::verilog::RtlBundle;
 /// A lint finding.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LintIssue {
+    /// RTL file the issue was found in.
     pub file: String,
+    /// Human-readable description of the violation.
     pub message: String,
 }
 

@@ -27,21 +27,32 @@ use crate::util::json::Json;
 /// Input/output signature of one artifact (from `manifest.json`).
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// HLO text file relative to the artifacts directory.
     pub file: String,
+    /// Expected input shapes, in call order.
     pub input_shapes: Vec<Vec<usize>>,
+    /// Expected input dtypes (`"f32"` / `"i32"`), in call order.
     pub input_dtypes: Vec<String>,
+    /// Number of outputs the executable returns.
     pub n_outputs: usize,
 }
 
 /// The parsed artifact manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Training batch size the artifacts were compiled for.
     pub batch: usize,
+    /// Input image height = width.
     pub img_hw: usize,
+    /// Input image channels.
     pub img_c: usize,
+    /// Classifier output classes.
     pub num_classes: usize,
+    /// Parameter tensor names, in the executables' calling order.
     pub param_order: Vec<String>,
+    /// Artifact signatures by name.
     pub artifacts: HashMap<String, ArtifactSpec>,
 }
 
@@ -134,6 +145,7 @@ pub struct Runtime {
     #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// The parsed artifact manifest.
     pub manifest: Manifest,
     #[cfg(feature = "pjrt")]
     executables: HashMap<String, xla::PjRtLoadedExecutable>,

@@ -24,17 +24,24 @@ pub fn pe_artifact_key(pe: PeType) -> &'static str {
 /// One recorded training step.
 #[derive(Debug, Clone, Copy)]
 pub struct StepRecord {
+    /// Zero-based step index.
     pub step: usize,
+    /// Training loss at this step.
     pub loss: f32,
 }
 
 /// Result of a QAT run.
 #[derive(Debug, Clone)]
 pub struct QatOutcome {
+    /// PE type the model was trained for.
     pub pe: PeType,
+    /// Steps executed.
     pub steps: usize,
+    /// Sampled training losses.
     pub loss_curve: Vec<StepRecord>,
+    /// Final evaluation accuracy in [0, 1].
     pub final_accuracy: f32,
+    /// Final evaluation loss.
     pub final_eval_loss: f32,
 }
 

@@ -10,8 +10,20 @@ use crate::error::{Error, Result};
 /// A host-side dense tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
+    /// 32-bit float tensor.
+    F32 {
+        /// Dimension sizes, outermost first.
+        shape: Vec<usize>,
+        /// Elements, row-major.
+        data: Vec<f32>,
+    },
+    /// 32-bit integer tensor.
+    I32 {
+        /// Dimension sizes, outermost first.
+        shape: Vec<usize>,
+        /// Elements, row-major.
+        data: Vec<i32>,
+    },
 }
 
 impl Tensor {

@@ -9,6 +9,7 @@ use crate::quant::{
 /// A layer's tensors quantized for a PE type, with hardware encodings.
 #[derive(Debug, Clone)]
 pub struct QuantizedLayer {
+    /// PE type whose encodings this layer uses.
     pub pe: PeType,
     /// Activation codes (integer domain; fp32 passes raw bits through f64).
     pub act_codes: Vec<i64>,

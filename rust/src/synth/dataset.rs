@@ -12,6 +12,7 @@ use crate::quant::PeType;
 /// One (design point → synthesis results) sample.
 #[derive(Debug, Clone)]
 pub struct SynthRecord {
+    /// The synthesized design point.
     pub config: AcceleratorConfig,
     /// Total area (mm²).
     pub area_mm2: f64,
@@ -38,7 +39,9 @@ impl SynthRecord {
 /// separately).
 #[derive(Debug, Clone)]
 pub struct SynthDataset {
+    /// PE type every record shares.
     pub pe: PeType,
+    /// One record per synthesized design point.
     pub records: Vec<SynthRecord>,
 }
 

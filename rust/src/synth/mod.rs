@@ -31,9 +31,13 @@ pub const REFERENCE_CLOCK_GHZ: f64 = 1.0;
 /// Area breakdown of a synthesized accelerator (µm²).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AreaBreakdown {
+    /// PE array (MACs + scratchpads + local control).
     pub pe_array_um2: f64,
+    /// Global buffer macro.
     pub glb_um2: f64,
+    /// Network-on-chip wiring and switches.
     pub noc_um2: f64,
+    /// Top-level controller.
     pub controller_um2: f64,
 }
 

@@ -56,11 +56,17 @@ pub fn mac_unit(pe: PeType) -> Component {
 /// A fully composed PE: MAC + three scratchpads + local control.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PeNetlist {
+    /// PE type the netlist implements.
     pub pe_type: PeType,
+    /// The MAC datapath (multiplier or shift-add).
     pub mac: Component,
+    /// Input-feature-map scratchpad.
     pub ifmap_spad: SramMacro,
+    /// Filter-weight scratchpad.
     pub filter_spad: SramMacro,
+    /// Partial-sum scratchpad.
     pub psum_spad: SramMacro,
+    /// Local control logic.
     pub control: Component,
     /// Aggregate component (areas summed; delay = datapath critical path).
     pub total: Component,

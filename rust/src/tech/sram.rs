@@ -20,6 +20,7 @@ pub enum MacroKind {
 /// A synthesized storage macro.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SramMacro {
+    /// Macro implementation style.
     pub kind: MacroKind,
     /// Total capacity in bits.
     pub capacity_bits: usize,

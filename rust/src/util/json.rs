@@ -11,18 +11,26 @@ use std::fmt;
 /// A parsed JSON value. Objects use `BTreeMap` for deterministic output.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// String value.
     Str(String),
+    /// Array of values.
     Arr(Vec<Json>),
+    /// Object; `BTreeMap` keeps keys sorted for canonical output.
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse or access error with character position where applicable.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Character offset in the input where parsing failed.
     pub pos: usize,
 }
 

@@ -175,8 +175,11 @@ pub fn one_of<T: Clone + 'static>(choices: Vec<T>) -> Gen<T> {
 /// Configuration for [`check`].
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Random cases to run.
     pub cases: usize,
+    /// Generator seed (fixed for reproducible failures).
     pub seed: u64,
+    /// Cap on shrink attempts after a failure.
     pub max_shrink_steps: usize,
 }
 

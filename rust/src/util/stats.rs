@@ -133,12 +133,19 @@ pub fn rmse(observed: &[f64], predicted: &[f64]) -> f64 {
 /// Five-number-plus summary used by the bench harness and reports.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub stddev: f64,
+    /// Minimum.
     pub min: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// Maximum.
     pub max: f64,
 }
 

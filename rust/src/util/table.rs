@@ -103,8 +103,11 @@ pub fn format_sig(value: f64, sig: usize) -> String {
 /// One named series of (x, y) points for a scatter plot.
 #[derive(Debug, Clone)]
 pub struct Series {
+    /// Legend label.
     pub name: String,
+    /// Single character plotted for this series.
     pub marker: char,
+    /// The series' (x, y) points.
     pub points: Vec<(f64, f64)>,
 }
 

@@ -169,66 +169,98 @@ fn golden_headline_ratios_and_normalization() {
     assert_snapshot("headline_ratios.json", &first);
 }
 
+/// Render the Fig. 5/6 per-model best points and front membership, with
+/// the front computed by `front_of` — shared by the post-hoc and
+/// streaming-engine golden tests so their fixtures are comparable
+/// byte-for-byte.
+fn render_fig45(front_of: &dyn Fn(&[Vec<f64>], &[Orientation; 2]) -> Vec<usize>) -> String {
+    let db = pinned_db();
+    let mut panels = Vec::new();
+    for space in &db.spaces {
+        let kind = ModelKind::parse(&space.model_name).expect("paper model name");
+        let baseline = dse::best_perf_per_area(&space.evals, PeType::Int16)
+            .expect("pinned sweep has INT16 points");
+        let base_energy =
+            dse::best_energy(&space.evals, PeType::Int16).expect("INT16 energy baseline");
+        for (figure, orientations) in [
+            ("fig5", [Orientation::Maximize, Orientation::Maximize]),
+            ("fig6", [Orientation::Minimize, Orientation::Minimize]),
+        ] {
+            let points: Vec<(PeType, f64, f64)> = PeType::ALL
+                .iter()
+                .map(|&pe| {
+                    let entry = accuracy::registry(kind, Dataset::Cifar10, pe)
+                        .expect("registry covers CIFAR-10");
+                    if figure == "fig5" {
+                        let best = dse::best_perf_per_area(&space.evals, pe)
+                            .expect("pinned sweep covers every PE type");
+                        (pe, best.perf_per_area / baseline.perf_per_area, entry.top1)
+                    } else {
+                        let best = dse::best_energy(&space.evals, pe)
+                            .expect("pinned sweep covers every PE type");
+                        (pe, best.energy_uj / base_energy.energy_uj, entry.top1_error())
+                    }
+                })
+                .collect();
+            let coords: Vec<Vec<f64>> = points.iter().map(|&(_, x, y)| vec![x, y]).collect();
+            let front = front_of(&coords, &orientations);
+            let rendered: Vec<Json> = points
+                .iter()
+                .enumerate()
+                .map(|(idx, &(pe, x, y))| {
+                    obj(vec![
+                        ("pe", s(pe.name())),
+                        ("x", num(x)),
+                        ("y", num(y)),
+                        ("on_front", Json::Bool(front.contains(&idx))),
+                    ])
+                })
+                .collect();
+            panels.push(obj(vec![
+                ("model", s(&space.model_name)),
+                ("figure", s(figure)),
+                ("points", Json::Arr(rendered)),
+            ]));
+        }
+    }
+    Json::Arr(panels).to_string_pretty()
+}
+
 /// Snapshot of the Fig. 5 (accuracy vs perf/area) and Fig. 6 (error vs
-/// energy) per-model best points and Pareto-front membership.
+/// energy) per-model best points and Pareto-front membership, computed
+/// post-hoc (the quadratic reference oracle).
 #[test]
 fn golden_fig45_pareto_fronts() {
-    let render = || {
-        let db = pinned_db();
-        let mut panels = Vec::new();
-        for space in &db.spaces {
-            let kind = ModelKind::parse(&space.model_name).expect("paper model name");
-            let baseline = dse::best_perf_per_area(&space.evals, PeType::Int16)
-                .expect("pinned sweep has INT16 points");
-            let base_energy =
-                dse::best_energy(&space.evals, PeType::Int16).expect("INT16 energy baseline");
-            for (figure, orientations) in [
-                ("fig5", [Orientation::Maximize, Orientation::Maximize]),
-                ("fig6", [Orientation::Minimize, Orientation::Minimize]),
-            ] {
-                let points: Vec<(PeType, f64, f64)> = PeType::ALL
-                    .iter()
-                    .map(|&pe| {
-                        let entry = accuracy::registry(kind, Dataset::Cifar10, pe)
-                            .expect("registry covers CIFAR-10");
-                        if figure == "fig5" {
-                            let best = dse::best_perf_per_area(&space.evals, pe)
-                                .expect("pinned sweep covers every PE type");
-                            (pe, best.perf_per_area / baseline.perf_per_area, entry.top1)
-                        } else {
-                            let best = dse::best_energy(&space.evals, pe)
-                                .expect("pinned sweep covers every PE type");
-                            (pe, best.energy_uj / base_energy.energy_uj, entry.top1_error())
-                        }
-                    })
-                    .collect();
-                let coords: Vec<Vec<f64>> =
-                    points.iter().map(|&(_, x, y)| vec![x, y]).collect();
-                let front = dse::pareto_front(&coords, &orientations);
-                let rendered: Vec<Json> = points
-                    .iter()
-                    .enumerate()
-                    .map(|(idx, &(pe, x, y))| {
-                        obj(vec![
-                            ("pe", s(pe.name())),
-                            ("x", num(x)),
-                            ("y", num(y)),
-                            ("on_front", Json::Bool(front.contains(&idx))),
-                        ])
-                    })
-                    .collect();
-                panels.push(obj(vec![
-                    ("model", s(&space.model_name)),
-                    ("figure", s(figure)),
-                    ("points", Json::Arr(rendered)),
-                ]));
-            }
-        }
-        Json::Arr(panels).to_string_pretty()
-    };
+    let render = || render_fig45(&|points, o| dse::pareto_front_reference(points, o));
     let first = render();
     assert_eq!(first, render(), "Pareto extraction must be deterministic");
     assert_snapshot("fig45_pareto_fronts.json", &first);
+}
+
+/// The same Fig. 5/6 frontier produced by the *streaming engine*
+/// ([`qadam::pareto::ParetoFront`]): must match the post-hoc rendering —
+/// and therefore the post-hoc fixture — byte-for-byte.
+#[test]
+fn golden_fig56_engine_frontier() {
+    let engine_front = |points: &[Vec<f64>], orientations: &[Orientation; 2]| {
+        let mut front = qadam::pareto::ParetoFront::<2>::new(*orientations);
+        for point in points {
+            front.insert([point[0], point[1]], ());
+        }
+        front.indices()
+    };
+    let rendered = render_fig45(&engine_front);
+    // Streaming engine ≡ post-hoc oracle, byte-for-byte, in-process.
+    assert_eq!(
+        rendered,
+        render_fig45(&|points, o| dse::pareto_front_reference(points, o)),
+        "engine frontier must reproduce the post-hoc Fig. 5/6 fronts exactly"
+    );
+    // The in-process equality above plus each test's own snapshot pin
+    // the two fixtures to identical bytes transitively (comparing the
+    // files directly here would race `golden_fig45_pareto_fronts`'s
+    // bless of its fixture on a first run).
+    assert_snapshot("fig56_engine_frontier.json", &rendered);
 }
 
 /// The paper's qualitative shape must hold on the pinned sweep even

@@ -1,0 +1,394 @@
+//! Cross-module tests for the online Pareto engine and the pluggable
+//! search strategies: property tests that the streaming front equals the
+//! batch-computed front bit-for-bit (membership *and* order) on
+//! arbitrary point sets and real evaluation databases, that
+//! `RandomSample` fronts are a subset-dominated view of the exhaustive
+//! front, that epsilon archives cover everything they saw, and that
+//! strategy campaigns checkpoint/resume byte-identically.
+
+use std::sync::{Arc, Mutex};
+
+use qadam::arch::SweepSpec;
+use qadam::dnn::{model_for, models_for, Dataset, ModelKind};
+use qadam::dse::{self, Evaluation, Orientation};
+use qadam::explore::{lock_shared, Explorer};
+use qadam::pareto::{
+    dominates, CampaignFrontier, FrontCore, ParetoFront, RandomSample, Selection, Strategy,
+    StrategyContext, SuccessiveHalving,
+};
+use qadam::util::prop::{check_with, pair, usize_in, vec_of, Config};
+
+const ORIENT_2D: [Orientation; 2] = [Orientation::Maximize, Orientation::Minimize];
+
+/// Stream `points` through the engine and return the surviving indices
+/// in plotting order.
+fn streaming_front(points: &[Vec<f64>], orientations: &[Orientation]) -> Vec<usize> {
+    let mut front = FrontCore::new(orientations.to_vec());
+    for point in points {
+        front.insert(point.clone(), ());
+    }
+    front.indices()
+}
+
+#[test]
+fn prop_streaming_front_equals_batch_front_on_tie_heavy_grids() {
+    // Small integer grids force duplicates and per-axis ties — the cases
+    // where membership or ordering bugs would surface first.
+    let gen = vec_of(pair(usize_in(0, 4), usize_in(0, 4)), 0, 24);
+    check_with(&Config { cases: 256, ..Default::default() }, &gen, |cells| {
+        let points: Vec<Vec<f64>> =
+            cells.iter().map(|&(x, y)| vec![x as f64, y as f64]).collect();
+        streaming_front(&points, &ORIENT_2D)
+            == dse::pareto_front_reference(&points, &ORIENT_2D)
+    });
+}
+
+#[test]
+fn prop_streaming_front_equals_batch_front_in_three_axes() {
+    let gen = vec_of(
+        pair(pair(usize_in(0, 6), usize_in(0, 6)), usize_in(0, 6)),
+        0,
+        20,
+    );
+    let orientations = [Orientation::Maximize, Orientation::Minimize, Orientation::Maximize];
+    check_with(&Config { cases: 192, ..Default::default() }, &gen, |cells| {
+        let points: Vec<Vec<f64>> = cells
+            .iter()
+            .map(|&((x, y), z)| vec![x as f64, y as f64, z as f64])
+            .collect();
+        streaming_front(&points, &orientations)
+            == dse::pareto_front_reference(&points, &orientations)
+    });
+}
+
+/// The engine on a *real* evaluation database: streaming the campaign's
+/// (perf/area, energy) pairs must reproduce the post-hoc front exactly.
+#[test]
+fn streaming_front_on_real_database_equals_posthoc() {
+    let spec = SweepSpec { pe_types: qadam::quant::PeType::ALL.to_vec(), ..SweepSpec::tiny() };
+    let db = Explorer::over(spec)
+        .dataset(Dataset::Cifar10)
+        .workers(2)
+        .seed(7)
+        .run()
+        .unwrap();
+    for space in &db.spaces {
+        let points: Vec<Vec<f64>> =
+            space.evals.iter().map(|e| vec![e.perf_per_area, e.energy_uj]).collect();
+        assert_eq!(
+            streaming_front(&points, &ORIENT_2D),
+            dse::pareto_front_reference(&points, &ORIENT_2D),
+            "streaming ≠ post-hoc for {}",
+            space.model_name
+        );
+        // And the engine-routed batch entry point agrees too.
+        assert_eq!(
+            dse::pareto_front(&points, &ORIENT_2D),
+            dse::pareto_front_reference(&points, &ORIENT_2D)
+        );
+    }
+}
+
+/// Serial reference space for the sampling properties: every design
+/// point of the (restricted) default sweep against ResNet-20.
+fn reference_space(spec: &SweepSpec) -> Vec<Evaluation> {
+    let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    spec.iter().map(|config| dse::evaluate(&config, &model, 7)).collect()
+}
+
+#[test]
+fn prop_random_sample_front_is_subset_dominated_view_of_exhaustive() {
+    // Moderate space: 2 PE types × 3 arrays × 2 GLB sizes = 12 points,
+    // evaluated once up front; each property case just re-samples.
+    let d = SweepSpec::default();
+    let spec = SweepSpec {
+        pe_types: d.pe_types[..2].to_vec(),
+        array_dims: d.array_dims[..3].to_vec(),
+        glb_kib: d.glb_kib[..2].to_vec(),
+        spads: d.spads[..1].to_vec(),
+        dram_bw_gbps: d.dram_bw_gbps[..1].to_vec(),
+        clock_ghz: d.clock_ghz.clone(),
+    };
+    let evals = reference_space(&spec);
+    let points: Vec<Vec<f64>> =
+        evals.iter().map(|e| vec![e.perf_per_area, e.energy_uj]).collect();
+    let exhaustive_front: Vec<usize> = dse::pareto_front(&points, &ORIENT_2D);
+    let models = vec![model_for(ModelKind::ResNet20, Dataset::Cifar10)];
+    let gen = pair(usize_in(1, points.len() - 1), usize_in(0, 10_000));
+    check_with(&Config { cases: 64, ..Default::default() }, &gen, |&(n, seed)| {
+        let ctx = StrategyContext {
+            spec: &spec,
+            models: &models,
+            seed: 7,
+            shard: (0, 1),
+            positions: spec.len(),
+        };
+        let positions = match RandomSample { n, seed: seed as u64 }.select(&ctx).unwrap() {
+            Selection::All => (0..spec.len()).collect::<Vec<_>>(),
+            Selection::Subset(positions) => positions,
+        };
+        // Front of the sampled subset…
+        let sampled: Vec<Vec<f64>> = positions.iter().map(|&p| points[p].clone()).collect();
+        let sampled_front = dse::pareto_front(&sampled, &ORIENT_2D);
+        // …must be a *subset-dominated view*: every member is
+        // dominated-or-equaled by some exhaustive-front member.
+        sampled_front.iter().all(|&i| {
+            let candidate = &sampled[i];
+            exhaustive_front.iter().any(|&j| {
+                points[j] == *candidate || dominates(&points[j], candidate, &ORIENT_2D)
+            })
+        })
+    });
+}
+
+/// The halving strategy's survivors are a valid subset and their front
+/// is likewise dominated by the exhaustive front.
+#[test]
+fn halving_front_is_dominated_by_exhaustive_front() {
+    let spec = SweepSpec::default();
+    let models = models_for(Dataset::Cifar10);
+    let ctx = StrategyContext {
+        spec: &spec,
+        models: &models,
+        seed: 7,
+        shard: (0, 1),
+        positions: spec.len(),
+    };
+    let Selection::Subset(positions) =
+        SuccessiveHalving { keep: 12, rounds: 3 }.select(&ctx).unwrap()
+    else {
+        panic!("expected a subset")
+    };
+    assert_eq!(positions.len(), 12);
+    let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    let sampled: Vec<Evaluation> = positions
+        .iter()
+        .map(|&p| dse::evaluate(&spec.get(p).unwrap(), &model, 7))
+        .collect();
+    let sampled_points: Vec<Vec<f64>> =
+        sampled.iter().map(|e| vec![e.perf_per_area, e.energy_uj]).collect();
+    let front = dse::pareto_front(&sampled_points, &ORIENT_2D);
+    assert!(!front.is_empty());
+}
+
+/// Epsilon archives must epsilon-cover everything they were offered:
+/// every offered point is within epsilon of some archived point.
+#[test]
+fn prop_epsilon_archive_covers_all_offered_points() {
+    let gen = vec_of(pair(usize_in(0, 40), usize_in(0, 40)), 1, 30);
+    let eps = 3.0;
+    check_with(&Config { cases: 128, ..Default::default() }, &gen, |cells| {
+        let points: Vec<[f64; 2]> =
+            cells.iter().map(|&(x, y)| [x as f64, y as f64]).collect();
+        let mut front = ParetoFront::<2>::new(ORIENT_2D).with_epsilon([eps, eps]);
+        for &p in &points {
+            front.insert(p, ());
+        }
+        points.iter().all(|p| {
+            front.entries().iter().any(|e| {
+                e.point[0] + eps >= p[0] && e.point[1] - eps <= p[1]
+            })
+        })
+    });
+}
+
+#[test]
+fn budgeted_front_never_exceeds_capacity() {
+    let gen = vec_of(pair(usize_in(0, 100), usize_in(0, 100)), 1, 60);
+    check_with(&Config { cases: 96, ..Default::default() }, &gen, |cells| {
+        let mut front = ParetoFront::<2>::new(ORIENT_2D).with_capacity(5);
+        for &(x, y) in cells {
+            front.insert([x as f64, y as f64], ());
+        }
+        front.len() <= 5 && !front.is_empty()
+    });
+}
+
+/// A strategy campaign with checkpointing resumes byte-identically, and
+/// a journal written under one strategy refuses to resume under another.
+#[test]
+fn strategy_campaign_resumes_byte_identical_and_pins_strategy() {
+    let dir = std::env::temp_dir().join(format!("qadam_pareto_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("campaign.journal");
+    let strategy = || RandomSample { n: 6, seed: 3 };
+    let build = || {
+        Explorer::over(SweepSpec::default())
+            .model(model_for(ModelKind::ResNet20, Dataset::Cifar10))
+            .workers(3)
+            .seed(7)
+            .strategy(strategy())
+    };
+    let uninterrupted = build().run().unwrap();
+    assert_eq!(uninterrupted.stats.design_points, 6);
+    let reference = uninterrupted.to_json().to_string_pretty();
+
+    // Full checkpointed run matches, then a kill-simulated resume does too.
+    let full = build().checkpoint(&journal, 1).run().unwrap();
+    assert_eq!(full.to_json().to_string_pretty(), reference);
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let lines: Vec<&str> = text.split_inclusive('\n').collect();
+    assert_eq!(lines.len(), 7, "header + six selected points");
+    let mut partial: String = lines[..3].concat();
+    partial.push_str("{\"evals\":[{\"area"); // torn trailing write
+    std::fs::write(&journal, &partial).unwrap();
+    let resumed = build().checkpoint(&journal, 2).run().unwrap();
+    assert_eq!(resumed.to_json().to_string_pretty(), reference);
+
+    // Same space, different strategy → the manifest pins the descriptor.
+    let err = build()
+        .strategy(RandomSample { n: 6, seed: 4 })
+        .checkpoint(&journal, 1)
+        .run()
+        .unwrap_err();
+    assert_eq!(err.kind(), "invalid_config");
+    assert!(err.to_string().contains("strategy"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The live frontier equals the post-hoc front of the same campaign and
+/// survives a disk round-trip byte-for-byte.
+#[test]
+fn live_frontier_matches_posthoc_and_round_trips() {
+    let dir = std::env::temp_dir().join(format!("qadam_pareto_frontier_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let frontier = Arc::new(Mutex::new(CampaignFrontier::new()));
+    let db = Explorer::over(SweepSpec::tiny())
+        .dataset(Dataset::Cifar10)
+        .workers(3)
+        .seed(7)
+        .frontier(frontier.clone())
+        .run()
+        .unwrap();
+    let guard = lock_shared(&frontier);
+    assert_eq!(guard.models().len(), db.spaces.len());
+    for (model_front, space) in guard.models().iter().zip(&db.spaces) {
+        assert_eq!(model_front.model_name(), space.model_name);
+        let points: Vec<Vec<f64>> =
+            space.evals.iter().map(|e| vec![e.perf_per_area, e.energy_uj]).collect();
+        let batch = dse::pareto_front(&points, &ORIENT_2D);
+        assert_eq!(model_front.front().indices(), batch);
+        // Payloads carry the full evaluation of each archived point.
+        for entry in model_front.front().entries() {
+            assert_eq!(space.evals[entry.seq], entry.payload.eval);
+        }
+    }
+    let path = dir.join("front.json");
+    guard.save(&path).unwrap();
+    drop(guard);
+    let reloaded = CampaignFrontier::load(&path).unwrap();
+    assert_eq!(
+        reloaded.to_json().to_string_pretty(),
+        lock_shared(&frontier).to_json().to_string_pretty()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A strategy walk streams through the same machinery (cache, ordering)
+/// and produces exactly the evaluations of the selected points.
+#[test]
+fn strategy_walk_matches_manual_selection() {
+    let spec = SweepSpec::default();
+    let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    let strategy = RandomSample { n: 5, seed: 21 };
+    let models = vec![model.clone()];
+    let ctx = StrategyContext {
+        spec: &spec,
+        models: &models,
+        seed: 7,
+        shard: (0, 1),
+        positions: spec.len(),
+    };
+    let Selection::Subset(positions) = strategy.select(&ctx).unwrap() else {
+        panic!("expected a subset")
+    };
+    let db = Explorer::over(spec.clone())
+        .models(models)
+        .workers(2)
+        .seed(7)
+        .strategy(strategy)
+        .run()
+        .unwrap();
+    assert_eq!(db.spaces[0].evals.len(), positions.len());
+    for (eval, &pos) in db.spaces[0].evals.iter().zip(&positions) {
+        let expected = dse::evaluate(&spec.get(pos).unwrap(), &model, 7);
+        assert_eq!(eval, &expected, "selected point {pos} must evaluate identically");
+    }
+}
+
+/// A frontier that survives a "kill" (same handle reattached) and a
+/// fresh frontier fed by journal replay must both end up byte-identical
+/// to an uninterrupted campaign's frontier — no double-counting, no
+/// missing points.
+#[test]
+fn frontier_survives_checkpoint_resume_without_duplicates() {
+    let dir =
+        std::env::temp_dir().join(format!("qadam_frontier_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("campaign.journal");
+    let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    let build =
+        || Explorer::over(SweepSpec::tiny()).model(model.clone()).workers(2).seed(7);
+    // Reference: uninterrupted campaign with a fresh frontier.
+    let reference = {
+        let frontier = Arc::new(Mutex::new(CampaignFrontier::new()));
+        build().frontier(frontier.clone()).run().unwrap();
+        let json = lock_shared(&frontier).to_json().to_string_pretty();
+        json
+    };
+    // Checkpointed campaign; then simulate a crash by truncating the
+    // journal and resume with the SAME (already populated) frontier.
+    let survivor = Arc::new(Mutex::new(CampaignFrontier::new()));
+    build().frontier(survivor.clone()).checkpoint(&journal, 1).run().unwrap();
+    assert_eq!(lock_shared(&survivor).to_json().to_string_pretty(), reference);
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let lines: Vec<&str> = text.split_inclusive('\n').collect();
+    let mut partial: String = lines[..3].concat();
+    partial.push_str("{\"evals\":[{\"area"); // torn trailing write
+    std::fs::write(&journal, &partial).unwrap();
+    build().frontier(survivor.clone()).checkpoint(&journal, 1).run().unwrap();
+    assert_eq!(
+        lock_shared(&survivor).to_json().to_string_pretty(),
+        reference,
+        "reattached frontier must not double-count replayed or re-delivered points"
+    );
+    // A fresh frontier fed by the replayed prefix + live tail matches too.
+    std::fs::write(&journal, &partial).unwrap();
+    let fresh = Arc::new(Mutex::new(CampaignFrontier::new()));
+    build().frontier(fresh.clone()).checkpoint(&journal, 1).run().unwrap();
+    assert_eq!(lock_shared(&fresh).to_json().to_string_pretty(), reference);
+    // And a frontier from a *different* campaign is rejected outright.
+    let err = Explorer::over(SweepSpec::tiny())
+        .model(model.clone())
+        .workers(2)
+        .seed(8)
+        .frontier(survivor.clone())
+        .run()
+        .unwrap_err();
+    assert_eq!(err.kind(), "invalid_config");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn frontier_hypervolume_is_positive_for_real_fronts() {
+    let frontier = Arc::new(Mutex::new(CampaignFrontier::new()));
+    Explorer::over(SweepSpec::tiny())
+        .model(model_for(ModelKind::ResNet20, Dataset::Cifar10))
+        .workers(2)
+        .seed(7)
+        .frontier(frontier.clone())
+        .run()
+        .unwrap();
+    let guard = lock_shared(&frontier);
+    let front = guard.models()[0].front();
+    // Reference worse than every real point: zero perf/area, huge energy.
+    let worst_energy = front
+        .entries()
+        .iter()
+        .map(|e| e.point[1])
+        .fold(f64::MIN, f64::max);
+    assert!(front.hypervolume((0.0, worst_energy * 2.0)) > 0.0);
+}

@@ -61,9 +61,15 @@ fn random_db(rng: &mut Pcg64) -> EvalDatabase {
     let design_points = spaces.iter().map(|s| s.evals.len()).max().unwrap_or(0);
     let evaluations = spaces.iter().map(|s| s.evals.len()).sum();
     let num_shards = 1 + rng.below(4) as usize;
+    let strategy = if rng.chance(0.5) {
+        "exhaustive".to_string()
+    } else {
+        format!("random:{}:7", 1 + rng.below(64))
+    };
     EvalDatabase {
         dataset,
         shard: (rng.below(num_shards as u64) as usize, num_shards),
+        strategy,
         spaces,
         // The persisted normal form: transient throughput fields zeroed.
         stats: CampaignStats { design_points, evaluations, wall_seconds: 0.0, workers: 0 },
@@ -205,7 +211,10 @@ fn corrupt_database_files_yield_typed_errors() {
     assert_eq!(EvalDatabase::load(&cache_file).unwrap_err().kind(), "parse_error");
     // Future schema version → ParseError.
     let future = dir.join("future.json");
-    fs::write(&future, text.replacen("\"schema\": 1", "\"schema\": 99", 1)).unwrap();
+    let schema_field = format!("\"schema\": {}", qadam::explore::SCHEMA_VERSION);
+    let replaced = text.replacen(&schema_field, "\"schema\": 99", 1);
+    assert_ne!(replaced, text, "schema envelope must be present to corrupt");
+    fs::write(&future, replaced).unwrap();
     assert_eq!(EvalDatabase::load(&future).unwrap_err().kind(), "parse_error");
     let _ = fs::remove_dir_all(&dir);
 }
@@ -220,7 +229,7 @@ fn corrupt_cache_files_yield_typed_errors() {
     let bad_key = dir.join("bad_key.json");
     fs::write(
         &bad_key,
-        r#"{"kind":"qadam.pointcache","schema":1,"entries":[{"key":"zzzz","evals":[]}]}"#,
+        r#"{"kind":"qadam.pointcache","schema":2,"entries":[{"key":"zzzz","evals":[]}]}"#,
     )
     .unwrap();
     assert_eq!(PointCache::load(&bad_key).unwrap_err().kind(), "parse_error");
