@@ -1,0 +1,57 @@
+//! Spec-driven campaigns end-to-end: compile a QSL file, inspect the
+//! resolved campaign, execute it, and show the canonical-form /
+//! fingerprint machinery that makes spec-driven runs reproducible and
+//! resume-safe.
+//!
+//! Run: `cargo run --release --example spec_campaign`
+
+use qadam::spec;
+
+/// The shipped custom-model example spec, compiled from source so this
+/// example runs from any working directory.
+const SOURCE: &str = include_str!("custom_model.qsl");
+
+fn main() -> qadam::Result<()> {
+    // Compile: lex + parse + semantic check + lowering, all diagnostics
+    // at once on failure.
+    let campaign = spec::compile(SOURCE, "custom_model.qsl")?;
+    println!("=== resolved campaign ===");
+    print!("{}", campaign.summary());
+
+    // The canonical form is the spec with every default spelled out —
+    // comment-free, deterministic, and a fixed point of parse→render.
+    let canonical = campaign.canonical();
+    let reparsed = spec::compile(&canonical, "canonical.qsl")?;
+    assert_eq!(reparsed.canonical(), canonical);
+    assert_eq!(reparsed.fingerprint(), campaign.fingerprint());
+    println!("\ncanonical form: {} bytes, fingerprint {:016x}", canonical.len(), campaign.fingerprint());
+
+    // A broken spec reports *all* its problems, with spans and
+    // suggestions — not just the first.
+    let broken = "sweep {\n  pe_typ = [int16]\n}\nworkload {\n  models = [resnet21]\n}\n";
+    let (_, diags) = spec::check(broken);
+    println!("\n=== diagnostics for a broken spec ===");
+    print!("{}", diags.render(broken, "broken.qsl"));
+
+    // Execute (dropping persistence so the example leaves no files):
+    // custom models evaluate exactly like zoo models.
+    let mut campaign = campaign;
+    campaign.persist = spec::PersistPlan::new();
+    let outcome = campaign.execute()?;
+    println!("=== results ===");
+    println!(
+        "{} design points x {} models in {:.2}s",
+        outcome.db.stats.design_points,
+        outcome.db.spaces.len(),
+        outcome.db.stats.wall_seconds
+    );
+    for space in &outcome.db.spaces {
+        let best = space
+            .evals
+            .iter()
+            .map(|e| e.perf_per_area)
+            .fold(f64::NEG_INFINITY, f64::max);
+        println!("  {:<10} best perf/area {best:.3}", space.model_name);
+    }
+    Ok(())
+}

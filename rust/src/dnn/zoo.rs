@@ -24,6 +24,10 @@ impl Dataset {
     /// All datasets in the paper's order.
     pub const ALL: [Dataset; 3] = [Dataset::Cifar10, Dataset::Cifar100, Dataset::ImageNet];
 
+    /// Canonical user-facing keys, in [`Self::ALL`] order — the single
+    /// source for CLI "valid names" errors and QSL suggestions.
+    pub const KEYS: [&'static str; 3] = ["cifar10", "cifar100", "imagenet"];
+
     /// Display name.
     pub fn name(self) -> &'static str {
         match self {
@@ -43,6 +47,23 @@ impl Dataset {
             "imagenet" => Some(Dataset::ImageNet),
             _ => None,
         }
+    }
+
+    /// [`Self::parse`] for user-input boundaries (CLI flags, spec
+    /// files): failures return
+    /// [`Error::InvalidConfig`](crate::Error::InvalidConfig) listing the
+    /// valid names and, when the input looks like a typo, the nearest
+    /// match — instead of a bare generic message.
+    pub fn parse_strict(text: &str) -> crate::error::Result<Dataset> {
+        Self::parse(text).ok_or_else(|| {
+            let hint = crate::util::text::did_you_mean(text, Self::KEYS)
+                .map(|s| format!(" (did you mean '{s}'?)"))
+                .unwrap_or_default();
+            crate::error::Error::InvalidConfig(format!(
+                "unknown dataset '{text}'; valid datasets: {}{hint}",
+                crate::util::text::name_list(Self::KEYS)
+            ))
+        })
     }
 
     /// Input resolution (height = width).
@@ -97,6 +118,11 @@ pub enum ModelKind {
 }
 
 impl ModelKind {
+    /// Canonical user-facing keys (VGG first, ResNets by depth) — the
+    /// single source for CLI "valid names" errors and QSL suggestions.
+    pub const KEYS: [&'static str; 5] =
+        ["vgg16", "resnet20", "resnet34", "resnet50", "resnet56"];
+
     /// Display name matching the paper.
     pub fn name(self) -> &'static str {
         match self {
@@ -120,6 +146,23 @@ impl ModelKind {
             "resnet56" => Some(ModelKind::ResNet56),
             _ => None,
         }
+    }
+
+    /// [`Self::parse`] for user-input boundaries (CLI flags, spec
+    /// files): failures return
+    /// [`Error::InvalidConfig`](crate::Error::InvalidConfig) listing the
+    /// valid names and, when the input looks like a typo, the nearest
+    /// match.
+    pub fn parse_strict(text: &str) -> crate::error::Result<ModelKind> {
+        Self::parse(text).ok_or_else(|| {
+            let hint = crate::util::text::did_you_mean(text, Self::KEYS)
+                .map(|s| format!(" (did you mean '{s}'?)"))
+                .unwrap_or_default();
+            crate::error::Error::InvalidConfig(format!(
+                "unknown model '{text}'; valid models: {}{hint}",
+                crate::util::text::name_list(Self::KEYS)
+            ))
+        })
     }
 }
 
@@ -280,6 +323,25 @@ mod tests {
         assert_eq!(Dataset::Cifar100.classes(), 100);
         assert_eq!(Dataset::ImageNet.input_hw(), 224);
         assert_eq!(Dataset::parse("CIFAR-10"), Some(Dataset::Cifar10));
+    }
+
+    #[test]
+    fn strict_parses_list_names_and_suggest() {
+        assert_eq!(Dataset::parse_strict("imagenet").unwrap(), Dataset::ImageNet);
+        let err = Dataset::parse_strict("cifar11").unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        let text = err.to_string();
+        assert!(text.contains("cifar10, cifar100, imagenet"), "{text}");
+        assert!(text.contains("did you mean 'cifar10'?"), "{text}");
+        let err = Dataset::parse_strict("mnist").unwrap_err();
+        assert!(!err.to_string().contains("did you mean"), "{err}");
+
+        assert_eq!(ModelKind::parse_strict("ResNet-20").unwrap(), ModelKind::ResNet20);
+        let err = ModelKind::parse_strict("resnet21").unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        let text = err.to_string();
+        assert!(text.contains("vgg16, resnet20"), "{text}");
+        assert!(text.contains("did you mean 'resnet20'?"), "{text}");
     }
 
     #[test]

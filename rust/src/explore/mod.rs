@@ -94,6 +94,7 @@ pub struct Explorer {
     checkpoint: Option<(PathBuf, usize)>,
     strategy: Option<Arc<dyn Strategy>>,
     frontier: Option<Arc<Mutex<CampaignFrontier>>>,
+    campaign_fp: Option<u64>,
 }
 
 impl Explorer {
@@ -112,6 +113,7 @@ impl Explorer {
             checkpoint: None,
             strategy: None,
             frontier: None,
+            campaign_fp: None,
         }
     }
 
@@ -208,6 +210,21 @@ impl Explorer {
         self
     }
 
+    /// Pin a campaign-spec fingerprint (FNV-1a of the QSL canonical
+    /// identity — see
+    /// [`ResolvedCampaign::fingerprint`](crate::spec::ResolvedCampaign::fingerprint))
+    /// into this campaign's checkpoint-journal manifest. Resuming a
+    /// journal whose fingerprint differs — the spec was edited, or one
+    /// side ran without a spec — is rejected with
+    /// [`Error::InvalidConfig`]. Campaigns built through
+    /// [`crate::spec::ResolvedCampaign`] (both `qadam run` and
+    /// `qadam dse`) always set this; direct `Explorer` users may not,
+    /// and two fingerprint-less campaigns resume freely as before.
+    pub fn campaign_fingerprint(mut self, fingerprint: u64) -> Self {
+        self.campaign_fp = Some(fingerprint);
+        self
+    }
+
     fn validate(&self) -> Result<()> {
         if self.spec.is_empty() {
             return Err(Error::InvalidConfig("sweep spec has an empty axis".into()));
@@ -294,6 +311,7 @@ impl Explorer {
             dataset: self.dataset.unwrap_or(self.models[0].dataset).name().to_string(),
             models: self.models.iter().map(|m| m.name.clone()).collect(),
             strategy: self.strategy_descriptor(),
+            campaign_fp: self.campaign_fp,
         }
     }
 

@@ -53,8 +53,11 @@ use crate::util::Fnv64;
 /// reject other versions with [`Error::ParseError`] rather than
 /// guessing. History: v1 — initial persistence layer; v2 — checkpoint
 /// manifests pin the campaign's search strategy and the streaming
-/// frontier document (`qadam.frontier`) joined the family.
-pub const SCHEMA_VERSION: usize = 2;
+/// frontier document (`qadam.frontier`) joined the family; v3 —
+/// checkpoint manifests optionally pin the QSL campaign-spec
+/// fingerprint (`campaign_fp`), so resuming under an edited spec is
+/// rejected.
+pub const SCHEMA_VERSION: usize = 3;
 
 // ---------------------------------------------------------------------------
 // Field access helpers (typed errors instead of panics). Crate-visible:
@@ -493,6 +496,15 @@ pub struct CampaignManifest {
     /// Resuming under a different strategy would replay points the new
     /// selection never visits, so mismatches are rejected.
     pub strategy: String,
+    /// Fingerprint of the campaign's QSL canonical identity
+    /// ([`Explorer::campaign_fingerprint`](super::Explorer::campaign_fingerprint)),
+    /// when the campaign was built from a spec or through the shared
+    /// [`ResolvedCampaign`](crate::spec::ResolvedCampaign) path. `None`
+    /// for direct `Explorer` campaigns. Any difference — including
+    /// present-vs-absent — rejects the resume: an edited spec may
+    /// change inputs (custom model shapes) that no other manifest
+    /// field sees.
+    pub campaign_fp: Option<u64>,
 }
 
 impl CampaignManifest {
@@ -507,6 +519,9 @@ impl CampaignManifest {
         fields.push(("dataset", s(&self.dataset)));
         fields.push(("models", Json::Arr(self.models.iter().map(|m| s(m)).collect())));
         fields.push(("strategy", s(&self.strategy)));
+        if let Some(fp) = self.campaign_fp {
+            fields.push(("campaign_fp", s(&hex(fp))));
+        }
         obj(fields)
     }
 
@@ -529,6 +544,10 @@ impl CampaignManifest {
                 })
                 .collect::<Result<_>>()?,
             strategy: field_str(json, "strategy")?.to_string(),
+            campaign_fp: match json.get("campaign_fp") {
+                None => None,
+                Some(_) => Some(field_u64_hex(json, "campaign_fp")?),
+            },
         })
     }
 
@@ -573,6 +592,30 @@ impl CampaignManifest {
         }
         if journal.strategy != self.strategy {
             return mismatch("search strategy", journal.strategy.clone(), self.strategy.clone());
+        }
+        if journal.campaign_fp != self.campaign_fp {
+            let render = |fp: Option<u64>| fp.map_or_else(|| "none".to_string(), hex);
+            let hint = match (journal.campaign_fp, self.campaign_fp) {
+                (Some(_), Some(_)) => {
+                    "the spec was edited since the journal was written; restore the spec or \
+                     start a fresh journal"
+                }
+                (None, Some(_)) => {
+                    "the journal was written without a spec fingerprint (direct Explorer API); \
+                     resume it the same way, or start a fresh journal"
+                }
+                (Some(_), None) => {
+                    "the journal pins a spec fingerprint but this campaign has none (direct \
+                     Explorer API); resume via `qadam run`/`qadam dse`, or start a fresh journal"
+                }
+                (None, None) => unreachable!("equal fingerprints never mismatch"),
+            };
+            return Err(Error::InvalidConfig(format!(
+                "checkpoint journal campaign-spec fingerprint differs (journal: {}, this \
+                 campaign: {}) — {hint}",
+                render(journal.campaign_fp),
+                render(self.campaign_fp)
+            )));
         }
         Ok(())
     }
@@ -836,6 +879,7 @@ mod tests {
             dataset: "CIFAR-10".into(),
             models: vec!["VGG-16".into(), "ResNet-20".into()],
             strategy: "random:12:9".into(),
+            campaign_fp: Some(0x0123_4567_89ab_cdef),
         };
         let parsed = CampaignManifest::from_json(&manifest.to_json()).unwrap();
         assert_eq!(parsed, manifest);
@@ -849,6 +893,26 @@ mod tests {
         let err = manifest.ensure_matches(&other).unwrap_err();
         assert_eq!(err.kind(), "invalid_config");
         assert!(err.to_string().contains("strategy"));
+        // A fingerprint-less manifest round-trips without the field, and
+        // any fingerprint difference (including present-vs-absent, i.e.
+        // an edited or removed spec) rejects the resume.
+        let mut bare = manifest.clone();
+        bare.campaign_fp = None;
+        let parsed = CampaignManifest::from_json(&bare.to_json()).unwrap();
+        assert_eq!(parsed, bare);
+        for (ours, theirs) in [
+            (manifest.clone(), bare.clone()),
+            (bare.clone(), manifest.clone()),
+            (manifest.clone(), {
+                let mut edited = manifest.clone();
+                edited.campaign_fp = Some(1);
+                edited
+            }),
+        ] {
+            let err = ours.ensure_matches(&theirs).unwrap_err();
+            assert_eq!(err.kind(), "invalid_config");
+            assert!(err.to_string().contains("spec"), "{err}");
+        }
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //! typed [`Error`]. Pareto fronts are maintained incrementally by
 //! [`pareto::ParetoFront`] as points stream out of a campaign, and
 //! non-exhaustive [`pareto::Strategy`] walks make million-point spaces
-//! tractable.
+//! tractable. Whole campaigns — space, strategy, workload (including
+//! user-defined models), persistence — are declarable as data in QSL
+//! spec files ([`spec`]): `qadam run campaign.qsl`.
 //!
 //! See `DESIGN.md` for the module inventory and the per-experiment index.
 
@@ -40,6 +42,7 @@ pub mod dse;
 pub mod pareto;
 pub mod accuracy;
 pub mod explore;
+pub mod spec;
 pub mod coordinator;
 pub mod runtime;
 pub mod report;

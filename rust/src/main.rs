@@ -3,11 +3,13 @@
 //! Subcommands map one-to-one onto the paper's workflow (Fig. 1): feed
 //! accelerator parameters + DNN configurations, get PPA results, DSE
 //! scatter data, Pareto fronts, generated RTL, simulation traces, and the
-//! QAT training driver. Every campaign runs through the unified
-//! [`Explorer`] API; failures surface as typed [`qadam::Error`]s.
+//! QAT training driver. Campaigns — whether flag-driven (`dse`) or
+//! spec-driven (`run`, QSL) — lower to one shared
+//! [`ResolvedCampaign`] pipeline over the unified
+//! [`Explorer`](qadam::explore::Explorer) API; failures surface as
+//! typed [`qadam::Error`]s.
 
 use std::path::Path;
-use std::sync::{Arc, Mutex};
 
 use qadam::arch::{AcceleratorConfig, SweepSpec};
 use qadam::coordinator::default_workers;
@@ -15,16 +17,18 @@ use qadam::dataflow::{map_model, Dataflow};
 use qadam::dnn::{model_for, Dataset, ModelKind};
 use qadam::dse;
 use qadam::energy::energy_of;
-use qadam::explore::{EvalDatabase, Explorer, PointCache};
-use qadam::pareto::{CampaignFrontier, RandomSample, SuccessiveHalving};
+use qadam::explore::{EvalDatabase, PointCache};
 use qadam::ppa::PpaModel;
 use qadam::quant::PeType;
 use qadam::report;
 use qadam::rtl;
 use qadam::runtime::{QatDriver, Runtime};
 use qadam::sim;
+use qadam::spec::{
+    self, CampaignOutcome, PersistPlan, ResolvedCampaign, StrategyChoice, WorkloadModel,
+};
 use qadam::synth;
-use qadam::util::cli::Command;
+use qadam::util::cli::{Command, Matches};
 use qadam::util::log::{self, Level};
 use qadam::util::rng::Pcg64;
 use qadam::util::table::{format_sig, Table};
@@ -64,6 +68,24 @@ fn cli() -> Command {
                 .opt("resume", "", "checkpoint journal path (resumes if present)")
                 .opt("every", "16", "flush the checkpoint journal every N points")
                 .opt("cache", "", "content-addressed point-cache file (reused & updated)"),
+        )
+        .sub(
+            Command::new("run", "execute a QSL campaign spec (see 'qadam spec init')")
+                .opt("save", "", "provide persist.db when the spec omits it")
+                .opt("cache", "", "provide persist.cache when the spec omits it")
+                .opt("resume", "", "provide persist.checkpoint when the spec omits it")
+                .opt("every", "16", "provide persist.every when the spec omits it")
+                .opt("frontier", "", "provide persist.frontier when the spec omits it"),
+        )
+        .sub(Command::new(
+            "validate",
+            "parse + semantically check a QSL spec; print the resolved campaign",
+        ))
+        .sub(
+            Command::new("spec", "QSL spec-file utilities").sub(
+                Command::new("init", "emit a commented starter spec")
+                    .opt("out", "", "write to this file (default: stdout)"),
+            ),
         )
         .sub(
             Command::new("cache", "inspect or clear a point-cache file")
@@ -107,10 +129,6 @@ fn parse_pe(text: &str) -> Result<PeType> {
     PeType::parse(text).ok_or_else(|| Error::ParseError(format!("bad --pe '{text}'")))
 }
 
-fn parse_dataset(text: &str) -> Result<Dataset> {
-    Dataset::parse(text).ok_or_else(|| Error::ParseError(format!("bad --dataset '{text}'")))
-}
-
 /// Parse an `I/N` shard designator ("2/8" = shard 2 of 8).
 fn parse_shard(text: &str) -> Result<(usize, usize)> {
     let bad = || Error::ParseError(format!("bad --shard '{text}' (expected I/N, e.g. 0/4)"));
@@ -121,58 +139,6 @@ fn parse_shard(text: &str) -> Result<(usize, usize)> {
         return Err(bad());
     }
     Ok((shard, num_shards))
-}
-
-/// Parse a `--strategy` descriptor and attach it to the explorer:
-/// `exhaustive`, `random:N[:SEED]` (SEED defaults to the campaign seed),
-/// or `halving:KEEP[:ROUNDS]` (ROUNDS defaults to 3).
-fn apply_strategy(explorer: Explorer, text: &str, campaign_seed: u64) -> Result<Explorer> {
-    let bad = |detail: &str| {
-        Error::ParseError(format!(
-            "bad --strategy '{text}' ({detail}; expected exhaustive, random:N[:SEED], \
-             or halving:KEEP[:ROUNDS])"
-        ))
-    };
-    let mut parts = text.split(':');
-    let kind = parts.next().unwrap_or("");
-    let arg1 = parts.next();
-    let arg2 = parts.next();
-    if parts.next().is_some() {
-        return Err(bad("too many parameters"));
-    }
-    let parse_num = |value: Option<&str>, name: &str| -> Result<Option<u64>> {
-        match value {
-            None => Ok(None),
-            Some(v) => v
-                .trim()
-                .parse::<u64>()
-                .map(Some)
-                .map_err(|_| bad(&format!("{name} is not an integer"))),
-        }
-    };
-    match kind {
-        "exhaustive" => {
-            if arg1.is_some() {
-                return Err(bad("exhaustive takes no parameters"));
-            }
-            // No strategy attached: the explorer's default walk *is*
-            // exhaustive, and leaving it unset keeps `run()`'s eval-vector
-            // pre-sizing (the manifest descriptor is "exhaustive" either
-            // way, so journals are interchangeable).
-            Ok(explorer)
-        }
-        "random" => {
-            let n = parse_num(arg1, "N")?.ok_or_else(|| bad("random needs N"))? as usize;
-            let seed = parse_num(arg2, "SEED")?.unwrap_or(campaign_seed);
-            Ok(explorer.strategy(RandomSample { n, seed }))
-        }
-        "halving" => {
-            let keep = parse_num(arg1, "KEEP")?.ok_or_else(|| bad("halving needs KEEP"))? as usize;
-            let rounds = parse_num(arg2, "ROUNDS")?.unwrap_or(3) as usize;
-            Ok(explorer.strategy(SuccessiveHalving { keep, rounds }))
-        }
-        _ => Err(bad("unknown strategy")),
-    }
 }
 
 /// Per-model best raw perf/area by PE type — the summary for databases
@@ -187,6 +153,173 @@ fn print_raw_bests(db: &EvalDatabase) {
         }
         println!();
     }
+}
+
+/// Summarize a database: normalized headline ratios + hypervolumes for
+/// whole-space campaigns, raw bests otherwise. Shared by `dse` (live and
+/// `--load`) and `run`.
+fn summarize_db(db: &EvalDatabase) -> Result<()> {
+    // The database records its own coverage (shard + strategy), so a
+    // loaded partial database is summarized exactly like a live partial
+    // run.
+    if !db.is_whole_space() {
+        // A shard or a strategy-sampled subset sees only part of the
+        // space, so its local best INT16 is not the campaign baseline;
+        // normalized summaries would be silently wrong. Report raw bests
+        // instead.
+        if db.shard.1 > 1 {
+            println!("  (shard output: normalize after merging all shards)");
+        } else {
+            println!(
+                "  (sampled by strategy '{}': raw bests only; rerun exhaustively to normalize)",
+                db.strategy
+            );
+        }
+        print_raw_bests(db);
+        return Ok(());
+    }
+    match db.headline_geomean() {
+        Ok(headline) => {
+            for (pe, ppa, energy) in headline {
+                println!(
+                    "  {:<10} {}x perf/area, {}x less energy vs best INT16",
+                    pe.name(),
+                    format_sig(ppa, 3),
+                    format_sig(energy, 3)
+                );
+            }
+            // Quantified Pareto quality per model: hypervolume of each PE
+            // type's normalized (perf/area ↑, energy ↓) cloud.
+            for space in &db.spaces {
+                let normalized = dse::normalize(&space.evals)?;
+                print!("  {:<10} hypervolume:", space.model_name);
+                for pe in PeType::ALL {
+                    let points: Vec<(f64, f64)> = normalized
+                        .iter()
+                        .filter(|p| p.pe == pe)
+                        .map(|p| (p.norm_perf_per_area, p.norm_energy))
+                        .collect();
+                    let hv = dse::hypervolume_2d(
+                        &points,
+                        (0.0, 10.0),
+                        (dse::Orientation::Maximize, dse::Orientation::Minimize),
+                    );
+                    print!(" {}={}", pe.name(), format_sig(hv, 3));
+                }
+                println!();
+            }
+            Ok(())
+        }
+        // A custom sweep may legitimately contain no INT16 points; report
+        // raw bests instead of failing the whole (already completed)
+        // campaign.
+        Err(Error::MissingBaseline(_)) => {
+            println!("  (explored space has no INT16 baseline: reporting raw bests)");
+            print_raw_bests(db);
+            Ok(())
+        }
+        Err(err) => Err(err),
+    }
+}
+
+/// Print an executed campaign the way `qadam dse` always has: stats
+/// line, cache/frontier lines, database summary, save confirmation.
+fn print_campaign_outcome(outcome: &CampaignOutcome) -> Result<()> {
+    let db = &outcome.db;
+    println!(
+        "{} design points x {} models in {:.2}s ({:.0} evals/s, {} workers)",
+        db.stats.design_points,
+        db.spaces.len(),
+        db.stats.wall_seconds,
+        db.stats.evals_per_sec(),
+        db.stats.workers
+    );
+    if let Some(cache) = &outcome.cache {
+        println!(
+            "cache: {} design points ({} hits / {} misses this run), saved to {}",
+            cache.entries,
+            cache.hits,
+            cache.misses,
+            cache.path.display()
+        );
+    }
+    if let Some(frontier) = &outcome.frontier {
+        print!("frontier: saved to {} —", frontier.path.display());
+        for (name, points) in &frontier.per_model {
+            print!(" {name}: {points} points");
+        }
+        println!();
+    }
+    summarize_db(db)?;
+    if let Some(path) = &outcome.saved_db {
+        println!("saved evaluation database to {}", path.display());
+    }
+    Ok(())
+}
+
+/// Merge `qadam run` flags into a spec-built campaign. Flags may supply
+/// fields the spec omits; a flag that contradicts a field the spec sets
+/// explicitly is rejected with [`Error::InvalidConfig`] — the spec is
+/// the source of truth for anything it pins.
+fn merge_flag_overrides(campaign: &mut ResolvedCampaign, matches: &Matches) -> Result<()> {
+    let conflict = |flag: &str, spec_key: &str| {
+        Error::InvalidConfig(format!(
+            "--{flag} conflicts with the spec's {spec_key}; drop the flag or edit the spec"
+        ))
+    };
+    if matches.was_set("seed") {
+        if campaign.sets("seed") {
+            return Err(conflict("seed", "campaign.seed"));
+        }
+        campaign.seed = matches.get_usize("seed") as u64;
+        // An unseeded random() pins the campaign seed (matching
+        // `--strategy random:N`), so it follows the override.
+        if let StrategyChoice::Random { n, .. } = campaign.strategy {
+            if !campaign.sets("strategy.seed") {
+                campaign.strategy = StrategyChoice::Random { n, seed: campaign.seed };
+            }
+        }
+    }
+    if matches.was_set("workers") {
+        if campaign.sets("workers") {
+            return Err(conflict("workers", "campaign.workers"));
+        }
+        campaign.workers = matches.get_usize("workers");
+    }
+    for (flag, key) in
+        [("save", "db"), ("cache", "cache"), ("resume", "checkpoint"), ("frontier", "frontier")]
+    {
+        if !matches.was_set(flag) {
+            continue;
+        }
+        if campaign.sets(key) {
+            return Err(conflict(flag, &format!("persist.{key}")));
+        }
+        let value = matches.get_str(flag).to_string();
+        let path = (!value.is_empty()).then(|| Path::new(&value).to_path_buf());
+        match key {
+            "db" => campaign.persist.db = path,
+            "cache" => campaign.persist.cache = path,
+            "checkpoint" => campaign.persist.checkpoint = path,
+            _ => campaign.persist.frontier = path,
+        }
+    }
+    if matches.was_set("every") {
+        if campaign.sets("every") {
+            return Err(conflict("every", "persist.every"));
+        }
+        campaign.persist.every = matches.get_usize("every");
+    }
+    Ok(())
+}
+
+/// The spec file named by the subcommand's positional argument.
+fn spec_path(matches: &Matches, usage: &str) -> Result<String> {
+    matches
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| Error::InvalidConfig(format!("usage: {usage}")))
 }
 
 fn main() -> Result<()> {
@@ -228,10 +361,8 @@ fn main() -> Result<()> {
                 pe: parse_pe(matches.get_str("pe"))?,
                 ..Default::default()
             };
-            let dataset = parse_dataset(matches.get_str("dataset"))?;
-            let kind = ModelKind::parse(matches.get_str("model")).ok_or_else(|| {
-                Error::ParseError(format!("bad --model '{}'", matches.get_str("model")))
-            })?;
+            let dataset = Dataset::parse_strict(matches.get_str("dataset"))?;
+            let kind = ModelKind::parse_strict(matches.get_str("model"))?;
             let model = model_for(kind, dataset);
             let synth_report = synth::synthesize(&config, seed);
             let mapping = map_model(&model, &config, Dataflow::RowStationary);
@@ -271,8 +402,7 @@ fn main() -> Result<()> {
         }
         "dse" => {
             let load_path = matches.get_str("load").to_string();
-            let shard_arg = matches.get_str("shard");
-            let db = if !load_path.is_empty() {
+            if !load_path.is_empty() {
                 // --load summarizes an existing database; campaign-shaping
                 // flags would be silently ignored, so reject them (also
                 // the defaulted ones — `was_set` sees through defaults).
@@ -294,147 +424,97 @@ fn main() -> Result<()> {
                     db.stats.design_points,
                     db.spaces.len()
                 );
-                db
+                summarize_db(&db)?;
+                let save_path = matches.get_str("save");
+                if !save_path.is_empty() {
+                    db.save(Path::new(save_path))?;
+                    println!("saved evaluation database to {save_path}");
+                }
             } else {
-                let dataset = parse_dataset(matches.get_str("dataset"))?;
+                // Build the same ResolvedCampaign a spec file would — the
+                // flag path and `qadam run` share one execution pipeline,
+                // so equivalent invocations are byte-identical.
+                let dataset = Dataset::parse_strict(matches.get_str("dataset"))?;
                 let sweep_path = matches.get_str("sweep");
-                let spec = if sweep_path.is_empty() {
+                let sweep = if sweep_path.is_empty() {
                     SweepSpec::default()
                 } else {
                     SweepSpec::from_file(Path::new(sweep_path))?
                 };
-                let mut explorer =
-                    Explorer::over(spec).dataset(dataset).workers(workers).seed(seed);
-                if !shard_arg.is_empty() {
-                    let (shard, num_shards) = parse_shard(shard_arg)?;
-                    explorer = explorer.shard(shard, num_shards);
-                }
-                explorer = apply_strategy(explorer, matches.get_str("strategy"), seed)?;
-                let frontier_path = matches.get_str("frontier").to_string();
-                let frontier = if frontier_path.is_empty() {
-                    None
-                } else {
-                    Some(Arc::new(Mutex::new(CampaignFrontier::new())))
+                let shard_arg = matches.get_str("shard");
+                let shard =
+                    if shard_arg.is_empty() { (0, 1) } else { parse_shard(shard_arg)? };
+                let strategy = StrategyChoice::parse_cli(matches.get_str("strategy"), seed)?;
+                let path_of = |name: &str| {
+                    let value = matches.get_str(name);
+                    (!value.is_empty()).then(|| Path::new(value).to_path_buf())
                 };
-                if let Some(frontier) = &frontier {
-                    explorer = explorer.frontier(frontier.clone());
-                }
-                let resume_path = matches.get_str("resume");
-                if !resume_path.is_empty() {
-                    explorer =
-                        explorer.checkpoint(Path::new(resume_path), matches.get_usize("every"));
-                }
-                let cache_path = matches.get_str("cache").to_string();
-                let cache = if cache_path.is_empty() {
-                    None
-                } else {
-                    let path = Path::new(&cache_path);
-                    let loaded =
-                        if path.exists() { PointCache::load(path)? } else { PointCache::new() };
-                    Some(Arc::new(Mutex::new(loaded)))
+                let persist = PersistPlan {
+                    db: path_of("save"),
+                    cache: path_of("cache"),
+                    checkpoint: path_of("resume"),
+                    every: matches.get_usize("every"),
+                    frontier: path_of("frontier"),
                 };
-                if let Some(cache) = &cache {
-                    explorer = explorer.cache(cache.clone());
-                }
-                let db = explorer.run()?;
-                println!(
-                    "{} design points x {} models in {:.2}s ({:.0} evals/s, {} workers)",
-                    db.stats.design_points,
-                    db.spaces.len(),
-                    db.stats.wall_seconds,
-                    db.stats.evals_per_sec(),
-                    db.stats.workers
+                let workload =
+                    dataset.paper_models().into_iter().map(WorkloadModel::Zoo).collect();
+                let campaign = ResolvedCampaign::new(
+                    sweep, dataset, workload, seed, workers, shard, strategy, persist,
                 );
-                if let Some(cache) = cache {
-                    let cache = qadam::explore::lock_cache(&cache);
-                    cache.save(Path::new(&cache_path))?;
-                    println!(
-                        "cache: {} design points ({} hits / {} misses this run), saved to \
-                         {cache_path}",
-                        cache.len(),
-                        cache.hits(),
-                        cache.misses()
-                    );
+                print_campaign_outcome(&campaign.execute()?)?;
+            }
+        }
+        "run" => {
+            let file = spec_path(&matches, "qadam run <campaign.qsl> (see 'qadam spec init')")?;
+            let source = std::fs::read_to_string(&file)?;
+            let mut campaign = spec::compile(&source, &file)?;
+            merge_flag_overrides(&mut campaign, &matches)?;
+            println!(
+                "campaign {}: {} design points x {} models [{}]",
+                file,
+                campaign.sweep.len(),
+                campaign.workload.len(),
+                campaign.strategy.descriptor()
+            );
+            print_campaign_outcome(&campaign.execute()?)?;
+        }
+        "validate" => {
+            let file = spec_path(&matches, "qadam validate <campaign.qsl>")?;
+            let source = std::fs::read_to_string(&file)?;
+            let (campaign, diags) = spec::check(&source);
+            if !diags.is_empty() {
+                print!("{}", diags.render(&source, &file));
+            }
+            match campaign {
+                Some(campaign) => {
+                    print!("{}", campaign.summary());
+                    println!("{file}: ok");
                 }
-                if let Some(frontier) = frontier {
-                    let frontier = qadam::explore::lock_shared(&frontier);
-                    frontier.save(Path::new(&frontier_path))?;
-                    print!("frontier: saved to {frontier_path} —");
-                    for model in frontier.models() {
-                        print!(" {}: {} points", model.model_name(), model.front().len());
-                    }
-                    println!();
+                None => {
+                    return Err(Error::ParseError(format!(
+                        "{file}: {} error(s)",
+                        diags.error_count()
+                    )));
                 }
-                db
-            };
-            // The database records its own coverage (shard + strategy), so
-            // a loaded partial database is summarized exactly like a live
-            // partial run.
-            if !db.is_whole_space() {
-                // A shard or a strategy-sampled subset sees only part of
-                // the space, so its local best INT16 is not the campaign
-                // baseline; normalized summaries would be silently wrong.
-                // Report raw bests instead.
-                if db.shard.1 > 1 {
-                    println!("  (shard output: normalize after merging all shards)");
-                } else {
-                    println!(
-                        "  (sampled by strategy '{}': raw bests only; rerun exhaustively to \
-                         normalize)",
-                        db.strategy
-                    );
-                }
-                print_raw_bests(&db);
+            }
+        }
+        "init" => {
+            let out = matches.get_str("out");
+            if out.is_empty() || out == "-" {
+                print!("{}", spec::STARTER_SPEC);
             } else {
-                match db.headline_geomean() {
-                    Ok(headline) => {
-                        for (pe, ppa, energy) in headline {
-                            println!(
-                                "  {:<10} {}x perf/area, {}x less energy vs best INT16",
-                                pe.name(),
-                                format_sig(ppa, 3),
-                                format_sig(energy, 3)
-                            );
-                        }
-                        // Quantified Pareto quality per model: hypervolume of
-                        // each PE type's normalized (perf/area ↑, energy ↓)
-                        // cloud.
-                        for space in &db.spaces {
-                            let normalized = dse::normalize(&space.evals)?;
-                            print!("  {:<10} hypervolume:", space.model_name);
-                            for pe in PeType::ALL {
-                                let points: Vec<(f64, f64)> = normalized
-                                    .iter()
-                                    .filter(|p| p.pe == pe)
-                                    .map(|p| (p.norm_perf_per_area, p.norm_energy))
-                                    .collect();
-                                let hv = dse::hypervolume_2d(
-                                    &points,
-                                    (0.0, 10.0),
-                                    (dse::Orientation::Maximize, dse::Orientation::Minimize),
-                                );
-                                print!(" {}={}", pe.name(), format_sig(hv, 3));
-                            }
-                            println!();
-                        }
-                    }
-                    // A custom --sweep may legitimately contain no INT16
-                    // points; report raw bests instead of failing the
-                    // whole (already completed) campaign.
-                    Err(Error::MissingBaseline(_)) => {
-                        println!(
-                            "  (explored space has no INT16 baseline: reporting raw bests)"
-                        );
-                        print_raw_bests(&db);
-                    }
-                    Err(err) => return Err(err),
+                let path = Path::new(out);
+                if path.exists() {
+                    return Err(Error::InvalidConfig(format!(
+                        "{out} already exists; remove it or pick another --out path"
+                    )));
                 }
+                std::fs::write(path, spec::STARTER_SPEC)?;
+                println!("wrote starter spec to {out}");
             }
-            let save_path = matches.get_str("save");
-            if !save_path.is_empty() {
-                db.save(Path::new(save_path))?;
-                println!("saved evaluation database to {save_path}");
-            }
+        }
+        "spec" => {
+            println!("qadam spec init [--out FILE]  — emit a commented starter spec");
         }
         "cache" => {
             let file = matches.get_str("file");
@@ -460,7 +540,7 @@ fn main() -> Result<()> {
             }
         }
         "pareto" => {
-            let dataset = parse_dataset(matches.get_str("dataset"))?;
+            let dataset = Dataset::parse_strict(matches.get_str("dataset"))?;
             let figure = if matches.get_str("metric") == "energy" {
                 report::fig6(dataset, workers, seed)?
             } else {
@@ -529,7 +609,7 @@ fn main() -> Result<()> {
         "report" => {
             let load_path = matches.get_str("load");
             let figure = if load_path.is_empty() {
-                let dataset = parse_dataset(matches.get_str("dataset"))?;
+                let dataset = Dataset::parse_strict(matches.get_str("dataset"))?;
                 match matches.get_str("fig") {
                     "2" => report::fig2(workers, seed)?,
                     "3" => report::fig3(seed)?,

@@ -505,16 +505,16 @@ mod tests {
 
     #[test]
     fn wrong_kind_is_rejected() {
-        let wrong = Json::parse(r#"{"kind": "qadam.evaldb", "schema": 2}"#).unwrap();
+        let wrong = Json::parse(r#"{"kind": "qadam.evaldb", "schema": 3}"#).unwrap();
         assert_eq!(CampaignFrontier::from_json(&wrong).unwrap_err().kind(), "parse_error");
     }
 
     #[test]
     fn corrupt_settings_yield_typed_errors_not_panics() {
         for text in [
-            r#"{"kind":"qadam.frontier","schema":2,"capacity":0,"epsilon":null,"models":[]}"#,
-            r#"{"kind":"qadam.frontier","schema":2,"capacity":null,"epsilon":[-1.0,0.0],"models":[]}"#,
-            r#"{"kind":"qadam.frontier","schema":2,"capacity":null,"epsilon":[1.0],"models":[]}"#,
+            r#"{"kind":"qadam.frontier","schema":3,"capacity":0,"epsilon":null,"models":[]}"#,
+            r#"{"kind":"qadam.frontier","schema":3,"capacity":null,"epsilon":[-1.0,0.0],"models":[]}"#,
+            r#"{"kind":"qadam.frontier","schema":3,"capacity":null,"epsilon":[1.0],"models":[]}"#,
         ] {
             let json = Json::parse(text).unwrap();
             let err = CampaignFrontier::from_json(&json).unwrap_err();

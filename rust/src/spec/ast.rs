@@ -1,0 +1,169 @@
+//! Spanned abstract syntax tree for QSL.
+//!
+//! The parser produces this tree *before* any semantic interpretation:
+//! keys are raw strings, values are loosely typed, and everything
+//! carries its [`Span`] so the resolver can attach precise diagnostics.
+//! Semantic meaning (which keys exist, which values they take) lives
+//! entirely in [`super::resolve`].
+
+use super::diag::Span;
+
+/// A value with the span of the source text that produced it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spanned<T> {
+    /// The payload.
+    pub node: T,
+    /// Its source location.
+    pub span: Span,
+}
+
+impl<T> Spanned<T> {
+    /// Pair a payload with its location.
+    pub fn new(node: T, span: Span) -> Self {
+        Self { node, span }
+    }
+}
+
+/// A parsed spec file: its sections, in source order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SpecFile {
+    /// Top-level sections in source order.
+    pub sections: Vec<Section>,
+}
+
+/// One top-level section.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Section {
+    /// `campaign { ... }` — seed, workers, shard.
+    Campaign(Block),
+    /// `sweep { ... }` — design-space axes.
+    Sweep(Block),
+    /// `strategy = ...` — the search strategy.
+    Strategy(StrategyDecl),
+    /// `workload { ... }` — dataset + model list.
+    Workload(Block),
+    /// `model NAME [like ZOO] { ... }` — a model definition.
+    Model(ModelBlock),
+    /// `persist { ... }` — db / cache / checkpoint / frontier paths.
+    Persist(Block),
+}
+
+/// A brace-delimited block of `key = value` statements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    /// Span of the introducing keyword (`campaign`, `sweep`, ...).
+    pub keyword: Span,
+    /// The block's statements, in source order.
+    pub entries: Vec<KeyValue>,
+}
+
+/// One `key = value` statement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KeyValue {
+    /// The key identifier.
+    pub key: Spanned<String>,
+    /// The assigned value.
+    pub value: Value,
+}
+
+/// A value with its span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Value {
+    /// What kind of value this is.
+    pub kind: ValueKind,
+    /// Source location of the whole value.
+    pub span: Span,
+}
+
+/// The loosely-typed value grammar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ValueKind {
+    /// Numeric literal.
+    Num(f64),
+    /// String literal.
+    Str(String),
+    /// Bare word (`cifar10`, `exhaustive`, `int16`, ...).
+    Word(String),
+    /// Array-dimension literal `RxC`.
+    Dims(usize, usize),
+    /// `A / B` fraction (shard designators).
+    Fraction(f64, f64),
+    /// Bracketed list.
+    List(Vec<Value>),
+    /// Call form `name(arg, key = arg, ...)` — `spad(...)`, `random(...)`.
+    Call {
+        /// The callee word.
+        name: Spanned<String>,
+        /// Positional and named arguments, in source order.
+        args: Vec<Arg>,
+    },
+}
+
+impl ValueKind {
+    /// Human-readable kind label for "expected X, found Y" diagnostics.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            ValueKind::Num(_) => "a number",
+            ValueKind::Str(_) => "a string",
+            ValueKind::Word(_) => "a name",
+            ValueKind::Dims(_, _) => "dimensions",
+            ValueKind::Fraction(_, _) => "a fraction",
+            ValueKind::List(_) => "a list",
+            ValueKind::Call { .. } => "a call",
+        }
+    }
+}
+
+/// One call argument: positional (`64`) or named (`seed = 11`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arg {
+    /// The parameter name for named arguments, `None` for positional.
+    pub name: Option<Spanned<String>>,
+    /// The argument value.
+    pub value: Value,
+}
+
+/// `strategy = <value>`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StrategyDecl {
+    /// Span of the `strategy` keyword.
+    pub keyword: Span,
+    /// The strategy expression (word or call).
+    pub value: Value,
+}
+
+/// `model NAME [like ZOO] { ... }`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelBlock {
+    /// Span of the `model` keyword.
+    pub keyword: Span,
+    /// The model's name.
+    pub name: Spanned<String>,
+    /// Zoo model this definition derives from, when `like` is present.
+    pub like: Option<Spanned<String>>,
+    /// The block's statements.
+    pub stmts: Vec<ModelStmt>,
+}
+
+/// A statement inside a `model` block.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelStmt {
+    /// `key = value` (currently only `dataset = ...`).
+    KeyValue(KeyValue),
+    /// `conv NAME { ... }`, `fc NAME { ... }`, `pool NAME { ... }`, or
+    /// the override form `layer NAME { ... }` (only valid with `like`).
+    Layer(LayerStmt),
+}
+
+/// One layer statement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerStmt {
+    /// The layer keyword (`conv` / `fc` / `pool` / `layer`).
+    pub kind: Spanned<String>,
+    /// The layer's name.
+    pub name: Spanned<String>,
+    /// Comma-separated `field = number` entries.
+    pub fields: Vec<KeyValue>,
+    /// Span of the whole statement.
+    pub span: Span,
+}

@@ -1,0 +1,310 @@
+//! Span-carrying diagnostics for the QSL front end.
+//!
+//! Every lexer, parser, and resolver complaint is a [`Diagnostic`]: a
+//! severity, a message, a byte-offset [`Span`] into the source, and an
+//! optional `help` line (usually a "did you mean" suggestion from
+//! [`crate::util::text::did_you_mean`]). The front end *collects* —
+//! a broken spec reports every problem in one pass, not just the first —
+//! and [`Diagnostics::render`] turns the batch into the rustc-style
+//! excerpt format the golden diagnostics fixtures pin byte-for-byte:
+//!
+//! ```text
+//! error: unknown sweep axis 'pe_typ'
+//!   --> campaign.qsl:4:3
+//!    |
+//!  4 |   pe_typ = [int16]
+//!    |   ^^^^^^
+//!    = help: did you mean 'pe_type'?
+//! ```
+
+use std::fmt;
+
+/// Half-open byte range `[start, end)` into the spec source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Byte offset of the first spanned byte.
+    pub start: usize,
+    /// Byte offset one past the last spanned byte.
+    pub end: usize,
+}
+
+impl Span {
+    /// A span covering `[start, end)`.
+    pub fn new(start: usize, end: usize) -> Self {
+        Self { start, end: end.max(start) }
+    }
+
+    /// A zero-width span at `pos` (for end-of-input diagnostics).
+    pub fn at(pos: usize) -> Self {
+        Self { start: pos, end: pos }
+    }
+
+    /// The smallest span covering both `self` and `other`.
+    pub fn join(self, other: Span) -> Span {
+        Span { start: self.start.min(other.start), end: self.end.max(other.end) }
+    }
+}
+
+/// How bad a diagnostic is. Errors fail validation; warnings do not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// The spec cannot be lowered.
+    Error,
+    /// Suspicious but lowerable (e.g. an unused model definition).
+    Warning,
+}
+
+impl Severity {
+    /// Rendering label (`error` / `warning`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One located complaint about a spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Error or warning.
+    pub severity: Severity,
+    /// What is wrong, phrased against the source text.
+    pub message: String,
+    /// Where in the source it is wrong.
+    pub span: Span,
+    /// Optional fix-it line (rendered as `= help: ...`).
+    pub help: Option<String>,
+}
+
+/// An ordered batch of diagnostics — the QSL front end's error channel.
+///
+/// Parsing and resolving never stop at the first problem; they push into
+/// this collection and keep going, so `qadam validate` reports a broken
+/// spec's mistakes all at once.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Diagnostics {
+    diags: Vec<Diagnostic>,
+}
+
+impl Diagnostics {
+    /// An empty collection.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an error.
+    pub fn error(&mut self, span: Span, message: impl Into<String>) {
+        self.diags.push(Diagnostic {
+            severity: Severity::Error,
+            message: message.into(),
+            span,
+            help: None,
+        });
+    }
+
+    /// Record an error with a help line.
+    pub fn error_help(&mut self, span: Span, message: impl Into<String>, help: impl Into<String>) {
+        self.diags.push(Diagnostic {
+            severity: Severity::Error,
+            message: message.into(),
+            span,
+            help: Some(help.into()),
+        });
+    }
+
+    /// Record a warning.
+    pub fn warn(&mut self, span: Span, message: impl Into<String>) {
+        self.diags.push(Diagnostic {
+            severity: Severity::Warning,
+            message: message.into(),
+            span,
+            help: None,
+        });
+    }
+
+    /// All diagnostics in emission order.
+    pub fn iter(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diags.iter()
+    }
+
+    /// Number of diagnostics (errors + warnings).
+    pub fn len(&self) -> usize {
+        self.diags.len()
+    }
+
+    /// Whether nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// Number of error-severity diagnostics.
+    pub fn error_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    /// Whether any error-severity diagnostic was recorded.
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    /// Render the whole batch against its source, rustc-style: one block
+    /// per diagnostic (message, `--> file:line:col`, source excerpt with
+    /// a caret underline, optional help), then a summary line. The output
+    /// is deterministic, so golden tests pin it byte-for-byte.
+    pub fn render(&self, source: &str, filename: &str) -> String {
+        let lines = SourceLines::new(source);
+        let mut out = String::new();
+        for diag in &self.diags {
+            out.push_str(&render_one(diag, source, filename, &lines));
+            out.push('\n');
+        }
+        let errors = self.error_count();
+        let warnings = self.len() - errors;
+        match (errors, warnings) {
+            (0, 0) => {}
+            (0, w) => out.push_str(&format!("{w} warning(s) emitted\n")),
+            (e, 0) => out.push_str(&format!("{e} error(s) emitted\n")),
+            (e, w) => out.push_str(&format!("{e} error(s), {w} warning(s) emitted\n")),
+        }
+        out
+    }
+
+    /// Collapse the batch into the crate-wide typed error: the full
+    /// rendering inside [`Error::ParseError`](crate::Error::ParseError).
+    pub fn into_error(self, source: &str, filename: &str) -> crate::Error {
+        crate::Error::ParseError(format!(
+            "{filename} is not a valid campaign spec\n{}",
+            self.render(source, filename)
+        ))
+    }
+}
+
+impl fmt::Display for Diagnostics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for diag in &self.diags {
+            writeln!(f, "{}: {}", diag.severity.label(), diag.message)?;
+        }
+        Ok(())
+    }
+}
+
+/// Byte offsets of line starts, for O(log n) offset → (line, col) lookup.
+struct SourceLines {
+    starts: Vec<usize>,
+}
+
+impl SourceLines {
+    fn new(source: &str) -> Self {
+        let mut starts = vec![0usize];
+        for (i, b) in source.bytes().enumerate() {
+            if b == b'\n' {
+                starts.push(i + 1);
+            }
+        }
+        Self { starts }
+    }
+
+    /// 1-based (line, column) of a byte offset; columns count characters.
+    fn locate(&self, source: &str, offset: usize) -> (usize, usize) {
+        let offset = offset.min(source.len());
+        let line_idx = match self.starts.binary_search(&offset) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        let line_start = self.starts[line_idx];
+        let col = source[line_start..offset].chars().count() + 1;
+        (line_idx + 1, col)
+    }
+
+    /// The full text of a 1-based line, without its newline.
+    fn line_text<'s>(&self, source: &'s str, line: usize) -> &'s str {
+        let start = self.starts[line - 1];
+        let end = self
+            .starts
+            .get(line)
+            .map(|next| next - 1) // strip the '\n'
+            .unwrap_or(source.len());
+        source[start..end].trim_end_matches('\r')
+    }
+}
+
+fn render_one(diag: &Diagnostic, source: &str, filename: &str, lines: &SourceLines) -> String {
+    let (line, col) = lines.locate(source, diag.span.start);
+    let text = lines.line_text(source, line);
+    // Caret length: the spanned characters, clamped to the first line.
+    let line_start = lines.starts[line - 1];
+    let span_on_line_end = diag.span.end.min(line_start + text.len()).max(diag.span.start);
+    let caret_len = source[diag.span.start..span_on_line_end].chars().count().max(1);
+    let gutter = format!("{line}");
+    let pad = " ".repeat(gutter.len());
+    let mut out = format!(
+        "{}: {}\n{pad}--> {filename}:{line}:{col}\n{pad} |\n{gutter} | {text}\n{pad} | {}{}\n",
+        diag.severity.label(),
+        diag.message,
+        " ".repeat(col - 1),
+        "^".repeat(caret_len),
+    );
+    if let Some(help) = &diag.help {
+        out.push_str(&format!("{pad} = help: {help}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_join_and_clamp() {
+        let a = Span::new(3, 5);
+        let b = Span::new(8, 10);
+        assert_eq!(a.join(b), Span::new(3, 10));
+        // end < start clamps to empty-at-start.
+        assert_eq!(Span::new(7, 2), Span { start: 7, end: 7 });
+    }
+
+    #[test]
+    fn renders_line_col_excerpt_and_help() {
+        let source = "sweep {\n  pe_typ = [int16]\n}\n";
+        let mut diags = Diagnostics::new();
+        let start = source.find("pe_typ").unwrap();
+        diags.error_help(
+            Span::new(start, start + 6),
+            "unknown sweep axis 'pe_typ'",
+            "did you mean 'pe_type'?",
+        );
+        let rendered = diags.render(source, "campaign.qsl");
+        assert!(rendered.contains("error: unknown sweep axis 'pe_typ'"), "{rendered}");
+        assert!(rendered.contains("--> campaign.qsl:2:3"), "{rendered}");
+        assert!(rendered.contains("2 |   pe_typ = [int16]"), "{rendered}");
+        assert!(rendered.contains("  |   ^^^^^^"), "{rendered}");
+        assert!(rendered.contains("= help: did you mean 'pe_type'?"), "{rendered}");
+        assert!(rendered.contains("1 error(s) emitted"), "{rendered}");
+    }
+
+    #[test]
+    fn reports_every_diagnostic_not_just_the_first() {
+        let source = "a\nbb\nccc\n";
+        let mut diags = Diagnostics::new();
+        diags.error(Span::new(0, 1), "first");
+        diags.warn(Span::new(2, 4), "second");
+        diags.error(Span::new(5, 8), "third");
+        assert_eq!(diags.error_count(), 2);
+        let rendered = diags.render(source, "x.qsl");
+        for needle in ["first", "second", "third", "x.qsl:1:1", "x.qsl:2:1", "x.qsl:3:1"] {
+            assert!(rendered.contains(needle), "missing {needle} in:\n{rendered}");
+        }
+        assert!(rendered.contains("2 error(s), 1 warning(s) emitted"), "{rendered}");
+    }
+
+    #[test]
+    fn end_of_input_span_renders_cleanly() {
+        let source = "campaign {";
+        let mut diags = Diagnostics::new();
+        diags.error(Span::at(source.len()), "expected '}'");
+        let rendered = diags.render(source, "f.qsl");
+        assert!(rendered.contains("f.qsl:1:11"), "{rendered}");
+        assert!(rendered.contains('^'), "{rendered}");
+    }
+}

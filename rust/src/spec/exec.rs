@@ -1,0 +1,137 @@
+//! Campaign execution: one runner for spec-driven and flag-driven DSE.
+//!
+//! [`ResolvedCampaign::execute`] wires an [`Explorer`] exactly the way
+//! `qadam dse` always has — strategy, shard, point cache, checkpoint
+//! journal, streaming frontier, database save — so `qadam run spec.qsl`
+//! and the equivalent flag invocation produce byte-identical artifacts
+//! (they are literally the same code path). The campaign's QSL
+//! [`fingerprint`](ResolvedCampaign::fingerprint) is pinned into the
+//! journal manifest via [`Explorer::campaign_fingerprint`], which is
+//! how resuming under an edited spec is rejected.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use super::resolve::ResolvedCampaign;
+use crate::error::Result;
+use crate::explore::{lock_shared, EvalDatabase, Explorer, PointCache};
+use crate::pareto::CampaignFrontier;
+
+/// What a cache-backed campaign did to its cache.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheOutcome {
+    /// Where the cache was saved.
+    pub path: PathBuf,
+    /// Cached design points after the campaign.
+    pub entries: usize,
+    /// Lookups served from the cache during this run.
+    pub hits: u64,
+    /// Lookups that missed during this run.
+    pub misses: u64,
+}
+
+/// What a frontier-tracking campaign archived.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierOutcome {
+    /// Where the frontier was saved.
+    pub path: PathBuf,
+    /// Per-model `(name, front size)` in workload order.
+    pub per_model: Vec<(String, usize)>,
+}
+
+/// The artifacts of one executed campaign.
+#[derive(Debug, Clone)]
+pub struct CampaignOutcome {
+    /// The evaluation database (also saved to `persist.db` when set).
+    pub db: EvalDatabase,
+    /// Where the database was saved, when `persist.db` was set.
+    pub saved_db: Option<PathBuf>,
+    /// Cache statistics, when `persist.cache` was set.
+    pub cache: Option<CacheOutcome>,
+    /// Frontier statistics, when `persist.frontier` was set.
+    pub frontier: Option<FrontierOutcome>,
+}
+
+impl ResolvedCampaign {
+    /// Build the campaign's [`Explorer`] (space, models, seed, workers,
+    /// shard, strategy, fingerprint) without any persistence wiring —
+    /// the embedding-friendly entry point.
+    pub fn explorer(&self) -> Explorer {
+        let explorer = Explorer::over(self.sweep.clone())
+            .dataset(self.dataset)
+            .models(self.models())
+            .workers(self.workers)
+            .seed(self.seed)
+            .shard(self.shard.0, self.shard.1)
+            .campaign_fingerprint(self.fingerprint());
+        self.strategy.attach(explorer)
+    }
+
+    /// Run the campaign end to end: attach the persistence plan (cache,
+    /// checkpoint journal, frontier), evaluate, and save every artifact
+    /// the plan names. Identical campaigns produce byte-identical
+    /// artifacts regardless of whether they came from a spec file or
+    /// from CLI flags.
+    pub fn execute(&self) -> Result<CampaignOutcome> {
+        let mut explorer = self.explorer();
+        let frontier = self
+            .persist
+            .frontier
+            .as_ref()
+            .map(|_| Arc::new(Mutex::new(CampaignFrontier::new())));
+        if let Some(frontier) = &frontier {
+            explorer = explorer.frontier(frontier.clone());
+        }
+        if let Some(path) = &self.persist.checkpoint {
+            explorer = explorer.checkpoint(path, self.persist.every);
+        }
+        let cache = match &self.persist.cache {
+            None => None,
+            Some(path) => {
+                let loaded =
+                    if path.exists() { PointCache::load(path)? } else { PointCache::new() };
+                Some(Arc::new(Mutex::new(loaded)))
+            }
+        };
+        if let Some(cache) = &cache {
+            explorer = explorer.cache(cache.clone());
+        }
+        let db = explorer.run()?;
+        let cache_outcome = match (&cache, &self.persist.cache) {
+            (Some(cache), Some(path)) => {
+                let cache = lock_shared(cache);
+                cache.save(path)?;
+                Some(CacheOutcome {
+                    path: path.clone(),
+                    entries: cache.len(),
+                    hits: cache.hits(),
+                    misses: cache.misses(),
+                })
+            }
+            _ => None,
+        };
+        let frontier_outcome = match (&frontier, &self.persist.frontier) {
+            (Some(frontier), Some(path)) => {
+                let frontier = lock_shared(frontier);
+                frontier.save(path)?;
+                Some(FrontierOutcome {
+                    path: path.clone(),
+                    per_model: frontier
+                        .models()
+                        .iter()
+                        .map(|m| (m.model_name().to_string(), m.front().len()))
+                        .collect(),
+                })
+            }
+            _ => None,
+        };
+        let saved_db = match &self.persist.db {
+            Some(path) => {
+                db.save(path)?;
+                Some(path.clone())
+            }
+            None => None,
+        };
+        Ok(CampaignOutcome { db, saved_db, cache: cache_outcome, frontier: frontier_outcome })
+    }
+}

@@ -1,0 +1,416 @@
+//! Hand-rolled lexer for QSL source text.
+//!
+//! Produces a flat [`Token`] stream with byte [`Span`]s. Lexing never
+//! aborts: malformed input (unterminated strings, stray characters)
+//! is reported into the shared [`Diagnostics`] batch and skipped, so
+//! the parser still sees the rest of the file and can report *its*
+//! problems too.
+//!
+//! Newline handling: QSL statements are line-oriented, so the lexer
+//! emits collapsed [`Tok::Newline`] tokens — except inside `[...]` and
+//! `(...)`, where lists may wrap freely across lines.
+
+use super::diag::{Diagnostics, Span};
+
+/// Token kind.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier / bare word: `[A-Za-z_][A-Za-z0-9_]*`.
+    Ident(String),
+    /// Numeric literal (integers and floats share a representation,
+    /// exactly like the JSON substrate).
+    Num(f64),
+    /// Array-dimension literal `RxC`, e.g. `16x16`.
+    Dims(usize, usize),
+    /// Double-quoted string literal (supports `\"`, `\\`, `\n`, `\t`).
+    Str(String),
+    /// `{`
+    LBrace,
+    /// `}`
+    RBrace,
+    /// `[`
+    LBracket,
+    /// `]`
+    RBracket,
+    /// `(`
+    LParen,
+    /// `)`
+    RParen,
+    /// `,`
+    Comma,
+    /// `=`
+    Eq,
+    /// `/` (shard designators: `0 / 4`)
+    Slash,
+    /// One or more line breaks (collapsed; suppressed inside `[ ]`/`( )`).
+    Newline,
+    /// End of input (always the final token).
+    Eof,
+}
+
+impl Tok {
+    /// Human-readable name for "expected X, found Y" diagnostics.
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Ident(w) => format!("'{w}'"),
+            Tok::Num(n) => format!("number {}", fmt_num(*n)),
+            Tok::Dims(r, c) => format!("dimensions {r}x{c}"),
+            Tok::Str(_) => "string".into(),
+            Tok::LBrace => "'{'".into(),
+            Tok::RBrace => "'}'".into(),
+            Tok::LBracket => "'['".into(),
+            Tok::RBracket => "']'".into(),
+            Tok::LParen => "'('".into(),
+            Tok::RParen => "')'".into(),
+            Tok::Comma => "','".into(),
+            Tok::Eq => "'='".into(),
+            Tok::Slash => "'/'".into(),
+            Tok::Newline => "end of line".into(),
+            Tok::Eof => "end of file".into(),
+        }
+    }
+}
+
+/// Render a number the way the canonical form does (shortest form,
+/// integers without a fraction).
+pub fn fmt_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 9e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// A token with its source span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    /// Token kind.
+    pub tok: Tok,
+    /// Source bytes this token covers.
+    pub span: Span,
+}
+
+/// Lex a whole QSL document. Problems are pushed into `diags`; the
+/// returned stream always ends with a [`Tok::Eof`] token.
+pub fn lex(source: &str, diags: &mut Diagnostics) -> Vec<Token> {
+    let bytes = source.as_bytes();
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut pos = 0usize;
+    // `[`/`(` nesting depth; newlines inside are soft (suppressed).
+    let mut wrap_depth = 0usize;
+    while pos < bytes.len() {
+        let start = pos;
+        let b = bytes[pos];
+        match b {
+            b' ' | b'\t' | b'\r' => pos += 1,
+            b'#' => {
+                while pos < bytes.len() && bytes[pos] != b'\n' {
+                    pos += 1;
+                }
+            }
+            b'\n' => {
+                pos += 1;
+                if wrap_depth == 0 && !matches!(tokens.last().map(|t| &t.tok), Some(Tok::Newline)) {
+                    tokens.push(Token { tok: Tok::Newline, span: Span::new(start, pos) });
+                }
+            }
+            b'{' => {
+                pos += 1;
+                tokens.push(Token { tok: Tok::LBrace, span: Span::new(start, pos) });
+            }
+            b'}' => {
+                pos += 1;
+                tokens.push(Token { tok: Tok::RBrace, span: Span::new(start, pos) });
+            }
+            b'[' => {
+                pos += 1;
+                wrap_depth += 1;
+                tokens.push(Token { tok: Tok::LBracket, span: Span::new(start, pos) });
+            }
+            b']' => {
+                pos += 1;
+                wrap_depth = wrap_depth.saturating_sub(1);
+                tokens.push(Token { tok: Tok::RBracket, span: Span::new(start, pos) });
+            }
+            b'(' => {
+                pos += 1;
+                wrap_depth += 1;
+                tokens.push(Token { tok: Tok::LParen, span: Span::new(start, pos) });
+            }
+            b')' => {
+                pos += 1;
+                wrap_depth = wrap_depth.saturating_sub(1);
+                tokens.push(Token { tok: Tok::RParen, span: Span::new(start, pos) });
+            }
+            b',' => {
+                pos += 1;
+                tokens.push(Token { tok: Tok::Comma, span: Span::new(start, pos) });
+            }
+            b'=' => {
+                pos += 1;
+                tokens.push(Token { tok: Tok::Eq, span: Span::new(start, pos) });
+            }
+            b'/' => {
+                pos += 1;
+                tokens.push(Token { tok: Tok::Slash, span: Span::new(start, pos) });
+            }
+            b'"' => {
+                let (text, new_pos, ok) = lex_string(source, pos);
+                if !ok {
+                    diags.error(Span::new(start, new_pos), "unterminated string literal");
+                }
+                tokens.push(Token { tok: Tok::Str(text), span: Span::new(start, new_pos) });
+                pos = new_pos;
+            }
+            b'0'..=b'9' | b'-' => {
+                let (tok, new_pos) = lex_number(source, pos, diags);
+                tokens.push(Token { tok, span: Span::new(start, new_pos) });
+                pos = new_pos;
+            }
+            b'A'..=b'Z' | b'a'..=b'z' | b'_' => {
+                while pos < bytes.len()
+                    && (bytes[pos].is_ascii_alphanumeric() || bytes[pos] == b'_')
+                {
+                    pos += 1;
+                }
+                tokens.push(Token {
+                    tok: Tok::Ident(source[start..pos].to_string()),
+                    span: Span::new(start, pos),
+                });
+            }
+            _ => {
+                // Skip one whole UTF-8 character, not one byte.
+                let ch = source[pos..].chars().next().unwrap_or('?');
+                pos += ch.len_utf8();
+                diags.error(
+                    Span::new(start, pos),
+                    format!("unexpected character '{ch}' in spec"),
+                );
+            }
+        }
+    }
+    // A trailing statement without a newline still needs a terminator.
+    if !matches!(tokens.last().map(|t| &t.tok), Some(Tok::Newline) | None) {
+        tokens.push(Token { tok: Tok::Newline, span: Span::at(source.len()) });
+    }
+    tokens.push(Token { tok: Tok::Eof, span: Span::at(source.len()) });
+    tokens
+}
+
+/// Lex a string literal starting at the opening quote. Returns the
+/// decoded text, the position after the closing quote (or the line/file
+/// end on an unterminated literal), and whether it terminated.
+fn lex_string(source: &str, open: usize) -> (String, usize, bool) {
+    let bytes = source.as_bytes();
+    let mut out = String::new();
+    let mut pos = open + 1;
+    while pos < bytes.len() {
+        match bytes[pos] {
+            b'"' => return (out, pos + 1, true),
+            b'\n' => return (out, pos, false),
+            b'\\' => {
+                // Advance at char granularity: the escaped character may
+                // be multi-byte, and landing mid-character would make the
+                // next iteration's slicing panic.
+                match source[pos + 1..].chars().next() {
+                    None => return (out, bytes.len(), false),
+                    // A backslash at end-of-line: unterminated, and the
+                    // newline stays outside the string.
+                    Some('\n') => return (out, pos + 1, false),
+                    Some(ch) => {
+                        pos += 1 + ch.len_utf8();
+                        match ch {
+                            '"' => out.push('"'),
+                            '\\' => out.push('\\'),
+                            'n' => out.push('\n'),
+                            't' => out.push('\t'),
+                            // Unknown escape: keep it verbatim; the
+                            // resolver treats paths as opaque strings.
+                            other => {
+                                out.push('\\');
+                                out.push(other);
+                            }
+                        }
+                    }
+                }
+            }
+            b if b < 0x80 => {
+                out.push(b as char);
+                pos += 1;
+            }
+            _ => {
+                let ch = source[pos..].chars().next().unwrap_or('?');
+                out.push(ch);
+                pos += ch.len_utf8();
+            }
+        }
+    }
+    (out, pos, false)
+}
+
+/// Lex a number or an `RxC` dims literal starting at `start`.
+fn lex_number(source: &str, start: usize, diags: &mut Diagnostics) -> (Tok, usize) {
+    let bytes = source.as_bytes();
+    let mut pos = start;
+    if bytes[pos] == b'-' {
+        pos += 1;
+    }
+    let int_start = pos;
+    while pos < bytes.len() && bytes[pos].is_ascii_digit() {
+        pos += 1;
+    }
+    // Dims literal: digits immediately followed by `x` and more digits
+    // (only for unsigned integers, e.g. `16x16`).
+    if bytes[start] != b'-'
+        && pos > int_start
+        && pos < bytes.len()
+        && bytes[pos] == b'x'
+        && bytes.get(pos + 1).is_some_and(u8::is_ascii_digit)
+    {
+        let rows: usize = source[start..pos].parse().unwrap_or(0);
+        let col_start = pos + 1;
+        let mut col_end = col_start;
+        while col_end < bytes.len() && bytes[col_end].is_ascii_digit() {
+            col_end += 1;
+        }
+        let cols: usize = source[col_start..col_end].parse().unwrap_or(0);
+        return (Tok::Dims(rows, cols), col_end);
+    }
+    if pos < bytes.len() && bytes[pos] == b'.' {
+        pos += 1;
+        while pos < bytes.len() && bytes[pos].is_ascii_digit() {
+            pos += 1;
+        }
+    }
+    if pos < bytes.len() && (bytes[pos] == b'e' || bytes[pos] == b'E') {
+        pos += 1;
+        if pos < bytes.len() && (bytes[pos] == b'+' || bytes[pos] == b'-') {
+            pos += 1;
+        }
+        while pos < bytes.len() && bytes[pos].is_ascii_digit() {
+            pos += 1;
+        }
+    }
+    match source[start..pos].parse::<f64>() {
+        Ok(x) => (Tok::Num(x), pos),
+        Err(_) => {
+            diags.error(
+                Span::new(start, pos.max(start + 1)),
+                format!("malformed number '{}'", &source[start..pos.max(start + 1)]),
+            );
+            (Tok::Num(0.0), pos.max(start + 1))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(source: &str) -> Vec<Tok> {
+        let mut diags = Diagnostics::new();
+        let toks = lex(source, &mut diags);
+        assert!(!diags.has_errors(), "unexpected lex errors: {diags}");
+        toks.into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lexes_statements_and_collapsed_newlines() {
+        let toks = kinds("seed = 7\n\n\nworkers = 2\n");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Ident("seed".into()),
+                Tok::Eq,
+                Tok::Num(7.0),
+                Tok::Newline,
+                Tok::Ident("workers".into()),
+                Tok::Eq,
+                Tok::Num(2.0),
+                Tok::Newline,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn dims_and_numbers_are_distinct() {
+        let toks = kinds("array = [8x8, 16x16]\nglb = [128, 2.5]");
+        assert!(toks.contains(&Tok::Dims(8, 8)));
+        assert!(toks.contains(&Tok::Dims(16, 16)));
+        assert!(toks.contains(&Tok::Num(128.0)));
+        assert!(toks.contains(&Tok::Num(2.5)));
+    }
+
+    #[test]
+    fn newlines_are_soft_inside_brackets_and_parens() {
+        let toks = kinds("models = [\n  resnet20,\n  vgg16\n]\n");
+        let newlines = toks.iter().filter(|t| matches!(t, Tok::Newline)).count();
+        assert_eq!(newlines, 1, "only the statement terminator survives: {toks:?}");
+        let toks = kinds("strategy = random(\n  64\n)\n");
+        let newlines = toks.iter().filter(|t| matches!(t, Tok::Newline)).count();
+        assert_eq!(newlines, 1);
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let toks = kinds("# a comment\ndb = \"out/db.json\" # trailing\n");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Ident("db".into()),
+                Tok::Eq,
+                Tok::Str("out/db.json".into()),
+                Tok::Newline,
+                Tok::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn backslash_before_multibyte_char_does_not_panic() {
+        // Regression: the escape arm used to advance 2 bytes and land
+        // mid-character, panicking on the next slice.
+        let mut diags = Diagnostics::new();
+        let toks = lex("db = \"a\\éb\"\n", &mut diags);
+        assert!(!diags.has_errors(), "{diags}");
+        assert!(toks.iter().any(|t| t.tok == Tok::Str("a\\éb".into())), "{toks:?}");
+        // Backslash at end-of-line / end-of-file: unterminated, no panic.
+        let mut diags = Diagnostics::new();
+        let _ = lex("db = \"a\\\nseed = 7\n", &mut diags);
+        assert!(diags.has_errors());
+        let mut diags = Diagnostics::new();
+        let _ = lex("db = \"a\\", &mut diags);
+        assert!(diags.has_errors());
+    }
+
+    #[test]
+    fn unterminated_string_is_reported_not_fatal() {
+        let mut diags = Diagnostics::new();
+        let toks = lex("db = \"oops\nseed = 7\n", &mut diags);
+        assert!(diags.has_errors());
+        // The rest of the file still lexes.
+        assert!(toks.iter().any(|t| t.tok == Tok::Ident("seed".into())));
+    }
+
+    #[test]
+    fn stray_characters_are_reported_and_skipped() {
+        let mut diags = Diagnostics::new();
+        let toks = lex("seed ? 7", &mut diags);
+        assert_eq!(diags.error_count(), 1);
+        assert!(toks.iter().any(|t| t.tok == Tok::Num(7.0)));
+    }
+
+    #[test]
+    fn shard_designator_lexes_as_slash() {
+        let toks = kinds("shard = 0 / 4");
+        assert!(toks.contains(&Tok::Slash));
+    }
+
+    #[test]
+    fn missing_trailing_newline_is_synthesized() {
+        let toks = kinds("seed = 7");
+        assert_eq!(toks[toks.len() - 2], Tok::Newline);
+        assert_eq!(toks[toks.len() - 1], Tok::Eof);
+    }
+}

@@ -1,0 +1,640 @@
+//! Recursive-descent parser for QSL.
+//!
+//! Consumes the [`lexer`](super::lexer) token stream into the spanned
+//! [`ast`](super::ast). Parsing is *recovering*: a malformed statement
+//! is reported into the shared [`Diagnostics`] batch and the parser
+//! re-synchronizes at the next line or block boundary, so one typo does
+//! not hide the rest of the file's problems. Everything semantic —
+//! which keys exist, what values they accept — is deferred to
+//! [`resolve`](super::resolve), which reports against the spans this
+//! parser preserves.
+
+use super::ast::{
+    Arg, Block, KeyValue, LayerStmt, ModelBlock, ModelStmt, Section, SpecFile, Spanned,
+    StrategyDecl, Value, ValueKind,
+};
+use super::diag::{Diagnostics, Span};
+use super::lexer::{lex, Tok, Token};
+use crate::util::text::did_you_mean;
+
+/// The top-level section keywords (for "did you mean" suggestions).
+pub const SECTION_KEYWORDS: [&str; 6] =
+    ["campaign", "sweep", "strategy", "workload", "model", "persist"];
+
+/// Maximum `[`/`(` value-nesting depth. The grammar never needs more
+/// than two levels; the cap turns adversarial `[[[[...` input into a
+/// diagnostic instead of a stack overflow (mirroring
+/// [`crate::util::json::MAX_DEPTH`]).
+pub const MAX_VALUE_DEPTH: usize = 64;
+
+/// Layer statement keywords inside `model` blocks.
+pub const LAYER_KEYWORDS: [&str; 4] = ["conv", "fc", "pool", "layer"];
+
+/// Parse QSL source into a [`SpecFile`], reporting every problem into
+/// `diags`. Always returns a (possibly partial) tree; callers must
+/// check [`Diagnostics::has_errors`] before trusting it.
+pub fn parse(source: &str, diags: &mut Diagnostics) -> SpecFile {
+    let tokens = lex(source, diags);
+    let mut parser = Parser { tokens, pos: 0, depth: 0, diags };
+    parser.file()
+}
+
+struct Parser<'d> {
+    tokens: Vec<Token>,
+    pos: usize,
+    /// Current `[`/`(` nesting depth (capped at [`MAX_VALUE_DEPTH`]).
+    depth: usize,
+    diags: &'d mut Diagnostics,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> &Token {
+        &self.tokens[self.pos.min(self.tokens.len() - 1)]
+    }
+
+    fn peek2(&self) -> &Token {
+        &self.tokens[(self.pos + 1).min(self.tokens.len() - 1)]
+    }
+
+    fn bump(&mut self) -> Token {
+        let token = self.peek().clone();
+        if self.pos < self.tokens.len() - 1 {
+            self.pos += 1;
+        }
+        token
+    }
+
+    fn at(&self, tok: &Tok) -> bool {
+        &self.peek().tok == tok
+    }
+
+    fn at_eof(&self) -> bool {
+        matches!(self.peek().tok, Tok::Eof)
+    }
+
+    fn eat(&mut self, tok: &Tok) -> bool {
+        if self.at(tok) {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, tok: Tok, context: &str) -> bool {
+        if self.eat(&tok) {
+            return true;
+        }
+        let found = self.peek().tok.describe();
+        let span = self.peek().span;
+        self.diags.error(span, format!("expected {} {context}, found {found}", tok.describe()));
+        false
+    }
+
+    fn skip_newlines(&mut self) {
+        while self.eat(&Tok::Newline) {}
+    }
+
+    /// Recover to the end of the current statement: consume through the
+    /// next newline, stopping short of `}`/EOF so block closers survive.
+    fn sync_stmt(&mut self) {
+        loop {
+            match &self.peek().tok {
+                Tok::Newline => {
+                    self.bump();
+                    return;
+                }
+                Tok::RBrace | Tok::Eof => return,
+                _ => {
+                    self.bump();
+                }
+            }
+        }
+    }
+
+    /// Recover past a whole `{ ... }` block (brace-balanced).
+    fn sync_block(&mut self) {
+        // Consume up to and including the opening brace, if present on
+        // this line; otherwise just sync the statement.
+        loop {
+            match &self.peek().tok {
+                Tok::LBrace => break,
+                Tok::Newline | Tok::Eof => {
+                    self.sync_stmt();
+                    return;
+                }
+                _ => {
+                    self.bump();
+                }
+            }
+        }
+        let mut depth = 0usize;
+        loop {
+            match self.bump().tok {
+                Tok::LBrace => depth += 1,
+                Tok::RBrace => {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        return;
+                    }
+                }
+                Tok::Eof => return,
+                _ => {}
+            }
+        }
+    }
+
+    fn file(&mut self) -> SpecFile {
+        let mut file = SpecFile::default();
+        loop {
+            self.skip_newlines();
+            if self.at_eof() {
+                return file;
+            }
+            let token = self.peek().clone();
+            match &token.tok {
+                Tok::Ident(word) => match word.as_str() {
+                    "campaign" | "sweep" | "workload" | "persist" => {
+                        let keyword = self.bump().span;
+                        if let Some(block) = self.block(keyword) {
+                            file.sections.push(match word.as_str() {
+                                "campaign" => Section::Campaign(block),
+                                "sweep" => Section::Sweep(block),
+                                "workload" => Section::Workload(block),
+                                _ => Section::Persist(block),
+                            });
+                        }
+                    }
+                    "strategy" => {
+                        let keyword = self.bump().span;
+                        if !self.expect(Tok::Eq, "after 'strategy'") {
+                            self.sync_stmt();
+                            continue;
+                        }
+                        match self.value() {
+                            Some(value) => {
+                                file.sections.push(Section::Strategy(StrategyDecl {
+                                    keyword,
+                                    value,
+                                }));
+                                self.end_stmt();
+                            }
+                            None => self.sync_stmt(),
+                        }
+                    }
+                    "model" => {
+                        if let Some(model) = self.model_block() {
+                            file.sections.push(Section::Model(model));
+                        }
+                    }
+                    other => {
+                        let help = did_you_mean(other, SECTION_KEYWORDS)
+                            .map(|s| format!("did you mean '{s}'?"))
+                            .unwrap_or_else(|| {
+                                format!(
+                                    "sections are: {}",
+                                    crate::util::text::name_list(SECTION_KEYWORDS)
+                                )
+                            });
+                        self.diags.error_help(
+                            token.span,
+                            format!("unknown section '{other}'"),
+                            help,
+                        );
+                        self.bump();
+                        self.sync_block();
+                    }
+                },
+                _ => {
+                    self.diags.error(
+                        token.span,
+                        format!(
+                            "expected a section keyword, found {}",
+                            token.tok.describe()
+                        ),
+                    );
+                    self.sync_stmt();
+                }
+            }
+        }
+    }
+
+    /// Expect end-of-statement: a newline (consumed) or a closing brace
+    /// (left for the block loop).
+    fn end_stmt(&mut self) {
+        match &self.peek().tok {
+            Tok::Newline => {
+                self.bump();
+            }
+            Tok::RBrace | Tok::Eof => {}
+            other => {
+                let (span, found) = (self.peek().span, other.describe());
+                self.diags
+                    .error(span, format!("expected end of line after statement, found {found}"));
+                self.sync_stmt();
+            }
+        }
+    }
+
+    fn block(&mut self, keyword: Span) -> Option<Block> {
+        if !self.expect(Tok::LBrace, "to open the block") {
+            self.sync_block();
+            return None;
+        }
+        let mut entries = Vec::new();
+        loop {
+            self.skip_newlines();
+            if self.eat(&Tok::RBrace) {
+                return Some(Block { keyword, entries });
+            }
+            if self.at_eof() {
+                self.diags.error(self.peek().span, "expected '}' to close the block");
+                return Some(Block { keyword, entries });
+            }
+            match self.key_value() {
+                Some(entry) => {
+                    entries.push(entry);
+                    self.end_stmt();
+                }
+                None => self.sync_stmt(),
+            }
+        }
+    }
+
+    fn ident(&mut self, context: &str) -> Option<Spanned<String>> {
+        match &self.peek().tok {
+            Tok::Ident(word) => {
+                let spanned = Spanned::new(word.clone(), self.peek().span);
+                self.bump();
+                Some(spanned)
+            }
+            other => {
+                let (span, found) = (self.peek().span, other.describe());
+                self.diags.error(span, format!("expected {context}, found {found}"));
+                None
+            }
+        }
+    }
+
+    fn key_value(&mut self) -> Option<KeyValue> {
+        let key = self.ident("a key")?;
+        if !self.expect(Tok::Eq, &format!("after key '{}'", key.node)) {
+            return None;
+        }
+        let value = self.value()?;
+        Some(KeyValue { key, value })
+    }
+
+    fn value(&mut self) -> Option<Value> {
+        let token = self.peek().clone();
+        match &token.tok {
+            Tok::Num(x) => {
+                self.bump();
+                // `A / B` fraction (shard designators).
+                if self.at(&Tok::Slash) {
+                    self.bump();
+                    if let Tok::Num(b) = self.peek().tok {
+                        let end = self.bump().span;
+                        return Some(Value {
+                            kind: ValueKind::Fraction(*x, b),
+                            span: token.span.join(end),
+                        });
+                    }
+                    let (span, found) = (self.peek().span, self.peek().tok.describe());
+                    self.diags
+                        .error(span, format!("expected a number after '/', found {found}"));
+                    return None;
+                }
+                Some(Value { kind: ValueKind::Num(*x), span: token.span })
+            }
+            Tok::Dims(r, c) => {
+                self.bump();
+                Some(Value { kind: ValueKind::Dims(*r, *c), span: token.span })
+            }
+            Tok::Str(text) => {
+                self.bump();
+                Some(Value { kind: ValueKind::Str(text.clone()), span: token.span })
+            }
+            Tok::Ident(word) => {
+                let name = Spanned::new(word.clone(), token.span);
+                self.bump();
+                if self.at(&Tok::LParen) {
+                    return self.nested(|parser| parser.call(name));
+                }
+                Some(Value { kind: ValueKind::Word(name.node), span: token.span })
+            }
+            Tok::LBracket => self.nested(Self::list),
+            other => {
+                self.diags.error(
+                    token.span,
+                    format!("expected a value, found {}", other.describe()),
+                );
+                None
+            }
+        }
+    }
+
+    /// Run a nested-value parse (`[...]` / `(...)`) under the depth cap.
+    fn nested(&mut self, parse: impl FnOnce(&mut Self) -> Option<Value>) -> Option<Value> {
+        if self.depth >= MAX_VALUE_DEPTH {
+            let span = self.peek().span;
+            self.diags.error(span, "value nesting too deep");
+            return None;
+        }
+        self.depth += 1;
+        let result = parse(self);
+        self.depth -= 1;
+        result
+    }
+
+    fn call(&mut self, name: Spanned<String>) -> Option<Value> {
+        let open = self.bump().span; // consume '('
+        let mut args = Vec::new();
+        loop {
+            if let Tok::RParen = self.peek().tok {
+                let close = self.bump().span;
+                return Some(Value {
+                    kind: ValueKind::Call { name: name.clone(), args },
+                    span: name.span.join(close),
+                });
+            }
+            if self.at_eof() {
+                self.diags.error(open, "unclosed '(' in call");
+                return None;
+            }
+            // Named argument: `ident = value`.
+            let arg_name = match (&self.peek().tok, &self.peek2().tok) {
+                (Tok::Ident(word), Tok::Eq) => {
+                    let spanned = Spanned::new(word.clone(), self.peek().span);
+                    self.bump();
+                    self.bump();
+                    Some(spanned)
+                }
+                _ => None,
+            };
+            let value = self.value()?;
+            args.push(Arg { name: arg_name, value });
+            if !self.eat(&Tok::Comma) && !self.at(&Tok::RParen) {
+                let (span, found) = (self.peek().span, self.peek().tok.describe());
+                self.diags
+                    .error(span, format!("expected ',' or ')' in call arguments, found {found}"));
+                return None;
+            }
+        }
+    }
+
+    fn list(&mut self) -> Option<Value> {
+        let open = self.bump().span; // consume '['
+        let mut items = Vec::new();
+        loop {
+            if let Tok::RBracket = self.peek().tok {
+                let close = self.bump().span;
+                return Some(Value { kind: ValueKind::List(items), span: open.join(close) });
+            }
+            if self.at_eof() {
+                self.diags.error(open, "unclosed '[' in list");
+                return None;
+            }
+            let item = self.value()?;
+            items.push(item);
+            if !self.eat(&Tok::Comma) && !self.at(&Tok::RBracket) {
+                let (span, found) = (self.peek().span, self.peek().tok.describe());
+                self.diags
+                    .error(span, format!("expected ',' or ']' in list, found {found}"));
+                return None;
+            }
+        }
+    }
+
+    fn model_block(&mut self) -> Option<ModelBlock> {
+        let keyword = self.bump().span; // consume 'model'
+        let name = match self.ident("a model name after 'model'") {
+            Some(name) => name,
+            None => {
+                self.sync_block();
+                return None;
+            }
+        };
+        let like = if let Tok::Ident(word) = &self.peek().tok {
+            if word == "like" {
+                self.bump();
+                match self.ident("a zoo model name after 'like'") {
+                    Some(target) => Some(target),
+                    None => {
+                        self.sync_block();
+                        return None;
+                    }
+                }
+            } else {
+                let (span, word) = (self.peek().span, word.clone());
+                self.diags.error_help(
+                    span,
+                    format!("unexpected '{word}' after the model name"),
+                    "write 'model NAME { ... }' or 'model NAME like ZOO { ... }'",
+                );
+                self.sync_block();
+                return None;
+            }
+        } else {
+            None
+        };
+        if !self.expect(Tok::LBrace, "to open the model block") {
+            self.sync_block();
+            return None;
+        }
+        let mut stmts = Vec::new();
+        loop {
+            self.skip_newlines();
+            if self.eat(&Tok::RBrace) {
+                return Some(ModelBlock { keyword, name, like, stmts });
+            }
+            if self.at_eof() {
+                self.diags.error(self.peek().span, "expected '}' to close the model block");
+                return Some(ModelBlock { keyword, name, like, stmts });
+            }
+            match self.model_stmt() {
+                Some(stmt) => {
+                    stmts.push(stmt);
+                    self.end_stmt();
+                }
+                None => self.sync_stmt(),
+            }
+        }
+    }
+
+    fn model_stmt(&mut self) -> Option<ModelStmt> {
+        // A layer statement is `KIND NAME { ... }`; anything with `=`
+        // after the first word is a plain key/value.
+        if let (Tok::Ident(word), Tok::Ident(_)) = (&self.peek().tok, &self.peek2().tok) {
+            if LAYER_KEYWORDS.contains(&word.as_str()) {
+                return self.layer_stmt().map(ModelStmt::Layer);
+            }
+            let (span, word) = (self.peek().span, word.clone());
+            let help = did_you_mean(&word, LAYER_KEYWORDS)
+                .map(|s| format!("did you mean '{s}'?"))
+                .unwrap_or_else(|| "layer statements are conv/fc/pool/layer NAME { ... }".into());
+            self.diags
+                .error_help(span, format!("unknown layer kind '{word}'"), help);
+            return None;
+        }
+        self.key_value().map(ModelStmt::KeyValue)
+    }
+
+    fn layer_stmt(&mut self) -> Option<LayerStmt> {
+        let kind_token = self.bump();
+        let kind = match kind_token.tok {
+            Tok::Ident(word) => Spanned::new(word, kind_token.span),
+            _ => unreachable!("layer_stmt is only entered on an identifier"),
+        };
+        let name = self.ident("a layer name")?;
+        if !self.expect(Tok::LBrace, "to open the layer fields") {
+            return None;
+        }
+        let mut fields = Vec::new();
+        loop {
+            self.skip_newlines();
+            if let Tok::RBrace = self.peek().tok {
+                let close = self.bump().span;
+                return Some(LayerStmt {
+                    span: kind.span.join(close),
+                    kind,
+                    name,
+                    fields,
+                });
+            }
+            if self.at_eof() {
+                self.diags.error(self.peek().span, "expected '}' to close the layer fields");
+                let end = self.peek().span;
+                return Some(LayerStmt { span: kind.span.join(end), kind, name, fields });
+            }
+            let field = self.key_value()?;
+            fields.push(field);
+            self.skip_newlines();
+            if !self.eat(&Tok::Comma) && !matches!(self.peek().tok, Tok::RBrace) {
+                let (span, found) = (self.peek().span, self.peek().tok.describe());
+                self.diags
+                    .error(span, format!("expected ',' or '}}' in layer fields, found {found}"));
+                return None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok(source: &str) -> SpecFile {
+        let mut diags = Diagnostics::new();
+        let file = parse(source, &mut diags);
+        assert!(!diags.has_errors(), "unexpected errors:\n{}", diags.render(source, "t.qsl"));
+        file
+    }
+
+    #[test]
+    fn parses_all_section_kinds() {
+        let file = parse_ok(
+            "campaign {\n  seed = 7\n  shard = 0 / 2\n}\n\
+             sweep {\n  pe_type = [int16, lightpe1]\n  array = [8x8]\n}\n\
+             strategy = random(64, seed = 11)\n\
+             workload {\n  dataset = cifar10\n  models = [resnet20]\n}\n\
+             model tiny {\n  conv c1 { in = 32, channels = 3, out = 16, kernel = 3 }\n  fc head { in = 4096, out = 10 }\n}\n\
+             persist {\n  db = \"out/db.json\"\n}\n",
+        );
+        assert_eq!(file.sections.len(), 6);
+        assert!(matches!(file.sections[0], Section::Campaign(_)));
+        assert!(matches!(file.sections[2], Section::Strategy(_)));
+        match &file.sections[4] {
+            Section::Model(model) => {
+                assert_eq!(model.name.node, "tiny");
+                assert!(model.like.is_none());
+                assert_eq!(model.stmts.len(), 2);
+            }
+            other => panic!("expected a model, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_like_models_with_overrides() {
+        let file = parse_ok(
+            "model wide like resnet20 {\n  dataset = cifar100\n  layer fc { out = 100 }\n}\n",
+        );
+        match &file.sections[0] {
+            Section::Model(model) => {
+                assert_eq!(model.like.as_ref().unwrap().node, "resnet20");
+                assert!(matches!(model.stmts[0], ModelStmt::KeyValue(_)));
+                match &model.stmts[1] {
+                    ModelStmt::Layer(layer) => {
+                        assert_eq!(layer.kind.node, "layer");
+                        assert_eq!(layer.name.node, "fc");
+                        assert_eq!(layer.fields.len(), 1);
+                    }
+                    other => panic!("expected a layer override, got {other:?}"),
+                }
+            }
+            other => panic!("expected a model, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn multiline_lists_parse() {
+        let file = parse_ok("sweep {\n  glb_kib = [\n    64,\n    128\n  ]\n}\n");
+        match &file.sections[0] {
+            Section::Sweep(block) => match &block.entries[0].value.kind {
+                ValueKind::List(items) => assert_eq!(items.len(), 2),
+                other => panic!("expected a list, got {other:?}"),
+            },
+            other => panic!("expected sweep, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reports_multiple_errors_in_one_pass() {
+        let source = "campaing {\n  seed = 7\n}\n\
+                      sweep {\n  pe_type = \n}\n\
+                      strategy = \n";
+        let mut diags = Diagnostics::new();
+        let _ = parse(source, &mut diags);
+        assert!(diags.error_count() >= 3, "wanted >=3 errors, got:\n{diags}");
+        let rendered = diags.render(source, "bad.qsl");
+        assert!(rendered.contains("did you mean 'campaign'?"), "{rendered}");
+    }
+
+    #[test]
+    fn recovers_within_a_block() {
+        // One bad statement must not eat the good one after it.
+        let source = "campaign {\n  seed 7\n  workers = 2\n}\n";
+        let mut diags = Diagnostics::new();
+        let file = parse(source, &mut diags);
+        assert!(diags.has_errors());
+        match &file.sections[0] {
+            Section::Campaign(block) => {
+                assert_eq!(block.entries.len(), 1);
+                assert_eq!(block.entries[0].key.node, "workers");
+            }
+            other => panic!("expected campaign, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pathological_nesting_is_an_error_not_a_stack_overflow() {
+        for depth in [MAX_VALUE_DEPTH + 1, 10_000] {
+            let source = format!("sweep {{\n  glb_kib = {}64\n}}\n", "[".repeat(depth));
+            let mut diags = Diagnostics::new();
+            let _ = parse(&source, &mut diags);
+            assert!(diags.has_errors(), "depth {depth} must error");
+        }
+        // Shallow nesting (the grammar's real shapes) still parses.
+        let _ = parse_ok("sweep {\n  spad = [spad(1, 2, 3)]\n}\n");
+    }
+
+    #[test]
+    fn unknown_section_skips_its_block() {
+        let source = "swep {\n  pe_type = [int16]\n}\npersist {\n  db = \"x\"\n}\n";
+        let mut diags = Diagnostics::new();
+        let file = parse(source, &mut diags);
+        assert_eq!(diags.error_count(), 1);
+        assert_eq!(file.sections.len(), 1);
+        assert!(matches!(file.sections[0], Section::Persist(_)));
+    }
+}

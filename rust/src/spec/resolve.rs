@@ -1,0 +1,1594 @@
+//! Semantic validation and lowering: AST → [`ResolvedCampaign`].
+//!
+//! The resolver walks a parsed [`SpecFile`], reports **every** semantic
+//! problem into the shared [`Diagnostics`] batch (unknown keys with
+//! "did you mean" suggestions, bad values, impossible layer shapes,
+//! dangling model references, ...), and — when no errors remain —
+//! lowers the spec into the concrete campaign types the rest of the
+//! framework already speaks: [`SweepSpec`], [`dnn::Model`](Model),
+//! [`StrategyChoice`], and a [`PersistPlan`].
+//!
+//! A [`ResolvedCampaign`] also owns the spec's *canonical form*
+//! ([`ResolvedCampaign::canonical`]): a fully-explicit QSL rendering
+//! that re-parses to the same campaign (a fixed point). The campaign
+//! [`fingerprint`](ResolvedCampaign::fingerprint) is FNV-1a over the
+//! canonical *identity* subset (everything that changes results:
+//! sweep, seed, shard, strategy, dataset, model stacks — but not
+//! worker counts or persistence paths), and is pinned into checkpoint
+//! journals so resuming under an edited spec is rejected.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+
+use super::ast::{
+    Arg, Block, KeyValue, LayerStmt, ModelBlock, ModelStmt, Section, SpecFile, StrategyDecl,
+    Value, ValueKind,
+};
+use super::diag::{Diagnostics, Span};
+use super::lexer::fmt_num;
+use crate::arch::{ScratchpadCfg, SweepSpec};
+use crate::dnn::{model_for, Dataset, Layer, LayerKind, Model, ModelKind};
+use crate::error::{Error, Result};
+use crate::explore::Explorer;
+use crate::pareto::{RandomSample, SuccessiveHalving};
+use crate::quant::PeType;
+use crate::util::text::{did_you_mean, name_list};
+
+/// Canonical QSL keys of the zoo models ([`ModelKind::KEYS`]).
+pub const ZOO_KEYS: [&str; 5] = ModelKind::KEYS;
+
+/// Canonical QSL keys of the datasets ([`Dataset::KEYS`]).
+pub const DATASET_KEYS: [&str; 3] = Dataset::KEYS;
+
+/// Canonical QSL keys of the PE types.
+pub const PE_KEYS: [&str; 4] = ["fp32", "int16", "lightpe1", "lightpe2"];
+
+/// The canonical QSL key of a zoo model.
+pub fn zoo_key(kind: ModelKind) -> &'static str {
+    match kind {
+        ModelKind::Vgg16 => "vgg16",
+        ModelKind::ResNet20 => "resnet20",
+        ModelKind::ResNet34 => "resnet34",
+        ModelKind::ResNet50 => "resnet50",
+        ModelKind::ResNet56 => "resnet56",
+    }
+}
+
+/// The canonical QSL key of a dataset.
+pub fn dataset_key(dataset: Dataset) -> &'static str {
+    match dataset {
+        Dataset::Cifar10 => "cifar10",
+        Dataset::Cifar100 => "cifar100",
+        Dataset::ImageNet => "imagenet",
+    }
+}
+
+/// The canonical QSL key of a PE type.
+pub fn pe_key(pe: PeType) -> &'static str {
+    match pe {
+        PeType::Fp32 => "fp32",
+        PeType::Int16 => "int16",
+        PeType::LightPe1 => "lightpe1",
+        PeType::LightPe2 => "lightpe2",
+    }
+}
+
+/// Datasets a zoo model is defined for (the CIFAR ResNets are 32×32
+/// models; ResNet-34/50 assume the ImageNet stem).
+fn valid_datasets(kind: ModelKind) -> &'static [Dataset] {
+    match kind {
+        ModelKind::Vgg16 => &[Dataset::Cifar10, Dataset::Cifar100, Dataset::ImageNet],
+        ModelKind::ResNet20 | ModelKind::ResNet56 => &[Dataset::Cifar10, Dataset::Cifar100],
+        ModelKind::ResNet34 | ModelKind::ResNet50 => &[Dataset::ImageNet],
+    }
+}
+
+/// One workload entry: a zoo model (instantiated on the campaign
+/// dataset at lowering time) or a fully-resolved custom model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadModel {
+    /// A paper zoo model, referenced by kind.
+    Zoo(ModelKind),
+    /// A user-defined model (custom stack, or a `like` derivation with
+    /// its overrides already applied).
+    Custom(Model),
+}
+
+/// The search strategy a campaign runs — the resolver's (and the CLI's)
+/// concrete strategy selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyChoice {
+    /// Walk every design point.
+    Exhaustive,
+    /// [`RandomSample`]`{ n, seed }`.
+    Random {
+        /// Number of points to sample.
+        n: usize,
+        /// Sampling seed.
+        seed: u64,
+    },
+    /// [`SuccessiveHalving`]`{ keep, rounds }`.
+    Halving {
+        /// Survivors to fully evaluate.
+        keep: usize,
+        /// Halving rounds.
+        rounds: usize,
+    },
+}
+
+impl StrategyChoice {
+    /// The [`Strategy::descriptor`](crate::pareto::Strategy::descriptor)
+    /// this choice lowers to.
+    pub fn descriptor(&self) -> String {
+        match self {
+            StrategyChoice::Exhaustive => "exhaustive".into(),
+            StrategyChoice::Random { n, seed } => format!("random:{n}:{seed}"),
+            StrategyChoice::Halving { keep, rounds } => format!("halving:{keep}:{rounds}"),
+        }
+    }
+
+    /// Canonical QSL rendering (`random(64, seed = 11)`).
+    pub fn canonical(&self) -> String {
+        match self {
+            StrategyChoice::Exhaustive => "exhaustive".into(),
+            StrategyChoice::Random { n, seed } => format!("random({n}, seed = {seed})"),
+            StrategyChoice::Halving { keep, rounds } => {
+                format!("halving({keep}, rounds = {rounds})")
+            }
+        }
+    }
+
+    /// Parse the CLI's `--strategy` descriptor: `exhaustive`,
+    /// `random:N[:SEED]` (SEED defaults to the campaign seed), or
+    /// `halving:KEEP[:ROUNDS]` (ROUNDS defaults to 3).
+    pub fn parse_cli(text: &str, campaign_seed: u64) -> Result<Self> {
+        let bad = |detail: &str| {
+            Error::ParseError(format!(
+                "bad --strategy '{text}' ({detail}; expected exhaustive, random:N[:SEED], \
+                 or halving:KEEP[:ROUNDS])"
+            ))
+        };
+        let mut parts = text.split(':');
+        let kind = parts.next().unwrap_or("");
+        let arg1 = parts.next();
+        let arg2 = parts.next();
+        if parts.next().is_some() {
+            return Err(bad("too many parameters"));
+        }
+        let parse_num = |value: Option<&str>, name: &str| -> Result<Option<u64>> {
+            match value {
+                None => Ok(None),
+                Some(v) => v
+                    .trim()
+                    .parse::<u64>()
+                    .map(Some)
+                    .map_err(|_| bad(&format!("{name} is not an integer"))),
+            }
+        };
+        match kind {
+            "exhaustive" => {
+                if arg1.is_some() {
+                    return Err(bad("exhaustive takes no parameters"));
+                }
+                Ok(StrategyChoice::Exhaustive)
+            }
+            "random" => {
+                let n = parse_num(arg1, "N")?.ok_or_else(|| bad("random needs N"))? as usize;
+                let seed = parse_num(arg2, "SEED")?.unwrap_or(campaign_seed);
+                Ok(StrategyChoice::Random { n, seed })
+            }
+            "halving" => {
+                let keep =
+                    parse_num(arg1, "KEEP")?.ok_or_else(|| bad("halving needs KEEP"))? as usize;
+                let rounds = parse_num(arg2, "ROUNDS")?.unwrap_or(3) as usize;
+                Ok(StrategyChoice::Halving { keep, rounds })
+            }
+            _ => Err(bad("unknown strategy")),
+        }
+    }
+
+    /// Attach this choice to an explorer. `Exhaustive` attaches nothing:
+    /// the explorer's default walk *is* exhaustive, and leaving it unset
+    /// keeps `run()`'s eval-vector pre-sizing (the manifest descriptor is
+    /// `"exhaustive"` either way, so journals are interchangeable).
+    pub fn attach(&self, explorer: Explorer) -> Explorer {
+        match *self {
+            StrategyChoice::Exhaustive => explorer,
+            StrategyChoice::Random { n, seed } => explorer.strategy(RandomSample { n, seed }),
+            StrategyChoice::Halving { keep, rounds } => {
+                explorer.strategy(SuccessiveHalving { keep, rounds })
+            }
+        }
+    }
+}
+
+/// Where a campaign persists its artifacts (all optional).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PersistPlan {
+    /// Evaluation-database output path (`dse --save`).
+    pub db: Option<PathBuf>,
+    /// Content-addressed point-cache path (`dse --cache`).
+    pub cache: Option<PathBuf>,
+    /// Checkpoint-journal path (`dse --resume`).
+    pub checkpoint: Option<PathBuf>,
+    /// Journal flush interval in points (`dse --every`; default 16).
+    pub every: usize,
+    /// Streaming-frontier output path (`dse --frontier`).
+    pub frontier: Option<PathBuf>,
+}
+
+impl PersistPlan {
+    /// An empty plan with the default flush interval.
+    pub fn new() -> Self {
+        Self { db: None, cache: None, checkpoint: None, every: 16, frontier: None }
+    }
+}
+
+impl Default for PersistPlan {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A fully validated, fully lowered campaign — the meeting point of the
+/// QSL front end and the flag-driven CLI (both construct one of these,
+/// so `qadam run spec.qsl` and the equivalent `qadam dse` invocation
+/// execute byte-identically).
+#[derive(Debug, Clone)]
+pub struct ResolvedCampaign {
+    /// The design space to sweep.
+    pub sweep: SweepSpec,
+    /// The campaign dataset (labels the database; instantiates zoo
+    /// workload models).
+    pub dataset: Dataset,
+    /// The workload, in evaluation order.
+    pub workload: Vec<WorkloadModel>,
+    /// Synthesis-noise seed.
+    pub seed: u64,
+    /// Worker threads (`0` = auto).
+    pub workers: usize,
+    /// Round-robin shard `(shard, num_shards)`.
+    pub shard: (usize, usize),
+    /// Search strategy.
+    pub strategy: StrategyChoice,
+    /// Persistence plan.
+    pub persist: PersistPlan,
+    /// Keys the spec set explicitly (vs. defaults) — the CLI consults
+    /// this to reject contradictory flag overrides.
+    set_keys: BTreeSet<String>,
+}
+
+impl ResolvedCampaign {
+    /// Build a campaign directly (the flag-driven path). No keys count
+    /// as "explicitly set", so flag merging never applies to these.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        sweep: SweepSpec,
+        dataset: Dataset,
+        workload: Vec<WorkloadModel>,
+        seed: u64,
+        workers: usize,
+        shard: (usize, usize),
+        strategy: StrategyChoice,
+        persist: PersistPlan,
+    ) -> Self {
+        Self {
+            sweep,
+            dataset,
+            workload,
+            seed,
+            workers,
+            shard,
+            strategy,
+            persist,
+            set_keys: BTreeSet::new(),
+        }
+    }
+
+    /// Whether the spec explicitly set `key` (`"seed"`, `"workers"`,
+    /// `"shard"`, `"strategy.seed"`, `"db"`, `"cache"`, `"checkpoint"`,
+    /// `"every"`, `"frontier"`). Flag-built campaigns set nothing.
+    pub fn sets(&self, key: &str) -> bool {
+        self.set_keys.contains(key)
+    }
+
+    /// Record that `key` was explicitly set (used by the resolver and
+    /// by CLI flag merging).
+    pub fn mark_set(&mut self, key: &str) {
+        self.set_keys.insert(key.to_string());
+    }
+
+    /// Materialize the workload as [`Model`]s, in evaluation order. Zoo
+    /// entries instantiate on the campaign dataset, exactly like
+    /// [`Explorer::dataset`] does, so spec-driven and flag-driven
+    /// campaigns see identical models.
+    pub fn models(&self) -> Vec<Model> {
+        self.workload
+            .iter()
+            .map(|entry| match entry {
+                WorkloadModel::Zoo(kind) => model_for(*kind, self.dataset),
+                WorkloadModel::Custom(model) => model.clone(),
+            })
+            .collect()
+    }
+
+    /// The canonical QSL rendering of this campaign: fully explicit
+    /// (every default spelled out), comment-free, deterministic.
+    /// Re-parsing it resolves to the same campaign — `canonical` is a
+    /// fixed point of `parse → resolve → canonical`.
+    pub fn canonical(&self) -> String {
+        self.render(false)
+    }
+
+    /// The canonical rendering of the campaign's *identity*: the fields
+    /// that determine results. Worker counts and persistence paths are
+    /// excluded — editing those must not invalidate a resume.
+    pub fn canonical_identity(&self) -> String {
+        self.render(true)
+    }
+
+    /// FNV-1a fingerprint of [`Self::canonical_identity`]. Pinned into
+    /// checkpoint-journal manifests via
+    /// [`Explorer::campaign_fingerprint`], so a resume under an edited
+    /// spec fails with a typed error instead of replaying foreign points.
+    pub fn fingerprint(&self) -> u64 {
+        crate::util::fnv1a_64(self.canonical_identity().as_bytes())
+    }
+
+    fn render(&self, identity_only: bool) -> String {
+        let mut out = String::new();
+        out.push_str("campaign {\n");
+        out.push_str(&format!("  seed = {}\n", self.seed));
+        if !identity_only {
+            out.push_str(&format!("  workers = {}\n", self.workers));
+        }
+        out.push_str(&format!("  shard = {} / {}\n", self.shard.0, self.shard.1));
+        out.push_str("}\n\n");
+        out.push_str("sweep {\n");
+        let words = |items: Vec<String>| items.join(", ");
+        out.push_str(&format!(
+            "  pe_type = [{}]\n",
+            words(self.sweep.pe_types.iter().map(|&p| pe_key(p).to_string()).collect())
+        ));
+        out.push_str(&format!(
+            "  array = [{}]\n",
+            words(self.sweep.array_dims.iter().map(|&(r, c)| format!("{r}x{c}")).collect())
+        ));
+        out.push_str(&format!(
+            "  glb_kib = [{}]\n",
+            words(self.sweep.glb_kib.iter().map(|g| g.to_string()).collect())
+        ));
+        out.push_str(&format!(
+            "  spad = [{}]\n",
+            words(
+                self.sweep
+                    .spads
+                    .iter()
+                    .map(|s| format!(
+                        "spad({}, {}, {})",
+                        s.ifmap_entries, s.filter_entries, s.psum_entries
+                    ))
+                    .collect()
+            )
+        ));
+        out.push_str(&format!(
+            "  dram_gbps = [{}]\n",
+            words(self.sweep.dram_bw_gbps.iter().map(|&b| fmt_num(b)).collect())
+        ));
+        out.push_str(&format!(
+            "  clock_ghz = [{}]\n",
+            words(self.sweep.clock_ghz.iter().map(|&c| fmt_num(c)).collect())
+        ));
+        out.push_str("}\n\n");
+        out.push_str(&format!("strategy = {}\n\n", self.strategy.canonical()));
+        out.push_str("workload {\n");
+        out.push_str(&format!("  dataset = {}\n", dataset_key(self.dataset)));
+        let names: Vec<String> = self
+            .workload
+            .iter()
+            .map(|entry| match entry {
+                WorkloadModel::Zoo(kind) => zoo_key(*kind).to_string(),
+                WorkloadModel::Custom(model) => model.name.clone(),
+            })
+            .collect();
+        out.push_str(&format!("  models = [{}]\n", names.join(", ")));
+        out.push_str("}\n");
+        for entry in &self.workload {
+            if let WorkloadModel::Custom(model) = entry {
+                out.push('\n');
+                out.push_str(&render_model(model));
+            }
+        }
+        if !identity_only {
+            let mut lines: Vec<String> = Vec::new();
+            if let Some(path) = &self.persist.db {
+                lines.push(format!("  db = {}", quote(path)));
+            }
+            if let Some(path) = &self.persist.cache {
+                lines.push(format!("  cache = {}", quote(path)));
+            }
+            if let Some(path) = &self.persist.checkpoint {
+                lines.push(format!("  checkpoint = {}", quote(path)));
+                lines.push(format!("  every = {}", self.persist.every));
+            }
+            if let Some(path) = &self.persist.frontier {
+                lines.push(format!("  frontier = {}", quote(path)));
+            }
+            if !lines.is_empty() {
+                out.push_str("\npersist {\n");
+                for line in lines {
+                    out.push_str(&line);
+                    out.push('\n');
+                }
+                out.push_str("}\n");
+            }
+        }
+        out
+    }
+
+    /// One-screen resolved summary (the `qadam validate` output).
+    pub fn summary(&self) -> String {
+        let models = self.models();
+        let points = self.sweep.len();
+        let shard_points = if self.shard.1 > 1 {
+            (points - self.shard.0.min(points)).div_ceil(self.shard.1)
+        } else {
+            points
+        };
+        let mut out = format!(
+            "campaign: {} design points x {} models ({} evaluations{})\n",
+            shard_points,
+            models.len(),
+            shard_points * models.len(),
+            match self.strategy {
+                StrategyChoice::Exhaustive => String::new(),
+                _ => " before strategy selection".to_string(),
+            }
+        );
+        out.push_str(&format!(
+            "  sweep: {} pe_type x {} array x {} glb_kib x {} spad x {} dram_gbps x {} clock_ghz\n",
+            self.sweep.pe_types.len(),
+            self.sweep.array_dims.len(),
+            self.sweep.glb_kib.len(),
+            self.sweep.spads.len(),
+            self.sweep.dram_bw_gbps.len(),
+            self.sweep.clock_ghz.len(),
+        ));
+        out.push_str(&format!("  dataset: {}\n", self.dataset.name()));
+        let described: Vec<String> = self
+            .workload
+            .iter()
+            .zip(&models)
+            .map(|(entry, model)| match entry {
+                WorkloadModel::Zoo(_) => format!("{} (zoo)", model.name),
+                WorkloadModel::Custom(_) => format!(
+                    "{} (custom, {} layers, {:.3e} MACs)",
+                    model.name,
+                    model.layers.len(),
+                    model.total_macs() as f64
+                ),
+            })
+            .collect();
+        out.push_str(&format!("  models: {}\n", described.join(", ")));
+        out.push_str(&format!("  strategy: {}\n", self.strategy.descriptor()));
+        out.push_str(&format!(
+            "  seed: {}, workers: {}, shard: {}/{}\n",
+            self.seed,
+            if self.workers == 0 { "auto".to_string() } else { self.workers.to_string() },
+            self.shard.0,
+            self.shard.1
+        ));
+        let mut persisted: Vec<String> = Vec::new();
+        if let Some(p) = &self.persist.db {
+            persisted.push(format!("db={}", p.display()));
+        }
+        if let Some(p) = &self.persist.cache {
+            persisted.push(format!("cache={}", p.display()));
+        }
+        if let Some(p) = &self.persist.checkpoint {
+            persisted.push(format!("checkpoint={} (every {})", p.display(), self.persist.every));
+        }
+        if let Some(p) = &self.persist.frontier {
+            persisted.push(format!("frontier={}", p.display()));
+        }
+        if !persisted.is_empty() {
+            out.push_str(&format!("  persist: {}\n", persisted.join(" ")));
+        }
+        out.push_str(&format!("  fingerprint: {:016x}\n", self.fingerprint()));
+        out
+    }
+}
+
+fn quote(path: &std::path::Path) -> String {
+    let text = path.display().to_string();
+    let mut out = String::with_capacity(text.len() + 2);
+    out.push('"');
+    for ch in text.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn render_model(model: &Model) -> String {
+    let mut out = format!("model {} {{\n", model.name);
+    out.push_str(&format!("  dataset = {}\n", dataset_key(model.dataset)));
+    for layer in &model.layers {
+        match layer.kind {
+            LayerKind::Conv => out.push_str(&format!(
+                "  conv {} {{ in = {}, channels = {}, out = {}, kernel = {}, stride = {}, \
+                 pad = {} }}\n",
+                layer.name, layer.in_hw, layer.in_c, layer.out_c, layer.kernel, layer.stride,
+                layer.padding
+            )),
+            LayerKind::FullyConnected => out.push_str(&format!(
+                "  fc {} {{ in = {}, out = {} }}\n",
+                layer.name, layer.in_c, layer.out_c
+            )),
+            LayerKind::Pool => out.push_str(&format!(
+                "  pool {} {{ in = {}, channels = {}, kernel = {}, stride = {} }}\n",
+                layer.name, layer.in_hw, layer.in_c, layer.kernel, layer.stride
+            )),
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Resolution.
+
+/// Resolve a parsed spec. Reports every semantic problem into `diags`;
+/// returns `Some` only when no *errors* (warnings are fine) were
+/// recorded by this pass or an earlier one.
+pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampaign> {
+    let mut campaign_block: Option<&Block> = None;
+    let mut sweep_block: Option<&Block> = None;
+    let mut strategy_decl: Option<&StrategyDecl> = None;
+    let mut workload_block: Option<&Block> = None;
+    let mut persist_block: Option<&Block> = None;
+    let mut model_blocks: Vec<&ModelBlock> = Vec::new();
+    for section in &file.sections {
+        let slot: (&mut Option<&Block>, &str, Span) = match section {
+            Section::Campaign(b) => (&mut campaign_block, "campaign", b.keyword),
+            Section::Sweep(b) => (&mut sweep_block, "sweep", b.keyword),
+            Section::Workload(b) => (&mut workload_block, "workload", b.keyword),
+            Section::Persist(b) => (&mut persist_block, "persist", b.keyword),
+            Section::Strategy(decl) => {
+                if strategy_decl.is_some() {
+                    diags.error(decl.keyword, "duplicate 'strategy' declaration");
+                } else {
+                    strategy_decl = Some(decl);
+                }
+                continue;
+            }
+            Section::Model(model) => {
+                model_blocks.push(model);
+                continue;
+            }
+        };
+        let (stored, name, keyword) = slot;
+        let block = match section {
+            Section::Campaign(b) | Section::Sweep(b) | Section::Workload(b)
+            | Section::Persist(b) => b,
+            _ => unreachable!(),
+        };
+        if stored.is_some() {
+            diags.error(keyword, format!("duplicate '{name}' section"));
+        } else {
+            *stored = Some(block);
+        }
+    }
+
+    let mut set_keys: BTreeSet<String> = BTreeSet::new();
+    let (mut seed, mut workers, mut shard) = (7u64, 0usize, (0usize, 1usize));
+    if let Some(block) = campaign_block {
+        resolve_campaign_block(block, diags, &mut seed, &mut workers, &mut shard, &mut set_keys);
+    }
+    let sweep = match sweep_block {
+        Some(block) => {
+            set_keys.insert("sweep".into());
+            resolve_sweep_block(block, diags)
+        }
+        None => SweepSpec::default(),
+    };
+    let raw_strategy = match strategy_decl {
+        Some(decl) => {
+            set_keys.insert("strategy".into());
+            resolve_strategy(decl, diags)
+        }
+        None => RawStrategy::Exhaustive,
+    };
+    // Workload: dataset + model-name list (names resolved after the
+    // model definitions are known).
+    let mut dataset: Option<Dataset> = None;
+    let mut model_names: Option<Vec<(String, Span)>> = None;
+    if let Some(block) = workload_block {
+        resolve_workload_block(block, diags, &mut dataset, &mut model_names, &mut set_keys);
+    }
+    let dataset = dataset.unwrap_or(Dataset::Cifar10);
+
+    // Custom model definitions. `defined` tracks every definition by
+    // name — including ones that failed to resolve — so the workload
+    // pass below doesn't pile an "unknown model" error on top of the
+    // definition's own diagnostics.
+    let mut custom: Vec<(String, Model, Span)> = Vec::new();
+    let mut defined: BTreeSet<String> = BTreeSet::new();
+    for block in &model_blocks {
+        let name = &block.name.node;
+        defined.insert(name.clone());
+        if ModelKind::parse(name).is_some() {
+            diags.error_help(
+                block.name.span,
+                format!("model '{name}' shadows the built-in zoo model"),
+                "pick a different name; zoo models are referenced directly in workload.models",
+            );
+            continue;
+        }
+        if custom.iter().any(|(n, _, _)| n == name) {
+            diags.error(block.name.span, format!("duplicate model definition '{name}'"));
+            continue;
+        }
+        if let Some(model) = resolve_model_block(block, dataset, diags) {
+            custom.push((name.clone(), model, block.name.span));
+        }
+    }
+
+    // Workload model list → WorkloadModel entries.
+    let mut workload: Vec<WorkloadModel> = Vec::new();
+    let mut used: BTreeSet<String> = BTreeSet::new();
+    match &model_names {
+        None => {
+            workload = dataset.paper_models().into_iter().map(WorkloadModel::Zoo).collect();
+        }
+        Some(names) => {
+            let mut seen: BTreeSet<String> = BTreeSet::new();
+            for (name, span) in names {
+                if !seen.insert(name.clone()) {
+                    diags.error(*span, format!("duplicate model '{name}' in workload"));
+                    continue;
+                }
+                if let Some((_, model, _)) =
+                    custom.iter().find(|(custom_name, _, _)| custom_name == name)
+                {
+                    used.insert(name.clone());
+                    workload.push(WorkloadModel::Custom(model.clone()));
+                } else if defined.contains(name) {
+                    // Defined but failed to resolve (or shadowed a zoo
+                    // name): its definition already carries the errors.
+                    used.insert(name.clone());
+                } else if let Some(kind) = ModelKind::parse(name) {
+                    if !valid_datasets(kind).contains(&dataset) {
+                        diags.error_help(
+                            *span,
+                            format!(
+                                "zoo model '{name}' is not defined for dataset '{}'",
+                                dataset_key(dataset)
+                            ),
+                            format!(
+                                "valid datasets for {name}: {}",
+                                name_list(valid_datasets(kind).iter().map(|&d| dataset_key(d)))
+                            ),
+                        );
+                    } else {
+                        workload.push(WorkloadModel::Zoo(kind));
+                    }
+                } else {
+                    let candidates: Vec<&str> = custom
+                        .iter()
+                        .map(|(n, _, _)| n.as_str())
+                        .chain(ZOO_KEYS)
+                        .collect();
+                    let help = did_you_mean(name, candidates)
+                        .map(|s| format!("did you mean '{s}'?"))
+                        .unwrap_or_else(|| {
+                            format!("known models: {}", name_list(ZOO_KEYS))
+                        });
+                    diags.error_help(*span, format!("unknown model '{name}'"), help);
+                }
+            }
+        }
+    }
+    for (name, _, span) in &custom {
+        if !used.contains(name) {
+            diags.warn(*span, format!("model '{name}' is defined but not listed in workload.models"));
+        }
+    }
+
+    let persist = match persist_block {
+        Some(block) => resolve_persist_block(block, diags, &mut set_keys),
+        None => PersistPlan::new(),
+    };
+    if persist.checkpoint.is_none() && set_keys.contains("every") {
+        // Span information was consumed inside the block resolver; a
+        // block-level warning is still precise enough.
+        if let Some(block) = persist_block {
+            diags.warn(block.keyword, "'every' has no effect without 'checkpoint'");
+        }
+    }
+
+    // Finalize the strategy: an unseeded random() pins the campaign seed,
+    // exactly like the CLI's random:N.
+    let strategy = match raw_strategy {
+        RawStrategy::Exhaustive => StrategyChoice::Exhaustive,
+        RawStrategy::Random { n, seed: explicit } => {
+            if explicit.is_some() {
+                set_keys.insert("strategy.seed".into());
+            }
+            StrategyChoice::Random { n, seed: explicit.unwrap_or(seed) }
+        }
+        RawStrategy::Halving { keep, rounds } => StrategyChoice::Halving { keep, rounds },
+    };
+
+    if diags.has_errors() {
+        return None;
+    }
+    Some(ResolvedCampaign {
+        sweep,
+        dataset,
+        workload,
+        seed,
+        workers,
+        shard,
+        strategy,
+        persist,
+        set_keys,
+    })
+}
+
+// -------------------------------------------------------------- value guards
+
+fn expect_uint(diags: &mut Diagnostics, value: &Value, what: &str) -> Option<u64> {
+    if let ValueKind::Num(x) = value.kind {
+        if x >= 0.0 && x.fract() == 0.0 && x <= 9.0e15 {
+            return Some(x as u64);
+        }
+        diags.error(
+            value.span,
+            format!("{what} must be a non-negative integer, found {}", fmt_num(x)),
+        );
+        return None;
+    }
+    diags.error(
+        value.span,
+        format!("{what} must be a non-negative integer, found {}", value.kind.describe()),
+    );
+    None
+}
+
+fn expect_pos_uint(diags: &mut Diagnostics, value: &Value, what: &str) -> Option<u64> {
+    let x = expect_uint(diags, value, what)?;
+    if x == 0 {
+        diags.error(value.span, format!("{what} must be at least 1"));
+        return None;
+    }
+    Some(x)
+}
+
+fn expect_pos_num(diags: &mut Diagnostics, value: &Value, what: &str) -> Option<f64> {
+    if let ValueKind::Num(x) = value.kind {
+        if x > 0.0 && x.is_finite() {
+            return Some(x);
+        }
+        diags.error(value.span, format!("{what} must be a positive number, found {}", fmt_num(x)));
+        return None;
+    }
+    diags.error(
+        value.span,
+        format!("{what} must be a positive number, found {}", value.kind.describe()),
+    );
+    None
+}
+
+fn expect_word<'v>(diags: &mut Diagnostics, value: &'v Value, what: &str) -> Option<&'v str> {
+    match &value.kind {
+        ValueKind::Word(word) => Some(word),
+        other => {
+            diags.error(value.span, format!("{what} must be a name, found {}", other.describe()));
+            None
+        }
+    }
+}
+
+fn expect_string<'v>(diags: &mut Diagnostics, value: &'v Value, what: &str) -> Option<&'v str> {
+    match &value.kind {
+        ValueKind::Str(text) if !text.is_empty() => Some(text),
+        ValueKind::Str(_) => {
+            diags.error(value.span, format!("{what} must not be an empty string"));
+            None
+        }
+        other => {
+            diags.error(
+                value.span,
+                format!("{what} must be a quoted path string, found {}", other.describe()),
+            );
+            None
+        }
+    }
+}
+
+fn expect_list<'v>(diags: &mut Diagnostics, value: &'v Value, what: &str) -> Option<&'v [Value]> {
+    match &value.kind {
+        ValueKind::List(items) => {
+            if items.is_empty() {
+                diags.error(value.span, format!("{what} must list at least one value"));
+                return None;
+            }
+            Some(items)
+        }
+        other => {
+            diags.error(
+                value.span,
+                format!("{what} must be a [list], found {}", other.describe()),
+            );
+            None
+        }
+    }
+}
+
+/// Track duplicate keys within one block; returns true when `key` is new.
+fn note_key(diags: &mut Diagnostics, seen: &mut BTreeSet<String>, kv: &KeyValue) -> bool {
+    if seen.insert(kv.key.node.clone()) {
+        true
+    } else {
+        diags.error(kv.key.span, format!("duplicate key '{}'", kv.key.node));
+        false
+    }
+}
+
+fn unknown_key(diags: &mut Diagnostics, kv: &KeyValue, section: &str, known: &[&str]) {
+    let help = did_you_mean(&kv.key.node, known.iter().copied())
+        .map(|s| format!("did you mean '{s}'?"))
+        .unwrap_or_else(|| format!("{section} keys are: {}", name_list(known.iter().copied())));
+    diags.error_help(
+        kv.key.span,
+        format!("unknown {section} key '{}'", kv.key.node),
+        help,
+    );
+}
+
+// ------------------------------------------------------------ section passes
+
+fn resolve_campaign_block(
+    block: &Block,
+    diags: &mut Diagnostics,
+    seed: &mut u64,
+    workers: &mut usize,
+    shard: &mut (usize, usize),
+    set_keys: &mut BTreeSet<String>,
+) {
+    const KEYS: [&str; 3] = ["seed", "workers", "shard"];
+    let mut seen = BTreeSet::new();
+    for kv in &block.entries {
+        if !note_key(diags, &mut seen, kv) {
+            continue;
+        }
+        match kv.key.node.as_str() {
+            "seed" => {
+                if let Some(x) = expect_uint(diags, &kv.value, "seed") {
+                    *seed = x;
+                    set_keys.insert("seed".into());
+                }
+            }
+            "workers" => {
+                if let Some(x) = expect_uint(diags, &kv.value, "workers") {
+                    *workers = x as usize;
+                    set_keys.insert("workers".into());
+                }
+            }
+            "shard" => match kv.value.kind {
+                ValueKind::Fraction(i, n) => {
+                    let ok = i >= 0.0 && n >= 1.0 && i.fract() == 0.0 && n.fract() == 0.0;
+                    if !ok || i >= n {
+                        diags.error(
+                            kv.value.span,
+                            format!(
+                                "shard must be I / N with integers 0 <= I < N, found {} / {}",
+                                fmt_num(i),
+                                fmt_num(n)
+                            ),
+                        );
+                    } else {
+                        *shard = (i as usize, n as usize);
+                        set_keys.insert("shard".into());
+                    }
+                }
+                _ => diags.error_help(
+                    kv.value.span,
+                    format!("shard must be I / N, found {}", kv.value.kind.describe()),
+                    "e.g. 'shard = 0 / 4' runs the first of four round-robin shards",
+                ),
+            },
+            _ => unknown_key(diags, kv, "campaign", &KEYS),
+        }
+    }
+}
+
+fn resolve_sweep_block(block: &Block, diags: &mut Diagnostics) -> SweepSpec {
+    const AXES: [&str; 6] = ["pe_type", "array", "glb_kib", "spad", "dram_gbps", "clock_ghz"];
+    let mut sweep = SweepSpec::default();
+    let mut seen = BTreeSet::new();
+    for kv in &block.entries {
+        if !note_key(diags, &mut seen, kv) {
+            continue;
+        }
+        let Some(items) = (match kv.key.node.as_str() {
+            key if AXES.contains(&key) => expect_list(diags, &kv.value, &format!("axis '{key}'")),
+            _ => {
+                unknown_key(diags, kv, "sweep", &AXES);
+                continue;
+            }
+        }) else {
+            continue;
+        };
+        match kv.key.node.as_str() {
+            "pe_type" => {
+                let mut pes = Vec::new();
+                for item in items {
+                    let Some(word) = expect_word(diags, item, "pe_type entry") else { continue };
+                    match PeType::parse(word) {
+                        Some(pe) => pes.push(pe),
+                        None => {
+                            let help = did_you_mean(word, PE_KEYS)
+                                .map(|s| format!("did you mean '{s}'?"))
+                                .unwrap_or_else(|| {
+                                    format!("PE types are: {}", name_list(PE_KEYS))
+                                });
+                            diags.error_help(
+                                item.span,
+                                format!("unknown PE type '{word}'"),
+                                help,
+                            );
+                        }
+                    }
+                }
+                if !pes.is_empty() {
+                    sweep.pe_types = pes;
+                }
+            }
+            "array" => {
+                let mut dims = Vec::new();
+                for item in items {
+                    match item.kind {
+                        ValueKind::Dims(r, c) if (1..=256).contains(&r) && (1..=256).contains(&c) => {
+                            dims.push((r, c));
+                        }
+                        ValueKind::Dims(r, c) => diags.error(
+                            item.span,
+                            format!("array dimensions {r}x{c} out of range (1..=256 per side)"),
+                        ),
+                        _ => diags.error_help(
+                            item.span,
+                            format!(
+                                "array entries must be ROWSxCOLS dimensions, found {}",
+                                item.kind.describe()
+                            ),
+                            "e.g. 'array = [8x8, 16x16]'",
+                        ),
+                    }
+                }
+                if !dims.is_empty() {
+                    sweep.array_dims = dims;
+                }
+            }
+            "glb_kib" => {
+                let sizes: Vec<usize> = items
+                    .iter()
+                    .filter_map(|item| expect_pos_uint(diags, item, "glb_kib entry"))
+                    .map(|x| x as usize)
+                    .collect();
+                if !sizes.is_empty() {
+                    sweep.glb_kib = sizes;
+                }
+            }
+            "spad" => {
+                let mut spads = Vec::new();
+                for item in items {
+                    if let Some(cfg) = resolve_spad(item, diags) {
+                        spads.push(cfg);
+                    }
+                }
+                if !spads.is_empty() {
+                    sweep.spads = spads;
+                }
+            }
+            "dram_gbps" => {
+                let bws: Vec<f64> = items
+                    .iter()
+                    .filter_map(|item| expect_pos_num(diags, item, "dram_gbps entry"))
+                    .collect();
+                if !bws.is_empty() {
+                    sweep.dram_bw_gbps = bws;
+                }
+            }
+            "clock_ghz" => {
+                let clocks: Vec<f64> = items
+                    .iter()
+                    .filter_map(|item| expect_pos_num(diags, item, "clock_ghz entry"))
+                    .collect();
+                if !clocks.is_empty() {
+                    sweep.clock_ghz = clocks;
+                }
+            }
+            _ => unreachable!("axis keys are filtered above"),
+        }
+    }
+    sweep
+}
+
+fn resolve_spad(value: &Value, diags: &mut Diagnostics) -> Option<ScratchpadCfg> {
+    let bad = |diags: &mut Diagnostics, span: Span, detail: String| {
+        diags.error_help(
+            span,
+            detail,
+            "spad entries are spad(IFMAP_ENTRIES, FILTER_ENTRIES, PSUM_ENTRIES)",
+        );
+        None
+    };
+    match &value.kind {
+        ValueKind::Call { name, args } if name.node == "spad" => {
+            if args.len() != 3 || args.iter().any(|a| a.name.is_some()) {
+                return bad(
+                    diags,
+                    value.span,
+                    format!("spad(...) takes exactly 3 positional entries, found {}", args.len()),
+                );
+            }
+            let mut entries = [0usize; 3];
+            for (slot, arg) in entries.iter_mut().zip(args) {
+                *slot = expect_pos_uint(diags, &arg.value, "spad entry")? as usize;
+            }
+            Some(ScratchpadCfg {
+                ifmap_entries: entries[0],
+                filter_entries: entries[1],
+                psum_entries: entries[2],
+            })
+        }
+        other => bad(
+            diags,
+            value.span,
+            format!("spad entries must be spad(I, F, P) calls, found {}", other.describe()),
+        ),
+    }
+}
+
+enum RawStrategy {
+    Exhaustive,
+    Random { n: usize, seed: Option<u64> },
+    Halving { keep: usize, rounds: usize },
+}
+
+fn resolve_strategy(decl: &StrategyDecl, diags: &mut Diagnostics) -> RawStrategy {
+    const NAMES: [&str; 3] = ["exhaustive", "random", "halving"];
+    let unknown = |diags: &mut Diagnostics, span: Span, word: &str| {
+        let help = did_you_mean(word, NAMES)
+            .map(|s| format!("did you mean '{s}'?"))
+            .unwrap_or_else(|| format!("strategies are: {}", name_list(NAMES)));
+        diags.error_help(span, format!("unknown strategy '{word}'"), help);
+        RawStrategy::Exhaustive
+    };
+    match &decl.value.kind {
+        ValueKind::Word(word) => match word.as_str() {
+            "exhaustive" => RawStrategy::Exhaustive,
+            "random" | "halving" => {
+                diags.error_help(
+                    decl.value.span,
+                    format!("strategy '{word}' needs parameters"),
+                    if word == "random" {
+                        "e.g. 'strategy = random(64)' or 'random(64, seed = 11)'"
+                    } else {
+                        "e.g. 'strategy = halving(8)' or 'halving(8, rounds = 3)'"
+                    },
+                );
+                RawStrategy::Exhaustive
+            }
+            other => unknown(diags, decl.value.span, other),
+        },
+        ValueKind::Call { name, args } => match name.node.as_str() {
+            "exhaustive" => {
+                diags.error(decl.value.span, "exhaustive takes no parameters");
+                RawStrategy::Exhaustive
+            }
+            "random" => {
+                let (n, named) = split_call_args(args, "random", &["seed"], diags);
+                if n.is_none() {
+                    diags.error_help(
+                        decl.value.span,
+                        "random(...) needs a sample count",
+                        "e.g. 'strategy = random(64)' or 'random(64, seed = 11)'",
+                    );
+                }
+                let n = n
+                    .and_then(|v| expect_pos_uint(diags, v, "random sample count"))
+                    .unwrap_or(1) as usize;
+                let seed = named
+                    .get("seed")
+                    .and_then(|v| expect_uint(diags, v, "random seed"));
+                RawStrategy::Random { n, seed }
+            }
+            "halving" => {
+                let (keep, named) = split_call_args(args, "halving", &["rounds"], diags);
+                if keep.is_none() {
+                    diags.error_help(
+                        decl.value.span,
+                        "halving(...) needs a keep count",
+                        "e.g. 'strategy = halving(8)' or 'halving(8, rounds = 3)'",
+                    );
+                }
+                let keep = keep
+                    .and_then(|v| expect_pos_uint(diags, v, "halving keep count"))
+                    .unwrap_or(1) as usize;
+                let rounds = named
+                    .get("rounds")
+                    .and_then(|v| expect_pos_uint(diags, v, "halving rounds"))
+                    .unwrap_or(3) as usize;
+                RawStrategy::Halving { keep, rounds }
+            }
+            other => unknown(diags, name.span, other),
+        },
+        other => {
+            diags.error(
+                decl.value.span,
+                format!("strategy must be a name or a call, found {}", other.describe()),
+            );
+            RawStrategy::Exhaustive
+        }
+    }
+}
+
+/// Split call args into (the single positional, named-by-name). Extra
+/// positionals and unknown names are reported.
+fn split_call_args<'a>(
+    args: &'a [Arg],
+    call: &str,
+    named_params: &[&str],
+    diags: &mut Diagnostics,
+) -> (Option<&'a Value>, BTreeMap<String, &'a Value>) {
+    let mut positional: Option<&Value> = None;
+    let mut named: BTreeMap<String, &Value> = BTreeMap::new();
+    for arg in args {
+        match &arg.name {
+            None => {
+                if positional.is_some() {
+                    diags.error(
+                        arg.value.span,
+                        format!("{call}(...) takes one positional parameter"),
+                    );
+                } else {
+                    positional = Some(&arg.value);
+                }
+            }
+            Some(name) => {
+                if !named_params.contains(&name.node.as_str()) {
+                    let help = did_you_mean(&name.node, named_params.iter().copied())
+                        .map(|s| format!("did you mean '{s}'?"))
+                        .unwrap_or_else(|| {
+                            format!(
+                                "named parameters of {call}: {}",
+                                name_list(named_params.iter().copied())
+                            )
+                        });
+                    diags.error_help(
+                        name.span,
+                        format!("unknown parameter '{}' of {call}(...)", name.node),
+                        help,
+                    );
+                } else if named.insert(name.node.clone(), &arg.value).is_some() {
+                    diags.error(name.span, format!("duplicate parameter '{}'", name.node));
+                }
+            }
+        }
+    }
+    (positional, named)
+}
+
+fn resolve_workload_block(
+    block: &Block,
+    diags: &mut Diagnostics,
+    dataset: &mut Option<Dataset>,
+    model_names: &mut Option<Vec<(String, Span)>>,
+    set_keys: &mut BTreeSet<String>,
+) {
+    const KEYS: [&str; 2] = ["dataset", "models"];
+    let mut seen = BTreeSet::new();
+    for kv in &block.entries {
+        if !note_key(diags, &mut seen, kv) {
+            continue;
+        }
+        match kv.key.node.as_str() {
+            "dataset" => {
+                let Some(word) = expect_word(diags, &kv.value, "dataset") else { continue };
+                match Dataset::parse(word) {
+                    Some(d) => {
+                        *dataset = Some(d);
+                        set_keys.insert("dataset".into());
+                    }
+                    None => {
+                        let help = did_you_mean(word, DATASET_KEYS)
+                            .map(|s| format!("did you mean '{s}'?"))
+                            .unwrap_or_else(|| {
+                                format!("datasets are: {}", name_list(DATASET_KEYS))
+                            });
+                        diags.error_help(
+                            kv.value.span,
+                            format!("unknown dataset '{word}'"),
+                            help,
+                        );
+                    }
+                }
+            }
+            "models" => {
+                let Some(items) = expect_list(diags, &kv.value, "models") else { continue };
+                let mut names = Vec::new();
+                for item in items {
+                    if let Some(word) = expect_word(diags, item, "models entry") {
+                        names.push((word.to_string(), item.span));
+                    }
+                }
+                *model_names = Some(names);
+                set_keys.insert("models".into());
+            }
+            _ => unknown_key(diags, kv, "workload", &KEYS),
+        }
+    }
+}
+
+fn resolve_persist_block(
+    block: &Block,
+    diags: &mut Diagnostics,
+    set_keys: &mut BTreeSet<String>,
+) -> PersistPlan {
+    const KEYS: [&str; 5] = ["db", "cache", "checkpoint", "every", "frontier"];
+    let mut plan = PersistPlan::new();
+    let mut seen = BTreeSet::new();
+    for kv in &block.entries {
+        if !note_key(diags, &mut seen, kv) {
+            continue;
+        }
+        match kv.key.node.as_str() {
+            "db" | "cache" | "checkpoint" | "frontier" => {
+                let key = kv.key.node.as_str();
+                if let Some(text) = expect_string(diags, &kv.value, &format!("persist.{key}")) {
+                    let path = Some(PathBuf::from(text));
+                    match key {
+                        "db" => plan.db = path,
+                        "cache" => plan.cache = path,
+                        "checkpoint" => plan.checkpoint = path,
+                        _ => plan.frontier = path,
+                    }
+                    set_keys.insert(key.to_string());
+                }
+            }
+            "every" => {
+                if let Some(x) = expect_pos_uint(diags, &kv.value, "every") {
+                    plan.every = x as usize;
+                    set_keys.insert("every".into());
+                }
+            }
+            _ => unknown_key(diags, kv, "persist", &KEYS),
+        }
+    }
+    plan
+}
+
+// -------------------------------------------------------------- model blocks
+
+const CONV_FIELDS: [&str; 6] = ["in", "channels", "out", "kernel", "stride", "pad"];
+const FC_FIELDS: [&str; 2] = ["in", "out"];
+const POOL_FIELDS: [&str; 4] = ["in", "channels", "kernel", "stride"];
+
+fn fields_for(kind: LayerKind) -> &'static [&'static str] {
+    match kind {
+        LayerKind::Conv => &CONV_FIELDS,
+        LayerKind::FullyConnected => &FC_FIELDS,
+        LayerKind::Pool => &POOL_FIELDS,
+    }
+}
+
+/// Collect a layer statement's `field = N` entries against an allowed
+/// field set, reporting unknown fields (with suggestions), duplicates,
+/// and non-integer values. `pad` may be zero; everything else must be
+/// positive.
+fn collect_fields(
+    stmt: &LayerStmt,
+    allowed: &[&str],
+    diags: &mut Diagnostics,
+) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    let mut seen = BTreeSet::new();
+    for field in &stmt.fields {
+        if !note_key(diags, &mut seen, field) {
+            continue;
+        }
+        let key = field.key.node.as_str();
+        if !allowed.contains(&key) {
+            let help = did_you_mean(key, allowed.iter().copied())
+                .map(|s| format!("did you mean '{s}'?"))
+                .unwrap_or_else(|| {
+                    format!(
+                        "fields of a {} layer: {}",
+                        stmt.kind.node,
+                        name_list(allowed.iter().copied())
+                    )
+                });
+            diags.error_help(
+                field.key.span,
+                format!("unknown field '{key}' for a {} layer", stmt.kind.node),
+                help,
+            );
+            continue;
+        }
+        let value = if key == "pad" {
+            expect_uint(diags, &field.value, "pad")
+        } else {
+            expect_pos_uint(diags, &field.value, key)
+        };
+        if let Some(x) = value {
+            out.insert(key.to_string(), x as usize);
+        }
+    }
+    out
+}
+
+/// Build a layer from a `conv`/`fc`/`pool` statement in a custom model.
+fn build_layer(stmt: &LayerStmt, diags: &mut Diagnostics) -> Option<Layer> {
+    let kind = match stmt.kind.node.as_str() {
+        "conv" => LayerKind::Conv,
+        "fc" => LayerKind::FullyConnected,
+        "pool" => LayerKind::Pool,
+        _ => unreachable!("parser only admits conv/fc/pool/layer"),
+    };
+    let fields = collect_fields(stmt, fields_for(kind), diags);
+    let mut missing: Vec<&str> = Vec::new();
+    let required: &[&str] = match kind {
+        LayerKind::Conv => &["in", "channels", "out", "kernel"],
+        LayerKind::FullyConnected => &["in", "out"],
+        LayerKind::Pool => &["in", "channels", "kernel"],
+    };
+    for &field in required {
+        if !fields.contains_key(field) {
+            missing.push(field);
+        }
+    }
+    if !missing.is_empty() {
+        diags.error(
+            stmt.span,
+            format!(
+                "{} layer '{}' is missing required field(s): {}",
+                stmt.kind.node,
+                stmt.name.node,
+                name_list(missing.iter().copied())
+            ),
+        );
+        return None;
+    }
+    let name = stmt.name.node.as_str();
+    let layer = match kind {
+        LayerKind::Conv => Layer::conv(
+            name,
+            fields["in"],
+            fields["channels"],
+            fields["out"],
+            fields["kernel"],
+            *fields.get("stride").unwrap_or(&1),
+            *fields.get("pad").unwrap_or(&0),
+        ),
+        LayerKind::FullyConnected => Layer::fc(name, fields["in"], fields["out"]),
+        LayerKind::Pool => {
+            let kernel = fields["kernel"];
+            Layer::pool(
+                name,
+                fields["in"],
+                fields["channels"],
+                kernel,
+                *fields.get("stride").unwrap_or(&kernel),
+            )
+        }
+    };
+    check_geometry(&layer, stmt.span, diags).then_some(layer)
+}
+
+/// Reject shapes the mapper cannot evaluate (and that would underflow
+/// `Layer::out_hw`).
+fn check_geometry(layer: &Layer, span: Span, diags: &mut Diagnostics) -> bool {
+    if layer.kernel > layer.in_hw + 2 * layer.padding {
+        diags.error(
+            span,
+            format!(
+                "layer '{}': kernel {} exceeds the padded input {} + 2*{}",
+                layer.name, layer.kernel, layer.in_hw, layer.padding
+            ),
+        );
+        return false;
+    }
+    true
+}
+
+/// Apply a `layer NAME { ... }` override onto a zoo-derived layer.
+fn apply_override(layer: &mut Layer, stmt: &LayerStmt, diags: &mut Diagnostics) {
+    let fields = collect_fields(stmt, fields_for(layer.kind), diags);
+    for (key, value) in &fields {
+        match (layer.kind, key.as_str()) {
+            (LayerKind::FullyConnected, "in") => layer.in_c = *value,
+            (LayerKind::FullyConnected, "out") => layer.out_c = *value,
+            (_, "in") => layer.in_hw = *value,
+            (_, "channels") => {
+                layer.in_c = *value;
+                if layer.kind == LayerKind::Pool {
+                    layer.out_c = *value;
+                }
+            }
+            (_, "out") => layer.out_c = *value,
+            (_, "kernel") => layer.kernel = *value,
+            (_, "stride") => layer.stride = *value,
+            (_, "pad") => layer.padding = *value,
+            _ => unreachable!("collect_fields filters to the kind's fields"),
+        }
+    }
+    check_geometry(layer, stmt.span, diags);
+}
+
+fn resolve_model_block(
+    block: &ModelBlock,
+    default_dataset: Dataset,
+    diags: &mut Diagnostics,
+) -> Option<Model> {
+    let before = diags.error_count();
+    // Split the statements: `dataset = ...` vs layer statements.
+    let mut dataset: Option<(Dataset, Span)> = None;
+    let mut layers: Vec<&LayerStmt> = Vec::new();
+    for stmt in &block.stmts {
+        match stmt {
+            ModelStmt::KeyValue(kv) => match kv.key.node.as_str() {
+                "dataset" => {
+                    if dataset.is_some() {
+                        diags.error(kv.key.span, "duplicate key 'dataset'");
+                        continue;
+                    }
+                    let Some(word) = expect_word(diags, &kv.value, "dataset") else { continue };
+                    match Dataset::parse(word) {
+                        Some(d) => dataset = Some((d, kv.value.span)),
+                        None => {
+                            let help = did_you_mean(word, DATASET_KEYS)
+                                .map(|s| format!("did you mean '{s}'?"))
+                                .unwrap_or_else(|| {
+                                    format!("datasets are: {}", name_list(DATASET_KEYS))
+                                });
+                            diags.error_help(
+                                kv.value.span,
+                                format!("unknown dataset '{word}'"),
+                                help,
+                            );
+                        }
+                    }
+                }
+                other => {
+                    let help = did_you_mean(other, ["dataset"])
+                        .map(|s| format!("did you mean '{s}'?"))
+                        .unwrap_or_else(|| {
+                            "model blocks take 'dataset = ...' and layer statements".into()
+                        });
+                    diags.error_help(
+                        kv.key.span,
+                        format!("unknown model key '{other}'"),
+                        help,
+                    );
+                }
+            },
+            ModelStmt::Layer(layer) => layers.push(layer),
+        }
+    }
+    let model_dataset = dataset.map(|(d, _)| d).unwrap_or(default_dataset);
+
+    let model = match &block.like {
+        Some(target) => {
+            // A derivation of a zoo model: overrides only.
+            let Some(kind) = ModelKind::parse(&target.node) else {
+                let help = did_you_mean(&target.node, ZOO_KEYS)
+                    .map(|s| format!("did you mean '{s}'?"))
+                    .unwrap_or_else(|| format!("zoo models are: {}", name_list(ZOO_KEYS)));
+                diags.error_help(
+                    target.span,
+                    format!("unknown zoo model '{}' after 'like'", target.node),
+                    help,
+                );
+                return None;
+            };
+            if !valid_datasets(kind).contains(&model_dataset) {
+                let span = dataset.map(|(_, s)| s).unwrap_or(target.span);
+                diags.error_help(
+                    span,
+                    format!(
+                        "zoo model '{}' is not defined for dataset '{}'",
+                        target.node,
+                        dataset_key(model_dataset)
+                    ),
+                    format!(
+                        "valid datasets for {}: {}",
+                        target.node,
+                        name_list(valid_datasets(kind).iter().map(|&d| dataset_key(d)))
+                    ),
+                );
+                return None;
+            }
+            let mut model = model_for(kind, model_dataset);
+            model.name = block.name.node.clone();
+            for stmt in layers {
+                if stmt.kind.node != "layer" {
+                    diags.error_help(
+                        stmt.kind.span,
+                        format!(
+                            "'{}' statements are not allowed in a 'like' model",
+                            stmt.kind.node
+                        ),
+                        "like-models only override existing layers with 'layer NAME { ... }'; \
+                         define a model without 'like' to build a custom stack",
+                    );
+                    continue;
+                }
+                let layer_names: Vec<String> =
+                    model.layers.iter().map(|l| l.name.clone()).collect();
+                match model.layers.iter_mut().find(|l| l.name == stmt.name.node) {
+                    Some(layer) => apply_override(layer, stmt, diags),
+                    None => {
+                        let help =
+                            did_you_mean(&stmt.name.node, layer_names.iter().map(String::as_str))
+                                .map(|s| format!("did you mean '{s}'?"))
+                                .unwrap_or_else(|| {
+                                    format!("{} has {} layers", target.node, layer_names.len())
+                                });
+                        diags.error_help(
+                            stmt.name.span,
+                            format!(
+                                "model '{}' has no layer named '{}'",
+                                block.name.node, stmt.name.node
+                            ),
+                            help,
+                        );
+                    }
+                }
+            }
+            model
+        }
+        None => {
+            // A custom stack: conv/fc/pool statements, in order.
+            let mut built: Vec<Layer> = Vec::new();
+            let mut names: BTreeSet<String> = BTreeSet::new();
+            for stmt in layers {
+                if stmt.kind.node == "layer" {
+                    diags.error_help(
+                        stmt.kind.span,
+                        "'layer' overrides require 'like'",
+                        "write 'model NAME like ZOO { layer ... }' to override a zoo layer, or \
+                         use conv/fc/pool statements to define layers",
+                    );
+                    continue;
+                }
+                if !names.insert(stmt.name.node.clone()) {
+                    diags.error(
+                        stmt.name.span,
+                        format!("duplicate layer name '{}'", stmt.name.node),
+                    );
+                    continue;
+                }
+                if let Some(layer) = build_layer(stmt, diags) {
+                    built.push(layer);
+                }
+            }
+            if built.is_empty() && diags.error_count() == before {
+                diags.error(
+                    block.name.span,
+                    format!("model '{}' defines no layers", block.name.node),
+                );
+            }
+            Model { name: block.name.node.clone(), dataset: model_dataset, layers: built }
+        }
+    };
+    (diags.error_count() == before).then_some(model)
+}

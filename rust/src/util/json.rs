@@ -42,12 +42,19 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Maximum container-nesting depth the parser accepts. Deeper documents
+/// fail with a [`JsonError`] instead of overflowing the stack — the
+/// recursive-descent parser recurses once per `[`/`{`, so adversarial
+/// inputs like `[[[[...` would otherwise crash the process.
+pub const MAX_DEPTH: usize = 128;
+
 impl Json {
     /// Parse a complete JSON document; trailing non-whitespace is an error.
+    /// Containers nested deeper than [`MAX_DEPTH`] are rejected.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
             return Err(p.err("trailing characters"));
@@ -261,10 +268,13 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, JsonError> {
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -274,7 +284,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, JsonError> {
+    fn object(&mut self, depth: usize) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -288,7 +298,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             self.expect(b':')?;
             self.skip_ws();
-            let value = self.value()?;
+            let value = self.value(depth + 1)?;
             map.insert(key, value);
             self.skip_ws();
             match self.bump() {
@@ -299,7 +309,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, JsonError> {
+    fn array(&mut self, depth: usize) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -309,7 +319,7 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.skip_ws();
-            items.push(self.value()?);
+            items.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
@@ -343,8 +353,14 @@ impl<'a> Parser<'a> {
                                 return Err(self.err("lone high surrogate"));
                             }
                             let lo = self.hex4()?;
-                            let combined =
-                                0x10000 + ((cp - 0xD800) << 10) + (lo.wrapping_sub(0xDC00));
+                            // The low half must actually be a low
+                            // surrogate; anything else would make the
+                            // combination arithmetic overflow (a panic in
+                            // debug builds) before `from_u32` could say no.
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("bad low surrogate"));
+                            }
+                            let combined = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
                             char::from_u32(combined).ok_or_else(|| self.err("bad surrogate"))?
                         } else {
                             char::from_u32(cp).ok_or_else(|| self.err("bad codepoint"))?
@@ -498,6 +514,41 @@ mod tests {
         let b = Json::parse(r#"{"a": 2, "b": 1}"#).unwrap();
         assert_eq!(a.to_string_canonical(), b.to_string_canonical());
         assert_eq!(a.to_string_canonical(), r#"{"a":2,"b":1}"#);
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_stack_overflow() {
+        // Just inside the limit parses...
+        let ok = format!("{}0{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        // ...one past it errors, and pathological depths stay errors.
+        for depth in [MAX_DEPTH + 1, 10_000, 100_000] {
+            let text = format!("{}0{}", "[".repeat(depth), "]".repeat(depth));
+            let err = Json::parse(&text).unwrap_err();
+            assert!(err.msg.contains("nesting"), "depth {depth}: {err}");
+            let text = format!("{}{}", r#"{"k":"#.repeat(depth), "0");
+            assert!(Json::parse(&text).is_err(), "unclosed objects at depth {depth}");
+        }
+    }
+
+    #[test]
+    fn surrogate_escapes_validate_both_halves() {
+        // A valid pair decodes.
+        assert_eq!(Json::parse(r#""😀""#).unwrap(), Json::Str("😀".into()));
+        // A high surrogate followed by a non-low-surrogate escape is an
+        // error (previously an arithmetic overflow in debug builds).
+        for text in [r#""\ud800A""#, r#""\ud800 ""#, r#""\ud800\ud800""#, r#""\ud800""#, r#""\udc00""#]
+        {
+            assert!(Json::parse(text).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn control_characters_escape_and_round_trip() {
+        let all_controls: String = (0u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        let original = Json::Str(all_controls);
+        let text = original.to_string_compact();
+        assert_eq!(Json::parse(&text).unwrap(), original);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! * [`prop`]  — property-testing mini-framework with shrinking (for `proptest`)
 //! * [`table`] — aligned ASCII table and scatter-plot rendering
 //! * [`log`]   — leveled stderr logger
+//! * [`text`]  — edit distance + "did you mean" suggestions
 
 pub mod rng;
 pub mod stats;
@@ -19,6 +20,7 @@ pub mod cli;
 pub mod prop;
 pub mod table;
 pub mod log;
+pub mod text;
 
 /// Round `x` up to the next multiple of `m` (`m > 0`).
 pub fn ceil_to(x: usize, m: usize) -> usize {

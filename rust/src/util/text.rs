@@ -1,0 +1,104 @@
+//! Small text utilities: edit distance and "did you mean" suggestions.
+//!
+//! Shared by every user-facing name boundary — the QSL resolver
+//! ([`crate::spec`]), the CLI's dataset/model parsing, and any future
+//! typo-tolerant lookup. Matching is case-insensitive and ignores `-`/`_`
+//! so `CIFAR-10`, `cifar10`, and `Cifar_10` all land on the same
+//! candidate.
+
+/// Levenshtein edit distance between two strings (unit costs), computed
+/// over `char`s with a single rolling row — O(|a|·|b|) time, O(|b|) space.
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    let mut row: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut prev_diag = row[0];
+        row[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let substitute = prev_diag + usize::from(ca != cb);
+            prev_diag = row[j + 1];
+            row[j + 1] = substitute.min(row[j] + 1).min(prev_diag + 1);
+        }
+    }
+    row[b.len()]
+}
+
+/// Normalize a name for fuzzy comparison: lowercase, `-`/`_` stripped.
+fn fold(name: &str) -> String {
+    name.chars().filter(|c| *c != '-' && *c != '_').collect::<String>().to_lowercase()
+}
+
+/// The closest candidate to `input`, if any is close enough to be a
+/// plausible typo (edit distance over folded names of at most
+/// `max(1, len/3)`). Exact folded matches win outright; ties go to the
+/// earlier candidate, so put canonical spellings first.
+pub fn did_you_mean<'a, I>(input: &str, candidates: I) -> Option<&'a str>
+where
+    I: IntoIterator<Item = &'a str>,
+{
+    let folded_input = fold(input);
+    let budget = (folded_input.chars().count() / 3).max(1);
+    let mut best: Option<(usize, &'a str)> = None;
+    for candidate in candidates {
+        let d = edit_distance(&folded_input, &fold(candidate));
+        if d == 0 {
+            return Some(candidate);
+        }
+        if d <= budget && best.map_or(true, |(bd, _)| d < bd) {
+            best = Some((d, candidate));
+        }
+    }
+    best.map(|(_, c)| c)
+}
+
+/// Render a candidate list for an error message: `a, b, c`.
+pub fn name_list<'a, I>(candidates: I) -> String
+where
+    I: IntoIterator<Item = &'a str>,
+{
+    candidates.into_iter().collect::<Vec<_>>().join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", ""), 3);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("flaw", "lawn"), 2);
+        assert_eq!(edit_distance("same", "same"), 0);
+    }
+
+    #[test]
+    fn suggestions_tolerate_case_and_separators() {
+        let names = ["cifar10", "cifar100", "imagenet"];
+        assert_eq!(did_you_mean("CIFAR-10", names), Some("cifar10"));
+        assert_eq!(did_you_mean("imagnet", names), Some("imagenet"));
+        assert_eq!(did_you_mean("cifar11", names), Some("cifar10"));
+        assert_eq!(did_you_mean("mnist", names), None);
+    }
+
+    #[test]
+    fn close_typos_beat_distant_candidates() {
+        let names = ["pe_type", "array", "glb_kib", "spad", "dram_gbps", "clock_ghz"];
+        assert_eq!(did_you_mean("pe_typ", names), Some("pe_type"));
+        assert_eq!(did_you_mean("clocks_ghz", names), Some("clock_ghz"));
+        assert_eq!(did_you_mean("zzz", names), None);
+    }
+
+    #[test]
+    fn name_list_joins() {
+        assert_eq!(name_list(["a", "b"]), "a, b");
+    }
+}

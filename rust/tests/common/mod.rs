@@ -1,0 +1,53 @@
+//! Helpers shared by the golden-snapshot test crates (`golden.rs`,
+//! `spec.rs`). Not a test target itself — Cargo only builds top-level
+//! files under `tests/` as integration tests.
+
+use std::fs;
+use std::path::PathBuf;
+
+/// The checked-in fixture directory (`rust/tests/golden/`).
+pub fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Compare `rendered` against the checked-in fixture, blessing it when
+/// missing or when `QADAM_BLESS=1`. With `QADAM_GOLDEN_REQUIRE=1` (the
+/// CI gate) a missing fixture is still written — so it can be collected
+/// as an artifact and committed — but the test FAILS instead of
+/// vacuously passing against its own fresh output.
+pub fn assert_snapshot(name: &str, rendered: &str) {
+    let dir = golden_dir();
+    fs::create_dir_all(&dir).expect("golden fixture dir");
+    let path = dir.join(name);
+    let bless = std::env::var("QADAM_BLESS").map(|v| v == "1").unwrap_or(false);
+    let require = std::env::var("QADAM_GOLDEN_REQUIRE").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        fs::write(&path, rendered).expect("write golden fixture");
+        if !bless {
+            if require {
+                panic!(
+                    "golden fixture '{name}' is not committed; a fresh rendering was written \
+                     to {} — review and commit it to arm the drift gate",
+                    path.display()
+                );
+            }
+            eprintln!(
+                "golden: blessed missing fixture '{name}' — commit {} to pin these numerics",
+                path.display()
+            );
+        }
+        return;
+    }
+    let expected = fs::read_to_string(&path).expect("read golden fixture");
+    if rendered != expected {
+        let new_path = dir.join(format!("{name}.new"));
+        fs::write(&new_path, rendered).expect("write drift rendering");
+        panic!(
+            "golden snapshot '{name}' drifted from the checked-in fixture.\n\
+             fresh rendering written to {}.\n\
+             If the change is intentional, regenerate with \
+             `QADAM_BLESS=1 cargo test` and commit the diff.",
+            new_path.display()
+        );
+    }
+}

@@ -229,7 +229,7 @@ fn corrupt_cache_files_yield_typed_errors() {
     let bad_key = dir.join("bad_key.json");
     fs::write(
         &bad_key,
-        r#"{"kind":"qadam.pointcache","schema":2,"entries":[{"key":"zzzz","evals":[]}]}"#,
+        r#"{"kind":"qadam.pointcache","schema":3,"entries":[{"key":"zzzz","evals":[]}]}"#,
     )
     .unwrap();
     assert_eq!(PointCache::load(&bad_key).unwrap_err().kind(), "parse_error");

@@ -260,3 +260,68 @@ fn prop_json_roundtrip_arbitrary_configs() {
         AcceleratorConfig::from_json(&parsed).unwrap() == config
     });
 }
+
+// -------------------------------------------------- json adversarial input
+
+#[test]
+fn prop_json_deep_nesting_is_rejected_without_crashing() {
+    use qadam::util::json::{Json, MAX_DEPTH};
+    // Any nesting depth — including far past the limit — must return a
+    // Result, never blow the stack. Mixed [ / { nesting included.
+    let gen = pair(usize_in(0, 4096), usize_in(0, 1));
+    check_with(&Config { cases: 64, ..Default::default() }, &gen, |&(depth, flavor)| {
+        let (open, close) = if flavor == 0 { ("[", "]") } else { (r#"{"k":"#, "}") };
+        let text = format!("{}0{}", open.repeat(depth), close.repeat(depth));
+        match Json::parse(&text) {
+            Ok(_) => depth <= MAX_DEPTH,
+            Err(err) => depth > MAX_DEPTH && err.msg.contains("nesting"),
+        }
+    });
+}
+
+#[test]
+fn prop_json_control_and_unicode_strings_round_trip() {
+    use qadam::util::json::Json;
+    // Strings mixing control characters, escapes' targets, and
+    // multi-byte UTF-8 must survive write → parse bit-for-bit.
+    let char_gen = usize_in(0, 9).map(|which| match which {
+        0 => '\u{0}',
+        1 => '\u{1}',
+        2 => '\n',
+        3 => '\t',
+        4 => '\r',
+        5 => '"',
+        6 => '\\',
+        7 => 'é',
+        8 => '😀',
+        _ => 'a',
+    });
+    let gen = vec_of(char_gen, 0, 32);
+    check(&gen, |chars| {
+        let original = Json::Str(chars.iter().collect());
+        let text = original.to_string_compact();
+        Json::parse(&text).map(|parsed| parsed == original).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_json_torn_inputs_never_panic() {
+    use qadam::util::json::Json;
+    // Truncate a valid document (with escapes, unicode, and nesting) at
+    // every byte prefix, re-validating as UTF-8: parsing must always
+    // return a Result. Catches torn files and mid-escape truncation.
+    let source = Json::parse(
+        r#"{"a": [1, -2.5e3, "café 😀 \n\t\"x\""], "b": {"c": [true, null]}}"#,
+    )
+    .unwrap()
+    .to_string_pretty();
+    let bytes = source.as_bytes();
+    let gen = usize_in(0, bytes.len());
+    check(&gen, |&cut| {
+        let torn = String::from_utf8_lossy(&bytes[..cut]);
+        // Either outcome is fine; reaching it without a panic is the
+        // property. The full document must still parse.
+        let _ = Json::parse(&torn);
+        cut < bytes.len() || Json::parse(&torn).is_ok()
+    });
+}

@@ -1,0 +1,344 @@
+//! QSL integration suite.
+//!
+//! Three layers of lockdown:
+//!
+//! * **Golden diagnostics** — bad specs must render *exactly* the
+//!   pinned error text (line/column spans, source excerpts, "did you
+//!   mean" suggestions), via the shared bless-on-missing snapshot
+//!   helper (`QADAM_BLESS=1` to regenerate, strict in CI under
+//!   `QADAM_GOLDEN_REQUIRE=1`).
+//! * **Canonical fixed point** — for random campaigns,
+//!   `parse → resolve → canonical` re-parses to the same canonical
+//!   bytes and the same fingerprint.
+//! * **Spec ≡ flags** — executing a spec produces a byte-identical
+//!   `EvalDatabase` to the equivalent flag-built campaign and to a
+//!   direct `Explorer` run, and checkpoint journals written by one are
+//!   resumable by the other — while an *edited* spec is rejected with
+//!   a typed error.
+
+mod common;
+
+use std::fs;
+use std::path::PathBuf;
+
+use common::assert_snapshot;
+use qadam::arch::SweepSpec;
+use qadam::dnn::{model_for, Dataset, ModelKind};
+use qadam::explore::{point_key, Explorer};
+use qadam::pareto::RandomSample;
+use qadam::spec::{self, PersistPlan, ResolvedCampaign, StrategyChoice, WorkloadModel};
+use qadam::util::prop::{check_with, usize_in, Config};
+use qadam::util::rng::Pcg64;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qadam_spec_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ------------------------------------------------------ golden diagnostics
+
+fn rendered_diags(source: &str, filename: &str) -> String {
+    let (campaign, diags) = spec::check(source);
+    assert!(campaign.is_none(), "{filename}: expected errors");
+    diags.render(source, filename)
+}
+
+/// Unknown names at every level — axis, PE type, dataset, model — must
+/// each produce a located error with a suggestion, all in one pass.
+#[test]
+fn golden_diag_unknown_names() {
+    let source = "sweep {\n  pe_typ = [int16]\n  pe_type = [int17, lightpe1]\n}\n\
+                  workload {\n  dataset = cifra10\n  models = [resnet21, vgg16]\n}\n";
+    assert_snapshot("spec_diag_unknown_names.txt", &rendered_diags(source, "bad_names.qsl"));
+}
+
+/// Layer-level mistakes: unknown fields, missing required fields,
+/// impossible geometry, and an override of a layer that does not exist.
+#[test]
+fn golden_diag_bad_layers() {
+    let source = "workload {\n  models = [tiny, wide]\n}\n\
+                  model tiny {\n  conv c1 { in = 32, chanels = 3, out = 16, kernel = 3 }\n  \
+                  conv c2 { in = 4, channels = 16, out = 8, kernel = 9 }\n  fc head { in = 128 }\n}\n\
+                  model wide like resnet20 {\n  layer s1b1_conv9 { out = 32 }\n}\n";
+    assert_snapshot("spec_diag_bad_layers.txt", &rendered_diags(source, "bad_layers.qsl"));
+}
+
+/// Syntax-level recovery: an unknown section, a missing '=', and an
+/// unterminated string must all be reported, not just the first.
+#[test]
+fn golden_diag_syntax() {
+    let source = "campaing {\n  seed = 7\n}\n\
+                  campaign {\n  seed 7\n}\n\
+                  persist {\n  db = \"unterminated\n}\n";
+    assert_snapshot("spec_diag_syntax.txt", &rendered_diags(source, "bad_syntax.qsl"));
+}
+
+/// The acceptance shape: a spec with >= 3 distinct mistakes reports all
+/// of them in one pass, each with a line/column span.
+#[test]
+fn multi_error_specs_report_everything_with_spans() {
+    let source = "sweep {\n  pe_typ = [int16]\n  glb_kib = [0]\n}\n\
+                  strategy = random()\n\
+                  workload {\n  models = [resnet99]\n}\n";
+    let (campaign, diags) = spec::check(source);
+    assert!(campaign.is_none());
+    assert!(diags.error_count() >= 3, "wanted >= 3 errors, got {}:\n{diags}", diags.error_count());
+    let rendered = diags.render(source, "multi.qsl");
+    // Every error carries a file:line:col location.
+    let located = rendered.matches("--> multi.qsl:").count();
+    assert!(located >= 3, "wanted >= 3 located errors:\n{rendered}");
+}
+
+// ------------------------------------------------- canonical fixed point
+
+/// Derive a random-but-valid spec source from one seed.
+fn random_spec_source(seed: u64) -> String {
+    let mut rng = Pcg64::new(seed);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "campaign {{\n  seed = {}\n  workers = {}\n}}\n",
+        rng.below(1000),
+        rng.below(4)
+    ));
+    let pe_pool = ["int16", "lightpe1", "fp32", "lightpe2"];
+    let pe_count = 1 + rng.below(3) as usize;
+    let arrays = ["4x4", "8x8", "12x14", "16x16"];
+    let array_count = 1 + rng.below(3) as usize;
+    out.push_str(&format!(
+        "sweep {{\n  pe_type = [{}]\n  array = [{}]\n  glb_kib = [{}]\n  \
+         spad = [spad({}, {}, {})]\n  dram_gbps = [{}]\n  clock_ghz = [2]\n}}\n",
+        pe_pool[..pe_count].join(", "),
+        arrays[..array_count].join(", "),
+        64 << rng.below(3),
+        6 + rng.below(20),
+        28 + rng.below(200),
+        8 + rng.below(32),
+        [8, 16, 32][rng.below(3) as usize],
+    ));
+    match rng.below(3) {
+        0 => {}
+        1 => out.push_str(&format!("strategy = random({})\n", 1 + rng.below(8))),
+        _ => out.push_str(&format!(
+            "strategy = halving({}, rounds = {})\n",
+            1 + rng.below(4),
+            1 + rng.below(3)
+        )),
+    }
+    let with_custom = rng.below(2) == 1;
+    let models = if with_custom { "resnet20, randnet" } else { "vgg16, resnet56" };
+    out.push_str(&format!(
+        "workload {{\n  dataset = {}\n  models = [{models}]\n}}\n",
+        ["cifar10", "cifar100"][rng.below(2) as usize],
+    ));
+    if with_custom {
+        let in_hw = 8 + rng.below(24);
+        let channels = 1 + rng.below(8);
+        let width = 1 + rng.below(16);
+        out.push_str(&format!(
+            "model randnet {{\n  conv stem {{ in = {in_hw}, channels = {channels}, \
+             out = {width}, kernel = 3, stride = 1, pad = 1 }}\n  \
+             fc head {{ in = {}, out = 10 }}\n}}\n",
+            in_hw * in_hw * width,
+        ));
+    }
+    if rng.below(2) == 1 {
+        out.push_str("persist {\n  db = \"out/db.json\"\n  checkpoint = \"out/j.journal\"\n}\n");
+    }
+    out
+}
+
+/// `spec → lower → canonical → re-parse → lower → canonical` is a fixed
+/// point, and the fingerprint survives the round trip.
+#[test]
+fn prop_canonical_form_is_a_fixed_point() {
+    let gen = usize_in(1, 1_000_000);
+    check_with(&Config { cases: 64, ..Default::default() }, &gen, |&seed| {
+        let source = random_spec_source(seed as u64);
+        let campaign = match spec::compile(&source, "prop.qsl") {
+            Ok(campaign) => campaign,
+            Err(err) => panic!("generated spec must be valid:\n{source}\n{err}"),
+        };
+        let canonical = campaign.canonical();
+        let reparsed = match spec::compile(&canonical, "prop.canonical.qsl") {
+            Ok(campaign) => campaign,
+            Err(err) => panic!("canonical form must re-parse:\n{canonical}\n{err}"),
+        };
+        reparsed.canonical() == canonical && reparsed.fingerprint() == campaign.fingerprint()
+    });
+}
+
+// --------------------------------------------------------- spec ≡ flags
+
+const DEMO_SPEC: &str = "campaign {\n  seed = 9\n}\n\
+    sweep {\n  pe_type = [int16, lightpe1]\n  array = [8x8, 16x16]\n  glb_kib = [128]\n  \
+    spad = [spad(12, 224, 24)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+    strategy = random(3)\n\
+    workload {\n  dataset = cifar10\n  models = [resnet20]\n}\n";
+
+/// The flag-built equivalent of [`DEMO_SPEC`] — what
+/// `qadam dse --strategy random:3 --seed 9` (with a matching sweep)
+/// constructs.
+fn demo_flag_campaign(db_path: PathBuf) -> ResolvedCampaign {
+    ResolvedCampaign::new(
+        SweepSpec::tiny(),
+        Dataset::Cifar10,
+        vec![WorkloadModel::Zoo(ModelKind::ResNet20)],
+        9,
+        0,
+        (0, 1),
+        StrategyChoice::Random { n: 3, seed: 9 },
+        PersistPlan { db: Some(db_path), ..PersistPlan::new() },
+    )
+}
+
+#[test]
+fn run_spec_equals_flag_invocation_bit_for_bit() {
+    let dir = temp_dir("e2e");
+    // `qadam run demo.qsl --save ...`
+    let mut from_spec = spec::compile(DEMO_SPEC, "demo.qsl").unwrap();
+    from_spec.persist.db = Some(dir.join("spec_db.json"));
+    let spec_outcome = from_spec.execute().unwrap();
+    // The equivalent flag invocation.
+    let from_flags = demo_flag_campaign(dir.join("flag_db.json"));
+    let flag_outcome = from_flags.execute().unwrap();
+    // Same campaign identity, same bytes on disk.
+    assert_eq!(from_spec.fingerprint(), from_flags.fingerprint());
+    let spec_bytes = fs::read(dir.join("spec_db.json")).unwrap();
+    let flag_bytes = fs::read(dir.join("flag_db.json")).unwrap();
+    assert_eq!(spec_bytes, flag_bytes, "spec and flag campaigns must save identical bytes");
+    assert_eq!(spec_outcome.db.stats.design_points, 3);
+    assert_eq!(flag_outcome.db.stats.design_points, 3);
+    // And both equal the direct library path.
+    let direct = Explorer::over(SweepSpec::tiny())
+        .model(model_for(ModelKind::ResNet20, Dataset::Cifar10))
+        .seed(9)
+        .strategy(RandomSample { n: 3, seed: 9 })
+        .run()
+        .unwrap();
+    assert_eq!(direct.to_json().to_string_pretty().into_bytes(), spec_bytes);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spec_and_flag_journals_are_interchangeable() {
+    let dir = temp_dir("journal_interop");
+    let journal = dir.join("campaign.journal");
+    let mut from_spec = spec::compile(DEMO_SPEC, "demo.qsl").unwrap();
+    from_spec.persist.checkpoint = Some(journal.clone());
+    let first = from_spec.execute().unwrap();
+    // The flag-built equivalent resumes the spec-written journal (same
+    // fingerprint), replaying every point to an identical database.
+    let mut from_flags = demo_flag_campaign(dir.join("db.json"));
+    from_flags.persist.checkpoint = Some(journal.clone());
+    let resumed = from_flags.execute().unwrap();
+    assert_eq!(
+        resumed.db.to_json().to_string_pretty(),
+        first.db.to_json().to_string_pretty(),
+        "journal replay must reproduce the database byte-for-byte"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resuming_under_an_edited_spec_is_rejected() {
+    let dir = temp_dir("edited_spec");
+    let journal = dir.join("campaign.journal");
+    // A campaign whose only mutable identity lives in a *custom model
+    // shape* — the sweep fingerprint, seed, model names, dataset, and
+    // strategy all stay identical under the edit, so only the QSL
+    // fingerprint can catch it.
+    let source_a = "campaign {\n  seed = 5\n}\n\
+        sweep {\n  pe_type = [int16]\n  array = [8x8]\n  glb_kib = [128]\n  \
+        spad = [spad(12, 224, 24)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+        workload {\n  dataset = cifar10\n  models = [tiny]\n}\n\
+        model tiny {\n  fc head { in = 64, out = 10 }\n}\n";
+    let source_b = source_a.replace("in = 64", "in = 32");
+    let mut campaign_a = spec::compile(source_a, "a.qsl").unwrap();
+    campaign_a.persist.checkpoint = Some(journal.clone());
+    campaign_a.execute().unwrap();
+    // Unedited spec: resumes (full replay) cleanly.
+    campaign_a.execute().unwrap();
+    // Edited spec: typed rejection, not silent replay of foreign points.
+    let mut campaign_b = spec::compile(&source_b, "b.qsl").unwrap();
+    assert_ne!(campaign_a.fingerprint(), campaign_b.fingerprint());
+    campaign_b.persist.checkpoint = Some(journal.clone());
+    let err = campaign_b.execute().unwrap_err();
+    assert_eq!(err.kind(), "invalid_config");
+    assert!(err.to_string().contains("spec"), "{err}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------- custom models
+
+#[test]
+fn custom_model_shapes_reach_the_cache_key() {
+    // Two specs differing only in a custom layer's shape must produce
+    // different point-cache keys — the cache must never alias them.
+    let base = "workload {\n  models = [tiny]\n}\n\
+                model tiny {\n  fc head { in = 64, out = 10 }\n}\n";
+    let edited = base.replace("in = 64", "in = 32");
+    let a = spec::compile(base, "a.qsl").unwrap();
+    let b = spec::compile(&edited, "b.qsl").unwrap();
+    let config = qadam::arch::AcceleratorConfig::default();
+    assert_ne!(
+        point_key(&config, 7, &a.models()),
+        point_key(&config, 7, &b.models()),
+        "layer-shape edits must change the cache key"
+    );
+}
+
+#[test]
+fn custom_and_like_models_flow_through_a_campaign() {
+    let source = "sweep {\n  pe_type = [int16]\n  array = [8x8]\n  glb_kib = [128]\n  \
+        spad = [spad(12, 224, 24)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+        workload {\n  dataset = cifar10\n  models = [resnet20, tiny, narrow]\n}\n\
+        model tiny {\n  conv stem { in = 32, channels = 3, out = 8, kernel = 3, pad = 1 }\n  \
+        fc head { in = 8192, out = 10 }\n}\n\
+        model narrow like resnet20 {\n  layer conv1 { out = 8 }\n  layer s1b1_conv1 { channels = 8 }\n}\n";
+    let campaign = spec::compile(source, "t.qsl").unwrap();
+    let outcome = campaign.execute().unwrap();
+    assert_eq!(outcome.db.spaces.len(), 3);
+    for space in &outcome.db.spaces {
+        assert_eq!(space.evals.len(), 1, "{}", space.model_name);
+        assert!(space.evals[0].perf_per_area > 0.0);
+    }
+    assert_eq!(outcome.db.spaces[1].model_name, "tiny");
+    assert_eq!(outcome.db.spaces[2].model_name, "narrow");
+}
+
+// ----------------------------------------------------- shipped spec files
+
+/// Every shipped spec — the starter and the examples — must validate.
+#[test]
+fn shipped_specs_compile_cleanly() {
+    let (campaign, diags) = spec::check(spec::STARTER_SPEC);
+    assert!(campaign.is_some(), "starter spec:\n{}", diags.render(spec::STARTER_SPEC, "init.qsl"));
+    let examples = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples");
+    let mut seen = 0;
+    for entry in fs::read_dir(&examples).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("qsl") {
+            continue;
+        }
+        seen += 1;
+        let source = fs::read_to_string(&path).unwrap();
+        let (campaign, diags) = spec::check(&source);
+        assert!(
+            campaign.is_some(),
+            "{}:\n{}",
+            path.display(),
+            diags.render(&source, &path.display().to_string())
+        );
+    }
+    assert!(seen >= 2, "expected at least two example specs, found {seen}");
+}
+
+/// The validate-style resolved summary stays stable (golden-pinned) for
+/// a representative spec.
+#[test]
+fn golden_validate_summary() {
+    let campaign = spec::compile(DEMO_SPEC, "demo.qsl").unwrap();
+    assert_snapshot("spec_validate_summary.txt", &campaign.summary());
+}
