@@ -1,0 +1,80 @@
+//! Joint hardware × model co-exploration (the QUIDAM direction):
+//! sweep width/depth multipliers of the workload models *jointly* with
+//! the hardware axes, stream the joint Pareto frontier per base model
+//! family, and group the results by scaled-model variant.
+//!
+//! The research story this demonstrates: QADAM's Pareto frontier moves
+//! again when model hyperparameters join the search space — a
+//! half-width ResNet-20 on a small array can dominate the full model on
+//! a big one, and only a joint walk can see that.
+//!
+//! Run: `cargo run --release --example co_exploration`
+
+use std::sync::{Arc, Mutex};
+
+use qadam::arch::{DesignSpace, ModelAxes, SweepSpec};
+use qadam::dnn::{model_for, Dataset, ModelKind};
+use qadam::explore::{lock_shared, Explorer};
+use qadam::pareto::CampaignFrontier;
+
+fn main() -> qadam::Result<()> {
+    // 2 widths x 2 depths = 4 variants of ResNet-20, each evaluated on
+    // every hardware point of the tiny sweep: one joint indexed walk.
+    let space = DesignSpace::new(
+        SweepSpec::tiny(),
+        ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1, 2] },
+    );
+    println!(
+        "joint space: {} hardware points x {} model variants = {} design points",
+        space.hw.len(),
+        space.model.len(),
+        space.len()
+    );
+
+    let frontier = Arc::new(Mutex::new(CampaignFrontier::new()));
+    let db = Explorer::over(space.clone())
+        .model(model_for(ModelKind::ResNet20, Dataset::Cifar10))
+        .seed(7)
+        .frontier(frontier.clone())
+        .run()?;
+
+    // One space per scaled-model variant, variant-major.
+    println!("\nper-variant best perf/area:");
+    for model_space in &db.spaces {
+        let best = model_space
+            .evals
+            .iter()
+            .map(|e| e.perf_per_area)
+            .fold(f64::NEG_INFINITY, f64::max);
+        println!(
+            "  {:<20} variant {:<8} best {:.1} inf/s/mm2",
+            model_space.model_name,
+            model_space.variant_label().unwrap_or("base"),
+            best
+        );
+    }
+
+    // The streamed frontier is per *base* family: points from every
+    // variant compete on (perf/area up, energy down), so the archive is
+    // the joint Pareto set of the whole family.
+    let guard = lock_shared(&frontier);
+    let family = &guard.models()[0];
+    println!(
+        "\njoint frontier of {}: {} Pareto-optimal points out of {} offered",
+        family.model_name(),
+        family.front().len(),
+        family.front().offered()
+    );
+    for entry in family.front().sorted() {
+        let variant = space.variant_of(entry.payload.index).expect("front index in space");
+        println!(
+            "  w{} d{} on {:<24} perf/area {:.1}, energy {:.1} uJ",
+            variant.width,
+            variant.depth,
+            entry.payload.eval.config.id(),
+            entry.payload.eval.perf_per_area,
+            entry.payload.eval.energy_uj
+        );
+    }
+    Ok(())
+}

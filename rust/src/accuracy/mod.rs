@@ -62,6 +62,81 @@ fn pe_index(pe: PeType) -> usize {
     }
 }
 
+/// User-declared accuracies layered over the paper [`registry`] — the
+/// lookup the Fig. 5/6-style accuracy fronts consult, so *custom* QSL
+/// models and *scaled* model variants can appear on accuracy fronts.
+///
+/// Resolution order for a model name:
+///
+/// 1. a declaration for the exact name (e.g. `"tiny@w0.5d2"`),
+/// 2. a declaration for the base family
+///    ([`base_model_name`](crate::dnn::base_model_name) strips the
+///    variant suffix) — a *user's* declared accuracy is assumed to hold
+///    for every swept variant of their model unless a per-variant entry
+///    overrides it,
+/// 3. the paper registry — **unscaled** zoo names only. The paper never
+///    measured width/depth-scaled variants, so a scaled zoo model
+///    (`"ResNet-20@w0.25d1"`) resolves to `None` rather than silently
+///    plotting the full model's published accuracy; declare variant
+///    accuracies explicitly (e.g. via a `model slim20 like resnet20 {
+///    accuracy { ... } }` block).
+///
+/// Declarations come from QSL `accuracy { int16 = 91.2, ... }` blocks
+/// (see [`ResolvedCampaign::accuracy_book`](crate::spec::ResolvedCampaign::accuracy_book));
+/// an empty book is exactly the registry.
+#[derive(Debug, Clone, Default)]
+pub struct AccuracyBook {
+    declared: std::collections::BTreeMap<String, Vec<(PeType, f64)>>,
+}
+
+impl AccuracyBook {
+    /// An empty book (registry-only lookups).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare (or override) the top-1 accuracy of `model_name` under
+    /// `pe`.
+    pub fn declare(&mut self, model_name: &str, pe: PeType, top1: f64) {
+        let entries = self.declared.entry(model_name.to_string()).or_default();
+        match entries.iter_mut().find(|(p, _)| *p == pe) {
+            Some(entry) => entry.1 = top1,
+            None => entries.push((pe, top1)),
+        }
+    }
+
+    /// Number of models with at least one declared entry.
+    pub fn declared_models(&self) -> usize {
+        self.declared.len()
+    }
+
+    /// Resolve the top-1 accuracy (percent) of `model_name` on
+    /// `dataset` under `pe` — declared entries first (exact name, then
+    /// base family), the paper registry last.
+    pub fn lookup(&self, model_name: &str, dataset: Dataset, pe: PeType) -> Option<f64> {
+        let find = |name: &str| {
+            self.declared
+                .get(name)
+                .and_then(|entries| entries.iter().find(|(p, _)| *p == pe))
+                .map(|&(_, top1)| top1)
+        };
+        if let Some(top1) = find(model_name) {
+            return Some(top1);
+        }
+        let base = crate::dnn::base_model_name(model_name);
+        if let Some(top1) = find(base) {
+            return Some(top1);
+        }
+        // Registry entries describe the *unscaled* paper models only; a
+        // variant suffix means the paper number does not apply.
+        if base != model_name {
+            return None;
+        }
+        let kind = ModelKind::parse(base)?;
+        registry(kind, dataset, pe).map(|entry| entry.top1)
+    }
+}
+
 /// Look up the paper-reported accuracy for a configuration.
 pub fn registry(model: ModelKind, dataset: Dataset, pe: PeType) -> Option<AccuracyEntry> {
     REGISTRY
@@ -142,5 +217,47 @@ mod tests {
     fn registry_for_dataset_complete() {
         let entries = registry_for(Dataset::Cifar10);
         assert_eq!(entries.len(), 3 * 4);
+    }
+
+    #[test]
+    fn book_layers_declarations_over_registry() {
+        let mut book = AccuracyBook::new();
+        // Empty book == registry.
+        assert_eq!(
+            book.lookup("ResNet-20", Dataset::Cifar10, PeType::Int16),
+            Some(91.6)
+        );
+        assert_eq!(book.lookup("tiny", Dataset::Cifar10, PeType::Int16), None);
+        // Declarations cover custom models…
+        book.declare("tiny", PeType::Int16, 88.5);
+        assert_eq!(book.lookup("tiny", Dataset::Cifar10, PeType::Int16), Some(88.5));
+        assert_eq!(book.lookup("tiny", Dataset::Cifar10, PeType::Fp32), None);
+        // …and every scaled variant inherits the base declaration…
+        assert_eq!(
+            book.lookup("tiny@w0.5d2", Dataset::Cifar10, PeType::Int16),
+            Some(88.5)
+        );
+        // …unless a per-variant entry overrides it.
+        book.declare("tiny@w0.5d2", PeType::Int16, 85.0);
+        assert_eq!(
+            book.lookup("tiny@w0.5d2", Dataset::Cifar10, PeType::Int16),
+            Some(85.0)
+        );
+        // Scaled *zoo* variants do NOT inherit the paper number — the
+        // registry only describes the unscaled models — but an explicit
+        // declaration covers them.
+        assert_eq!(
+            book.lookup("ResNet-20@w0.5d1", Dataset::Cifar10, PeType::Fp32),
+            None
+        );
+        book.declare("ResNet-20", PeType::Fp32, 89.9);
+        assert_eq!(
+            book.lookup("ResNet-20@w0.5d1", Dataset::Cifar10, PeType::Fp32),
+            Some(89.9)
+        );
+        // Re-declaring overrides in place.
+        book.declare("tiny", PeType::Int16, 89.0);
+        assert_eq!(book.lookup("tiny", Dataset::Cifar10, PeType::Int16), Some(89.0));
+        assert_eq!(book.declared_models(), 3);
     }
 }

@@ -3,11 +3,13 @@
 //! An [`AcceleratorConfig`] fixes every hardware knob the paper sweeps:
 //! PE type / bit precision, PE array dimensions, per-PE scratchpad sizes,
 //! global buffer size, DRAM bandwidth, and target clock. [`SweepSpec`]
-//! enumerates the cross-product design space (§III-C).
+//! enumerates the hardware cross-product (§III-C), and [`DesignSpace`]
+//! crosses it with [`ModelAxes`] (width/depth multipliers) into the
+//! joint hardware × model space of QUIDAM-style co-exploration.
 
 pub mod sweep;
 
-pub use sweep::{SweepIter, SweepSpec};
+pub use sweep::{DesignSpace, JointPoint, ModelAxes, ModelVariant, SweepIter, SweepSpec};
 
 use crate::error::{Error, Result};
 use crate::quant::PeType;

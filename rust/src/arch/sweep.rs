@@ -1,14 +1,30 @@
-//! Design-space sweep enumeration (§III-C).
+//! Design-space enumeration (§III-C), generalized to *joint*
+//! hardware × model spaces (the QUIDAM co-exploration direction).
 //!
-//! A [`SweepSpec`] lists candidate values per axis; iteration yields the
-//! full cross-product as concrete [`AcceleratorConfig`]s. The space is
-//! *lazily* enumerated: [`SweepSpec::iter`] decodes design points from a
-//! mixed-radix index in O(1) memory, [`SweepSpec::get`] addresses any
-//! point directly, and [`SweepSpec::shard_iter`] exposes a round-robin
-//! shard view without materializing the space (the coordinator's
-//! leader/worker split, and the substrate for future distributed shards).
-//! The default space mirrors the paper's: 4 PE types × array sizes ×
-//! global buffer sizes × scratchpad variants.
+//! Two layers of typed axes:
+//!
+//! * [`SweepSpec`] — the paper's six **hardware** axes; iteration yields
+//!   the full cross-product as concrete [`AcceleratorConfig`]s. The
+//!   space is *lazily* enumerated: [`SweepSpec::iter`] decodes design
+//!   points from a mixed-radix index in O(1) memory, [`SweepSpec::get`]
+//!   addresses any point directly, and [`SweepSpec::shard_iter`]
+//!   exposes a round-robin shard view without materializing the space.
+//!   The default space mirrors the paper's: 4 PE types × array sizes ×
+//!   global buffer sizes × scratchpad variants.
+//! * [`ModelAxes`] — **model-hyperparameter** axes: width multipliers ×
+//!   depth multipliers applied to every base workload model
+//!   (lowered to concrete models by [`crate::dnn::scale_model`]).
+//!
+//! A [`DesignSpace`] is the cross-product of both layers. Every joint
+//! point has a mixed-radix index (model variant outermost, hardware
+//! innermost), so the same O(1) `get`/`iter`/`shard_iter` addressing —
+//! and everything built on it: strategy selection, sharding, checkpoint
+//! journals, replay cursors — works over the joint space unchanged.
+//! A `DesignSpace` with trivial model axes (`width = [1.0]`,
+//! `depth = [1]`) is indistinguishable from its bare [`SweepSpec`]:
+//! same indices, same JSON, same [`DesignSpace::fingerprint`] — which
+//! is what keeps pre-joint campaign artifacts byte-identical and
+//! journals interchangeable.
 
 use super::{AcceleratorConfig, ScratchpadCfg};
 use crate::error::{Error, Result};
@@ -99,6 +115,22 @@ impl SweepSpec {
     /// Whether the spec is degenerate (any empty axis).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// The QSL-facing name of the first empty axis, if any — so
+    /// degenerate-space errors can say *which* axis has no candidates
+    /// instead of a generic "empty space" message.
+    pub fn empty_axis(&self) -> Option<&'static str> {
+        [
+            ("pe_type", self.pe_types.is_empty()),
+            ("array", self.array_dims.is_empty()),
+            ("glb_kib", self.glb_kib.is_empty()),
+            ("spad", self.spads.is_empty()),
+            ("dram_gbps", self.dram_bw_gbps.is_empty()),
+            ("clock_ghz", self.clock_ghz.is_empty()),
+        ]
+        .into_iter()
+        .find_map(|(name, empty)| empty.then_some(name))
     }
 
     /// Decode the `index`-th design point of the cross-product without
@@ -277,8 +309,10 @@ impl SweepSpec {
                 .map(|v| v.as_f64().ok_or_else(|| Error::ParseError("bad clock_ghz".into())))
                 .collect::<Result<_>>()?;
         }
-        if spec.is_empty() {
-            return Err(Error::InvalidConfig("sweep spec has an empty axis".into()));
+        if let Some(axis) = spec.empty_axis() {
+            return Err(Error::InvalidConfig(format!(
+                "sweep axis '{axis}' lists no candidate values: the design space is empty"
+            )));
         }
         Ok(spec)
     }
@@ -297,15 +331,6 @@ impl SweepSpec {
         let text = std::fs::read_to_string(path)?;
         let json = Json::parse(&text)?;
         Self::from_json(&json)
-    }
-
-    /// Enumerate only the i-th shard of `n` (round-robin).
-    #[deprecated(
-        since = "0.2.0",
-        note = "materializes the shard; use the lazy `shard_iter` instead"
-    )]
-    pub fn enumerate_shard(&self, shard: usize, num_shards: usize) -> Vec<AcceleratorConfig> {
-        self.shard_iter(shard, num_shards).collect()
     }
 }
 
@@ -360,6 +385,347 @@ impl<'a> IntoIterator for &'a SweepSpec {
 
     fn into_iter(self) -> SweepIter<'a> {
         self.iter()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model axes and the joint design space.
+
+/// Model-hyperparameter sweep axes: width multipliers × depth
+/// multipliers applied to every base workload model (the QUIDAM-style
+/// co-exploration knobs). The default — `width = [1.0]`, `depth = [1]`
+/// — is the *trivial* axes: exactly one variant, the base model itself,
+/// and a [`DesignSpace`] carrying it behaves identically to its bare
+/// [`SweepSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelAxes {
+    /// Candidate channel-width multipliers (each > 0; `1.0` = base).
+    pub width_mults: Vec<f64>,
+    /// Candidate depth multipliers (each ≥ 1; `1` = base).
+    pub depth_mults: Vec<usize>,
+}
+
+impl Default for ModelAxes {
+    fn default() -> Self {
+        Self { width_mults: vec![1.0], depth_mults: vec![1] }
+    }
+}
+
+impl ModelAxes {
+    /// Whether these are the default axes (exactly the base model).
+    pub fn is_trivial(&self) -> bool {
+        self.width_mults == [1.0] && self.depth_mults == [1]
+    }
+
+    /// Number of model variants in the cross-product.
+    pub fn len(&self) -> usize {
+        self.width_mults.len() * self.depth_mults.len()
+    }
+
+    /// Whether an axis is empty (degenerate space).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The QSL-facing name of the first empty model axis, if any.
+    pub fn empty_axis(&self) -> Option<&'static str> {
+        if self.width_mults.is_empty() {
+            Some("width")
+        } else if self.depth_mults.is_empty() {
+            Some("depth")
+        } else {
+            None
+        }
+    }
+
+    /// The single validation rule for model axes — shared by JSON
+    /// deserialization, the explorer, and (in message spirit) the QSL
+    /// resolver and CLI flag parsers, so no path can accept axes
+    /// another rejects: both axes non-empty, widths positive and
+    /// finite, depths at least 1.
+    pub fn ensure_valid(&self) -> Result<()> {
+        if let Some(axis) = self.empty_axis() {
+            return Err(Error::InvalidConfig(format!(
+                "model axis '{axis}' lists no candidate values: the design space is empty"
+            )));
+        }
+        if let Some(bad) = self.width_mults.iter().find(|w| !w.is_finite() || **w <= 0.0) {
+            return Err(Error::InvalidConfig(format!(
+                "model axis 'width' has a non-positive multiplier ({bad}); width multipliers \
+                 must be positive finite numbers"
+            )));
+        }
+        if self.depth_mults.contains(&0) {
+            return Err(Error::InvalidConfig(
+                "model axis 'depth' has a zero multiplier; depth multipliers must be at least 1"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Decode the `index`-th variant (width outermost, depth innermost);
+    /// `None` when `index >= self.len()`.
+    pub fn variant(&self, index: usize) -> Option<ModelVariant> {
+        if index >= self.len() {
+            return None;
+        }
+        let depth = self.depth_mults[index % self.depth_mults.len()];
+        let width = self.width_mults[index / self.depth_mults.len()];
+        Some(ModelVariant { width, depth })
+    }
+
+    /// Serialize as the `"model_axes"` payload of a joint design space.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "width_mults",
+                Json::Arr(self.width_mults.iter().map(|&w| num(w)).collect()),
+            ),
+            (
+                "depth_mults",
+                Json::Arr(self.depth_mults.iter().map(|&d| num(d as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Deserialize from [`Self::to_json`] output.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let widths = json
+            .get("width_mults")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::ParseError("model_axes missing 'width_mults'".into()))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .filter(|w| w.is_finite() && *w > 0.0)
+                    .ok_or_else(|| {
+                        Error::ParseError("width multipliers must be positive numbers".into())
+                    })
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        let depths = json
+            .get("depth_mults")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::ParseError("model_axes missing 'depth_mults'".into()))?
+            .iter()
+            .map(|v| {
+                v.as_i64()
+                    .filter(|d| *d >= 1)
+                    .map(|d| d as usize)
+                    .ok_or_else(|| {
+                        Error::ParseError("depth multipliers must be positive integers".into())
+                    })
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        let axes = Self { width_mults: widths, depth_mults: depths };
+        axes.ensure_valid()?;
+        Ok(axes)
+    }
+}
+
+/// One concrete model scaling: the (width, depth) pair a joint design
+/// point applies to every base workload model (see
+/// [`crate::dnn::scale_model`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelVariant {
+    /// Channel-width multiplier (> 0; `1.0` = base widths).
+    pub width: f64,
+    /// Depth multiplier (≥ 1; `1` = base depth).
+    pub depth: usize,
+}
+
+impl ModelVariant {
+    /// The base model itself (no scaling applied).
+    pub fn is_identity(&self) -> bool {
+        self.width == 1.0 && self.depth == 1
+    }
+
+    /// Short human-readable label (`"w0.5d2"`), used in summaries.
+    pub fn label(&self) -> String {
+        format!("w{}d{}", self.width, self.depth)
+    }
+}
+
+/// One decoded joint design point: the model scaling to apply and the
+/// hardware configuration to evaluate it on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JointPoint {
+    /// The model-axes variant of this point.
+    pub variant: ModelVariant,
+    /// The hardware design point.
+    pub config: AcceleratorConfig,
+}
+
+/// The joint hardware × model design space: a [`SweepSpec`] crossed with
+/// [`ModelAxes`]. Joint indices put the model variant in the outermost
+/// mixed-radix digit (`index = variant_index * hw.len() + hw_index`), so
+/// with trivial model axes the joint indices *are* the hardware indices
+/// — pre-joint campaigns, journals, and fingerprints are unchanged.
+///
+/// ```
+/// use qadam::arch::{DesignSpace, ModelAxes, SweepSpec};
+///
+/// let space = DesignSpace::new(
+///     SweepSpec::tiny(),
+///     ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1] },
+/// );
+/// assert_eq!(space.len(), 2 * SweepSpec::tiny().len());
+/// // The first hardware block carries the first variant…
+/// assert_eq!(space.get(0).unwrap().variant.width, 0.5);
+/// // …and a trivial space is fingerprint-identical to its sweep.
+/// let trivial = DesignSpace::from(SweepSpec::tiny());
+/// assert_eq!(trivial.fingerprint(), SweepSpec::tiny().fingerprint());
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignSpace {
+    /// The hardware axes.
+    pub hw: SweepSpec,
+    /// The model-hyperparameter axes.
+    pub model: ModelAxes,
+}
+
+impl From<SweepSpec> for DesignSpace {
+    fn from(hw: SweepSpec) -> Self {
+        Self { hw, model: ModelAxes::default() }
+    }
+}
+
+impl DesignSpace {
+    /// Build a joint space from hardware and model axes.
+    pub fn new(hw: SweepSpec, model: ModelAxes) -> Self {
+        Self { hw, model }
+    }
+
+    /// Number of joint design points (hardware points × model variants).
+    pub fn len(&self) -> usize {
+        self.hw.len() * self.model.len()
+    }
+
+    /// Whether the joint space is degenerate (any empty axis).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Reject a degenerate space with an error *naming* the offending
+    /// axis (`sweep axis 'glb_kib'` / `model axis 'width'`), so a
+    /// mis-built campaign says exactly what to fix.
+    pub fn ensure_nonempty(&self) -> Result<()> {
+        if let Some(axis) = self.hw.empty_axis() {
+            return Err(Error::InvalidConfig(format!(
+                "sweep axis '{axis}' lists no candidate values: the design space is empty"
+            )));
+        }
+        self.model.ensure_valid()
+    }
+
+    /// The model-variant digit of a joint index.
+    ///
+    /// # Panics
+    /// If the hardware space is empty (guard with
+    /// [`Self::ensure_nonempty`] first).
+    pub fn variant_index(&self, index: usize) -> usize {
+        index / self.hw.len()
+    }
+
+    /// The hardware digit of a joint index.
+    ///
+    /// # Panics
+    /// If the hardware space is empty.
+    pub fn hw_index(&self, index: usize) -> usize {
+        index % self.hw.len()
+    }
+
+    /// Decode the variant of joint point `index` (`None` out of range).
+    pub fn variant_of(&self, index: usize) -> Option<ModelVariant> {
+        if index >= self.len() {
+            return None;
+        }
+        self.model.variant(self.variant_index(index))
+    }
+
+    /// Decode the `index`-th joint design point without materializing
+    /// anything; `None` when `index >= self.len()`. Order: model
+    /// variants outermost (each variant's full hardware block is
+    /// contiguous), hardware cross-product order within a block.
+    pub fn get(&self, index: usize) -> Option<JointPoint> {
+        if index >= self.len() {
+            return None;
+        }
+        let variant = self.model.variant(self.variant_index(index))?;
+        let config = self.hw.get(self.hw_index(index))?;
+        Some(JointPoint { variant, config })
+    }
+
+    /// Lazy iterator over the joint space (O(1) memory).
+    pub fn iter(&self) -> impl ExactSizeIterator<Item = JointPoint> + '_ {
+        (0..self.len()).map(move |index| self.get(index).expect("index within joint space"))
+    }
+
+    /// Lazy round-robin shard view of the joint space — the joint
+    /// points whose index `i` satisfies `i % num_shards == shard`, in
+    /// index order (the same partition [`SweepSpec::shard_iter`] gives
+    /// a bare hardware space).
+    ///
+    /// # Panics
+    /// If `num_shards == 0` or `shard >= num_shards`.
+    pub fn shard_iter(
+        &self,
+        shard: usize,
+        num_shards: usize,
+    ) -> impl ExactSizeIterator<Item = JointPoint> + '_ {
+        assert!(
+            num_shards > 0 && shard < num_shards,
+            "shard {shard} out of range for {num_shards} shards"
+        );
+        let len = self.len();
+        let count = if shard < len { (len - shard).div_ceil(num_shards) } else { 0 };
+        (0..count).map(move |pos| {
+            self.get(shard + pos * num_shards).expect("shard index within joint space")
+        })
+    }
+
+    /// Serialize to JSON. With trivial model axes the rendering is
+    /// *exactly* [`SweepSpec::to_json`] — no `"model_axes"` key — so
+    /// pre-joint sweeps, files, and fingerprints are preserved; joint
+    /// spaces add the `"model_axes"` object.
+    pub fn to_json(&self) -> Json {
+        let hw = self.hw.to_json();
+        if self.model.is_trivial() {
+            return hw;
+        }
+        let Json::Obj(mut fields) = hw else { unreachable!("SweepSpec::to_json is an object") };
+        fields.insert("model_axes".into(), self.model.to_json());
+        Json::Obj(fields)
+    }
+
+    /// Deserialize from [`Self::to_json`] output (a bare sweep object,
+    /// or one carrying a `"model_axes"` key).
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let hw = SweepSpec::from_json(json)?;
+        let model = match json.get("model_axes") {
+            None => ModelAxes::default(),
+            Some(axes) => ModelAxes::from_json(axes)?,
+        };
+        Ok(Self { hw, model })
+    }
+
+    /// Load a joint space from a JSON file (the `--sweep <file>` config
+    /// format; a plain hardware sweep file loads with trivial axes).
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text)?;
+        Self::from_json(&json)
+    }
+
+    /// Stable 64-bit fingerprint of the *joint* identity: FNV-1a over
+    /// the canonical JSON rendering. Equal to
+    /// [`SweepSpec::fingerprint`] when the model axes are trivial, so
+    /// hardware-only campaign journals and frontier bindings stay
+    /// interchangeable with pre-joint builds; any model-axes change
+    /// produces a different fingerprint.
+    pub fn fingerprint(&self) -> u64 {
+        crate::util::fnv1a_64(self.to_json().to_string_canonical().as_bytes())
     }
 }
 
@@ -479,18 +845,111 @@ mod tests {
         }
     }
 
+    fn wide_axes() -> ModelAxes {
+        ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1, 2, 3] }
+    }
+
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_enumerate_shard_still_partitions() {
+    fn model_axes_default_is_trivial() {
+        let axes = ModelAxes::default();
+        assert!(axes.is_trivial());
+        assert_eq!(axes.len(), 1);
+        assert_eq!(axes.variant(0), Some(ModelVariant { width: 1.0, depth: 1 }));
+        assert!(axes.variant(0).unwrap().is_identity());
+        assert!(!wide_axes().is_trivial());
+        assert_eq!(wide_axes().len(), 6);
+    }
+
+    #[test]
+    fn model_axes_decode_width_outermost() {
+        let axes = wide_axes();
+        let variants: Vec<(f64, usize)> =
+            (0..axes.len()).map(|i| axes.variant(i).map(|v| (v.width, v.depth)).unwrap()).collect();
+        assert_eq!(
+            variants,
+            vec![(0.5, 1), (0.5, 2), (0.5, 3), (1.0, 1), (1.0, 2), (1.0, 3)]
+        );
+        assert!(axes.variant(axes.len()).is_none());
+    }
+
+    #[test]
+    fn joint_space_indices_are_variant_major() {
+        let space = DesignSpace::new(SweepSpec::tiny(), wide_axes());
+        assert_eq!(space.len(), SweepSpec::tiny().len() * 6);
+        // Within a variant block the hardware order is the sweep order.
+        let hw_len = space.hw.len();
+        for index in 0..space.len() {
+            let point = space.get(index).unwrap();
+            assert_eq!(point.config, space.hw.get(index % hw_len).unwrap());
+            assert_eq!(point.variant, space.model.variant(index / hw_len).unwrap());
+            assert_eq!(space.variant_index(index), index / hw_len);
+            assert_eq!(space.hw_index(index), index % hw_len);
+        }
+        assert!(space.get(space.len()).is_none());
+    }
+
+    #[test]
+    fn trivial_joint_space_matches_bare_sweep() {
         let spec = SweepSpec::tiny();
-        let mut recombined: Vec<_> = (0..3)
-            .flat_map(|shard| spec.enumerate_shard(shard, 3))
-            .map(|c| c.id())
-            .collect();
-        recombined.sort();
-        let mut expected: Vec<_> = spec.iter().map(|c| c.id()).collect();
-        expected.sort();
-        assert_eq!(recombined, expected);
+        let space = DesignSpace::from(spec.clone());
+        assert_eq!(space.len(), spec.len());
+        for (joint, hw) in space.iter().zip(spec.iter()) {
+            assert!(joint.variant.is_identity());
+            assert_eq!(joint.config, hw);
+        }
+        // Same canonical JSON, same fingerprint: journals interchange.
+        assert_eq!(
+            space.to_json().to_string_canonical(),
+            spec.to_json().to_string_canonical()
+        );
+        assert_eq!(space.fingerprint(), spec.fingerprint());
+    }
+
+    #[test]
+    fn joint_space_json_round_trips_and_fingerprints_axes() {
+        let space = DesignSpace::new(SweepSpec::tiny(), wide_axes());
+        let parsed = DesignSpace::from_json(&space.to_json()).unwrap();
+        assert_eq!(parsed, space);
+        assert_eq!(parsed.fingerprint(), space.fingerprint());
+        // Any model-axes change moves the fingerprint.
+        let mut deeper = space.clone();
+        deeper.model.depth_mults.push(4);
+        assert_ne!(space.fingerprint(), deeper.fingerprint());
+        assert_ne!(space.fingerprint(), DesignSpace::from(SweepSpec::tiny()).fingerprint());
+    }
+
+    #[test]
+    fn joint_shards_partition_the_space() {
+        let space = DesignSpace::new(SweepSpec::tiny(), wide_axes());
+        for num_shards in [1, 2, 5] {
+            let mut recombined: Vec<String> = (0..num_shards)
+                .flat_map(|shard| space.shard_iter(shard, num_shards))
+                .map(|p| format!("{}/{}", p.variant.label(), p.config.id()))
+                .collect();
+            recombined.sort();
+            let mut expected: Vec<String> = space
+                .iter()
+                .map(|p| format!("{}/{}", p.variant.label(), p.config.id()))
+                .collect();
+            expected.sort();
+            assert_eq!(recombined, expected, "{num_shards} shards");
+        }
+    }
+
+    #[test]
+    fn empty_axes_are_named() {
+        let mut spec = SweepSpec::tiny();
+        spec.glb_kib.clear();
+        assert_eq!(spec.empty_axis(), Some("glb_kib"));
+        let err = DesignSpace::from(spec).ensure_nonempty().unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        assert!(err.to_string().contains("'glb_kib'"), "{err}");
+        let space = DesignSpace::new(
+            SweepSpec::tiny(),
+            ModelAxes { width_mults: vec![], depth_mults: vec![1] },
+        );
+        let err = space.ensure_nonempty().unwrap_err();
+        assert!(err.to_string().contains("model axis 'width'"), "{err}");
     }
 
     #[test]

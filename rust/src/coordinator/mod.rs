@@ -1,13 +1,34 @@
-//! The DSE coordinator: leader/worker orchestration of the paper's
-//! evaluation campaigns (the framework's L3 contribution).
+//! Worker-pool substrate for parallel evaluation (the framework's L3
+//! contribution).
 //!
-//! The campaign pipeline now lives in [`crate::explore::Explorer`] — one
+//! The campaign pipeline lives in [`crate::explore::Explorer`] — one
 //! streaming, fallible entry point shared by the CLI, the report
-//! generator, the benches, and the examples. This module keeps the worker
-//! pool ([`pool`]) and the legacy [`Coordinator`] façade, whose
-//! `campaign`/`explore_model` methods are thin deprecated shims over the
-//! explorer (the aggregate types are re-exported for source
-//! compatibility).
+//! generator, the benches, and the examples. This module keeps the
+//! self-balancing worker pool ([`pool`]) underneath it. The legacy
+//! `Coordinator` façade and its `campaign`/`explore_model` shims
+//! (deprecated since the Explorer landed) have been removed; the
+//! campaign aggregates they produced are re-exported from
+//! [`crate::explore`] for source compatibility.
+//!
+//! # Migration
+//!
+//! ```
+//! use qadam::arch::SweepSpec;
+//! use qadam::dnn::Dataset;
+//! use qadam::explore::Explorer;
+//!
+//! // Before: Coordinator::new(4, 7).campaign(&spec, Dataset::Cifar10)
+//! let db = Explorer::over(SweepSpec::tiny())
+//!     .dataset(Dataset::Cifar10)
+//!     .workers(4)
+//!     .seed(7)
+//!     .run()?;
+//! # assert_eq!(db.spaces.len(), 3);
+//! // Before: Coordinator::new(4, 7).explore_model(&spec, &model) —
+//! // build with `.model(model)` instead; the evaluation vector is
+//! // `db.spaces[0].evals`, same order, bit-identical metrics.
+//! # Ok::<(), qadam::Error>(())
+//! ```
 
 pub mod pool;
 
@@ -16,170 +37,12 @@ pub use pool::{default_workers, parallel_map};
 // Source compatibility: these aggregates moved to `crate::explore`.
 pub use crate::explore::{CampaignStats, EvalDatabase, ModelSpace};
 
-use crate::arch::SweepSpec;
-use crate::dnn::{Dataset, Model};
-use crate::dse::Evaluation;
-use crate::explore::Explorer;
-
-/// Coordinator configuration (legacy façade over [`Explorer`]).
-#[derive(Debug, Clone)]
-pub struct Coordinator {
-    /// Worker thread count.
-    pub workers: usize,
-    /// Synthesis-noise seed.
-    pub seed: u64,
-}
-
-impl Default for Coordinator {
-    fn default() -> Self {
-        Self { workers: default_workers(), seed: 0x9ADA }
-    }
-}
-
-impl Coordinator {
-    /// New coordinator with an explicit worker count and seed.
-    pub fn new(workers: usize, seed: u64) -> Self {
-        Self { workers: workers.max(1), seed }
-    }
-
-    /// Run the full campaign for one dataset: every design point ×
-    /// every paper model for that dataset (Fig. 4 panels).
-    ///
-    /// # Panics
-    /// On a degenerate sweep (empty axis). Use [`Explorer::run`] for the
-    /// fallible equivalent.
-    ///
-    /// # Migration
-    ///
-    /// Move the constructor arguments into the builder; the result is
-    /// bit-identical and degenerate sweeps become a typed error instead
-    /// of a panic:
-    ///
-    /// ```
-    /// use qadam::arch::SweepSpec;
-    /// use qadam::dnn::Dataset;
-    /// use qadam::explore::Explorer;
-    ///
-    /// // Before: Coordinator::new(4, 7).campaign(&spec, Dataset::Cifar10)
-    /// let db = Explorer::over(SweepSpec::tiny())
-    ///     .dataset(Dataset::Cifar10)
-    ///     .workers(4)
-    ///     .seed(7)
-    ///     .run()?;
-    /// # assert_eq!(db.spaces.len(), 3);
-    /// # Ok::<(), qadam::Error>(())
-    /// ```
-    #[deprecated(
-        since = "0.2.0",
-        note = "use `Explorer::over(spec).dataset(dataset).workers(n).seed(s).run()`"
-    )]
-    pub fn campaign(&self, spec: &SweepSpec, dataset: Dataset) -> EvalDatabase {
-        Explorer::over(spec.clone())
-            .dataset(dataset)
-            .workers(self.workers)
-            .seed(self.seed)
-            .run()
-            .expect("legacy campaign requires a non-degenerate sweep")
-    }
-
-    /// Evaluate one sweep against one model in parallel (order-preserving).
-    ///
-    /// # Panics
-    /// On a degenerate sweep (empty axis). Use [`Explorer::run`] for the
-    /// fallible equivalent.
-    ///
-    /// # Migration
-    ///
-    /// The evaluation vector lives in the database's single model space;
-    /// order and every metric bit are unchanged:
-    ///
-    /// ```
-    /// use qadam::arch::SweepSpec;
-    /// use qadam::dnn::{model_for, Dataset, ModelKind};
-    /// use qadam::explore::Explorer;
-    ///
-    /// let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
-    /// // Before: Coordinator::new(4, 7).explore_model(&spec, &model)
-    /// let db = Explorer::over(SweepSpec::tiny())
-    ///     .model(model)
-    ///     .workers(4)
-    ///     .seed(7)
-    ///     .run()?;
-    /// let evals = &db.spaces[0].evals;
-    /// # assert_eq!(evals.len(), SweepSpec::tiny().len());
-    /// # Ok::<(), qadam::Error>(())
-    /// ```
-    #[deprecated(
-        since = "0.2.0",
-        note = "use `Explorer::over(spec).model(model).workers(n).seed(s).run()`"
-    )]
-    pub fn explore_model(&self, spec: &SweepSpec, model: &Model) -> Vec<Evaluation> {
-        let db = Explorer::over(spec.clone())
-            .model(model.clone())
-            .workers(self.workers)
-            .seed(self.seed)
-            .run()
-            .expect("legacy explore_model requires a non-degenerate sweep");
-        db.spaces.into_iter().next().map(|space| space.evals).unwrap_or_default()
-    }
-}
-
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
-    use super::*;
-    use crate::dse;
+    use crate::arch::SweepSpec;
+    use crate::dnn::Dataset;
+    use crate::explore::Explorer;
     use crate::quant::PeType;
-
-    #[test]
-    fn legacy_campaign_covers_models_and_space() {
-        let coordinator = Coordinator::new(2, 7);
-        let spec = SweepSpec::tiny();
-        let db = coordinator.campaign(&spec, Dataset::Cifar10);
-        assert_eq!(db.spaces.len(), 3); // VGG-16, ResNet-20, ResNet-56
-        for space in &db.spaces {
-            assert_eq!(space.evals.len(), spec.len());
-        }
-        assert_eq!(db.stats.evaluations, spec.len() * 3);
-        assert!(db.stats.evals_per_sec() > 0.0);
-    }
-
-    #[test]
-    fn legacy_shims_match_explorer_bit_for_bit() {
-        let spec = SweepSpec::tiny();
-        let coordinator = Coordinator::new(4, 7);
-        let legacy = coordinator.campaign(&spec, Dataset::Cifar10);
-        let new = Explorer::over(spec.clone())
-            .dataset(Dataset::Cifar10)
-            .workers(4)
-            .seed(7)
-            .run()
-            .unwrap();
-        assert_eq!(legacy.spaces.len(), new.spaces.len());
-        for (a, b) in legacy.spaces.iter().zip(&new.spaces) {
-            assert_eq!(a.model_name, b.model_name);
-            for (x, y) in a.evals.iter().zip(&b.evals) {
-                assert_eq!(x.config.id(), y.config.id());
-                assert_eq!(x.perf_per_area, y.perf_per_area);
-                assert_eq!(x.energy_uj, y.energy_uj);
-            }
-        }
-    }
-
-    #[test]
-    fn legacy_explore_model_preserves_order() {
-        let spec = SweepSpec::tiny();
-        let model = crate::dnn::model_for(crate::dnn::ModelKind::ResNet20, Dataset::Cifar10);
-        let serial: Vec<dse::Evaluation> =
-            spec.iter().map(|c| dse::evaluate(&c, &model, 7)).collect();
-        let parallel = Coordinator::new(4, 7).explore_model(&spec, &model);
-        assert_eq!(serial.len(), parallel.len());
-        for (a, b) in serial.iter().zip(&parallel) {
-            assert_eq!(a.config.id(), b.config.id());
-            assert_eq!(a.perf_per_area, b.perf_per_area);
-            assert_eq!(a.energy_uj, b.energy_uj);
-        }
-    }
 
     #[test]
     fn geomean_headline_sane() {

@@ -2,12 +2,18 @@
 //!
 //! The evaluation (§IV) iterates VGG-16, ResNet-20, ResNet-34, ResNet-50
 //! and ResNet-56 over CIFAR-10, CIFAR-100 and ImageNet. This module holds
-//! the layer-wise configurations ([`Layer`]) and the zoo constructors
-//! ([`zoo`]); the dataflow mapper consumes them layer by layer.
+//! the layer-wise configurations ([`Layer`]), the zoo constructors
+//! ([`zoo`]), and the QUIDAM-style [`scale_model`] transform that lowers
+//! width/depth-multiplier variants of a base model for joint
+//! hardware × model co-exploration; the dataflow mapper consumes models
+//! layer by layer.
 
 pub mod zoo;
 
-pub use zoo::{model_for, models_for, Dataset, ModelKind};
+pub use zoo::{
+    base_model_name, lower_workload, model_for, models_for, scale_model, variant_model_name,
+    Dataset, ModelKind,
+};
 
 /// Layer kind; the mapper treats FC as a 1×1 conv over a 1×1 ifmap.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

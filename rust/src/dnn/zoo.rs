@@ -172,6 +172,162 @@ impl std::fmt::Display for ModelKind {
     }
 }
 
+/// Render the canonical name of a `(width, depth)`-scaled model
+/// variant: the base name itself for the identity variant, otherwise
+/// `"{base}@w{width}d{depth}"` (e.g. `"ResNet-20@w0.5d2"`). The `@`
+/// separator cannot occur in zoo names or QSL identifiers, so
+/// [`base_model_name`] can always recover the base family.
+pub fn variant_model_name(base: &str, width: f64, depth: usize) -> String {
+    if width == 1.0 && depth == 1 {
+        base.to_string()
+    } else {
+        format!("{base}@w{width}d{depth}")
+    }
+}
+
+/// Strip a variant suffix produced by [`variant_model_name`], returning
+/// the base model family name (identity on unsuffixed names).
+pub fn base_model_name(name: &str) -> &str {
+    name.split('@').next().unwrap_or(name)
+}
+
+/// The QUIDAM-style model scaling transform: lower a `(width, depth)`
+/// variant of a base model to a concrete [`Model`].
+///
+/// * **Width** multiplies every *internal* channel count by `width`
+///   (rounded, minimum 1). The first layer's input channels (the image)
+///   and the last layer's output channels (the class count) are
+///   preserved, so variants stay valid classifiers for their dataset.
+///   A fully-connected layer whose input equals its predecessor's
+///   flattened output (`fc head { in = 4096 }` after a 16×16×16 pool —
+///   the custom-model idiom) tracks the predecessor's *scaled*
+///   flattened output exactly, so variants stay internally consistent
+///   at every width.
+/// * **Depth** appends `depth - 1` same-shape copies after every
+///   stride-1, spatial-dim-preserving convolution (`in = out = the
+///   conv's output`), named `{layer}__dK` — the layer-list analogue of
+///   deepening each residual stage. Strided or shrinking convs, pools,
+///   and the classifier are not repeated (their copies would be
+///   geometrically inconsistent with their neighbors).
+///
+/// The identity variant (`width == 1.0 && depth == 1`) returns the base
+/// model unchanged — same name, same layers — which is what keeps
+/// hardware-only campaigns byte-identical to pre-joint builds. Scaled
+/// variants get distinct names *and* distinct layer shapes, so the
+/// content-addressed point cache can never alias two variants.
+///
+/// ```
+/// use qadam::dnn::{model_for, scale_model, Dataset, ModelKind};
+///
+/// let base = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+/// let half = scale_model(&base, 0.5, 1);
+/// assert_eq!(half.name, "ResNet-20@w0.5d1");
+/// assert!(half.total_macs() < base.total_macs());
+/// // The classifier still emits 10 classes.
+/// assert_eq!(half.layers.last().unwrap().out_c, 10);
+/// // The identity variant is the base model, name included.
+/// assert_eq!(scale_model(&base, 1.0, 1), base);
+/// ```
+pub fn scale_model(base: &Model, width: f64, depth: usize) -> Model {
+    assert!(width > 0.0 && width.is_finite(), "width multiplier must be positive");
+    assert!(depth >= 1, "depth multiplier must be at least 1");
+    if width == 1.0 && depth == 1 {
+        return base.clone();
+    }
+    let last = base.layers.len().saturating_sub(1);
+    let scale_c = |c: usize| ((c as f64 * width).round() as usize).max(1);
+    let mut layers: Vec<Layer> = Vec::with_capacity(base.layers.len() * depth);
+    // Flattened feature count (out_hw² × out_c) of the previous layer,
+    // in the base model and in the scaled one: an FC whose base input
+    // equals its predecessor's flattened output (the `fc head { in =
+    // 4096 }` idiom) must track the *scaled* flattened output, not
+    // `round(in × width)` — rounding the product and the factor
+    // disagree for most widths, which would make the variant
+    // geometrically impossible.
+    let mut prev_flat: Option<(usize, usize)> = None;
+    for (i, layer) in base.layers.iter().enumerate() {
+        let mut scaled = layer.clone();
+        if width != 1.0 {
+            match scaled.kind {
+                super::LayerKind::Pool => {
+                    // Pools carry channels through; out_c mirrors in_c.
+                    if i != 0 {
+                        let c = scale_c(scaled.in_c);
+                        scaled.in_c = c;
+                        scaled.out_c = c;
+                    }
+                }
+                super::LayerKind::FullyConnected => {
+                    if i != 0 {
+                        scaled.in_c = match prev_flat {
+                            Some((base_flat, scaled_flat)) if base_flat == layer.in_c => {
+                                scaled_flat
+                            }
+                            _ => scale_c(scaled.in_c),
+                        };
+                    }
+                    if i != last {
+                        scaled.out_c = scale_c(scaled.out_c);
+                    }
+                }
+                super::LayerKind::Conv => {
+                    if i != 0 {
+                        scaled.in_c = scale_c(scaled.in_c);
+                    }
+                    if i != last {
+                        scaled.out_c = scale_c(scaled.out_c);
+                    }
+                }
+            }
+        }
+        let base_out = layer.out_hw();
+        let scaled_out = scaled.out_hw();
+        prev_flat = Some((base_out * base_out * layer.out_c, scaled_out * scaled_out * scaled.out_c));
+        let out_hw = scaled.out_hw();
+        let (copy_c, kernel, padding) = (scaled.out_c, scaled.kernel, scaled.padding);
+        // Only spatial-dim-preserving convs gain copies: a copy of a
+        // shrinking conv (e.g. 3x3 pad-0) would claim its predecessor's
+        // *input* resolution and make consecutive copies geometrically
+        // inconsistent.
+        let repeatable = scaled.kind == super::LayerKind::Conv
+            && scaled.stride == 1
+            && i != last
+            && out_hw == scaled.in_hw;
+        let base_name = scaled.name.clone();
+        layers.push(scaled);
+        if repeatable {
+            for k in 1..depth {
+                layers.push(Layer {
+                    name: format!("{base_name}__d{k}"),
+                    kind: super::LayerKind::Conv,
+                    in_hw: out_hw,
+                    in_c: copy_c,
+                    out_c: copy_c,
+                    kernel,
+                    stride: 1,
+                    padding,
+                });
+            }
+        }
+    }
+    Model { name: variant_model_name(&base.name, width, depth), dataset: base.dataset, layers }
+}
+
+/// Lower a base workload once per model-axes variant:
+/// `result[v][m]` is base model `m` scaled by variant `v` of `axes`
+/// (the base model itself for the identity variant). The single
+/// lowering used by every joint-space consumer — the explorer's
+/// evaluation walk and the halving strategy's proxy scoring — so all
+/// of them score and evaluate *definitionally* identical workloads.
+pub fn lower_workload(axes: &crate::arch::ModelAxes, models: &[Model]) -> Vec<Vec<Model>> {
+    (0..axes.len())
+        .map(|v| {
+            let variant = axes.variant(v).expect("variant index in range");
+            models.iter().map(|m| scale_model(m, variant.width, variant.depth)).collect()
+        })
+        .collect()
+}
+
 /// Build a model for a dataset.
 pub fn model_for(kind: ModelKind, dataset: Dataset) -> Model {
     match kind {
@@ -435,6 +591,108 @@ mod tests {
         assert_eq!(Dataset::Cifar10.paper_models().len(), 3);
         assert!(Dataset::ImageNet.paper_models().contains(&ModelKind::ResNet50));
         assert!(!Dataset::ImageNet.paper_models().contains(&ModelKind::ResNet20));
+    }
+
+    #[test]
+    fn width_scaling_preserves_io_and_scales_interior() {
+        let base = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let half = scale_model(&base, 0.5, 1);
+        assert_eq!(half.layers.len(), base.layers.len());
+        // Image channels and class count survive.
+        assert_eq!(half.layers[0].in_c, base.layers[0].in_c);
+        assert_eq!(half.layers.last().unwrap().out_c, Dataset::Cifar10.classes());
+        // The stem narrows: 16 -> 8 output channels.
+        assert_eq!(half.layers[0].out_c, 8);
+        // MACs shrink roughly quadratically with width.
+        let ratio = half.total_macs() as f64 / base.total_macs() as f64;
+        assert!((0.15..0.5).contains(&ratio), "half-width MAC ratio {ratio}");
+        // Widening never collapses a channel to zero.
+        let tiny = scale_model(&base, 0.01, 1);
+        assert!(tiny.layers.iter().all(|l| l.in_c >= 1 && l.out_c >= 1));
+    }
+
+    #[test]
+    fn depth_scaling_repeats_stride1_convs_only() {
+        let base = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let deep = scale_model(&base, 1.0, 2);
+        assert!(deep.layers.len() > base.layers.len());
+        assert!(deep.total_macs() > base.total_macs());
+        for copy in deep.layers.iter().filter(|l| l.name.contains("__d")) {
+            assert_eq!(copy.kind, super::super::LayerKind::Conv);
+            assert_eq!(copy.stride, 1);
+            assert_eq!(copy.in_c, copy.out_c, "{}", copy.name);
+            // Copies keep spatial dims (same-padded stride-1 convs).
+            assert_eq!(copy.out_hw(), copy.in_hw, "{}", copy.name);
+        }
+        // The classifier is never repeated.
+        assert_eq!(deep.layers.last().unwrap().name, "fc");
+        // Layer names stay unique.
+        let mut names: Vec<&str> = deep.layers.iter().map(|l| l.name.as_str()).collect();
+        let total = names.len();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), total);
+    }
+
+    #[test]
+    fn width_scaling_keeps_flattened_fc_inputs_consistent() {
+        // The custom-model idiom: fc input = predecessor's flattened
+        // output. Scaling must keep the chain exact even when
+        // round(in*w) and round(c*w)*spatial disagree (e.g. w = 0.9).
+        let base = Model {
+            name: "slim".into(),
+            dataset: Dataset::Cifar10,
+            layers: vec![
+                Layer::conv("stem", 32, 3, 16, 3, 1, 1),
+                Layer::pool("p1", 32, 16, 2, 2),
+                Layer::fc("head", 16 * 16 * 16, 10),
+            ],
+        };
+        for width in [0.25, 0.5, 0.9, 1.5] {
+            let scaled = scale_model(&base, width, 1);
+            let pool = &scaled.layers[1];
+            let flat = pool.out_hw() * pool.out_hw() * pool.out_c;
+            assert_eq!(
+                scaled.layers[2].in_c, flat,
+                "w{width}: fc input must equal the flattened pool output"
+            );
+        }
+        // VGG/ImageNet exercises the idiom on a zoo model (fc6 takes
+        // 7x7x512): every fc input matches its predecessor's flattened
+        // output at w = 0.9 too.
+        let vgg = scale_model(&model_for(ModelKind::Vgg16, Dataset::ImageNet), 0.9, 1);
+        for pair in vgg.layers.windows(2) {
+            if pair[1].kind == super::super::LayerKind::FullyConnected {
+                let prev = &pair[0];
+                assert_eq!(
+                    pair[1].in_c,
+                    prev.out_hw() * prev.out_hw() * prev.out_c,
+                    "{} -> {}",
+                    prev.name,
+                    pair[1].name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn variant_names_round_trip_base_family() {
+        assert_eq!(variant_model_name("ResNet-20", 1.0, 1), "ResNet-20");
+        let scaled = variant_model_name("ResNet-20", 0.25, 3);
+        assert_eq!(scaled, "ResNet-20@w0.25d3");
+        assert_eq!(base_model_name(&scaled), "ResNet-20");
+        assert_eq!(base_model_name("ResNet-20"), "ResNet-20");
+    }
+
+    #[test]
+    fn scaled_variants_never_alias_in_shape() {
+        // Two different variants of the same base must differ in name
+        // and in layer shapes — the cache-key inputs.
+        let base = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let a = scale_model(&base, 0.5, 1);
+        let b = scale_model(&base, 0.5, 2);
+        assert_ne!(a.name, b.name);
+        assert_ne!(a.layers, b.layers);
     }
 
     #[test]

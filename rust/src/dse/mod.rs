@@ -16,7 +16,7 @@ pub mod pareto;
 pub use metrics::{coverage, generational_distance, hypervolume_2d};
 pub use pareto::{dominates, pareto_front, pareto_front_reference, Orientation};
 
-use crate::arch::{AcceleratorConfig, SweepSpec};
+use crate::arch::AcceleratorConfig;
 use crate::dataflow::Dataflow;
 use crate::dnn::Model;
 use crate::energy::energy_of;
@@ -82,37 +82,6 @@ pub fn evaluate_with_synth(synth: &SynthReport, model: &Model) -> Evaluation {
         dram_energy_uj: energy.dram_uj,
         utilization: mapping.avg_utilization,
     }
-}
-
-/// Explore a full sweep against one model (single-threaded reference path).
-///
-/// # Migration
-///
-/// Replace direct calls with the builder — it parallelizes, streams, and
-/// returns typed errors instead of panicking on degenerate spaces:
-///
-/// ```
-/// use qadam::arch::SweepSpec;
-/// use qadam::dnn::{model_for, Dataset, ModelKind};
-/// use qadam::explore::Explorer;
-///
-/// let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
-/// // Before: let evals = qadam::dse::explore(&spec, &model, 7);
-/// let db = Explorer::over(SweepSpec::tiny()).model(model).seed(7).run()?;
-/// let evals = &db.spaces[0].evals; // same order, bit-identical metrics
-/// # assert_eq!(evals.len(), SweepSpec::tiny().len());
-/// # Ok::<(), qadam::Error>(())
-/// ```
-///
-/// For a serial reference path without the builder, iterate the lazy
-/// sweep directly: `spec.iter().map(|c| dse::evaluate(&c, &model, seed))`.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `explore::Explorer::over(spec).model(model)` (parallel, streaming), \
-            or iterate `spec.iter()` with `evaluate` for the serial reference"
-)]
-pub fn explore(spec: &SweepSpec, model: &Model, seed: u64) -> Vec<Evaluation> {
-    spec.iter().map(|config| evaluate(&config, model, seed)).collect()
 }
 
 /// The best (highest perf/area) evaluation for a PE type, if any.
@@ -205,6 +174,7 @@ pub fn headline_ratios(evals: &[Evaluation]) -> Result<Vec<(PeType, f64, f64)>> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::SweepSpec;
     use crate::dnn::{model_for, Dataset, ModelKind};
     use crate::explore::Explorer;
 
@@ -226,14 +196,16 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_explore_matches_explorer() {
+    fn serial_iteration_matches_explorer() {
+        // The serial reference path (`spec.iter()` + `evaluate`) is what
+        // the parallel Explorer must reproduce bit-for-bit.
         let spec = SweepSpec::tiny();
         let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
-        let legacy = explore(&spec, &model, 7);
+        let serial: Vec<Evaluation> =
+            spec.iter().map(|c| evaluate(&c, &model, 7)).collect();
         let db = Explorer::over(spec).model(model).workers(2).seed(7).run().unwrap();
-        assert_eq!(legacy.len(), db.spaces[0].evals.len());
-        for (a, b) in legacy.iter().zip(&db.spaces[0].evals) {
+        assert_eq!(serial.len(), db.spaces[0].evals.len());
+        for (a, b) in serial.iter().zip(&db.spaces[0].evals) {
             assert_eq!(a.config.id(), b.config.id());
             assert_eq!(a.perf_per_area, b.perf_per_area);
         }

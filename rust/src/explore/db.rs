@@ -9,15 +9,33 @@ use crate::dse::{self, Evaluation};
 use crate::error::Result;
 use crate::quant::PeType;
 
-/// All evaluations for one (model, dataset) pair.
+/// All evaluations for one (model, dataset) pair. In a joint
+/// hardware × model campaign there is one space per *scaled-model
+/// variant* (`"ResNet-20@w0.5d2"`), variant-major in the database.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpace {
-    /// Model these evaluations belong to.
+    /// Model these evaluations belong to. Scaled variants carry the
+    /// `@wWdD` suffix of
+    /// [`variant_model_name`](crate::dnn::variant_model_name).
     pub model_name: String,
     /// Dataset the model instance targets.
     pub dataset: Dataset,
     /// One evaluation per explored design point, in cross-product order.
     pub evals: Vec<Evaluation>,
+}
+
+impl ModelSpace {
+    /// The base model family this space belongs to (the name with any
+    /// variant suffix stripped).
+    pub fn base_name(&self) -> &str {
+        crate::dnn::base_model_name(&self.model_name)
+    }
+
+    /// The variant suffix (`"w0.5d2"`), or `None` for an unscaled base
+    /// model.
+    pub fn variant_label(&self) -> Option<&str> {
+        self.model_name.split_once('@').map(|(_, label)| label)
+    }
 }
 
 /// Campaign results across a model set.
@@ -73,6 +91,12 @@ impl EvalDatabase {
     /// one, walked exhaustively (no sampling strategy).
     pub fn is_whole_space(&self) -> bool {
         self.shard.1 <= 1 && self.strategy == "exhaustive"
+    }
+
+    /// Whether any space belongs to a scaled-model variant (a joint
+    /// hardware × model campaign).
+    pub fn has_model_variants(&self) -> bool {
+        self.spaces.iter().any(|space| space.variant_label().is_some())
     }
 
     /// Guard for the paper normalizations: a shard's (or a sampled

@@ -1,21 +1,29 @@
 //! Unified design-space exploration API (§IV-A) — the single entry point
-//! every DSE consumer (CLI, coordinator, report generator, benches,
-//! examples) goes through.
+//! every DSE consumer (CLI, report generator, benches, examples) goes
+//! through.
 //!
-//! [`Explorer`] is a builder over a [`SweepSpec`]: pick the model set (or
-//! a whole dataset's paper models), a worker count, a seed, and optionally
-//! a round-robin shard of the space, then either
+//! [`Explorer`] is a builder over a [`DesignSpace`] — the joint
+//! hardware × model cross-product (a bare [`SweepSpec`](crate::arch::SweepSpec) converts into a
+//! hardware-only space). Pick the base model set (or a whole dataset's
+//! paper models), optionally sweep [`ModelAxes`] (width/depth
+//! multipliers lowered per variant by [`crate::dnn::scale_model`]), a
+//! worker count, a seed, and optionally a round-robin shard of the
+//! space, then either
 //!
-//! * [`Explorer::run`] — evaluate everything into an [`EvalDatabase`], or
+//! * [`Explorer::run`] — evaluate everything into an [`EvalDatabase`]
+//!   (one [`ModelSpace`] per scaled-model variant), or
 //! * [`Explorer::stream`] — consume [`PointResult`]s incrementally, in
-//!   design-point order, while workers are still evaluating the rest.
+//!   joint-index order, while workers are still evaluating the rest.
 //!
-//! Either way the pipeline is the same: design points are decoded lazily
-//! from the sweep's mixed-radix index (no full-space materialization), one
-//! [`SynthReport`](crate::synth::SynthReport) is amortized per design
-//! point across the entire model set (synthesize once, map every model),
-//! and evaluation is spread over a self-balancing worker pool. Results are
-//! deterministic for a fixed seed regardless of worker count.
+//! Either way the pipeline is the same: joint points are decoded lazily
+//! from the space's mixed-radix index (no materialization; model
+//! variants are the outermost digit, so hardware-only campaigns walk
+//! exactly the indices they always have), one
+//! [`SynthReport`](crate::synth::SynthReport) is amortized per joint
+//! point across the variant's model set (synthesize once, map every
+//! model), and evaluation is spread over a self-balancing worker pool.
+//! Results are deterministic for a fixed seed regardless of worker
+//! count.
 //!
 //! Campaigns are also *persistent* ([`persist`]): [`Explorer::cache`]
 //! consults a content-addressed [`PointCache`] before synthesizing,
@@ -54,7 +62,7 @@ pub mod db;
 pub mod persist;
 
 pub use db::{CampaignStats, EvalDatabase, ModelSpace};
-pub use persist::{point_key, PointCache, SCHEMA_VERSION};
+pub use persist::{point_key, PointCache, BASE_SCHEMA_VERSION, SCHEMA_VERSION};
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -62,29 +70,34 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
-use crate::arch::{AcceleratorConfig, SweepSpec};
+use crate::arch::{AcceleratorConfig, DesignSpace, ModelAxes};
 use crate::coordinator::pool::default_workers;
-use crate::dnn::{models_for, Dataset, Model};
+use crate::dnn::{lower_workload, models_for, Dataset, Model};
 use crate::dse::{self, Evaluation};
 use crate::error::{Error, Result};
 use crate::pareto::{CampaignFrontier, FrontierBinding, Selection, Strategy, StrategyContext};
 use crate::synth::synthesize;
 
-/// One fully evaluated design point, streamed as soon as it is ready.
+/// One fully evaluated joint design point, streamed as soon as it is
+/// ready.
 #[derive(Debug, Clone)]
 pub struct PointResult {
-    /// Index of this point in the sweep's cross-product order.
+    /// Index of this point in the joint space's cross-product order
+    /// (equal to the hardware sweep index for hardware-only campaigns;
+    /// decode the model variant with
+    /// [`DesignSpace::variant_of`]).
     pub index: usize,
-    /// The decoded design point.
+    /// The decoded hardware design point.
     pub config: AcceleratorConfig,
-    /// One evaluation per model, in the explorer's model order.
+    /// One evaluation per base model — scaled to this point's variant —
+    /// in the explorer's model order.
     pub evals: Vec<Evaluation>,
 }
 
 /// Builder for a design-space exploration campaign.
 #[derive(Debug, Clone)]
 pub struct Explorer {
-    spec: SweepSpec,
+    space: DesignSpace,
     models: Vec<Model>,
     dataset: Option<Dataset>,
     workers: usize,
@@ -98,12 +111,14 @@ pub struct Explorer {
 }
 
 impl Explorer {
-    /// Start a campaign over a design space. Defaults: no models (set via
-    /// [`Self::models`], [`Self::model`], or [`Self::dataset`]), all cores
-    /// minus one, the coordinator's historical seed, the whole space.
-    pub fn over(spec: SweepSpec) -> Self {
+    /// Start a campaign over a design space — a [`SweepSpec`](crate::arch::SweepSpec)
+    /// (hardware axes only) or a full [`DesignSpace`] (joint hardware × model).
+    /// Defaults: no models (set via [`Self::models`], [`Self::model`],
+    /// or [`Self::dataset`]), all cores minus one, the coordinator's
+    /// historical seed, the whole space.
+    pub fn over(space: impl Into<DesignSpace>) -> Self {
         Self {
-            spec,
+            space: space.into(),
             models: Vec::new(),
             dataset: None,
             workers: default_workers(),
@@ -115,6 +130,22 @@ impl Explorer {
             frontier: None,
             campaign_fp: None,
         }
+    }
+
+    /// Sweep model-hyperparameter axes jointly with the hardware: every
+    /// base model in the workload is lowered per (width, depth) variant
+    /// by [`crate::dnn::scale_model`], and variants participate in
+    /// strategy selection, sharding, checkpointing, and the streamed
+    /// frontier exactly like hardware axes. Replaces any axes already
+    /// carried by the space handed to [`Self::over`].
+    pub fn model_axes(mut self, axes: ModelAxes) -> Self {
+        self.space.model = axes;
+        self
+    }
+
+    /// The joint design space this campaign walks.
+    pub fn space(&self) -> &DesignSpace {
+        &self.space
     }
 
     /// Explore against an explicit model set (replaces any prior set).
@@ -150,7 +181,8 @@ impl Explorer {
     }
 
     /// Restrict to the round-robin shard `shard` of `num_shards` (the
-    /// leader/worker split; composes with [`SweepSpec::shard_iter`]).
+    /// leader/worker split; composes with
+    /// [`SweepSpec::shard_iter`](crate::arch::SweepSpec::shard_iter)).
     pub fn shard(mut self, shard: usize, num_shards: usize) -> Self {
         self.shard = (shard, num_shards);
         self
@@ -226,9 +258,9 @@ impl Explorer {
     }
 
     fn validate(&self) -> Result<()> {
-        if self.spec.is_empty() {
-            return Err(Error::InvalidConfig("sweep spec has an empty axis".into()));
-        }
+        // Name the offending axis (hardware or model) so a degenerate
+        // joint space never hides behind a generic message.
+        self.space.ensure_nonempty()?;
         if self.models.is_empty() {
             return Err(Error::InvalidConfig(
                 "no models to evaluate: call .models(), .model(), or .dataset()".into(),
@@ -243,13 +275,13 @@ impl Explorer {
         Ok(())
     }
 
-    /// Number of design points in this explorer's shard of the space,
-    /// *before* any [`Self::strategy`] selection (a strategy can only
-    /// shrink the walk; [`CampaignStats::design_points`] reports what a
-    /// campaign actually evaluated).
+    /// Number of joint design points in this explorer's shard of the
+    /// space, *before* any [`Self::strategy`] selection (a strategy can
+    /// only shrink the walk; [`CampaignStats::design_points`] reports
+    /// what a campaign actually evaluated).
     pub fn design_points(&self) -> usize {
         let (shard, num_shards) = self.shard;
-        let len = self.spec.len();
+        let len = self.space.len();
         if num_shards == 0 || shard >= len {
             0
         } else {
@@ -257,24 +289,56 @@ impl Explorer {
         }
     }
 
-    /// Evaluate every selected design point and aggregate per-model
-    /// spaces — the campaign product the figures consume.
+    /// The workload lowered per model variant: `variant_models[v][m]` is
+    /// base model `m` scaled by variant `v` (the base model itself for
+    /// the identity variant, so hardware-only campaigns see their exact
+    /// input models). Built once per campaign — never per point — by
+    /// the shared [`lower_workload`] transform, the same lowering the
+    /// halving strategy scores against.
+    fn variant_models(&self) -> Vec<Vec<Model>> {
+        lower_workload(&self.space.model, &self.models)
+    }
+
+    /// Evaluate every selected design point and aggregate per
+    /// scaled-model spaces — the campaign product the figures consume.
+    /// Spaces are variant-major (all base models of variant 0, then of
+    /// variant 1, …), matching the joint walk order; hardware-only
+    /// campaigns produce exactly the per-base-model spaces they always
+    /// have.
     pub fn run(&self) -> Result<EvalDatabase> {
-        // A strategy may select a tiny fraction of a huge space, so only
-        // pre-size the spaces for exhaustive walks.
-        let capacity = if self.strategy.is_some() { 0 } else { self.design_points() };
-        let mut spaces: Vec<ModelSpace> = self
-            .models
-            .iter()
-            .map(|m| ModelSpace {
-                model_name: m.name.clone(),
-                dataset: m.dataset,
-                evals: Vec::with_capacity(capacity),
+        self.validate()?;
+        let axes = &self.space.model;
+        // A strategy may select a tiny fraction of a huge space — and a
+        // joint walk spreads points across variants — so only pre-size
+        // the spaces for exhaustive hardware-only walks.
+        let capacity = if self.strategy.is_some() || axes.len() > 1 {
+            0
+        } else {
+            self.design_points()
+        };
+        // Only the names are needed here (scaling preserves the
+        // dataset); the full lowering happens once, inside stream().
+        let mut spaces: Vec<ModelSpace> = (0..axes.len())
+            .flat_map(|v| {
+                let variant = axes.variant(v).expect("variant index in range");
+                self.models.iter().map(move |m| ModelSpace {
+                    model_name: crate::dnn::variant_model_name(
+                        &m.name,
+                        variant.width,
+                        variant.depth,
+                    ),
+                    dataset: m.dataset,
+                    evals: Vec::with_capacity(capacity),
+                })
             })
             .collect();
+        let model_count = self.models.len();
+        let space = &self.space;
         let stats = self.stream(|point| {
-            for (space, eval) in spaces.iter_mut().zip(point.evals) {
-                space.evals.push(eval);
+            let variant = space.variant_index(point.index);
+            let base = variant * model_count;
+            for (offset, eval) in point.evals.into_iter().enumerate() {
+                spaces[base + offset].evals.push(eval);
             }
         })?;
         let dataset = self.dataset.unwrap_or(self.models[0].dataset);
@@ -301,9 +365,12 @@ impl Explorer {
     /// The identity pinned in checkpoint journal headers; only valid
     /// after [`Self::validate`] (needs a non-empty model set). `total`
     /// is the strategy-selected point count this campaign delivers.
+    /// The fingerprint covers the *joint* space (model axes included),
+    /// and non-trivial axes are additionally pinned verbatim so the
+    /// mismatch error can say what changed.
     fn manifest(&self, total: usize) -> persist::CampaignManifest {
         persist::CampaignManifest {
-            spec_fingerprint: self.spec.fingerprint(),
+            spec_fingerprint: self.space.fingerprint(),
             seed: self.seed,
             shard: self.shard.0,
             num_shards: self.shard.1,
@@ -311,6 +378,7 @@ impl Explorer {
             dataset: self.dataset.unwrap_or(self.models[0].dataset).name().to_string(),
             models: self.models.iter().map(|m| m.name.clone()).collect(),
             strategy: self.strategy_descriptor(),
+            model_axes: self.space.model.clone(),
             campaign_fp: self.campaign_fp,
         }
     }
@@ -329,13 +397,16 @@ impl Explorer {
         self.validate()?;
         let (shard, num_shards) = self.shard;
         let space_positions = self.design_points();
+        // The workload lowered once per model variant (the base models
+        // themselves for a hardware-only campaign).
+        let variant_models = self.variant_models();
         // Strategy selection: which shard positions this campaign visits.
         // Runs once, up front, so the walk itself stays lazy.
         let selection = match &self.strategy {
             None => Selection::All,
             Some(strategy) => {
                 let ctx = StrategyContext {
-                    spec: &self.spec,
+                    space: &self.space,
                     models: &self.models,
                     seed: self.seed,
                     shard: self.shard,
@@ -360,9 +431,11 @@ impl Explorer {
         let started = Instant::now();
         // Live frontier: bind the campaign identity before any delivery
         // (a frontier bound to a different campaign is rejected here).
+        // The fingerprint is the *joint* space's, so fronts from
+        // campaigns with different model axes can never merge.
         if let Some(frontier) = &self.frontier {
             let binding = FrontierBinding {
-                spec_fingerprint: self.spec.fingerprint(),
+                spec_fingerprint: self.space.fingerprint(),
                 seed: self.seed,
                 shard: self.shard,
                 dataset: self.dataset.unwrap_or(self.models[0].dataset).name().to_string(),
@@ -385,9 +458,12 @@ impl Explorer {
                 // campaign must leave both as complete as an
                 // uninterrupted one would. `observe_at` skips positions a
                 // reattached frontier already archived, so nothing is
-                // double-counted.
+                // double-counted. Cache keys use the point's *scaled*
+                // model set, exactly like the live workers below.
                 if let Some(cache) = self.cache.as_ref() {
-                    let key = persist::point_key(&point.config, self.seed, &self.models);
+                    let variant = self.space.variant_index(point.index);
+                    let key =
+                        persist::point_key(&point.config, self.seed, &variant_models[variant]);
                     lock_shared(cache).store(key, point.evals.clone());
                 }
                 if let Some(frontier) = &self.frontier {
@@ -397,8 +473,8 @@ impl Explorer {
             }
             journal = Some(writer);
         }
-        let spec = &self.spec;
-        let models = &self.models;
+        let space = &self.space;
+        let variant_models_ref = &variant_models;
         let seed = self.seed;
         let cache = self.cache.as_ref();
         let remaining = total - start_pos;
@@ -436,7 +512,10 @@ impl Explorer {
                         std::thread::park_timeout(Duration::from_millis(1));
                     }
                     let index = index_for_ref(pos);
-                    let config = spec.get(index).expect("shard index within cross-product");
+                    let point =
+                        space.get(index).expect("shard index within joint cross-product");
+                    let models = &variant_models_ref[space.variant_index(index)];
+                    let config = point.config;
                     let evals = evaluate_point(&config, models, seed, cache);
                     if tx.send((pos, PointResult { index, config, evals })).is_err() {
                         break;
@@ -543,6 +622,7 @@ pub fn lock_cache(cache: &Mutex<PointCache>) -> MutexGuard<'_, PointCache> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::SweepSpec;
     use crate::dnn::{model_for, ModelKind};
     use crate::quant::PeType;
 
@@ -619,11 +699,94 @@ mod tests {
     }
 
     #[test]
-    fn empty_axis_is_invalid_config() {
+    fn empty_axis_is_invalid_config_naming_the_axis() {
         let mut spec = SweepSpec::tiny();
         spec.glb_kib.clear();
         let err = Explorer::over(spec).dataset(Dataset::Cifar10).run().unwrap_err();
         assert_eq!(err.kind(), "invalid_config");
+        assert!(err.to_string().contains("'glb_kib'"), "{err}");
+        // Empty *model* axes are named too — never the generic
+        // "no models to evaluate" message.
+        let err = Explorer::over(SweepSpec::tiny())
+            .dataset(Dataset::Cifar10)
+            .model_axes(ModelAxes { width_mults: vec![0.5], depth_mults: vec![] })
+            .run()
+            .unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        assert!(err.to_string().contains("model axis 'depth'"), "{err}");
+        assert!(!err.to_string().contains("no models to evaluate"), "{err}");
+    }
+
+    #[test]
+    fn joint_run_produces_variant_major_spaces() {
+        let spec = SweepSpec::tiny();
+        let axes = ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1] };
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let db = Explorer::over(spec.clone())
+            .model(model.clone())
+            .model_axes(axes.clone())
+            .workers(3)
+            .seed(7)
+            .run()
+            .unwrap();
+        // One space per (variant, base model), variant-major.
+        assert_eq!(db.spaces.len(), 2);
+        assert_eq!(db.spaces[0].model_name, "ResNet-20@w0.5d1");
+        assert_eq!(db.spaces[1].model_name, "ResNet-20");
+        assert_eq!(db.stats.design_points, 2 * spec.len());
+        // Each variant's space equals the serial evaluation of its
+        // scaled model over the hardware sweep, bit for bit.
+        for (variant_idx, space) in db.spaces.iter().enumerate() {
+            let variant = axes.variant(variant_idx).unwrap();
+            let scaled = crate::dnn::scale_model(&model, variant.width, variant.depth);
+            let serial: Vec<Evaluation> =
+                spec.iter().map(|c| dse::evaluate(&c, &scaled, 7)).collect();
+            assert_eq!(space.evals.len(), serial.len(), "{}", space.model_name);
+            for (a, b) in space.evals.iter().zip(&serial) {
+                assert_eq!(a, b, "{}", space.model_name);
+            }
+        }
+    }
+
+    #[test]
+    fn joint_stream_orders_variant_blocks() {
+        let spec = SweepSpec::tiny();
+        let space = crate::arch::DesignSpace::new(
+            spec.clone(),
+            ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1] },
+        );
+        let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+        let mut indices = Vec::new();
+        Explorer::over(space.clone())
+            .model(model)
+            .workers(4)
+            .seed(7)
+            .stream(|point| indices.push(point.index))
+            .unwrap();
+        assert_eq!(indices, (0..space.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn trivial_model_axes_database_is_bit_identical_to_hardware_only() {
+        let spec = SweepSpec::tiny();
+        let plain = Explorer::over(spec.clone())
+            .dataset(Dataset::Cifar10)
+            .workers(2)
+            .seed(7)
+            .run()
+            .unwrap();
+        let joint = Explorer::over(spec)
+            .dataset(Dataset::Cifar10)
+            .model_axes(ModelAxes::default())
+            .workers(2)
+            .seed(7)
+            .run()
+            .unwrap();
+        assert_eq!(
+            plain.to_json().to_string_pretty(),
+            joint.to_json().to_string_pretty(),
+            "trivial model axes must not change campaign artifacts"
+        );
     }
 
     #[test]

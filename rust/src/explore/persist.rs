@@ -48,16 +48,31 @@ use crate::error::{Error, Result};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::Fnv64;
 
-/// Version of every persisted document (database, cache, journal,
-/// frontier). Bump on any change to the serialized field set; readers
-/// reject other versions with [`Error::ParseError`] rather than
-/// guessing. History: v1 — initial persistence layer; v2 — checkpoint
-/// manifests pin the campaign's search strategy and the streaming
-/// frontier document (`qadam.frontier`) joined the family; v3 —
-/// checkpoint manifests optionally pin the QSL campaign-spec
-/// fingerprint (`campaign_fp`), so resuming under an edited spec is
-/// rejected.
-pub const SCHEMA_VERSION: usize = 3;
+/// Newest schema version this build reads and writes. Bump on any
+/// change to the serialized field set; readers reject versions outside
+/// [`BASE_SCHEMA_VERSION`]`..=`[`SCHEMA_VERSION`] with
+/// [`Error::ParseError`] rather than guessing. History: v1 — initial
+/// persistence layer; v2 — checkpoint manifests pin the campaign's
+/// search strategy and the streaming frontier document
+/// (`qadam.frontier`) joined the family; v3 — checkpoint manifests
+/// optionally pin the QSL campaign-spec fingerprint (`campaign_fp`),
+/// so resuming under an edited spec is rejected; v4 — checkpoint
+/// manifests of *joint* hardware × model campaigns pin the model axes
+/// (`model_axes`), and the sweep fingerprint covers them.
+pub const SCHEMA_VERSION: usize = 4;
+
+/// Oldest schema version this build reads — and the version every
+/// document *writes* unless it carries joint-space content. Documents
+/// declare the minimum version able to read them: a hardware-only
+/// campaign's database, cache, journal, and frontier are byte-identical
+/// to a pre-joint (v3) build's, so its journals stay interchangeable.
+/// Joint content claims v4: a manifest pinning non-trivial
+/// [`ModelAxes`](crate::arch::ModelAxes), and a database holding
+/// scaled-model-variant spaces. (Point caches stay v3 — their keys are
+/// opaque content addresses that can never alias across builds — and a
+/// frontier's campaign binding already rejects any pre-joint reattach
+/// via its joint-space fingerprint.)
+pub const BASE_SCHEMA_VERSION: usize = 3;
 
 // ---------------------------------------------------------------------------
 // Field access helpers (typed errors instead of panics). Crate-visible:
@@ -115,17 +130,25 @@ pub(crate) fn check_envelope(json: &Json, kind: &str) -> Result<()> {
         )));
     }
     let schema = field_usize(json, "schema")?;
-    if schema != SCHEMA_VERSION {
+    if !(BASE_SCHEMA_VERSION..=SCHEMA_VERSION).contains(&schema) {
         return Err(Error::ParseError(format!(
-            "unsupported {kind} schema version {schema} (this build reads version \
-             {SCHEMA_VERSION}; regenerate the file)"
+            "unsupported {kind} schema version {schema} (this build reads versions \
+             {BASE_SCHEMA_VERSION} through {SCHEMA_VERSION}; regenerate the file)"
         )));
     }
     Ok(())
 }
 
+/// The envelope every document without joint-space content writes: the
+/// minimum version able to read it (see [`BASE_SCHEMA_VERSION`]).
 pub(crate) fn envelope(kind: &str) -> Vec<(&str, Json)> {
-    vec![("kind", s(kind)), ("schema", num(SCHEMA_VERSION as f64))]
+    envelope_at(kind, BASE_SCHEMA_VERSION)
+}
+
+/// An envelope at an explicit schema version (joint-campaign manifests
+/// claim [`SCHEMA_VERSION`]).
+pub(crate) fn envelope_at(kind: &str, version: usize) -> Vec<(&str, Json)> {
+    vec![("kind", s(kind)), ("schema", num(version as f64))]
 }
 
 /// Write `text` to `path` atomically: temp sibling + rename, so a crash
@@ -234,9 +257,18 @@ impl EvalDatabase {
     /// Serialize the whole campaign to a schema-versioned document,
     /// including the shard identity and strategy descriptor (a shard's —
     /// or a sampled subset's — local best INT16 is not the campaign
-    /// baseline, so loaders must know the coverage).
+    /// baseline, so loaders must know the coverage). A database holding
+    /// scaled-model variants claims [`SCHEMA_VERSION`] so pre-joint
+    /// readers reject it cleanly instead of misreading each variant as
+    /// an independent model; hardware-only databases stay at
+    /// [`BASE_SCHEMA_VERSION`], byte-identical to pre-joint builds.
     pub fn to_json(&self) -> Json {
-        let mut fields = envelope("qadam.evaldb");
+        let version = if self.has_model_variants() {
+            SCHEMA_VERSION
+        } else {
+            BASE_SCHEMA_VERSION
+        };
+        let mut fields = envelope_at("qadam.evaldb", version);
         fields.push(("dataset", s(self.dataset.name())));
         fields.push(("shard", num(self.shard.0 as f64)));
         fields.push(("num_shards", num(self.shard.1 as f64)));
@@ -496,6 +528,13 @@ pub struct CampaignManifest {
     /// Resuming under a different strategy would replay points the new
     /// selection never visits, so mismatches are rejected.
     pub strategy: String,
+    /// The campaign's model-hyperparameter axes. Trivial axes (the
+    /// hardware-only default) are not serialized — the manifest stays
+    /// byte-identical to a pre-joint build's — while non-trivial axes
+    /// are pinned verbatim (schema v4) on top of being covered by
+    /// `spec_fingerprint`, so an axes mismatch names itself instead of
+    /// surfacing as an opaque fingerprint difference.
+    pub model_axes: crate::arch::ModelAxes,
     /// Fingerprint of the campaign's QSL canonical identity
     /// ([`Explorer::campaign_fingerprint`](super::Explorer::campaign_fingerprint)),
     /// when the campaign was built from a spec or through the shared
@@ -508,9 +547,16 @@ pub struct CampaignManifest {
 }
 
 impl CampaignManifest {
-    /// Serialize as the journal header payload.
+    /// Serialize as the journal header payload. Hardware-only
+    /// campaigns emit [`BASE_SCHEMA_VERSION`] with no `model_axes`
+    /// field — byte-identical to pre-joint builds — while joint
+    /// campaigns pin their axes under [`SCHEMA_VERSION`].
     pub fn to_json(&self) -> Json {
-        let mut fields = envelope("qadam.journal");
+        let joint = !self.model_axes.is_trivial();
+        let mut fields = envelope_at(
+            "qadam.journal",
+            if joint { SCHEMA_VERSION } else { BASE_SCHEMA_VERSION },
+        );
         fields.push(("spec_fingerprint", s(&hex(self.spec_fingerprint))));
         fields.push(("seed", s(&hex(self.seed))));
         fields.push(("shard", num(self.shard as f64)));
@@ -519,6 +565,9 @@ impl CampaignManifest {
         fields.push(("dataset", s(&self.dataset)));
         fields.push(("models", Json::Arr(self.models.iter().map(|m| s(m)).collect())));
         fields.push(("strategy", s(&self.strategy)));
+        if joint {
+            fields.push(("model_axes", self.model_axes.to_json()));
+        }
         if let Some(fp) = self.campaign_fp {
             fields.push(("campaign_fp", s(&hex(fp))));
         }
@@ -544,6 +593,10 @@ impl CampaignManifest {
                 })
                 .collect::<Result<_>>()?,
             strategy: field_str(json, "strategy")?.to_string(),
+            model_axes: match json.get("model_axes") {
+                None => crate::arch::ModelAxes::default(),
+                Some(axes) => crate::arch::ModelAxes::from_json(axes)?,
+            },
             campaign_fp: match json.get("campaign_fp") {
                 None => None,
                 Some(_) => Some(field_u64_hex(json, "campaign_fp")?),
@@ -559,6 +612,21 @@ impl CampaignManifest {
                  (journal: {journal_val}, this campaign: {campaign_val})"
             )))
         };
+        // Axes first: when only the model axes moved, the named error
+        // beats the opaque joint-fingerprint difference it also causes.
+        if journal.model_axes != self.model_axes {
+            let render = |axes: &crate::arch::ModelAxes| {
+                format!(
+                    "width {:?} x depth {:?}",
+                    axes.width_mults, axes.depth_mults
+                )
+            };
+            return mismatch(
+                "model axes",
+                render(&journal.model_axes),
+                render(&self.model_axes),
+            );
+        }
         if journal.spec_fingerprint != self.spec_fingerprint {
             return mismatch(
                 "sweep fingerprint",
@@ -879,10 +947,16 @@ mod tests {
             dataset: "CIFAR-10".into(),
             models: vec!["VGG-16".into(), "ResNet-20".into()],
             strategy: "random:12:9".into(),
+            model_axes: crate::arch::ModelAxes::default(),
             campaign_fp: Some(0x0123_4567_89ab_cdef),
         };
         let parsed = CampaignManifest::from_json(&manifest.to_json()).unwrap();
         assert_eq!(parsed, manifest);
+        // Trivial axes keep the pre-joint manifest bytes: v3, no
+        // model_axes key.
+        let text = manifest.to_json().to_string_canonical();
+        assert!(text.contains("\"schema\":3"), "{text}");
+        assert!(!text.contains("model_axes"), "{text}");
         let mut other = manifest.clone();
         other.seed ^= 1;
         let err = manifest.ensure_matches(&other).unwrap_err();
@@ -893,6 +967,19 @@ mod tests {
         let err = manifest.ensure_matches(&other).unwrap_err();
         assert_eq!(err.kind(), "invalid_config");
         assert!(err.to_string().contains("strategy"));
+        // A joint manifest pins its axes at schema v4 and round-trips.
+        let mut joint = manifest.clone();
+        joint.model_axes =
+            crate::arch::ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1, 2] };
+        let text = joint.to_json().to_string_canonical();
+        assert!(text.contains("\"schema\":4"), "{text}");
+        assert!(text.contains("model_axes"), "{text}");
+        let parsed = CampaignManifest::from_json(&joint.to_json()).unwrap();
+        assert_eq!(parsed, joint);
+        // Axes mismatches are rejected by name.
+        let err = manifest.ensure_matches(&joint).unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        assert!(err.to_string().contains("model axes"), "{err}");
         // A fingerprint-less manifest round-trips without the field, and
         // any fingerprint difference (including present-vs-absent, i.e.
         // an edited or removed spec) rejects the resume.

@@ -15,12 +15,17 @@
 //!
 //! Every DSE campaign — CLI, report generator, benches, examples — goes
 //! through [`explore::Explorer`]; fallible APIs return the crate-wide
-//! typed [`Error`]. Pareto fronts are maintained incrementally by
+//! typed [`Error`]. Design spaces are *joint*: an
+//! [`arch::DesignSpace`] crosses the hardware axes with
+//! [`arch::ModelAxes`] (width/depth multipliers lowered per variant by
+//! [`dnn::scale_model`]) for QUIDAM-style hardware × model
+//! co-exploration. Pareto fronts are maintained incrementally by
 //! [`pareto::ParetoFront`] as points stream out of a campaign, and
 //! non-exhaustive [`pareto::Strategy`] walks make million-point spaces
-//! tractable. Whole campaigns — space, strategy, workload (including
-//! user-defined models), persistence — are declarable as data in QSL
-//! spec files ([`spec`]): `qadam run campaign.qsl`.
+//! tractable. Whole campaigns — space (model axes included), strategy,
+//! workload (including user-defined models with declared accuracies),
+//! persistence — are declarable as data in QSL spec files ([`spec`]):
+//! `qadam run campaign.qsl`.
 //!
 //! See `DESIGN.md` for the module inventory and the per-experiment index.
 

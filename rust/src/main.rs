@@ -60,6 +60,8 @@ fn cli() -> Command {
             Command::new("dse", "design-space exploration campaign")
                 .opt("dataset", "cifar10", "cifar10|cifar100|imagenet")
                 .opt("sweep", "", "JSON sweep-config file (empty = default space)")
+                .opt("width-mults", "", "model width multipliers, e.g. 0.5,1.0 (joint co-exploration)")
+                .opt("depth-mults", "", "model depth multipliers, e.g. 1,2 (joint co-exploration)")
                 .opt("shard", "", "run only shard I of N (format: I/N)")
                 .opt("strategy", "exhaustive", "exhaustive|random:N[:SEED]|halving:KEEP[:ROUNDS]")
                 .opt("frontier", "", "write the streaming Pareto frontier to this JSON file")
@@ -121,12 +123,61 @@ fn cli() -> Command {
             Command::new("report", "regenerate a paper figure")
                 .opt("fig", "4", "2|3|4|5|6")
                 .opt("dataset", "cifar10", "dataset for figs 4-6")
-                .opt("load", "", "render figs 4-6 from a saved database (no re-run)"),
+                .opt("load", "", "render figs 4-6 from a saved database (no re-run)")
+                .opt(
+                    "spec",
+                    "",
+                    "QSL spec whose accuracy{} declarations feed figs 5/6 (custom/scaled models)",
+                ),
         )
 }
 
 fn parse_pe(text: &str) -> Result<PeType> {
     PeType::parse(text).ok_or_else(|| Error::ParseError(format!("bad --pe '{text}'")))
+}
+
+/// Parse a comma-separated width-multiplier list (`"0.5,1.0"`).
+fn parse_width_mults(text: &str) -> Result<Vec<f64>> {
+    let bad = |detail: &str| {
+        Error::InvalidConfig(format!(
+            "bad --width-mults '{text}' ({detail}; expected comma-separated positive numbers, \
+             e.g. 0.5,1.0)"
+        ))
+    };
+    let mut widths = Vec::new();
+    for part in text.split(',') {
+        let w: f64 = part.trim().parse().map_err(|_| bad("not a number"))?;
+        if !w.is_finite() || w <= 0.0 {
+            return Err(bad("multipliers must be positive"));
+        }
+        if widths.contains(&w) {
+            return Err(bad("duplicate multiplier"));
+        }
+        widths.push(w);
+    }
+    Ok(widths)
+}
+
+/// Parse a comma-separated depth-multiplier list (`"1,2"`).
+fn parse_depth_mults(text: &str) -> Result<Vec<usize>> {
+    let bad = |detail: &str| {
+        Error::InvalidConfig(format!(
+            "bad --depth-mults '{text}' ({detail}; expected comma-separated integers >= 1, \
+             e.g. 1,2)"
+        ))
+    };
+    let mut depths = Vec::new();
+    for part in text.split(',') {
+        let d: usize = part.trim().parse().map_err(|_| bad("not an integer"))?;
+        if d == 0 {
+            return Err(bad("multipliers must be at least 1"));
+        }
+        if depths.contains(&d) {
+            return Err(bad("duplicate multiplier"));
+        }
+        depths.push(d);
+    }
+    Ok(depths)
 }
 
 /// Parse an `I/N` shard designator ("2/8" = shard 2 of 8).
@@ -141,10 +192,31 @@ fn parse_shard(text: &str) -> Result<(usize, usize)> {
     Ok((shard, num_shards))
 }
 
+/// Print the `variant wWdD:` group header when a joint database's walk
+/// crosses into the next scaled-model variant (no-op for hardware-only
+/// databases, whose summaries are unchanged).
+fn print_variant_header<'db>(
+    db: &'db EvalDatabase,
+    space: &'db qadam::explore::ModelSpace,
+    last: &mut Option<Option<&'db str>>,
+) {
+    if !db.has_model_variants() {
+        return;
+    }
+    let label = space.variant_label();
+    if *last != Some(label) {
+        *last = Some(label);
+        println!("  variant {}:", label.unwrap_or("base (w1d1)"));
+    }
+}
+
 /// Per-model best raw perf/area by PE type — the summary for databases
 /// that cannot be normalized (partial coverage or no INT16 baseline).
+/// Joint databases group the lines by scaled-model variant.
 fn print_raw_bests(db: &EvalDatabase) {
+    let mut last_variant = None;
     for space in &db.spaces {
+        print_variant_header(db, space, &mut last_variant);
         print!("  {:<10} best perf/area:", space.model_name);
         for pe in PeType::ALL {
             if let Some(best) = dse::best_perf_per_area(&space.evals, pe) {
@@ -180,6 +252,12 @@ fn summarize_db(db: &EvalDatabase) -> Result<()> {
     }
     match db.headline_geomean() {
         Ok(headline) => {
+            if db.has_model_variants() {
+                println!(
+                    "  (joint campaign: geomeans span all {} scaled-model spaces)",
+                    db.spaces.len()
+                );
+            }
             for (pe, ppa, energy) in headline {
                 println!(
                     "  {:<10} {}x perf/area, {}x less energy vs best INT16",
@@ -189,8 +267,11 @@ fn summarize_db(db: &EvalDatabase) -> Result<()> {
                 );
             }
             // Quantified Pareto quality per model: hypervolume of each PE
-            // type's normalized (perf/area ↑, energy ↓) cloud.
+            // type's normalized (perf/area ↑, energy ↓) cloud, grouped by
+            // scaled-model variant for joint campaigns.
+            let mut last_variant = None;
             for space in &db.spaces {
+                print_variant_header(db, space, &mut last_variant);
                 let normalized = dse::normalize(&space.evals)?;
                 print!("  {:<10} hypervolume:", space.model_name);
                 for pe in PeType::ALL {
@@ -407,8 +488,8 @@ fn main() -> Result<()> {
                 // flags would be silently ignored, so reject them (also
                 // the defaulted ones — `was_set` sees through defaults).
                 let campaign_flags = [
-                    "dataset", "sweep", "shard", "strategy", "frontier", "resume", "cache",
-                    "every",
+                    "dataset", "sweep", "width-mults", "depth-mults", "shard", "strategy",
+                    "frontier", "resume", "cache", "every",
                 ];
                 for conflicting in campaign_flags {
                     if matches.was_set(conflicting) {
@@ -436,11 +517,16 @@ fn main() -> Result<()> {
                 // so equivalent invocations are byte-identical.
                 let dataset = Dataset::parse_strict(matches.get_str("dataset"))?;
                 let sweep_path = matches.get_str("sweep");
-                let sweep = if sweep_path.is_empty() {
-                    SweepSpec::default()
+                // A sweep file may carry a `model_axes` key (the
+                // DesignSpace JSON form); honoring it here keeps file
+                // and flag campaigns equivalent.
+                let file_space = if sweep_path.is_empty() {
+                    qadam::arch::DesignSpace::from(SweepSpec::default())
                 } else {
-                    SweepSpec::from_file(Path::new(sweep_path))?
+                    qadam::arch::DesignSpace::from_file(Path::new(sweep_path))?
                 };
+                let sweep = file_space.hw;
+                let file_axes = file_space.model;
                 let shard_arg = matches.get_str("shard");
                 let shard =
                     if shard_arg.is_empty() { (0, 1) } else { parse_shard(shard_arg)? };
@@ -458,9 +544,28 @@ fn main() -> Result<()> {
                 };
                 let workload =
                     dataset.paper_models().into_iter().map(WorkloadModel::Zoo).collect();
-                let campaign = ResolvedCampaign::new(
+                let mut campaign = ResolvedCampaign::new(
                     sweep, dataset, workload, seed, workers, shard, strategy, persist,
                 );
+                // Joint co-exploration: model axes from the sweep file,
+                // or from the flags — a file that pins them conflicts
+                // with the flags (same rule as spec-set fields).
+                let widths = matches.get_str("width-mults");
+                let depths = matches.get_str("depth-mults");
+                if !file_axes.is_trivial() && (!widths.is_empty() || !depths.is_empty()) {
+                    return Err(Error::InvalidConfig(
+                        "the sweep file pins model_axes; drop --width-mults/--depth-mults \
+                         or edit the file"
+                            .into(),
+                    ));
+                }
+                campaign.model_axes = file_axes;
+                if !widths.is_empty() {
+                    campaign.model_axes.width_mults = parse_width_mults(widths)?;
+                }
+                if !depths.is_empty() {
+                    campaign.model_axes.depth_mults = parse_depth_mults(depths)?;
+                }
                 print_campaign_outcome(&campaign.execute()?)?;
             }
         }
@@ -472,7 +577,7 @@ fn main() -> Result<()> {
             println!(
                 "campaign {}: {} design points x {} models [{}]",
                 file,
-                campaign.sweep.len(),
+                campaign.sweep.len() * campaign.model_axes.len(),
                 campaign.workload.len(),
                 campaign.strategy.descriptor()
             );
@@ -608,14 +713,32 @@ fn main() -> Result<()> {
         }
         "report" => {
             let load_path = matches.get_str("load");
+            // `--spec campaign.qsl` supplies user-declared accuracies
+            // (custom / scaled models) to the Fig. 5/6 accuracy fronts.
+            // Other figures don't consume accuracy, so the flag would be
+            // silently ignored there — reject it instead.
+            if matches.was_set("spec") && !matches!(matches.get_str("fig"), "5" | "6") {
+                return Err(Error::InvalidConfig(format!(
+                    "--spec supplies accuracy declarations to figs 5/6 only; fig '{}' does \
+                     not use it",
+                    matches.get_str("fig")
+                )));
+            }
+            let book = match matches.get_str("spec") {
+                "" => qadam::accuracy::AccuracyBook::new(),
+                spec_file => {
+                    let source = std::fs::read_to_string(spec_file)?;
+                    spec::compile(&source, spec_file)?.accuracy_book()
+                }
+            };
             let figure = if load_path.is_empty() {
                 let dataset = Dataset::parse_strict(matches.get_str("dataset"))?;
                 match matches.get_str("fig") {
                     "2" => report::fig2(workers, seed)?,
                     "3" => report::fig3(seed)?,
                     "4" => report::fig4(dataset, workers, seed)?,
-                    "5" => report::fig5(dataset, workers, seed)?,
-                    "6" => report::fig6(dataset, workers, seed)?,
+                    "5" => report::fig5_with(dataset, workers, seed, &book)?,
+                    "6" => report::fig6_with(dataset, workers, seed, &book)?,
                     other => {
                         return Err(Error::ParseError(format!("unknown figure '{other}'")));
                     }
@@ -626,8 +749,8 @@ fn main() -> Result<()> {
                 let db = EvalDatabase::load(Path::new(load_path))?;
                 match matches.get_str("fig") {
                     "4" => report::fig4_from_db(&db)?,
-                    "5" => report::fig5_from_db(&db)?,
-                    "6" => report::fig6_from_db(&db)?,
+                    "5" => report::fig5_from_db_with(&db, &book)?,
+                    "6" => report::fig6_from_db_with(&db, &book)?,
                     other => {
                         return Err(Error::InvalidConfig(format!(
                             "--load renders figs 4-6 from a saved database; fig '{other}' \

@@ -31,7 +31,12 @@ pub const OBJECTIVES: [Orientation; 2] = [Orientation::Maximize, Orientation::Mi
 /// fronts from incomparable campaigns can never silently merge.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FrontierBinding {
-    /// [`SweepSpec::fingerprint`](crate::arch::SweepSpec::fingerprint).
+    /// [`DesignSpace::fingerprint`](crate::arch::DesignSpace::fingerprint)
+    /// of the campaign's *joint* space — equal to the bare
+    /// [`SweepSpec::fingerprint`](crate::arch::SweepSpec::fingerprint)
+    /// for hardware-only campaigns, and covering the model axes for
+    /// joint ones, so fronts built under different model axes can never
+    /// silently merge.
     pub spec_fingerprint: u64,
     /// Synthesis-noise seed of the campaign.
     pub seed: u64,
@@ -138,6 +143,15 @@ impl ModelFrontier {
 /// Per-model streaming Pareto fronts for one campaign (see the module
 /// docs). Created empty; the explorer binds the model set at stream
 /// start and feeds every delivered point.
+///
+/// Fronts are per *base* model family: in a joint hardware × model
+/// campaign every delivered point carries one evaluation per base
+/// model (scaled to that point's width/depth variant), so each base
+/// model's front accumulates points from **all** of its variants — the
+/// joint Pareto set of the family. Use each archived
+/// [`FrontSample::index`] with
+/// [`DesignSpace::variant_of`](crate::arch::DesignSpace::variant_of)
+/// to recover which variant produced a front point.
 #[derive(Debug, Clone, Default)]
 pub struct CampaignFrontier {
     epsilon: Option<[f64; 2]>,

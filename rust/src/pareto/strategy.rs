@@ -22,8 +22,8 @@
 use std::collections::BTreeSet;
 use std::fmt;
 
-use crate::arch::{AcceleratorConfig, SweepSpec};
-use crate::dnn::Model;
+use crate::arch::{AcceleratorConfig, DesignSpace, ModelVariant};
+use crate::dnn::{lower_workload, Model};
 use crate::error::{Error, Result};
 use crate::util::rng::Pcg64;
 
@@ -31,9 +31,12 @@ use crate::util::rng::Pcg64;
 /// from the explorer for the duration of the selection only.
 #[derive(Debug, Clone, Copy)]
 pub struct StrategyContext<'a> {
-    /// The design space being explored.
-    pub spec: &'a SweepSpec,
-    /// The workload model set, in evaluation order.
+    /// The joint hardware × model design space being explored. A
+    /// hardware-only campaign carries trivial model axes, so positions
+    /// decode exactly as they always have.
+    pub space: &'a DesignSpace,
+    /// The *base* workload model set, in evaluation order (before any
+    /// model-axes scaling — cheap proxies rank against the base shapes).
     pub models: &'a [Model],
     /// The campaign's synthesis seed (strategies needing randomness
     /// should carry their own seed so the descriptor pins it).
@@ -41,19 +44,33 @@ pub struct StrategyContext<'a> {
     /// Round-robin shard designator `(shard, num_shards)`.
     pub shard: (usize, usize),
     /// Number of shard positions available (the shard-aware point count);
-    /// shard position `p` maps to cross-product index
+    /// shard position `p` maps to joint cross-product index
     /// `shard + p * num_shards`.
     pub positions: usize,
 }
 
 impl StrategyContext<'_> {
-    /// Decode the design point at shard position `pos`.
+    /// Decode the hardware configuration at shard position `pos`.
     ///
     /// # Panics
     /// If `pos >= self.positions`.
     pub fn config_at(&self, pos: usize) -> AcceleratorConfig {
         let (shard, num_shards) = self.shard;
-        self.spec.get(shard + pos * num_shards).expect("shard position within cross-product")
+        self.space
+            .get(shard + pos * num_shards)
+            .expect("shard position within joint cross-product")
+            .config
+    }
+
+    /// Decode the model variant at shard position `pos`.
+    ///
+    /// # Panics
+    /// If `pos >= self.positions`.
+    pub fn variant_at(&self, pos: usize) -> ModelVariant {
+        let (shard, num_shards) = self.shard;
+        self.space
+            .variant_of(shard + pos * num_shards)
+            .expect("shard position within joint cross-product")
     }
 }
 
@@ -148,7 +165,11 @@ impl Strategy for RandomSample {
 
     fn select(&self, ctx: &StrategyContext<'_>) -> Result<Selection> {
         if self.n == 0 {
-            return Err(Error::InvalidConfig("random strategy needs n >= 1".into()));
+            return Err(Error::InvalidConfig(
+                "strategy 'random:0' selects an empty design space: the sample count must be \
+                 at least 1"
+                    .into(),
+            ));
         }
         if self.n >= ctx.positions {
             return Ok(Selection::All);
@@ -204,9 +225,17 @@ impl Strategy for SuccessiveHalving {
         if self.keep >= ctx.positions {
             return Ok(Selection::All);
         }
-        let max_layers = ctx
-            .models
+        // Joint campaigns: score each position against its variant's
+        // *scaled* workload — the same `lower_workload` lowering the
+        // explorer evaluates — otherwise every variant block of the
+        // same hardware config would score identically and the position
+        // tie-break would silently keep only the first variant.
+        let (shard, num_shards) = ctx.shard;
+        let variant_workloads = lower_workload(&ctx.space.model, ctx.models);
+        let variant_of = |pos: usize| ctx.space.variant_index(shard + pos * num_shards);
+        let max_layers = variant_workloads
             .iter()
+            .flatten()
             .map(|m| m.compute_layers().count())
             .max()
             .unwrap_or(1)
@@ -223,7 +252,14 @@ impl Strategy for SuccessiveHalving {
             let mut scored: Vec<(f64, usize)> = survivors
                 .iter()
                 .map(|&pos| {
-                    (proxy_perf_per_area(&ctx.config_at(pos), ctx.models, layer_budget), pos)
+                    (
+                        proxy_perf_per_area(
+                            &ctx.config_at(pos),
+                            &variant_workloads[variant_of(pos)],
+                            layer_budget,
+                        ),
+                        pos,
+                    )
                 })
                 .collect();
             // Best proxy score first; ties resolve to the lower position
@@ -287,74 +323,76 @@ pub fn proxy_perf_per_area(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::{ModelAxes, SweepSpec};
     use crate::dnn::{models_for, Dataset};
 
-    fn ctx<'a>(spec: &'a SweepSpec, models: &'a [Model]) -> StrategyContext<'a> {
-        StrategyContext { spec, models, seed: 7, shard: (0, 1), positions: spec.len() }
+    fn ctx<'a>(space: &'a DesignSpace, models: &'a [Model]) -> StrategyContext<'a> {
+        StrategyContext { space, models, seed: 7, shard: (0, 1), positions: space.len() }
     }
 
     #[test]
     fn exhaustive_selects_all() {
-        let spec = SweepSpec::tiny();
+        let space = DesignSpace::from(SweepSpec::tiny());
         let models = models_for(Dataset::Cifar10);
-        assert_eq!(Exhaustive.select(&ctx(&spec, &models)).unwrap(), Selection::All);
+        assert_eq!(Exhaustive.select(&ctx(&space, &models)).unwrap(), Selection::All);
         assert_eq!(Exhaustive.descriptor(), "exhaustive");
     }
 
     #[test]
     fn random_sample_is_deterministic_and_in_bounds() {
-        let spec = SweepSpec::default();
+        let space = DesignSpace::from(SweepSpec::default());
         let models = models_for(Dataset::Cifar10);
         let strategy = RandomSample { n: 17, seed: 42 };
-        let a = strategy.select(&ctx(&spec, &models)).unwrap();
-        let b = strategy.select(&ctx(&spec, &models)).unwrap();
+        let a = strategy.select(&ctx(&space, &models)).unwrap();
+        let b = strategy.select(&ctx(&space, &models)).unwrap();
         assert_eq!(a, b, "same seed must select the same points");
         let Selection::Subset(positions) = a else { panic!("expected a subset") };
         assert_eq!(positions.len(), 17);
         assert!(positions.windows(2).all(|w| w[0] < w[1]), "ascending & distinct");
-        assert!(*positions.last().unwrap() < spec.len());
-        let c = RandomSample { n: 17, seed: 43 }.select(&ctx(&spec, &models)).unwrap();
+        assert!(*positions.last().unwrap() < space.len());
+        let c = RandomSample { n: 17, seed: 43 }.select(&ctx(&space, &models)).unwrap();
         assert_ne!(a, c, "different seeds should (overwhelmingly) differ");
     }
 
     #[test]
     fn random_sample_covering_space_is_all() {
-        let spec = SweepSpec::tiny();
+        let space = DesignSpace::from(SweepSpec::tiny());
         let models = models_for(Dataset::Cifar10);
         let selection =
-            RandomSample { n: spec.len() + 5, seed: 1 }.select(&ctx(&spec, &models)).unwrap();
+            RandomSample { n: space.len() + 5, seed: 1 }.select(&ctx(&space, &models)).unwrap();
         assert_eq!(selection, Selection::All);
     }
 
     #[test]
     fn random_sample_rejects_zero() {
-        let spec = SweepSpec::tiny();
+        let space = DesignSpace::from(SweepSpec::tiny());
         let models = models_for(Dataset::Cifar10);
-        let err = RandomSample { n: 0, seed: 1 }.select(&ctx(&spec, &models)).unwrap_err();
+        let err = RandomSample { n: 0, seed: 1 }.select(&ctx(&space, &models)).unwrap_err();
         assert_eq!(err.kind(), "invalid_config");
+        assert!(err.to_string().contains("random:0"), "{err}");
     }
 
     #[test]
     fn halving_keeps_exactly_keep_points() {
-        let spec = SweepSpec::default();
+        let space = DesignSpace::from(SweepSpec::default());
         let models = models_for(Dataset::Cifar10);
         let strategy = SuccessiveHalving { keep: 9, rounds: 3 };
-        let Selection::Subset(positions) = strategy.select(&ctx(&spec, &models)).unwrap()
+        let Selection::Subset(positions) = strategy.select(&ctx(&space, &models)).unwrap()
         else {
             panic!("expected a subset")
         };
         assert_eq!(positions.len(), 9);
         assert!(positions.windows(2).all(|w| w[0] < w[1]));
         // Deterministic: a second run selects the same survivors.
-        let again = strategy.select(&ctx(&spec, &models)).unwrap();
+        let again = strategy.select(&ctx(&space, &models)).unwrap();
         assert_eq!(again, Selection::Subset(positions));
     }
 
     #[test]
     fn halving_prefers_high_proxy_scores() {
-        let spec = SweepSpec::default();
+        let space = DesignSpace::from(SweepSpec::default());
         let models = models_for(Dataset::Cifar10);
-        let context = ctx(&spec, &models);
+        let context = ctx(&space, &models);
         let Selection::Subset(positions) =
             SuccessiveHalving { keep: 8, rounds: 2 }.select(&context).unwrap()
         else {
@@ -362,7 +400,7 @@ mod tests {
         };
         // Survivors should score at least as well (at full fidelity) as
         // the median of the space — the proxy actually steered.
-        let full = spec.len();
+        let full = space.len();
         let score =
             |pos: usize| proxy_perf_per_area(&context.config_at(pos), &models, usize::MAX);
         let mut all: Vec<f64> = (0..full).map(score).collect();
@@ -370,6 +408,47 @@ mod tests {
         let median = all[full / 2];
         let surviving_best = positions.iter().map(|&p| score(p)).fold(f64::MIN, f64::max);
         assert!(surviving_best >= median, "halving survivors must not all be below median");
+    }
+
+    #[test]
+    fn joint_halving_scores_each_variant_on_its_scaled_workload() {
+        use crate::dnn::{model_for, ModelKind};
+        // Base model first, slim variant second: the slim variant has
+        // strictly fewer MACs on identical hardware, so its proxy
+        // perf/area is strictly higher — every survivor must come from
+        // the *second* variant block. (Under variant-blind scoring the
+        // position tie-break would have kept the first block instead.)
+        let space = DesignSpace::new(
+            SweepSpec::tiny(),
+            ModelAxes { width_mults: vec![1.0, 0.25], depth_mults: vec![1] },
+        );
+        let models = vec![model_for(ModelKind::ResNet20, Dataset::Cifar10)];
+        let context = ctx(&space, &models);
+        let Selection::Subset(positions) =
+            SuccessiveHalving { keep: 3, rounds: 2 }.select(&context).unwrap()
+        else {
+            panic!("expected a subset")
+        };
+        let hw_len = space.hw.len();
+        assert!(
+            positions.iter().all(|&p| p >= hw_len),
+            "survivors must come from the slim variant block: {positions:?}"
+        );
+    }
+
+    #[test]
+    fn joint_context_decodes_variants() {
+        let space = DesignSpace::new(
+            SweepSpec::tiny(),
+            ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1] },
+        );
+        let models = models_for(Dataset::Cifar10);
+        let context = ctx(&space, &models);
+        let hw_len = space.hw.len();
+        assert_eq!(context.variant_at(0).width, 0.5);
+        assert_eq!(context.variant_at(hw_len).width, 1.0);
+        // Hardware configs repeat per variant block.
+        assert_eq!(context.config_at(0), context.config_at(hw_len));
     }
 
     #[test]

@@ -238,25 +238,70 @@ pub fn fig4_from_db(db: &EvalDatabase) -> Result<Figure> {
 
 /// **Fig. 5** — Pareto front: accuracy vs normalized perf/area (CIFAR).
 pub fn fig5(dataset: Dataset, workers: usize, seed: u64) -> Result<Figure> {
-    pareto_figure(dataset, workers, seed, true)
+    pareto_figure(dataset, workers, seed, true, &accuracy::AccuracyBook::new())
 }
 
-/// **Fig. 5** from a saved campaign database.
+/// **Fig. 5** from a live run with an explicit
+/// [`AccuracyBook`](accuracy::AccuracyBook) (see [`fig5_from_db_with`]).
+pub fn fig5_with(
+    dataset: Dataset,
+    workers: usize,
+    seed: u64,
+    book: &accuracy::AccuracyBook,
+) -> Result<Figure> {
+    pareto_figure(dataset, workers, seed, true, book)
+}
+
+/// **Fig. 5** from a saved campaign database (paper-registry
+/// accuracies; use [`fig5_from_db_with`] to supply user declarations).
 pub fn fig5_from_db(db: &EvalDatabase) -> Result<Figure> {
-    pareto_figure_from_db(db, true)
+    pareto_figure_from_db(db, true, &accuracy::AccuracyBook::new())
+}
+
+/// **Fig. 5** from a saved database with an explicit
+/// [`AccuracyBook`](accuracy::AccuracyBook) — how custom QSL models and
+/// scaled model variants (whose accuracy the paper registry cannot
+/// know) get onto the accuracy front: declare it in the spec and pass
+/// `campaign.accuracy_book()`.
+pub fn fig5_from_db_with(db: &EvalDatabase, book: &accuracy::AccuracyBook) -> Result<Figure> {
+    pareto_figure_from_db(db, true, book)
 }
 
 /// **Fig. 6** — Pareto front: top-1 error vs normalized energy (CIFAR).
 pub fn fig6(dataset: Dataset, workers: usize, seed: u64) -> Result<Figure> {
-    pareto_figure(dataset, workers, seed, false)
+    pareto_figure(dataset, workers, seed, false, &accuracy::AccuracyBook::new())
 }
 
-/// **Fig. 6** from a saved campaign database.
+/// **Fig. 6** from a live run with an explicit
+/// [`AccuracyBook`](accuracy::AccuracyBook) (see [`fig5_from_db_with`]).
+pub fn fig6_with(
+    dataset: Dataset,
+    workers: usize,
+    seed: u64,
+    book: &accuracy::AccuracyBook,
+) -> Result<Figure> {
+    pareto_figure(dataset, workers, seed, false, book)
+}
+
+/// **Fig. 6** from a saved campaign database (paper-registry
+/// accuracies; use [`fig6_from_db_with`] to supply user declarations).
 pub fn fig6_from_db(db: &EvalDatabase) -> Result<Figure> {
-    pareto_figure_from_db(db, false)
+    pareto_figure_from_db(db, false, &accuracy::AccuracyBook::new())
 }
 
-fn pareto_figure(dataset: Dataset, workers: usize, seed: u64, perf_axis: bool) -> Result<Figure> {
+/// **Fig. 6** from a saved database with an explicit
+/// [`AccuracyBook`](accuracy::AccuracyBook) (see [`fig5_from_db_with`]).
+pub fn fig6_from_db_with(db: &EvalDatabase, book: &accuracy::AccuracyBook) -> Result<Figure> {
+    pareto_figure_from_db(db, false, book)
+}
+
+fn pareto_figure(
+    dataset: Dataset,
+    workers: usize,
+    seed: u64,
+    perf_axis: bool,
+    book: &accuracy::AccuracyBook,
+) -> Result<Figure> {
     if dataset == Dataset::ImageNet {
         return Err(Error::InvalidConfig(
             "Figs. 5/6 are CIFAR-only in the paper".into(),
@@ -267,10 +312,14 @@ fn pareto_figure(dataset: Dataset, workers: usize, seed: u64, perf_axis: bool) -
         .workers(workers)
         .seed(seed)
         .run()?;
-    pareto_figure_from_db(&db, perf_axis)
+    pareto_figure_from_db(&db, perf_axis, book)
 }
 
-fn pareto_figure_from_db(db: &EvalDatabase, perf_axis: bool) -> Result<Figure> {
+fn pareto_figure_from_db(
+    db: &EvalDatabase,
+    perf_axis: bool,
+    book: &accuracy::AccuracyBook,
+) -> Result<Figure> {
     db.ensure_whole_space()?;
     let dataset = db.dataset;
     if dataset == Dataset::ImageNet {
@@ -286,9 +335,6 @@ fn pareto_figure_from_db(db: &EvalDatabase, perf_axis: bool) -> Result<Figure> {
     let mut light_on_front = 0usize;
     let mut fronts = 0usize;
     for space in &db.spaces {
-        let model_kind = crate::dnn::ModelKind::parse(&space.model_name).ok_or_else(|| {
-            Error::ParseError(format!("unknown model name '{}'", space.model_name))
-        })?;
         let missing_baseline = || {
             Error::MissingBaseline(format!(
                 "{}: no INT16 evaluations for the Fig. 5/6 baseline",
@@ -301,20 +347,24 @@ fn pareto_figure_from_db(db: &EvalDatabase, perf_axis: bool) -> Result<Figure> {
         // axis (highest perf/area for Fig. 5, lowest energy for Fig. 6).
         let mut points: Vec<(PeType, f64, f64)> = Vec::new();
         for pe in PeType::ALL {
-            let accuracy = accuracy::registry(model_kind, dataset, pe).ok_or_else(|| {
+            // Declared accuracy first (custom models, scaled variants),
+            // paper registry as the fallback for zoo families.
+            let top1 = book.lookup(&space.model_name, dataset, pe).ok_or_else(|| {
                 Error::InvalidConfig(format!(
-                    "accuracy registry has no entry for {model_kind} / {dataset} / {pe}"
+                    "no accuracy known for {} / {dataset} / {pe}; declare it in the spec's \
+                     'accuracy {{ ... }}' block for custom or scaled models",
+                    space.model_name
                 ))
             })?;
             let (x, y) = if perf_axis {
                 let best =
                     dse::best_perf_per_area(&space.evals, pe).ok_or_else(missing_baseline)?;
-                (best.perf_per_area / baseline.perf_per_area, accuracy.top1)
+                (best.perf_per_area / baseline.perf_per_area, top1)
             } else {
                 let best = dse::best_energy(&space.evals, pe).ok_or_else(missing_baseline)?;
                 let base_energy = dse::best_energy(&space.evals, PeType::Int16)
                     .ok_or_else(missing_baseline)?;
-                (best.energy_uj / base_energy.energy_uj, accuracy.top1_error())
+                (best.energy_uj / base_energy.energy_uj, 100.0 - top1)
             };
             points.push((pe, x, y));
         }
@@ -426,6 +476,36 @@ mod tests {
         assert_eq!(fig4_from_db(&loaded).unwrap().render(), fig4_from_db(&db).unwrap().render());
         assert_eq!(fig5_from_db(&loaded).unwrap().render(), fig5_from_db(&db).unwrap().render());
         assert_eq!(fig6_from_db(&loaded).unwrap().render(), fig6_from_db(&db).unwrap().render());
+    }
+
+    #[test]
+    fn fig56_with_declared_accuracy_cover_custom_models() {
+        use crate::arch::SweepSpec;
+        use crate::quant::PeType;
+        // A campaign over a *custom* model: the paper registry knows
+        // nothing about it, so the default book fails with a typed
+        // error that points at the spec's accuracy block…
+        let mut model = crate::dnn::model_for(crate::dnn::ModelKind::ResNet20, Dataset::Cifar10);
+        model.name = "customnet".into();
+        let spec = SweepSpec { pe_types: PeType::ALL.to_vec(), ..SweepSpec::tiny() };
+        let db = Explorer::over(spec).model(model).workers(2).seed(7).run().unwrap();
+        let err = fig5_from_db(&db).unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        assert!(err.to_string().contains("accuracy"), "{err}");
+        // …while declared accuracies render both figures.
+        let mut book = accuracy::AccuracyBook::new();
+        for (pe, top1) in [
+            (PeType::Fp32, 92.0),
+            (PeType::Int16, 91.8),
+            (PeType::LightPe1, 90.5),
+            (PeType::LightPe2, 91.1),
+        ] {
+            book.declare("customnet", pe, top1);
+        }
+        let fig5 = fig5_from_db_with(&db, &book).unwrap();
+        assert!(fig5.render().contains("Fig. 5"));
+        let fig6 = fig6_from_db_with(&db, &book).unwrap();
+        assert!(fig6.render().contains("Fig. 6"));
     }
 
     #[test]

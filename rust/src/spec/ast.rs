@@ -36,8 +36,11 @@ pub struct SpecFile {
 pub enum Section {
     /// `campaign { ... }` — seed, workers, shard.
     Campaign(Block),
-    /// `sweep { ... }` — design-space axes.
+    /// `sweep { ... }` — hardware design-space axes.
     Sweep(Block),
+    /// `model_axes { ... }` — model-hyperparameter axes (width/depth
+    /// multipliers) swept jointly with the hardware.
+    ModelAxes(Block),
     /// `strategy = ...` — the search strategy.
     Strategy(StrategyDecl),
     /// `workload { ... }` — dataset + model list.
@@ -153,6 +156,19 @@ pub enum ModelStmt {
     /// `conv NAME { ... }`, `fc NAME { ... }`, `pool NAME { ... }`, or
     /// the override form `layer NAME { ... }` (only valid with `like`).
     Layer(LayerStmt),
+    /// `accuracy { int16 = 91.2, ... }` — user-declared top-1
+    /// accuracies per PE type (percent), feeding the Fig. 5/6-style
+    /// accuracy fronts for custom and scaled models.
+    Accuracy(AccuracyBlock),
+}
+
+/// An `accuracy { PE = PERCENT, ... }` block inside a model definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccuracyBlock {
+    /// Span of the `accuracy` keyword.
+    pub keyword: Span,
+    /// `pe_type = percent` entries, in source order.
+    pub entries: Vec<KeyValue>,
 }
 
 /// One layer statement.

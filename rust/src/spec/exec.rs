@@ -53,11 +53,14 @@ pub struct CampaignOutcome {
 }
 
 impl ResolvedCampaign {
-    /// Build the campaign's [`Explorer`] (space, models, seed, workers,
-    /// shard, strategy, fingerprint) without any persistence wiring —
-    /// the embedding-friendly entry point.
+    /// Build the campaign's [`Explorer`] (joint space — hardware sweep
+    /// × model axes — models, seed, workers, shard, strategy,
+    /// fingerprint) without any persistence wiring — the
+    /// embedding-friendly entry point.
     pub fn explorer(&self) -> Explorer {
-        let explorer = Explorer::over(self.sweep.clone())
+        let space =
+            crate::arch::DesignSpace::new(self.sweep.clone(), self.model_axes.clone());
+        let explorer = Explorer::over(space)
             .dataset(self.dataset)
             .models(self.models())
             .workers(self.workers)
@@ -65,6 +68,20 @@ impl ResolvedCampaign {
             .shard(self.shard.0, self.shard.1)
             .campaign_fingerprint(self.fingerprint());
         self.strategy.attach(explorer)
+    }
+
+    /// The user-declared accuracy book of this campaign: declared
+    /// entries for custom models merged over the paper registry (see
+    /// [`crate::accuracy::AccuracyBook`]) — what the Fig. 5/6-style
+    /// accuracy fronts consult for custom and scaled model variants.
+    pub fn accuracy_book(&self) -> crate::accuracy::AccuracyBook {
+        let mut book = crate::accuracy::AccuracyBook::new();
+        for (model, entries) in &self.accuracy {
+            for &(pe, top1) in entries {
+                book.declare(model, pe, top1);
+            }
+        }
+        book
     }
 
     /// Run the campaign end to end: attach the persistence plan (cache,

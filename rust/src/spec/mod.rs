@@ -1,8 +1,11 @@
 //! QSL — the QADAM Spec Language: declarative campaign specs.
 //!
-//! A `*.qsl` file pins an entire DSE campaign as data: the sweep axes,
-//! the search strategy, the workload (zoo models, custom layer stacks,
-//! and `like`-derivations of zoo models), and the persistence plan.
+//! A `*.qsl` file pins an entire DSE campaign as data: the hardware
+//! sweep axes, the model-hyperparameter axes (`model_axes { width =
+//! [...] depth = [...] }` — joint hardware × model co-exploration), the
+//! search strategy, the workload (zoo models, custom layer stacks with
+//! optional `accuracy { ... }` declarations, and `like`-derivations of
+//! zoo models), and the persistence plan.
 //! `qadam run campaign.qsl` executes it; `qadam validate campaign.qsl`
 //! checks it and prints the resolved campaign; `qadam spec init` emits
 //! a commented starter file.
@@ -120,6 +123,13 @@ sweep {
     clock_ghz = [2]
 }
 
+# Joint hardware x model co-exploration: sweep width/depth multipliers
+# of every workload model against every hardware point.
+# model_axes {
+#     width = [0.5, 1]         # channel-width multipliers
+#     depth = [1, 2]           # stride-1 convs repeated per multiplier
+# }
+
 # exhaustive (default), random(N[, seed = S]), or halving(KEEP[, rounds = R]).
 strategy = exhaustive
 
@@ -129,8 +139,11 @@ workload {
     # Custom models defined below join the list by name.
 }
 
-# A custom model: an ordered conv/pool/fc stack.
+# A custom model: an ordered conv/pool/fc stack. The optional accuracy
+# block declares top-1 accuracies (percent) per precision, so Fig. 5/6
+# accuracy fronts work for this model and its scaled variants.
 # model tiny {
+#     accuracy { int16 = 91.2, lightpe1 = 90.1 }
 #     conv stem { in = 32, channels = 3, out = 16, kernel = 3, stride = 1, pad = 1 }
 #     pool p1   { in = 32, channels = 16, kernel = 2, stride = 2 }
 #     fc head   { in = 4096, out = 10 }

@@ -10,16 +10,16 @@
 //! parser preserves.
 
 use super::ast::{
-    Arg, Block, KeyValue, LayerStmt, ModelBlock, ModelStmt, Section, SpecFile, Spanned,
-    StrategyDecl, Value, ValueKind,
+    AccuracyBlock, Arg, Block, KeyValue, LayerStmt, ModelBlock, ModelStmt, Section, SpecFile,
+    Spanned, StrategyDecl, Value, ValueKind,
 };
 use super::diag::{Diagnostics, Span};
 use super::lexer::{lex, Tok, Token};
 use crate::util::text::did_you_mean;
 
 /// The top-level section keywords (for "did you mean" suggestions).
-pub const SECTION_KEYWORDS: [&str; 6] =
-    ["campaign", "sweep", "strategy", "workload", "model", "persist"];
+pub const SECTION_KEYWORDS: [&str; 7] =
+    ["campaign", "sweep", "model_axes", "strategy", "workload", "model", "persist"];
 
 /// Maximum `[`/`(` value-nesting depth. The grammar never needs more
 /// than two levels; the cap turns adversarial `[[[[...` input into a
@@ -154,12 +154,13 @@ impl Parser<'_> {
             let token = self.peek().clone();
             match &token.tok {
                 Tok::Ident(word) => match word.as_str() {
-                    "campaign" | "sweep" | "workload" | "persist" => {
+                    "campaign" | "sweep" | "model_axes" | "workload" | "persist" => {
                         let keyword = self.bump().span;
                         if let Some(block) = self.block(keyword) {
                             file.sections.push(match word.as_str() {
                                 "campaign" => Section::Campaign(block),
                                 "sweep" => Section::Sweep(block),
+                                "model_axes" => Section::ModelAxes(block),
                                 "workload" => Section::Workload(block),
                                 _ => Section::Persist(block),
                             });
@@ -463,6 +464,12 @@ impl Parser<'_> {
     }
 
     fn model_stmt(&mut self) -> Option<ModelStmt> {
+        // `accuracy { ... }` — user-declared per-PE-type accuracies.
+        if let (Tok::Ident(word), Tok::LBrace) = (&self.peek().tok, &self.peek2().tok) {
+            if word == "accuracy" {
+                return self.accuracy_block().map(ModelStmt::Accuracy);
+            }
+        }
         // A layer statement is `KIND NAME { ... }`; anything with `=`
         // after the first word is a plain key/value.
         if let (Tok::Ident(word), Tok::Ident(_)) = (&self.peek().tok, &self.peek2().tok) {
@@ -478,6 +485,41 @@ impl Parser<'_> {
             return None;
         }
         self.key_value().map(ModelStmt::KeyValue)
+    }
+
+    fn accuracy_block(&mut self) -> Option<AccuracyBlock> {
+        let keyword = self.bump().span; // consume 'accuracy'
+        if !self.expect(Tok::LBrace, "to open the accuracy block") {
+            return None;
+        }
+        let mut entries = Vec::new();
+        loop {
+            self.skip_newlines();
+            if let Tok::RBrace = self.peek().tok {
+                self.bump();
+                return Some(AccuracyBlock { keyword, entries });
+            }
+            if self.at_eof() {
+                self.diags.error(self.peek().span, "expected '}' to close the accuracy block");
+                return Some(AccuracyBlock { keyword, entries });
+            }
+            let entry = self.key_value()?;
+            entries.push(entry);
+            // Entries separate with ',' or a newline (the loop head
+            // consumes newline runs); '}' closes the block.
+            let newline_separated = matches!(self.peek().tok, Tok::Newline);
+            if !self.eat(&Tok::Comma)
+                && !newline_separated
+                && !matches!(self.peek().tok, Tok::RBrace)
+            {
+                let (span, found) = (self.peek().span, self.peek().tok.describe());
+                self.diags.error(
+                    span,
+                    format!("expected ',' or '}}' in accuracy entries, found {found}"),
+                );
+                return None;
+            }
+        }
     }
 
     fn layer_stmt(&mut self) -> Option<LayerStmt> {
@@ -574,6 +616,50 @@ mod tests {
             }
             other => panic!("expected a model, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn parses_model_axes_section() {
+        let file = parse_ok("model_axes {\n  width = [0.25, 0.5, 1]\n  depth = [1, 2]\n}\n");
+        match &file.sections[0] {
+            Section::ModelAxes(block) => {
+                assert_eq!(block.entries.len(), 2);
+                assert_eq!(block.entries[0].key.node, "width");
+                match &block.entries[0].value.kind {
+                    ValueKind::List(items) => assert_eq!(items.len(), 3),
+                    other => panic!("expected a list, got {other:?}"),
+                }
+            }
+            other => panic!("expected model_axes, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_accuracy_blocks_in_models() {
+        let file = parse_ok(
+            "model tiny {\n  accuracy { int16 = 91.2, lightpe1 = 90.1 }\n  \
+             fc head { in = 64, out = 10 }\n}\n",
+        );
+        match &file.sections[0] {
+            Section::Model(model) => {
+                assert_eq!(model.stmts.len(), 2);
+                match &model.stmts[0] {
+                    ModelStmt::Accuracy(block) => {
+                        assert_eq!(block.entries.len(), 2);
+                        assert_eq!(block.entries[0].key.node, "int16");
+                        assert_eq!(block.entries[1].key.node, "lightpe1");
+                    }
+                    other => panic!("expected an accuracy block, got {other:?}"),
+                }
+            }
+            other => panic!("expected a model, got {other:?}"),
+        }
+        // Newline-separated entries parse too.
+        let file = parse_ok(
+            "model tiny {\n  accuracy {\n    int16 = 91.2\n    fp32 = 92.0\n  }\n  \
+             fc head { in = 64, out = 10 }\n}\n",
+        );
+        assert!(matches!(&file.sections[0], Section::Model(_)));
     }
 
     #[test]

@@ -21,12 +21,12 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
 
 use super::ast::{
-    Arg, Block, KeyValue, LayerStmt, ModelBlock, ModelStmt, Section, SpecFile, StrategyDecl,
-    Value, ValueKind,
+    AccuracyBlock, Arg, Block, KeyValue, LayerStmt, ModelBlock, ModelStmt, Section, SpecFile,
+    StrategyDecl, Value, ValueKind,
 };
 use super::diag::{Diagnostics, Span};
 use super::lexer::fmt_num;
-use crate::arch::{ScratchpadCfg, SweepSpec};
+use crate::arch::{ModelAxes, ScratchpadCfg, SweepSpec};
 use crate::dnn::{model_for, Dataset, Layer, LayerKind, Model, ModelKind};
 use crate::error::{Error, Result};
 use crate::explore::Explorer;
@@ -236,13 +236,23 @@ impl Default for PersistPlan {
 /// execute byte-identically).
 #[derive(Debug, Clone)]
 pub struct ResolvedCampaign {
-    /// The design space to sweep.
+    /// The hardware design space to sweep.
     pub sweep: SweepSpec,
+    /// Model-hyperparameter axes swept jointly with the hardware
+    /// (trivial — base models only — unless the spec declares a
+    /// `model_axes` block or the CLI passes `--width-mults` /
+    /// `--depth-mults`).
+    pub model_axes: ModelAxes,
     /// The campaign dataset (labels the database; instantiates zoo
     /// workload models).
     pub dataset: Dataset,
     /// The workload, in evaluation order.
     pub workload: Vec<WorkloadModel>,
+    /// User-declared top-1 accuracies (percent) per custom model, in
+    /// workload order: `(model name, [(pe, top1), ...])`. Feeds the
+    /// Fig. 5/6-style accuracy fronts for custom and scaled models;
+    /// not part of the campaign identity (it changes no evaluation).
+    pub accuracy: Vec<(String, Vec<(PeType, f64)>)>,
     /// Synthesis-noise seed.
     pub seed: u64,
     /// Worker threads (`0` = auto).
@@ -274,8 +284,10 @@ impl ResolvedCampaign {
     ) -> Self {
         Self {
             sweep,
+            model_axes: ModelAxes::default(),
             dataset,
             workload,
+            accuracy: Vec::new(),
             seed,
             workers,
             shard,
@@ -380,6 +392,21 @@ impl ResolvedCampaign {
             words(self.sweep.clock_ghz.iter().map(|&c| fmt_num(c)).collect())
         ));
         out.push_str("}\n\n");
+        // Joint model axes are identity (they change what is evaluated);
+        // trivial axes are omitted so pre-joint specs render — and
+        // fingerprint — exactly as they always have.
+        if !self.model_axes.is_trivial() {
+            out.push_str("model_axes {\n");
+            out.push_str(&format!(
+                "  width = [{}]\n",
+                words(self.model_axes.width_mults.iter().map(|&w| fmt_num(w)).collect())
+            ));
+            out.push_str(&format!(
+                "  depth = [{}]\n",
+                words(self.model_axes.depth_mults.iter().map(|d| d.to_string()).collect())
+            ));
+            out.push_str("}\n\n");
+        }
         out.push_str(&format!("strategy = {}\n\n", self.strategy.canonical()));
         out.push_str("workload {\n");
         out.push_str(&format!("  dataset = {}\n", dataset_key(self.dataset)));
@@ -395,8 +422,18 @@ impl ResolvedCampaign {
         out.push_str("}\n");
         for entry in &self.workload {
             if let WorkloadModel::Custom(model) = entry {
+                // Declared accuracy is not identity (it changes no
+                // evaluation), so resume survives accuracy edits.
+                let accuracy = (!identity_only)
+                    .then(|| {
+                        self.accuracy
+                            .iter()
+                            .find(|(name, _)| *name == model.name)
+                            .map(|(_, entries)| entries.as_slice())
+                    })
+                    .flatten();
                 out.push('\n');
-                out.push_str(&render_model(model));
+                out.push_str(&render_model(model, accuracy));
             }
         }
         if !identity_only {
@@ -429,7 +466,7 @@ impl ResolvedCampaign {
     /// One-screen resolved summary (the `qadam validate` output).
     pub fn summary(&self) -> String {
         let models = self.models();
-        let points = self.sweep.len();
+        let points = self.sweep.len() * self.model_axes.len();
         let shard_points = if self.shard.1 > 1 {
             (points - self.shard.0.min(points)).div_ceil(self.shard.1)
         } else {
@@ -454,6 +491,14 @@ impl ResolvedCampaign {
             self.sweep.dram_bw_gbps.len(),
             self.sweep.clock_ghz.len(),
         ));
+        if !self.model_axes.is_trivial() {
+            out.push_str(&format!(
+                "  model_axes: {} width x {} depth = {} variants per model\n",
+                self.model_axes.width_mults.len(),
+                self.model_axes.depth_mults.len(),
+                self.model_axes.len(),
+            ));
+        }
         out.push_str(&format!("  dataset: {}\n", self.dataset.name()));
         let described: Vec<String> = self
             .workload
@@ -516,9 +561,16 @@ fn quote(path: &std::path::Path) -> String {
     out
 }
 
-fn render_model(model: &Model) -> String {
+fn render_model(model: &Model, accuracy: Option<&[(PeType, f64)]>) -> String {
     let mut out = format!("model {} {{\n", model.name);
     out.push_str(&format!("  dataset = {}\n", dataset_key(model.dataset)));
+    if let Some(entries) = accuracy.filter(|entries| !entries.is_empty()) {
+        let rendered: Vec<String> = entries
+            .iter()
+            .map(|&(pe, top1)| format!("{} = {}", pe_key(pe), fmt_num(top1)))
+            .collect();
+        out.push_str(&format!("  accuracy {{ {} }}\n", rendered.join(", ")));
+    }
     for layer in &model.layers {
         match layer.kind {
             LayerKind::Conv => out.push_str(&format!(
@@ -550,6 +602,7 @@ fn render_model(model: &Model) -> String {
 pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampaign> {
     let mut campaign_block: Option<&Block> = None;
     let mut sweep_block: Option<&Block> = None;
+    let mut model_axes_block: Option<&Block> = None;
     let mut strategy_decl: Option<&StrategyDecl> = None;
     let mut workload_block: Option<&Block> = None;
     let mut persist_block: Option<&Block> = None;
@@ -558,6 +611,7 @@ pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampa
         let slot: (&mut Option<&Block>, &str, Span) = match section {
             Section::Campaign(b) => (&mut campaign_block, "campaign", b.keyword),
             Section::Sweep(b) => (&mut sweep_block, "sweep", b.keyword),
+            Section::ModelAxes(b) => (&mut model_axes_block, "model_axes", b.keyword),
             Section::Workload(b) => (&mut workload_block, "workload", b.keyword),
             Section::Persist(b) => (&mut persist_block, "persist", b.keyword),
             Section::Strategy(decl) => {
@@ -575,8 +629,8 @@ pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampa
         };
         let (stored, name, keyword) = slot;
         let block = match section {
-            Section::Campaign(b) | Section::Sweep(b) | Section::Workload(b)
-            | Section::Persist(b) => b,
+            Section::Campaign(b) | Section::Sweep(b) | Section::ModelAxes(b)
+            | Section::Workload(b) | Section::Persist(b) => b,
             _ => unreachable!(),
         };
         if stored.is_some() {
@@ -598,6 +652,13 @@ pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampa
         }
         None => SweepSpec::default(),
     };
+    let model_axes = match model_axes_block {
+        Some(block) => {
+            set_keys.insert("model_axes".into());
+            resolve_model_axes_block(block, diags)
+        }
+        None => ModelAxes::default(),
+    };
     let raw_strategy = match strategy_decl {
         Some(decl) => {
             set_keys.insert("strategy".into());
@@ -618,7 +679,7 @@ pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampa
     // name — including ones that failed to resolve — so the workload
     // pass below doesn't pile an "unknown model" error on top of the
     // definition's own diagnostics.
-    let mut custom: Vec<(String, Model, Span)> = Vec::new();
+    let mut custom: Vec<(String, Model, Vec<(PeType, f64)>, Span)> = Vec::new();
     let mut defined: BTreeSet<String> = BTreeSet::new();
     for block in &model_blocks {
         let name = &block.name.node;
@@ -631,17 +692,18 @@ pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampa
             );
             continue;
         }
-        if custom.iter().any(|(n, _, _)| n == name) {
+        if custom.iter().any(|(n, _, _, _)| n == name) {
             diags.error(block.name.span, format!("duplicate model definition '{name}'"));
             continue;
         }
-        if let Some(model) = resolve_model_block(block, dataset, diags) {
-            custom.push((name.clone(), model, block.name.span));
+        if let Some((model, declared)) = resolve_model_block(block, dataset, diags) {
+            custom.push((name.clone(), model, declared, block.name.span));
         }
     }
 
     // Workload model list → WorkloadModel entries.
     let mut workload: Vec<WorkloadModel> = Vec::new();
+    let mut accuracy: Vec<(String, Vec<(PeType, f64)>)> = Vec::new();
     let mut used: BTreeSet<String> = BTreeSet::new();
     match &model_names {
         None => {
@@ -654,11 +716,14 @@ pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampa
                     diags.error(*span, format!("duplicate model '{name}' in workload"));
                     continue;
                 }
-                if let Some((_, model, _)) =
-                    custom.iter().find(|(custom_name, _, _)| custom_name == name)
+                if let Some((_, model, declared, _)) =
+                    custom.iter().find(|(custom_name, _, _, _)| custom_name == name)
                 {
                     used.insert(name.clone());
                     workload.push(WorkloadModel::Custom(model.clone()));
+                    if !declared.is_empty() {
+                        accuracy.push((model.name.clone(), declared.clone()));
+                    }
                 } else if defined.contains(name) {
                     // Defined but failed to resolve (or shadowed a zoo
                     // name): its definition already carries the errors.
@@ -682,7 +747,7 @@ pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampa
                 } else {
                     let candidates: Vec<&str> = custom
                         .iter()
-                        .map(|(n, _, _)| n.as_str())
+                        .map(|(n, _, _, _)| n.as_str())
                         .chain(ZOO_KEYS)
                         .collect();
                     let help = did_you_mean(name, candidates)
@@ -695,7 +760,7 @@ pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampa
             }
         }
     }
-    for (name, _, span) in &custom {
+    for (name, _, _, span) in &custom {
         if !used.contains(name) {
             diags.warn(*span, format!("model '{name}' is defined but not listed in workload.models"));
         }
@@ -731,8 +796,10 @@ pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampa
     }
     Some(ResolvedCampaign {
         sweep,
+        model_axes,
         dataset,
         workload,
+        accuracy,
         seed,
         workers,
         shard,
@@ -1020,6 +1087,99 @@ fn resolve_sweep_block(block: &Block, diags: &mut Diagnostics) -> SweepSpec {
         }
     }
     sweep
+}
+
+fn resolve_model_axes_block(block: &Block, diags: &mut Diagnostics) -> ModelAxes {
+    const KEYS: [&str; 2] = ["width", "depth"];
+    let mut axes = ModelAxes::default();
+    let mut seen = BTreeSet::new();
+    for kv in &block.entries {
+        if !note_key(diags, &mut seen, kv) {
+            continue;
+        }
+        match kv.key.node.as_str() {
+            "width" => {
+                let Some(items) = expect_list(diags, &kv.value, "axis 'width'") else { continue };
+                let mut widths: Vec<f64> = Vec::new();
+                for item in items {
+                    let Some(w) = expect_pos_num(diags, item, "width multiplier") else {
+                        continue;
+                    };
+                    if widths.contains(&w) {
+                        diags.error(
+                            item.span,
+                            format!("duplicate width multiplier {}", fmt_num(w)),
+                        );
+                        continue;
+                    }
+                    widths.push(w);
+                }
+                if !widths.is_empty() {
+                    axes.width_mults = widths;
+                }
+            }
+            "depth" => {
+                let Some(items) = expect_list(diags, &kv.value, "axis 'depth'") else { continue };
+                let mut depths: Vec<usize> = Vec::new();
+                for item in items {
+                    let Some(d) = expect_pos_uint(diags, item, "depth multiplier") else {
+                        continue;
+                    };
+                    let d = d as usize;
+                    if depths.contains(&d) {
+                        diags.error(item.span, format!("duplicate depth multiplier {d}"));
+                        continue;
+                    }
+                    depths.push(d);
+                }
+                if !depths.is_empty() {
+                    axes.depth_mults = depths;
+                }
+            }
+            _ => unknown_key(diags, kv, "model_axes", &KEYS),
+        }
+    }
+    axes
+}
+
+/// Resolve an `accuracy { PE = PERCENT, ... }` block: PE keys get
+/// "did you mean" suggestions against [`PE_KEYS`]; values must be
+/// percentages in (0, 100]. Entries return in [`PeType::ALL`] order so
+/// the canonical rendering is deterministic.
+fn resolve_accuracy_block(
+    block: &AccuracyBlock,
+    diags: &mut Diagnostics,
+) -> Vec<(PeType, f64)> {
+    let mut declared: Vec<(PeType, f64)> = Vec::new();
+    let mut seen = BTreeSet::new();
+    for kv in &block.entries {
+        if !note_key(diags, &mut seen, kv) {
+            continue;
+        }
+        let key = kv.key.node.as_str();
+        let Some(pe) = PeType::parse(key) else {
+            let help = did_you_mean(key, PE_KEYS)
+                .map(|s| format!("did you mean '{s}'?"))
+                .unwrap_or_else(|| format!("precisions are: {}", name_list(PE_KEYS)));
+            diags.error_help(
+                kv.key.span,
+                format!("unknown precision '{key}' in accuracy block"),
+                help,
+            );
+            continue;
+        };
+        let Some(top1) = expect_pos_num(diags, &kv.value, "accuracy") else { continue };
+        if top1 > 100.0 {
+            diags.error(
+                kv.value.span,
+                format!("accuracy must be a top-1 percentage (0, 100], found {}", fmt_num(top1)),
+            );
+            continue;
+        }
+        declared.push((pe, top1));
+    }
+    declared.sort_by_key(|(pe, _)| PeType::ALL.iter().position(|p| p == pe));
+    declared
 }
 
 fn resolve_spad(value: &Value, diags: &mut Diagnostics) -> Option<ScratchpadCfg> {
@@ -1438,13 +1598,21 @@ fn resolve_model_block(
     block: &ModelBlock,
     default_dataset: Dataset,
     diags: &mut Diagnostics,
-) -> Option<Model> {
+) -> Option<(Model, Vec<(PeType, f64)>)> {
     let before = diags.error_count();
-    // Split the statements: `dataset = ...` vs layer statements.
+    // Split the statements: `dataset = ...` vs accuracy vs layers.
     let mut dataset: Option<(Dataset, Span)> = None;
     let mut layers: Vec<&LayerStmt> = Vec::new();
+    let mut declared: Option<Vec<(PeType, f64)>> = None;
     for stmt in &block.stmts {
         match stmt {
+            ModelStmt::Accuracy(accuracy) => {
+                if declared.is_some() {
+                    diags.error(accuracy.keyword, "duplicate 'accuracy' block");
+                    continue;
+                }
+                declared = Some(resolve_accuracy_block(accuracy, diags));
+            }
             ModelStmt::KeyValue(kv) => match kv.key.node.as_str() {
                 "dataset" => {
                     if dataset.is_some() {
@@ -1468,11 +1636,21 @@ fn resolve_model_block(
                         }
                     }
                 }
+                "accuracy" => {
+                    diags.error_help(
+                        kv.key.span,
+                        "'accuracy' is a block, not a key",
+                        "write 'accuracy { int16 = 91.2, lightpe1 = 90.1 }' with one entry \
+                         per precision",
+                    );
+                }
                 other => {
-                    let help = did_you_mean(other, ["dataset"])
+                    let help = did_you_mean(other, ["dataset", "accuracy"])
                         .map(|s| format!("did you mean '{s}'?"))
                         .unwrap_or_else(|| {
-                            "model blocks take 'dataset = ...' and layer statements".into()
+                            "model blocks take 'dataset = ...', an 'accuracy { ... }' block, \
+                             and layer statements"
+                                .into()
                         });
                     diags.error_help(
                         kv.key.span,
@@ -1590,5 +1768,5 @@ fn resolve_model_block(
             Model { name: block.name.node.clone(), dataset: model_dataset, layers: built }
         }
     };
-    (diags.error_count() == before).then_some(model)
+    (diags.error_count() == before).then_some((model, declared.unwrap_or_default()))
 }

@@ -1,14 +1,15 @@
 //! Cross-module tests for the unified `Explorer` API and the lazy
-//! `SweepSpec` iteration underneath it: property tests that the lazy
-//! cross-product matches an eager golden reference, equivalence of
-//! `Explorer::run` with the serial path and the legacy coordinator,
-//! typed-error behavior for baseline-free spaces, and the differential
-//! persistence guarantees (warm cache ≡ cold run, resumed checkpoint ≡
-//! uninterrupted run, bit-for-bit).
+//! `SweepSpec`/`DesignSpace` iteration underneath it: property tests
+//! that the lazy cross-product matches an eager golden reference,
+//! equivalence of `Explorer::run` with the serial path, typed-error
+//! behavior for baseline-free spaces, joint hardware × model campaigns
+//! (end-to-end run, byte-identical resume, per-family frontiers), and
+//! the differential persistence guarantees (warm cache ≡ cold run,
+//! resumed checkpoint ≡ uninterrupted run, bit-for-bit).
 
 use std::sync::{Arc, Mutex};
 
-use qadam::arch::{AcceleratorConfig, SweepSpec};
+use qadam::arch::{AcceleratorConfig, ModelAxes, SweepSpec};
 use qadam::dnn::{model_for, Dataset, ModelKind};
 use qadam::dse;
 use qadam::explore::{Explorer, PointCache};
@@ -112,28 +113,86 @@ fn explorer_run_matches_serial_evaluate() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn explorer_run_reproduces_legacy_campaign_bit_for_bit() {
-    let spec = SweepSpec::tiny();
-    let legacy = qadam::coordinator::Coordinator::new(3, 7).campaign(&spec, Dataset::Cifar10);
-    let new = Explorer::over(spec)
-        .dataset(Dataset::Cifar10)
-        .workers(3)
+fn joint_campaign_runs_end_to_end_and_resumes_byte_identically() {
+    // A joint hardware × model campaign: 2 widths × 2 depths over the
+    // tiny sweep, checkpointed, killed, and resumed — the acceptance
+    // path of the co-exploration refactor.
+    let dir = std::env::temp_dir().join(format!("qadam_joint_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("joint.journal");
+    let axes = ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1, 2] };
+    let build = || {
+        Explorer::over(SweepSpec::tiny())
+            .model(model_for(ModelKind::ResNet20, Dataset::Cifar10))
+            .model_axes(axes.clone())
+            .workers(3)
+            .seed(7)
+    };
+    let uninterrupted = build().run().unwrap();
+    let reference = uninterrupted.to_json().to_string_pretty();
+    // One space per variant, all four variants of the base family.
+    assert_eq!(uninterrupted.spaces.len(), 4);
+    assert_eq!(uninterrupted.stats.design_points, 4 * SweepSpec::tiny().len());
+    assert!(uninterrupted.has_model_variants());
+    // Joint databases claim schema v4 so pre-joint readers reject them
+    // cleanly instead of misreading variants as independent models.
+    let rendered = uninterrupted.to_json().to_string_canonical();
+    assert!(rendered.contains("\"schema\":4"), "joint db must claim v4");
+    let parsed = qadam::explore::EvalDatabase::from_json(
+        &qadam::util::json::Json::parse(&rendered).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(parsed.spaces, uninterrupted.spaces, "v4 db must round-trip");
+
+    // Checkpointed run matches; then simulate a kill after a few points.
+    let full = build().checkpoint(&journal, 1).run().unwrap();
+    assert_eq!(full.to_json().to_string_pretty(), reference);
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let lines: Vec<&str> = text.split_inclusive('\n').collect();
+    assert!(lines.len() > 5, "joint campaign must journal several points");
+    let mut partial: String = lines[..5].concat();
+    partial.push_str("{\"evals\":[{\"area_m"); // torn write
+    std::fs::write(&journal, &partial).unwrap();
+    let resumed = build().checkpoint(&journal, 2).run().unwrap();
+    assert_eq!(
+        resumed.to_json().to_string_pretty(),
+        reference,
+        "joint resume must be byte-identical to the uninterrupted run"
+    );
+
+    // Resuming under different model axes is rejected by name.
+    let err = Explorer::over(SweepSpec::tiny())
+        .model(model_for(ModelKind::ResNet20, Dataset::Cifar10))
+        .model_axes(ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1] })
+        .workers(2)
         .seed(7)
+        .checkpoint(&journal, 2)
+        .run()
+        .unwrap_err();
+    assert_eq!(err.kind(), "invalid_config");
+    assert!(err.to_string().contains("model axes"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn joint_frontier_accumulates_all_variants_per_base_family() {
+    use qadam::pareto::CampaignFrontier;
+    let spec = SweepSpec::tiny();
+    let axes = ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1] };
+    let frontier = Arc::new(Mutex::new(CampaignFrontier::new()));
+    Explorer::over(spec.clone())
+        .model(model_for(ModelKind::ResNet20, Dataset::Cifar10))
+        .model_axes(axes)
+        .workers(2)
+        .seed(7)
+        .frontier(frontier.clone())
         .run()
         .unwrap();
-    assert_eq!(legacy.spaces.len(), new.spaces.len());
-    for (a, b) in legacy.spaces.iter().zip(&new.spaces) {
-        assert_eq!(a.model_name, b.model_name);
-        assert_eq!(a.evals.len(), b.evals.len());
-        for (x, y) in a.evals.iter().zip(&b.evals) {
-            assert_eq!(x.config.id(), y.config.id());
-            assert_eq!(x.perf_per_area, y.perf_per_area);
-            assert_eq!(x.energy_uj, y.energy_uj);
-            assert_eq!(x.dram_energy_uj, y.dram_energy_uj);
-            assert_eq!(x.utilization, y.utilization);
-        }
-    }
+    let guard = frontier.lock().unwrap();
+    // One front per *base* model, offered every joint point.
+    assert_eq!(guard.models().len(), 1);
+    assert_eq!(guard.models()[0].front().offered(), 2 * spec.len());
 }
 
 #[test]

@@ -8,7 +8,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use qadam::arch::SweepSpec;
+use qadam::arch::{DesignSpace, SweepSpec};
 use qadam::dnn::{model_for, models_for, Dataset, ModelKind};
 use qadam::dse::{self, Evaluation, Orientation};
 use qadam::explore::{lock_shared, Explorer};
@@ -114,14 +114,15 @@ fn prop_random_sample_front_is_subset_dominated_view_of_exhaustive() {
         evals.iter().map(|e| vec![e.perf_per_area, e.energy_uj]).collect();
     let exhaustive_front: Vec<usize> = dse::pareto_front(&points, &ORIENT_2D);
     let models = vec![model_for(ModelKind::ResNet20, Dataset::Cifar10)];
+    let space = DesignSpace::from(spec.clone());
     let gen = pair(usize_in(1, points.len() - 1), usize_in(0, 10_000));
     check_with(&Config { cases: 64, ..Default::default() }, &gen, |&(n, seed)| {
         let ctx = StrategyContext {
-            spec: &spec,
+            space: &space,
             models: &models,
             seed: 7,
             shard: (0, 1),
-            positions: spec.len(),
+            positions: space.len(),
         };
         let positions = match RandomSample { n, seed: seed as u64 }.select(&ctx).unwrap() {
             Selection::All => (0..spec.len()).collect::<Vec<_>>(),
@@ -146,13 +147,14 @@ fn prop_random_sample_front_is_subset_dominated_view_of_exhaustive() {
 #[test]
 fn halving_front_is_dominated_by_exhaustive_front() {
     let spec = SweepSpec::default();
+    let space = DesignSpace::from(spec.clone());
     let models = models_for(Dataset::Cifar10);
     let ctx = StrategyContext {
-        spec: &spec,
+        space: &space,
         models: &models,
         seed: 7,
         shard: (0, 1),
-        positions: spec.len(),
+        positions: space.len(),
     };
     let Selection::Subset(positions) =
         SuccessiveHalving { keep: 12, rounds: 3 }.select(&ctx).unwrap()
@@ -294,12 +296,13 @@ fn strategy_walk_matches_manual_selection() {
     let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
     let strategy = RandomSample { n: 5, seed: 21 };
     let models = vec![model.clone()];
+    let space = DesignSpace::from(spec.clone());
     let ctx = StrategyContext {
-        spec: &spec,
+        space: &space,
         models: &models,
         seed: 7,
         shard: (0, 1),
-        positions: spec.len(),
+        positions: space.len(),
     };
     let Selection::Subset(positions) = strategy.select(&ctx).unwrap() else {
         panic!("expected a subset")

@@ -209,13 +209,18 @@ fn corrupt_database_files_yield_typed_errors() {
     let cache_file = dir.join("cache.json");
     PointCache::new().save(&cache_file).unwrap();
     assert_eq!(EvalDatabase::load(&cache_file).unwrap_err().kind(), "parse_error");
-    // Future schema version → ParseError.
+    // Future schema version → ParseError. (Databases without joint
+    // content emit the base version; anything past SCHEMA_VERSION must
+    // be rejected.)
     let future = dir.join("future.json");
-    let schema_field = format!("\"schema\": {}", qadam::explore::SCHEMA_VERSION);
+    let schema_field = format!("\"schema\": {}", qadam::explore::BASE_SCHEMA_VERSION);
     let replaced = text.replacen(&schema_field, "\"schema\": 99", 1);
     assert_ne!(replaced, text, "schema envelope must be present to corrupt");
     fs::write(&future, replaced).unwrap();
     assert_eq!(EvalDatabase::load(&future).unwrap_err().kind(), "parse_error");
+    // A pre-joint (v3) document parses under this build.
+    assert!(text.contains(&schema_field), "hardware-only db must emit the base schema");
+    assert!(EvalDatabase::load(&full).is_ok());
     let _ = fs::remove_dir_all(&dir);
 }
 

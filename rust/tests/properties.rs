@@ -8,12 +8,17 @@
 //! * synthesis: positivity, monotone area in every size knob;
 //! * Pareto: front members are mutually non-dominating and dominate the
 //!   rest; normalization keeps the baseline at 1.0;
-//! * regression: prediction exactness on polynomial ground truth.
+//! * regression: prediction exactness on polynomial ground truth;
+//! * joint design spaces: lazy iteration ≡ eager cross-product, exact
+//!   shard partition, scaling-sensitive cache keys, and hardware-only
+//!   campaigns bit-identical to the pre-joint pipeline (the `joint`
+//!   test-name prefix is the CI golden-job filter).
 
-use qadam::arch::{AcceleratorConfig, ScratchpadCfg};
+use qadam::arch::{AcceleratorConfig, DesignSpace, ModelAxes, ScratchpadCfg, SweepSpec};
 use qadam::dataflow::map_layer_rs;
-use qadam::dnn::Layer;
+use qadam::dnn::{model_for, scale_model, Dataset, Layer, ModelKind};
 use qadam::dse::{dominates, pareto_front, Orientation};
+use qadam::explore::{point_key, Explorer};
 use qadam::quant::{AffineQuantizer, PeType, Po2Quantizer};
 use qadam::synth::synthesize_clean;
 use qadam::util::prop::{check, check_with, f64_in, pair, usize_in, vec_of, Config};
@@ -259,6 +264,162 @@ fn prop_json_roundtrip_arbitrary_configs() {
         let parsed = qadam::util::json::Json::parse(&json).unwrap();
         AcceleratorConfig::from_json(&parsed).unwrap() == config
     });
+}
+
+// --------------------------------------------------- joint design spaces
+
+/// A randomized joint space: truncated default hardware axes × model
+/// axes drawn from fixed pools (exact-float widths so equality checks
+/// are sound).
+fn random_joint_space(
+    npe: usize,
+    ndims: usize,
+    nwidth: usize,
+    ndepth: usize,
+) -> DesignSpace {
+    let d = SweepSpec::default();
+    let hw = SweepSpec {
+        pe_types: d.pe_types[..npe.clamp(1, d.pe_types.len())].to_vec(),
+        array_dims: d.array_dims[..ndims.clamp(1, d.array_dims.len())].to_vec(),
+        glb_kib: d.glb_kib[..2].to_vec(),
+        spads: d.spads[..1].to_vec(),
+        dram_bw_gbps: d.dram_bw_gbps[..1].to_vec(),
+        clock_ghz: d.clock_ghz.clone(),
+    };
+    const WIDTHS: [f64; 4] = [0.25, 0.5, 1.0, 2.0];
+    const DEPTHS: [usize; 3] = [1, 2, 3];
+    let model = ModelAxes {
+        width_mults: WIDTHS[..nwidth.clamp(1, WIDTHS.len())].to_vec(),
+        depth_mults: DEPTHS[..ndepth.clamp(1, DEPTHS.len())].to_vec(),
+    };
+    DesignSpace::new(hw, model)
+}
+
+#[test]
+fn prop_joint_lazy_iteration_matches_eager_cross_product() {
+    let gen = pair(pair(usize_in(1, 4), usize_in(1, 5)), pair(usize_in(1, 4), usize_in(1, 3)));
+    check_with(
+        &Config { cases: 48, ..Default::default() },
+        &gen,
+        |&((npe, ndims), (nwidth, ndepth))| {
+            let space = random_joint_space(npe, ndims, nwidth, ndepth);
+            // Eager golden reference: variants outermost (width before
+            // depth), hardware cross-product order within each block.
+            let mut golden = Vec::with_capacity(space.len());
+            for &width in &space.model.width_mults {
+                for &depth in &space.model.depth_mults {
+                    for config in space.hw.iter() {
+                        golden.push((width, depth, config));
+                    }
+                }
+            }
+            if golden.len() != space.len() {
+                return false;
+            }
+            space.iter().zip(&golden).all(|(point, (width, depth, config))| {
+                point.variant.width == *width
+                    && point.variant.depth == *depth
+                    && point.config == *config
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_joint_shard_partition_is_exact() {
+    let gen = pair(pair(usize_in(1, 3), usize_in(1, 4)), pair(usize_in(1, 3), usize_in(1, 7)));
+    check_with(
+        &Config { cases: 48, ..Default::default() },
+        &gen,
+        |&((npe, nwidth), (ndepth, num_shards))| {
+            let space = random_joint_space(npe, 2, nwidth, ndepth);
+            // Every joint index appears in exactly one shard, in order.
+            let mut recombined: Vec<usize> = Vec::new();
+            for shard in 0..num_shards {
+                let mut last: Option<usize> = None;
+                for (pos, point) in space.shard_iter(shard, num_shards).enumerate() {
+                    let index = shard + pos * num_shards;
+                    if space.get(index) != Some(point.clone()) {
+                        return false;
+                    }
+                    if let Some(prev) = last {
+                        if index <= prev {
+                            return false;
+                        }
+                    }
+                    last = Some(index);
+                    recombined.push(index);
+                }
+            }
+            recombined.sort_unstable();
+            recombined == (0..space.len()).collect::<Vec<_>>()
+        },
+    );
+}
+
+#[test]
+fn prop_joint_scaling_changes_point_cache_key() {
+    // Width/depth scaling must reach the content-addressed cache key —
+    // two variants of the same base model can never alias.
+    const WIDTHS: [f64; 4] = [0.25, 0.5, 1.0, 2.0];
+    const DEPTHS: [usize; 3] = [1, 2, 3];
+    let base = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    let config = AcceleratorConfig::default();
+    let gen = pair(pair(usize_in(0, 3), usize_in(0, 2)), pair(usize_in(0, 3), usize_in(0, 2)));
+    check_with(
+        &Config { cases: 64, ..Default::default() },
+        &gen,
+        |&((wa, da), (wb, db))| {
+            let a = scale_model(&base, WIDTHS[wa], DEPTHS[da]);
+            let b = scale_model(&base, WIDTHS[wb], DEPTHS[db]);
+            let key_a = point_key(&config, 7, std::slice::from_ref(&a));
+            let key_b = point_key(&config, 7, std::slice::from_ref(&b));
+            if (wa, da) == (wb, db) {
+                key_a == key_b
+            } else {
+                key_a != key_b
+            }
+        },
+    );
+}
+
+#[test]
+fn joint_trivial_axes_campaign_is_bit_identical_to_hardware_only() {
+    // The backward-compatibility acceptance property: a campaign with
+    // explicit trivial model axes produces byte-identical artifacts to
+    // the hardware-only pipeline (whose numerics the golden fixtures
+    // pin), and their checkpoint journals are interchangeable.
+    let dir = std::env::temp_dir().join(format!("qadam_joint_compat_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("compat.journal");
+    let hardware_only = Explorer::over(SweepSpec::tiny())
+        .dataset(Dataset::Cifar10)
+        .workers(2)
+        .seed(7)
+        .checkpoint(&journal, 1)
+        .run()
+        .unwrap();
+    // Resume the hardware-only journal from a trivially-joint campaign:
+    // accepted, full replay, identical bytes.
+    let joint = Explorer::over(DesignSpace::new(SweepSpec::tiny(), ModelAxes::default()))
+        .dataset(Dataset::Cifar10)
+        .workers(2)
+        .seed(7)
+        .checkpoint(&journal, 1)
+        .run()
+        .unwrap();
+    assert_eq!(
+        hardware_only.to_json().to_string_pretty(),
+        joint.to_json().to_string_pretty(),
+        "trivial axes must keep artifacts byte-identical"
+    );
+    // The journal header carries no joint-space fields at all.
+    let header = std::fs::read_to_string(&journal).unwrap();
+    let header_line = header.lines().next().unwrap();
+    assert!(!header_line.contains("model_axes"), "{header_line}");
+    assert!(header_line.contains("\"schema\":3"), "{header_line}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 // -------------------------------------------------- json adversarial input

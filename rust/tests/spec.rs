@@ -117,6 +117,16 @@ fn random_spec_source(seed: u64) -> String {
         8 + rng.below(32),
         [8, 16, 32][rng.below(3) as usize],
     ));
+    if rng.below(2) == 1 {
+        let widths = ["0.25", "0.5", "1", "1.5"];
+        let wcount = 1 + rng.below(4) as usize;
+        let dcount = 1 + rng.below(3) as usize;
+        out.push_str(&format!(
+            "model_axes {{\n  width = [{}]\n  depth = [{}]\n}}\n",
+            widths[..wcount].join(", "),
+            ["1", "2", "3"][..dcount].join(", "),
+        ));
+    }
     match rng.below(3) {
         0 => {}
         1 => out.push_str(&format!("strategy = random({})\n", 1 + rng.below(8))),
@@ -306,6 +316,120 @@ fn custom_and_like_models_flow_through_a_campaign() {
     }
     assert_eq!(outcome.db.spaces[1].model_name, "tiny");
     assert_eq!(outcome.db.spaces[2].model_name, "narrow");
+}
+
+// ------------------------------------------------ joint model axes & accuracy
+
+/// A `model_axes` block resolves into the campaign, changes the
+/// fingerprint, and survives the canonical fixed point.
+#[test]
+fn model_axes_resolve_and_pin_identity() {
+    let source = "sweep {\n  pe_type = [int16]\n  array = [8x8]\n}\n\
+                  model_axes {\n  width = [0.5, 1]\n  depth = [1, 2]\n}\n";
+    let campaign = spec::compile(source, "axes.qsl").unwrap();
+    assert_eq!(campaign.model_axes.width_mults, vec![0.5, 1.0]);
+    assert_eq!(campaign.model_axes.depth_mults, vec![1, 2]);
+    // Identity: axes move the fingerprint.
+    let base = spec::compile("sweep {\n  pe_type = [int16]\n  array = [8x8]\n}\n", "b.qsl")
+        .unwrap();
+    assert_ne!(campaign.fingerprint(), base.fingerprint());
+    // Canonical fixed point with axes present.
+    let canonical = campaign.canonical();
+    assert!(canonical.contains("model_axes {"), "{canonical}");
+    let reparsed = spec::compile(&canonical, "axes.canonical.qsl").unwrap();
+    assert_eq!(reparsed.canonical(), canonical);
+    assert_eq!(reparsed.fingerprint(), campaign.fingerprint());
+    // Explicit trivial axes are the base campaign (canonical omits them).
+    let trivial = spec::compile(
+        "sweep {\n  pe_type = [int16]\n  array = [8x8]\n}\n\
+         model_axes {\n  width = [1]\n  depth = [1]\n}\n",
+        "t.qsl",
+    )
+    .unwrap();
+    assert_eq!(trivial.fingerprint(), base.fingerprint());
+    assert!(!trivial.canonical().contains("model_axes"), "{}", trivial.canonical());
+}
+
+/// Bad model_axes values are all reported with spans and suggestions.
+#[test]
+fn golden_diag_model_axes() {
+    let source = "model_axes {\n  widht = [0.5]\n  width = [0, 0.5, 0.5]\n  depth = [0, 2, 2]\n}\n";
+    assert_snapshot("spec_diag_model_axes.txt", &rendered_diags(source, "bad_axes.qsl"));
+}
+
+/// A joint spec campaign executes end to end: spaces per scaled-model
+/// variant, and `qadam run` ≡ the flag-built path, byte for byte.
+#[test]
+fn joint_spec_campaign_executes_and_matches_flag_path() {
+    let dir = temp_dir("joint");
+    let source = "campaign {\n  seed = 9\n}\n\
+        sweep {\n  pe_type = [int16, lightpe1]\n  array = [8x8, 16x16]\n  glb_kib = [128]\n  \
+        spad = [spad(12, 224, 24)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+        model_axes {\n  width = [0.5, 1]\n  depth = [1]\n}\n\
+        workload {\n  dataset = cifar10\n  models = [resnet20]\n}\n";
+    let mut from_spec = spec::compile(source, "joint.qsl").unwrap();
+    from_spec.persist.db = Some(dir.join("spec_db.json"));
+    let outcome = from_spec.execute().unwrap();
+    assert_eq!(outcome.db.spaces.len(), 2);
+    assert_eq!(outcome.db.spaces[0].model_name, "ResNet-20@w0.5d1");
+    assert_eq!(outcome.db.spaces[1].model_name, "ResNet-20");
+    assert_eq!(outcome.db.stats.design_points, 2 * SweepSpec::tiny().len());
+    // The flag path (`qadam dse --width-mults 0.5,1.0`) builds the same
+    // campaign and must save identical bytes.
+    let mut from_flags = ResolvedCampaign::new(
+        SweepSpec::tiny(),
+        Dataset::Cifar10,
+        vec![WorkloadModel::Zoo(ModelKind::ResNet20)],
+        9,
+        0,
+        (0, 1),
+        StrategyChoice::Exhaustive,
+        PersistPlan { db: Some(dir.join("flag_db.json")), ..PersistPlan::new() },
+    );
+    from_flags.model_axes =
+        qadam::arch::ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1] };
+    from_flags.execute().unwrap();
+    assert_eq!(from_spec.fingerprint(), from_flags.fingerprint());
+    assert_eq!(
+        fs::read(dir.join("spec_db.json")).unwrap(),
+        fs::read(dir.join("flag_db.json")).unwrap(),
+        "spec and flag joint campaigns must save identical bytes"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Declared accuracy resolves, re-renders canonically, and reaches the
+/// accuracy book (variants inherit the base declaration).
+#[test]
+fn accuracy_blocks_resolve_into_the_book() {
+    let source = "workload {\n  models = [tiny]\n}\n\
+                  model tiny {\n  accuracy { int16 = 91.2, lightpe1 = 90.1 }\n  \
+                  fc head { in = 64, out = 10 }\n}\n";
+    let campaign = spec::compile(source, "acc.qsl").unwrap();
+    assert_eq!(campaign.accuracy.len(), 1);
+    let book = campaign.accuracy_book();
+    use qadam::quant::PeType;
+    assert_eq!(book.lookup("tiny", Dataset::Cifar10, PeType::Int16), Some(91.2));
+    assert_eq!(book.lookup("tiny@w0.5d2", Dataset::Cifar10, PeType::LightPe1), Some(90.1));
+    assert_eq!(book.lookup("tiny", Dataset::Cifar10, PeType::Fp32), None);
+    // Canonical keeps the block (full form) but not in the identity:
+    // editing accuracy must not invalidate a resume.
+    let canonical = campaign.canonical();
+    assert!(canonical.contains("accuracy { int16 = 91.2, lightpe1 = 90.1 }"), "{canonical}");
+    let reparsed = spec::compile(&canonical, "acc.canonical.qsl").unwrap();
+    assert_eq!(reparsed.canonical(), canonical);
+    let edited = source.replace("91.2", "92.5");
+    let other = spec::compile(&edited, "acc2.qsl").unwrap();
+    assert_eq!(campaign.fingerprint(), other.fingerprint());
+}
+
+/// Unknown precision keys in accuracy blocks get did-you-mean help.
+#[test]
+fn golden_diag_accuracy_typos() {
+    let source = "workload {\n  models = [tiny]\n}\n\
+                  model tiny {\n  accuracy { int61 = 91.2, int16 = 150 }\n  \
+                  accuracy { fp32 = 93.0 }\n  fc head { in = 64, out = 10 }\n}\n";
+    assert_snapshot("spec_diag_accuracy.txt", &rendered_diags(source, "bad_accuracy.qsl"));
 }
 
 // ----------------------------------------------------- shipped spec files
