@@ -169,6 +169,8 @@ impl SweepSpec {
     ///
     /// # Panics
     /// If `num_shards == 0` or `shard >= num_shards`.
+    // `shard + pos * num_shards < len` by the `count` arithmetic below.
+    #[allow(clippy::expect_used)]
     pub fn shard_iter(
         &self,
         shard: usize,
@@ -658,6 +660,9 @@ impl DesignSpace {
     }
 
     /// Lazy iterator over the joint space (O(1) memory).
+    // `index < len`, so every joint index decodes to a point (and the
+    // iterator must stay ExactSize, ruling out filter_map).
+    #[allow(clippy::expect_used)]
     pub fn iter(&self) -> impl ExactSizeIterator<Item = JointPoint> + '_ {
         (0..self.len()).map(move |index| self.get(index).expect("index within joint space"))
     }
@@ -669,6 +674,8 @@ impl DesignSpace {
     ///
     /// # Panics
     /// If `num_shards == 0` or `shard >= num_shards`.
+    // `shard + pos * num_shards < len` by the `count` arithmetic below.
+    #[allow(clippy::expect_used)]
     pub fn shard_iter(
         &self,
         shard: usize,

@@ -37,14 +37,25 @@ where
                     break;
                 }
                 let result = f_ref(&jobs_ref[index]);
-                *slots_ref[index].lock().unwrap() = Some(result);
+                // Poisoning is recoverable here: the slot either holds the
+                // completed result or is still None, and a panicking
+                // sibling re-raises at scope exit anyway.
+                *slots_ref[index].lock().unwrap_or_else(|e| e.into_inner()) = Some(result);
             });
         }
     });
-    slots
+    // The scope re-raises any worker panic before this point, so every
+    // slot was filled by the cursor walk above.
+    #[allow(clippy::expect_used)]
+    let results = slots
         .into_iter()
-        .map(|slot| slot.into_inner().unwrap().expect("worker must fill its slot"))
-        .collect()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap_or_else(|e| e.into_inner())
+                .expect("worker must fill its slot")
+        })
+        .collect();
+    results
 }
 
 /// Progress counter shared between the leader and workers.

@@ -321,8 +321,8 @@ pub fn scale_model(base: &Model, width: f64, depth: usize) -> Model {
 /// of them score and evaluate *definitionally* identical workloads.
 pub fn lower_workload(axes: &crate::arch::ModelAxes, models: &[Model]) -> Vec<Vec<Model>> {
     (0..axes.len())
-        .map(|v| {
-            let variant = axes.variant(v).expect("variant index in range");
+        .filter_map(|v| axes.variant(v)) // v < len, so every index decodes
+        .map(|variant| {
             models.iter().map(|m| scale_model(m, variant.width, variant.depth)).collect()
         })
         .collect()
@@ -395,8 +395,9 @@ fn resnet_cifar(depth: usize, dataset: Dataset) -> Model {
         for block in 0..n {
             let stride = if stage_idx > 0 && block == 0 { 2 } else { 1 };
             let prefix = format!("s{}b{}", stage_idx + 1, block + 1);
-            layers.push(Layer::conv(&format!("{prefix}_conv1"), hw, in_c, width, 3, stride, 1));
-            let out_hw = layers.last().unwrap().out_hw();
+            let conv1 = Layer::conv(&format!("{prefix}_conv1"), hw, in_c, width, 3, stride, 1);
+            let out_hw = conv1.out_hw();
+            layers.push(conv1);
             layers.push(Layer::conv(&format!("{prefix}_conv2"), out_hw, width, width, 3, 1, 1));
             if stride == 2 || in_c != width {
                 // Projection shortcut (1×1, stride 2).
@@ -424,8 +425,9 @@ fn resnet34(dataset: Dataset) -> Model {
         for block in 0..blocks {
             let stride = if stage_idx > 0 && block == 0 { 2 } else { 1 };
             let prefix = format!("s{}b{}", stage_idx + 1, block + 1);
-            layers.push(Layer::conv(&format!("{prefix}_conv1"), hw, in_c, width, 3, stride, 1));
-            let out_hw = layers.last().unwrap().out_hw();
+            let conv1 = Layer::conv(&format!("{prefix}_conv1"), hw, in_c, width, 3, stride, 1);
+            let out_hw = conv1.out_hw();
+            layers.push(conv1);
             layers.push(Layer::conv(&format!("{prefix}_conv2"), out_hw, width, width, 3, 1, 1));
             if stride == 2 || in_c != width {
                 layers.push(Layer::conv(&format!("{prefix}_proj"), hw, in_c, width, 1, stride, 0));
@@ -454,8 +456,9 @@ fn resnet50(dataset: Dataset) -> Model {
             let stride = if stage_idx > 0 && block == 0 { 2 } else { 1 };
             let prefix = format!("s{}b{}", stage_idx + 1, block + 1);
             layers.push(Layer::conv(&format!("{prefix}_conv1"), hw, in_c, width, 1, 1, 0));
-            layers.push(Layer::conv(&format!("{prefix}_conv2"), hw, width, width, 3, stride, 1));
-            let out_hw = layers.last().unwrap().out_hw();
+            let conv2 = Layer::conv(&format!("{prefix}_conv2"), hw, width, width, 3, stride, 1);
+            let out_hw = conv2.out_hw();
+            layers.push(conv2);
             layers.push(Layer::conv(&format!("{prefix}_conv3"), out_hw, width, out_c, 1, 1, 0));
             if stride == 2 || in_c != out_c {
                 layers.push(Layer::conv(&format!("{prefix}_proj"), hw, in_c, out_c, 1, stride, 0));

@@ -32,7 +32,7 @@ pub fn hypervolume_2d(
         return 0.0;
     }
     // Staircase sweep: descending x, track best y seen.
-    mapped.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    mapped.sort_by(|a, b| b.0.total_cmp(&a.0));
     let mut volume = 0.0;
     let mut prev_x = mapped[0].0;
     let mut best_y = 0.0f64;

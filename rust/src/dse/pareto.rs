@@ -53,7 +53,7 @@ pub fn pareto_front_reference(points: &[Vec<f64>], orientations: &[Orientation])
                 .any(|(j, other)| j != i && dominates(other, &points[i], orientations))
         })
         .collect();
-    front.sort_by(|&a, &b| points[a][0].partial_cmp(&points[b][0]).unwrap());
+    front.sort_by(|&a, &b| points[a][0].total_cmp(&points[b][0]));
     front
 }
 

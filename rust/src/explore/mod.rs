@@ -320,6 +320,8 @@ impl Explorer {
         // dataset); the full lowering happens once, inside stream().
         let mut spaces: Vec<ModelSpace> = (0..axes.len())
             .flat_map(|v| {
+                // v < axes.len(), so the index always decodes.
+                #[allow(clippy::expect_used)]
                 let variant = axes.variant(v).expect("variant index in range");
                 self.models.iter().map(move |m| ModelSpace {
                     model_name: crate::dnn::variant_model_name(
@@ -512,6 +514,9 @@ impl Explorer {
                         std::thread::park_timeout(Duration::from_millis(1));
                     }
                     let index = index_for_ref(pos);
+                    // Shard positions are validated against the space size
+                    // before the workers start.
+                    #[allow(clippy::expect_used)]
                     let point =
                         space.get(index).expect("shard index within joint cross-product");
                     let models = &variant_models_ref[space.variant_index(index)];

@@ -29,7 +29,13 @@
 //!
 //! See `DESIGN.md` for the module inventory and the per-experiment index.
 
+#![forbid(unsafe_code)]
 #![warn(missing_docs)]
+// The library-code panic wall (DESIGN.md "Static analysis & lint"):
+// fallible paths return the typed `Error`; the few invariant-backed
+// exceptions carry a scoped `#[allow]` with the invariant spelled out.
+// Test code is exempt via clippy.toml's `allow-*-in-tests` keys.
+#![warn(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
 
 pub mod error;
 pub mod util;

@@ -9,6 +9,8 @@
 //! [`Explorer`](qadam::explore::Explorer) API; failures surface as
 //! typed [`qadam::Error`]s.
 
+#![forbid(unsafe_code)]
+
 use std::path::Path;
 
 use qadam::arch::{AcceleratorConfig, SweepSpec};
@@ -24,10 +26,12 @@ use qadam::report;
 use qadam::rtl;
 use qadam::runtime::{QatDriver, Runtime};
 use qadam::sim;
+use qadam::spec::lint::{self as spec_lint, LintOptions};
 use qadam::spec::{
     self, CampaignOutcome, PersistPlan, ResolvedCampaign, StrategyChoice, WorkloadModel,
 };
 use qadam::synth;
+use qadam::util::json::{num, obj, s, Json};
 use qadam::util::cli::{Command, Matches};
 use qadam::util::log::{self, Level};
 use qadam::util::rng::Pcg64;
@@ -79,10 +83,21 @@ fn cli() -> Command {
                 .opt("every", "16", "provide persist.every when the spec omits it")
                 .opt("frontier", "", "provide persist.frontier when the spec omits it"),
         )
-        .sub(Command::new(
-            "validate",
-            "parse + semantically check a QSL spec; print the resolved campaign",
-        ))
+        .sub(
+            Command::new(
+                "validate",
+                "parse + semantically check a QSL spec; print the resolved campaign",
+            )
+            .flag("lint", "also run the static-analysis pass (see 'qadam lint')")
+            .opt("deny", "", "lint rules to escalate to errors (codes/names, or 'all')")
+            .opt("allow", "", "lint rules to suppress (codes/names, or 'all')"),
+        )
+        .sub(
+            Command::new("lint", "static analysis over QSL campaign specs (rules Q001...)")
+                .opt("deny", "", "rules to escalate to errors (codes/names, or 'all')")
+                .opt("allow", "", "rules to suppress (codes/names, or 'all')")
+                .opt("format", "text", "text|json"),
+        )
         .sub(
             Command::new("spec", "QSL spec-file utilities").sub(
                 Command::new("init", "emit a commented starter spec")
@@ -394,6 +409,51 @@ fn merge_flag_overrides(campaign: &mut ResolvedCampaign, matches: &Matches) -> R
     Ok(())
 }
 
+/// Lint spec files and print findings (rendered text, or one JSON
+/// document — a per-file object, batched when several files are given).
+/// Fails on unresolvable specs and on surviving deny-level findings, so
+/// `qadam lint --deny all` is a usable CI gate.
+fn lint_files(files: &[String], opts: &LintOptions, json_mode: bool) -> Result<()> {
+    let mut docs = Vec::new();
+    let mut denials = 0usize;
+    for file in files {
+        let source = std::fs::read_to_string(file)?;
+        let (campaign, diags, findings) = spec_lint::lint_source(&source, opts);
+        if campaign.is_none() {
+            // Not lintable at all: surface the resolver's diagnostics.
+            print!("{}", diags.render(&source, file));
+            return Err(Error::ParseError(format!(
+                "{file}: {} error(s); fix the spec before linting",
+                diags.error_count()
+            )));
+        }
+        denials += findings.iter().filter(|f| f.level == spec_lint::Level::Deny).count();
+        if json_mode {
+            docs.push(spec_lint::to_json(file, &source, &findings));
+        } else if findings.is_empty() {
+            println!("{file}: clean ({} rules)", spec::RULES.len());
+        } else {
+            print!("{}", spec_lint::render(&findings, &source, file));
+        }
+    }
+    if json_mode {
+        let doc = if docs.len() == 1 {
+            docs.remove(0)
+        } else {
+            obj(vec![
+                ("kind", s("qadam.lint-batch")),
+                ("schema", num(1.0)),
+                ("files", Json::Arr(docs)),
+            ])
+        };
+        println!("{}", doc.to_string_pretty());
+    }
+    if denials > 0 {
+        return Err(Error::InvalidConfig(format!("lint: {denials} deny-level finding(s)")));
+    }
+    Ok(())
+}
+
 /// The spec file named by the subcommand's positional argument.
 fn spec_path(matches: &Matches, usage: &str) -> Result<String> {
     matches
@@ -584,15 +644,35 @@ fn main() -> Result<()> {
             print_campaign_outcome(&campaign.execute()?)?;
         }
         "validate" => {
-            let file = spec_path(&matches, "qadam validate <campaign.qsl>")?;
+            let file = spec_path(&matches, "qadam validate <campaign.qsl> [--lint]")?;
             let source = std::fs::read_to_string(&file)?;
-            let (campaign, diags) = spec::check(&source);
+            let lint_opts = matches
+                .flag("lint")
+                .then(|| LintOptions::parse(matches.get_str("deny"), matches.get_str("allow")))
+                .transpose()?;
+            let (campaign, diags, findings) = match &lint_opts {
+                Some(opts) => spec_lint::lint_source(&source, opts),
+                None => {
+                    let (campaign, diags) = spec::check(&source);
+                    (campaign, diags, Vec::new())
+                }
+            };
             if !diags.is_empty() {
                 print!("{}", diags.render(&source, &file));
             }
             match campaign {
                 Some(campaign) => {
+                    if !findings.is_empty() {
+                        print!("{}", spec_lint::render(&findings, &source, &file));
+                    }
                     print!("{}", campaign.summary());
+                    let denials =
+                        findings.iter().filter(|f| f.level == spec_lint::Level::Deny).count();
+                    if denials > 0 {
+                        return Err(Error::InvalidConfig(format!(
+                            "{file}: {denials} deny-level lint finding(s)"
+                        )));
+                    }
                     println!("{file}: ok");
                 }
                 None => {
@@ -602,6 +682,26 @@ fn main() -> Result<()> {
                     )));
                 }
             }
+        }
+        "lint" => {
+            if matches.positional.is_empty() {
+                return Err(Error::InvalidConfig(
+                    "usage: qadam lint <campaign.qsl>... [--deny CODES|all] [--allow CODES|all] \
+                     [--format text|json]"
+                        .into(),
+                ));
+            }
+            let opts = LintOptions::parse(matches.get_str("deny"), matches.get_str("allow"))?;
+            let json_mode = match matches.get_str("format") {
+                "json" => true,
+                "text" => false,
+                other => {
+                    return Err(Error::InvalidConfig(format!(
+                        "bad --format '{other}' (expected text or json)"
+                    )));
+                }
+            };
+            lint_files(&matches.positional, &opts, json_mode)?;
         }
         "init" => {
             let out = matches.get_str("out");

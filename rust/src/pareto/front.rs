@@ -491,6 +491,8 @@ impl<const K: usize, P> ParetoFront<K, P> {
 impl<P> ParetoFront<2, P> {
     /// 2-D hypervolume relative to `reference` — see
     /// [`FrontCore::hypervolume_2d`].
+    // This impl is bound to exactly two axes, so the Option is always Some.
+    #[allow(clippy::expect_used)]
     pub fn hypervolume(&self, reference: (f64, f64)) -> f64 {
         self.core.hypervolume_2d(reference).expect("two-axis front")
     }

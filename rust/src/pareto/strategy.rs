@@ -54,6 +54,7 @@ impl StrategyContext<'_> {
     ///
     /// # Panics
     /// If `pos >= self.positions`.
+    #[allow(clippy::expect_used)] // the panic is this accessor's documented contract
     pub fn config_at(&self, pos: usize) -> AcceleratorConfig {
         let (shard, num_shards) = self.shard;
         self.space
@@ -66,6 +67,7 @@ impl StrategyContext<'_> {
     ///
     /// # Panics
     /// If `pos >= self.positions`.
+    #[allow(clippy::expect_used)] // the panic is this accessor's documented contract
     pub fn variant_at(&self, pos: usize) -> ModelVariant {
         let (shard, num_shards) = self.shard;
         self.space
@@ -99,11 +101,11 @@ impl Selection {
     /// bounds, non-empty.
     pub fn validate(&self, positions: usize) -> Result<()> {
         let Selection::Subset(subset) = self else { return Ok(()) };
-        if subset.is_empty() {
+        let Some(&last) = subset.last() else {
             return Err(Error::InvalidConfig("strategy selected no design points".into()));
-        }
+        };
         let ascending = subset.windows(2).all(|w| w[0] < w[1]);
-        if !ascending || *subset.last().expect("non-empty") >= positions {
+        if !ascending || last >= positions {
             return Err(Error::InvalidConfig(
                 "strategy selection must be strictly ascending shard positions \
                  within the design space"

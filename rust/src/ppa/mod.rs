@@ -55,9 +55,12 @@ impl PpaModel {
             models.push(model);
             reports.push(report);
         }
-        let perf = models.pop().unwrap();
-        let power = models.pop().unwrap();
-        let area = models.pop().unwrap();
+        let mut fitted = models.into_iter();
+        let (Some(area), Some(power), Some(perf)) =
+            (fitted.next(), fitted.next(), fitted.next())
+        else {
+            unreachable!("one model fitted per metric above")
+        };
         Self { pe: dataset.pe, area, power, perf, reports }
     }
 

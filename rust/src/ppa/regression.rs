@@ -91,6 +91,9 @@ impl PolyModel {
         let expanded: Vec<Vec<f64>> =
             xs.iter().map(|x| expand(&standardize(x, &scaler), degree)).collect();
         let design = Matrix::from_rows(&expanded);
+        // The ridge system (XᵀX + λI) is SPD for any λ > 0, so the
+        // Cholesky solve cannot fail on the lambdas this crate uses.
+        #[allow(clippy::expect_used)]
         let weights = ridge_fit(&design, ys, lambda)
             .expect("ridge normal equations must be SPD with lambda > 0");
         PolyModel { degree, lambda, scaler, weights }
@@ -152,10 +155,10 @@ pub fn kfold_select(
         selection_curve.push((degree, cv_rmse(xs, ys, degree, folds, seed)));
     }
     assert!(!selection_curve.is_empty(), "not enough samples for any degree");
-    let &(best_degree, best_rmse) = selection_curve
-        .iter()
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-        .unwrap();
+    // Non-empty by the assert above; NaN RMSEs order last under total_cmp.
+    #[allow(clippy::unwrap_used)]
+    let &(best_degree, best_rmse) =
+        selection_curve.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
     let model = PolyModel::fit(xs, ys, best_degree, 1e-6);
     let predictions = model.predict_all(xs);
     let report = FitReport {

@@ -120,6 +120,11 @@ impl std::fmt::Display for PeType {
 /// * `Int16`: plain integer product.
 /// * `LightPe1`: weight code is (sign, exponent) — one arithmetic shift.
 /// * `LightPe2`: weight code is (sign, e1, e2) — two shifts and an add.
+///
+/// # Panics
+/// If the weight encoding does not match the PE type — the quantizer
+/// only ever produces the matching encoding.
+#[allow(clippy::panic)]
 pub fn pe_multiply(pe: PeType, activation: i64, weight: QuantWeight) -> i64 {
     match (pe, weight) {
         (PeType::Int16, QuantWeight::Code(w)) => activation * w,

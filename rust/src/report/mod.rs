@@ -198,6 +198,8 @@ pub fn fig4_from_db(db: &EvalDatabase) -> Result<Figure> {
     for space in &db.spaces {
         let normalized = dse::normalize(&space.evals)?;
         for point in &normalized {
+            // Every PeType value is a member of PeType::ALL.
+            #[allow(clippy::unwrap_used)]
             let idx = PeType::ALL.iter().position(|&p| p == point.pe).unwrap();
             series[idx].points.push((point.norm_perf_per_area, point.norm_energy));
         }
@@ -391,6 +393,8 @@ fn pareto_figure_from_db(
                 format_sig(y, 3),
                 on_front.to_string(),
             ]);
+            // Every PeType value is a member of PeType::ALL.
+            #[allow(clippy::unwrap_used)]
             let series_idx = PeType::ALL.iter().position(|&p| p == pe).unwrap();
             series[series_idx].points.push((x, y));
         }

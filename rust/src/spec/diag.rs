@@ -123,6 +123,16 @@ impl Diagnostics {
         });
     }
 
+    /// Record a warning with a fix-it help line.
+    pub fn warn_help(&mut self, span: Span, message: impl Into<String>, help: impl Into<String>) {
+        self.diags.push(Diagnostic {
+            severity: Severity::Warning,
+            message: message.into(),
+            span,
+            help: Some(help.into()),
+        });
+    }
+
     /// All diagnostics in emission order.
     pub fn iter(&self) -> impl Iterator<Item = &Diagnostic> {
         self.diags.iter()
@@ -187,6 +197,14 @@ impl fmt::Display for Diagnostics {
         }
         Ok(())
     }
+}
+
+/// 1-based `(line, column)` of a byte offset in `source`, counting
+/// columns in characters — the same coordinates the rendered
+/// diagnostics print, exposed for machine-readable consumers (the
+/// `qadam lint --format json` output).
+pub fn locate(source: &str, offset: usize) -> (usize, usize) {
+    SourceLines::new(source).locate(source, offset)
 }
 
 /// Byte offsets of line starts, for O(log n) offset → (line, col) lookup.

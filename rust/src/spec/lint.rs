@@ -1,0 +1,1220 @@
+//! Static analysis over resolved campaigns — `qadam lint`.
+//!
+//! The resolver ([`super::resolve`]) rejects specs that are *invalid*;
+//! this pass flags specs that are valid but *mis-specified*: budgets
+//! that silently degrade to exhaustive walks, scratchpads too small for
+//! any swept layer, accuracy declarations that are never consulted,
+//! persist plans that will collide with on-disk artifacts at runtime.
+//! Every rule is purely static — no design point is ever evaluated —
+//! so linting a million-point campaign costs milliseconds.
+//!
+//! Rules live in a fixed [`RULES`] registry with stable codes (`Q001`…)
+//! and a default severity ([`Level`]); `--deny`/`--allow` selectors
+//! re-level or suppress them per run. Findings carry source spans
+//! resolved against the spec AST and render through the standard
+//! [`Diagnostics`] pipeline (file:line:col, excerpt, caret, help), or
+//! as a JSON document for CI via [`to_json`].
+//!
+//! ```
+//! use qadam::spec::lint::{self, LintOptions};
+//!
+//! let source = "sweep {\n  pe_type = [int16]\n  array = [8x8]\n}\n\
+//!               strategy = random(99)\n";
+//! let (campaign, diags, findings) = lint::lint_source(source, &LintOptions::default());
+//! assert!(campaign.is_some() && !diags.has_errors());
+//! // random(99) covers the whole 48-point space (the unset axes keep
+//! // their defaults): the sampling degrades to an exhaustive walk.
+//! assert_eq!(findings.len(), 1);
+//! assert_eq!(findings[0].code, "Q002");
+//! ```
+
+use std::collections::BTreeSet;
+
+use crate::arch::{DesignSpace, ModelVariant};
+use crate::dnn::{scale_model, Layer, LayerKind, Model};
+use crate::error::{Error, Result};
+use crate::explore::persist::CampaignManifest;
+use crate::util::json::{num, obj, s, Json};
+
+use super::ast::{Block, KeyValue, LayerStmt, ModelBlock, ModelStmt, Section, SpecFile, ValueKind};
+use super::diag::{locate, Diagnostics, Span};
+use super::resolve::{pe_key, ResolvedCampaign, StrategyChoice, WorkloadModel};
+
+/// Severity of a lint finding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Advisory: the campaign runs, but probably not as intended.
+    Warn,
+    /// The campaign is degenerate or will fail/collide at runtime;
+    /// `qadam lint` exits nonzero when any deny-level finding survives.
+    Deny,
+}
+
+impl Level {
+    /// Lowercase label used by selectors and the JSON output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::Warn => "warn",
+            Level::Deny => "deny",
+        }
+    }
+}
+
+/// One diagnostic produced by a lint rule, tagged with its rule code.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Stable rule code (`"Q001"` …) — safe to pin in CI configs.
+    pub code: &'static str,
+    /// Human-readable rule name (`"dead-axis-value"` …).
+    pub name: &'static str,
+    /// Effective severity after `--deny`/`--allow` overrides.
+    pub level: Level,
+    /// Source span the finding anchors to (`Span::at(0)` when the
+    /// construct was defaulted and has no spelling in the source).
+    pub span: Span,
+    /// What is mis-specified, phrased against the source text.
+    pub message: String,
+    /// Optional fix-it line.
+    pub help: Option<String>,
+}
+
+/// A rule's draft finding before the registry stamps code/name/level.
+struct Draft {
+    span: Span,
+    message: String,
+    help: Option<String>,
+    /// Rules that grade their own findings (e.g. [Q004]) override the
+    /// registry default here.
+    level: Option<Level>,
+}
+
+impl Draft {
+    fn new(span: Span, message: String, help: String) -> Self {
+        Self { span, message, help: Some(help), level: None }
+    }
+
+    fn leveled(span: Span, message: String, help: String, level: Level) -> Self {
+        Self { span, message, help: Some(help), level: Some(level) }
+    }
+}
+
+/// Everything a rule may inspect: the source text (for excerpts), the
+/// spanned AST (for locations), and the resolved campaign (for
+/// semantics). Rules never mutate and never evaluate design points.
+struct LintContext<'a> {
+    source: &'a str,
+    file: &'a SpecFile,
+    campaign: &'a ResolvedCampaign,
+}
+
+/// One entry of the static [`RULES`] registry.
+pub struct LintRule {
+    /// Stable code, `Q` + three digits, never reused.
+    pub code: &'static str,
+    /// Kebab-case rule name (an alias for the code in selectors).
+    pub name: &'static str,
+    /// One-line description (the DESIGN.md rule table mirrors these).
+    pub summary: &'static str,
+    /// Default severity, before `--deny`/`--allow` overrides.
+    pub level: Level,
+    check: fn(&LintContext<'_>) -> Vec<Draft>,
+}
+
+/// The rule registry, in code order. Codes are append-only: a retired
+/// rule's code is never reassigned, so CI `--deny Qnnn` pins stay valid.
+pub const RULES: &[LintRule] = &[
+    LintRule {
+        code: "Q001",
+        name: "dead-axis-value",
+        summary: "duplicate sweep-axis values or a no-op model_axes block",
+        level: Level::Warn,
+        check: dead_axis_value,
+    },
+    LintRule {
+        code: "Q002",
+        name: "budget-covers-space",
+        summary: "strategy budget >= the (sharded) space: degrades to exhaustive",
+        level: Level::Warn,
+        check: budget_covers_space,
+    },
+    LintRule {
+        code: "Q003",
+        name: "halving-rounds-excess",
+        summary: "halving pool converges early: trailing rounds never run, final ranking is low-fidelity",
+        level: Level::Warn,
+        check: halving_rounds_excess,
+    },
+    LintRule {
+        code: "Q004",
+        name: "spad-insufficient",
+        summary: "scratchpad cannot hold one kernel row of a swept model's layer",
+        level: Level::Warn,
+        check: spad_insufficient,
+    },
+    LintRule {
+        code: "Q005",
+        name: "glb-below-working-set",
+        summary: "GLB smaller than every layer's ifmap: each layer refetches from DRAM",
+        level: Level::Warn,
+        check: glb_below_working_set,
+    },
+    LintRule {
+        code: "Q006",
+        name: "accuracy-unswept-precision",
+        summary: "accuracy declared for a precision the sweep never evaluates",
+        level: Level::Warn,
+        check: accuracy_unswept_precision,
+    },
+    LintRule {
+        code: "Q007",
+        name: "shadowed-override",
+        summary: "a like-model overrides the same layer twice",
+        level: Level::Warn,
+        check: shadowed_override,
+    },
+    LintRule {
+        code: "Q008",
+        name: "layer-chain-mismatch",
+        summary: "consecutive custom-model layers have incompatible geometry",
+        level: Level::Deny,
+        check: layer_chain_mismatch,
+    },
+    LintRule {
+        code: "Q009",
+        name: "collapsed-variants",
+        summary: "model_axes variants lower to identical layer stacks",
+        level: Level::Warn,
+        check: collapsed_variants,
+    },
+    LintRule {
+        code: "Q010",
+        name: "persist-hazard",
+        summary: "checkpoint without an explicit flush interval, or frontier without db",
+        level: Level::Warn,
+        check: persist_hazard,
+    },
+    LintRule {
+        code: "Q011",
+        name: "resume-mismatch",
+        summary: "existing on-disk artifact is incompatible with this campaign",
+        level: Level::Deny,
+        check: resume_mismatch,
+    },
+    LintRule {
+        code: "Q012",
+        name: "empty-selection",
+        summary: "the sharded campaign selects zero design points",
+        level: Level::Deny,
+        check: empty_selection,
+    },
+];
+
+/// Per-run rule overrides, parsed from `--deny` / `--allow` selectors.
+/// `allow` wins over `deny`; either accepts rule codes (`Q004`), rule
+/// names (`spad-insufficient`), or the keyword `all`.
+#[derive(Debug, Clone, Default)]
+pub struct LintOptions {
+    deny_all: bool,
+    allow_all: bool,
+    deny: BTreeSet<&'static str>,
+    allow: BTreeSet<&'static str>,
+}
+
+impl LintOptions {
+    /// Parse comma-separated `--deny` / `--allow` selector lists; empty
+    /// strings select nothing. Unknown selectors are a typed error
+    /// listing the valid codes.
+    pub fn parse(deny: &str, allow: &str) -> Result<Self> {
+        let mut opts = LintOptions::default();
+        let (deny_all, deny_set) = parse_selector(deny)?;
+        let (allow_all, allow_set) = parse_selector(allow)?;
+        opts.deny_all = deny_all;
+        opts.allow_all = allow_all;
+        opts.deny = deny_set;
+        opts.allow = allow_set;
+        Ok(opts)
+    }
+
+    /// Whether a rule is suppressed outright.
+    fn allowed(&self, code: &str) -> bool {
+        self.allow_all || self.allow.contains(code)
+    }
+
+    /// Whether a rule's findings are escalated to [`Level::Deny`].
+    fn denied(&self, code: &str) -> bool {
+        self.deny_all || self.deny.contains(code)
+    }
+}
+
+/// Resolve one selector list to `(all, codes)`.
+fn parse_selector(text: &str) -> Result<(bool, BTreeSet<&'static str>)> {
+    let mut all = false;
+    let mut codes = BTreeSet::new();
+    for part in text.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        if part.eq_ignore_ascii_case("all") {
+            all = true;
+            continue;
+        }
+        let rule = RULES
+            .iter()
+            .find(|r| r.code.eq_ignore_ascii_case(part) || r.name == part)
+            .ok_or_else(|| {
+                Error::InvalidConfig(format!(
+                    "unknown lint rule '{part}' (rules are {} through {}, or names like '{}')",
+                    RULES[0].code,
+                    RULES[RULES.len() - 1].code,
+                    RULES[0].name
+                ))
+            })?;
+        codes.insert(rule.code);
+    }
+    Ok((all, codes))
+}
+
+/// Run every registered rule over a resolved campaign. Findings are
+/// deterministically ordered by `(span.start, span.end, code)` — the
+/// order is a stable part of the output contract (golden-tested).
+pub fn lint_campaign(
+    source: &str,
+    file: &SpecFile,
+    campaign: &ResolvedCampaign,
+    opts: &LintOptions,
+) -> Vec<Finding> {
+    let ctx = LintContext { source, file, campaign };
+    let mut findings = Vec::new();
+    for rule in RULES {
+        if opts.allowed(rule.code) {
+            continue;
+        }
+        for draft in (rule.check)(&ctx) {
+            let level = if opts.denied(rule.code) {
+                Level::Deny
+            } else {
+                draft.level.unwrap_or(rule.level)
+            };
+            findings.push(Finding {
+                code: rule.code,
+                name: rule.name,
+                level,
+                span: draft.span,
+                message: draft.message,
+                help: draft.help,
+            });
+        }
+    }
+    findings.sort_by(|a, b| {
+        (a.span.start, a.span.end, a.code).cmp(&(b.span.start, b.span.end, b.code))
+    });
+    findings
+}
+
+/// Parse, resolve, and lint a spec source in one shot — the `qadam
+/// lint` entry point. Resolver diagnostics come back untouched; the
+/// findings are empty whenever the spec does not resolve (lint rules
+/// only ever see valid campaigns).
+pub fn lint_source(
+    source: &str,
+    opts: &LintOptions,
+) -> (Option<ResolvedCampaign>, Diagnostics, Vec<Finding>) {
+    let mut diags = Diagnostics::new();
+    let file = super::parser::parse(source, &mut diags);
+    let campaign = super::resolve::resolve(&file, &mut diags);
+    let findings = match &campaign {
+        Some(campaign) => lint_campaign(source, &file, campaign, opts),
+        None => Vec::new(),
+    };
+    (campaign, diags, findings)
+}
+
+/// Lower findings into the standard diagnostics batch (deny → error,
+/// warn → warning) with `[Qnnn]`-prefixed messages, ready for
+/// [`Diagnostics::render`].
+pub fn to_diagnostics(findings: &[Finding]) -> Diagnostics {
+    let mut out = Diagnostics::new();
+    for finding in findings {
+        let message = format!("[{}] {}", finding.code, finding.message);
+        match (finding.level, &finding.help) {
+            (Level::Deny, Some(help)) => out.error_help(finding.span, message, help.clone()),
+            (Level::Deny, None) => out.error(finding.span, message),
+            (Level::Warn, Some(help)) => out.warn_help(finding.span, message, help.clone()),
+            (Level::Warn, None) => out.warn(finding.span, message),
+        }
+    }
+    out
+}
+
+/// Render findings rustc-style against their source (excerpt, caret,
+/// help), byte-deterministic for golden tests.
+pub fn render(findings: &[Finding], source: &str, filename: &str) -> String {
+    to_diagnostics(findings).render(source, filename)
+}
+
+/// The machine-readable `--format json` document for one linted file:
+/// `{"kind": "qadam.lint", "schema": 1, ...}` with per-finding
+/// line/column coordinates matching the text renderer. Round-trips
+/// through [`Json::parse`].
+pub fn to_json(filename: &str, source: &str, findings: &[Finding]) -> Json {
+    let rendered: Vec<Json> = findings
+        .iter()
+        .map(|finding| {
+            let (line, col) = locate(source, finding.span.start);
+            let mut fields = vec![
+                ("code", s(finding.code)),
+                ("rule", s(finding.name)),
+                ("level", s(finding.level.label())),
+                ("line", num(line as f64)),
+                ("col", num(col as f64)),
+                ("start", num(finding.span.start as f64)),
+                ("end", num(finding.span.end as f64)),
+                ("message", s(&finding.message)),
+            ];
+            if let Some(help) = &finding.help {
+                fields.push(("help", s(help)));
+            }
+            obj(fields)
+        })
+        .collect();
+    let denials = findings.iter().filter(|f| f.level == Level::Deny).count();
+    obj(vec![
+        ("kind", s("qadam.lint")),
+        ("schema", num(1.0)),
+        ("file", s(filename)),
+        ("findings", Json::Arr(rendered)),
+        ("warn_count", num((findings.len() - denials) as f64)),
+        ("deny_count", num(denials as f64)),
+    ])
+}
+
+// --- AST span lookup -----------------------------------------------------
+//
+// The resolver deliberately discards spans when lowering; rules walk the
+// AST to re-anchor their findings. Defaulted constructs (no spelling in
+// the source) fall back to `Span::at(0)` — the top of the file.
+
+fn sweep_block(file: &SpecFile) -> Option<&Block> {
+    file.sections.iter().find_map(|section| match section {
+        Section::Sweep(block) => Some(block),
+        _ => None,
+    })
+}
+
+fn campaign_block(file: &SpecFile) -> Option<&Block> {
+    file.sections.iter().find_map(|section| match section {
+        Section::Campaign(block) => Some(block),
+        _ => None,
+    })
+}
+
+fn model_axes_block(file: &SpecFile) -> Option<&Block> {
+    file.sections.iter().find_map(|section| match section {
+        Section::ModelAxes(block) => Some(block),
+        _ => None,
+    })
+}
+
+fn persist_block(file: &SpecFile) -> Option<&Block> {
+    file.sections.iter().find_map(|section| match section {
+        Section::Persist(block) => Some(block),
+        _ => None,
+    })
+}
+
+fn strategy_span(file: &SpecFile) -> Option<Span> {
+    file.sections.iter().find_map(|section| match section {
+        Section::Strategy(decl) => Some(decl.value.span),
+        _ => None,
+    })
+}
+
+fn model_block<'a>(file: &'a SpecFile, name: &str) -> Option<&'a ModelBlock> {
+    file.sections.iter().find_map(|section| match section {
+        Section::Model(block) if block.name.node == name => Some(block),
+        _ => None,
+    })
+}
+
+fn entry<'a>(block: &'a Block, key: &str) -> Option<&'a KeyValue> {
+    block.entries.iter().find(|kv| kv.key.node == key)
+}
+
+fn entry_span(block: Option<&Block>, key: &str) -> Option<Span> {
+    entry(block?, key).map(|kv| kv.key.span)
+}
+
+/// Span of item `index` of a list-valued entry, when the source spells
+/// the list out (the resolver guarantees index alignment for campaigns
+/// that resolved without errors).
+fn list_item_span(block: Option<&Block>, key: &str, index: usize) -> Option<Span> {
+    let kv = entry(block?, key)?;
+    match &kv.value.kind {
+        ValueKind::List(items) => items.get(index).map(|v| v.span),
+        _ => None,
+    }
+}
+
+fn layer_stmts(block: &ModelBlock) -> Vec<&LayerStmt> {
+    block
+        .stmts
+        .iter()
+        .filter_map(|stmt| match stmt {
+            ModelStmt::Layer(layer) => Some(layer),
+            _ => None,
+        })
+        .collect()
+}
+
+fn or_top(span: Option<Span>) -> Span {
+    span.unwrap_or(Span::at(0))
+}
+
+/// The verbatim source text a span covers (for quoting values back).
+fn excerpt<'a>(source: &'a str, span: Span) -> &'a str {
+    source.get(span.start..span.end.min(source.len())).unwrap_or("")
+}
+
+/// Design points this shard walks: `ceil((len - shard) / num_shards)`
+/// of the joint space — the same arithmetic the Explorer uses.
+fn shard_positions(campaign: &ResolvedCampaign) -> usize {
+    let len = campaign.sweep.len() * campaign.model_axes.len();
+    let (shard, num_shards) = campaign.shard;
+    if num_shards == 0 || shard >= len {
+        0
+    } else {
+        (len - shard).div_ceil(num_shards)
+    }
+}
+
+// --- Rules ---------------------------------------------------------------
+
+/// Q001: a sweep axis that repeats a value multiplies the space with
+/// byte-identical configurations; an explicit `model_axes` block that
+/// only declares the identity variant is a no-op.
+fn dead_axis_value(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let mut out = Vec::new();
+    let sweep = sweep_block(ctx.file);
+    let campaign = ctx.campaign;
+
+    fn duplicate_indices<T: PartialEq>(values: &[T]) -> Vec<usize> {
+        (0..values.len()).filter(|&i| values[..i].contains(&values[i])).collect()
+    }
+
+    let per_axis: [(&str, Vec<usize>); 6] = [
+        ("pe_type", duplicate_indices(&campaign.sweep.pe_types)),
+        ("array", duplicate_indices(&campaign.sweep.array_dims)),
+        ("glb_kib", duplicate_indices(&campaign.sweep.glb_kib)),
+        ("spad", duplicate_indices(&campaign.sweep.spads)),
+        ("dram_gbps", duplicate_indices(&campaign.sweep.dram_bw_gbps)),
+        ("clock_ghz", duplicate_indices(&campaign.sweep.clock_ghz)),
+    ];
+    for (key, indices) in per_axis {
+        for index in indices {
+            let span = or_top(list_item_span(sweep, key, index).or(entry_span(sweep, key)));
+            let text = excerpt(ctx.source, span);
+            out.push(Draft::new(
+                span,
+                format!(
+                    "sweep axis '{key}' repeats the value '{text}': duplicate axis values \
+                     multiply the space with identical design points"
+                ),
+                "drop the duplicate; every entry of a sweep axis scales the campaign cost".into(),
+            ));
+        }
+    }
+
+    if campaign.sets("model_axes") && campaign.model_axes.is_trivial() {
+        let span = or_top(model_axes_block(ctx.file).map(|b| b.keyword));
+        out.push(Draft::new(
+            span,
+            "model_axes declares only the identity variant (width [1] x depth [1]): the block \
+             is a no-op"
+                .into(),
+            "add more width/depth multipliers, or delete the block".into(),
+        ));
+    }
+    out
+}
+
+/// Q002: a sample/keep budget at least as large as the (sharded) space
+/// silently degrades the strategy to an exhaustive walk.
+fn budget_covers_space(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let positions = shard_positions(ctx.campaign);
+    if positions == 0 {
+        return Vec::new(); // Q012 reports the empty selection.
+    }
+    let (_, num_shards) = ctx.campaign.shard;
+    let scope = if num_shards > 1 {
+        format!("this shard's {positions}-point share of the space")
+    } else {
+        format!("the {positions}-point space")
+    };
+    let span = or_top(strategy_span(ctx.file));
+    match ctx.campaign.strategy {
+        StrategyChoice::Random { n, .. } if n >= positions => vec![Draft::new(
+            span,
+            format!(
+                "random({n}) requests at least as many samples as {scope} holds: the \
+                 selection degrades to an exhaustive walk"
+            ),
+            "lower the sample count, or drop the strategy (exhaustive is the default)".into(),
+        )],
+        StrategyChoice::Halving { keep, .. } if keep >= positions => vec![Draft::new(
+            span,
+            format!(
+                "halving keeps {keep} survivors but {scope} has no more candidates: every \
+                 point survives and the strategy degrades to an exhaustive walk"
+            ),
+            "lower the keep count, or drop the strategy (exhaustive is the default)".into(),
+        )],
+        _ => Vec::new(),
+    }
+}
+
+/// Q003: successive halving shrinks the pool by at most half per round
+/// (never below `keep`), so over-provisioned `rounds` converge early —
+/// the trailing rounds never execute, and because the fidelity ladder
+/// is keyed to the *declared* round count, the last round that does
+/// run ranks survivors on a truncated layer prefix instead of the full
+/// model.
+fn halving_rounds_excess(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let StrategyChoice::Halving { keep, rounds } = ctx.campaign.strategy else {
+        return Vec::new();
+    };
+    let positions = shard_positions(ctx.campaign);
+    if keep >= positions {
+        return Vec::new(); // Q002 reports the degenerate budget.
+    }
+    // Rounds actually needed to shrink `positions` down to `keep`.
+    let mut survivors = positions;
+    let mut needed = 0usize;
+    while survivors > keep {
+        survivors = (survivors / 2).max(keep);
+        needed += 1;
+    }
+    if rounds <= needed {
+        return Vec::new();
+    }
+    let skipped = rounds - needed;
+    let fidelity = 1u64 << skipped.min(63);
+    vec![Draft::new(
+        or_top(strategy_span(ctx.file)),
+        format!(
+            "halving({keep}, rounds = {rounds}) converges to {keep} survivor(s) after \
+             {needed} round(s) over {positions} points: {skipped} round(s) never run, and \
+             the final ranking scores only 1/{fidelity} of each model's layers"
+        ),
+        format!("use rounds = {needed} so the last executed round ranks at full fidelity"),
+    )]
+}
+
+/// Q004: the row-stationary mapper keeps one kernel row of weights and
+/// ifmap per PE; a scratchpad smaller than the kernel clamps residency
+/// to a single element and the resulting tiling is meaningless.
+fn spad_insufficient(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let mut out = Vec::new();
+    let models = ctx.campaign.models();
+    if models.is_empty() {
+        return out;
+    }
+    let sweep = sweep_block(ctx.file);
+    for (index, spad) in ctx.campaign.sweep.spads.iter().enumerate() {
+        // A model is affected when any compute layer's kernel row
+        // exceeds the per-PE ifmap or filter residency.
+        let affected: Vec<(&Model, &Layer)> = models
+            .iter()
+            .filter_map(|model| {
+                model
+                    .layers
+                    .iter()
+                    .filter(|l| l.kind != LayerKind::Pool)
+                    .filter(|l| spad.filter_entries < l.kernel || spad.ifmap_entries < l.kernel)
+                    .max_by_key(|l| l.kernel)
+                    .map(|layer| (model, layer))
+            })
+            .collect();
+        let Some((worst_model, worst_layer)) =
+            affected.iter().max_by_key(|(_, l)| l.kernel).copied()
+        else {
+            continue;
+        };
+        let every = affected.len() == models.len();
+        let scope = if every {
+            "every workload model is affected".to_string()
+        } else {
+            format!("{} of {} workload models affected", affected.len(), models.len())
+        };
+        let span = or_top(list_item_span(sweep, "spad", index).or(entry_span(sweep, "spad")));
+        out.push(Draft::leveled(
+            span,
+            format!(
+                "spad({}, {}, {}) cannot hold one {}x{} kernel row: layer '{}' of {} needs \
+                 at least {} ifmap and filter entries per PE ({scope})",
+                spad.ifmap_entries,
+                spad.filter_entries,
+                spad.psum_entries,
+                worst_layer.kernel,
+                worst_layer.kernel,
+                worst_layer.name,
+                worst_model.name,
+                worst_layer.kernel,
+            ),
+            "the mapper clamps residency to one element and the tiling is meaningless; grow \
+             the ifmap/filter entries to at least the largest swept kernel"
+                .into(),
+            // Degenerate for the whole workload: promote to deny.
+            if every { Level::Deny } else { Level::Warn },
+        ));
+    }
+    out
+}
+
+/// Q005: when even the *smallest* compute layer's ifmap (at the
+/// narrowest swept activation width) exceeds the GLB, every layer of
+/// that model refetches its ifmap from DRAM once per filter tile — the
+/// buffer is uselessly small for the workload.
+fn glb_below_working_set(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let mut out = Vec::new();
+    let Some(min_act_bits) =
+        ctx.campaign.sweep.pe_types.iter().map(|pe| pe.act_bits()).min()
+    else {
+        return out;
+    };
+    let sweep = sweep_block(ctx.file);
+    for (index, glb_kib) in ctx.campaign.sweep.glb_kib.iter().enumerate() {
+        let glb_bytes = (glb_kib * 1024) as u64;
+        for model in ctx.campaign.models() {
+            let Some(smallest) = model
+                .layers
+                .iter()
+                .filter(|l| l.kind != LayerKind::Pool)
+                .min_by_key(|l| l.ifmap_elems())
+            else {
+                continue;
+            };
+            let bytes = smallest.ifmap_elems() * min_act_bits as u64 / 8;
+            if bytes <= glb_bytes {
+                continue;
+            }
+            let span =
+                or_top(list_item_span(sweep, "glb_kib", index).or(entry_span(sweep, "glb_kib")));
+            out.push(Draft::new(
+                span,
+                format!(
+                    "glb_kib = {glb_kib}: even {}'s smallest layer ('{}', {bytes} B ifmap at \
+                     {min_act_bits}-bit activations) exceeds the {glb_bytes} B global buffer, \
+                     so every layer refetches its ifmap from DRAM once per filter tile",
+                    model.name, smallest.name,
+                ),
+                "grow glb_kib past the smallest per-layer ifmap, or expect DRAM-bound results"
+                    .into(),
+            ));
+        }
+    }
+    out
+}
+
+/// Q006: an `accuracy { ... }` entry for a precision outside the
+/// sweep's `pe_type` axis is never consulted by any figure or front.
+fn accuracy_unswept_precision(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let mut out = Vec::new();
+    for (model, entries) in &ctx.campaign.accuracy {
+        for &(pe, _) in entries {
+            if ctx.campaign.sweep.pe_types.contains(&pe) {
+                continue;
+            }
+            let key = pe_key(pe);
+            let span = model_block(ctx.file, model).and_then(|block| {
+                block.stmts.iter().find_map(|stmt| match stmt {
+                    ModelStmt::Accuracy(acc) => {
+                        acc.entries.iter().find(|kv| kv.key.node == key).map(|kv| kv.key.span)
+                    }
+                    _ => None,
+                })
+            });
+            out.push(Draft::new(
+                or_top(span),
+                format!(
+                    "accuracy for '{key}' in model '{model}' is never consulted: the sweep's \
+                     pe_type axis does not include {key}"
+                ),
+                format!("add {key} to sweep.pe_type, or drop the entry"),
+            ));
+        }
+    }
+    out
+}
+
+/// Q007: overriding the same layer twice in a `like` model is legal
+/// (later fields win per overlapping key) but almost always a spec
+/// editing accident.
+fn shadowed_override(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let mut out = Vec::new();
+    for section in &ctx.file.sections {
+        let Section::Model(block) = section else { continue };
+        if block.like.is_none() {
+            continue;
+        }
+        let layers = layer_stmts(block);
+        for (index, stmt) in layers.iter().enumerate() {
+            if layers[index + 1..].iter().any(|later| later.name.node == stmt.name.node) {
+                out.push(Draft::new(
+                    stmt.name.span,
+                    format!(
+                        "layer '{}' of model '{}' is overridden again further down: \
+                         overlapping fields silently take the later value",
+                        stmt.name.node, block.name.node,
+                    ),
+                    format!(
+                        "merge the overrides into one 'layer {} {{ ... }}' statement",
+                        stmt.name.node
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Q008: consecutive layers of a custom (non-`like`) stack must agree
+/// on geometry — a conv/pool expects the previous layer's output map,
+/// an fc expects its flattened element count. Zoo and `like` models are
+/// exempt: residual architectures legitimately branch.
+fn layer_chain_mismatch(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let mut out = Vec::new();
+    for workload in &ctx.campaign.workload {
+        let WorkloadModel::Custom(model) = workload else { continue };
+        let Some(block) = model_block(ctx.file, &model.name) else { continue };
+        if block.like.is_some() {
+            continue;
+        }
+        let stmts = layer_stmts(block);
+        let aligned = stmts.len() == model.layers.len();
+        for index in 1..model.layers.len() {
+            let prev = &model.layers[index - 1];
+            let cur = &model.layers[index];
+            let span = if aligned { stmts[index].span } else { block.name.span };
+            if cur.kind == LayerKind::FullyConnected {
+                let produced = if prev.kind == LayerKind::FullyConnected {
+                    prev.out_c
+                } else {
+                    prev.out_hw() * prev.out_hw() * prev.out_c
+                };
+                if cur.in_c != produced {
+                    out.push(Draft::new(
+                        span,
+                        format!(
+                            "fc '{}' expects {} inputs but '{}' produces {} ({}x{}x{} \
+                             flattened)",
+                            cur.name,
+                            cur.in_c,
+                            prev.name,
+                            produced,
+                            prev.out_hw(),
+                            prev.out_hw(),
+                            prev.out_c,
+                        ),
+                        format!("set in = {produced} on '{}'", cur.name),
+                    ));
+                }
+            } else if cur.in_hw != prev.out_hw() || cur.in_c != prev.out_c {
+                out.push(Draft::new(
+                    span,
+                    format!(
+                        "layer '{}' expects a {}x{}x{} input but '{}' produces {}x{}x{}",
+                        cur.name,
+                        cur.in_hw,
+                        cur.in_hw,
+                        cur.in_c,
+                        prev.name,
+                        prev.out_hw(),
+                        prev.out_hw(),
+                        prev.out_c,
+                    ),
+                    format!(
+                        "set in = {} and channels = {} on '{}'",
+                        prev.out_hw(),
+                        prev.out_c,
+                        cur.name
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Q009: width multipliers round to integer channel counts and depth
+/// multipliers only repeat stride-1 shape-preserving convs, so distinct
+/// `model_axes` variants can lower to byte-identical layer stacks —
+/// every such pair re-evaluates the same model under a different cache
+/// identity.
+fn collapsed_variants(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let axes = &ctx.campaign.model_axes;
+    if axes.len() < 2 {
+        return Vec::new();
+    }
+    let models = ctx.campaign.models();
+    let variants: Vec<ModelVariant> = (0..axes.len()).filter_map(|v| axes.variant(v)).collect();
+    let lowered: Vec<Vec<Model>> = variants
+        .iter()
+        .map(|v| models.iter().map(|m| scale_model(m, v.width, v.depth)).collect())
+        .collect();
+    let span = or_top(model_axes_block(ctx.file).map(|b| b.keyword));
+    let label = |v: &ModelVariant| format!("w{}d{}", v.width, v.depth);
+    let mut out = Vec::new();
+    for i in 0..variants.len() {
+        for j in i + 1..variants.len() {
+            let collapsed: Vec<&str> = models
+                .iter()
+                .enumerate()
+                .filter(|&(k, _)| lowered[i][k].layers == lowered[j][k].layers)
+                .map(|(_, m)| m.name.as_str())
+                .collect();
+            if collapsed.is_empty() {
+                continue;
+            }
+            let hw = ctx.campaign.sweep.len();
+            let message = if collapsed.len() == models.len() {
+                format!(
+                    "model_axes variants {} and {} lower every workload model to an \
+                     identical layer stack: {hw} duplicate hardware evaluations per model",
+                    label(&variants[i]),
+                    label(&variants[j]),
+                )
+            } else {
+                format!(
+                    "model_axes variants {} and {} lower {} to identical layer stacks",
+                    label(&variants[i]),
+                    label(&variants[j]),
+                    collapsed.join(", "),
+                )
+            };
+            out.push(Draft::new(
+                span,
+                message,
+                "scaled channel counts round to integers; spread the multipliers further \
+                 apart (or drop one)"
+                    .into(),
+            ));
+        }
+    }
+    out
+}
+
+/// Q010: persist plans that work but lose more than the author
+/// probably intends.
+fn persist_hazard(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let mut out = Vec::new();
+    let block = persist_block(ctx.file);
+    let persist = &ctx.campaign.persist;
+    if persist.checkpoint.is_some() && !ctx.campaign.sets("every") {
+        out.push(Draft::new(
+            or_top(entry_span(block, "checkpoint")),
+            "persist.checkpoint is set without an explicit 'every' flush interval: a crash \
+             can lose up to 16 (the default) evaluated points per flush window"
+                .into(),
+            "pin 'every = N' so the durability/throughput trade-off is deliberate".into(),
+        ));
+    }
+    if persist.frontier.is_some() && persist.db.is_none() {
+        out.push(Draft::new(
+            or_top(entry_span(block, "frontier")),
+            "persist.frontier streams the Pareto surface but no 'db' is kept: dominated \
+             points are discarded and the campaign cannot be re-summarized or merged later"
+                .into(),
+            "add 'db = \"...\"' alongside the frontier, or accept the loss".into(),
+        ));
+    }
+    out
+}
+
+/// The checkpoint-journal manifest this campaign would write — the
+/// exact counterpart of the Explorer's, computed without running
+/// anything.
+fn expected_manifest(campaign: &ResolvedCampaign) -> CampaignManifest {
+    let positions = shard_positions(campaign);
+    let total = match campaign.strategy {
+        StrategyChoice::Exhaustive => positions,
+        StrategyChoice::Random { n, .. } => n.min(positions),
+        StrategyChoice::Halving { keep, .. } => keep.min(positions),
+    };
+    CampaignManifest {
+        spec_fingerprint: DesignSpace::new(
+            campaign.sweep.clone(),
+            campaign.model_axes.clone(),
+        )
+        .fingerprint(),
+        seed: campaign.seed,
+        shard: campaign.shard.0,
+        num_shards: campaign.shard.1,
+        total,
+        dataset: campaign.dataset.name().to_string(),
+        models: campaign.models().into_iter().map(|m| m.name).collect(),
+        strategy: campaign.strategy.descriptor(),
+        model_axes: campaign.model_axes.clone(),
+        campaign_fp: Some(campaign.fingerprint()),
+    }
+}
+
+/// Q011: cross-examine the persist plan against what is already on
+/// disk, reporting *all* incompatibilities as one diagnostic instead of
+/// the first-mismatch `InvalidConfig` the runtime would throw.
+fn resume_mismatch(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let mut out = Vec::new();
+    let block = persist_block(ctx.file);
+    let persist = &ctx.campaign.persist;
+
+    if let Some(path) = &persist.checkpoint {
+        let span = or_top(entry_span(block, "checkpoint"));
+        if let Ok(text) = std::fs::read_to_string(path) {
+            // A header line is only authoritative once newline-terminated;
+            // the runtime renames torn journals aside and restarts them,
+            // so a torn header is not a finding.
+            if let Some((header, _)) = text.split_once('\n') {
+                match Json::parse(header).map_err(|e| Error::ParseError(e.to_string()))
+                    .and_then(|json| CampaignManifest::from_json(&json))
+                {
+                    Err(_) => out.push(Draft::new(
+                        span,
+                        format!(
+                            "persist.checkpoint points at '{}', which is not a parsable \
+                             qadam checkpoint journal: the run will fail to resume",
+                            path.display()
+                        ),
+                        "delete the file, or point 'checkpoint' at a fresh path".into(),
+                    )),
+                    Ok(journal) => {
+                        let ours = expected_manifest(ctx.campaign);
+                        let mismatches = manifest_mismatches(&journal, &ours);
+                        if !mismatches.is_empty() {
+                            out.push(Draft::new(
+                                span,
+                                format!(
+                                    "resuming '{}' will be rejected — the journal was \
+                                     written for a different campaign: {}",
+                                    path.display(),
+                                    mismatches.join("; "),
+                                ),
+                                "start a fresh checkpoint path, or restore the spec the \
+                                 journal was written for"
+                                    .into(),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    for (key, path, kind, loaded) in [
+        ("db", &persist.db, "qadam.evaldb", false),
+        ("cache", &persist.cache, "qadam.pointcache", true),
+    ] {
+        let Some(path) = path else { continue };
+        let Ok(text) = std::fs::read_to_string(path) else { continue };
+        let is_kind = Json::parse(&text)
+            .ok()
+            .map(|json| crate::explore::persist::check_envelope(&json, kind).is_ok())
+            .unwrap_or(false);
+        if is_kind {
+            continue;
+        }
+        let consequence = if loaded {
+            "the run will fail to load it"
+        } else {
+            "running the campaign would overwrite it"
+        };
+        out.push(Draft::new(
+            or_top(entry_span(block, key)),
+            format!(
+                "persist.{key} points at existing '{}', which is not a {kind} document: \
+                 {consequence}",
+                path.display()
+            ),
+            format!("pick a different persist.{key} path, or remove the file"),
+        ));
+    }
+    out
+}
+
+/// Every field on which resuming `journal` under `ours` would be
+/// rejected, phrased `field (journal: X, spec: Y)`.
+fn manifest_mismatches(journal: &CampaignManifest, ours: &CampaignManifest) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut diff = |field: &str, j: String, c: String| {
+        out.push(format!("{field} (journal: {j}, spec: {c})"));
+    };
+    if journal.model_axes != ours.model_axes {
+        let render = |axes: &crate::arch::ModelAxes| {
+            format!("width {:?} x depth {:?}", axes.width_mults, axes.depth_mults)
+        };
+        diff("model axes", render(&journal.model_axes), render(&ours.model_axes));
+    }
+    if journal.spec_fingerprint != ours.spec_fingerprint {
+        diff(
+            "sweep fingerprint",
+            format!("{:016x}", journal.spec_fingerprint),
+            format!("{:016x}", ours.spec_fingerprint),
+        );
+    }
+    if journal.seed != ours.seed {
+        diff("seed", journal.seed.to_string(), ours.seed.to_string());
+    }
+    if (journal.shard, journal.num_shards) != (ours.shard, ours.num_shards) {
+        diff(
+            "shard",
+            format!("{}/{}", journal.shard, journal.num_shards),
+            format!("{}/{}", ours.shard, ours.num_shards),
+        );
+    }
+    if journal.total != ours.total {
+        diff("design-point count", journal.total.to_string(), ours.total.to_string());
+    }
+    if journal.dataset != ours.dataset {
+        diff("dataset", journal.dataset.clone(), ours.dataset.clone());
+    }
+    if journal.models != ours.models {
+        diff("model set", journal.models.join(","), ours.models.join(","));
+    }
+    if journal.strategy != ours.strategy {
+        diff("search strategy", journal.strategy.clone(), ours.strategy.clone());
+    }
+    if journal.campaign_fp != ours.campaign_fp {
+        let render =
+            |fp: Option<u64>| fp.map_or_else(|| "none".to_string(), |fp| format!("{fp:016x}"));
+        diff("campaign fingerprint", render(journal.campaign_fp), render(ours.campaign_fp));
+    }
+    out
+}
+
+/// Q012: a round-robin shard index past the end of the joint space
+/// walks zero design points — the campaign evaluates nothing.
+fn empty_selection(ctx: &LintContext<'_>) -> Vec<Draft> {
+    let len = ctx.campaign.sweep.len() * ctx.campaign.model_axes.len();
+    let (shard, num_shards) = ctx.campaign.shard;
+    if len == 0 || shard < len {
+        return Vec::new();
+    }
+    vec![Draft::new(
+        or_top(entry_span(campaign_block(ctx.file), "shard")),
+        format!(
+            "shard {shard}/{num_shards} of a {len}-point space selects no design points \
+             (round-robin shards cover indices shard, shard + N, ...)"
+        ),
+        "use fewer shards, or grow the space past the shard index".into(),
+    )]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_codes_are_unique_sorted_and_well_formed() {
+        let codes: Vec<&str> = RULES.iter().map(|r| r.code).collect();
+        let mut sorted = codes.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(codes, sorted, "codes must be unique and in ascending order");
+        assert!(RULES.len() >= 10, "the registry guarantees at least ten rules");
+        for rule in RULES {
+            assert!(rule.code.len() == 4 && rule.code.starts_with('Q'), "{}", rule.code);
+            assert!(rule.code[1..].chars().all(|c| c.is_ascii_digit()), "{}", rule.code);
+            assert!(!rule.name.is_empty() && !rule.summary.is_empty());
+        }
+    }
+
+    #[test]
+    fn selectors_accept_codes_names_and_all() {
+        let opts = LintOptions::parse("q004, persist-hazard", "all").unwrap();
+        assert!(opts.denied("Q004") && opts.denied("Q010"));
+        assert!(opts.allowed("Q001") && opts.allowed("Q012"));
+        assert!(LintOptions::parse("Q999", "").is_err());
+        assert!(LintOptions::parse("", "no-such-rule").is_err());
+        let none = LintOptions::parse("", "").unwrap();
+        assert!(!none.denied("Q001") && !none.allowed("Q001"));
+    }
+
+    #[test]
+    fn allow_wins_over_deny() {
+        let source = "sweep {\n  pe_type = [int16]\n  array = [8x8]\n}\nstrategy = random(50)\n";
+        let opts = LintOptions::parse("all", "Q002").unwrap();
+        let (_, _, findings) = lint_source(source, &opts);
+        assert!(findings.is_empty(), "{findings:?}");
+        let opts = LintOptions::parse("all", "").unwrap();
+        let (_, _, findings) = lint_source(source, &opts);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].level, Level::Deny, "--deny all escalates warnings");
+    }
+
+    #[test]
+    fn findings_are_span_then_code_ordered() {
+        // Two rules fire at different spans; order must follow spans.
+        let source = "sweep {\n  pe_type = [int16, int16]\n  array = [8x8]\n}\n\
+                      strategy = random(500)\n";
+        let (_, _, findings) = lint_source(source, &LintOptions::default());
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        let keys: Vec<(usize, usize, &str)> =
+            findings.iter().map(|f| (f.span.start, f.span.end, f.code)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    fn unresolvable_specs_produce_no_findings() {
+        let (campaign, diags, findings) =
+            lint_source("sweep {\n  pe_type = [int17]\n}\n", &LintOptions::default());
+        assert!(campaign.is_none());
+        assert!(diags.has_errors());
+        assert!(findings.is_empty());
+    }
+
+    #[test]
+    fn json_document_round_trips_and_counts_levels() {
+        let source = "campaign {\n  shard = 3 / 4\n}\n\
+                      sweep {\n  pe_type = [int16]\n  array = [8x8]\n  glb_kib = [64]\n  \
+                      spad = [spad(12, 224, 24)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n";
+        let (_, _, findings) = lint_source(source, &LintOptions::default());
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].code, "Q012");
+        let json = to_json("t.qsl", source, &findings);
+        let reparsed = Json::parse(&json.to_string_pretty()).unwrap();
+        assert_eq!(reparsed, json, "pretty JSON must round-trip losslessly");
+        let reparsed = Json::parse(&json.to_string_canonical()).unwrap();
+        assert_eq!(reparsed, json, "canonical JSON must round-trip losslessly");
+        assert_eq!(json.get("deny_count").and_then(Json::as_i64), Some(1));
+        assert_eq!(json.get("warn_count").and_then(Json::as_i64), Some(0));
+        let finding = &json.get("findings").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(finding.get("code").and_then(Json::as_str), Some("Q012"));
+        assert_eq!(finding.get("line").and_then(Json::as_i64), Some(2));
+    }
+
+    #[test]
+    fn expected_manifest_matches_an_executed_journal_header() {
+        // The no-run resume check must agree byte-for-byte with what the
+        // Explorer writes, or Q011 would reject every healthy resume.
+        let dir = std::env::temp_dir().join(format!("qadam_lint_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let journal = dir.join("run.journal");
+        let _ = std::fs::remove_file(&journal);
+        let source = format!(
+            "campaign {{\n  seed = 11\n}}\n\
+             sweep {{\n  pe_type = [int16]\n  array = [4x4]\n  glb_kib = [64]\n}}\n\
+             workload {{\n  models = [tiny]\n}}\n\
+             model tiny {{\n  conv c {{ in = 8, channels = 3, out = 4, kernel = 3, stride = 1, pad = 1 }}\n}}\n\
+             persist {{\n  checkpoint = \"{}\"\n  every = 1\n}}\n",
+            journal.display()
+        );
+        let campaign = super::super::compile(&source, "t.qsl").unwrap();
+        campaign.execute().unwrap();
+        let text = std::fs::read_to_string(&journal).unwrap();
+        let header = text.split_once('\n').unwrap().0;
+        let written = CampaignManifest::from_json(&Json::parse(header).unwrap()).unwrap();
+        let expected = expected_manifest(&campaign);
+        assert!(manifest_mismatches(&written, &expected).is_empty());
+        // And the full lint pass agrees: no Q011 on a healthy resume.
+        let (_, _, findings) = lint_source(&source, &LintOptions::default());
+        assert!(findings.iter().all(|f| f.code != "Q011"), "{findings:?}");
+        let _ = std::fs::remove_file(&journal);
+    }
+}

@@ -66,11 +66,13 @@ pub mod ast;
 pub mod diag;
 pub mod exec;
 pub mod lexer;
+pub mod lint;
 pub mod parser;
 pub mod resolve;
 
 pub use diag::{Diagnostic, Diagnostics, Severity, Span};
 pub use exec::{CacheOutcome, CampaignOutcome, FrontierOutcome};
+pub use lint::{Finding, Level, LintOptions, LintRule, RULES};
 pub use resolve::{
     dataset_key, pe_key, zoo_key, PersistPlan, ResolvedCampaign, StrategyChoice, WorkloadModel,
     DATASET_KEYS, PE_KEYS, ZOO_KEYS,
@@ -104,8 +106,12 @@ pub fn compile(source: &str, filename: &str) -> Result<ResolvedCampaign> {
 pub const STARTER_SPEC: &str = r#"# QADAM campaign spec (QSL).
 # Run with:       qadam run campaign.qsl
 # Check with:     qadam validate campaign.qsl
+# Lint with:      qadam lint --deny all campaign.qsl
 # Every section is optional; omitted fields take the same defaults as
-# the `qadam dse` flags.
+# the `qadam dse` flags. This starter passes `qadam lint --deny all`
+# out of the box: the exhaustive strategy cannot over-budget the space
+# (rule Q002), and no persist block means no checkpoint-without-`every`
+# hazard (rule Q010).
 
 campaign {
     seed = 7          # synthesis-noise seed (determinism knob)

@@ -47,6 +47,11 @@ pub struct SynthDataset {
 
 impl SynthDataset {
     /// Observation vector for a named target metric.
+    ///
+    /// # Panics
+    /// On a metric name other than `area` / `power` / `perf` — callers
+    /// iterate exactly that fixed set.
+    #[allow(clippy::panic)]
     pub fn targets(&self, metric: &str) -> Vec<f64> {
         self.records
             .iter()

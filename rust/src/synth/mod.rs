@@ -94,6 +94,11 @@ impl SynthReport {
 
 /// Synthesize a design point deterministically (no tool noise) — the
 /// "ideal" composition used by unit tests and the energy model.
+///
+/// # Panics
+/// If `config` fails [`AcceleratorConfig::validate`] — callers validate
+/// at their API boundary before synthesizing.
+#[allow(clippy::expect_used)]
 pub fn synthesize_clean(config: &AcceleratorConfig) -> SynthReport {
     config.validate().expect("invalid accelerator config");
     let pe = pe_netlist(config);

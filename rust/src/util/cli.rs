@@ -63,12 +63,16 @@ impl Matches {
 
     /// Required string value; panics with a clear message if missing
     /// (parser guarantees presence for `required` options).
+    // Panicking is this accessor's contract: a missing option is a
+    // programmer error (undeclared flag), not a user input error.
+    #[allow(clippy::panic)]
     pub fn get_str(&self, name: &str) -> &str {
         self.get(name)
             .unwrap_or_else(|| panic!("option --{name} missing (declare a default?)"))
     }
 
     /// Parsed numeric value of an option.
+    #[allow(clippy::panic)] // same contract as `get_str`
     pub fn get_f64(&self, name: &str) -> f64 {
         self.get_str(name)
             .parse()
@@ -76,6 +80,7 @@ impl Matches {
     }
 
     /// Parsed integer value of an option.
+    #[allow(clippy::panic)] // same contract as `get_str`
     pub fn get_usize(&self, name: &str) -> usize {
         self.get_str(name)
             .parse()

@@ -430,6 +430,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
+        // The scanned range holds only ASCII sign/digit/exponent bytes.
+        #[allow(clippy::unwrap_used)]
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         text.parse::<f64>()
             .map(Json::Num)
@@ -537,7 +539,7 @@ mod tests {
         assert_eq!(Json::parse(r#""😀""#).unwrap(), Json::Str("😀".into()));
         // A high surrogate followed by a non-low-surrogate escape is an
         // error (previously an arithmetic overflow in debug builds).
-        for text in [r#""\ud800A""#, r#""\ud800 ""#, r#""\ud800\ud800""#, r#""\ud800""#, r#""\udc00""#]
+        for text in [r#""\ud800A""#, "\"\\ud800\u{0}\"", r#""\ud800\ud800""#, r#""\ud800""#, r#""\udc00""#]
         {
             assert!(Json::parse(text).is_err(), "{text}");
         }

@@ -191,6 +191,8 @@ impl Default for Config {
 
 /// Run `property` on `config.cases` random inputs; on failure, shrink and
 /// panic with the minimal counterexample found.
+// Panicking is the harness's failure channel — it runs inside #[test]s.
+#[allow(clippy::panic)]
 pub fn check_with<T: Clone + std::fmt::Debug + 'static>(
     config: &Config,
     gen: &Gen<T>,

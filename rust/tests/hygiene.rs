@@ -1,0 +1,63 @@
+//! Source-tree hygiene.
+//!
+//! A literal NUL byte once hid inside a `util/json.rs` string literal:
+//! the file compiled fine, but every byte-oriented text tool (ripgrep,
+//! diff-driven review, some editors) silently treated it as binary and
+//! stopped searching it. This suite pins the repair: every source file
+//! in the crate — and every shipped `.qsl` example — must be valid
+//! UTF-8 containing no control bytes other than `\n`, `\r`, and `\t`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Recursively collect files under `dir` whose extension is in `exts`.
+fn collect(dir: &Path, exts: &[&str], out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries {
+        let path = entry.unwrap().path();
+        if path.is_dir() {
+            // Build output can nest anywhere a workspace override puts
+            // it; never descend into it.
+            if path.file_name().and_then(|n| n.to_str()) != Some("target") {
+                collect(&path, exts, out);
+            }
+        } else if path
+            .extension()
+            .and_then(|e| e.to_str())
+            .is_some_and(|e| exts.contains(&e))
+        {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn sources_are_clean_utf8_text() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut files = Vec::new();
+    collect(&root.join("src"), &["rs"], &mut files);
+    collect(&root.join("tests"), &["rs"], &mut files);
+    collect(&root.join("../examples"), &["qsl"], &mut files);
+    files.push(root.join("Cargo.toml"));
+    files.push(root.join("clippy.toml"));
+    assert!(files.len() > 30, "hygiene walk found only {} files", files.len());
+
+    for path in files {
+        let bytes = fs::read(&path).unwrap();
+        let text = match std::str::from_utf8(&bytes) {
+            Ok(text) => text,
+            Err(err) => panic!("{}: not valid UTF-8: {err}", path.display()),
+        };
+        for (line_idx, line) in text.lines().enumerate() {
+            if let Some(bad) = line.chars().find(|&c| c.is_control() && c != '\t') {
+                panic!(
+                    "{}:{}: control byte U+{:04X} in source text — binary-detecting \
+                     tools (ripgrep, diff) silently skip such files",
+                    path.display(),
+                    line_idx + 1,
+                    bad as u32
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,399 @@
+//! `qadam lint` integration suite.
+//!
+//! Three layers of lockdown, mirroring `spec.rs`:
+//!
+//! * **Golden findings** — for every rule `Q001`…`Q012`, one
+//!   mis-specified campaign whose rendered findings (line/column
+//!   spans, excerpts, `[Qnnn]` prefixes, help lines) are pinned as a
+//!   snapshot fixture, plus a near-miss spec that must NOT fire the
+//!   rule. Fixtures bless on first run (`QADAM_BLESS=1` to
+//!   regenerate, strict in CI under `QADAM_GOLDEN_REQUIRE=1`).
+//! * **Determinism** — repeated lint passes over the same source are
+//!   byte-identical and ordered by `(span.start, span.end, code)`.
+//! * **Shipped specs are clean** — `STARTER_SPEC` and every
+//!   `examples/*.qsl` pass `--deny all` with zero findings, and the
+//!   JSON document round-trips through the crate's own parser.
+
+mod common;
+
+use std::fs;
+use std::path::PathBuf;
+
+use common::assert_snapshot;
+use qadam::spec::lint::{self, Finding, Level, LintOptions};
+use qadam::spec::{self, STARTER_SPEC};
+use qadam::util::json::Json;
+
+/// Lint a spec that must resolve cleanly (rules never see broken specs).
+fn lint(source: &str) -> Vec<Finding> {
+    let (campaign, diags, findings) = lint::lint_source(source, &LintOptions::default());
+    assert!(
+        campaign.is_some() && !diags.has_errors(),
+        "spec must resolve before linting:\n{}",
+        diags.render(source, "test.qsl")
+    );
+    findings
+}
+
+/// Pin a rule's rendered findings as a golden fixture: the spec must
+/// fire `code` (and nothing else), and the rendering must match the
+/// checked-in snapshot byte-for-byte.
+fn golden_rule(fixture: &str, code: &str, source: &str) {
+    let findings = lint(source);
+    assert!(!findings.is_empty(), "{fixture}: expected {code} findings");
+    for finding in &findings {
+        assert_eq!(finding.code, code, "{fixture}: stray finding {finding:?}");
+    }
+    let keys: Vec<(usize, usize, &str)> =
+        findings.iter().map(|f| (f.span.start, f.span.end, f.code)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort_unstable();
+    assert_eq!(keys, sorted, "{fixture}: findings must order by (start, end, code)");
+    assert_snapshot(fixture, &lint::render(&findings, source, "campaign.qsl"));
+}
+
+/// The near-miss side of a rule: a corrected spec must not fire it.
+fn assert_clean_of(source: &str, code: &str) {
+    let findings = lint(source);
+    assert!(
+        findings.iter().all(|f| f.code != code),
+        "{code} fired on the corrected spec: {findings:?}"
+    );
+}
+
+/// A sweep block with every axis pinned to one value — a 1-point space
+/// with no duplicates, so space-arithmetic rules stay quiet unless a
+/// test deliberately perturbs an axis.
+const PINNED_SWEEP: &str = "sweep {\n  pe_type = [int16]\n  array = [8x8]\n  \
+                            glb_kib = [64]\n  spad = [spad(12, 112, 16)]\n  \
+                            dram_gbps = [8]\n  clock_ghz = [2]\n}\n";
+
+// ---------------------------------------------------- per-rule goldens
+
+#[test]
+fn q001_dead_axis_value() {
+    // A duplicated pe_type entry and an identity-only model_axes block:
+    // two findings, both Q001.
+    let source = "sweep {\n  pe_type = [int16, int16]\n  array = [8x8]\n  \
+                  glb_kib = [64]\n  spad = [spad(12, 112, 16)]\n  \
+                  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+                  model_axes {\n  width = [1]\n  depth = [1]\n}\n";
+    golden_rule("spec_lint_q001.txt", "Q001", source);
+
+    let clean = "sweep {\n  pe_type = [int16, fp32]\n  array = [8x8]\n  \
+                 glb_kib = [64]\n  spad = [spad(12, 112, 16)]\n  \
+                 dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+                 model_axes {\n  width = [0.5, 1]\n  depth = [1]\n}\n";
+    assert_clean_of(clean, "Q001");
+}
+
+#[test]
+fn q002_budget_covers_space() {
+    // random(4) over a 4-point space degrades to an exhaustive walk.
+    let source = "sweep {\n  pe_type = [int16]\n  array = [8x8, 16x16]\n  \
+                  glb_kib = [64, 128]\n  spad = [spad(12, 112, 16)]\n  \
+                  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+                  strategy = random(4)\n";
+    golden_rule("spec_lint_q002.txt", "Q002", source);
+
+    let clean = source.replace("random(4)", "random(3)");
+    assert_clean_of(&clean, "Q002");
+}
+
+#[test]
+fn q003_halving_rounds_excess() {
+    // 16 points halve to 2 survivors in 3 rounds; rounds = 6 leaves the
+    // final ranking at 1/8 fidelity.
+    let source = "sweep {\n  pe_type = [int16, lightpe1]\n  array = [8x8, 16x16]\n  \
+                  glb_kib = [64, 128]\n  spad = [spad(12, 112, 16)]\n  \
+                  dram_gbps = [8, 16]\n  clock_ghz = [2]\n}\n\
+                  strategy = halving(2, rounds = 6)\n";
+    golden_rule("spec_lint_q003.txt", "Q003", source);
+
+    let clean = source.replace("rounds = 6", "rounds = 3");
+    assert_clean_of(&clean, "Q003");
+}
+
+#[test]
+fn q004_spad_insufficient() {
+    // spad(2, 2, 8) cannot hold one 3x3 kernel row of resnet20; every
+    // workload model is affected, so the finding self-escalates to deny.
+    let source = "sweep {\n  pe_type = [int16]\n  array = [8x8]\n  glb_kib = [64]\n  \
+                  spad = [spad(2, 2, 8)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+                  workload {\n  dataset = cifar10\n  models = [resnet20]\n}\n";
+    golden_rule("spec_lint_q004.txt", "Q004", source);
+    let deny = lint(source);
+    assert!(deny.iter().all(|f| f.level == Level::Deny), "whole-workload Q004 must deny");
+
+    let clean = source.replace("spad(2, 2, 8)", "spad(12, 112, 16)");
+    assert_clean_of(&clean, "Q004");
+}
+
+#[test]
+fn q005_glb_below_working_set() {
+    // A 1 KiB GLB cannot hold even the smallest layer's 12 KiB ifmap
+    // (32x32x3 at 32-bit activations).
+    let source = "sweep {\n  pe_type = [fp32]\n  array = [8x8]\n  glb_kib = [1]\n  \
+                  spad = [spad(12, 112, 16)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+                  workload {\n  dataset = cifar10\n  models = [tiny]\n}\n\
+                  model tiny {\n  \
+                  conv stem { in = 32, channels = 3, out = 8, kernel = 3, stride = 1, pad = 1 }\n\
+                  }\n";
+    golden_rule("spec_lint_q005.txt", "Q005", source);
+
+    let clean = source.replace("glb_kib = [1]", "glb_kib = [64]");
+    assert_clean_of(&clean, "Q005");
+}
+
+#[test]
+fn q006_accuracy_unswept_precision() {
+    // The fp32 accuracy entry is never consulted: the sweep only
+    // evaluates int16.
+    let source = format!(
+        "{PINNED_SWEEP}workload {{\n  dataset = cifar10\n  models = [tiny]\n}}\n\
+         model tiny {{\n  accuracy {{ int16 = 91.0, fp32 = 92.5 }}\n  \
+         conv stem {{ in = 32, channels = 3, out = 8, kernel = 3, stride = 1, pad = 1 }}\n}}\n"
+    );
+    golden_rule("spec_lint_q006.txt", "Q006", &source);
+
+    let clean = source.replace(", fp32 = 92.5", "");
+    assert_clean_of(&clean, "Q006");
+}
+
+#[test]
+fn q007_shadowed_override() {
+    // The second `layer fc` override silently wins on overlapping keys.
+    let source = format!(
+        "{PINNED_SWEEP}workload {{\n  dataset = cifar10\n  models = [wide]\n}}\n\
+         model wide like resnet20 {{\n  layer fc {{ out = 100 }}\n  layer fc {{ out = 10 }}\n}}\n"
+    );
+    golden_rule("spec_lint_q007.txt", "Q007", &source);
+
+    let clean = format!(
+        "{PINNED_SWEEP}workload {{\n  dataset = cifar10\n  models = [wide]\n}}\n\
+         model wide like resnet20 {{\n  layer fc {{ out = 10 }}\n}}\n"
+    );
+    assert_clean_of(&clean, "Q007");
+}
+
+#[test]
+fn q008_layer_chain_mismatch() {
+    // Two breaks in one stack: 'mid' disagrees with 'stem' on both map
+    // size and channels, and 'head' expects 10 of mid's 4096 outputs.
+    let source = format!(
+        "{PINNED_SWEEP}workload {{\n  dataset = cifar10\n  models = [broken]\n}}\n\
+         model broken {{\n  \
+         conv stem {{ in = 32, channels = 3, out = 16, kernel = 3, stride = 1, pad = 1 }}\n  \
+         conv mid  {{ in = 16, channels = 8, out = 16, kernel = 3, stride = 1, pad = 1 }}\n  \
+         fc head   {{ in = 10, out = 10 }}\n}}\n"
+    );
+    golden_rule("spec_lint_q008.txt", "Q008", &source);
+    assert!(lint(&source).iter().all(|f| f.level == Level::Deny));
+
+    let clean = format!(
+        "{PINNED_SWEEP}workload {{\n  dataset = cifar10\n  models = [fixed]\n}}\n\
+         model fixed {{\n  \
+         conv stem {{ in = 32, channels = 3, out = 16, kernel = 3, stride = 1, pad = 1 }}\n  \
+         conv mid  {{ in = 32, channels = 16, out = 16, kernel = 3, stride = 1, pad = 1 }}\n  \
+         fc head   {{ in = 16384, out = 10 }}\n}}\n"
+    );
+    assert_clean_of(&clean, "Q008");
+}
+
+#[test]
+fn q009_collapsed_variants() {
+    // round(16 x 1.01) == 16: the w1.01 variant lowers to the same
+    // stack as the base model, so half the joint space is duplicates.
+    let source = format!(
+        "{PINNED_SWEEP}model_axes {{\n  width = [1, 1.01]\n  depth = [1]\n}}\n\
+         workload {{\n  dataset = cifar10\n  models = [tiny]\n}}\n\
+         model tiny {{\n  \
+         conv stem {{ in = 32, channels = 3, out = 16, kernel = 3, stride = 1, pad = 1 }}\n}}\n"
+    );
+    golden_rule("spec_lint_q009.txt", "Q009", &source);
+
+    let clean = source.replace("width = [1, 1.01]", "width = [0.5, 1]");
+    assert_clean_of(&clean, "Q009");
+}
+
+#[test]
+fn q010_persist_hazard() {
+    // A checkpoint with the implicit flush interval, and a streamed
+    // frontier with no database behind it: two findings. The paths do
+    // not exist, so Q011 stays quiet.
+    let source = format!(
+        "{PINNED_SWEEP}persist {{\n  \
+         checkpoint = \"target/lint_nonexistent/run.journal\"\n  \
+         frontier = \"target/lint_nonexistent/frontier.json\"\n}}\n"
+    );
+    golden_rule("spec_lint_q010.txt", "Q010", &source);
+
+    let clean = format!(
+        "{PINNED_SWEEP}persist {{\n  \
+         db = \"target/lint_nonexistent/db.json\"\n  \
+         checkpoint = \"target/lint_nonexistent/run.journal\"\n  \
+         every = 8\n  \
+         frontier = \"target/lint_nonexistent/frontier.json\"\n}}\n"
+    );
+    assert_clean_of(&clean, "Q010");
+}
+
+#[test]
+fn q011_resume_mismatch() {
+    // Plant incompatible artifacts at the paths the spec persists to.
+    // Integration tests run with the manifest dir as cwd, so these
+    // relative paths are stable across machines — the fixture stays
+    // byte-deterministic.
+    let dir = PathBuf::from("target/lint_artifacts");
+    fs::create_dir_all(&dir).unwrap();
+    fs::write(dir.join("torn.journal"), "{\"kind\": \"bogus\"}\n").unwrap();
+    fs::write(dir.join("stale_db.json"), "{}").unwrap();
+    let source = format!(
+        "{PINNED_SWEEP}persist {{\n  \
+         checkpoint = \"target/lint_artifacts/torn.journal\"\n  \
+         every = 4\n  \
+         db = \"target/lint_artifacts/stale_db.json\"\n}}\n"
+    );
+    golden_rule("spec_lint_q011.txt", "Q011", &source);
+    assert!(lint(&source).iter().all(|f| f.level == Level::Deny));
+
+    // Fresh paths: nothing on disk to collide with.
+    let clean = source.replace("lint_artifacts", "lint_nonexistent");
+    assert_clean_of(&clean, "Q011");
+}
+
+#[test]
+fn q011_reports_every_manifest_field_drift() {
+    // A healthy journal written by a *different* campaign: the lint
+    // pass must name the drifted fields instead of just failing.
+    let dir = std::env::temp_dir().join(format!("qadam_lint_drift_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("run.journal");
+    let spec_for = |seed: u64| {
+        format!(
+            "campaign {{\n  seed = {seed}\n}}\n\
+             sweep {{\n  pe_type = [int16]\n  array = [4x4]\n  glb_kib = [64]\n  \
+             spad = [spad(12, 112, 16)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}}\n\
+             workload {{\n  models = [tiny]\n}}\n\
+             model tiny {{\n  \
+             conv c {{ in = 8, channels = 3, out = 4, kernel = 3, stride = 1, pad = 1 }}\n}}\n\
+             persist {{\n  checkpoint = \"{}\"\n  every = 1\n}}\n",
+            journal.display()
+        )
+    };
+    spec::compile(&spec_for(1), "a.qsl").unwrap().execute().unwrap();
+
+    // Same spec, new seed: resuming would be rejected, and the finding
+    // says why.
+    let (_, _, findings) = lint::lint_source(&spec_for(2), &LintOptions::default());
+    let q011: Vec<&Finding> = findings.iter().filter(|f| f.code == "Q011").collect();
+    assert_eq!(q011.len(), 1, "{findings:?}");
+    assert_eq!(q011[0].level, Level::Deny);
+    assert!(
+        q011[0].message.contains("seed (journal: 1, spec: 2)"),
+        "finding must name the drifted field: {}",
+        q011[0].message
+    );
+
+    // The campaign that wrote the journal resumes without findings.
+    let (_, _, findings) = lint::lint_source(&spec_for(1), &LintOptions::default());
+    assert!(findings.iter().all(|f| f.code != "Q011"), "{findings:?}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn q012_empty_selection() {
+    // Shard index 3 of a 1-point space walks nothing.
+    let source = format!("campaign {{\n  shard = 3 / 4\n}}\n{PINNED_SWEEP}");
+    golden_rule("spec_lint_q012.txt", "Q012", &source);
+    assert!(lint(&source).iter().all(|f| f.level == Level::Deny));
+
+    let clean = "campaign {\n  shard = 1 / 2\n}\n\
+                 sweep {\n  pe_type = [int16]\n  array = [8x8, 16x16]\n  glb_kib = [64]\n  \
+                 spad = [spad(12, 112, 16)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n";
+    assert_clean_of(clean, "Q012");
+}
+
+// ------------------------------------------------- output contracts
+
+/// A spec that trips three rules at three distinct spans, pinning the
+/// cross-rule ordering contract in one rendering.
+const MULTI_RULE: &str = "sweep {\n  pe_type = [int16, int16]\n  array = [8x8]\n  \
+                          glb_kib = [64]\n  spad = [spad(12, 112, 16)]\n  \
+                          dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+                          strategy = random(99)\n\
+                          persist {\n  \
+                          checkpoint = \"target/lint_nonexistent/run.journal\"\n}\n";
+
+#[test]
+fn multi_rule_findings_render_in_span_order() {
+    let findings = lint(MULTI_RULE);
+    let codes: Vec<&str> = findings.iter().map(|f| f.code).collect();
+    assert_eq!(codes, ["Q001", "Q002", "Q010"], "{findings:?}");
+    let keys: Vec<(usize, usize, &str)> =
+        findings.iter().map(|f| (f.span.start, f.span.end, f.code)).collect();
+    let mut sorted = keys.clone();
+    sorted.sort_unstable();
+    assert_eq!(keys, sorted, "findings must order by (start, end, code)");
+    assert_snapshot("spec_lint_multi.txt", &lint::render(&findings, MULTI_RULE, "campaign.qsl"));
+}
+
+#[test]
+fn lint_is_deterministic_across_runs() {
+    let first = lint::render(&lint(MULTI_RULE), MULTI_RULE, "campaign.qsl");
+    let first_json = lint::to_json("campaign.qsl", MULTI_RULE, &lint(MULTI_RULE));
+    for _ in 0..10 {
+        let findings = lint(MULTI_RULE);
+        assert_eq!(lint::render(&findings, MULTI_RULE, "campaign.qsl"), first);
+        assert_eq!(lint::to_json("campaign.qsl", MULTI_RULE, &findings), first_json);
+    }
+}
+
+#[test]
+fn json_document_round_trips_through_the_crate_parser() {
+    let findings = lint(MULTI_RULE);
+    let json = lint::to_json("campaign.qsl", MULTI_RULE, &findings);
+    assert_eq!(Json::parse(&json.to_string_pretty()).unwrap(), json);
+    assert_eq!(Json::parse(&json.to_string_canonical()).unwrap(), json);
+    assert_eq!(Json::parse(&json.to_string_compact()).unwrap(), json);
+    assert_eq!(json.get("kind").and_then(Json::as_str), Some("qadam.lint"));
+    assert_eq!(json.get("warn_count").and_then(Json::as_i64), Some(3));
+    assert_eq!(json.get("deny_count").and_then(Json::as_i64), Some(0));
+    let arr = json.get("findings").and_then(Json::as_arr).unwrap();
+    assert_eq!(arr.len(), findings.len());
+}
+
+// ------------------------------------------------ shipped specs are clean
+
+#[test]
+fn starter_spec_is_lint_clean_under_deny_all() {
+    let opts = LintOptions::parse("all", "").unwrap();
+    let (campaign, diags, findings) = lint::lint_source(STARTER_SPEC, &opts);
+    assert!(campaign.is_some() && !diags.has_errors());
+    assert!(findings.is_empty(), "STARTER_SPEC must lint clean: {findings:?}");
+}
+
+#[test]
+fn example_specs_are_lint_clean_under_deny_all() {
+    let opts = LintOptions::parse("all", "").unwrap();
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../examples");
+    let mut seen = 0;
+    for entry in fs::read_dir(&dir).expect("examples directory") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("qsl") {
+            continue;
+        }
+        seen += 1;
+        let source = fs::read_to_string(&path).unwrap();
+        let (campaign, diags, findings) = lint::lint_source(&source, &opts);
+        assert!(
+            campaign.is_some() && !diags.has_errors(),
+            "{}: must resolve\n{}",
+            path.display(),
+            diags.render(&source, &path.display().to_string())
+        );
+        assert!(findings.is_empty(), "{}: {findings:?}", path.display());
+    }
+    assert!(seen >= 3, "expected the shipped example specs, found {seen}");
+}
