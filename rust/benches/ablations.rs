@@ -132,4 +132,8 @@ fn main() {
     ablation_spad_sensitivity();
     ablation_noise_robustness();
     ablation_single_layer_dataflow_detail();
+    // No timed benches here (the ablations are analytical), but emitting
+    // the (empty) artifact keeps the QADAM_BENCH_OUT layout uniform: one
+    // file per target, so `qadam bench merge <dir>` never special-cases.
+    qadam::bench::finish("ablations", &qadam::bench::HostMeta::from_env());
 }

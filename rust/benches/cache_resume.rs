@@ -71,4 +71,6 @@ fn main() {
     for result in [&cold, &warm, &journaled] {
         println!("{}", result.to_csv_row());
     }
+
+    qadam::bench::finish("cache_resume", &qadam::bench::HostMeta::from_env());
 }

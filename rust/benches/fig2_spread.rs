@@ -16,4 +16,6 @@ fn main() {
     let figure = figure.unwrap();
     print!("{}", figure.render());
     println!("\nCSV:\n{}", figure.table.to_csv());
+
+    qadam::bench::finish("fig2_spread", &qadam::bench::HostMeta::from_env());
 }

@@ -38,4 +38,6 @@ fn main() {
          speed up the design space exploration\")",
         synth_result.summary.p50 / predict_result.summary.p50.max(1e-12)
     );
+
+    qadam::bench::finish("fig3_model_fit", &qadam::bench::HostMeta::from_env());
 }

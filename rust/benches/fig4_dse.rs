@@ -26,4 +26,6 @@ fn main() {
         print!("{}", figure.render());
         println!("CSV:\n{}", figure.table.to_csv());
     }
+
+    qadam::bench::finish("fig4_dse", &qadam::bench::HostMeta::from_env());
 }

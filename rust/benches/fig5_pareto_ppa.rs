@@ -24,4 +24,6 @@ fn main() {
         print!("{}", figure.render());
         println!("CSV:\n{}", figure.table.to_csv());
     }
+
+    qadam::bench::finish("fig5_pareto_ppa", &qadam::bench::HostMeta::from_env());
 }

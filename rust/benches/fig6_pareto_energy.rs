@@ -24,4 +24,6 @@ fn main() {
         print!("{}", figure.render());
         println!("CSV:\n{}", figure.table.to_csv());
     }
+
+    qadam::bench::finish("fig6_pareto_energy", &qadam::bench::HostMeta::from_env());
 }

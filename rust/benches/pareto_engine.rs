@@ -78,4 +78,6 @@ fn main() {
             .stats
             .evaluations
     });
+
+    qadam::bench::finish("pareto_engine", &qadam::bench::HostMeta::from_env());
 }

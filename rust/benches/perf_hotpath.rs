@@ -3,14 +3,21 @@
 //! * mapper throughput (layers/s) — the inner loop of every DSE eval,
 //! * synthesis throughput (configs/s),
 //! * full-campaign throughput (evals/s) at several worker counts,
+//! * joint hardware × model campaign throughput (the large-space case),
+//! * linalg / regression kernels backing the PPA surrogates,
 //! * PJRT runtime step latency (if artifacts are present),
 //! * cycle-level simulator throughput (MACs/s).
+//!
+//! With `QADAM_BENCH_OUT=dir` set, the run emits `dir/perf_hotpath.json`
+//! (`qadam.bench` schema 1) for `qadam bench merge` / `qadam bench diff`.
 
-use qadam::arch::{AcceleratorConfig, SweepSpec};
-use qadam::bench::{bench, bench_with, section, BenchConfig};
+use qadam::arch::{AcceleratorConfig, ModelAxes, SweepSpec};
+use qadam::bench::{bench, bench_with, finish, section, BenchConfig, HostMeta};
 use qadam::dataflow::{map_model, Dataflow};
 use qadam::dnn::{model_for, Dataset, ModelKind};
 use qadam::explore::Explorer;
+use qadam::ppa::linalg::{cholesky, normal_equations, ridge_fit, solve_spd, Matrix};
+use qadam::ppa::regression::{PolyModel, PredictScratch};
 use qadam::quant::PeType;
 use qadam::sim;
 use qadam::synth;
@@ -52,6 +59,66 @@ fn main() {
         println!("  -> {:.0} evals/s at {workers} workers", evals as f64 / result.summary.p50);
     }
 
+    section("L3 hot path — joint hardware x model campaign (CIFAR-10, 4 variants/model)");
+    // Non-trivial ModelAxes quadruple the workload set: every zoo model is
+    // evaluated at {0.5, 1.0} width x {1, 2} depth. This is the large-space
+    // configuration the streaming rewrite targets.
+    let axes = ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1, 2] };
+    for workers in [2, qadam::coordinator::default_workers()] {
+        let explorer = Explorer::over(SweepSpec::default())
+            .dataset(Dataset::Cifar10)
+            .model_axes(axes.clone())
+            .workers(workers)
+            .seed(7);
+        let mut db = None;
+        let result = bench_with(
+            &format!("joint_campaign_workers_{workers}"),
+            BenchConfig { warmup_iters: 1, measure_iters: 3 },
+            || db = Some(explorer.run().expect("joint campaign")),
+        );
+        let evals = db.expect("at least one measured run").stats.evaluations;
+        println!("  -> {:.0} evals/s at {workers} workers ({evals} evals: {} variants/model)",
+            evals as f64 / result.summary.p50,
+            axes.len()
+        );
+    }
+
+    section("surrogate kernels — linalg (240x24 design)");
+    // Sized like a degree-2 polynomial basis over the synthesis sweep:
+    // a tall-thin design matrix and its SPD normal equations.
+    let (rows, p) = (240, 24);
+    let mut rng = Pcg64::new(11);
+    let design = Matrix {
+        rows,
+        cols: p,
+        data: (0..rows * p).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+    };
+    let targets: Vec<f64> = (0..rows).map(|_| rng.uniform(0.0, 10.0)).collect();
+    bench("normal_equations_240x24", || normal_equations(&design, &targets));
+    let (mut gram, moment) = normal_equations(&design, &targets);
+    for i in 0..p {
+        gram.data[i * p + i] += 1.0; // ridge shift => comfortably SPD
+    }
+    bench("cholesky_24x24", || cholesky(&gram).expect("SPD"));
+    bench("solve_spd_24x24", || solve_spd(&gram, &moment).expect("SPD"));
+    bench("ridge_fit_240x24", || ridge_fit(&design, &targets, 1e-6).expect("SPD"));
+
+    section("surrogate kernels — polynomial regression (200x5, degree 2)");
+    let xs: Vec<Vec<f64>> =
+        (0..200).map(|_| (0..5).map(|_| rng.uniform(0.5, 4.0)).collect()).collect();
+    let ys: Vec<f64> =
+        xs.iter().map(|x| x[0] * x[1] + 0.3 * x[2] * x[2] + x[3] - x[4]).collect();
+    bench("poly_fit_200x5_deg2", || PolyModel::fit(&xs, &ys, 2, 1e-6));
+    let model = PolyModel::fit(&xs, &ys, 2, 1e-6);
+    let mut scratch = PredictScratch::default();
+    let result = bench("poly_predict_200_reused_scratch", || {
+        xs.iter().map(|x| model.predict_with(x, &mut scratch)).sum::<f64>()
+    });
+    println!(
+        "  -> {:.2} M predictions/s",
+        xs.len() as f64 / result.summary.p50 / 1e6
+    );
+
     section("cycle-level simulator");
     let layer = qadam::dnn::Layer::conv("bench", 16, 8, 16, 3, 1, 1);
     let mut rng = Pcg64::new(3);
@@ -68,6 +135,8 @@ fn main() {
 
     section("PJRT runtime (needs `make artifacts` and the `pjrt` feature)");
     bench_pjrt_runtime();
+
+    finish("perf_hotpath", &HostMeta::from_env());
 }
 
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,495 @@
+//! Comparable bench artifacts (`qadam.bench` canonical JSON, schema 1).
+//!
+//! Every `cargo bench` target records its [`super::BenchResult`]s and, when
+//! `QADAM_BENCH_OUT` is set, emits one artifact file per target. Artifacts
+//! are canonical JSON (sorted keys, shortest round-trip floats, compact),
+//! so two runs of the same code on the same host produce byte-comparable
+//! files and `qadam bench diff` can flag p50 regressions across commits.
+//! The repo-root `BENCH_PR*.json` trajectory is built by merging the
+//! per-target artifacts with `qadam bench merge`.
+//!
+//! Host metadata is *passed in* by the bench target (label via the
+//! `QADAM_BENCH_HOST` env var, OS/arch from compile-time constants) —
+//! never sampled from ambient wall-clock/entropy calls, so re-rendering an
+//! artifact is deterministic.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::stats::Summary;
+
+/// Artifact `kind` tag (the canonical-JSON envelope convention shared
+/// with `qadam.sweep` / `qadam.cache` / `qadam.checkpoint`).
+pub const KIND: &str = "qadam.bench";
+/// Artifact schema version.
+pub const SCHEMA: i64 = 1;
+
+/// Host metadata embedded in every artifact so diffs across machines are
+/// recognizable as apples-to-oranges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostMeta {
+    /// Free-form host label (CI runner name, workstation tag, or
+    /// `"unspecified"`). Conventionally supplied via `QADAM_BENCH_HOST`.
+    pub label: String,
+    /// Operating system (`std::env::consts::OS` — a compile-time constant).
+    pub os: String,
+    /// CPU architecture (`std::env::consts::ARCH`).
+    pub arch: String,
+}
+
+impl HostMeta {
+    /// Host metadata from compile-time constants plus an explicit label.
+    pub fn with_label(label: &str) -> Self {
+        Self {
+            label: label.to_string(),
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+        }
+    }
+
+    /// Host metadata labeled from the `QADAM_BENCH_HOST` env var
+    /// (`"unspecified"` when unset). The only ambient input is the env
+    /// var — no clocks, no entropy.
+    pub fn from_env() -> Self {
+        let label = std::env::var(super::ENV_HOST).unwrap_or_else(|_| "unspecified".to_string());
+        Self::with_label(&label)
+    }
+
+    /// JSON form.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("arch", s(&self.arch)),
+            ("label", s(&self.label)),
+            ("os", s(&self.os)),
+        ])
+    }
+
+    /// Parse from [`Self::to_json`] output.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        Ok(Self {
+            label: get_str(json, "label")?,
+            os: get_str(json, "os")?,
+            arch: get_str(json, "arch")?,
+        })
+    }
+}
+
+/// One benchmark's record: name, the (normalized) config it ran under,
+/// and the timing summary in seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Benchmark label (unique within a target).
+    pub name: String,
+    /// Untimed warmup iterations.
+    pub warmup_iters: usize,
+    /// Timed iterations aggregated into the summary.
+    pub measure_iters: usize,
+    /// Timing statistics over the measured iterations (seconds).
+    pub summary: Summary,
+}
+
+impl BenchRecord {
+    /// JSON form (envelope-free; embedded in a [`BenchArtifact`]).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "config",
+                obj(vec![
+                    ("measure_iters", num(self.measure_iters as f64)),
+                    ("warmup_iters", num(self.warmup_iters as f64)),
+                ]),
+            ),
+            ("name", s(&self.name)),
+            (
+                "seconds",
+                obj(vec![
+                    ("max", num(self.summary.max)),
+                    ("mean", num(self.summary.mean)),
+                    ("min", num(self.summary.min)),
+                    ("n", num(self.summary.n as f64)),
+                    ("p50", num(self.summary.p50)),
+                    ("p95", num(self.summary.p95)),
+                    ("stddev", num(self.summary.stddev)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse from [`Self::to_json`] output.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let config = json
+            .get("config")
+            .ok_or_else(|| Error::ParseError("bench record missing 'config'".into()))?;
+        let seconds = json
+            .get("seconds")
+            .ok_or_else(|| Error::ParseError("bench record missing 'seconds'".into()))?;
+        Ok(Self {
+            name: get_str(json, "name")?,
+            warmup_iters: get_usize(config, "warmup_iters")?,
+            measure_iters: get_usize(config, "measure_iters")?,
+            summary: Summary {
+                n: get_usize(seconds, "n")?,
+                mean: get_num(seconds, "mean")?,
+                stddev: get_num(seconds, "stddev")?,
+                min: get_num(seconds, "min")?,
+                p50: get_num(seconds, "p50")?,
+                p95: get_num(seconds, "p95")?,
+                max: get_num(seconds, "max")?,
+            },
+        })
+    }
+}
+
+/// A comparable bench artifact: envelope + host + sorted bench records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchArtifact {
+    /// Where the numbers were measured.
+    pub host: HostMeta,
+    /// Bench records, kept sorted by name (the canonical order).
+    pub benches: Vec<BenchRecord>,
+}
+
+impl BenchArtifact {
+    /// Build an artifact; records are sorted by name and deduplicated
+    /// (later records win), making the result canonical regardless of
+    /// recording order.
+    pub fn new(host: HostMeta, records: Vec<BenchRecord>) -> Self {
+        let mut by_name: BTreeMap<String, BenchRecord> = BTreeMap::new();
+        for record in records {
+            by_name.insert(record.name.clone(), record);
+        }
+        Self { host, benches: by_name.into_values().collect() }
+    }
+
+    /// Merge several artifacts (e.g. one per `cargo bench` target) into a
+    /// single trajectory artifact. On name collisions the record from the
+    /// later artifact wins; the host is taken from the first.
+    pub fn merge(artifacts: Vec<BenchArtifact>) -> Result<Self> {
+        let mut iter = artifacts.into_iter();
+        let first = iter
+            .next()
+            .ok_or_else(|| Error::InvalidConfig("merge needs at least one artifact".into()))?;
+        let mut records = first.benches;
+        for artifact in iter {
+            records.extend(artifact.benches);
+        }
+        Ok(Self::new(first.host, records))
+    }
+
+    /// Look up a record by name.
+    pub fn get(&self, name: &str) -> Option<&BenchRecord> {
+        self.benches.iter().find(|b| b.name == name)
+    }
+
+    /// Canonical JSON form (`kind`/`schema` envelope first in key order).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("benches", Json::Arr(self.benches.iter().map(BenchRecord::to_json).collect())),
+            ("host", self.host.to_json()),
+            ("kind", s(KIND)),
+            ("schema", num(SCHEMA as f64)),
+        ])
+    }
+
+    /// Parse and envelope-check a `qadam.bench` document.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        let kind = json.get("kind").and_then(Json::as_str).unwrap_or("");
+        if kind != KIND {
+            return Err(Error::ParseError(format!(
+                "expected artifact kind '{KIND}', found '{kind}'"
+            )));
+        }
+        let schema = json.get("schema").and_then(Json::as_i64).unwrap_or(-1);
+        if schema != SCHEMA {
+            return Err(Error::ParseError(format!(
+                "unsupported {KIND} schema {schema} (this build reads schema {SCHEMA})"
+            )));
+        }
+        let host = HostMeta::from_json(
+            json.get("host")
+                .ok_or_else(|| Error::ParseError("bench artifact missing 'host'".into()))?,
+        )?;
+        let benches = json
+            .get("benches")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::ParseError("bench artifact missing 'benches'".into()))?
+            .iter()
+            .map(BenchRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self::new(host, benches))
+    }
+
+    /// Canonical text form: one line of canonical JSON plus a trailing
+    /// newline. Structurally equal artifacts render to identical bytes.
+    pub fn to_canonical_text(&self) -> String {
+        let mut text = self.to_json().to_string_canonical();
+        text.push('\n');
+        text
+    }
+
+    /// Write atomically (temp file + rename) in canonical form.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::explore::persist::write_atomic(path, &self.to_canonical_text())
+    }
+
+    /// Load and envelope-check an artifact file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Compare `self` (old baseline) against `new`, flagging benches whose
+    /// p50 grew by more than `threshold_pct` percent.
+    pub fn diff(&self, new: &BenchArtifact, threshold_pct: f64) -> BenchDiff {
+        let mut entries = Vec::new();
+        let mut added = Vec::new();
+        for record in &new.benches {
+            match self.get(&record.name) {
+                None => added.push(record.name.clone()),
+                Some(old) => {
+                    let delta_pct = if old.summary.p50 > 0.0 {
+                        100.0 * (record.summary.p50 - old.summary.p50) / old.summary.p50
+                    } else {
+                        0.0
+                    };
+                    entries.push(DiffEntry {
+                        name: record.name.clone(),
+                        old_p50: old.summary.p50,
+                        new_p50: record.summary.p50,
+                        delta_pct,
+                        regression: delta_pct > threshold_pct,
+                    });
+                }
+            }
+        }
+        let removed = self
+            .benches
+            .iter()
+            .filter(|b| new.get(&b.name).is_none())
+            .map(|b| b.name.clone())
+            .collect();
+        BenchDiff { threshold_pct, entries, added, removed }
+    }
+}
+
+/// One compared bench in a [`BenchDiff`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffEntry {
+    /// Benchmark label.
+    pub name: String,
+    /// Baseline median (seconds).
+    pub old_p50: f64,
+    /// Candidate median (seconds).
+    pub new_p50: f64,
+    /// Relative p50 change in percent (positive = slower).
+    pub delta_pct: f64,
+    /// Whether the change exceeds the diff threshold.
+    pub regression: bool,
+}
+
+/// Result of diffing two bench artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchDiff {
+    /// Regression threshold in percent applied to p50 growth.
+    pub threshold_pct: f64,
+    /// Benches present in both artifacts.
+    pub entries: Vec<DiffEntry>,
+    /// Benches only in the new artifact.
+    pub added: Vec<String>,
+    /// Benches only in the old artifact.
+    pub removed: Vec<String>,
+}
+
+impl BenchDiff {
+    /// Whether any compared bench regressed beyond the threshold.
+    pub fn has_regressions(&self) -> bool {
+        self.entries.iter().any(|e| e.regression)
+    }
+
+    /// Names of the regressed benches.
+    pub fn regressions(&self) -> Vec<&str> {
+        self.entries.iter().filter(|e| e.regression).map(|e| e.name.as_str()).collect()
+    }
+
+    /// Human-readable report (one line per compared bench).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "bench diff: {} compared, threshold +{:.1}% p50\n",
+            self.entries.len(),
+            self.threshold_pct
+        );
+        for e in &self.entries {
+            out.push_str(&format!(
+                "  {:<44} p50 {:>10.3} ms -> {:>10.3} ms  ({:+.1}%){}\n",
+                e.name,
+                e.old_p50 * 1e3,
+                e.new_p50 * 1e3,
+                e.delta_pct,
+                if e.regression { "  REGRESSION" } else { "" },
+            ));
+        }
+        if !self.added.is_empty() {
+            out.push_str(&format!("  added: {}\n", self.added.join(", ")));
+        }
+        if !self.removed.is_empty() {
+            out.push_str(&format!("  removed: {}\n", self.removed.join(", ")));
+        }
+        if self.has_regressions() {
+            out.push_str(&format!(
+                "  {} regression(s) beyond +{:.1}%\n",
+                self.regressions().len(),
+                self.threshold_pct
+            ));
+        } else {
+            out.push_str("  no regressions beyond threshold\n");
+        }
+        out
+    }
+}
+
+fn get_str(json: &Json, key: &str) -> Result<String> {
+    json.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| Error::ParseError(format!("missing string field '{key}'")))
+}
+
+fn get_num(json: &Json, key: &str) -> Result<f64> {
+    json.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::ParseError(format!("missing numeric field '{key}'")))
+}
+
+fn get_usize(json: &Json, key: &str) -> Result<usize> {
+    let v = json
+        .get(key)
+        .and_then(Json::as_i64)
+        .ok_or_else(|| Error::ParseError(format!("missing integer field '{key}'")))?;
+    usize::try_from(v)
+        .map_err(|_| Error::ParseError(format!("field '{key}' must be non-negative")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record(name: &str, p50: f64) -> BenchRecord {
+        BenchRecord {
+            name: name.to_string(),
+            warmup_iters: 1,
+            measure_iters: 5,
+            summary: Summary {
+                n: 5,
+                mean: p50 * 1.1,
+                stddev: p50 * 0.05,
+                min: p50 * 0.9,
+                p50,
+                p95: p50 * 1.3,
+                max: p50 * 1.4,
+            },
+        }
+    }
+
+    fn sample_artifact() -> BenchArtifact {
+        BenchArtifact::new(
+            HostMeta::with_label("test-host"),
+            vec![sample_record("zeta", 0.002), sample_record("alpha", 0.001)],
+        )
+    }
+
+    #[test]
+    fn artifact_round_trips_through_json() {
+        let artifact = sample_artifact();
+        let text = artifact.to_canonical_text();
+        let parsed = BenchArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, artifact);
+    }
+
+    #[test]
+    fn records_are_sorted_and_deduplicated() {
+        let artifact = sample_artifact();
+        assert_eq!(artifact.benches[0].name, "alpha");
+        assert_eq!(artifact.benches[1].name, "zeta");
+        let re = BenchArtifact::new(
+            artifact.host.clone(),
+            vec![sample_record("alpha", 0.001), sample_record("alpha", 0.009)],
+        );
+        assert_eq!(re.benches.len(), 1);
+        assert_eq!(re.benches[0].summary.p50, 0.009);
+    }
+
+    #[test]
+    fn canonical_text_is_deterministic_and_order_independent() {
+        let a = BenchArtifact::new(
+            HostMeta::with_label("h"),
+            vec![sample_record("a", 0.001), sample_record("b", 0.002)],
+        );
+        let b = BenchArtifact::new(
+            HostMeta::with_label("h"),
+            vec![sample_record("b", 0.002), sample_record("a", 0.001)],
+        );
+        assert_eq!(a.to_canonical_text(), b.to_canonical_text());
+        assert!(a.to_canonical_text().starts_with('{'));
+        assert!(a.to_canonical_text().ends_with("}\n"));
+    }
+
+    #[test]
+    fn envelope_is_checked() {
+        let bad_kind = Json::parse(r#"{"kind":"qadam.sweep","schema":1}"#).unwrap();
+        assert!(BenchArtifact::from_json(&bad_kind).is_err());
+        let bad_schema =
+            Json::parse(r#"{"benches":[],"host":{"arch":"x","label":"l","os":"o"},"kind":"qadam.bench","schema":99}"#)
+                .unwrap();
+        assert!(BenchArtifact::from_json(&bad_schema).is_err());
+    }
+
+    #[test]
+    fn merge_combines_targets_first_host_wins() {
+        let a = BenchArtifact::new(HostMeta::with_label("first"), vec![sample_record("a", 0.001)]);
+        let b = BenchArtifact::new(HostMeta::with_label("second"), vec![sample_record("b", 0.002)]);
+        let merged = BenchArtifact::merge(vec![a, b]).unwrap();
+        assert_eq!(merged.host.label, "first");
+        assert_eq!(merged.benches.len(), 2);
+        assert!(BenchArtifact::merge(vec![]).is_err());
+    }
+
+    #[test]
+    fn diff_flags_p50_regressions_beyond_threshold() {
+        let old = sample_artifact();
+        let mut slower = old.clone();
+        slower.benches[0].summary.p50 *= 1.25; // alpha +25%
+        let diff = old.diff(&slower, 10.0);
+        assert!(diff.has_regressions());
+        assert_eq!(diff.regressions(), vec!["alpha"]);
+        assert!(diff.render().contains("REGRESSION"));
+        // Within threshold: clean.
+        let diff = old.diff(&old, 10.0);
+        assert!(!diff.has_regressions());
+        assert!(diff.render().contains("no regressions"));
+    }
+
+    #[test]
+    fn diff_tracks_added_and_removed() {
+        let old = BenchArtifact::new(HostMeta::with_label("h"), vec![sample_record("gone", 0.001)]);
+        let new =
+            BenchArtifact::new(HostMeta::with_label("h"), vec![sample_record("fresh", 0.001)]);
+        let diff = old.diff(&new, 10.0);
+        assert_eq!(diff.added, vec!["fresh".to_string()]);
+        assert_eq!(diff.removed, vec!["gone".to_string()]);
+        assert!(!diff.has_regressions());
+    }
+
+    #[test]
+    fn save_load_round_trips_on_disk() {
+        let dir = std::env::temp_dir().join("qadam_bench_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.json");
+        let artifact = sample_artifact();
+        artifact.save(&path).unwrap();
+        let loaded = BenchArtifact::load(&path).unwrap();
+        assert_eq!(loaded, artifact);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,328 @@
+//! Bench harness (offline `criterion` substitute) with comparable
+//! artifacts.
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, timed iterations, and a statistics summary (mean/p50/p95),
+//! printed in a criterion-like format plus CSV for EXPERIMENTS.md. Every
+//! result is additionally recorded in-process; a target that calls
+//! [`finish`] emits a [`artifact::BenchArtifact`] (`qadam.bench` canonical
+//! JSON) when `QADAM_BENCH_OUT` names a directory — see `DESIGN.md`
+//! "Bench artifacts & the perf-regression gate".
+//!
+//! Env protocol (all optional):
+//! - `QADAM_BENCH_OUT=dir` — emit one `<dir>/<target>.json` artifact per
+//!   bench target.
+//! - `QADAM_BENCH_SMOKE=1` — override every config to 0 warmup / 1
+//!   measured iteration (the CI smoke mode: exercises the full bench +
+//!   artifact path in seconds; the numbers are not comparable).
+//! - `QADAM_BENCH_HOST=label` — host label embedded in the artifact.
+
+pub mod artifact;
+
+pub use artifact::{BenchArtifact, BenchDiff, BenchRecord, DiffEntry, HostMeta};
+
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Env var: artifact output directory for [`finish`].
+pub const ENV_OUT: &str = "QADAM_BENCH_OUT";
+/// Env var: force the 1-iteration smoke config.
+pub const ENV_SMOKE: &str = "QADAM_BENCH_SMOKE";
+/// Env var: host label recorded in emitted artifacts.
+pub const ENV_HOST: &str = "QADAM_BENCH_HOST";
+
+/// Configuration for a bench run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BenchConfig {
+    /// Untimed warmup iterations before measurement.
+    pub warmup_iters: usize,
+    /// Timed iterations aggregated into the summary. `0` is normalized to
+    /// `1` by [`Self::normalized`] (a summary over zero samples would be
+    /// meaningless).
+    pub measure_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 2, measure_iters: 10 }
+    }
+}
+
+impl BenchConfig {
+    /// Fast config for expensive end-to-end benches.
+    pub fn heavy() -> Self {
+        Self { warmup_iters: 1, measure_iters: 3 }
+    }
+
+    /// CI smoke config: no warmup, a single measured iteration. Exercises
+    /// the bench + artifact machinery; the numbers are not comparable.
+    pub fn smoke() -> Self {
+        Self { warmup_iters: 0, measure_iters: 1 }
+    }
+
+    /// The config actually run: `measure_iters` is clamped up to 1 so the
+    /// timing summary is always over at least one sample. Applied once,
+    /// up front, by [`bench_with`] — the result records the normalized
+    /// values, not the requested ones.
+    pub fn normalized(self) -> Self {
+        Self { warmup_iters: self.warmup_iters, measure_iters: self.measure_iters.max(1) }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// The normalized config the measurements ran under.
+    pub config: BenchConfig,
+    /// Timing statistics over the measured iterations (seconds).
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// criterion-style one-liner; the bracket labels the order statistics
+    /// it prints (min / p50 / max).
+    pub fn render(&self) -> String {
+        format!(
+            "{:<40} time: [min {} ms  p50 {} ms  max {} ms]  (mean ± σ: {} ± {} ms, n={})",
+            self.name,
+            fmt_ms(self.summary.min),
+            fmt_ms(self.summary.p50),
+            fmt_ms(self.summary.max),
+            fmt_ms(self.summary.mean),
+            fmt_ms(self.summary.stddev),
+            self.summary.n,
+        )
+    }
+
+    /// CSV row: name, mean_ms, p50_ms, p95_ms, n. The name field is
+    /// escaped per RFC 4180 (quoted when it contains a comma, quote, or
+    /// line break; embedded quotes doubled).
+    pub fn to_csv_row(&self) -> String {
+        format!(
+            "{},{:.3},{:.3},{:.3},{}",
+            csv_field(&self.name),
+            self.summary.mean * 1e3,
+            self.summary.p50 * 1e3,
+            self.summary.p95 * 1e3,
+            self.summary.n
+        )
+    }
+
+    /// The artifact record for this result.
+    pub fn to_record(&self) -> BenchRecord {
+        BenchRecord {
+            name: self.name.clone(),
+            warmup_iters: self.config.warmup_iters,
+            measure_iters: self.config.measure_iters,
+            summary: self.summary.clone(),
+        }
+    }
+}
+
+/// Quote/escape one CSV field per RFC 4180.
+fn csv_field(text: &str) -> String {
+    if text.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", text.replace('"', "\"\""))
+    } else {
+        text.to_string()
+    }
+}
+
+fn fmt_ms(seconds: f64) -> String {
+    format!("{:.3}", seconds * 1e3)
+}
+
+/// The in-process record sink drained by [`finish`] / [`take_records`].
+fn recorder() -> &'static Mutex<Vec<BenchRecord>> {
+    static RECORDER: OnceLock<Mutex<Vec<BenchRecord>>> = OnceLock::new();
+    RECORDER.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn with_recorder<R>(f: impl FnOnce(&mut Vec<BenchRecord>) -> R) -> R {
+    // Recover from poisoning: a panicking bench iteration must not also
+    // take down every later bench's recording (the Vec stays valid).
+    let mut guard = match recorder().lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    f(&mut guard)
+}
+
+/// Whether `QADAM_BENCH_SMOKE=1` is set (read per call — cheap, and keeps
+/// the harness usable from tests that manipulate the environment).
+pub fn smoke_enabled() -> bool {
+    std::env::var(ENV_SMOKE).map(|v| v == "1").unwrap_or(false)
+}
+
+/// Time `f` under `config`, returning the timing summary (seconds).
+///
+/// The config is [`BenchConfig::normalized`] first (and replaced by
+/// [`BenchConfig::smoke`] when `QADAM_BENCH_SMOKE=1`); the result is also
+/// recorded in-process for [`finish`].
+pub fn bench_with<R>(name: &str, config: BenchConfig, mut f: impl FnMut() -> R) -> BenchResult {
+    let config = if smoke_enabled() { BenchConfig::smoke() } else { config }.normalized();
+    for _ in 0..config.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(config.measure_iters);
+    for _ in 0..config.measure_iters {
+        let start = Instant::now();
+        std::hint::black_box(f());
+        samples.push(start.elapsed().as_secs_f64());
+    }
+    let result =
+        BenchResult { name: name.to_string(), config, summary: Summary::of(&samples) };
+    with_recorder(|records| records.push(result.to_record()));
+    println!("{}", result.render());
+    result
+}
+
+/// [`bench_with`] under the default config.
+pub fn bench<R>(name: &str, f: impl FnMut() -> R) -> BenchResult {
+    bench_with(name, BenchConfig::default(), f)
+}
+
+/// Print a bench-section header (groups output in `cargo bench` logs).
+pub fn section(title: &str) {
+    println!("\n──── {title} ────");
+}
+
+/// Drain every record collected since the last drain.
+pub fn take_records() -> Vec<BenchRecord> {
+    with_recorder(std::mem::take)
+}
+
+/// End-of-target hook: drain the recorded results and, when
+/// `QADAM_BENCH_OUT` names a directory, write `<dir>/<target>.json` as a
+/// canonical `qadam.bench` artifact. Host metadata is passed in by the
+/// caller (conventionally [`HostMeta::from_env`]). Failures are reported
+/// on stderr, never panicked — a bench run should survive a read-only
+/// filesystem.
+pub fn finish(target: &str, host: &HostMeta) {
+    let records = take_records();
+    let Some(dir) = std::env::var_os(ENV_OUT) else {
+        return;
+    };
+    let dir = std::path::PathBuf::from(dir);
+    if let Err(err) = std::fs::create_dir_all(&dir) {
+        eprintln!("bench: cannot create {}: {err}", dir.display());
+        return;
+    }
+    let path = dir.join(format!("{target}.json"));
+    let artifact = BenchArtifact::new(host.clone(), records);
+    match artifact.save(&path) {
+        Ok(()) => println!("bench: artifact written to {}", path.display()),
+        Err(err) => eprintln!("bench: failed to write {}: {err}", path.display()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let result = bench_with(
+            "noop",
+            BenchConfig { warmup_iters: 1, measure_iters: 5 },
+            || 1 + 1,
+        );
+        assert_eq!(result.summary.n, 5);
+        assert!(result.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn render_contains_name_and_units() {
+        let result = bench_with(
+            "render_test",
+            BenchConfig { warmup_iters: 0, measure_iters: 2 },
+            || (),
+        );
+        let line = result.render();
+        assert!(line.contains("render_test"));
+        assert!(line.contains("ms"));
+        let csv = result.to_csv_row();
+        assert_eq!(csv.split(',').count(), 5);
+    }
+
+    #[test]
+    fn render_labels_its_order_statistics() {
+        let result = bench_with(
+            "label_test",
+            BenchConfig { warmup_iters: 0, measure_iters: 2 },
+            || (),
+        );
+        let line = result.render();
+        for label in ["min", "p50", "max", "mean"] {
+            assert!(line.contains(label), "missing '{label}' in: {line}");
+        }
+    }
+
+    #[test]
+    fn zero_measure_iters_normalizes_to_one() {
+        assert_eq!(
+            BenchConfig { warmup_iters: 0, measure_iters: 0 }.normalized().measure_iters,
+            1
+        );
+        let result = bench_with(
+            "zero_iters",
+            BenchConfig { warmup_iters: 0, measure_iters: 0 },
+            || (),
+        );
+        assert_eq!(result.summary.n, 1);
+        assert_eq!(result.config.measure_iters, 1);
+    }
+
+    #[test]
+    fn csv_escapes_per_rfc4180() {
+        let mk = |name: &str| BenchResult {
+            name: name.to_string(),
+            config: BenchConfig::default(),
+            summary: Summary::of(&[0.001]),
+        };
+        // A comma'd name stays one field (quoted), so the row still has
+        // exactly 5 logical columns.
+        let row = mk("joint, 4x4").to_csv_row();
+        assert!(row.starts_with("\"joint, 4x4\","), "{row}");
+        let row = mk("say \"hi\"").to_csv_row();
+        assert!(row.starts_with("\"say \"\"hi\"\"\""), "{row}");
+        // Plain names stay unquoted.
+        assert!(mk("plain").to_csv_row().starts_with("plain,"));
+    }
+
+    #[test]
+    fn results_are_recorded_for_artifacts() {
+        let unique = "recorded_for_artifact_test";
+        let result = bench_with(
+            unique,
+            BenchConfig { warmup_iters: 0, measure_iters: 2 },
+            || (),
+        );
+        // Other lib tests share the process-wide recorder; look for our
+        // record rather than asserting on the whole drain.
+        let records = take_records();
+        let mine = records.iter().find(|r| r.name == unique).expect("record present");
+        assert_eq!(mine.measure_iters, 2);
+        assert_eq!(&result.to_record(), mine);
+    }
+
+    #[test]
+    fn timing_orders_workloads() {
+        let cheap = bench_with(
+            "cheap",
+            BenchConfig { warmup_iters: 1, measure_iters: 3 },
+            || (0..100u64).sum::<u64>(),
+        );
+        let costly = bench_with(
+            "costly",
+            BenchConfig { warmup_iters: 1, measure_iters: 3 },
+            // fold with a multiply so LLVM cannot closed-form the loop
+            || (0..2_000_000u64).fold(0u64, |acc, x| acc ^ x.wrapping_mul(0x9E3779B1)),
+        );
+        assert!(costly.summary.p50 >= cheap.summary.p50);
+    }
+}

@@ -11,13 +11,18 @@
 //! * **Output stationary (OS)**: psums pinned; weights stream from GLB every
 //!   cycle-group (no filter residency), ifmaps stream with modest reuse.
 
-use super::{map_layer_rs, AccessCounts, Dataflow, LayerMapping};
+use super::{map_layer_rs_stats, AccessCounts, Dataflow, LayerMapping, LayerStats};
 use crate::arch::AcceleratorConfig;
 use crate::dnn::{Layer, LayerKind};
 use crate::util::ceil_div;
 
 /// Map one layer with the weight-stationary dataflow.
 pub fn map_layer_ws(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
+    map_layer_ws_stats(layer, config).named(layer.name.clone())
+}
+
+/// [`map_layer_ws`] without the name allocation.
+pub fn map_layer_ws_stats(layer: &Layer, config: &AcceleratorConfig) -> LayerStats {
     let mut mapping = base(layer, config, Dataflow::WeightStationary);
     if layer.kind == LayerKind::Pool {
         return mapping;
@@ -49,6 +54,11 @@ pub fn map_layer_ws(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
 
 /// Map one layer with the output-stationary dataflow.
 pub fn map_layer_os(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
+    map_layer_os_stats(layer, config).named(layer.name.clone())
+}
+
+/// [`map_layer_os`] without the name allocation.
+pub fn map_layer_os_stats(layer: &Layer, config: &AcceleratorConfig) -> LayerStats {
     let mut mapping = base(layer, config, Dataflow::OutputStationary);
     if layer.kind == LayerKind::Pool {
         return mapping;
@@ -73,29 +83,38 @@ pub fn map_layer_os(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
 
 /// Dispatch by dataflow (RS delegates to the primary mapper).
 pub fn map_layer(dataflow: Dataflow, layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
+    map_layer_stats(dataflow, layer, config).named(layer.name.clone())
+}
+
+/// [`map_layer`] without the name allocation — the hot-path dispatch.
+pub fn map_layer_stats(
+    dataflow: Dataflow,
+    layer: &Layer,
+    config: &AcceleratorConfig,
+) -> LayerStats {
     match dataflow {
-        Dataflow::RowStationary => map_layer_rs(layer, config),
-        Dataflow::WeightStationary => map_layer_ws(layer, config),
-        Dataflow::OutputStationary => map_layer_os(layer, config),
+        Dataflow::RowStationary => map_layer_rs_stats(layer, config),
+        Dataflow::WeightStationary => map_layer_ws_stats(layer, config),
+        Dataflow::OutputStationary => map_layer_os_stats(layer, config),
     }
 }
 
 /// Shared compute model: same cycles as RS (the dataflows differ in traffic,
 /// not peak MACs/cycle), so traffic effects isolate cleanly in the ablation.
-fn base(layer: &Layer, config: &AcceleratorConfig, dataflow: Dataflow) -> LayerMapping {
-    let mut mapping = map_layer_rs(layer, config);
+fn base(layer: &Layer, config: &AcceleratorConfig, dataflow: Dataflow) -> LayerStats {
+    let mut mapping = map_layer_rs_stats(layer, config);
     mapping.dataflow = dataflow;
     mapping
 }
 
 /// Recompute DRAM traffic and the bandwidth bound after traffic edits.
 fn finish(
-    mut mapping: LayerMapping,
+    mut mapping: LayerStats,
     layer: &Layer,
     config: &AcceleratorConfig,
     ifmap_glb: u64,
     weight_glb: u64,
-) -> LayerMapping {
+) -> LayerStats {
     let act_bytes = |elems: u64| elems * config.pe.act_bits() as u64 / 8;
     let w_bytes = |elems: u64| (elems * config.pe.weight_bits() as u64).div_ceil(8);
     // DRAM refetch mirrors GLB refetch when the working set spills.
@@ -184,6 +203,18 @@ mod tests {
             map_layer(Dataflow::OutputStationary, &conv(), &cfg()).dataflow,
             Dataflow::OutputStationary
         );
+    }
+
+    #[test]
+    fn stats_dispatch_is_bit_identical_to_named_dispatch() {
+        for df in [Dataflow::RowStationary, Dataflow::WeightStationary, Dataflow::OutputStationary]
+        {
+            for layer in [conv(), Layer::pool("p", 32, 64, 2, 2)] {
+                let named = map_layer(df, &layer, &cfg());
+                let stats = map_layer_stats(df, &layer, &cfg());
+                assert_eq!(named.stats(), stats, "{df:?} {}", layer.name);
+            }
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@
 pub mod alt;
 pub mod network;
 
-pub use network::{map_model, ModelMapping};
+pub use network::{map_model, map_model_stats, MappingTotals, ModelMapping};
 
 use crate::arch::AcceleratorConfig;
 use crate::dnn::{Layer, LayerKind};
@@ -105,6 +105,58 @@ impl LayerMapping {
     pub fn latency_s(&self, clock_ghz: f64) -> f64 {
         self.cycles as f64 / (clock_ghz * 1e9)
     }
+
+    /// The label-free statistics view of this mapping.
+    pub fn stats(&self) -> LayerStats {
+        LayerStats {
+            dataflow: self.dataflow,
+            macs: self.macs,
+            cycles: self.cycles,
+            compute_cycles: self.compute_cycles,
+            utilization: self.utilization,
+            traffic: self.traffic,
+            tiles: self.tiles,
+        }
+    }
+}
+
+/// Per-layer mapping statistics without the identifying label — a `Copy`
+/// value, so the DSE hot loop ([`network::map_model_stats`]) aggregates
+/// layer results with zero heap allocation. [`map_layer_rs`] wraps one
+/// with the layer name for the reporting paths; the numbers are produced
+/// by the exact same code either way.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerStats {
+    /// Dataflow that produced this mapping.
+    pub dataflow: Dataflow,
+    /// MACs in the layer.
+    pub macs: u64,
+    /// Cycles to execute the layer (compute- or bandwidth-bound).
+    pub cycles: u64,
+    /// Compute-only cycles (no bandwidth stall).
+    pub compute_cycles: u64,
+    /// Average PE-array utilization in [0, 1]: MACs / (cycles × PEs).
+    pub utilization: f64,
+    /// Traffic statistics.
+    pub traffic: TrafficStats,
+    /// Tiling detail: (m_tiles, c_tiles, e_tiles) temporal tile counts.
+    pub tiles: (usize, usize, usize),
+}
+
+impl LayerStats {
+    /// Attach a layer name, producing the full [`LayerMapping`] record.
+    pub fn named(self, layer_name: String) -> LayerMapping {
+        LayerMapping {
+            layer_name,
+            dataflow: self.dataflow,
+            macs: self.macs,
+            cycles: self.cycles,
+            compute_cycles: self.compute_cycles,
+            utilization: self.utilization,
+            traffic: self.traffic,
+            tiles: self.tiles,
+        }
+    }
 }
 
 /// Map one layer with the row-stationary dataflow.
@@ -112,8 +164,13 @@ impl LayerMapping {
 /// Pooling layers do no MACs but still move their feature maps through the
 /// hierarchy; they are modeled as pure traffic.
 pub fn map_layer_rs(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
+    map_layer_rs_stats(layer, config).named(layer.name.clone())
+}
+
+/// [`map_layer_rs`] without the name allocation — the hot-path entry.
+pub fn map_layer_rs_stats(layer: &Layer, config: &AcceleratorConfig) -> LayerStats {
     if layer.kind == LayerKind::Pool {
-        return map_pool(layer, config);
+        return map_pool_stats(layer, config);
     }
     let r = layer.kernel; // filter rows (= S columns; square)
     let s = layer.kernel;
@@ -203,8 +260,7 @@ pub fn map_layer_rs(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
     let cycles = compute_cycles.max(dram_cycles).max(glb_cycles).max(1);
     let utilization = macs as f64 / (cycles as f64 * config.num_pes() as f64);
 
-    LayerMapping {
-        layer_name: layer.name.clone(),
+    LayerStats {
         dataflow: Dataflow::RowStationary,
         macs,
         cycles,
@@ -216,7 +272,7 @@ pub fn map_layer_rs(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
 }
 
 /// Pooling: no MACs; feature map streams GLB↔DRAM and through the array.
-fn map_pool(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
+fn map_pool_stats(layer: &Layer, config: &AcceleratorConfig) -> LayerStats {
     let act_bytes = |elems: u64| elems * config.pe.act_bits() as u64 / 8;
     let dram_bytes = act_bytes(layer.ifmap_elems()) + act_bytes(layer.ofmap_elems());
     let glb = AccessCounts { reads: layer.ifmap_elems(), writes: layer.ofmap_elems() };
@@ -226,8 +282,7 @@ fn map_pool(layer: &Layer, config: &AcceleratorConfig) -> LayerMapping {
     let bw_bytes_per_cycle = config.dram_bw_gbps / config.clock_ghz;
     let dram_cycles = (dram_bytes as f64 / bw_bytes_per_cycle).ceil() as u64;
     let cycles = compute_cycles.max(dram_cycles).max(1);
-    LayerMapping {
-        layer_name: layer.name.clone(),
+    LayerStats {
         dataflow: Dataflow::RowStationary,
         macs: 0,
         cycles,
@@ -340,6 +395,16 @@ mod tests {
         assert_eq!(mapping.macs, 0);
         assert!(mapping.traffic.dram_bytes > 0);
         assert_eq!(mapping.utilization, 0.0);
+    }
+
+    #[test]
+    fn stats_path_is_bit_identical_to_named_path() {
+        for layer in [conv(), Layer::pool("p", 32, 64, 2, 2), Layer::fc("fc", 512, 10)] {
+            let named = map_layer_rs(&layer, &cfg());
+            let stats = map_layer_rs_stats(&layer, &cfg());
+            assert_eq!(named.stats(), stats);
+            assert_eq!(stats.named(layer.name.clone()), named);
+        }
     }
 
     #[test]

@@ -1,8 +1,59 @@
 //! Whole-network mapping: run the layer mapper over a model and aggregate.
 
-use super::{alt::map_layer, Dataflow, LayerMapping, TrafficStats};
+use super::{
+    alt::{map_layer, map_layer_stats},
+    Dataflow, LayerMapping, TrafficStats,
+};
 use crate::arch::AcceleratorConfig;
 use crate::dnn::Model;
+
+/// Aggregate mapping totals without the model label — a `Copy` value, so
+/// the DSE hot path ([`map_model_stats`]) carries a whole model's mapping
+/// result with zero heap allocation. [`ModelMapping`] is this plus
+/// identity (and optionally per-layer records) for the reporting paths.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MappingTotals {
+    /// Dataflow that produced this mapping.
+    pub dataflow: Dataflow,
+    /// MACs per inference, summed over compute layers.
+    pub total_macs: u64,
+    /// End-to-end cycles per inference.
+    pub total_cycles: u64,
+    /// Aggregated memory traffic across all layers.
+    pub traffic: TrafficStats,
+    /// MAC-weighted average utilization.
+    pub avg_utilization: f64,
+}
+
+impl MappingTotals {
+    /// End-to-end inference latency (s) at a clock (GHz).
+    pub fn latency_s(&self, clock_ghz: f64) -> f64 {
+        self.total_cycles as f64 / (clock_ghz * 1e9)
+    }
+
+    /// Throughput in inferences/s at a clock (GHz).
+    pub fn inferences_per_s(&self, clock_ghz: f64) -> f64 {
+        1.0 / self.latency_s(clock_ghz)
+    }
+
+    /// Effective GMAC/s at a clock (GHz).
+    pub fn effective_gmacs(&self, clock_ghz: f64) -> f64 {
+        self.total_macs as f64 / self.latency_s(clock_ghz) / 1e9
+    }
+
+    /// Attach a model name, producing a totals-only [`ModelMapping`].
+    pub fn named(self, model_name: String) -> ModelMapping {
+        ModelMapping {
+            model_name,
+            dataflow: self.dataflow,
+            layers: Vec::new(),
+            total_macs: self.total_macs,
+            total_cycles: self.total_cycles,
+            traffic: self.traffic,
+            avg_utilization: self.avg_utilization,
+        }
+    }
+}
 
 /// Aggregated mapping of a full model on one configuration.
 #[derive(Debug, Clone, PartialEq)]
@@ -38,23 +89,35 @@ impl ModelMapping {
     pub fn effective_gmacs(&self, clock_ghz: f64) -> f64 {
         self.total_macs as f64 / self.latency_s(clock_ghz) / 1e9
     }
+
+    /// The label-free totals view of this mapping.
+    pub fn totals(&self) -> MappingTotals {
+        MappingTotals {
+            dataflow: self.dataflow,
+            total_macs: self.total_macs,
+            total_cycles: self.total_cycles,
+            traffic: self.traffic,
+            avg_utilization: self.avg_utilization,
+        }
+    }
 }
 
-/// Map every layer of `model` and aggregate **totals only** — the DSE
-/// hot-path variant: no per-layer records are materialized (`layers` is
-/// empty), which avoids one `Vec` + one `String` per layer per evaluation
-/// (≈35% of campaign time before this fast path existed; EXPERIMENTS.md
-/// §Perf).
-pub fn map_model_totals(
+/// Map every layer of `model` and aggregate **totals only**, with zero
+/// heap allocation — the DSE hot-path variant. No per-layer records or
+/// name `String`s are materialized: each layer contributes a `Copy`
+/// [`super::LayerStats`] (the earlier totals-only path still cloned one
+/// layer-name `String` per layer; ≈35% of campaign time went to the full
+/// per-layer records before that — EXPERIMENTS.md §Perf).
+pub fn map_model_stats(
     model: &Model,
     config: &AcceleratorConfig,
     dataflow: Dataflow,
-) -> ModelMapping {
+) -> MappingTotals {
     let mut total_macs = 0u64;
     let mut total_cycles = 0u64;
     let mut traffic = TrafficStats::default();
     for layer in &model.layers {
-        let m = map_layer(dataflow, layer, config);
+        let m = map_layer_stats(dataflow, layer, config);
         total_macs += m.macs;
         total_cycles += m.cycles;
         traffic.spad.reads += m.traffic.spad.reads;
@@ -69,15 +132,19 @@ pub fn map_model_totals(
     } else {
         total_macs as f64 / (total_cycles as f64 * config.num_pes() as f64)
     };
-    ModelMapping {
-        model_name: model.name.clone(),
-        dataflow,
-        layers: Vec::new(),
-        total_macs,
-        total_cycles,
-        traffic,
-        avg_utilization,
-    }
+    MappingTotals { dataflow, total_macs, total_cycles, traffic, avg_utilization }
+}
+
+/// Map every layer of `model` and aggregate **totals only** — the
+/// historical totals entry point, now a thin wrapper over
+/// [`map_model_stats`] that attaches the model name (`layers` stays
+/// empty).
+pub fn map_model_totals(
+    model: &Model,
+    config: &AcceleratorConfig,
+    dataflow: Dataflow,
+) -> ModelMapping {
+    map_model_stats(model, config, dataflow).named(model.name.clone())
 }
 
 /// Map every layer of `model` and aggregate.
@@ -144,6 +211,23 @@ mod tests {
             let mapping =
                 map_model(&model, &AcceleratorConfig::default(), Dataflow::RowStationary);
             assert!(mapping.avg_utilization > 0.0 && mapping.avg_utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn stats_path_matches_full_mapping_bit_for_bit() {
+        let model = model_for(ModelKind::ResNet56, Dataset::Cifar10);
+        let config = AcceleratorConfig::default();
+        for df in
+            [Dataflow::RowStationary, Dataflow::WeightStationary, Dataflow::OutputStationary]
+        {
+            let full = map_model(&model, &config, df);
+            let stats = map_model_stats(&model, &config, df);
+            assert_eq!(full.totals(), stats, "{df:?}");
+            let totals = map_model_totals(&model, &config, df);
+            assert_eq!(totals.totals(), stats, "{df:?}");
+            assert_eq!(totals.model_name, model.name);
+            assert!(totals.layers.is_empty());
         }
     }
 

@@ -19,7 +19,7 @@ pub use pareto::{dominates, pareto_front, pareto_front_reference, Orientation};
 use crate::arch::AcceleratorConfig;
 use crate::dataflow::Dataflow;
 use crate::dnn::Model;
-use crate::energy::energy_of;
+use crate::energy::energy_of_totals;
 use crate::error::{Error, Result};
 use crate::quant::PeType;
 use crate::synth::{synthesize, SynthReport};
@@ -61,14 +61,11 @@ pub fn evaluate(config: &AcceleratorConfig, model: &Model, seed: u64) -> Evaluat
 /// synthesis across the per-dataset model set).
 pub fn evaluate_with_synth(synth: &SynthReport, model: &Model) -> Evaluation {
     let config = &synth.config;
-    // Totals-only mapping: the hot path needs aggregates, not per-layer
-    // records (§Perf optimization 1).
-    let mapping = crate::dataflow::network::map_model_totals(
-        model,
-        config,
-        Dataflow::RowStationary,
-    );
-    let energy = energy_of(&mapping, synth);
+    // Stats-only mapping: the hot path needs aggregates, not per-layer
+    // records or even the model label — a `Copy` totals value, zero heap
+    // allocation per point (§Perf optimization 1).
+    let mapping = crate::dataflow::map_model_stats(model, config, Dataflow::RowStationary);
+    let energy = energy_of_totals(&mapping, synth);
     let latency_s = mapping.latency_s(synth.achieved_clock_ghz);
     let inf_per_s = 1.0 / latency_s;
     Evaluation {

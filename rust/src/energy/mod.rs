@@ -4,7 +4,7 @@
 //!          + P_leak × t_exec`  — the standard accelerator energy equation
 //! the paper's framework evaluates per (config, DNN) pair (§III-C).
 
-use crate::dataflow::ModelMapping;
+use crate::dataflow::{MappingTotals, ModelMapping};
 use crate::synth::SynthReport;
 use crate::tech::NODE_45NM;
 
@@ -49,6 +49,13 @@ impl EnergyBreakdown {
 
 /// Evaluate the energy of one mapped model on one synthesized design.
 pub fn energy_of(mapping: &ModelMapping, synth: &SynthReport) -> EnergyBreakdown {
+    energy_of_totals(&mapping.totals(), synth)
+}
+
+/// [`energy_of`] over the label-free [`MappingTotals`] view — the DSE
+/// hot-path entry point ([`crate::dataflow::map_model_stats`] →
+/// `energy_of_totals` evaluates a point with zero heap allocation).
+pub fn energy_of_totals(mapping: &MappingTotals, synth: &SynthReport) -> EnergyBreakdown {
     let pe = &synth.pe;
     const PJ_TO_UJ: f64 = 1e-6;
 
@@ -158,6 +165,17 @@ mod tests {
         let e = eval(PeType::Int16);
         let f = e.onchip_fraction();
         assert!(f > 0.0 && f < 1.0);
+    }
+
+    #[test]
+    fn totals_path_is_bit_identical_to_mapping_path() {
+        let config = AcceleratorConfig::default();
+        let model = model_for(ModelKind::ResNet56, Dataset::Cifar10);
+        let mapping = map_model(&model, &config, Dataflow::RowStationary);
+        let synth = synthesize_clean(&config);
+        let via_mapping = energy_of(&mapping, &synth);
+        let via_totals = energy_of_totals(&mapping.totals(), &synth);
+        assert_eq!(via_mapping, via_totals);
     }
 
     #[test]

@@ -137,6 +137,16 @@ impl EvalDatabase {
 
     /// Geometric-mean headline ratios across this dataset's models:
     /// (pe, perf/area gain, energy gain).
+    ///
+    /// The geomean inputs are ratios of best perf/area and best energy —
+    /// strictly positive by construction (every evaluation has positive
+    /// area, latency, and energy), and only PE types present in the space
+    /// contribute, so the sample vectors are non-empty. [`geomean`]'s 0
+    /// sentinel (empty/non-positive input) therefore cannot occur here;
+    /// if it ever surfaced it would be a bug upstream, not a valid
+    /// headline.
+    ///
+    /// [`geomean`]: crate::util::stats::geomean
     pub fn headline_geomean(&self) -> Result<Vec<(PeType, f64, f64)>> {
         let per_model = self.headline_per_model()?;
         Ok(PeType::ALL

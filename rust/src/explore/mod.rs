@@ -62,13 +62,13 @@ pub mod db;
 pub mod persist;
 
 pub use db::{CampaignStats, EvalDatabase, ModelSpace};
-pub use persist::{point_key, PointCache, BASE_SCHEMA_VERSION, SCHEMA_VERSION};
+pub use persist::{point_key, point_key_with, PointCache, BASE_SCHEMA_VERSION, SCHEMA_VERSION};
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
-use std::time::{Duration, Instant};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
 
 use crate::arch::{AcceleratorConfig, DesignSpace, ModelAxes};
 use crate::coordinator::pool::default_workers;
@@ -487,8 +487,8 @@ impl Explorer {
         let window = worker_count * 4;
         let cursor = AtomicUsize::new(start_pos);
         let cursor_ref = &cursor;
-        let delivered = AtomicUsize::new(start_pos);
-        let delivered_ref = &delivered;
+        let throttle = Throttle::new(start_pos);
+        let throttle_ref = &throttle;
         let stop = AtomicBool::new(false);
         let stop_ref = &stop;
         let index_for_ref = &index_for;
@@ -497,46 +497,57 @@ impl Explorer {
         std::thread::scope(|scope| {
             for _ in 0..worker_count {
                 let tx = tx.clone();
-                scope.spawn(move || loop {
-                    // Claim the next unevaluated position (self-balancing
-                    // across uneven per-point costs, like the pool).
-                    let pos = cursor_ref.fetch_add(1, Ordering::Relaxed);
-                    if pos >= total {
-                        break;
-                    }
-                    // Throttle: wait until the sink has caught up to within
-                    // `window`. The worker holding the lowest undelivered
-                    // position never waits, so progress is guaranteed.
-                    while pos >= delivered_ref.load(Ordering::Acquire) + window {
-                        if stop_ref.load(Ordering::Relaxed) {
+                scope.spawn(move || {
+                    // Per-worker scratch for cache-key rendering: reused
+                    // across every point this worker evaluates, so a
+                    // cached campaign allocates no key buffers in steady
+                    // state.
+                    let mut key_scratch = String::new();
+                    loop {
+                        // Claim the next unevaluated position
+                        // (self-balancing across uneven per-point costs,
+                        // like the pool).
+                        let pos = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                        if pos >= total {
+                            break;
+                        }
+                        // Throttle: sleep until the sink has caught up to
+                        // within `window`. The worker holding the lowest
+                        // undelivered position never waits, so progress is
+                        // guaranteed.
+                        if !throttle_ref.wait_within(pos, window, stop_ref) {
                             return;
                         }
-                        std::thread::park_timeout(Duration::from_millis(1));
-                    }
-                    let index = index_for_ref(pos);
-                    // Shard positions are validated against the space size
-                    // before the workers start.
-                    #[allow(clippy::expect_used)]
-                    let point =
-                        space.get(index).expect("shard index within joint cross-product");
-                    let models = &variant_models_ref[space.variant_index(index)];
-                    let config = point.config;
-                    let evals = evaluate_point(&config, models, seed, cache);
-                    if tx.send((pos, PointResult { index, config, evals })).is_err() {
-                        break;
+                        let index = index_for_ref(pos);
+                        // Shard positions are validated against the space
+                        // size before the workers start.
+                        #[allow(clippy::expect_used)]
+                        let point =
+                            space.get(index).expect("shard index within joint cross-product");
+                        let models = &variant_models_ref[space.variant_index(index)];
+                        let config = point.config;
+                        let evals =
+                            evaluate_point(&config, models, seed, cache, &mut key_scratch);
+                        if tx.send((pos, PointResult { index, config, evals })).is_err() {
+                            break;
+                        }
                     }
                 });
             }
             drop(tx);
             // Release throttled workers on any receiver exit, including a
             // sink panic — otherwise scope join would hang.
-            struct StopGuard<'a>(&'a AtomicBool);
+            struct StopGuard<'a> {
+                stop: &'a AtomicBool,
+                throttle: &'a Throttle,
+            }
             impl Drop for StopGuard<'_> {
                 fn drop(&mut self) {
-                    self.0.store(true, Ordering::Relaxed);
+                    self.stop.store(true, Ordering::SeqCst);
+                    self.throttle.wake_all();
                 }
             }
-            let _guard = StopGuard(stop_ref);
+            let _guard = StopGuard { stop: stop_ref, throttle: throttle_ref };
             // Reorder out-of-order completions so the sink observes the
             // deterministic cross-product order.
             let mut pending: BTreeMap<usize, PointResult> = BTreeMap::new();
@@ -562,7 +573,7 @@ impl Explorer {
                     }
                     sink(ready);
                     next += 1;
-                    delivered_ref.store(next, Ordering::Release);
+                    throttle_ref.advance(next);
                 }
             }
             debug_assert!(
@@ -585,17 +596,106 @@ impl Explorer {
     }
 }
 
+/// Back-pressure gate between [`Explorer::stream`]'s reorder receiver and
+/// its workers: a worker about to run more than `window` positions ahead
+/// of the last delivered one *sleeps* on a condvar until the sink catches
+/// up (or the campaign stops), instead of the 1 ms `park_timeout` polling
+/// loop this replaces — throttled workers now burn zero CPU and wake
+/// within one notify, not one timer tick.
+///
+/// Lost-wakeup freedom is the classic two-flag handshake, under `SeqCst`
+/// so the two stores/loads on each side cannot reorder:
+///
+/// * waiter: `waiters += 1`, then re-check `delivered` (and `stop`)
+///   *under the gate lock* before every wait;
+/// * notifier: publish `delivered` (or `stop`), then check `waiters`,
+///   and when nonzero take the gate lock before `notify_all`.
+///
+/// Either the notifier sees the waiter registered (and notifies under the
+/// lock the waiter holds until it actually blocks), or the waiter's
+/// locked re-check sees the new `delivered`/`stop` value and never
+/// blocks.
+struct Throttle {
+    /// Next undelivered position — everything below has reached the sink.
+    delivered: AtomicUsize,
+    /// Number of workers registered on (or entering) the condvar.
+    waiters: AtomicUsize,
+    /// Gate serializing the re-check-then-wait against notify.
+    gate: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Throttle {
+    fn new(start_pos: usize) -> Self {
+        Self {
+            delivered: AtomicUsize::new(start_pos),
+            waiters: AtomicUsize::new(0),
+            gate: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Worker side: block until `pos` is within `window` of the delivery
+    /// frontier. Returns `false` when the campaign stopped instead.
+    fn wait_within(&self, pos: usize, window: usize, stop: &AtomicBool) -> bool {
+        // Uncontended fast path: no lock traffic while the sink keeps up.
+        if pos < self.delivered.load(Ordering::SeqCst) + window {
+            return true;
+        }
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        let mut guard = self.gate.lock().unwrap_or_else(PoisonError::into_inner);
+        let proceed = loop {
+            if stop.load(Ordering::SeqCst) {
+                break false;
+            }
+            if pos < self.delivered.load(Ordering::SeqCst) + window {
+                break true;
+            }
+            guard = self.cv.wait(guard).unwrap_or_else(PoisonError::into_inner);
+        };
+        drop(guard);
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+        proceed
+    }
+
+    /// Receiver side: publish a new delivery frontier and wake throttled
+    /// workers. The common no-waiter case is a single atomic store plus
+    /// one atomic load — no lock.
+    fn advance(&self, next: usize) {
+        self.delivered.store(next, Ordering::SeqCst);
+        self.wake_if_waiting();
+    }
+
+    /// Wake every throttled worker (stop path — the caller has already
+    /// published the state change the workers must observe).
+    fn wake_all(&self) {
+        self.wake_if_waiting();
+    }
+
+    fn wake_if_waiting(&self) {
+        if self.waiters.load(Ordering::SeqCst) > 0 {
+            // Taking the gate lock orders this notify after any waiter's
+            // locked re-check that missed the published value.
+            drop(self.gate.lock().unwrap_or_else(PoisonError::into_inner));
+            self.cv.notify_all();
+        }
+    }
+}
+
 /// Evaluate one design point against the model set, consulting the
 /// content-addressed cache when present (a hit skips synthesis and
 /// mapping entirely; the pipeline's determinism makes hits bit-identical
-/// to recomputation).
+/// to recomputation). `key_scratch` is the caller's reusable buffer for
+/// rendering the cache key — workers thread one per thread so steady-state
+/// cache probes allocate nothing.
 fn evaluate_point(
     config: &AcceleratorConfig,
     models: &[Model],
     seed: u64,
     cache: Option<&Arc<Mutex<PointCache>>>,
+    key_scratch: &mut String,
 ) -> Vec<Evaluation> {
-    let key = cache.map(|_| persist::point_key(config, seed, models));
+    let key = cache.map(|_| persist::point_key_with(config, seed, models, key_scratch));
     if let (Some(cache), Some(key)) = (cache, key) {
         if let Some(hit) = lock_shared(cache).lookup(key) {
             return hit;
@@ -701,6 +801,30 @@ mod tests {
     fn empty_model_set_is_invalid_config() {
         let err = Explorer::over(SweepSpec::tiny()).run().unwrap_err();
         assert_eq!(err.kind(), "invalid_config");
+    }
+
+    #[test]
+    fn empty_model_set_with_frontier_and_checkpoint_is_invalid_config() {
+        use crate::pareto::CampaignFrontier;
+        // Regression guard: `stream` binds the frontier and builds the
+        // journal manifest with `self.models[0]` / `self.models[0].dataset`
+        // — validate() must reject the empty model set (typed, never a
+        // panic) before either path is reached, on both entry points.
+        let frontier = Arc::new(Mutex::new(CampaignFrontier::new()));
+        let journal = std::env::temp_dir()
+            .join(format!("qadam_guard_{}.jsonl", std::process::id()));
+        let explorer = Explorer::over(SweepSpec::tiny())
+            .frontier(frontier.clone())
+            .checkpoint(&journal, 1);
+        let err = explorer.stream(|_| {}).unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        assert!(err.to_string().contains("no models to evaluate"), "{err}");
+        let err = explorer.run().unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        // Rejected before any side effect: the frontier stayed unbound
+        // and the journal file was never created.
+        assert!(lock_shared(&frontier).models().is_empty());
+        assert!(!journal.exists(), "journal must not be created for a rejected campaign");
     }
 
     #[test]

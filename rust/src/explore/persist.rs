@@ -336,8 +336,24 @@ impl EvalDatabase {
 /// hash equal across runs and platforms, and any field change produces a
 /// different key.
 pub fn point_key(config: &crate::arch::AcceleratorConfig, seed: u64, models: &[Model]) -> u64 {
+    point_key_with(config, seed, models, &mut String::new())
+}
+
+/// [`point_key`] with a caller-supplied scratch buffer for the config's
+/// canonical-JSON render — the Explorer's workers thread one buffer per
+/// thread through every point, so steady-state cache probing performs no
+/// heap allocation. Byte-identical to [`point_key`] (the render is
+/// equality-tested against `config.to_json().to_string_canonical()`).
+pub fn point_key_with(
+    config: &crate::arch::AcceleratorConfig,
+    seed: u64,
+    models: &[Model],
+    scratch: &mut String,
+) -> u64 {
+    scratch.clear();
+    render_config_canonical(config, scratch);
     let mut hasher = Fnv64::new();
-    hasher.update(config.to_json().to_string_canonical().as_bytes());
+    hasher.update(scratch.as_bytes());
     hasher.update(&seed.to_le_bytes());
     for model in models {
         hasher.update(model.name.as_bytes());
@@ -358,6 +374,47 @@ pub fn point_key(config: &crate::arch::AcceleratorConfig, seed: u64, models: &[M
         }
     }
     hasher.finish()
+}
+
+/// Render `config.to_json().to_string_canonical()` into `out` without
+/// building the intermediate [`Json`] tree (the tree costs one `BTreeMap`
+/// plus ~9 key `String`s per call — pure overhead on the cache-key hot
+/// path). The key order below IS the canonical order: the canonical form
+/// sorts object keys, so the fields appear alphabetically. Byte-for-byte
+/// equality with the tree render is pinned by a test.
+fn render_config_canonical(config: &crate::arch::AcceleratorConfig, out: &mut String) {
+    use std::fmt::Write as _;
+    let field = |out: &mut String, key: &str, value: f64| {
+        out.push('"');
+        out.push_str(key);
+        out.push_str("\":");
+        // Json::Num rendering: integral values in i64 form, everything
+        // else via f64's shortest round-trip Display.
+        if value.fract() == 0.0 && value.abs() < 9e15 {
+            let _ = write!(out, "{}", value as i64);
+        } else {
+            let _ = write!(out, "{value}");
+        }
+    };
+    out.push('{');
+    field(out, "clock_ghz", config.clock_ghz);
+    out.push(',');
+    field(out, "cols", config.cols as f64);
+    out.push(',');
+    field(out, "dram_bw_gbps", config.dram_bw_gbps);
+    out.push(',');
+    field(out, "filter_spad", config.spad.filter_entries as f64);
+    out.push(',');
+    field(out, "glb_kib", config.glb_kib as f64);
+    out.push(',');
+    field(out, "ifmap_spad", config.spad.ifmap_entries as f64);
+    out.push_str(",\"pe\":");
+    crate::util::json::write_escaped(out, config.pe.name());
+    out.push(',');
+    field(out, "psum_spad", config.spad.psum_entries as f64);
+    out.push(',');
+    field(out, "rows", config.rows as f64);
+    out.push('}');
 }
 
 /// Content-addressed cache of fully evaluated design points, keyed by
@@ -1013,6 +1070,48 @@ mod tests {
         other.pe = PeType::LightPe1;
         assert_ne!(key, point_key(&other, 7, &models), "pe type must change the key");
         assert_ne!(key, point_key(&config, 7, &[]), "model set must change the key");
+    }
+
+    #[test]
+    fn config_render_matches_json_tree_byte_for_byte() {
+        // The scratch-buffer render must be indistinguishable from the
+        // Json-tree canonical render for every config shape — integral
+        // fields, fractional clocks/bandwidths, every PE name.
+        let mut configs = vec![AcceleratorConfig::default()];
+        for pe in PeType::ALL {
+            configs.push(AcceleratorConfig {
+                pe,
+                clock_ghz: 1.337,
+                dram_bw_gbps: 25.6,
+                rows: 7,
+                cols: 13,
+                glb_kib: 96,
+                ..AcceleratorConfig::default()
+            });
+        }
+        let mut scratch = String::new();
+        for config in &configs {
+            scratch.clear();
+            render_config_canonical(config, &mut scratch);
+            assert_eq!(scratch, config.to_json().to_string_canonical());
+        }
+    }
+
+    #[test]
+    fn point_key_with_reused_scratch_matches_point_key() {
+        let models =
+            vec![crate::dnn::model_for(crate::dnn::ModelKind::ResNet20, Dataset::Cifar10)];
+        let mut scratch = String::new();
+        for seed in [0u64, 7, 9999] {
+            for pe in [PeType::Int16, PeType::LightPe1] {
+                let config = AcceleratorConfig { pe, ..AcceleratorConfig::default() };
+                assert_eq!(
+                    point_key_with(&config, seed, &models, &mut scratch),
+                    point_key(&config, seed, &models),
+                    "scratch reuse must not change the key"
+                );
+            }
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@
 use std::path::Path;
 
 use qadam::arch::{AcceleratorConfig, SweepSpec};
+use qadam::bench::BenchArtifact;
 use qadam::coordinator::default_workers;
 use qadam::dataflow::{map_model, Dataflow};
 use qadam::dnn::{model_for, Dataset, ModelKind};
@@ -103,6 +104,22 @@ fn cli() -> Command {
                 Command::new("init", "emit a commented starter spec")
                     .opt("out", "", "write to this file (default: stdout)"),
             ),
+        )
+        .sub(
+            Command::new("bench", "bench-artifact utilities (see DESIGN.md §Bench artifacts)")
+                .sub(
+                    Command::new(
+                        "merge",
+                        "merge per-target artifacts (files or dirs) into one trajectory file",
+                    )
+                    .opt("out", "BENCH_PR7.json", "merged artifact output path"),
+                )
+                .sub(
+                    Command::new("diff", "compare two artifacts: <old.json> <new.json>")
+                        .opt("threshold", "10", "p50 regression threshold, percent")
+                        .flag("strict", "exit nonzero when a regression exceeds the threshold"),
+                )
+                .sub(Command::new("show", "print one artifact's records as a table")),
         )
         .sub(
             Command::new("cache", "inspect or clear a point-cache file")
@@ -454,6 +471,32 @@ fn lint_files(files: &[String], opts: &LintOptions, json_mode: bool) -> Result<(
     Ok(())
 }
 
+/// Load bench artifacts from a mix of file and directory arguments; a
+/// directory contributes every `*.json` inside it, in sorted order (the
+/// `QADAM_BENCH_OUT` layout: one artifact per bench target).
+fn load_bench_artifacts(args: &[String]) -> Result<Vec<BenchArtifact>> {
+    let mut artifacts = Vec::new();
+    for arg in args {
+        let path = Path::new(arg);
+        if path.is_dir() {
+            let mut files: Vec<_> = std::fs::read_dir(path)?
+                .filter_map(|entry| entry.ok().map(|e| e.path()))
+                .filter(|p| p.extension().is_some_and(|ext| ext == "json"))
+                .collect();
+            files.sort();
+            if files.is_empty() {
+                return Err(Error::InvalidConfig(format!("{arg}: no *.json artifacts inside")));
+            }
+            for file in files {
+                artifacts.push(BenchArtifact::load(&file)?);
+            }
+        } else {
+            artifacts.push(BenchArtifact::load(path)?);
+        }
+    }
+    Ok(artifacts)
+}
+
 /// The spec file named by the subcommand's positional argument.
 fn spec_path(matches: &Matches, usage: &str) -> Result<String> {
     matches
@@ -720,6 +763,84 @@ fn main() -> Result<()> {
         }
         "spec" => {
             println!("qadam spec init [--out FILE]  — emit a commented starter spec");
+        }
+        "bench" => {
+            println!("qadam bench merge <artifact|dir>... [--out FILE]  — build a trajectory file");
+            println!("qadam bench diff <old.json> <new.json> [--threshold PCT] [--strict]");
+            println!("qadam bench show <artifact.json>  — print one artifact's records");
+        }
+        "merge" => {
+            if matches.positional.is_empty() {
+                return Err(Error::InvalidConfig(
+                    "usage: qadam bench merge <artifact.json|dir>... [--out FILE]".into(),
+                ));
+            }
+            let parts = load_bench_artifacts(&matches.positional)?;
+            let count = parts.len();
+            let merged = BenchArtifact::merge(parts)?;
+            let out = matches.get_str("out");
+            merged.save(Path::new(out))?;
+            println!(
+                "merged {count} artifact(s) into {out} ({} benches, host '{}')",
+                merged.benches.len(),
+                merged.host.label
+            );
+        }
+        "diff" => {
+            let [old_path, new_path] = matches.positional.as_slice() else {
+                return Err(Error::InvalidConfig(
+                    "usage: qadam bench diff <old.json> <new.json> [--threshold PCT] [--strict]"
+                        .into(),
+                ));
+            };
+            let threshold: f64 = matches.get_str("threshold").parse().map_err(|_| {
+                Error::ParseError(format!(
+                    "bad --threshold '{}' (expected percent, e.g. 10)",
+                    matches.get_str("threshold")
+                ))
+            })?;
+            let old = BenchArtifact::load(Path::new(old_path))?;
+            let new = BenchArtifact::load(Path::new(new_path))?;
+            if old.host != new.host {
+                println!(
+                    "note: hosts differ ('{}' vs '{}'); timings are apples-to-oranges",
+                    old.host.label, new.host.label
+                );
+            }
+            let diff = old.diff(&new, threshold);
+            print!("{}", diff.render());
+            // Warn-only by default (the CI smoke job compares 1-iteration
+            // noise against the committed baseline); --strict turns the
+            // report into a gate.
+            if matches.flag("strict") && diff.has_regressions() {
+                return Err(Error::Runtime(format!(
+                    "{} bench regression(s) beyond +{threshold}% p50: {}",
+                    diff.regressions().len(),
+                    diff.regressions().join(", ")
+                )));
+            }
+        }
+        "show" => {
+            let file = spec_path(&matches, "qadam bench show <artifact.json>")?;
+            let artifact = BenchArtifact::load(Path::new(&file))?;
+            println!(
+                "{file}: {} benches on '{}' ({}/{})",
+                artifact.benches.len(),
+                artifact.host.label,
+                artifact.host.os,
+                artifact.host.arch
+            );
+            let mut table = Table::new(&["bench", "p50_ms", "mean_ms", "p95_ms", "iters"]);
+            for bench in &artifact.benches {
+                table.row(&[
+                    bench.name.clone(),
+                    format_sig(bench.summary.p50 * 1e3, 4),
+                    format_sig(bench.summary.mean * 1e3, 4),
+                    format_sig(bench.summary.p95 * 1e3, 4),
+                    bench.summary.n.to_string(),
+                ]);
+            }
+            print!("{}", table.render());
         }
         "cache" => {
             let file = matches.get_str("file");

@@ -47,8 +47,19 @@ pub struct FitReport {
 /// Degree 3 adds cubes (full cubic interactions would explode the basis
 /// beyond what ~10² synthesis samples support).
 pub fn expand(z: &[f64], degree: usize) -> Vec<f64> {
+    let mut out = Vec::new();
+    expand_into(z, degree, &mut out);
+    out
+}
+
+/// [`expand`] into a caller-owned buffer (cleared first) — the reuse path
+/// for repeated expansion against one basis: [`PolyModel::predict_with`]
+/// and the fit loop thread one buffer through every row instead of
+/// allocating a fresh `Vec` per sample.
+pub fn expand_into(z: &[f64], degree: usize, out: &mut Vec<f64>) {
     let p = z.len();
-    let mut out = Vec::with_capacity(1 + p * degree + if degree >= 2 { p * (p - 1) / 2 } else { 0 });
+    out.clear();
+    out.reserve(1 + p * degree + if degree >= 2 { p * (p - 1) / 2 } else { 0 });
     out.push(1.0);
     out.extend_from_slice(z);
     if degree >= 2 {
@@ -63,7 +74,6 @@ pub fn expand(z: &[f64], degree: usize) -> Vec<f64> {
             out.push(v * v * v);
         }
     }
-    out
 }
 
 fn fit_scaler(xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
@@ -78,8 +88,18 @@ fn fit_scaler(xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
         .collect()
 }
 
-fn standardize(x: &[f64], scaler: &[(f64, f64)]) -> Vec<f64> {
-    x.iter().zip(scaler).map(|(v, (m, s))| (v - m) / s).collect()
+fn standardize_into(x: &[f64], scaler: &[(f64, f64)], out: &mut Vec<f64>) {
+    out.clear();
+    out.extend(x.iter().zip(scaler).map(|(v, (m, s))| (v - m) / s));
+}
+
+/// Reusable buffers for repeated prediction/expansion against one fitted
+/// basis ([`PolyModel::predict_with`]). One scratch per caller thread
+/// makes per-sample prediction allocation-free.
+#[derive(Debug, Clone, Default)]
+pub struct PredictScratch {
+    z: Vec<f64>,
+    basis: Vec<f64>,
 }
 
 impl PolyModel {
@@ -88,9 +108,22 @@ impl PolyModel {
         assert_eq!(xs.len(), ys.len());
         assert!(!xs.is_empty());
         let scaler = fit_scaler(xs);
-        let expanded: Vec<Vec<f64>> =
-            xs.iter().map(|x| expand(&standardize(x, &scaler), degree)).collect();
-        let design = Matrix::from_rows(&expanded);
+        // Build the design matrix flat, reusing one expansion scratch per
+        // row (the old path materialized a `Vec<Vec<f64>>` of every
+        // expanded row before concatenating it again).
+        let mut scratch = PredictScratch::default();
+        let mut data = Vec::new();
+        let mut cols = 0;
+        for (r, x) in xs.iter().enumerate() {
+            standardize_into(x, &scaler, &mut scratch.z);
+            expand_into(&scratch.z, degree, &mut scratch.basis);
+            if r == 0 {
+                cols = scratch.basis.len();
+                data.reserve(cols * xs.len());
+            }
+            data.extend_from_slice(&scratch.basis);
+        }
+        let design = Matrix { rows: xs.len(), cols, data };
         // The ridge system (XᵀX + λI) is SPD for any λ > 0, so the
         // Cholesky solve cannot fail on the lambdas this crate uses.
         #[allow(clippy::expect_used)]
@@ -101,13 +134,22 @@ impl PolyModel {
 
     /// Predict the target for a raw feature vector.
     pub fn predict(&self, x: &[f64]) -> f64 {
-        let basis = expand(&standardize(x, &self.scaler), self.degree);
-        basis.iter().zip(&self.weights).map(|(b, w)| b * w).sum()
+        self.predict_with(x, &mut PredictScratch::default())
     }
 
-    /// Predictions over a raw feature matrix.
+    /// [`Self::predict`] with caller-owned scratch buffers — the
+    /// fit-once-predict-many path: zero allocation per sample once the
+    /// scratch has warmed to the basis size.
+    pub fn predict_with(&self, x: &[f64], scratch: &mut PredictScratch) -> f64 {
+        standardize_into(x, &self.scaler, &mut scratch.z);
+        expand_into(&scratch.z, self.degree, &mut scratch.basis);
+        scratch.basis.iter().zip(&self.weights).map(|(b, w)| b * w).sum()
+    }
+
+    /// Predictions over a raw feature matrix (one shared scratch).
     pub fn predict_all(&self, xs: &[Vec<f64>]) -> Vec<f64> {
-        xs.iter().map(|x| self.predict(x)).collect()
+        let mut scratch = PredictScratch::default();
+        xs.iter().map(|x| self.predict_with(x, &mut scratch)).collect()
     }
 }
 
@@ -129,8 +171,9 @@ pub fn cv_rmse(xs: &[Vec<f64>], ys: &[f64], degree: usize, folds: usize, seed: u
         let train_y: Vec<f64> =
             (0..n).filter(|i| !held_set.contains(i)).map(|i| ys[i]).collect();
         let model = PolyModel::fit(&train_x, &train_y, degree, 1e-6);
+        let mut scratch = PredictScratch::default();
         for &i in &held {
-            sq_err_sum += (model.predict(&xs[i]) - ys[i]).powi(2);
+            sq_err_sum += (model.predict_with(&xs[i], &mut scratch) - ys[i]).powi(2);
         }
     }
     (sq_err_sum / n as f64).sqrt()
@@ -232,10 +275,27 @@ mod tests {
     }
 
     #[test]
+    fn predict_with_reused_scratch_is_bit_identical() {
+        let (xs, ys) = synthetic_quadratic(60);
+        let model = PolyModel::fit(&xs, &ys, 2, 1e-9);
+        let mut scratch = PredictScratch::default();
+        for x in &xs {
+            // Exact f64 equality: the scratch path computes the very same
+            // operations as the allocating one.
+            assert_eq!(model.predict_with(x, &mut scratch), model.predict(x));
+        }
+        // expand_into clears a dirty buffer before writing.
+        let mut buf = vec![99.0; 7];
+        expand_into(&[2.0, 3.0], 2, &mut buf);
+        assert_eq!(buf, expand(&[2.0, 3.0], 2));
+    }
+
+    #[test]
     fn standardization_centers_features() {
         let xs = vec![vec![10.0], vec![20.0], vec![30.0]];
         let scaler = fit_scaler(&xs);
-        let z = standardize(&[20.0], &scaler);
+        let mut z = Vec::new();
+        standardize_into(&[20.0], &scaler, &mut z);
         assert!(z[0].abs() < 1e-12);
     }
 

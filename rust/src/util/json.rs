@@ -208,7 +208,7 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
-fn write_escaped(out: &mut String, text: &str) {
+pub(crate) fn write_escaped(out: &mut String, text: &str) {
     out.push('"');
     for ch in text.chars() {
         match ch {

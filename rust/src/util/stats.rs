@@ -2,6 +2,13 @@
 //!
 //! Shared by the synthesis-noise calibration, the PPA regression metrics,
 //! the bench harness, and the report generators.
+//!
+//! Every function here is **total**: degenerate inputs (empty slices,
+//! mismatched lengths, non-positive samples for the geometric mean) map to
+//! documented sentinel values instead of panicking. These helpers feed
+//! canonical-JSON artifacts, so a panic — or worse, a silent NaN — in a
+//! release build would either abort a campaign or poison a committed
+//! artifact.
 
 /// Arithmetic mean; 0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -25,21 +32,31 @@ pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
 
-/// Geometric mean of strictly positive samples; 0 for empty input.
+/// Geometric mean of strictly positive samples.
+///
+/// Total: returns the 0 sentinel for empty input **and** whenever any
+/// sample is non-positive or non-finite (where the log-domain mean would
+/// otherwise produce NaN/-inf that flows into headline ratios and
+/// canonical-JSON artifacts undetected in release builds). A 0 result for
+/// ratio-style inputs therefore always signals "not a valid sample set",
+/// never a legitimate geometric mean.
 pub fn geomean(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
+    if xs.is_empty() || xs.iter().any(|&x| !(x > 0.0) || !x.is_finite()) {
         return 0.0;
     }
-    debug_assert!(xs.iter().all(|&x| x > 0.0));
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
-/// Percentile via linear interpolation on the sorted copy (`p ∈ [0, 100]`).
+/// Percentile via linear interpolation on the sorted copy.
+///
+/// Total: returns 0 for an empty slice; `p` is clamped to `[0, 100]`.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty());
+    if xs.is_empty() {
+        return 0.0;
+    }
     let mut sorted = xs.to_vec();
     sorted.sort_by(|a, b| a.total_cmp(b));
-    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let rank = (p.clamp(0.0, 100.0) / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
@@ -49,27 +66,37 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
-/// Median (50th percentile).
+/// Median (50th percentile); 0 for an empty slice.
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
-/// Minimum; NaN-free input assumed.
+/// Minimum; NaN-free input assumed. 0 for an empty slice.
 pub fn min(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
     xs.iter().cloned().fold(f64::INFINITY, f64::min)
 }
 
-/// Maximum; NaN-free input assumed.
+/// Maximum; NaN-free input assumed. 0 for an empty slice.
 pub fn max(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
     xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
 }
 
 /// Pearson correlation coefficient between paired samples.
+///
+/// Total: pairs up to the shorter input (extra trailing samples on either
+/// side are ignored); fewer than 2 pairs or a zero-variance side yields 0.
 pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
-    assert_eq!(xs.len(), ys.len());
-    if xs.len() < 2 {
+    let n = xs.len().min(ys.len());
+    if n < 2 {
         return 0.0;
     }
+    let (xs, ys) = (&xs[..n], &ys[..n]);
     let mx = mean(xs);
     let my = mean(ys);
     let mut cov = 0.0;
@@ -87,8 +114,12 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
 }
 
 /// Coefficient of determination of predictions vs observations.
+///
+/// Total: pairs up to the shorter input; an empty pairing yields 1
+/// (a vacuously perfect fit, matching the zero-residual branch).
 pub fn r_squared(observed: &[f64], predicted: &[f64]) -> f64 {
-    assert_eq!(observed.len(), predicted.len());
+    let n = observed.len().min(predicted.len());
+    let (observed, predicted) = (&observed[..n], &predicted[..n]);
     let m = mean(observed);
     let ss_tot: f64 = observed.iter().map(|y| (y - m).powi(2)).sum();
     let ss_res: f64 = observed
@@ -103,9 +134,11 @@ pub fn r_squared(observed: &[f64], predicted: &[f64]) -> f64 {
 }
 
 /// Mean absolute percentage error (%) of predictions vs observations.
+///
+/// Total: pairs up to the shorter input; an empty pairing yields 0.
 pub fn mape(observed: &[f64], predicted: &[f64]) -> f64 {
-    assert_eq!(observed.len(), predicted.len());
-    if observed.is_empty() {
+    let n = observed.len().min(predicted.len());
+    if n == 0 {
         return 0.0;
     }
     let total: f64 = observed
@@ -113,13 +146,15 @@ pub fn mape(observed: &[f64], predicted: &[f64]) -> f64 {
         .zip(predicted)
         .map(|(y, f)| ((y - f) / y.abs().max(1e-30)).abs())
         .sum();
-    100.0 * total / observed.len() as f64
+    100.0 * total / n as f64
 }
 
 /// Root-mean-square error.
+///
+/// Total: pairs up to the shorter input; an empty pairing yields 0.
 pub fn rmse(observed: &[f64], predicted: &[f64]) -> f64 {
-    assert_eq!(observed.len(), predicted.len());
-    if observed.is_empty() {
+    let n = observed.len().min(predicted.len());
+    if n == 0 {
         return 0.0;
     }
     let ss: f64 = observed
@@ -127,7 +162,7 @@ pub fn rmse(observed: &[f64], predicted: &[f64]) -> f64 {
         .zip(predicted)
         .map(|(y, f)| (y - f).powi(2))
         .sum();
-    (ss / observed.len() as f64).sqrt()
+    (ss / n as f64).sqrt()
 }
 
 /// Five-number-plus summary used by the bench harness and reports.
@@ -150,9 +185,13 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Summarize a non-empty sample.
+    /// Summarize a sample. Total: an empty sample yields the zeroed
+    /// summary (`n == 0`, every statistic 0) — check `n` before trusting
+    /// the moments.
     pub fn of(xs: &[f64]) -> Self {
-        assert!(!xs.is_empty());
+        if xs.is_empty() {
+            return Self::empty();
+        }
         Self {
             n: xs.len(),
             mean: mean(xs),
@@ -162,6 +201,11 @@ impl Summary {
             p95: percentile(xs, 95.0),
             max: max(xs),
         }
+    }
+
+    /// The zeroed summary returned for empty samples.
+    pub fn empty() -> Self {
+        Self { n: 0, mean: 0.0, stddev: 0.0, min: 0.0, p50: 0.0, p95: 0.0, max: 0.0 }
     }
 }
 
@@ -183,11 +227,37 @@ mod tests {
     }
 
     #[test]
+    fn geomean_sentinel_on_degenerate_input() {
+        assert_eq!(geomean(&[]), 0.0);
+        assert_eq!(geomean(&[1.0, 0.0, 4.0]), 0.0);
+        assert_eq!(geomean(&[1.0, -2.0]), 0.0);
+        assert_eq!(geomean(&[1.0, f64::NAN]), 0.0);
+        assert_eq!(geomean(&[1.0, f64::INFINITY]), 0.0);
+        // The sentinel must never leak NaN.
+        assert!(geomean(&[f64::NAN]).is_finite());
+    }
+
+    #[test]
     fn percentile_interpolates() {
         let xs = [1.0, 2.0, 3.0, 4.0];
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_total_on_empty_and_clamped() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, -10.0), 1.0);
+        assert_eq!(percentile(&xs, 250.0), 3.0);
+    }
+
+    #[test]
+    fn min_max_total_on_empty() {
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
     }
 
     #[test]
@@ -197,6 +267,22 @@ mod tests {
         assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
         let neg: Vec<f64> = ys.iter().map(|y| -y).collect();
         assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paired_metrics_pair_to_shorter_input() {
+        // Extra trailing samples on either side are ignored, not a panic.
+        let obs = [1.0, 2.0, 3.0, 100.0];
+        let pred = [1.0, 2.0, 3.0];
+        assert!((r_squared(&obs, &pred) - 1.0).abs() < 1e-12);
+        assert_eq!(rmse(&obs, &pred), 0.0);
+        assert_eq!(mape(&obs, &pred), 0.0);
+        assert!((pearson(&obs, &pred) - 1.0).abs() < 1e-12);
+        // Empty pairings hit the documented sentinels.
+        assert_eq!(pearson(&[], &[1.0]), 0.0);
+        assert_eq!(r_squared(&[], &[]), 1.0);
+        assert_eq!(mape(&[], &[]), 0.0);
+        assert_eq!(rmse(&[1.0], &[]), 0.0);
     }
 
     #[test]
@@ -229,5 +315,14 @@ mod tests {
         assert_eq!(s.max, 100.0);
         assert!(s.p50 > 49.0 && s.p50 < 52.0);
         assert!(s.p95 > 94.0 && s.p95 < 97.0);
+    }
+
+    #[test]
+    fn summary_of_empty_is_zeroed() {
+        let s = Summary::of(&[]);
+        assert_eq!(s, Summary::empty());
+        assert_eq!(s.n, 0);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 0.0);
     }
 }

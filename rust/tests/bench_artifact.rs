@@ -1,0 +1,159 @@
+//! End-to-end tests for the bench-artifact pipeline behind the perf
+//! trajectory: harness recording → `qadam.bench` canonical JSON on disk →
+//! merge → regression diff, plus the empty-sample stats edges the
+//! artifacts depend on (a panicking `Summary::of` would take down every
+//! bench target).
+
+use std::path::PathBuf;
+
+use qadam::bench::{
+    bench_with, take_records, BenchArtifact, BenchConfig, BenchRecord, HostMeta,
+};
+use qadam::util::json::Json;
+use qadam::util::stats::Summary;
+
+/// Per-test temp dir (process id + name keeps parallel test binaries and
+/// repeated runs from colliding).
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qadam_bench_it_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("test temp dir");
+    dir
+}
+
+fn record(name: &str, p50: f64) -> BenchRecord {
+    BenchRecord {
+        name: name.to_string(),
+        warmup_iters: 1,
+        measure_iters: 7,
+        summary: Summary {
+            n: 7,
+            mean: p50 * 1.05,
+            stddev: p50 * 0.1,
+            min: p50 * 0.8,
+            p50,
+            p95: p50 * 1.4,
+            max: p50 * 1.5,
+        },
+    }
+}
+
+#[test]
+fn recorded_bench_round_trips_through_artifact_file() {
+    // Run a real (tiny) bench, capture its record, and push it through
+    // the same save/load path `finish` + `qadam bench merge` use.
+    let result = bench_with(
+        "it_roundtrip_probe",
+        BenchConfig { warmup_iters: 0, measure_iters: 3 },
+        || std::hint::black_box((0..512u64).sum::<u64>()),
+    );
+    let mine = take_records()
+        .into_iter()
+        .find(|r| r.name == "it_roundtrip_probe")
+        .expect("bench recorded");
+    assert_eq!(mine, result.to_record());
+
+    let dir = temp_dir("roundtrip");
+    let path = dir.join("probe.json");
+    let artifact = BenchArtifact::new(HostMeta::with_label("it-host"), vec![mine]);
+    artifact.save(&path).expect("save artifact");
+    let loaded = BenchArtifact::load(&path).expect("load artifact");
+    assert_eq!(loaded, artifact);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn canonical_text_is_byte_deterministic() {
+    let host = HostMeta::with_label("determinism");
+    let forward =
+        BenchArtifact::new(host.clone(), vec![record("a", 1e-3), record("b", 2e-3)]);
+    let reversed = BenchArtifact::new(host, vec![record("b", 2e-3), record("a", 1e-3)]);
+    // Same records, either insertion order, rendered twice: four
+    // identical byte strings.
+    let text = forward.to_canonical_text();
+    assert_eq!(text, forward.to_canonical_text());
+    assert_eq!(text, reversed.to_canonical_text());
+    // Canonical form is one line with the envelope present.
+    assert_eq!(text.matches('\n').count(), 1);
+    assert!(text.contains(r#""kind":"qadam.bench""#));
+    assert!(text.contains(r#""schema":1"#));
+    // And it parses back to a structurally equal value.
+    let reparsed = BenchArtifact::from_json(&Json::parse(&text).expect("parse")).expect("check");
+    assert_eq!(reparsed.to_canonical_text(), text);
+}
+
+#[test]
+fn merged_trajectory_diff_flags_injected_regression() {
+    let dir = temp_dir("diff");
+    // Two per-target artifacts, as QADAM_BENCH_OUT would lay them out.
+    let host = HostMeta::with_label("ci");
+    BenchArtifact::new(host.clone(), vec![record("mapper", 1e-3)])
+        .save(&dir.join("perf_hotpath.json"))
+        .expect("save target 1");
+    BenchArtifact::new(host.clone(), vec![record("cache_warm", 5e-3)])
+        .save(&dir.join("cache_resume.json"))
+        .expect("save target 2");
+
+    let baseline = BenchArtifact::merge(vec![
+        BenchArtifact::load(&dir.join("perf_hotpath.json")).expect("load 1"),
+        BenchArtifact::load(&dir.join("cache_resume.json")).expect("load 2"),
+    ])
+    .expect("merge");
+    assert_eq!(baseline.benches.len(), 2);
+
+    // Inject a 30% p50 regression into one bench and a harmless 5% wobble
+    // into the other.
+    let mut candidate = baseline.clone();
+    for bench in &mut candidate.benches {
+        bench.summary.p50 *= if bench.name == "mapper" { 1.3 } else { 1.05 };
+    }
+    let diff = baseline.diff(&candidate, 10.0);
+    assert!(diff.has_regressions());
+    assert_eq!(diff.regressions(), vec!["mapper"]);
+    assert!(diff.render().contains("REGRESSION"));
+
+    // The same candidate passes a looser gate.
+    assert!(!baseline.diff(&candidate, 50.0).has_regressions());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn diff_is_total_on_degenerate_inputs() {
+    let host = HostMeta::with_label("edge");
+    // Zero-p50 baseline (a smoke run can measure below timer resolution):
+    // the delta is defined as 0%, never a division-by-zero NaN.
+    let zero = BenchArtifact::new(host.clone(), vec![record("instant", 0.0)]);
+    let nonzero = BenchArtifact::new(host.clone(), vec![record("instant", 1e-3)]);
+    let diff = zero.diff(&nonzero, 10.0);
+    assert!(!diff.has_regressions());
+    assert!(diff.entries[0].delta_pct == 0.0);
+    // Disjoint artifacts compare as pure added/removed.
+    let other = BenchArtifact::new(host, vec![record("elsewhere", 1e-3)]);
+    let diff = nonzero.diff(&other, 10.0);
+    assert!(diff.entries.is_empty());
+    assert_eq!(diff.added, vec!["elsewhere".to_string()]);
+    assert_eq!(diff.removed, vec!["instant".to_string()]);
+    assert!(!diff.has_regressions());
+}
+
+#[test]
+fn empty_sample_stats_cannot_panic_the_harness() {
+    // The harness builds Summary::of over measured samples; these edges
+    // used to assert!-panic and would have taken the bench process down.
+    let empty = Summary::of(&[]);
+    assert_eq!(empty.n, 0);
+    assert_eq!(empty.mean, 0.0);
+    assert_eq!(empty.p50, 0.0);
+    // A zero-iteration config is normalized up to one sample.
+    let result = bench_with(
+        "it_zero_iters",
+        BenchConfig { warmup_iters: 0, measure_iters: 0 },
+        || (),
+    );
+    assert_eq!(result.summary.n, 1);
+    // And a record built from it survives the artifact round-trip.
+    let artifact =
+        BenchArtifact::new(HostMeta::with_label("edge"), vec![result.to_record()]);
+    let text = artifact.to_canonical_text();
+    let back = BenchArtifact::from_json(&Json::parse(&text).expect("parse")).expect("load");
+    assert_eq!(back, artifact);
+}
