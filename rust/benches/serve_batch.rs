@@ -1,0 +1,102 @@
+//! Bench: the batch scheduler — a 4-campaign `qadam serve` batch whose
+//! sweeps overlap pairwise, measured cold (empty shared cache, half the
+//! space deduped within the batch) and warm (`cache.json` already on
+//! disk, every design point a hit). The gap is the headline for
+//! re-serving a recurring batch; the cold number bounds what the
+//! scheduler itself adds on top of the campaigns it runs.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use qadam::bench::{bench_with, section, BenchConfig};
+use qadam::serve::{serve, BatchOutcome, BatchQueue, ServeConfig};
+
+/// Shared base spec: tenants override the `glb_kib` axis so each pair of
+/// neighbours shares half its design points (8 unique points across 16).
+const BASE: &str = "campaign { seed = 7 }\n\
+    sweep {\n  pe_type = [int16]\n  array = [8x8, 16x16]\n  glb_kib = [64, 128]\n  \
+    spad = [spad(12, 224, 24)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+    workload {\n  dataset = cifar10\n  models = [tiny]\n}\n\
+    model tiny {\n  fc head { in = 64, out = 10 }\n}\n";
+
+const GLB_OVERRIDES: [&str; 4] = ["[64, 128]", "[128, 192]", "[192, 256]", "[256, 64]"];
+
+/// Drop everything the previous serve left in `out` except, optionally,
+/// the shared `cache.json` — per-campaign dirs and the status journal go
+/// either way, so a re-serve always re-executes every campaign.
+fn reset_out_dir(out: &Path, keep_cache: bool) {
+    let Ok(entries) = fs::read_dir(out) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if keep_cache && path.file_name().is_some_and(|n| n == "cache.json") {
+            continue;
+        }
+        if path.is_dir() {
+            let _ = fs::remove_dir_all(&path);
+        } else {
+            let _ = fs::remove_file(&path);
+        }
+    }
+}
+
+fn batch_hits(outcome: &BatchOutcome) -> (u64, u64) {
+    outcome
+        .reports
+        .iter()
+        .fold((0, 0), |(h, m), r| (h + r.hits, m + r.misses))
+}
+
+fn main() {
+    let root = std::env::temp_dir().join(format!("qadam_bench_serve_{}", std::process::id()));
+    let spec_dir = root.join("specs");
+    fs::create_dir_all(&spec_dir).expect("bench spec dir");
+    fs::write(spec_dir.join("base.qsl"), BASE).expect("write base spec");
+    let specs: Vec<PathBuf> = GLB_OVERRIDES
+        .iter()
+        .enumerate()
+        .map(|(i, glb)| {
+            let path = spec_dir.join(format!("tenant_{i}.qsl"));
+            let body = format!("include \"base.qsl\"\noverride sweep {{ glb_kib = {glb} }}\n");
+            fs::write(&path, body).expect("write tenant spec");
+            path
+        })
+        .collect();
+    let queue = BatchQueue::build(&specs).expect("build batch queue");
+
+    let out = root.join("batch");
+    let config = ServeConfig::new(&out);
+
+    section("4-campaign batch, shared-cache dedupe");
+    let cold = bench_with("serve_cold_4_campaigns", BenchConfig::heavy(), || {
+        reset_out_dir(&out, false);
+        serve(&queue, &config).expect("cold batch")
+    });
+    println!("{}", cold.render());
+    // One priming batch leaves cache.json covering the whole joint space;
+    // the measured re-serves evaluate nothing.
+    reset_out_dir(&out, false);
+    let primed = serve(&queue, &config).expect("cache priming batch");
+    let (prime_hits, prime_misses) = batch_hits(&primed);
+    let warm = bench_with("serve_warm_4_campaigns", BenchConfig::heavy(), || {
+        reset_out_dir(&out, true);
+        serve(&queue, &config).expect("warm batch")
+    });
+    println!("{}", warm.render());
+    println!(
+        "warm-cache speedup: {:.1}x (cold batch: {prime_hits} in-batch hits / \
+         {prime_misses} misses over {} cached points)",
+        cold.summary.mean / warm.summary.mean.max(1e-9),
+        primed.cache_entries,
+    );
+
+    let _ = fs::remove_dir_all(&root);
+
+    println!("CSV:");
+    for result in [&cold, &warm] {
+        println!("{}", result.to_csv_row());
+    }
+
+    qadam::bench::finish("serve_batch", &qadam::bench::HostMeta::from_env());
+}

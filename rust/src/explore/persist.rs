@@ -444,6 +444,15 @@ pub struct PointCache {
     entries: BTreeMap<u64, Vec<Evaluation>>,
     hits: u64,
     misses: u64,
+    /// Completed saves of this cache lineage (persisted). `save` bumps
+    /// it under the caller's `&mut` exclusivity, so when several
+    /// campaigns share one `Arc<Mutex<PointCache>>` their saves are
+    /// totally ordered: the file on disk always carries the merged
+    /// entry set of *every* save that happened-before it, and its
+    /// generation says how many that was. A torn or lost save is
+    /// therefore observable as a generation gap instead of silently
+    /// resurrecting a cache missing another tenant's entries.
+    generation: u64,
 }
 
 impl PointCache {
@@ -475,6 +484,11 @@ impl PointCache {
     /// Lookups that missed since construction/load.
     pub fn misses(&self) -> u64 {
         self.misses
+    }
+
+    /// Completed saves of this cache lineage (see [`Self::save`]).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// Counted lookup: clones the cached evaluations on hit.
@@ -524,10 +538,13 @@ impl PointCache {
             .collect();
         let mut fields = envelope("qadam.pointcache");
         fields.push(("entries", Json::Arr(entries)));
+        fields.push(("generation", num(self.generation as f64)));
         obj(fields)
     }
 
-    /// Deserialize from [`Self::to_json`] output.
+    /// Deserialize from [`Self::to_json`] output. The `generation`
+    /// field is optional (pre-serve caches did not carry it) and
+    /// defaults to 0.
     pub fn from_json(json: &Json) -> Result<Self> {
         check_envelope(json, "qadam.pointcache")?;
         let mut cache = Self::new();
@@ -539,12 +556,22 @@ impl PointCache {
                 .collect::<Result<_>>()?;
             cache.entries.insert(key, evals);
         }
+        cache.generation = json
+            .get("generation")
+            .and_then(Json::as_i64)
+            .filter(|v| *v >= 0)
+            .map(|v| v as u64)
+            .unwrap_or(0);
         Ok(cache)
     }
 
     /// Write the cache as pretty-printed canonical JSON (atomic: temp
-    /// file + rename).
-    pub fn save(&self, path: &Path) -> Result<()> {
+    /// file + rename), bumping the save generation first. The `&mut`
+    /// receiver forces concurrent savers of a shared cache through its
+    /// mutex, so saves serialize and the persisted file monotonically
+    /// accumulates every tenant's entries.
+    pub fn save(&mut self, path: &Path) -> Result<()> {
+        self.generation += 1;
         write_atomic(path, &self.to_json().to_string_pretty())
     }
 

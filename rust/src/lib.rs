@@ -25,7 +25,10 @@
 //! tractable. Whole campaigns — space (model axes included), strategy,
 //! workload (including user-defined models with declared accuracies),
 //! persistence — are declarable as data in QSL spec files ([`spec`]):
-//! `qadam run campaign.qsl`.
+//! `qadam run campaign.qsl`. Batches of campaigns — one spec expanding
+//! into many via `include`/`override`/`matrix`, or many spec files —
+//! run concurrently with cross-campaign cache dedupe through the
+//! [`serve`] scheduler: `qadam serve a.qsl b.qsl --out batch/`.
 //!
 //! See `DESIGN.md` for the module inventory and the per-experiment index.
 
@@ -54,6 +57,7 @@ pub mod pareto;
 pub mod accuracy;
 pub mod explore;
 pub mod spec;
+pub mod serve;
 pub mod coordinator;
 pub mod runtime;
 pub mod report;

@@ -26,6 +26,7 @@ use qadam::quant::PeType;
 use qadam::report;
 use qadam::rtl;
 use qadam::runtime::{QatDriver, Runtime};
+use qadam::serve::{BatchQueue, ServeConfig};
 use qadam::sim;
 use qadam::spec::lint::{self as spec_lint, LintOptions};
 use qadam::spec::{
@@ -83,6 +84,16 @@ fn cli() -> Command {
                 .opt("resume", "", "provide persist.checkpoint when the spec omits it")
                 .opt("every", "16", "provide persist.every when the spec omits it")
                 .opt("frontier", "", "provide persist.frontier when the spec omits it"),
+        )
+        .sub(
+            Command::new(
+                "serve",
+                "run a batch of specs concurrently with a shared dedupe cache",
+            )
+            .opt("out", "serve-out", "batch output directory")
+            .opt("max-concurrent", "1", "campaigns in flight at once")
+            .opt("deny", "", "lint rules to escalate to errors (codes/names, or 'all')")
+            .opt("allow", "", "lint rules to suppress (codes/names, or 'all')"),
         )
         .sub(
             Command::new(
@@ -434,23 +445,42 @@ fn lint_files(files: &[String], opts: &LintOptions, json_mode: bool) -> Result<(
     let mut docs = Vec::new();
     let mut denials = 0usize;
     for file in files {
-        let source = std::fs::read_to_string(file)?;
-        let (campaign, diags, findings) = spec_lint::lint_source(&source, opts);
-        if campaign.is_none() {
+        let expansion = spec::expand_path(Path::new(file))?;
+        let source = &expansion.source;
+        if expansion.has_errors() {
             // Not lintable at all: surface the resolver's diagnostics.
-            print!("{}", diags.render(&source, file));
+            print!("{}", expansion.diags.render(source, file));
             return Err(Error::ParseError(format!(
                 "{file}: {} error(s); fix the spec before linting",
-                diags.error_count()
+                expansion.diags.error_count()
             )));
         }
+        // Lint every expanded campaign, then dedupe: matrix combinations
+        // share most of their composed AST, so identical findings (same
+        // rule, same span, same message) would otherwise repeat per
+        // combination.
+        let mut findings: Vec<spec_lint::Finding> = Vec::new();
+        for expanded in &expansion.campaigns {
+            for finding in spec_lint::lint_campaign(source, &expanded.file, &expanded.campaign, opts)
+            {
+                let duplicate = findings.iter().any(|f| {
+                    f.code == finding.code
+                        && f.span.start == finding.span.start
+                        && f.message == finding.message
+                });
+                if !duplicate {
+                    findings.push(finding);
+                }
+            }
+        }
+        findings.sort_by(|a, b| (a.span.start, a.code).cmp(&(b.span.start, b.code)));
         denials += findings.iter().filter(|f| f.level == spec_lint::Level::Deny).count();
         if json_mode {
-            docs.push(spec_lint::to_json(file, &source, &findings));
+            docs.push(spec_lint::to_json(file, source, &findings));
         } else if findings.is_empty() {
             println!("{file}: clean ({} rules)", spec::RULES.len());
         } else {
-            print!("{}", spec_lint::render(&findings, &source, file));
+            print!("{}", spec_lint::render(&findings, source, file));
         }
     }
     if json_mode {
@@ -674,8 +704,24 @@ fn main() -> Result<()> {
         }
         "run" => {
             let file = spec_path(&matches, "qadam run <campaign.qsl> (see 'qadam spec init')")?;
-            let source = std::fs::read_to_string(&file)?;
-            let mut campaign = spec::compile(&source, &file)?;
+            let expansion = spec::expand_path(Path::new(&file))?;
+            if !expansion.diags.is_empty() {
+                print!("{}", expansion.diags.render(&expansion.source, &file));
+            }
+            if expansion.has_errors() {
+                return Err(Error::ParseError(format!(
+                    "{file}: {} error(s)",
+                    expansion.diags.error_count()
+                )));
+            }
+            let mut campaigns = expansion.campaigns;
+            if campaigns.len() != 1 {
+                return Err(Error::InvalidConfig(format!(
+                    "{file} expands to {} campaigns; run batches with 'qadam serve'",
+                    campaigns.len()
+                )));
+            }
+            let mut campaign = campaigns.remove(0).campaign;
             merge_flag_overrides(&mut campaign, &matches)?;
             println!(
                 "campaign {}: {} design points x {} models [{}]",
@@ -686,44 +732,105 @@ fn main() -> Result<()> {
             );
             print_campaign_outcome(&campaign.execute()?)?;
         }
+        "serve" => {
+            if matches.positional.is_empty() {
+                return Err(Error::InvalidConfig(
+                    "usage: qadam serve <campaign.qsl>... [--out DIR] [--max-concurrent K] \
+                     [--deny CODES|all] [--allow CODES|all]"
+                        .into(),
+                ));
+            }
+            let specs: Vec<std::path::PathBuf> =
+                matches.positional.iter().map(|p| Path::new(p).to_path_buf()).collect();
+            let queue = BatchQueue::build(&specs)?;
+            for warning in &queue.warnings {
+                print!("{warning}");
+            }
+            let mut config = ServeConfig::new(matches.get_str("out"));
+            config.max_concurrent = matches.get_usize("max-concurrent").max(1);
+            if matches.was_set("workers") {
+                config.workers = workers;
+            }
+            config.lint =
+                LintOptions::parse(matches.get_str("deny"), matches.get_str("allow"))?;
+            println!(
+                "serving {} campaign(s) from {} spec file(s) -> {}",
+                queue.len(),
+                specs.len(),
+                config.out_dir.display()
+            );
+            let outcome = qadam::serve::serve(&queue, &config)?;
+            let mut table = Table::new(&["campaign", "label", "state", "hits", "misses", "detail"]);
+            for report in &outcome.reports {
+                table.row(&[
+                    format!("{:016x}", report.fingerprint),
+                    report.label.clone(),
+                    report.state.label().into(),
+                    report.hits.to_string(),
+                    report.misses.to_string(),
+                    report.detail.clone(),
+                ]);
+            }
+            print!("{}", table.render());
+            if outcome.cache_recovered {
+                println!(
+                    "warning: shared cache was torn or corrupt; started cold (results unaffected)"
+                );
+            }
+            println!(
+                "shared cache: {} design points -> {}",
+                outcome.cache_entries,
+                outcome.cache_path.display()
+            );
+            println!("status journal: {}", outcome.status_path.display());
+            let failures = outcome.failures();
+            if failures > 0 {
+                return Err(Error::Runtime(format!("{failures} campaign(s) failed")));
+            }
+        }
         "validate" => {
             let file = spec_path(&matches, "qadam validate <campaign.qsl> [--lint]")?;
-            let source = std::fs::read_to_string(&file)?;
+            let expansion = spec::expand_path(Path::new(&file))?;
+            let source = &expansion.source;
+            if !expansion.diags.is_empty() {
+                print!("{}", expansion.diags.render(source, &file));
+            }
+            if expansion.has_errors() {
+                return Err(Error::ParseError(format!(
+                    "{file}: {} error(s)",
+                    expansion.diags.error_count()
+                )));
+            }
             let lint_opts = matches
                 .flag("lint")
                 .then(|| LintOptions::parse(matches.get_str("deny"), matches.get_str("allow")))
                 .transpose()?;
-            let (campaign, diags, findings) = match &lint_opts {
-                Some(opts) => spec_lint::lint_source(&source, opts),
-                None => {
-                    let (campaign, diags) = spec::check(&source);
-                    (campaign, diags, Vec::new())
+            let multi = expansion.campaigns.len() > 1;
+            let mut denials = 0usize;
+            for expanded in &expansion.campaigns {
+                if multi {
+                    println!("-- campaign [{}]", expanded.label);
                 }
-            };
-            if !diags.is_empty() {
-                print!("{}", diags.render(&source, &file));
-            }
-            match campaign {
-                Some(campaign) => {
+                if let Some(opts) = &lint_opts {
+                    let findings =
+                        spec_lint::lint_campaign(source, &expanded.file, &expanded.campaign, opts);
                     if !findings.is_empty() {
-                        print!("{}", spec_lint::render(&findings, &source, &file));
+                        print!("{}", spec_lint::render(&findings, source, &file));
                     }
-                    print!("{}", campaign.summary());
-                    let denials =
+                    denials +=
                         findings.iter().filter(|f| f.level == spec_lint::Level::Deny).count();
-                    if denials > 0 {
-                        return Err(Error::InvalidConfig(format!(
-                            "{file}: {denials} deny-level lint finding(s)"
-                        )));
-                    }
-                    println!("{file}: ok");
                 }
-                None => {
-                    return Err(Error::ParseError(format!(
-                        "{file}: {} error(s)",
-                        diags.error_count()
-                    )));
-                }
+                print!("{}", expanded.campaign.summary());
+            }
+            if denials > 0 {
+                return Err(Error::InvalidConfig(format!(
+                    "{file}: {denials} deny-level lint finding(s)"
+                )));
+            }
+            if multi {
+                println!("{file}: ok ({} campaigns)", expansion.campaigns.len());
+            } else {
+                println!("{file}: ok");
             }
         }
         "lint" => {

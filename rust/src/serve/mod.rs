@@ -1,0 +1,42 @@
+//! `qadam serve` — the multi-campaign batch scheduler.
+//!
+//! The serving layer between the single-campaign engine and a
+//! multi-tenant service: it accepts a [`queue`] of QSL spec files (each
+//! of which may expand into several campaigns via `include` /
+//! `override` / `matrix` — see [`crate::spec::expand`]), runs them
+//! through the [`sched`]uler over the existing
+//! [`Explorer`](crate::explore::Explorer) machinery with one shared
+//! content-addressed [`PointCache`](crate::explore::PointCache), and
+//! streams per-campaign lifecycle transitions into the [`status`]
+//! journal.
+//!
+//! Layout of a batch output directory:
+//!
+//! ```text
+//! out/
+//!   serve.status.json        batch journal (write-only; never read back)
+//!   cache.json               shared dedupe cache (save-generation counted)
+//!   <fingerprint>/           one directory per campaign
+//!     run.journal            checkpoint journal (kill/resume source of truth)
+//!     db.json                evaluation database
+//!     frontier.json          streaming Pareto frontier
+//! ```
+//!
+//! Recovery matrix (asserted byte-offset-by-byte-offset by the fault
+//! suite, `tests/faults.rs`):
+//!
+//! | torn artifact        | recovery                                     |
+//! |----------------------|----------------------------------------------|
+//! | `run.journal` tail   | truncate to last complete line, resume       |
+//! | `run.journal` header | journal set aside (`.torn`), fresh start     |
+//! | `cache.json`         | cold cache — correct, just no dedupe         |
+//! | `db.json`/`frontier` | rewritten whole on completion (atomic saves) |
+//! | `serve.status.json`  | ignored — state lives in campaign journals   |
+
+pub mod queue;
+pub mod sched;
+pub mod status;
+
+pub use queue::{BatchQueue, QueueEntry};
+pub use sched::{campaign_dir, serve, BatchOutcome, CampaignReport, ServeConfig};
+pub use status::{BatchStatus, CampaignState, CampaignStatus, Transition, STATUS_SCHEMA};

@@ -1,0 +1,103 @@
+//! The batch queue: spec files → an ordered campaign set.
+//!
+//! [`BatchQueue::build`] expands every queued QSL file through
+//! [`spec::expand`](crate::spec::expand) (include splicing, override
+//! merging, matrix cross products) into a flat, ordered list of
+//! [`QueueEntry`]s. Expansion *errors* abort the whole batch — a spec
+//! that cannot be read is user input to fix, not a campaign to skip —
+//! while per-campaign problems found later (lint denials, runtime
+//! failures) only affect their campaign.
+//!
+//! Each entry keeps its composed AST and spliced source so the
+//! scheduler can run the pre-flight lint gate with full-fidelity
+//! diagnostics against the exact text the campaign came from.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::spec::ast::SpecFile;
+use crate::spec::expand::{expand_path, Expansion};
+use crate::spec::ResolvedCampaign;
+
+/// One campaign awaiting execution.
+#[derive(Debug, Clone)]
+pub struct QueueEntry {
+    /// The spec file this campaign expanded from.
+    pub spec_path: PathBuf,
+    /// Display name of that file (as given on the command line).
+    pub filename: String,
+    /// The spliced source all of this entry's spans refer to.
+    pub source: String,
+    /// Matrix label (`"seed=2,glb_kib=[128]"`; empty for plain specs).
+    pub label: String,
+    /// The composed per-campaign AST (for the lint gate).
+    pub file: SpecFile,
+    /// The resolved campaign.
+    pub campaign: ResolvedCampaign,
+    /// The campaign's QSL identity fingerprint — names its artifact
+    /// directory and dedupes repeats within a batch.
+    pub fingerprint: u64,
+}
+
+/// An ordered batch of campaigns, plus any expansion warnings rendered
+/// for display.
+#[derive(Debug, Clone, Default)]
+pub struct BatchQueue {
+    /// Campaigns in queue order (spec order, then matrix order).
+    pub entries: Vec<QueueEntry>,
+    /// Rendered warning batches, one per spec that produced any.
+    pub warnings: Vec<String>,
+}
+
+impl BatchQueue {
+    /// Expand `specs` (in order) into a batch queue. Any expansion
+    /// error — unreadable file, include cycle, bad override/matrix,
+    /// unresolvable campaign — fails the whole build with the rendered
+    /// diagnostics.
+    pub fn build(specs: &[PathBuf]) -> Result<Self> {
+        if specs.is_empty() {
+            return Err(Error::InvalidConfig(
+                "qadam serve needs at least one spec file".into(),
+            ));
+        }
+        let mut queue = BatchQueue::default();
+        for path in specs {
+            queue.push_spec(path)?;
+        }
+        Ok(queue)
+    }
+
+    /// Expand one spec file and append its campaigns.
+    pub fn push_spec(&mut self, path: &Path) -> Result<()> {
+        let Expansion { filename, source, campaigns, diags } = expand_path(path)?;
+        if diags.has_errors() {
+            return Err(diags.into_error(&source, &filename));
+        }
+        if !diags.is_empty() {
+            self.warnings.push(diags.render(&source, &filename));
+        }
+        for expanded in campaigns {
+            let fingerprint = expanded.campaign.fingerprint();
+            self.entries.push(QueueEntry {
+                spec_path: path.to_path_buf(),
+                filename: filename.clone(),
+                source: source.clone(),
+                label: expanded.label,
+                file: expanded.file,
+                campaign: expanded.campaign,
+                fingerprint,
+            });
+        }
+        Ok(())
+    }
+
+    /// Number of queued campaigns.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the queue holds no campaigns.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}

@@ -1,0 +1,307 @@
+//! The batch scheduler: lint gate, concurrent execution, shared-cache
+//! dedupe, and per-campaign artifact directories.
+//!
+//! [`serve`] drives a [`BatchQueue`] end to end:
+//!
+//! 1. every campaign is admitted to the [`BatchStatus`] journal
+//!    (`serve.status.json`, rewritten atomically on every transition);
+//! 2. duplicate fingerprints are skipped (the first occurrence wins);
+//! 3. each campaign passes the Q001–Q012 pre-flight lint gate — deny
+//!    findings skip *that campaign*, never the batch;
+//! 4. surviving campaigns run over the existing [`Explorer`] pipeline,
+//!    up to `max_concurrent` at a time, all sharing one
+//!    `Arc<Mutex<PointCache>>` so overlapping evaluations across
+//!    tenants dedupe to cache hits;
+//! 5. each campaign persists its own checkpoint journal, database, and
+//!    frontier under `<out>/<fingerprint>/`, so killing the batch at
+//!    any point and re-running resumes every campaign from its journal,
+//!    byte-identical to an uninterrupted run.
+//!
+//! The shared cache lives at `<out>/cache.json` and is saved (under the
+//! cache mutex, bumping its save generation) after each campaign
+//! completes. A torn or corrupt cache file on startup degrades to a
+//! cold cache — results stay correct, only dedupe is lost. Per-campaign
+//! hit/miss attributions come from counter snapshots around each run:
+//! exact at `--max-concurrent 1` (the deterministic mode the tests
+//! pin), approximate when runs overlap; batch-wide totals are always
+//! exact.
+//!
+//! Campaign artifacts (journal, db, frontier) are byte-deterministic in
+//! the campaign's identity alone — queue order, kill/resume timing, and
+//! cache warmth change none of their bytes. `cache.json` is excluded
+//! from that contract: its save generation counts completed saves.
+//!
+//! [`Explorer`]: crate::explore::Explorer
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use super::queue::{BatchQueue, QueueEntry};
+use super::status::{BatchStatus, CampaignState};
+use crate::error::Result;
+use crate::explore::{lock_shared, PointCache};
+use crate::spec::lint::{lint_campaign, Level, LintOptions};
+use crate::spec::PersistPlan;
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Batch output directory: `serve.status.json`, `cache.json`, and
+    /// one `<fingerprint>/` directory per completed campaign.
+    pub out_dir: PathBuf,
+    /// Campaigns in flight at once (minimum 1). At 1 the schedule — and
+    /// the status journal — is fully deterministic.
+    pub max_concurrent: usize,
+    /// Per-campaign worker-thread override (0 = keep each campaign's
+    /// own setting).
+    pub workers: usize,
+    /// Pre-flight lint configuration (deny findings skip the campaign).
+    pub lint: LintOptions,
+}
+
+impl ServeConfig {
+    /// Defaults: sequential, campaign-declared workers, default lint
+    /// levels.
+    pub fn new(out_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            out_dir: out_dir.into(),
+            max_concurrent: 1,
+            workers: 0,
+            lint: LintOptions::default(),
+        }
+    }
+}
+
+/// Final state of one campaign, for callers.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    /// The campaign's QSL fingerprint.
+    pub fingerprint: u64,
+    /// Spec file it came from.
+    pub spec: String,
+    /// Matrix label (empty for plain specs).
+    pub label: String,
+    /// Terminal state (`Done` / `Failed` / `Skipped`).
+    pub state: CampaignState,
+    /// Context for that state (lint codes, error text, point counts).
+    pub detail: String,
+    /// Shared-cache hits attributed to this campaign.
+    pub hits: u64,
+    /// Shared-cache misses attributed to this campaign.
+    pub misses: u64,
+    /// The campaign's artifact directory, when it completed.
+    pub dir: Option<PathBuf>,
+}
+
+/// What a whole batch did.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    /// Per-campaign reports in queue order.
+    pub reports: Vec<CampaignReport>,
+    /// Where the status journal lives.
+    pub status_path: PathBuf,
+    /// Where the shared cache was saved.
+    pub cache_path: PathBuf,
+    /// Design points in the shared cache after the batch.
+    pub cache_entries: usize,
+    /// Whether a torn/corrupt cache file was found on startup and the
+    /// batch started cold instead (correct, just not deduped).
+    pub cache_recovered: bool,
+}
+
+impl BatchOutcome {
+    /// Number of campaigns that failed at runtime (skips don't count).
+    pub fn failures(&self) -> usize {
+        self.reports.iter().filter(|r| r.state == CampaignState::Failed).count()
+    }
+}
+
+struct RunStats {
+    points: usize,
+    hits: u64,
+    misses: u64,
+}
+
+enum Event {
+    Started(usize),
+    Finished(usize, std::result::Result<RunStats, String>),
+}
+
+/// Run a batch. See the module docs for the full contract. Errors out
+/// only on batch-level failures (output directory, status-journal
+/// writes); per-campaign failures land in the returned reports.
+pub fn serve(queue: &BatchQueue, config: &ServeConfig) -> Result<BatchOutcome> {
+    std::fs::create_dir_all(&config.out_dir)?;
+    let status_path = config.out_dir.join("serve.status.json");
+    let cache_path = config.out_dir.join("cache.json");
+
+    let mut status = BatchStatus::new();
+    for entry in &queue.entries {
+        status.enqueue(entry.fingerprint, &entry.filename, &entry.label);
+    }
+    status.save(&status_path)?;
+
+    // Warm the shared cache from a previous batch; torn or corrupt
+    // files degrade to a cold (correct) start.
+    let (loaded, cache_recovered) = if cache_path.exists() {
+        match PointCache::load(&cache_path) {
+            Ok(cache) => (cache, false),
+            Err(_) => (PointCache::new(), true),
+        }
+    } else {
+        (PointCache::new(), false)
+    };
+    let shared = Arc::new(Mutex::new(loaded));
+
+    // Pre-flight: duplicate-fingerprint dedupe, then the lint gate.
+    let mut runnable: Vec<usize> = Vec::new();
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
+    for (index, entry) in queue.entries.iter().enumerate() {
+        if !seen.insert(entry.fingerprint) {
+            status.transition(
+                index,
+                CampaignState::Skipped,
+                "duplicate campaign fingerprint in this batch",
+            );
+            status.save(&status_path)?;
+            continue;
+        }
+        let findings = lint_campaign(&entry.source, &entry.file, &entry.campaign, &config.lint);
+        let denials: Vec<&str> =
+            findings.iter().filter(|f| f.level == Level::Deny).map(|f| f.code).collect();
+        if denials.is_empty() {
+            status.transition(
+                index,
+                CampaignState::Linted,
+                format!("{} finding(s)", findings.len()),
+            );
+            runnable.push(index);
+        } else {
+            status.transition(
+                index,
+                CampaignState::Skipped,
+                format!("lint deny: {}", denials.join(", ")),
+            );
+        }
+        status.save(&status_path)?;
+    }
+
+    // Run phase: a pull-based worker pool over the runnable list. With
+    // one worker the schedule is queue order exactly.
+    let pool = config.max_concurrent.clamp(1, runnable.len().max(1));
+    let next = Mutex::new(0usize);
+    let (tx, rx) = mpsc::channel::<Event>();
+    std::thread::scope(|scope| -> Result<()> {
+        for _ in 0..pool {
+            let tx = tx.clone();
+            let shared = shared.clone();
+            let (next, runnable) = (&next, &runnable);
+            let entries = &queue.entries;
+            let cache_path = &cache_path;
+            scope.spawn(move || loop {
+                let index = {
+                    let mut cursor = lock_shared(next);
+                    if *cursor >= runnable.len() {
+                        break;
+                    }
+                    let index = runnable[*cursor];
+                    *cursor += 1;
+                    index
+                };
+                let _ = tx.send(Event::Started(index));
+                let outcome = run_campaign(&entries[index], config, &shared, cache_path)
+                    .map_err(|err| err.to_string());
+                let _ = tx.send(Event::Finished(index, outcome));
+            });
+        }
+        drop(tx);
+        // The scheduler thread is the only status writer: workers
+        // stream events, transitions land here in arrival order.
+        for event in rx {
+            match event {
+                Event::Started(index) => {
+                    status.transition(index, CampaignState::Running, "");
+                    status.save(&status_path)?;
+                }
+                Event::Finished(index, Ok(stats)) => {
+                    status.set_counters(index, stats.hits, stats.misses);
+                    status.transition(
+                        index,
+                        CampaignState::Done,
+                        format!(
+                            "{} design points; {} cache hits / {} misses",
+                            stats.points, stats.hits, stats.misses
+                        ),
+                    );
+                    status.save(&status_path)?;
+                }
+                Event::Finished(index, Err(message)) => {
+                    status.transition(index, CampaignState::Failed, message);
+                    status.save(&status_path)?;
+                }
+            }
+        }
+        Ok(())
+    })?;
+
+    let cache_entries = lock_shared(&shared).len();
+    let reports = status
+        .campaigns()
+        .iter()
+        .map(|c| CampaignReport {
+            fingerprint: c.fingerprint,
+            spec: c.spec.clone(),
+            label: c.label.clone(),
+            state: c.state,
+            detail: c.detail.clone(),
+            hits: c.hits,
+            misses: c.misses,
+            dir: (c.state == CampaignState::Done)
+                .then(|| campaign_dir(&config.out_dir, c.fingerprint)),
+        })
+        .collect();
+    Ok(BatchOutcome { reports, status_path, cache_path, cache_entries, cache_recovered })
+}
+
+/// The artifact directory of a campaign within a batch output dir.
+pub fn campaign_dir(out_dir: &Path, fingerprint: u64) -> PathBuf {
+    out_dir.join(format!("{fingerprint:016x}"))
+}
+
+fn run_campaign(
+    entry: &QueueEntry,
+    config: &ServeConfig,
+    shared: &Arc<Mutex<PointCache>>,
+    cache_path: &Path,
+) -> Result<RunStats> {
+    let dir = campaign_dir(&config.out_dir, entry.fingerprint);
+    std::fs::create_dir_all(&dir)?;
+    // The scheduler owns artifact placement: any persist paths the spec
+    // declares are superseded by the per-fingerprint directory (the
+    // spec's `every` flush interval is honored). `plan.cache` stays
+    // None — the shared cache is attached directly and saved below.
+    let plan = PersistPlan {
+        db: Some(dir.join("db.json")),
+        cache: None,
+        checkpoint: Some(dir.join("run.journal")),
+        every: entry.campaign.persist.every,
+        frontier: Some(dir.join("frontier.json")),
+    };
+    let mut campaign = entry.campaign.clone();
+    if config.workers > 0 {
+        campaign.workers = config.workers;
+    }
+    let (hits_before, misses_before) = {
+        let cache = lock_shared(shared);
+        (cache.hits(), cache.misses())
+    };
+    let outcome = campaign.execute_with(&plan, Some(shared.clone()))?;
+    let (hits, misses) = {
+        let mut cache = lock_shared(shared);
+        cache.save(cache_path)?;
+        (cache.hits() - hits_before, cache.misses() - misses_before)
+    };
+    Ok(RunStats { points: outcome.db.stats.design_points, hits, misses })
+}

@@ -1,0 +1,314 @@
+//! The machine-readable batch journal: `serve.status.json`.
+//!
+//! A [`BatchStatus`] tracks every campaign of a `qadam serve` batch
+//! through its lifecycle (queued → linted → running → done / failed /
+//! skipped) and streams each transition to disk as canonical JSON
+//! (`{"kind": "qadam.serve.status", "schema": 1, ...}`), rewritten
+//! atomically after every state change.
+//!
+//! Transitions carry a monotonic sequence number instead of wall-clock
+//! timestamps, so the file is byte-deterministic for a deterministic
+//! schedule and never perturbs resume behavior.
+//!
+//! **Recovery contract**: the scheduler only ever *writes* this file —
+//! resuming a killed batch reconstructs everything from the per-campaign
+//! checkpoint journals, so a torn or deleted `serve.status.json` loses
+//! nothing (the fault suite truncates it at every byte offset to prove
+//! that). [`BatchStatus::load`] exists for tooling and tests.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::explore::persist::{
+    check_envelope, envelope_at, field_arr, field_str, field_usize, write_atomic,
+};
+use crate::util::json::{num, obj, s, Json};
+
+/// Schema version of the `qadam.serve.status` document.
+pub const STATUS_SCHEMA: usize = 1;
+
+/// Lifecycle state of one campaign in a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CampaignState {
+    /// Accepted into the batch queue.
+    Queued,
+    /// Passed the pre-flight lint gate.
+    Linted,
+    /// Currently evaluating.
+    Running,
+    /// Completed; artifacts saved under the campaign's directory.
+    Done,
+    /// Execution failed (the batch continues without it).
+    Failed,
+    /// Not run: pre-flight lint denial or a duplicate fingerprint.
+    Skipped,
+}
+
+impl CampaignState {
+    /// The state's wire label.
+    pub fn label(self) -> &'static str {
+        match self {
+            CampaignState::Queued => "queued",
+            CampaignState::Linted => "linted",
+            CampaignState::Running => "running",
+            CampaignState::Done => "done",
+            CampaignState::Failed => "failed",
+            CampaignState::Skipped => "skipped",
+        }
+    }
+
+    /// Parse a wire label back.
+    pub fn parse(text: &str) -> Option<Self> {
+        Some(match text {
+            "queued" => CampaignState::Queued,
+            "linted" => CampaignState::Linted,
+            "running" => CampaignState::Running,
+            "done" => CampaignState::Done,
+            "failed" => CampaignState::Failed,
+            "skipped" => CampaignState::Skipped,
+            _ => return None,
+        })
+    }
+
+    /// Whether the campaign's lifecycle is over.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, CampaignState::Done | CampaignState::Failed | CampaignState::Skipped)
+    }
+}
+
+/// Current status of one campaign in the batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignStatus {
+    /// The campaign's QSL fingerprint (names its artifact directory).
+    pub fingerprint: u64,
+    /// The spec file it expanded from.
+    pub spec: String,
+    /// Its matrix label (empty for a plain spec).
+    pub label: String,
+    /// Current lifecycle state.
+    pub state: CampaignState,
+    /// Human-readable context for the latest transition.
+    pub detail: String,
+    /// Shared-cache hits attributed to this campaign (exact when the
+    /// batch runs with `--max-concurrent 1`; see the scheduler docs).
+    pub hits: u64,
+    /// Shared-cache misses attributed to this campaign.
+    pub misses: u64,
+}
+
+/// One recorded state transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transition {
+    /// Monotonic sequence number (0-based, batch-wide).
+    pub seq: u64,
+    /// Queue index of the campaign.
+    pub index: usize,
+    /// Fingerprint of the campaign (denormalized for grep-ability).
+    pub fingerprint: u64,
+    /// The state entered.
+    pub state: CampaignState,
+    /// Context for the transition.
+    pub detail: String,
+}
+
+/// The batch journal: per-campaign current states plus the full ordered
+/// transition log.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchStatus {
+    campaigns: Vec<CampaignStatus>,
+    transitions: Vec<Transition>,
+}
+
+fn hex(value: u64) -> String {
+    format!("{value:016x}")
+}
+
+fn field_u64_hex(json: &Json, key: &str) -> Result<u64> {
+    let text = field_str(json, key)?;
+    u64::from_str_radix(text, 16)
+        .map_err(|_| Error::ParseError(format!("field '{key}' is not a hex u64: '{text}'")))
+}
+
+fn field_state(json: &Json, key: &str) -> Result<CampaignState> {
+    let text = field_str(json, key)?;
+    CampaignState::parse(text)
+        .ok_or_else(|| Error::ParseError(format!("unknown campaign state '{text}'")))
+}
+
+impl BatchStatus {
+    /// Empty batch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit a campaign at the back of the queue (records its `queued`
+    /// transition). Returns the campaign's queue index, the handle every
+    /// later [`Self::transition`] uses — duplicate fingerprints may
+    /// legally coexist in one batch (the scheduler skips the later one),
+    /// so campaigns are addressed by index, not fingerprint.
+    pub fn enqueue(&mut self, fingerprint: u64, spec: &str, label: &str) -> usize {
+        let index = self.campaigns.len();
+        self.campaigns.push(CampaignStatus {
+            fingerprint,
+            spec: spec.to_string(),
+            label: label.to_string(),
+            state: CampaignState::Queued,
+            detail: String::new(),
+            hits: 0,
+            misses: 0,
+        });
+        self.record(index, CampaignState::Queued, String::new());
+        index
+    }
+
+    /// Move campaign `index` to `state`, recording the transition.
+    pub fn transition(&mut self, index: usize, state: CampaignState, detail: impl Into<String>) {
+        let detail = detail.into();
+        if let Some(campaign) = self.campaigns.get_mut(index) {
+            campaign.state = state;
+            campaign.detail.clone_from(&detail);
+        }
+        self.record(index, state, detail);
+    }
+
+    /// Attribute shared-cache hit/miss deltas to campaign `index`.
+    pub fn set_counters(&mut self, index: usize, hits: u64, misses: u64) {
+        if let Some(campaign) = self.campaigns.get_mut(index) {
+            campaign.hits = hits;
+            campaign.misses = misses;
+        }
+    }
+
+    fn record(&mut self, index: usize, state: CampaignState, detail: String) {
+        let fingerprint = self.campaigns.get(index).map_or(0, |c| c.fingerprint);
+        let seq = self.transitions.len() as u64;
+        self.transitions.push(Transition { seq, index, fingerprint, state, detail });
+    }
+
+    /// Per-campaign current states, in queue order.
+    pub fn campaigns(&self) -> &[CampaignStatus] {
+        &self.campaigns
+    }
+
+    /// The ordered transition log.
+    pub fn transitions(&self) -> &[Transition] {
+        &self.transitions
+    }
+
+    /// Serialize as the schema-versioned canonical document.
+    pub fn to_json(&self) -> Json {
+        let campaigns: Vec<Json> = self
+            .campaigns
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("fingerprint", s(&hex(c.fingerprint))),
+                    ("spec", s(&c.spec)),
+                    ("label", s(&c.label)),
+                    ("state", s(c.state.label())),
+                    ("detail", s(&c.detail)),
+                    ("hits", num(c.hits as f64)),
+                    ("misses", num(c.misses as f64)),
+                ])
+            })
+            .collect();
+        let transitions: Vec<Json> = self
+            .transitions
+            .iter()
+            .map(|t| {
+                obj(vec![
+                    ("seq", num(t.seq as f64)),
+                    ("index", num(t.index as f64)),
+                    ("fingerprint", s(&hex(t.fingerprint))),
+                    ("state", s(t.state.label())),
+                    ("detail", s(&t.detail)),
+                ])
+            })
+            .collect();
+        let mut fields = envelope_at("qadam.serve.status", STATUS_SCHEMA);
+        fields.push(("campaigns", Json::Arr(campaigns)));
+        fields.push(("transitions", Json::Arr(transitions)));
+        obj(fields)
+    }
+
+    /// Deserialize from [`Self::to_json`] output.
+    pub fn from_json(json: &Json) -> Result<Self> {
+        check_envelope(json, "qadam.serve.status")?;
+        let mut status = Self::new();
+        for entry in field_arr(json, "campaigns")? {
+            status.campaigns.push(CampaignStatus {
+                fingerprint: field_u64_hex(entry, "fingerprint")?,
+                spec: field_str(entry, "spec")?.to_string(),
+                label: field_str(entry, "label")?.to_string(),
+                state: field_state(entry, "state")?,
+                detail: field_str(entry, "detail")?.to_string(),
+                hits: field_usize(entry, "hits")? as u64,
+                misses: field_usize(entry, "misses")? as u64,
+            });
+        }
+        for entry in field_arr(json, "transitions")? {
+            status.transitions.push(Transition {
+                seq: field_usize(entry, "seq")? as u64,
+                index: field_usize(entry, "index")?,
+                fingerprint: field_u64_hex(entry, "fingerprint")?,
+                state: field_state(entry, "state")?,
+                detail: field_str(entry, "detail")?.to_string(),
+            });
+        }
+        Ok(status)
+    }
+
+    /// Atomically write the document (temp sibling + rename), pretty
+    /// canonical JSON like every other artifact.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.to_json().to_string_pretty())
+    }
+
+    /// Load a saved status document — tooling/test convenience; the
+    /// scheduler itself never reads this file back.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text)
+            .map_err(|e| Error::ParseError(format!("{}: {e}", path.display())))?;
+        Self::from_json(&json)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_roundtrips_and_streams_transitions() {
+        let mut status = BatchStatus::new();
+        let a = status.enqueue(0xabc, "a.qsl", "");
+        let b = status.enqueue(0xdef, "b.qsl", "seed=2");
+        status.transition(a, CampaignState::Linted, "0 finding(s)");
+        status.transition(a, CampaignState::Running, "");
+        status.set_counters(a, 4, 2);
+        status.transition(a, CampaignState::Done, "6 points");
+        status.transition(b, CampaignState::Skipped, "lint deny: Q012");
+        assert_eq!(status.campaigns()[a].state, CampaignState::Done);
+        assert_eq!(status.campaigns()[a].hits, 4);
+        assert!(status.campaigns()[b].state.is_terminal());
+        // seq is dense and monotonic: 2 enqueues + 4 transitions
+        // (set_counters is an attribute update, not a transition).
+        let seqs: Vec<u64> = status.transitions().iter().map(|t| t.seq).collect();
+        assert_eq!(seqs, (0..6).collect::<Vec<u64>>());
+
+        let json = status.to_json();
+        let back = BatchStatus::from_json(&json).unwrap();
+        assert_eq!(back, status);
+        // Canonical: serialization is a fixed point.
+        assert_eq!(back.to_json().to_string_pretty(), json.to_string_pretty());
+    }
+
+    #[test]
+    fn unknown_state_is_a_parse_error() {
+        let mut status = BatchStatus::new();
+        status.enqueue(1, "x.qsl", "");
+        let text = status.to_json().to_string_pretty().replace("queued", "teleported");
+        let err = BatchStatus::from_json(&Json::parse(&text).unwrap()).unwrap_err();
+        assert_eq!(err.kind(), "parse_error");
+    }
+}

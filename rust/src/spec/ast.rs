@@ -49,6 +49,38 @@ pub enum Section {
     Model(ModelBlock),
     /// `persist { ... }` — db / cache / checkpoint / frontier paths.
     Persist(Block),
+    /// `include "base.qsl"` — splice another spec file's sections in
+    /// place of this statement. Resolved by the expansion pass
+    /// ([`super::expand`]); the plain resolver rejects it.
+    Include(IncludeDecl),
+    /// `override SECTION { key = value ... }` — entry-wise merge into
+    /// an (included) section. Resolved by the expansion pass.
+    Override(OverrideBlock),
+    /// `matrix { key = [v1, v2, ...] ... }` — expand this one spec into
+    /// a campaign set (the cross product of every matrix axis). Resolved
+    /// by the expansion pass.
+    Matrix(Block),
+}
+
+/// `include "path.qsl"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IncludeDecl {
+    /// Span of the `include` keyword.
+    pub keyword: Span,
+    /// The quoted path, relative to the including file.
+    pub path: Spanned<String>,
+}
+
+/// `override SECTION { ... }`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverrideBlock {
+    /// Span of the `override` keyword.
+    pub keyword: Span,
+    /// The targeted section name (`campaign`, `sweep`, `model_axes`,
+    /// `workload`, `persist`).
+    pub target: Spanned<String>,
+    /// The entries to merge into the target section.
+    pub block: Block,
 }
 
 /// A brace-delimited block of `key = value` statements.

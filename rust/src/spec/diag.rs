@@ -148,7 +148,13 @@ impl Diagnostics {
         self.diags.is_empty()
     }
 
-    /// Number of error-severity diagnostics.
+    /// Absorb every diagnostic from `other` (used by the expansion pass
+    /// to merge per-combination resolver batches).
+    pub fn extend(&mut self, other: Diagnostics) {
+        self.diags.extend(other.diags);
+    }
+
+    /// The number of error-severity diagnostics recorded.
     pub fn error_count(&self) -> usize {
         self.diags.iter().filter(|d| d.severity == Severity::Error).count()
     }

@@ -90,33 +90,54 @@ impl ResolvedCampaign {
     /// artifacts regardless of whether they came from a spec file or
     /// from CLI flags.
     pub fn execute(&self) -> Result<CampaignOutcome> {
+        self.execute_with(&self.persist, None)
+    }
+
+    /// [`Self::execute`] against an explicit persistence plan, with an
+    /// optional *shared* point cache.
+    ///
+    /// `qadam serve` runs every campaign of a batch through here: the
+    /// plan names per-campaign artifact paths under the batch output
+    /// directory, and `shared_cache` is the batch-wide
+    /// `Arc<Mutex<PointCache>>` that dedupes overlapping evaluations
+    /// across campaigns. When a shared cache is passed, this method
+    /// neither loads nor saves `plan.cache` (the scheduler owns the
+    /// shared cache's persistence — saving it per campaign under the
+    /// campaign's own lock scope would interleave with other tenants),
+    /// so the returned outcome's `cache` field is `None`; the scheduler
+    /// computes per-campaign hit/miss deltas from counter snapshots
+    /// around the run.
+    pub fn execute_with(
+        &self,
+        plan: &super::resolve::PersistPlan,
+        shared_cache: Option<Arc<Mutex<PointCache>>>,
+    ) -> Result<CampaignOutcome> {
         let mut explorer = self.explorer();
-        let frontier = self
-            .persist
-            .frontier
-            .as_ref()
-            .map(|_| Arc::new(Mutex::new(CampaignFrontier::new())));
+        let frontier =
+            plan.frontier.as_ref().map(|_| Arc::new(Mutex::new(CampaignFrontier::new())));
         if let Some(frontier) = &frontier {
             explorer = explorer.frontier(frontier.clone());
         }
-        if let Some(path) = &self.persist.checkpoint {
-            explorer = explorer.checkpoint(path, self.persist.every);
+        if let Some(path) = &plan.checkpoint {
+            explorer = explorer.checkpoint(path, plan.every);
         }
-        let cache = match &self.persist.cache {
-            None => None,
-            Some(path) => {
+        let shared = shared_cache.is_some();
+        let cache = match (&shared_cache, &plan.cache) {
+            (Some(cache), _) => Some(cache.clone()),
+            (None, Some(path)) => {
                 let loaded =
                     if path.exists() { PointCache::load(path)? } else { PointCache::new() };
                 Some(Arc::new(Mutex::new(loaded)))
             }
+            (None, None) => None,
         };
         if let Some(cache) = &cache {
             explorer = explorer.cache(cache.clone());
         }
         let db = explorer.run()?;
-        let cache_outcome = match (&cache, &self.persist.cache) {
-            (Some(cache), Some(path)) => {
-                let cache = lock_shared(cache);
+        let cache_outcome = match (&cache, &plan.cache) {
+            (Some(cache), Some(path)) if !shared => {
+                let mut cache = lock_shared(cache);
                 cache.save(path)?;
                 Some(CacheOutcome {
                     path: path.clone(),
@@ -127,7 +148,7 @@ impl ResolvedCampaign {
             }
             _ => None,
         };
-        let frontier_outcome = match (&frontier, &self.persist.frontier) {
+        let frontier_outcome = match (&frontier, &plan.frontier) {
             (Some(frontier), Some(path)) => {
                 let frontier = lock_shared(frontier);
                 frontier.save(path)?;
@@ -142,7 +163,7 @@ impl ResolvedCampaign {
             }
             _ => None,
         };
-        let saved_db = match &self.persist.db {
+        let saved_db = match &plan.db {
             Some(path) => {
                 db.save(path)?;
                 Some(path.clone())

@@ -1,0 +1,729 @@
+//! Spec expansion: `include` splicing plus `override`/`matrix`
+//! composition — turning one QSL file into a *campaign set*.
+//!
+//! Three constructs layer on top of the base grammar:
+//!
+//! - `include "base.qsl"` splices another spec file's text in place of
+//!   the statement, **before** parsing. The splice is textual (the
+//!   included lines are bracketed by `# >>> include` / `# <<< include`
+//!   comments), so every later diagnostic points into one combined
+//!   source with coherent spans. Paths are relative to the including
+//!   file; cycles and over-deep nesting are typed errors. Only lines
+//!   whose first word is `include` are directives.
+//! - `override SECTION { key = value ... }` merges entry-wise into the
+//!   named section of the composed spec (replace same-key entries,
+//!   append new ones, create the section when absent). This is how an
+//!   including spec specializes a shared base without tripping the
+//!   resolver's duplicate-section errors. A later `strategy = ...`
+//!   declaration replaces an earlier one under expansion, since
+//!   `strategy` is a single declaration with no block to override.
+//! - `matrix { key = [v1, v2, ...] ... }` expands the spec into the
+//!   cross product of its axes. Each matrix key routes to the section
+//!   it belongs to (`seed`/`workers`/`shard` → campaign, sweep axes →
+//!   sweep, `width`/`depth` → model_axes, `dataset`/`models` →
+//!   workload, `strategy` → the strategy declaration); persist keys are
+//!   rejected because `qadam serve` assigns per-fingerprint artifact
+//!   directories itself.
+//!
+//! The plain [`resolve`](super::resolve) pass rejects all three
+//! constructs with pointers here, so `spec::compile` stays a strict
+//! single-campaign entry point while `qadam run`/`validate`/`serve` go
+//! through [`expand_path`].
+
+use std::path::{Path, PathBuf};
+
+use super::ast::{
+    Block, KeyValue, OverrideBlock, Section, SpecFile, Spanned, StrategyDecl, Value, ValueKind,
+};
+use super::diag::{Diagnostics, Span};
+use super::lexer::fmt_num;
+use super::parser::parse;
+use super::resolve::{resolve, ResolvedCampaign};
+use crate::error::{Error, Result};
+use crate::util::text::{did_you_mean, name_list};
+
+/// Maximum include nesting depth (a cycle guard for non-cyclic but
+/// absurd include chains).
+pub const MAX_INCLUDE_DEPTH: usize = 16;
+
+/// Maximum number of campaigns one `matrix` block may expand to. A
+/// batch bigger than this should be split across spec files, where each
+/// file's campaigns stay reviewable.
+pub const MAX_MATRIX_CAMPAIGNS: usize = 64;
+
+/// Sections an `override` block may target (everything block-shaped;
+/// `strategy` is a declaration — restating it wins under expansion).
+pub const OVERRIDE_TARGETS: [&str; 5] = ["campaign", "sweep", "model_axes", "workload", "persist"];
+
+/// One campaign produced by expansion.
+#[derive(Debug, Clone)]
+pub struct ExpandedCampaign {
+    /// Human-readable matrix coordinates (`"glb_kib=64,seed=3"`; empty
+    /// when the spec had no matrix block).
+    pub label: String,
+    /// The composed per-campaign AST (overrides and this combination's
+    /// matrix entries applied) — what pre-flight lint runs against.
+    pub file: SpecFile,
+    /// The resolved campaign.
+    pub campaign: ResolvedCampaign,
+}
+
+/// The result of expanding one spec file: the spliced source (for
+/// rendering diagnostics), the campaign set, and every diagnostic the
+/// pass collected. `campaigns` is empty whenever `diags` carries
+/// errors.
+#[derive(Debug)]
+pub struct Expansion {
+    /// Display name for diagnostics (the path as given).
+    pub filename: String,
+    /// The combined source after include splicing — the text all spans
+    /// in `diags` refer to.
+    pub source: String,
+    /// The expanded campaign set, in deterministic matrix order.
+    pub campaigns: Vec<ExpandedCampaign>,
+    /// Errors and warnings from parsing, composition, and resolution.
+    pub diags: Diagnostics,
+}
+
+impl Expansion {
+    /// Whether expansion failed (in which case `campaigns` is empty).
+    pub fn has_errors(&self) -> bool {
+        self.diags.has_errors()
+    }
+
+    /// The campaign set, or a typed error carrying the full rendered
+    /// diagnostic batch.
+    pub fn into_result(self) -> Result<Vec<ExpandedCampaign>> {
+        if self.diags.has_errors() {
+            Err(self.diags.into_error(&self.source, &self.filename))
+        } else {
+            Ok(self.campaigns)
+        }
+    }
+}
+
+/// Splice every `include "path"` line of `path` (recursively) into one
+/// combined source string. IO failures, cycles, and over-deep nesting
+/// are typed errors; everything syntactic is left for the parser.
+pub fn splice_includes(path: &Path) -> Result<String> {
+    let mut stack: Vec<PathBuf> = Vec::new();
+    splice_file(path, &mut stack)
+}
+
+/// Expand the spec file at `path` into its campaign set: splice
+/// includes, parse, apply overrides, expand the matrix cross product,
+/// and resolve each combination. The `qadam run`/`validate`/`serve`
+/// entry point.
+pub fn expand_path(path: &Path) -> Result<Expansion> {
+    let source = splice_includes(path)?;
+    Ok(expand_source(&source, &path.display().to_string()))
+}
+
+/// Expand already-loaded source. Includes cannot be resolved without a
+/// file context, so any `include` statement is reported as an error
+/// pointing at [`expand_path`].
+pub fn expand_source(source: &str, filename: &str) -> Expansion {
+    let mut diags = Diagnostics::new();
+    let file = parse(source, &mut diags);
+
+    // Partition: plain sections / override blocks / the matrix block.
+    let mut plain: Vec<Section> = Vec::new();
+    let mut overrides: Vec<OverrideBlock> = Vec::new();
+    let mut matrix: Option<Block> = None;
+    for section in file.sections {
+        match section {
+            Section::Include(inc) => {
+                diags.error_help(
+                    inc.keyword,
+                    format!(
+                        "cannot load include \"{}\" from in-memory source",
+                        inc.path.node
+                    ),
+                    "includes resolve relative to the spec file's directory; expand via a \
+                     file path (qadam run/validate/serve, or spec::expand_path)",
+                );
+            }
+            Section::Override(ov) => overrides.push(ov),
+            Section::Matrix(block) => {
+                if matrix.is_some() {
+                    diags.error_help(
+                        block.keyword,
+                        "duplicate 'matrix' section",
+                        "merge the axes into one matrix block; the cross product already \
+                         covers every axis combination",
+                    );
+                } else {
+                    matrix = Some(block);
+                }
+            }
+            other => plain.push(other),
+        }
+    }
+
+    // Include layering: the *last* `strategy = ...` declaration wins
+    // (an including spec restates the base's choice) instead of
+    // tripping the resolver's duplicate-declaration error.
+    if let Some(last) = plain.iter().rposition(|s| matches!(s, Section::Strategy(_))) {
+        let mut index = 0usize;
+        plain.retain(|s| {
+            let keep = !matches!(s, Section::Strategy(_)) || index == last;
+            index += 1;
+            keep
+        });
+    }
+
+    for ov in &overrides {
+        apply_override(&mut plain, ov, &mut diags);
+    }
+
+    let (axes, matrix_span) = match &matrix {
+        Some(block) => (matrix_axes(block, &mut diags), block.keyword),
+        None => (Vec::new(), Span::at(0)),
+    };
+
+    // Cross product, in source order of the matrix axes.
+    let mut combos: Vec<Vec<(usize, usize)>> = vec![Vec::new()];
+    for (axis_index, axis) in axes.iter().enumerate() {
+        let mut next = Vec::with_capacity(combos.len() * axis.values.len());
+        for combo in &combos {
+            for value_index in 0..axis.values.len() {
+                let mut extended = combo.clone();
+                extended.push((axis_index, value_index));
+                next.push(extended);
+            }
+        }
+        combos = next;
+        if combos.len() > MAX_MATRIX_CAMPAIGNS {
+            diags.error_help(
+                matrix_span,
+                format!("matrix expands to more than {MAX_MATRIX_CAMPAIGNS} campaigns"),
+                "split the batch across several spec files and queue them all with \
+                 qadam serve",
+            );
+            break;
+        }
+    }
+
+    if diags.has_errors() {
+        return Expansion {
+            filename: filename.to_string(),
+            source: source.to_string(),
+            campaigns: Vec::new(),
+            diags,
+        };
+    }
+
+    let mut campaigns: Vec<ExpandedCampaign> = Vec::new();
+    let mut fingerprints: Vec<(u64, String)> = Vec::new();
+    for (combo_index, combo) in combos.iter().enumerate() {
+        let mut sections = plain.clone();
+        let mut label_parts: Vec<String> = Vec::new();
+        for &(axis_index, value_index) in combo {
+            let axis = &axes[axis_index];
+            let value = axis.values[value_index].clone();
+            label_parts.push(format!("{}={}", axis.key.node, render_value(&value)));
+            match axis.route {
+                Route::Strategy => {
+                    let decl = StrategyDecl { keyword: axis.key.span, value };
+                    let slot = sections.iter_mut().find_map(|s| match s {
+                        Section::Strategy(d) => Some(d),
+                        _ => None,
+                    });
+                    match slot {
+                        Some(existing) => *existing = decl,
+                        None => sections.push(Section::Strategy(decl)),
+                    }
+                }
+                route => {
+                    let block = find_or_create(&mut sections, route.target(), axis.key.span);
+                    merge_entry(block, KeyValue { key: axis.key.clone(), value });
+                }
+            }
+        }
+        let file = SpecFile { sections };
+        let mut combo_diags = Diagnostics::new();
+        let resolved = resolve(&file, &mut combo_diags);
+        match resolved {
+            Some(campaign) if !combo_diags.has_errors() => {
+                // Keep warnings once (every combination shares the same
+                // composed base, so they would repeat verbatim).
+                if combo_index == 0 {
+                    diags.extend(combo_diags);
+                }
+                let label = label_parts.join(",");
+                let fingerprint = campaign.fingerprint();
+                if let Some((_, first)) =
+                    fingerprints.iter().find(|(fp, _)| *fp == fingerprint)
+                {
+                    diags.warn_help(
+                        matrix_span,
+                        format!(
+                            "matrix combinations '{first}' and '{label}' resolve to the \
+                             same campaign fingerprint"
+                        ),
+                        "only identity fields (sweep axes, seed, shard, strategy, \
+                         workload) distinguish campaigns; 'workers' and persist paths \
+                         are transient",
+                    );
+                }
+                fingerprints.push((fingerprint, label.clone()));
+                campaigns.push(ExpandedCampaign { label, file, campaign });
+            }
+            _ => {
+                diags.extend(combo_diags);
+                return Expansion {
+                    filename: filename.to_string(),
+                    source: source.to_string(),
+                    campaigns: Vec::new(),
+                    diags,
+                };
+            }
+        }
+    }
+
+    Expansion {
+        filename: filename.to_string(),
+        source: source.to_string(),
+        campaigns,
+        diags,
+    }
+}
+
+fn splice_file(path: &Path, stack: &mut Vec<PathBuf>) -> Result<String> {
+    let text = std::fs::read_to_string(path).map_err(|err| {
+        Error::Io(std::io::Error::new(err.kind(), format!("{}: {err}", path.display())))
+    })?;
+    let canonical = std::fs::canonicalize(path).unwrap_or_else(|_| path.to_path_buf());
+    if stack.contains(&canonical) {
+        let chain: Vec<String> = stack.iter().map(|p| p.display().to_string()).collect();
+        return Err(Error::InvalidConfig(format!(
+            "include cycle: {} -> {}",
+            chain.join(" -> "),
+            path.display()
+        )));
+    }
+    if stack.len() >= MAX_INCLUDE_DEPTH {
+        return Err(Error::InvalidConfig(format!(
+            "include nesting deeper than {MAX_INCLUDE_DEPTH} at {}",
+            path.display()
+        )));
+    }
+    stack.push(canonical);
+    let dir = path.parent().map(Path::to_path_buf).unwrap_or_default();
+    let mut out = String::with_capacity(text.len());
+    for line in text.lines() {
+        match include_target(line) {
+            None => {
+                out.push_str(line);
+                out.push('\n');
+            }
+            Some(Err(message)) => {
+                stack.pop();
+                return Err(Error::ParseError(format!("{}: {message}", path.display())));
+            }
+            Some(Ok(rel)) => {
+                let spliced = splice_file(&dir.join(rel), stack)?;
+                out.push_str(&format!("# >>> include \"{rel}\"\n"));
+                out.push_str(&spliced);
+                out.push_str(&format!("# <<< include \"{rel}\"\n"));
+            }
+        }
+    }
+    stack.pop();
+    Ok(out)
+}
+
+/// Recognize an `include "path"` directive line. Returns `None` for
+/// ordinary lines, `Some(Err(why))` for a malformed directive.
+fn include_target(line: &str) -> Option<std::result::Result<&str, String>> {
+    let rest = line.trim_start().strip_prefix("include")?;
+    if !rest.starts_with([' ', '\t', '"']) {
+        return None; // a longer identifier, not the keyword
+    }
+    let rest = rest.trim_start();
+    let Some(inner) = rest.strip_prefix('"') else {
+        return Some(Err("expected a quoted path after 'include'".to_string()));
+    };
+    let Some(end) = inner.find('"') else {
+        return Some(Err("unterminated include path".to_string()));
+    };
+    let tail = inner[end + 1..].trim_start();
+    if !(tail.is_empty() || tail.starts_with('#')) {
+        return Some(Err(format!("unexpected text after include path: '{tail}'")));
+    }
+    Some(Ok(&inner[..end]))
+}
+
+fn apply_override(plain: &mut Vec<Section>, ov: &OverrideBlock, diags: &mut Diagnostics) {
+    let target = ov.target.node.as_str();
+    if !OVERRIDE_TARGETS.contains(&target) {
+        let help = if target == "strategy" {
+            "restate 'strategy = ...' at top level instead; the last declaration wins \
+             under expansion"
+                .to_string()
+        } else {
+            did_you_mean(target, OVERRIDE_TARGETS)
+                .map(|s| format!("did you mean '{s}'?"))
+                .unwrap_or_else(|| {
+                    format!("override targets are: {}", name_list(OVERRIDE_TARGETS))
+                })
+        };
+        diags.error_help(ov.target.span, format!("cannot override '{target}'"), help);
+        return;
+    }
+    let block = find_or_create(plain, target, ov.keyword);
+    for entry in &ov.block.entries {
+        merge_entry(block, entry.clone());
+    }
+}
+
+fn matches_target(section: &Section, target: &str) -> bool {
+    matches!(
+        (section, target),
+        (Section::Campaign(_), "campaign")
+            | (Section::Sweep(_), "sweep")
+            | (Section::ModelAxes(_), "model_axes")
+            | (Section::Workload(_), "workload")
+            | (Section::Persist(_), "persist")
+    )
+}
+
+fn find_or_create<'a>(plain: &'a mut Vec<Section>, target: &str, keyword: Span) -> &'a mut Block {
+    let position = match plain.iter().position(|s| matches_target(s, target)) {
+        Some(position) => position,
+        None => {
+            let block = Block { keyword, entries: Vec::new() };
+            plain.push(match target {
+                "campaign" => Section::Campaign(block),
+                "sweep" => Section::Sweep(block),
+                "model_axes" => Section::ModelAxes(block),
+                "workload" => Section::Workload(block),
+                _ => Section::Persist(block),
+            });
+            plain.len() - 1
+        }
+    };
+    match &mut plain[position] {
+        Section::Campaign(b)
+        | Section::Sweep(b)
+        | Section::ModelAxes(b)
+        | Section::Workload(b)
+        | Section::Persist(b) => b,
+        _ => unreachable!(),
+    }
+}
+
+/// Replace the same-key entry in place, or append a new one.
+fn merge_entry(block: &mut Block, entry: KeyValue) {
+    match block.entries.iter_mut().find(|e| e.key.node == entry.key.node) {
+        Some(existing) => *existing = entry,
+        None => block.entries.push(entry),
+    }
+}
+
+/// Where a matrix key's per-combination value lands.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Route {
+    Campaign,
+    Sweep,
+    ModelAxes,
+    Workload,
+    Strategy,
+}
+
+impl Route {
+    fn target(self) -> &'static str {
+        match self {
+            Route::Campaign => "campaign",
+            Route::Sweep => "sweep",
+            Route::ModelAxes => "model_axes",
+            Route::Workload => "workload",
+            Route::Strategy => "strategy",
+        }
+    }
+}
+
+const MATRIX_CAMPAIGN_KEYS: [&str; 3] = ["seed", "workers", "shard"];
+const MATRIX_SWEEP_KEYS: [&str; 6] =
+    ["pe_type", "array", "glb_kib", "spad", "dram_gbps", "clock_ghz"];
+const MATRIX_MODEL_AXES_KEYS: [&str; 2] = ["width", "depth"];
+const MATRIX_WORKLOAD_KEYS: [&str; 2] = ["dataset", "models"];
+const MATRIX_PERSIST_KEYS: [&str; 5] = ["db", "cache", "checkpoint", "frontier", "every"];
+
+struct MatrixAxis {
+    key: Spanned<String>,
+    route: Route,
+    values: Vec<Value>,
+}
+
+fn matrix_axes(block: &Block, diags: &mut Diagnostics) -> Vec<MatrixAxis> {
+    let mut axes: Vec<MatrixAxis> = Vec::new();
+    for entry in &block.entries {
+        let key = entry.key.node.as_str();
+        if axes.iter().any(|a| a.key.node == key) {
+            diags.error(entry.key.span, format!("duplicate matrix axis '{key}'"));
+            continue;
+        }
+        let route = if key == "strategy" {
+            Route::Strategy
+        } else if MATRIX_CAMPAIGN_KEYS.contains(&key) {
+            Route::Campaign
+        } else if MATRIX_SWEEP_KEYS.contains(&key) {
+            Route::Sweep
+        } else if MATRIX_MODEL_AXES_KEYS.contains(&key) {
+            Route::ModelAxes
+        } else if MATRIX_WORKLOAD_KEYS.contains(&key) {
+            Route::Workload
+        } else if MATRIX_PERSIST_KEYS.contains(&key) {
+            diags.error_help(
+                entry.key.span,
+                format!("cannot vary '{key}' in a matrix"),
+                "persist paths are assigned per campaign fingerprint by qadam serve",
+            );
+            continue;
+        } else {
+            let candidates = MATRIX_CAMPAIGN_KEYS
+                .iter()
+                .chain(&MATRIX_SWEEP_KEYS)
+                .chain(&MATRIX_MODEL_AXES_KEYS)
+                .chain(&MATRIX_WORKLOAD_KEYS)
+                .chain(std::iter::once(&"strategy"))
+                .copied();
+            let help = did_you_mean(key, candidates.clone())
+                .map(|s| format!("did you mean '{s}'?"))
+                .unwrap_or_else(|| format!("matrix keys are: {}", name_list(candidates)));
+            diags.error_help(entry.key.span, format!("unknown matrix key '{key}'"), help);
+            continue;
+        };
+        match &entry.value.kind {
+            ValueKind::List(items) if !items.is_empty() => {
+                // A matrix over sweep/model_axes/workload list keys sets
+                // a *list-valued* key per combination, so each item must
+                // itself be the value that key takes (possibly a list).
+                axes.push(MatrixAxis {
+                    key: entry.key.clone(),
+                    route,
+                    values: items.clone(),
+                });
+            }
+            ValueKind::List(_) => {
+                diags.error(entry.value.span, format!("matrix axis '{key}' is empty"));
+            }
+            other => {
+                diags.error_help(
+                    entry.value.span,
+                    format!(
+                        "matrix axis '{key}' must be a list of alternatives, found {}",
+                        other.describe()
+                    ),
+                    format!("write {key} = [v1, v2, ...]"),
+                );
+            }
+        }
+    }
+    axes
+}
+
+/// Render a value back to QSL-ish text (for matrix labels).
+fn render_value(value: &Value) -> String {
+    match &value.kind {
+        ValueKind::Num(x) => fmt_num(*x),
+        ValueKind::Str(s) => format!("\"{s}\""),
+        ValueKind::Word(w) => w.clone(),
+        ValueKind::Dims(rows, cols) => format!("{rows}x{cols}"),
+        ValueKind::Fraction(num, den) => format!("{}/{}", fmt_num(*num), fmt_num(*den)),
+        ValueKind::List(items) => {
+            let inner: Vec<String> = items.iter().map(render_value).collect();
+            format!("[{}]", inner.join(", "))
+        }
+        ValueKind::Call { name, args } => {
+            let inner: Vec<String> = args
+                .iter()
+                .map(|arg| match &arg.name {
+                    Some(n) => format!("{} = {}", n.node, render_value(&arg.value)),
+                    None => render_value(&arg.value),
+                })
+                .collect();
+            format!("{}({})", name.node, inner.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::StrategyChoice;
+
+    fn write(dir: &Path, name: &str, text: &str) -> PathBuf {
+        let path = dir.join(name);
+        std::fs::write(&path, text).unwrap();
+        path
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("qadam_expand_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    const BASE: &str = "campaign { seed = 7 }\n\
+                        sweep {\n  pe_type = [int16]\n  array = [8x8]\n  glb_kib = [64]\n}\n\
+                        workload {\n  models = [resnet20]\n}\n";
+
+    #[test]
+    fn plain_spec_expands_to_one_campaign() {
+        let expansion = expand_source(BASE, "base.qsl");
+        assert!(!expansion.has_errors(), "{}", expansion.diags);
+        assert_eq!(expansion.campaigns.len(), 1);
+        assert_eq!(expansion.campaigns[0].label, "");
+    }
+
+    #[test]
+    fn override_merges_into_target_section() {
+        let source = format!("{BASE}override campaign {{ seed = 99 }}\n");
+        let expansion = expand_source(&source, "t.qsl");
+        assert!(!expansion.has_errors(), "{}", expansion.diags);
+        let campaign = &expansion.campaigns[0].campaign;
+        assert_eq!(campaign.seed, 99);
+        // Overriding an absent section creates it.
+        let source = format!("{BASE}override model_axes {{ width = [0.5, 1] }}\n");
+        let expansion = expand_source(&source, "t.qsl");
+        assert!(!expansion.has_errors(), "{}", expansion.diags);
+        assert!(expansion.campaigns[0].campaign.canonical().contains("model_axes"));
+    }
+
+    #[test]
+    fn override_unknown_target_is_an_error() {
+        let source = format!("{BASE}override sweeep {{ glb_kib = [128] }}\n");
+        let expansion = expand_source(&source, "t.qsl");
+        assert!(expansion.has_errors());
+        let rendered = expansion.diags.render(&expansion.source, "t.qsl");
+        assert!(rendered.contains("did you mean 'sweep'?"), "{rendered}");
+        assert!(expansion.campaigns.is_empty());
+    }
+
+    #[test]
+    fn override_strategy_points_at_redeclaration() {
+        let source = format!("{BASE}override strategy {{ n = 4 }}\n");
+        let expansion = expand_source(&source, "t.qsl");
+        assert!(expansion.has_errors());
+        let rendered = expansion.diags.render(&expansion.source, "t.qsl");
+        assert!(rendered.contains("last declaration wins"), "{rendered}");
+    }
+
+    #[test]
+    fn last_strategy_declaration_wins() {
+        let source = format!("strategy = exhaustive\n{BASE}strategy = random(2, seed = 5)\n");
+        let expansion = expand_source(&source, "t.qsl");
+        assert!(!expansion.has_errors(), "{}", expansion.diags);
+        assert_eq!(
+            expansion.campaigns[0].campaign.strategy,
+            StrategyChoice::Random { n: 2, seed: 5 }
+        );
+    }
+
+    #[test]
+    fn matrix_expands_cross_product_in_order() {
+        let source = format!("{BASE}matrix {{\n  seed = [1, 2]\n  glb_kib = [[64], [128]]\n}}\n");
+        let expansion = expand_source(&source, "t.qsl");
+        assert!(!expansion.has_errors(), "{}", expansion.diags);
+        let labels: Vec<&str> =
+            expansion.campaigns.iter().map(|c| c.label.as_str()).collect();
+        assert_eq!(
+            labels,
+            [
+                "seed=1,glb_kib=[64]",
+                "seed=1,glb_kib=[128]",
+                "seed=2,glb_kib=[64]",
+                "seed=2,glb_kib=[128]"
+            ]
+        );
+        // All four campaigns are distinct.
+        let mut fingerprints: Vec<u64> =
+            expansion.campaigns.iter().map(|c| c.campaign.fingerprint()).collect();
+        fingerprints.sort_unstable();
+        fingerprints.dedup();
+        assert_eq!(fingerprints.len(), 4);
+    }
+
+    #[test]
+    fn matrix_over_transients_warns_on_duplicate_fingerprints() {
+        let source = format!("{BASE}matrix {{ workers = [1, 2] }}\n");
+        let expansion = expand_source(&source, "t.qsl");
+        assert!(!expansion.has_errors(), "{}", expansion.diags);
+        assert_eq!(expansion.campaigns.len(), 2);
+        let rendered = expansion.diags.render(&expansion.source, "t.qsl");
+        assert!(rendered.contains("same campaign fingerprint"), "{rendered}");
+    }
+
+    #[test]
+    fn matrix_rejects_unknown_and_persist_keys() {
+        let source = format!("{BASE}matrix {{\n  sede = [1]\n  db = [\"a\"]\n  seed = 3\n}}\n");
+        let expansion = expand_source(&source, "t.qsl");
+        assert!(expansion.has_errors());
+        let rendered = expansion.diags.render(&expansion.source, "t.qsl");
+        assert!(rendered.contains("did you mean 'seed'?"), "{rendered}");
+        assert!(rendered.contains("cannot vary 'db'"), "{rendered}");
+        assert!(rendered.contains("must be a list of alternatives"), "{rendered}");
+    }
+
+    #[test]
+    fn include_in_source_mode_is_an_error() {
+        let source = "include \"base.qsl\"\n";
+        let expansion = expand_source(source, "t.qsl");
+        assert!(expansion.has_errors());
+        let rendered = expansion.diags.render(&expansion.source, "t.qsl");
+        assert!(rendered.contains("cannot load include"), "{rendered}");
+    }
+
+    #[test]
+    fn includes_splice_and_compose() {
+        let dir = tmp("splice");
+        write(&dir, "base.qsl", BASE);
+        let tenant = write(
+            &dir,
+            "tenant.qsl",
+            "include \"base.qsl\"\noverride campaign { seed = 11 }\n",
+        );
+        let expansion = expand_path(&tenant).unwrap();
+        assert!(!expansion.has_errors(), "{}", expansion.diags);
+        assert_eq!(expansion.campaigns[0].campaign.seed, 11);
+        assert!(expansion.source.contains("# >>> include \"base.qsl\""));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn include_cycles_are_typed_errors() {
+        let dir = tmp("cycle");
+        write(&dir, "a.qsl", "include \"b.qsl\"\n");
+        let a = dir.join("a.qsl");
+        write(&dir, "b.qsl", "include \"a.qsl\"\n");
+        let err = expand_path(&a).unwrap_err();
+        assert_eq!(err.kind(), "invalid_config");
+        assert!(err.to_string().contains("include cycle"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_include_is_an_io_error() {
+        let dir = tmp("missing");
+        let spec = write(&dir, "spec.qsl", "include \"nope.qsl\"\n");
+        let err = expand_path(&spec).unwrap_err();
+        assert_eq!(err.kind(), "io");
+        assert!(err.to_string().contains("nope.qsl"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unexpanded_constructs_are_rejected_by_plain_compile() {
+        for source in [
+            "include \"base.qsl\"\n",
+            "override campaign { seed = 1 }\n",
+            "matrix { seed = [1, 2] }\n",
+        ] {
+            let err = crate::spec::compile(source, "t.qsl").unwrap_err();
+            assert!(err.to_string().contains("must be expanded"), "{err}");
+        }
+    }
+}

@@ -10,6 +10,11 @@
 //! checks it and prints the resolved campaign; `qadam spec init` emits
 //! a commented starter file.
 //!
+//! One spec can also expand into a *campaign set* for `qadam serve`:
+//! `include "base.qsl"` splices a shared base, `override SECTION { .. }`
+//! specializes it, and `matrix { key = [..] .. }` cross-products axes —
+//! see the [`expand`] module.
+//!
 //! The front end is zero-dependency and hand-rolled in the house style:
 //! a [`lexer`], a recovering recursive-descent [`parser`] producing a
 //! spanned [`ast`], and a [`resolve`] pass that reports **all** problems
@@ -65,6 +70,7 @@
 pub mod ast;
 pub mod diag;
 pub mod exec;
+pub mod expand;
 pub mod lexer;
 pub mod lint;
 pub mod parser;
@@ -72,6 +78,7 @@ pub mod resolve;
 
 pub use diag::{Diagnostic, Diagnostics, Severity, Span};
 pub use exec::{CacheOutcome, CampaignOutcome, FrontierOutcome};
+pub use expand::{expand_path, expand_source, ExpandedCampaign, Expansion};
 pub use lint::{Finding, Level, LintOptions, LintRule, RULES};
 pub use resolve::{
     dataset_key, pe_key, zoo_key, PersistPlan, ResolvedCampaign, StrategyChoice, WorkloadModel,

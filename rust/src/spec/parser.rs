@@ -10,16 +10,18 @@
 //! parser preserves.
 
 use super::ast::{
-    AccuracyBlock, Arg, Block, KeyValue, LayerStmt, ModelBlock, ModelStmt, Section, SpecFile,
-    Spanned, StrategyDecl, Value, ValueKind,
+    AccuracyBlock, Arg, Block, IncludeDecl, KeyValue, LayerStmt, ModelBlock, ModelStmt,
+    OverrideBlock, Section, SpecFile, Spanned, StrategyDecl, Value, ValueKind,
 };
 use super::diag::{Diagnostics, Span};
 use super::lexer::{lex, Tok, Token};
 use crate::util::text::did_you_mean;
 
 /// The top-level section keywords (for "did you mean" suggestions).
-pub const SECTION_KEYWORDS: [&str; 7] =
-    ["campaign", "sweep", "model_axes", "strategy", "workload", "model", "persist"];
+pub const SECTION_KEYWORDS: [&str; 10] = [
+    "campaign", "sweep", "model_axes", "strategy", "workload", "model", "persist", "include",
+    "override", "matrix",
+];
 
 /// Maximum `[`/`(` value-nesting depth. The grammar never needs more
 /// than two levels; the cap turns adversarial `[[[[...` input into a
@@ -154,7 +156,7 @@ impl Parser<'_> {
             let token = self.peek().clone();
             match &token.tok {
                 Tok::Ident(word) => match word.as_str() {
-                    "campaign" | "sweep" | "model_axes" | "workload" | "persist" => {
+                    "campaign" | "sweep" | "model_axes" | "workload" | "persist" | "matrix" => {
                         let keyword = self.bump().span;
                         if let Some(block) = self.block(keyword) {
                             file.sections.push(match word.as_str() {
@@ -162,8 +164,50 @@ impl Parser<'_> {
                                 "sweep" => Section::Sweep(block),
                                 "model_axes" => Section::ModelAxes(block),
                                 "workload" => Section::Workload(block),
+                                "matrix" => Section::Matrix(block),
                                 _ => Section::Persist(block),
                             });
+                        }
+                    }
+                    "include" => {
+                        let keyword = self.bump().span;
+                        match self.peek().tok.clone() {
+                            Tok::Str(path) => {
+                                let span = self.peek().span;
+                                self.bump();
+                                file.sections.push(Section::Include(IncludeDecl {
+                                    keyword,
+                                    path: Spanned::new(path, span),
+                                }));
+                                self.end_stmt();
+                            }
+                            other => {
+                                let span = self.peek().span;
+                                self.diags.error_help(
+                                    span,
+                                    format!(
+                                        "expected a quoted path after 'include', found {}",
+                                        other.describe()
+                                    ),
+                                    "write include \"base.qsl\"",
+                                );
+                                self.sync_stmt();
+                            }
+                        }
+                    }
+                    "override" => {
+                        let keyword = self.bump().span;
+                        match self.ident("a section name after 'override'") {
+                            Some(target) => {
+                                if let Some(block) = self.block(keyword) {
+                                    file.sections.push(Section::Override(OverrideBlock {
+                                        keyword,
+                                        target,
+                                        block,
+                                    }));
+                                }
+                            }
+                            None => self.sync_block(),
                         }
                     }
                     "strategy" => {

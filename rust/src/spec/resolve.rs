@@ -626,6 +626,33 @@ pub fn resolve(file: &SpecFile, diags: &mut Diagnostics) -> Option<ResolvedCampa
                 model_blocks.push(model);
                 continue;
             }
+            Section::Include(inc) => {
+                diags.error_help(
+                    inc.keyword,
+                    "'include' must be expanded before a spec can be resolved",
+                    "run this spec through qadam run/validate/serve (or spec::expand), \
+                     which splices includes in place",
+                );
+                continue;
+            }
+            Section::Override(ov) => {
+                diags.error_help(
+                    ov.keyword,
+                    "'override' must be expanded before a spec can be resolved",
+                    "run this spec through qadam run/validate/serve (or spec::expand), \
+                     which merges override blocks into their target sections",
+                );
+                continue;
+            }
+            Section::Matrix(b) => {
+                diags.error_help(
+                    b.keyword,
+                    "'matrix' must be expanded before a spec can be resolved",
+                    "run this spec through qadam serve (or spec::expand), which expands \
+                     the matrix cross product into a campaign set",
+                );
+                continue;
+            }
         };
         let (stored, name, keyword) = slot;
         let block = match section {

@@ -1,0 +1,291 @@
+//! Fault-injection suite: every artifact `qadam serve` writes is torn
+//! at **every byte offset** and the batch re-run must uphold its
+//! recovery contract (see `serve::sched`'s module docs):
+//!
+//! | torn artifact        | recovery                                     |
+//! |----------------------|----------------------------------------------|
+//! | `run.journal` tail   | truncate to last complete line, resume       |
+//! | `run.journal` header | journal set aside (`.torn`), fresh start     |
+//! | `cache.json`         | cold cache — correct, just no dedupe         |
+//! | `db.json`/`frontier` | rewritten whole on completion (atomic saves) |
+//! | `serve.status.json`  | ignored — state lives in campaign journals   |
+//!
+//! plus a kill-at-every-checkpoint-boundary sweep over a 3-campaign
+//! batch (two campaigns sharing an included base) asserting that a
+//! killed-and-resumed batch produces byte-identical campaign artifacts
+//! to an uninterrupted one.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use qadam::serve::{campaign_dir, serve, BatchOutcome, BatchQueue, BatchStatus, ServeConfig};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qadam_faults_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write(dir: &Path, name: &str, text: &str) -> PathBuf {
+    let path = dir.join(name);
+    fs::write(&path, text).unwrap();
+    path
+}
+
+/// Truncate-at-offset writer: the whole fault model. A torn write (or a
+/// kill mid-write) leaves a prefix of the intended bytes; sweeping every
+/// prefix length covers every possible tear point of an artifact.
+fn tear(source: &[u8], offset: usize, dest: &Path) {
+    fs::write(dest, &source[..offset]).unwrap();
+}
+
+/// The shared base: seed 7, a 2-point GLB sweep, one tiny custom model
+/// (kept minimal so the every-byte-offset sweeps stay fast).
+const BASE: &str = "campaign { seed = 7 }\n\
+    sweep {\n  pe_type = [int16]\n  array = [8x8]\n  glb_kib = [64, 128]\n  \
+    spad = [spad(12, 224, 24)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+    workload {\n  dataset = cifar10\n  models = [tiny]\n}\n\
+    model tiny {\n  fc head { in = 64, out = 10 }\n}\n";
+
+/// Per-campaign artifact file names, the byte-identity contract's scope
+/// (`cache.json` is excluded: its save generation counts saves).
+const ARTIFACTS: [&str; 3] = ["db.json", "frontier.json", "run.journal"];
+
+fn assert_campaign_bytes_match(reference: &Path, rerun: &Path, context: &str) {
+    for name in ARTIFACTS {
+        let want = fs::read(reference.join(name)).unwrap();
+        let got = fs::read(rerun.join(name))
+            .unwrap_or_else(|e| panic!("{context}: {name} missing after recovery: {e}"));
+        assert_eq!(got, want, "{context}: {name} differs from the uninterrupted run");
+    }
+}
+
+/// Run a single-tenant batch to completion and return its outcome.
+fn reference_run(specs: &[PathBuf], out: &Path) -> BatchOutcome {
+    let queue = BatchQueue::build(specs).unwrap();
+    let outcome = serve(&queue, &ServeConfig::new(out)).unwrap();
+    assert_eq!(outcome.failures(), 0);
+    outcome
+}
+
+// ------------------------------------------------------- journal tearing
+
+/// Tear the checkpoint journal at every byte offset. A torn header
+/// (offset inside the first line) is set aside as `.torn` and the
+/// campaign restarts fresh; a torn tail resumes from the last complete
+/// entry. Either way the re-run's artifacts are byte-identical to the
+/// uninterrupted run.
+#[test]
+fn journal_torn_at_every_byte_offset_recovers_byte_identically() {
+    let dir = temp_dir("journal");
+    let spec = write(&dir, "solo.qsl", BASE);
+    let reference = reference_run(&[spec.clone()], &dir.join("ref"));
+    let ref_dir = reference.reports[0].dir.clone().unwrap();
+    let fingerprint = reference.reports[0].fingerprint;
+    let journal = fs::read(ref_dir.join("run.journal")).unwrap();
+    let header_len = journal.iter().position(|&b| b == b'\n').unwrap() + 1;
+    assert!(journal.len() > header_len, "journal must carry entries past the header");
+
+    let queue = BatchQueue::build(&[spec]).unwrap();
+    for offset in 0..journal.len() {
+        let out = dir.join("rerun");
+        let _ = fs::remove_dir_all(&out);
+        let campaign = campaign_dir(&out, fingerprint);
+        fs::create_dir_all(&campaign).unwrap();
+        tear(&journal, offset, &campaign.join("run.journal"));
+        let outcome = serve(&queue, &ServeConfig::new(&out)).unwrap();
+        assert_eq!(outcome.failures(), 0, "offset {offset}");
+        assert_campaign_bytes_match(&ref_dir, &campaign, &format!("journal offset {offset}"));
+        // A tear inside the header line is the kill-between-create-and-
+        // flush crash: the suspect bytes must survive aside, never be
+        // deleted.
+        let torn_aside = campaign.join("run.journal.torn").exists();
+        assert_eq!(torn_aside, offset < header_len, "offset {offset} (header {header_len}B)");
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------------------------- cache tearing
+
+/// Tear the shared cache at every byte offset: an unreadable cache
+/// degrades to a cold start (flagged via `cache_recovered`), and cache
+/// warmth — torn, cold, or whole — never changes campaign artifacts.
+#[test]
+fn cache_torn_at_every_byte_offset_is_cold_but_correct() {
+    let dir = temp_dir("cache");
+    write(&dir, "base.qsl", BASE);
+    let tenant_a = write(&dir, "a.qsl", "include \"base.qsl\"\n");
+    let tenant_b =
+        write(&dir, "b.qsl", "include \"base.qsl\"\noverride sweep { glb_kib = [128, 192] }\n");
+    let specs = [tenant_a, tenant_b];
+    let reference = reference_run(&specs, &dir.join("ref"));
+    let ref_dirs: Vec<PathBuf> =
+        reference.reports.iter().map(|r| r.dir.clone().unwrap()).collect();
+    let cache = fs::read(&reference.cache_path).unwrap();
+
+    let queue = BatchQueue::build(&specs).unwrap();
+    let mut recovered = 0usize;
+    for offset in 0..cache.len() {
+        let out = dir.join("rerun");
+        let _ = fs::remove_dir_all(&out);
+        fs::create_dir_all(&out).unwrap();
+        tear(&cache, offset, &out.join("cache.json"));
+        let outcome = serve(&queue, &ServeConfig::new(&out)).unwrap();
+        assert_eq!(outcome.failures(), 0, "offset {offset}");
+        recovered += outcome.cache_recovered as usize;
+        for (report, ref_dir) in outcome.reports.iter().zip(&ref_dirs) {
+            assert_campaign_bytes_match(
+                ref_dir,
+                report.dir.as_ref().unwrap(),
+                &format!("cache offset {offset}"),
+            );
+        }
+        // The re-saved cache is whole again and carries the batch's
+        // full entry set.
+        assert_eq!(outcome.cache_entries, reference.cache_entries, "offset {offset}");
+    }
+    // Truncation almost always breaks the JSON document; every such
+    // offset must have taken the cold-start path rather than erroring.
+    assert!(recovered > cache.len() / 2, "{recovered} of {} offsets recovered", cache.len());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------- db / frontier / status tearing
+
+/// Tear `db.json` and `frontier.json` at every byte offset: both are
+/// whole-file atomic rewrites derived from the journal, so a re-run
+/// replays the (complete) journal and restores their exact bytes.
+#[test]
+fn db_and_frontier_torn_at_every_byte_offset_are_rewritten() {
+    let dir = temp_dir("db");
+    let spec = write(&dir, "solo.qsl", BASE);
+    let reference = reference_run(&[spec.clone()], &dir.join("ref"));
+    let ref_dir = reference.reports[0].dir.clone().unwrap();
+    let fingerprint = reference.reports[0].fingerprint;
+    let journal = fs::read(ref_dir.join("run.journal")).unwrap();
+
+    let queue = BatchQueue::build(&[spec]).unwrap();
+    for artifact in ["db.json", "frontier.json"] {
+        let bytes = fs::read(ref_dir.join(artifact)).unwrap();
+        for offset in 0..bytes.len() {
+            let out = dir.join("rerun");
+            let _ = fs::remove_dir_all(&out);
+            let campaign = campaign_dir(&out, fingerprint);
+            fs::create_dir_all(&campaign).unwrap();
+            // The kill window: journal finished, artifact save torn.
+            fs::write(campaign.join("run.journal"), &journal).unwrap();
+            tear(&bytes, offset, &campaign.join(artifact));
+            let outcome = serve(&queue, &ServeConfig::new(&out)).unwrap();
+            assert_eq!(outcome.failures(), 0, "{artifact} offset {offset}");
+            assert_campaign_bytes_match(
+                &ref_dir,
+                &campaign,
+                &format!("{artifact} offset {offset}"),
+            );
+        }
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Tear `serve.status.json` at every byte offset: the scheduler never
+/// reads it back, so a torn batch journal loses nothing — the re-run
+/// reconstructs every campaign from its checkpoint journal and rewrites
+/// a whole status document.
+#[test]
+fn status_torn_at_every_byte_offset_loses_nothing() {
+    let dir = temp_dir("status");
+    let spec = write(&dir, "solo.qsl", BASE);
+    let out = dir.join("out");
+    let reference = reference_run(&[spec.clone()], &out);
+    let ref_dir = reference.reports[0].dir.clone().unwrap();
+    let keep = dir.join("keep");
+    fs::create_dir_all(&keep).unwrap();
+    for name in ARTIFACTS {
+        fs::copy(ref_dir.join(name), keep.join(name)).unwrap();
+    }
+    let status = fs::read(&reference.status_path).unwrap();
+
+    let queue = BatchQueue::build(&[spec]).unwrap();
+    for offset in 0..status.len() {
+        tear(&status, offset, &reference.status_path);
+        let outcome = serve(&queue, &ServeConfig::new(&out)).unwrap();
+        assert_eq!(outcome.failures(), 0, "offset {offset}");
+        assert_campaign_bytes_match(&keep, &ref_dir, &format!("status offset {offset}"));
+        // The status document is whole again after the re-run.
+        let reloaded = BatchStatus::load(&reference.status_path)
+            .unwrap_or_else(|e| panic!("offset {offset}: status not rewritten whole: {e}"));
+        assert_eq!(reloaded.campaigns().len(), 1);
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------- kill-at-checkpoint-boundary batches
+
+/// The acceptance sweep: a 3-campaign batch (two tenants sharing an
+/// included base + one standalone spec) killed at every checkpoint
+/// boundary of every campaign, then re-run — every campaign's artifacts
+/// must be byte-identical to the uninterrupted batch.
+///
+/// A kill while campaign `i` is mid-flight leaves: full artifacts for
+/// campaigns before `i` (they completed), a journal prefix at a flush
+/// boundary for `i` (header + k entries; `every = 1` flushes per
+/// entry), nothing for campaigns after `i`, and whatever shared-cache
+/// save last completed.
+#[test]
+fn kill_at_every_checkpoint_boundary_resumes_byte_identically() {
+    let dir = temp_dir("kill");
+    write(&dir, "base.qsl", BASE);
+    let specs = [
+        write(&dir, "a.qsl", "include \"base.qsl\"\n"),
+        write(&dir, "b.qsl", "include \"base.qsl\"\noverride sweep { glb_kib = [128, 192] }\n"),
+        write(&dir, "c.qsl", &BASE.replace("seed = 7", "seed = 11")),
+    ];
+    let reference = reference_run(&specs, &dir.join("ref"));
+    let ref_dirs: Vec<PathBuf> =
+        reference.reports.iter().map(|r| r.dir.clone().unwrap()).collect();
+    // Per-campaign journal split into header + entry lines (every = 1:
+    // each entry is flushed, so every line boundary is a kill point).
+    let journals: Vec<Vec<Vec<u8>>> = ref_dirs
+        .iter()
+        .map(|d| {
+            let text = fs::read_to_string(d.join("run.journal")).unwrap();
+            text.split_inclusive('\n').map(|line| line.as_bytes().to_vec()).collect()
+        })
+        .collect();
+
+    let queue = BatchQueue::build(&specs).unwrap();
+    for victim in 0..specs.len() {
+        let entries = journals[victim].len() - 1; // minus the header line
+        for kept in 0..=entries {
+            let context = format!("kill: campaign {victim} at boundary {kept}");
+            let out = dir.join("rerun");
+            let _ = fs::remove_dir_all(&out);
+            fs::create_dir_all(&out).unwrap();
+            // Completed campaigns keep everything; the victim keeps a
+            // journal prefix; later campaigns haven't started.
+            for done in 0..victim {
+                let dest = campaign_dir(&out, reference.reports[done].fingerprint);
+                fs::create_dir_all(&dest).unwrap();
+                for name in ARTIFACTS {
+                    fs::copy(ref_dirs[done].join(name), dest.join(name)).unwrap();
+                }
+            }
+            let victim_dir = campaign_dir(&out, reference.reports[victim].fingerprint);
+            fs::create_dir_all(&victim_dir).unwrap();
+            let prefix: Vec<u8> =
+                journals[victim][..1 + kept].iter().flatten().copied().collect();
+            fs::write(victim_dir.join("run.journal"), &prefix).unwrap();
+            // The shared cache as of the last completed campaign.
+            fs::copy(&reference.cache_path, out.join("cache.json")).unwrap();
+
+            let outcome = serve(&queue, &ServeConfig::new(&out)).unwrap();
+            assert_eq!(outcome.failures(), 0, "{context}");
+            for (report, ref_dir) in outcome.reports.iter().zip(&ref_dirs) {
+                assert_campaign_bytes_match(ref_dir, report.dir.as_ref().unwrap(), &context);
+            }
+            assert_eq!(outcome.cache_entries, reference.cache_entries, "{context}");
+        }
+    }
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,360 @@
+//! `qadam serve` integration suite: cross-tenant shared-cache dedupe,
+//! batch/solo byte-identity, queue-order invariance, matrix expansion
+//! through the scheduler, duplicate-fingerprint and lint-denial skips,
+//! and the cache save-generation counter under parallel savers.
+//!
+//! Every campaign here is tiny (a 2-point sweep over a one-layer custom
+//! model) so the whole batch machinery — expansion, lint gate, worker
+//! pool, per-fingerprint artifact directories — runs in milliseconds.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use qadam::arch::AcceleratorConfig;
+use qadam::dse::Evaluation;
+use qadam::explore::PointCache;
+use qadam::serve::{serve, BatchQueue, BatchStatus, CampaignState, ServeConfig};
+use qadam::util::json::Json;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qadam_serve_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write(dir: &Path, name: &str, text: &str) -> PathBuf {
+    let path = dir.join(name);
+    fs::write(&path, text).unwrap();
+    path
+}
+
+/// The shared base: seed 7, a 2-point GLB sweep, one tiny custom model.
+const BASE: &str = "campaign { seed = 7 }\n\
+    sweep {\n  pe_type = [int16]\n  array = [8x8]\n  glb_kib = [64, 128]\n  \
+    spad = [spad(12, 224, 24)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+    workload {\n  dataset = cifar10\n  models = [tiny]\n}\n\
+    model tiny {\n  fc head { in = 64, out = 10 }\n}\n";
+
+/// Tenant A: the base sweep verbatim (glb 64, 128).
+const TENANT_A: &str = "include \"base.qsl\"\n";
+
+/// Tenant B: overlaps tenant A at glb = 128, adds 192.
+const TENANT_B: &str = "include \"base.qsl\"\noverride sweep { glb_kib = [128, 192] }\n";
+
+/// Write the base + both tenants into `dir`, returning the tenant paths.
+fn tenant_specs(dir: &Path) -> (PathBuf, PathBuf) {
+    write(dir, "base.qsl", BASE);
+    (write(dir, "tenant_a.qsl", TENANT_A), write(dir, "tenant_b.qsl", TENANT_B))
+}
+
+fn config_for(out: &Path) -> ServeConfig {
+    // max_concurrent 1: the deterministic schedule the exact-counter
+    // assertions rely on (see the scheduler docs).
+    ServeConfig::new(out)
+}
+
+/// Read one campaign's three artifacts as bytes.
+fn artifact_bytes(dir: &Path) -> [(String, Vec<u8>); 3] {
+    ["db.json", "frontier.json", "run.journal"].map(|name| {
+        let path = dir.join(name);
+        (name.to_string(), fs::read(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display())))
+    })
+}
+
+// ------------------------------------------------------- shared-cache dedupe
+
+/// The acceptance property: two tenants including the same base run
+/// through one batch, and every design point the second tenant shares
+/// with the first is a cache hit — counted exactly.
+#[test]
+fn overlapping_tenants_dedupe_through_the_shared_cache() {
+    let dir = temp_dir("dedupe");
+    let (a, b) = tenant_specs(&dir);
+    let out = dir.join("out");
+    let queue = BatchQueue::build(&[a, b]).unwrap();
+    assert_eq!(queue.len(), 2);
+    let outcome = serve(&queue, &config_for(&out)).unwrap();
+    assert_eq!(outcome.failures(), 0);
+    assert!(!outcome.cache_recovered);
+
+    // Tenant A runs cold: 2 misses. Tenant B shares glb=128 with A
+    // (same seed, same model set → same point key): 1 hit, 1 miss.
+    let [a_report, b_report] = &outcome.reports[..] else {
+        panic!("expected 2 reports, got {}", outcome.reports.len())
+    };
+    assert_eq!(a_report.state, CampaignState::Done);
+    assert_eq!(b_report.state, CampaignState::Done);
+    assert_eq!((a_report.hits, a_report.misses), (0, 2), "{}", a_report.detail);
+    assert_eq!((b_report.hits, b_report.misses), (1, 1), "{}", b_report.detail);
+    // 3 distinct design points across the batch.
+    assert_eq!(outcome.cache_entries, 3);
+
+    // Every campaign owns a full artifact directory.
+    for report in &outcome.reports {
+        let campaign_dir = report.dir.as_ref().unwrap();
+        for (_, bytes) in artifact_bytes(campaign_dir) {
+            assert!(!bytes.is_empty());
+        }
+    }
+
+    // The saved cache reloads with both tenants' entries and one save
+    // generation per completed campaign.
+    let mut cache = PointCache::load(&outcome.cache_path).unwrap();
+    assert_eq!(cache.len(), 3);
+    assert_eq!(cache.generation(), 2, "one save per completed campaign");
+    // Re-saving keeps counting.
+    cache.save(&outcome.cache_path).unwrap();
+    assert_eq!(PointCache::load(&outcome.cache_path).unwrap().generation(), 3);
+
+    // The status journal streamed the full lifecycle with dense seqs.
+    let status = BatchStatus::load(&outcome.status_path).unwrap();
+    assert!(status.campaigns().iter().all(|c| c.state == CampaignState::Done));
+    let seqs: Vec<u64> = status.transitions().iter().map(|t| t.seq).collect();
+    assert_eq!(seqs, (0..seqs.len() as u64).collect::<Vec<u64>>());
+    // queued → linted → running → done, in order, for each campaign.
+    for index in 0..2 {
+        let states: Vec<CampaignState> = status
+            .transitions()
+            .iter()
+            .filter(|t| t.index == index)
+            .map(|t| t.state)
+            .collect();
+        assert_eq!(
+            states,
+            [
+                CampaignState::Queued,
+                CampaignState::Linted,
+                CampaignState::Running,
+                CampaignState::Done
+            ]
+        );
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Batch artifacts are byte-identical to solo runs: cache warmth (B ran
+/// warm in the batch, cold solo) must not change a single artifact byte.
+#[test]
+fn batch_campaigns_match_solo_runs_bit_for_bit() {
+    let dir = temp_dir("solo_vs_batch");
+    let (a, b) = tenant_specs(&dir);
+    let batch = serve(
+        &BatchQueue::build(&[a.clone(), b.clone()]).unwrap(),
+        &config_for(&dir.join("batch")),
+    )
+    .unwrap();
+    let solo_a =
+        serve(&BatchQueue::build(&[a]).unwrap(), &config_for(&dir.join("solo_a"))).unwrap();
+    let solo_b =
+        serve(&BatchQueue::build(&[b]).unwrap(), &config_for(&dir.join("solo_b"))).unwrap();
+    for (solo, index) in [(&solo_a, 0), (&solo_b, 1)] {
+        let solo_dir = solo.reports[0].dir.as_ref().unwrap();
+        let batch_dir = batch.reports[index].dir.as_ref().unwrap();
+        for ((name, solo_bytes), (_, batch_bytes)) in
+            artifact_bytes(solo_dir).iter().zip(artifact_bytes(batch_dir).iter())
+        {
+            assert_eq!(solo_bytes, batch_bytes, "campaign {index}: {name} differs solo vs batch");
+        }
+    }
+    // Solo B ran cold: its one batch-time hit became a miss — artifacts
+    // above prove that changed nothing.
+    assert_eq!((solo_b.reports[0].hits, solo_b.reports[0].misses), (0, 2));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Shuffling the queue changes scheduling and cache warmth, but no
+/// artifact bytes.
+#[test]
+fn queue_order_changes_no_artifact_bytes() {
+    let dir = temp_dir("order");
+    let (a, b) = tenant_specs(&dir);
+    let forward = serve(
+        &BatchQueue::build(&[a.clone(), b.clone()]).unwrap(),
+        &config_for(&dir.join("fwd")),
+    )
+    .unwrap();
+    let reverse =
+        serve(&BatchQueue::build(&[b, a]).unwrap(), &config_for(&dir.join("rev"))).unwrap();
+    // Match campaigns by fingerprint (their queue indices swapped).
+    for fwd_report in &forward.reports {
+        let rev_report = reverse
+            .reports
+            .iter()
+            .find(|r| r.fingerprint == fwd_report.fingerprint)
+            .expect("same campaign set under both orders");
+        let fwd_dir = fwd_report.dir.as_ref().unwrap();
+        let rev_dir = rev_report.dir.as_ref().unwrap();
+        for ((name, fwd_bytes), (_, rev_bytes)) in
+            artifact_bytes(fwd_dir).iter().zip(artifact_bytes(rev_dir).iter())
+        {
+            assert_eq!(fwd_bytes, rev_bytes, "{name} depends on queue order");
+        }
+    }
+    // The dedupe flipped direction: now B is cold and A gets the hit.
+    assert_eq!((reverse.reports[0].hits, reverse.reports[0].misses), (0, 2));
+    assert_eq!((reverse.reports[1].hits, reverse.reports[1].misses), (1, 1));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------ expansion through serve
+
+/// A matrix spec expands into several campaigns inside one queue entry
+/// file, each with its own fingerprint directory.
+#[test]
+fn matrix_specs_expand_into_separate_campaigns() {
+    let dir = temp_dir("matrix");
+    let spec = write(&dir, "grid.qsl", &format!("{BASE}matrix {{ seed = [1, 2] }}\n"));
+    let queue = BatchQueue::build(&[spec]).unwrap();
+    assert_eq!(queue.len(), 2);
+    assert_eq!(queue.entries[0].label, "seed=1");
+    assert_eq!(queue.entries[1].label, "seed=2");
+    let outcome = serve(&queue, &config_for(&dir.join("out"))).unwrap();
+    assert_eq!(outcome.failures(), 0);
+    let dirs: Vec<&PathBuf> =
+        outcome.reports.iter().map(|r| r.dir.as_ref().unwrap()).collect();
+    assert_ne!(dirs[0], dirs[1], "each matrix combination owns a directory");
+    // Different seeds address different cache keys: no cross-seed hits.
+    assert_eq!(outcome.cache_entries, 4);
+    assert!(outcome.reports.iter().all(|r| r.hits == 0));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Concurrent batches produce the same campaign artifacts as sequential
+/// ones — the worker pool changes wall-clock, not bytes.
+#[test]
+fn concurrent_batches_match_sequential_artifacts() {
+    let dir = temp_dir("concurrent");
+    let spec = write(&dir, "grid.qsl", &format!("{BASE}matrix {{ seed = [1, 2, 3] }}\n"));
+    let queue = BatchQueue::build(&[spec]).unwrap();
+    let sequential = serve(&queue, &config_for(&dir.join("seq"))).unwrap();
+    let mut config = config_for(&dir.join("par"));
+    config.max_concurrent = 3;
+    let parallel = serve(&queue, &config).unwrap();
+    assert_eq!(parallel.failures(), 0);
+    for (seq_report, par_report) in sequential.reports.iter().zip(&parallel.reports) {
+        assert_eq!(seq_report.fingerprint, par_report.fingerprint);
+        let seq_dir = seq_report.dir.as_ref().unwrap();
+        let par_dir = par_report.dir.as_ref().unwrap();
+        for ((name, seq_bytes), (_, par_bytes)) in
+            artifact_bytes(seq_dir).iter().zip(artifact_bytes(par_dir).iter())
+        {
+            assert_eq!(seq_bytes, par_bytes, "{name} depends on concurrency");
+        }
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------------------------- pre-flight gates
+
+/// The same campaign queued twice runs once; the duplicate is skipped,
+/// not re-run and not failed.
+#[test]
+fn duplicate_fingerprints_skip_the_later_campaign() {
+    let dir = temp_dir("dup");
+    let (a, _) = tenant_specs(&dir);
+    let again = write(&dir, "tenant_a_again.qsl", TENANT_A);
+    let outcome = serve(
+        &BatchQueue::build(&[a, again]).unwrap(),
+        &config_for(&dir.join("out")),
+    )
+    .unwrap();
+    assert_eq!(outcome.failures(), 0);
+    assert_eq!(outcome.reports[0].state, CampaignState::Done);
+    assert_eq!(outcome.reports[1].state, CampaignState::Skipped);
+    assert!(
+        outcome.reports[1].detail.contains("duplicate"),
+        "{}",
+        outcome.reports[1].detail
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// A deny-level lint finding (Q012: a shard past the space size selects
+/// nothing) skips that campaign only — the rest of the batch runs.
+#[test]
+fn lint_denials_skip_only_the_offending_campaign() {
+    let dir = temp_dir("lint_gate");
+    let (a, _) = tenant_specs(&dir);
+    let empty = write(
+        &dir,
+        "empty_shard.qsl",
+        "include \"base.qsl\"\noverride campaign { shard = 3 / 8 }\n",
+    );
+    let outcome = serve(
+        &BatchQueue::build(&[empty, a]).unwrap(),
+        &config_for(&dir.join("out")),
+    )
+    .unwrap();
+    assert_eq!(outcome.failures(), 0, "a lint skip is not a failure");
+    assert_eq!(outcome.reports[0].state, CampaignState::Skipped);
+    assert!(
+        outcome.reports[0].detail.contains("Q012"),
+        "{}",
+        outcome.reports[0].detail
+    );
+    assert!(outcome.reports[0].dir.is_none(), "skipped campaigns write no artifacts");
+    assert_eq!(outcome.reports[1].state, CampaignState::Done);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------- cache save-generation counter
+
+fn sample_eval(rows: usize) -> Evaluation {
+    Evaluation {
+        config: AcceleratorConfig { rows, ..Default::default() },
+        area_mm2: 1.0,
+        clock_ghz: 1.0,
+        latency_ms: 1.0,
+        inf_per_s: 1.0,
+        perf_per_area: 1.0,
+        energy_uj: 1.0,
+        dram_energy_uj: 1.0,
+        utilization: 0.5,
+    }
+}
+
+/// Two tenants saving the shared cache in parallel must never persist a
+/// file missing either tenant's entries: saves are serialized under the
+/// cache mutex, the file always carries the merged entry set, and the
+/// save-generation counter counts every save that reached disk.
+#[test]
+fn parallel_savers_never_lose_a_tenants_entries() {
+    let dir = temp_dir("parallel_save");
+    let path = dir.join("cache.json");
+    let shared = Arc::new(Mutex::new(PointCache::new()));
+    let tenants = 4;
+    std::thread::scope(|scope| {
+        for tenant in 0..tenants {
+            let shared = shared.clone();
+            let path = path.clone();
+            scope.spawn(move || {
+                // Store-then-save atomically under the mutex — exactly
+                // what the scheduler's run_campaign does.
+                let mut cache = shared.lock().unwrap();
+                cache.store(tenant as u64, vec![sample_eval(8 + tenant)]);
+                cache.save(&path).unwrap();
+            });
+        }
+    });
+    let on_disk = PointCache::load(&path).unwrap();
+    // The last save to land happened-after every store: all entries
+    // present, one generation per save.
+    assert_eq!(on_disk.len(), tenants);
+    assert_eq!(on_disk.generation(), tenants as u64);
+    for tenant in 0..tenants {
+        assert!(on_disk.get(tenant as u64).is_some(), "tenant {tenant} entry lost");
+    }
+
+    // A pre-generation cache file (schema without the counter) loads as
+    // generation 0 — old artifacts stay readable.
+    let legacy = dir.join("legacy.json");
+    let mut json = Json::parse(&fs::read_to_string(&path).unwrap()).unwrap();
+    if let Json::Obj(fields) = &mut json {
+        assert!(fields.remove("generation").is_some());
+    }
+    fs::write(&legacy, json.to_string_pretty()).unwrap();
+    assert_eq!(PointCache::load(&legacy).unwrap().generation(), 0);
+    let _ = fs::remove_dir_all(&dir);
+}
