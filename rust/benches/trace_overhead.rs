@@ -1,0 +1,85 @@
+//! Bench: tracing overhead on the Explorer hot path — the same fully
+//! instrumented campaign (cache + frontier attached, so every emission
+//! site is live) run untraced, with the no-op [`NullSink`], and with a
+//! recording [`TraceRecorder`]. The DESIGN.md §11 contract is that the
+//! no-op sink stays within noise of the untraced baseline (<2%), and
+//! the recorder's cost is dominated by one mutex push per event.
+
+use std::sync::{Arc, Mutex};
+
+use qadam::arch::SweepSpec;
+use qadam::bench::{bench_with, section, BenchConfig};
+use qadam::coordinator::default_workers;
+use qadam::dnn::Dataset;
+use qadam::explore::{Explorer, PointCache};
+use qadam::obs::{NullSink, TraceRecorder, TraceSink};
+use qadam::pareto::CampaignFrontier;
+
+/// A mid-size slice of the default space: big enough that per-point
+/// evaluation dominates, small enough for the heavy bench config.
+fn sweep() -> SweepSpec {
+    let d = SweepSpec::default();
+    SweepSpec {
+        pe_types: d.pe_types.clone(),
+        array_dims: d.array_dims[..2.min(d.array_dims.len())].to_vec(),
+        glb_kib: d.glb_kib[..2.min(d.glb_kib.len())].to_vec(),
+        spads: d.spads[..1].to_vec(),
+        dram_bw_gbps: d.dram_bw_gbps[..1].to_vec(),
+        clock_ghz: d.clock_ghz[..1].to_vec(),
+    }
+}
+
+/// One instrumented campaign: fresh cache and frontier per iteration so
+/// every run pays the same (cold) evaluation cost and every emission
+/// site — dispatch, cache, frontier, deliver — fires.
+fn run(sink: Option<Arc<dyn TraceSink>>) -> usize {
+    let mut explorer = Explorer::over(sweep())
+        .dataset(Dataset::Cifar10)
+        .workers(default_workers())
+        .seed(7)
+        .cache(Arc::new(Mutex::new(PointCache::new())))
+        .frontier(Arc::new(Mutex::new(CampaignFrontier::new())));
+    if let Some(sink) = sink {
+        explorer = explorer.trace_sink(sink);
+    }
+    explorer.run().expect("bench campaign").stats.design_points
+}
+
+fn overhead_pct(baseline: f64, measured: f64) -> f64 {
+    100.0 * (measured - baseline) / baseline.max(1e-9)
+}
+
+fn main() {
+    let points = run(None);
+    section(&format!("trace overhead ({points} design points per campaign)"));
+
+    let untraced = bench_with("campaign_untraced", BenchConfig::heavy(), || run(None));
+    println!("{}", untraced.render());
+
+    let null_sink = bench_with("campaign_null_sink", BenchConfig::heavy(), || {
+        run(Some(Arc::new(NullSink)))
+    });
+    println!("{}", null_sink.render());
+
+    let recorder = bench_with("campaign_trace_recorder", BenchConfig::heavy(), || {
+        let recorder = Arc::new(TraceRecorder::new());
+        let points = run(Some(recorder.clone()));
+        assert!(!recorder.is_empty(), "recorder must capture events");
+        points
+    });
+    println!("{}", recorder.render());
+
+    println!(
+        "null-sink overhead: {:+.2}% mean vs untraced (target < 2%); \
+         recorder overhead: {:+.2}%",
+        overhead_pct(untraced.summary.mean, null_sink.summary.mean),
+        overhead_pct(untraced.summary.mean, recorder.summary.mean),
+    );
+
+    println!("CSV:");
+    for result in [&untraced, &null_sink, &recorder] {
+        println!("{}", result.to_csv_row());
+    }
+
+    qadam::bench::finish("trace_overhead", &qadam::bench::HostMeta::from_env());
+}

@@ -75,7 +75,11 @@ use crate::coordinator::pool::default_workers;
 use crate::dnn::{lower_workload, models_for, Dataset, Model};
 use crate::dse::{self, Evaluation};
 use crate::error::{Error, Result};
-use crate::pareto::{CampaignFrontier, FrontierBinding, Selection, Strategy, StrategyContext};
+use crate::obs::{TraceEvent, TraceSink};
+use crate::pareto::{
+    CampaignFrontier, FrontierBinding, InsertOutcome, RoundReport, Selection, Strategy,
+    StrategyContext,
+};
 use crate::synth::synthesize;
 
 /// One fully evaluated joint design point, streamed as soon as it is
@@ -108,6 +112,7 @@ pub struct Explorer {
     strategy: Option<Arc<dyn Strategy>>,
     frontier: Option<Arc<Mutex<CampaignFrontier>>>,
     campaign_fp: Option<u64>,
+    trace: Option<Arc<dyn TraceSink>>,
 }
 
 impl Explorer {
@@ -129,6 +134,7 @@ impl Explorer {
             strategy: None,
             frontier: None,
             campaign_fp: None,
+            trace: None,
         }
     }
 
@@ -254,6 +260,21 @@ impl Explorer {
     /// and two fingerprint-less campaigns resume freely as before.
     pub fn campaign_fingerprint(mut self, fingerprint: u64) -> Self {
         self.campaign_fp = Some(fingerprint);
+        self
+    }
+
+    /// Record the campaign's deterministic event stream into `sink`
+    /// (see [`crate::obs`]): campaign begin/end, the strategy funnel,
+    /// and — per delivered point, in delivery order — dispatch, cache
+    /// hit/miss, frontier insertion outcomes, delivery, and the
+    /// journal's logical flush schedule. Every emission site is on
+    /// single-threaded code (selection, replay, the ordered delivery
+    /// loop), so the stream is byte-identical at any worker count and
+    /// across kill/resume. An attached sink also enables per-point
+    /// evaluation timing, forwarded to the sink out-of-band for the
+    /// `qadam.timing` sidecar — never into the trace itself.
+    pub fn trace_sink(mut self, sink: Arc<dyn TraceSink>) -> Self {
+        self.trace = Some(sink);
         self
     }
 
@@ -403,7 +424,11 @@ impl Explorer {
         // themselves for a hardware-only campaign).
         let variant_models = self.variant_models();
         // Strategy selection: which shard positions this campaign visits.
-        // Runs once, up front, so the walk itself stays lazy.
+        // Runs once, up front, so the walk itself stays lazy. The
+        // observer collects per-round prune counts for the trace;
+        // `select_observed` is contractually identical to `select`, so
+        // traced and untraced campaigns pick the same points.
+        let mut strategy_rounds: Vec<RoundReport> = Vec::new();
         let selection = match &self.strategy {
             None => Selection::All,
             Some(strategy) => {
@@ -414,7 +439,8 @@ impl Explorer {
                     shard: self.shard,
                     positions: space_positions,
                 };
-                let selected = strategy.select(&ctx)?;
+                let selected =
+                    strategy.select_observed(&ctx, &mut |report| strategy_rounds.push(report))?;
                 selected.validate(space_positions)?;
                 selected
             }
@@ -431,6 +457,38 @@ impl Explorer {
             shard + position * num_shards
         };
         let started = Instant::now();
+        // Trace prologue: campaign identity, then the strategy funnel.
+        // Everything the trace records is emitted from single-threaded
+        // code, so the event stream is deterministic (DESIGN.md §11).
+        let flush_every = self.checkpoint.as_ref().map(|(_, every_n)| (*every_n).max(1));
+        let mut cache_counts = (0u64, 0u64);
+        if let Some(trace) = self.trace.as_deref() {
+            trace.record(TraceEvent::CampaignBegin {
+                fingerprint: self.campaign_fp,
+                space_fingerprint: self.space.fingerprint(),
+                seed: self.seed,
+                shard,
+                num_shards,
+                strategy: self.strategy_descriptor(),
+                total,
+                models: self.models.len(),
+                variants: variant_models.len(),
+            });
+            for report in &strategy_rounds {
+                trace.record(TraceEvent::StrategyRound {
+                    round: report.round,
+                    entered: report.entered,
+                    kept: report.kept,
+                });
+            }
+            if self.strategy.is_some() {
+                trace.record(TraceEvent::StrategySelect {
+                    descriptor: self.strategy_descriptor(),
+                    selected: total,
+                    positions: space_positions,
+                });
+            }
+        }
         // Live frontier: bind the campaign identity before any delivery
         // (a frontier bound to a different campaign is rejected here).
         // The fingerprint is the *joint* space's, so fronts from
@@ -462,14 +520,36 @@ impl Explorer {
                 // reattached frontier already archived, so nothing is
                 // double-counted. Cache keys use the point's *scaled*
                 // model set, exactly like the live workers below.
-                if let Some(cache) = self.cache.as_ref() {
+                let cache_probe = self.cache.as_ref().map(|cache| {
                     let variant = self.space.variant_index(point.index);
                     let key =
                         persist::point_key(&point.config, self.seed, &variant_models[variant]);
-                    lock_shared(cache).store(key, point.evals.clone());
-                }
-                if let Some(frontier) = &self.frontier {
-                    lock_shared(frontier).observe_at(pos, point.index, &point.evals)?;
+                    let mut shared = lock_shared(cache);
+                    // Uncounted membership *before* the store reproduces
+                    // the live run's hit/miss for the trace: point keys
+                    // are unique within a campaign, so the live outcome
+                    // depended only on the cache's campaign-start state.
+                    let warm = shared.get(key).is_some();
+                    shared.store(key, point.evals.clone());
+                    (key, warm)
+                });
+                let outcomes = match &self.frontier {
+                    Some(frontier) => {
+                        Some(lock_shared(frontier).observe_at(pos, point.index, &point.evals)?)
+                    }
+                    None => None,
+                };
+                if let Some(trace) = self.trace.as_deref() {
+                    emit_point_events(
+                        trace,
+                        pos,
+                        point.index,
+                        cache_probe,
+                        outcomes,
+                        None,
+                        flush_every,
+                        &mut cache_counts,
+                    );
                 }
                 sink(point);
             }
@@ -493,7 +573,10 @@ impl Explorer {
         let stop_ref = &stop;
         let index_for_ref = &index_for;
         let mut abort_err: Option<Error> = None;
-        let (tx, rx) = mpsc::channel::<(usize, PointResult)>();
+        // Evaluation timing is only measured when a trace sink will
+        // consume it — untraced campaigns skip the clock reads.
+        let timed = self.trace.is_some();
+        let (tx, rx) = mpsc::channel::<Streamed>();
         std::thread::scope(|scope| {
             for _ in 0..worker_count {
                 let tx = tx.clone();
@@ -526,9 +609,13 @@ impl Explorer {
                             space.get(index).expect("shard index within joint cross-product");
                         let models = &variant_models_ref[space.variant_index(index)];
                         let config = point.config;
-                        let evals =
+                        let eval_started = timed.then(Instant::now);
+                        let (evals, cache_probe) =
                             evaluate_point(&config, models, seed, cache, &mut key_scratch);
-                        if tx.send((pos, PointResult { index, config, evals })).is_err() {
+                        let eval_ns =
+                            eval_started.map_or(0, |at| at.elapsed().as_nanos() as u64);
+                        let result = PointResult { index, config, evals };
+                        if tx.send(Streamed { pos, result, cache_probe, eval_ns }).is_err() {
                             break;
                         }
                     }
@@ -550,11 +637,13 @@ impl Explorer {
             let _guard = StopGuard { stop: stop_ref, throttle: throttle_ref };
             // Reorder out-of-order completions so the sink observes the
             // deterministic cross-product order.
-            let mut pending: BTreeMap<usize, PointResult> = BTreeMap::new();
+            let mut pending: BTreeMap<usize, Streamed> = BTreeMap::new();
             let mut next = start_pos;
-            'recv: for (pos, result) in rx {
-                pending.insert(pos, result);
-                while let Some(ready) = pending.remove(&next) {
+            'recv: for streamed in rx {
+                pending.insert(streamed.pos, streamed);
+                while let Some(Streamed { result: ready, cache_probe, eval_ns, .. }) =
+                    pending.remove(&next)
+                {
                     if let Some(writer) = journal.as_mut() {
                         if let Err(err) = writer.append(&ready) {
                             // Abandon the campaign: the guard releases the
@@ -563,13 +652,28 @@ impl Explorer {
                             break 'recv;
                         }
                     }
-                    if let Some(frontier) = &self.frontier {
-                        let observed =
-                            lock_shared(frontier).observe_at(next, ready.index, &ready.evals);
-                        if let Err(err) = observed {
-                            abort_err = Some(err);
-                            break 'recv;
+                    let outcomes = if let Some(frontier) = &self.frontier {
+                        match lock_shared(frontier).observe_at(next, ready.index, &ready.evals) {
+                            Ok(outcomes) => Some(outcomes),
+                            Err(err) => {
+                                abort_err = Some(err);
+                                break 'recv;
+                            }
                         }
+                    } else {
+                        None
+                    };
+                    if let Some(trace) = self.trace.as_deref() {
+                        emit_point_events(
+                            trace,
+                            next,
+                            ready.index,
+                            cache_probe,
+                            outcomes,
+                            Some(eval_ns),
+                            flush_every,
+                            &mut cache_counts,
+                        );
                     }
                     sink(ready);
                     next += 1;
@@ -586,6 +690,29 @@ impl Explorer {
         }
         if let Some(writer) = journal {
             writer.finish()?;
+        }
+        // Trace epilogue: the journal's final partial flush (a pure
+        // function of (total, every), like the boundary flushes), then
+        // end-of-campaign aggregates.
+        if let Some(trace) = self.trace.as_deref() {
+            if let Some(every) = flush_every {
+                if total % every != 0 {
+                    trace.record(TraceEvent::JournalFlush { upto: total });
+                }
+            }
+            let fronts = match &self.frontier {
+                Some(frontier) => {
+                    lock_shared(frontier).models().iter().map(|m| m.front().len()).collect()
+                }
+                None => Vec::new(),
+            };
+            trace.record(TraceEvent::CampaignEnd {
+                points: total,
+                evaluations: total * self.models.len(),
+                cache_hits: cache_counts.0,
+                cache_misses: cache_counts.1,
+                fronts,
+            });
         }
         Ok(CampaignStats {
             design_points: total,
@@ -694,11 +821,11 @@ fn evaluate_point(
     seed: u64,
     cache: Option<&Arc<Mutex<PointCache>>>,
     key_scratch: &mut String,
-) -> Vec<Evaluation> {
+) -> (Vec<Evaluation>, Option<(u64, bool)>) {
     let key = cache.map(|_| persist::point_key_with(config, seed, models, key_scratch));
     if let (Some(cache), Some(key)) = (cache, key) {
         if let Some(hit) = lock_shared(cache).lookup(key) {
-            return hit;
+            return (hit, Some((key, true)));
         }
     }
     let synth = synthesize(config, seed);
@@ -707,7 +834,56 @@ fn evaluate_point(
     if let (Some(cache), Some(key)) = (cache, key) {
         lock_shared(cache).store(key, evals.clone());
     }
-    evals
+    (evals, key.map(|key| (key, false)))
+}
+
+/// Worker → receiver channel payload: the evaluated point plus the
+/// trace annotations the (single-threaded) delivery loop emits in
+/// order — what the cache probe resolved to and how long evaluation
+/// took (`0` when untraced; the clock is only read under a sink).
+struct Streamed {
+    pos: usize,
+    result: PointResult,
+    cache_probe: Option<(u64, bool)>,
+    eval_ns: u64,
+}
+
+/// Emit the canonical per-point event sequence — dispatch, cache
+/// hit/miss, frontier outcomes, delivery, journal-flush boundary —
+/// for one delivered point. Shared by the checkpoint replay loop and
+/// the live delivery loop, so a resumed campaign's trace is
+/// byte-identical to an uninterrupted one. `cache_counts` accumulates
+/// (hits, misses) for the `campaign.end` aggregates.
+#[allow(clippy::too_many_arguments)] // flat mirror of the event order
+fn emit_point_events(
+    trace: &dyn TraceSink,
+    pos: usize,
+    index: usize,
+    cache_probe: Option<(u64, bool)>,
+    outcomes: Option<Vec<InsertOutcome>>,
+    eval_ns: Option<u64>,
+    flush_every: Option<usize>,
+    cache_counts: &mut (u64, u64),
+) {
+    trace.record_with(TraceEvent::PointDispatch { pos, index }, eval_ns);
+    if let Some((key, hit)) = cache_probe {
+        if hit {
+            cache_counts.0 += 1;
+            trace.record(TraceEvent::CacheHit { pos, key });
+        } else {
+            cache_counts.1 += 1;
+            trace.record(TraceEvent::CacheMiss { pos, key });
+        }
+    }
+    if let Some(outcomes) = outcomes {
+        trace.record(TraceEvent::FrontierObserve { pos, outcomes });
+    }
+    trace.record(TraceEvent::PointDeliver { pos, index });
+    if let Some(every) = flush_every {
+        if (pos + 1) % every == 0 {
+            trace.record(TraceEvent::JournalFlush { upto: pos + 1 });
+        }
+    }
 }
 
 /// Lock a campaign-shared resource (point cache, live frontier),

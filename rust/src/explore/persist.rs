@@ -105,13 +105,13 @@ pub(crate) fn field_arr<'a>(json: &'a Json, key: &str) -> Result<&'a [Json]> {
         .ok_or_else(|| Error::ParseError(format!("missing array field '{key}'")))
 }
 
-fn field_u64_hex(json: &Json, key: &str) -> Result<u64> {
+pub(crate) fn field_u64_hex(json: &Json, key: &str) -> Result<u64> {
     let text = field_str(json, key)?;
     u64::from_str_radix(text, 16)
         .map_err(|_| Error::ParseError(format!("field '{key}' is not a hex u64: '{text}'")))
 }
 
-fn hex(value: u64) -> String {
+pub(crate) fn hex(value: u64) -> String {
     format!("{value:016x}")
 }
 
@@ -134,6 +134,29 @@ pub(crate) fn check_envelope(json: &Json, kind: &str) -> Result<()> {
         return Err(Error::ParseError(format!(
             "unsupported {kind} schema version {schema} (this build reads versions \
              {BASE_SCHEMA_VERSION} through {SCHEMA_VERSION}; regenerate the file)"
+        )));
+    }
+    Ok(())
+}
+
+/// Validate a `{"kind", "schema"}` envelope against an *exact* schema
+/// version — for artifact families that version independently of the
+/// campaign schema lineage (the serve status journal, the trace and
+/// timing documents). [`check_envelope`]'s range check would wrongly
+/// judge their schema numbers against
+/// [`BASE_SCHEMA_VERSION`]`..=`[`SCHEMA_VERSION`].
+pub(crate) fn check_envelope_exact(json: &Json, kind: &str, version: usize) -> Result<()> {
+    let found = field_str(json, "kind")?;
+    if found != kind {
+        return Err(Error::ParseError(format!(
+            "expected a '{kind}' document, found kind '{found}'"
+        )));
+    }
+    let schema = field_usize(json, "schema")?;
+    if schema != version {
+        return Err(Error::ParseError(format!(
+            "unsupported {kind} schema version {schema} (this build reads version \
+             {version}; regenerate the file)"
         )));
     }
     Ok(())
@@ -476,12 +499,14 @@ impl PointCache {
         self.entries.values().map(Vec::len).sum()
     }
 
-    /// Lookups served from the cache since construction/load.
+    /// Lifetime lookups served from the cache. Persisted across
+    /// save/load, so a loaded cache resumes its lineage's totals;
+    /// callers wanting per-run deltas snapshot before and after.
     pub fn hits(&self) -> u64 {
         self.hits
     }
 
-    /// Lookups that missed since construction/load.
+    /// Lifetime lookups that missed (persisted, like [`Self::hits`]).
     pub fn misses(&self) -> u64 {
         self.misses
     }
@@ -522,9 +547,11 @@ impl PointCache {
         self.misses = 0;
     }
 
-    /// Serialize to a schema-versioned document (counters are runtime
-    /// state and are not persisted). Keys render as fixed-width hex so
-    /// the entry order — and thus the file — is canonical.
+    /// Serialize to a schema-versioned document, lifetime hit/miss
+    /// counters included — `qadam cache` reports hit rate over the
+    /// cache's whole lineage, not just the last process. Keys render as
+    /// fixed-width hex so the entry order — and thus the file — is
+    /// canonical.
     pub fn to_json(&self) -> Json {
         let entries: Vec<Json> = self
             .entries
@@ -539,12 +566,14 @@ impl PointCache {
         let mut fields = envelope("qadam.pointcache");
         fields.push(("entries", Json::Arr(entries)));
         fields.push(("generation", num(self.generation as f64)));
+        fields.push(("hits", num(self.hits as f64)));
+        fields.push(("misses", num(self.misses as f64)));
         obj(fields)
     }
 
-    /// Deserialize from [`Self::to_json`] output. The `generation`
-    /// field is optional (pre-serve caches did not carry it) and
-    /// defaults to 0.
+    /// Deserialize from [`Self::to_json`] output. The `generation`,
+    /// `hits`, and `misses` fields are all optional (earlier caches did
+    /// not carry them) and default to 0.
     pub fn from_json(json: &Json) -> Result<Self> {
         check_envelope(json, "qadam.pointcache")?;
         let mut cache = Self::new();
@@ -556,12 +585,16 @@ impl PointCache {
                 .collect::<Result<_>>()?;
             cache.entries.insert(key, evals);
         }
-        cache.generation = json
-            .get("generation")
-            .and_then(Json::as_i64)
-            .filter(|v| *v >= 0)
-            .map(|v| v as u64)
-            .unwrap_or(0);
+        let opt_u64 = |key: &str| {
+            json.get(key)
+                .and_then(Json::as_i64)
+                .filter(|v| *v >= 0)
+                .map(|v| v as u64)
+                .unwrap_or(0)
+        };
+        cache.generation = opt_u64("generation");
+        cache.hits = opt_u64("hits");
+        cache.misses = opt_u64("misses");
         Ok(cache)
     }
 
@@ -575,7 +608,9 @@ impl PointCache {
         write_atomic(path, &self.to_json().to_string_pretty())
     }
 
-    /// Load a cache written by [`Self::save`]; counters start at zero.
+    /// Load a cache written by [`Self::save`]; counters resume the
+    /// lineage's persisted lifetime totals (zero for caches written
+    /// before the counters were persisted).
     pub fn load(path: &Path) -> Result<Self> {
         let text = fs::read_to_string(path)?;
         let json = Json::parse(&text)

@@ -56,6 +56,7 @@ pub mod dse;
 pub mod pareto;
 pub mod accuracy;
 pub mod explore;
+pub mod obs;
 pub mod spec;
 pub mod serve;
 pub mod coordinator;

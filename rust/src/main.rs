@@ -21,6 +21,8 @@ use qadam::dnn::{model_for, Dataset, ModelKind};
 use qadam::dse;
 use qadam::energy::energy_of;
 use qadam::explore::{EvalDatabase, PointCache};
+use qadam::obs::view::{render_diff, render_merge, render_show};
+use qadam::obs::{sidecar_path, TimingSidecar, Trace};
 use qadam::ppa::PpaModel;
 use qadam::quant::PeType;
 use qadam::report;
@@ -75,7 +77,8 @@ fn cli() -> Command {
                 .opt("load", "", "summarize a saved database instead of running")
                 .opt("resume", "", "checkpoint journal path (resumes if present)")
                 .opt("every", "16", "flush the checkpoint journal every N points")
-                .opt("cache", "", "content-addressed point-cache file (reused & updated)"),
+                .opt("cache", "", "content-addressed point-cache file (reused & updated)")
+                .opt("trace", "", "write the deterministic event trace (+ .timing sidecar)"),
         )
         .sub(
             Command::new("run", "execute a QSL campaign spec (see 'qadam spec init')")
@@ -83,7 +86,8 @@ fn cli() -> Command {
                 .opt("cache", "", "provide persist.cache when the spec omits it")
                 .opt("resume", "", "provide persist.checkpoint when the spec omits it")
                 .opt("every", "16", "provide persist.every when the spec omits it")
-                .opt("frontier", "", "provide persist.frontier when the spec omits it"),
+                .opt("frontier", "", "provide persist.frontier when the spec omits it")
+                .opt("trace", "", "provide persist.trace when the spec omits it"),
         )
         .sub(
             Command::new(
@@ -93,7 +97,9 @@ fn cli() -> Command {
             .opt("out", "serve-out", "batch output directory")
             .opt("max-concurrent", "1", "campaigns in flight at once")
             .opt("deny", "", "lint rules to escalate to errors (codes/names, or 'all')")
-            .opt("allow", "", "lint rules to suppress (codes/names, or 'all')"),
+            .opt("allow", "", "lint rules to suppress (codes/names, or 'all')")
+            .opt("trace", "", "record a batch-level scheduler trace to this file")
+            .flag("quiet", "suppress the live per-campaign transition stream on stderr"),
         )
         .sub(
             Command::new(
@@ -131,6 +137,24 @@ fn cli() -> Command {
                         .flag("strict", "exit nonzero when a regression exceeds the threshold"),
                 )
                 .sub(Command::new("show", "print one artifact's records as a table")),
+        )
+        .sub(
+            Command::new("trace", "inspect saved qadam.trace event traces (DESIGN.md §11)")
+                .sub(Command::new(
+                    "show",
+                    "render one trace: strategy funnel, cache stats, phase timings",
+                ))
+                .sub(
+                    Command::new(
+                        "merge",
+                        "combine traces: per-tenant cache-dedupe effectiveness",
+                    )
+                    .opt("out", "", "also save the merged trace to this file"),
+                )
+                .sub(Command::new(
+                    "diff",
+                    "compare two traces: <left.json> <right.json>; exits nonzero on divergence",
+                )),
         )
         .sub(
             Command::new("cache", "inspect or clear a point-cache file")
@@ -346,6 +370,17 @@ fn summarize_db(db: &EvalDatabase) -> Result<()> {
     }
 }
 
+/// `hits / (hits + misses)` as a percentage, `"-"` when nothing was
+/// looked up.
+fn hit_rate(hits: u64, misses: u64) -> String {
+    let lookups = hits + misses;
+    if lookups == 0 {
+        "-".into()
+    } else {
+        format!("{:.1}%", 100.0 * hits as f64 / lookups as f64)
+    }
+}
+
 /// Print an executed campaign the way `qadam dse` always has: stats
 /// line, cache/frontier lines, database summary, save confirmation.
 fn print_campaign_outcome(outcome: &CampaignOutcome) -> Result<()> {
@@ -360,10 +395,13 @@ fn print_campaign_outcome(outcome: &CampaignOutcome) -> Result<()> {
     );
     if let Some(cache) = &outcome.cache {
         println!(
-            "cache: {} design points ({} hits / {} misses this run), saved to {}",
+            "cache: {} design points ({} hits / {} misses this run, {} hit rate), \
+             generation {}, saved to {}",
             cache.entries,
             cache.hits,
             cache.misses,
+            hit_rate(cache.hits, cache.misses),
+            cache.generation,
             cache.path.display()
         );
     }
@@ -373,6 +411,14 @@ fn print_campaign_outcome(outcome: &CampaignOutcome) -> Result<()> {
             print!(" {name}: {points} points");
         }
         println!();
+    }
+    if let Some(trace) = &outcome.trace {
+        println!(
+            "trace: {} events -> {} (timing sidecar {})",
+            trace.events,
+            trace.path.display(),
+            trace.timing.display()
+        );
     }
     summarize_db(db)?;
     if let Some(path) = &outcome.saved_db {
@@ -410,9 +456,13 @@ fn merge_flag_overrides(campaign: &mut ResolvedCampaign, matches: &Matches) -> R
         }
         campaign.workers = matches.get_usize("workers");
     }
-    for (flag, key) in
-        [("save", "db"), ("cache", "cache"), ("resume", "checkpoint"), ("frontier", "frontier")]
-    {
+    for (flag, key) in [
+        ("save", "db"),
+        ("cache", "cache"),
+        ("resume", "checkpoint"),
+        ("frontier", "frontier"),
+        ("trace", "trace"),
+    ] {
         if !matches.was_set(flag) {
             continue;
         }
@@ -425,6 +475,7 @@ fn merge_flag_overrides(campaign: &mut ResolvedCampaign, matches: &Matches) -> R
             "db" => campaign.persist.db = path,
             "cache" => campaign.persist.cache = path,
             "checkpoint" => campaign.persist.checkpoint = path,
+            "trace" => campaign.persist.trace = path,
             _ => campaign.persist.frontier = path,
         }
     }
@@ -548,6 +599,10 @@ fn main() -> Result<()> {
         n => n,
     };
 
+    // `bench` and `trace` both own show/merge/diff leaves; the path's
+    // first element says which parent a leaf belongs to.
+    let parent = matches.path.first().map(String::as_str).unwrap_or("");
+
     match matches.subcommand() {
         "synth" => {
             let config = AcceleratorConfig {
@@ -622,7 +677,7 @@ fn main() -> Result<()> {
                 // the defaulted ones — `was_set` sees through defaults).
                 let campaign_flags = [
                     "dataset", "sweep", "width-mults", "depth-mults", "shard", "strategy",
-                    "frontier", "resume", "cache", "every",
+                    "frontier", "resume", "cache", "every", "trace",
                 ];
                 for conflicting in campaign_flags {
                     if matches.was_set(conflicting) {
@@ -674,6 +729,7 @@ fn main() -> Result<()> {
                     checkpoint: path_of("resume"),
                     every: matches.get_usize("every"),
                     frontier: path_of("frontier"),
+                    trace: path_of("trace"),
                 };
                 let workload =
                     dataset.paper_models().into_iter().map(WorkloadModel::Zoo).collect();
@@ -736,7 +792,7 @@ fn main() -> Result<()> {
             if matches.positional.is_empty() {
                 return Err(Error::InvalidConfig(
                     "usage: qadam serve <campaign.qsl>... [--out DIR] [--max-concurrent K] \
-                     [--deny CODES|all] [--allow CODES|all]"
+                     [--deny CODES|all] [--allow CODES|all] [--trace FILE] [--quiet]"
                         .into(),
                 ));
             }
@@ -753,6 +809,10 @@ fn main() -> Result<()> {
             }
             config.lint =
                 LintOptions::parse(matches.get_str("deny"), matches.get_str("allow"))?;
+            config.quiet = matches.flag("quiet");
+            let trace_arg = matches.get_str("trace");
+            config.trace =
+                (!trace_arg.is_empty()).then(|| Path::new(trace_arg).to_path_buf());
             println!(
                 "serving {} campaign(s) from {} spec file(s) -> {}",
                 queue.len(),
@@ -783,6 +843,13 @@ fn main() -> Result<()> {
                 outcome.cache_path.display()
             );
             println!("status journal: {}", outcome.status_path.display());
+            if let Some(path) = &outcome.trace {
+                println!(
+                    "batch trace: {} (timing sidecar {})",
+                    path.display(),
+                    sidecar_path(path).display()
+                );
+            }
             let failures = outcome.failures();
             if failures > 0 {
                 return Err(Error::Runtime(format!("{failures} campaign(s) failed")));
@@ -875,6 +942,56 @@ fn main() -> Result<()> {
             println!("qadam bench merge <artifact|dir>... [--out FILE]  — build a trajectory file");
             println!("qadam bench diff <old.json> <new.json> [--threshold PCT] [--strict]");
             println!("qadam bench show <artifact.json>  — print one artifact's records");
+        }
+        "trace" => {
+            println!("qadam trace show <trace.json>  — funnel, cache, and phase-timing tables");
+            println!("qadam trace merge <trace.json>... [--out FILE]  — cross-tenant dedupe view");
+            println!("qadam trace diff <left.json> <right.json>  — first divergence, if any");
+        }
+        "show" if parent == "trace" => {
+            let file = spec_path(&matches, "qadam trace show <trace.json>")?;
+            let trace = Trace::load(Path::new(&file))?;
+            let sidecar = sidecar_path(Path::new(&file));
+            let timing =
+                sidecar.exists().then(|| TimingSidecar::load(&sidecar)).transpose()?;
+            print!("{}", render_show(&trace, timing.as_ref()));
+        }
+        "merge" if parent == "trace" => {
+            if matches.positional.is_empty() {
+                return Err(Error::InvalidConfig(
+                    "usage: qadam trace merge <trace.json>... [--out FILE]".into(),
+                ));
+            }
+            let mut tenants = Vec::new();
+            for file in &matches.positional {
+                tenants.push((file.clone(), Trace::load(Path::new(file))?));
+            }
+            print!("{}", render_merge(&tenants));
+            let out = matches.get_str("out");
+            if !out.is_empty() {
+                let merged = Trace::merge(tenants.iter().map(|(_, trace)| trace));
+                merged.save(Path::new(out))?;
+                println!("merged {} trace(s) ({} events) into {out}", tenants.len(), merged.len());
+            }
+        }
+        "diff" if parent == "trace" => {
+            let [left_path, right_path] = matches.positional.as_slice() else {
+                return Err(Error::InvalidConfig(
+                    "usage: qadam trace diff <left.json> <right.json>".into(),
+                ));
+            };
+            let left = Trace::load(Path::new(left_path))?;
+            let right = Trace::load(Path::new(right_path))?;
+            let diff = left.diff(&right);
+            print!("{}", render_diff(left_path, right_path, &left, &right));
+            // Like `bench diff --strict`: a divergence is an exit-code
+            // gate so CI can pin trace identity.
+            if !diff.identical() {
+                return Err(Error::Runtime(format!(
+                    "traces diverge at seq {}",
+                    diff.divergence.map(|seq| seq.to_string()).unwrap_or_default()
+                )));
+            }
         }
         "merge" => {
             if matches.positional.is_empty() {
@@ -969,6 +1086,13 @@ fn main() -> Result<()> {
                     cache.len(),
                     cache.total_evaluations(),
                     bytes
+                );
+                println!(
+                    "  generation {} (completed saves), lifetime {} hits / {} misses ({} hit rate)",
+                    cache.generation(),
+                    cache.hits(),
+                    cache.misses(),
+                    hit_rate(cache.hits(), cache.misses())
                 );
             }
         }

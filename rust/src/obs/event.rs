@@ -1,0 +1,507 @@
+//! The trace event taxonomy: every typed record a [`Trace`] can hold.
+//!
+//! Events capture the *logical* schedule of a campaign or serve batch —
+//! which design point was dispatched, whether its cache probe hit, what
+//! the frontier did with its evaluations — and deliberately nothing
+//! about when. Wall-clock data lives in the `qadam.timing` sidecar
+//! (see [`crate::obs::timing`]), keyed back to events by sequence
+//! number, so the trace itself stays byte-identical across runs,
+//! worker counts, and kill/resume (DESIGN.md §11).
+//!
+//! [`Trace`]: crate::obs::Trace
+
+use crate::error::{Error, Result};
+use crate::explore::persist::{field_arr, field_str, field_u64_hex, field_usize, hex};
+use crate::pareto::InsertOutcome;
+use crate::util::json::{num, obj, s, Json};
+
+/// One typed record in a deterministic event trace.
+///
+/// Wire form is a canonical-JSON object tagged by `"ev"` (see
+/// [`TraceEvent::kind`]); the dense sequence number is supplied by the
+/// enclosing [`Trace`](crate::obs::Trace) document, not the event.
+/// 64-bit identifiers (fingerprints, seeds, cache keys) serialize as
+/// 16-digit lowercase hex strings, the same convention the checkpoint
+/// manifest and serve status journal use.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A campaign started streaming: identity and shape, recorded after
+    /// strategy selection fixed the number of points to evaluate.
+    CampaignBegin {
+        /// QSL campaign-spec fingerprint, when the campaign came from a
+        /// spec (`None` for direct [`Explorer`](crate::Explorer) use).
+        fingerprint: Option<u64>,
+        /// Joint design-space fingerprint (sweep axes + model axes).
+        space_fingerprint: u64,
+        /// Campaign RNG seed.
+        seed: u64,
+        /// This campaign's shard index.
+        shard: usize,
+        /// Total number of shards the space is partitioned into.
+        num_shards: usize,
+        /// Search-strategy descriptor, e.g. `halving(keep=8, rounds=3)`.
+        strategy: String,
+        /// Design points selected for evaluation in this shard.
+        total: usize,
+        /// Workload models evaluated per design point.
+        models: usize,
+        /// Scaled model variants in the joint space.
+        variants: usize,
+    },
+    /// One pruning round inside a multi-round search strategy.
+    StrategyRound {
+        /// Round index, starting at 0.
+        round: usize,
+        /// Candidate positions entering the round.
+        entered: usize,
+        /// Positions surviving the round's cut.
+        kept: usize,
+    },
+    /// Strategy selection finished: the funnel's final shape.
+    StrategySelect {
+        /// Strategy descriptor (matches `campaign.begin`).
+        descriptor: String,
+        /// Positions selected for full evaluation.
+        selected: usize,
+        /// Positions the shard offered the strategy.
+        positions: usize,
+    },
+    /// A design point entered evaluation (worker dispatch order is
+    /// nondeterministic, so this is recorded in delivery order — the
+    /// trace pins the *logical* schedule, not thread interleaving).
+    PointDispatch {
+        /// Dense stream position within this campaign.
+        pos: usize,
+        /// Global joint-space index of the design point.
+        index: usize,
+    },
+    /// The point cache already held this design point's evaluations.
+    CacheHit {
+        /// Dense stream position within this campaign.
+        pos: usize,
+        /// Content-addressed point key (config + seed + workloads).
+        key: u64,
+    },
+    /// The point cache missed; the point was evaluated from scratch.
+    CacheMiss {
+        /// Dense stream position within this campaign.
+        pos: usize,
+        /// Content-addressed point key (config + seed + workloads).
+        key: u64,
+    },
+    /// The streaming frontier ingested one point's evaluations.
+    FrontierObserve {
+        /// Dense stream position within this campaign.
+        pos: usize,
+        /// Per-model insertion outcome, in workload-model order.
+        outcomes: Vec<InsertOutcome>,
+    },
+    /// A design point's evaluations were delivered in order.
+    PointDeliver {
+        /// Dense stream position within this campaign.
+        pos: usize,
+        /// Global joint-space index of the design point.
+        index: usize,
+    },
+    /// The checkpoint journal's logical flush schedule reached a
+    /// boundary: every point below `upto` is durable. Recorded as a
+    /// pure function of the flush interval so it is identical across
+    /// kill/resume, where *physical* flush offsets shift.
+    JournalFlush {
+        /// Number of points covered by this flush.
+        upto: usize,
+    },
+    /// The campaign finished; end-of-run aggregates.
+    CampaignEnd {
+        /// Design points evaluated (equals `campaign.begin` total).
+        points: usize,
+        /// Model evaluations produced (`points x models`).
+        evaluations: usize,
+        /// Cache hits observed during this run.
+        cache_hits: u64,
+        /// Cache misses observed during this run.
+        cache_misses: u64,
+        /// Final per-model Pareto-front sizes, in model order (empty
+        /// when no frontier was attached).
+        fronts: Vec<usize>,
+    },
+    /// A serve batch started.
+    ServeBegin {
+        /// Campaigns admitted to the batch queue.
+        campaigns: usize,
+    },
+    /// One campaign state transition in the serve status journal —
+    /// the same record `serve.status.json` appends, so the trace and
+    /// the status journal can be cross-checked event for event.
+    ServeTransition {
+        /// Queue position of the campaign.
+        index: usize,
+        /// Campaign-spec fingerprint.
+        fingerprint: u64,
+        /// New state label (`queued`, `linted`, `skipped`, `running`,
+        /// `done`, `failed`).
+        state: String,
+        /// Human-readable transition detail (may be empty).
+        detail: String,
+    },
+    /// The shared batch cache was persisted after a campaign finished.
+    ServeCacheSave {
+        /// Queue position of the campaign whose results were folded in.
+        index: usize,
+        /// Design points in the shared cache after the save.
+        entries: usize,
+        /// Cache save-generation counter after the save.
+        generation: u64,
+    },
+    /// The serve batch finished; terminal-state tallies.
+    ServeEnd {
+        /// Campaigns that completed successfully.
+        done: usize,
+        /// Campaigns that failed.
+        failed: usize,
+        /// Campaigns skipped pre-flight (duplicate or lint-denied).
+        skipped: usize,
+    },
+}
+
+impl TraceEvent {
+    /// The wire tag (`"ev"` field) identifying this event kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::CampaignBegin { .. } => "campaign.begin",
+            TraceEvent::StrategyRound { .. } => "strategy.round",
+            TraceEvent::StrategySelect { .. } => "strategy.select",
+            TraceEvent::PointDispatch { .. } => "point.dispatch",
+            TraceEvent::CacheHit { .. } => "cache.hit",
+            TraceEvent::CacheMiss { .. } => "cache.miss",
+            TraceEvent::FrontierObserve { .. } => "frontier.observe",
+            TraceEvent::PointDeliver { .. } => "point.deliver",
+            TraceEvent::JournalFlush { .. } => "journal.flush",
+            TraceEvent::CampaignEnd { .. } => "campaign.end",
+            TraceEvent::ServeBegin { .. } => "serve.begin",
+            TraceEvent::ServeTransition { .. } => "serve.transition",
+            TraceEvent::ServeCacheSave { .. } => "serve.cache_save",
+            TraceEvent::ServeEnd { .. } => "serve.end",
+        }
+    }
+
+    /// Coarse phase label used to group timing-sidecar samples into
+    /// per-phase histograms (`qadam trace show`).
+    pub fn phase(&self) -> &'static str {
+        match self {
+            TraceEvent::CampaignBegin { .. } | TraceEvent::CampaignEnd { .. } => "campaign",
+            TraceEvent::StrategyRound { .. } | TraceEvent::StrategySelect { .. } => "strategy",
+            TraceEvent::PointDispatch { .. } | TraceEvent::PointDeliver { .. } => "point",
+            TraceEvent::CacheHit { .. } | TraceEvent::CacheMiss { .. } => "cache",
+            TraceEvent::FrontierObserve { .. } => "frontier",
+            TraceEvent::JournalFlush { .. } => "journal",
+            TraceEvent::ServeBegin { .. }
+            | TraceEvent::ServeTransition { .. }
+            | TraceEvent::ServeCacheSave { .. }
+            | TraceEvent::ServeEnd { .. } => "serve",
+        }
+    }
+
+    /// The live stderr line `qadam serve` streams for this event, if it
+    /// is one of the serve progress events (`None` otherwise). Sourced
+    /// from the same values the trace records, so the stream and the
+    /// saved trace can never disagree.
+    pub fn announce(&self) -> Option<String> {
+        match self {
+            TraceEvent::ServeTransition { fingerprint, state, detail, .. } => {
+                if detail.is_empty() {
+                    Some(format!("serve: [{}] {state}", hex(*fingerprint)))
+                } else {
+                    Some(format!("serve: [{}] {state} - {detail}", hex(*fingerprint)))
+                }
+            }
+            TraceEvent::ServeCacheSave { entries, generation, .. } => Some(format!(
+                "serve: shared cache saved ({entries} design points, generation {generation})"
+            )),
+            _ => None,
+        }
+    }
+
+    /// Canonical-JSON wire form (without the enclosing `seq` field,
+    /// which the [`Trace`](crate::obs::Trace) document derives from the
+    /// event's position).
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("ev", s(self.kind()))];
+        match self {
+            TraceEvent::CampaignBegin {
+                fingerprint,
+                space_fingerprint,
+                seed,
+                shard,
+                num_shards,
+                strategy,
+                total,
+                models,
+                variants,
+            } => {
+                let fp = match fingerprint {
+                    Some(fp) => s(&hex(*fp)),
+                    None => Json::Null,
+                };
+                fields.push(("fingerprint", fp));
+                fields.push(("space_fingerprint", s(&hex(*space_fingerprint))));
+                fields.push(("seed", s(&hex(*seed))));
+                fields.push(("shard", num(*shard as f64)));
+                fields.push(("num_shards", num(*num_shards as f64)));
+                fields.push(("strategy", s(strategy)));
+                fields.push(("total", num(*total as f64)));
+                fields.push(("models", num(*models as f64)));
+                fields.push(("variants", num(*variants as f64)));
+            }
+            TraceEvent::StrategyRound { round, entered, kept } => {
+                fields.push(("round", num(*round as f64)));
+                fields.push(("entered", num(*entered as f64)));
+                fields.push(("kept", num(*kept as f64)));
+            }
+            TraceEvent::StrategySelect { descriptor, selected, positions } => {
+                fields.push(("descriptor", s(descriptor)));
+                fields.push(("selected", num(*selected as f64)));
+                fields.push(("positions", num(*positions as f64)));
+            }
+            TraceEvent::PointDispatch { pos, index } | TraceEvent::PointDeliver { pos, index } => {
+                fields.push(("pos", num(*pos as f64)));
+                fields.push(("index", num(*index as f64)));
+            }
+            TraceEvent::CacheHit { pos, key } | TraceEvent::CacheMiss { pos, key } => {
+                fields.push(("pos", num(*pos as f64)));
+                fields.push(("key", s(&hex(*key))));
+            }
+            TraceEvent::FrontierObserve { pos, outcomes } => {
+                fields.push(("pos", num(*pos as f64)));
+                let labels = outcomes.iter().map(|o| s(o.label())).collect();
+                fields.push(("outcomes", Json::Arr(labels)));
+            }
+            TraceEvent::JournalFlush { upto } => {
+                fields.push(("upto", num(*upto as f64)));
+            }
+            TraceEvent::CampaignEnd { points, evaluations, cache_hits, cache_misses, fronts } => {
+                fields.push(("points", num(*points as f64)));
+                fields.push(("evaluations", num(*evaluations as f64)));
+                fields.push(("cache_hits", num(*cache_hits as f64)));
+                fields.push(("cache_misses", num(*cache_misses as f64)));
+                let sizes = fronts.iter().map(|n| num(*n as f64)).collect();
+                fields.push(("fronts", Json::Arr(sizes)));
+            }
+            TraceEvent::ServeBegin { campaigns } => {
+                fields.push(("campaigns", num(*campaigns as f64)));
+            }
+            TraceEvent::ServeTransition { index, fingerprint, state, detail } => {
+                fields.push(("index", num(*index as f64)));
+                fields.push(("fingerprint", s(&hex(*fingerprint))));
+                fields.push(("state", s(state)));
+                fields.push(("detail", s(detail)));
+            }
+            TraceEvent::ServeCacheSave { index, entries, generation } => {
+                fields.push(("index", num(*index as f64)));
+                fields.push(("entries", num(*entries as f64)));
+                fields.push(("generation", num(*generation as f64)));
+            }
+            TraceEvent::ServeEnd { done, failed, skipped } => {
+                fields.push(("done", num(*done as f64)));
+                fields.push(("failed", num(*failed as f64)));
+                fields.push(("skipped", num(*skipped as f64)));
+            }
+        }
+        obj(fields)
+    }
+
+    /// Parse one event from its wire form, dispatching on the `"ev"`
+    /// tag. Unknown tags are a [`ParseError`](Error::ParseError): the
+    /// trace schema is versioned as a whole, not per event.
+    pub fn from_json(json: &Json) -> Result<TraceEvent> {
+        let kind = field_str(json, "ev")?;
+        let event = match kind {
+            "campaign.begin" => {
+                let fingerprint = match json.get("fingerprint") {
+                    Some(Json::Null) | None => None,
+                    Some(_) => Some(field_u64_hex(json, "fingerprint")?),
+                };
+                TraceEvent::CampaignBegin {
+                    fingerprint,
+                    space_fingerprint: field_u64_hex(json, "space_fingerprint")?,
+                    seed: field_u64_hex(json, "seed")?,
+                    shard: field_usize(json, "shard")?,
+                    num_shards: field_usize(json, "num_shards")?,
+                    strategy: field_str(json, "strategy")?.to_string(),
+                    total: field_usize(json, "total")?,
+                    models: field_usize(json, "models")?,
+                    variants: field_usize(json, "variants")?,
+                }
+            }
+            "strategy.round" => TraceEvent::StrategyRound {
+                round: field_usize(json, "round")?,
+                entered: field_usize(json, "entered")?,
+                kept: field_usize(json, "kept")?,
+            },
+            "strategy.select" => TraceEvent::StrategySelect {
+                descriptor: field_str(json, "descriptor")?.to_string(),
+                selected: field_usize(json, "selected")?,
+                positions: field_usize(json, "positions")?,
+            },
+            "point.dispatch" => TraceEvent::PointDispatch {
+                pos: field_usize(json, "pos")?,
+                index: field_usize(json, "index")?,
+            },
+            "cache.hit" => TraceEvent::CacheHit {
+                pos: field_usize(json, "pos")?,
+                key: field_u64_hex(json, "key")?,
+            },
+            "cache.miss" => TraceEvent::CacheMiss {
+                pos: field_usize(json, "pos")?,
+                key: field_u64_hex(json, "key")?,
+            },
+            "frontier.observe" => {
+                let mut outcomes = Vec::new();
+                for entry in field_arr(json, "outcomes")? {
+                    let label = entry.as_str().ok_or_else(|| {
+                        Error::ParseError("frontier.observe outcome is not a string".into())
+                    })?;
+                    let outcome = InsertOutcome::parse(label).ok_or_else(|| {
+                        Error::ParseError(format!("unknown frontier insert outcome '{label}'"))
+                    })?;
+                    outcomes.push(outcome);
+                }
+                TraceEvent::FrontierObserve { pos: field_usize(json, "pos")?, outcomes }
+            }
+            "point.deliver" => TraceEvent::PointDeliver {
+                pos: field_usize(json, "pos")?,
+                index: field_usize(json, "index")?,
+            },
+            "journal.flush" => TraceEvent::JournalFlush { upto: field_usize(json, "upto")? },
+            "campaign.end" => {
+                let mut fronts = Vec::new();
+                for entry in field_arr(json, "fronts")? {
+                    let size = entry.as_i64().filter(|v| *v >= 0).ok_or_else(|| {
+                        Error::ParseError("campaign.end front size is not an integer".into())
+                    })?;
+                    fronts.push(size as usize);
+                }
+                TraceEvent::CampaignEnd {
+                    points: field_usize(json, "points")?,
+                    evaluations: field_usize(json, "evaluations")?,
+                    cache_hits: field_usize(json, "cache_hits")? as u64,
+                    cache_misses: field_usize(json, "cache_misses")? as u64,
+                    fronts,
+                }
+            }
+            "serve.begin" => TraceEvent::ServeBegin { campaigns: field_usize(json, "campaigns")? },
+            "serve.transition" => TraceEvent::ServeTransition {
+                index: field_usize(json, "index")?,
+                fingerprint: field_u64_hex(json, "fingerprint")?,
+                state: field_str(json, "state")?.to_string(),
+                detail: field_str(json, "detail")?.to_string(),
+            },
+            "serve.cache_save" => TraceEvent::ServeCacheSave {
+                index: field_usize(json, "index")?,
+                entries: field_usize(json, "entries")?,
+                generation: field_usize(json, "generation")? as u64,
+            },
+            "serve.end" => TraceEvent::ServeEnd {
+                done: field_usize(json, "done")?,
+                failed: field_usize(json, "failed")?,
+                skipped: field_usize(json, "skipped")?,
+            },
+            other => {
+                return Err(Error::ParseError(format!("unknown trace event kind '{other}'")));
+            }
+        };
+        Ok(event)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::CampaignBegin {
+                fingerprint: Some(0xfeed),
+                space_fingerprint: 0xbeef,
+                seed: 7,
+                shard: 0,
+                num_shards: 1,
+                strategy: "exhaustive".into(),
+                total: 4,
+                models: 2,
+                variants: 1,
+            },
+            TraceEvent::StrategyRound { round: 0, entered: 16, kept: 8 },
+            TraceEvent::StrategySelect { descriptor: "halving(keep=8)".into(), selected: 8, positions: 16 },
+            TraceEvent::PointDispatch { pos: 0, index: 3 },
+            TraceEvent::CacheHit { pos: 0, key: 0xabc },
+            TraceEvent::CacheMiss { pos: 1, key: 0xdef },
+            TraceEvent::FrontierObserve {
+                pos: 0,
+                outcomes: vec![InsertOutcome::Added, InsertOutcome::Dominated],
+            },
+            TraceEvent::PointDeliver { pos: 0, index: 3 },
+            TraceEvent::JournalFlush { upto: 4 },
+            TraceEvent::CampaignEnd {
+                points: 4,
+                evaluations: 8,
+                cache_hits: 1,
+                cache_misses: 3,
+                fronts: vec![2, 3],
+            },
+            TraceEvent::ServeBegin { campaigns: 3 },
+            TraceEvent::ServeTransition {
+                index: 1,
+                fingerprint: 0x1234,
+                state: "running".into(),
+                detail: String::new(),
+            },
+            TraceEvent::ServeCacheSave { index: 1, entries: 12, generation: 4 },
+            TraceEvent::ServeEnd { done: 2, failed: 0, skipped: 1 },
+        ]
+    }
+
+    #[test]
+    fn every_event_round_trips_through_json() {
+        for event in samples() {
+            let json = event.to_json();
+            let back = TraceEvent::from_json(&json).expect("round trip");
+            assert_eq!(event, back, "round trip for {}", event.kind());
+            assert_eq!(json.to_string_canonical(), back.to_json().to_string_canonical());
+        }
+    }
+
+    #[test]
+    fn campaign_begin_without_spec_fingerprint_round_trips() {
+        let event = TraceEvent::CampaignBegin {
+            fingerprint: None,
+            space_fingerprint: 1,
+            seed: 2,
+            shard: 0,
+            num_shards: 1,
+            strategy: "exhaustive".into(),
+            total: 1,
+            models: 1,
+            variants: 1,
+        };
+        let back = TraceEvent::from_json(&event.to_json()).expect("round trip");
+        assert_eq!(event, back);
+    }
+
+    #[test]
+    fn only_serve_progress_events_announce() {
+        for event in samples() {
+            let expect_line = matches!(
+                event,
+                TraceEvent::ServeTransition { .. } | TraceEvent::ServeCacheSave { .. }
+            );
+            assert_eq!(event.announce().is_some(), expect_line, "announce for {}", event.kind());
+        }
+    }
+
+    #[test]
+    fn unknown_event_kind_is_rejected() {
+        let json = obj(vec![("ev", s("campaign.warp"))]);
+        assert!(TraceEvent::from_json(&json).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Structured tracing & metrics for campaigns and serve batches
+//! (DESIGN.md §11).
+//!
+//! The subsystem is built around a hard determinism split:
+//!
+//! * **`qadam.trace`** ([`Trace`]) — the deterministic event stream: a
+//!   dense, monotonically sequenced list of typed [`TraceEvent`]s
+//!   covering the campaign lifecycle (begin/end), the strategy funnel
+//!   (per-round prune counts), the ordered point stream
+//!   (dispatch/deliver), cache hits and misses, frontier insertion
+//!   outcomes, the journal's logical flush schedule, and the serve
+//!   scheduler's phase transitions. No wall clock anywhere: two
+//!   identical runs produce byte-identical traces at any worker count,
+//!   with or without a kill/resume in between.
+//! * **`qadam.timing`** ([`TimingSidecar`]) — the wall-clock sidecar:
+//!   per-event nanosecond offsets and per-point evaluation durations,
+//!   keyed back to trace events by sequence number, written next to the
+//!   trace (`<trace>.timing`, see [`sidecar_path`]). Never consulted by
+//!   golden or bit-identity checks.
+//!
+//! Hot paths record through the [`TraceSink`] trait so an untraced
+//! campaign pays only an `Option` check per event site ([`NullSink`] is
+//! an empty inline call; `benches/trace_overhead.rs` pins the overhead
+//! budget). [`TraceRecorder`] is the real sink: it appends the event to
+//! an in-memory [`Trace`] and stamps a [`TimingSample`] per event, and
+//! the pair is written once at end of run.
+
+pub mod event;
+pub mod timing;
+pub mod trace;
+pub mod view;
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::explore::lock_shared;
+
+pub use event::TraceEvent;
+pub use timing::{sidecar_path, PhaseSummary, TimingSample, TimingSidecar, TIMING_KIND, TIMING_SCHEMA};
+pub use trace::{Trace, TraceDiff, TRACE_KIND, TRACE_SCHEMA};
+
+/// A consumer of trace events, shared across the campaign's threads.
+///
+/// Emission sites are all on single-threaded code paths (strategy
+/// selection, the replay loop, the ordered delivery loop, the serve
+/// scheduler thread), which is what makes the event stream
+/// deterministic — the trait still requires `Send + Sync` because the
+/// sink handle rides inside [`Explorer`](crate::Explorer), which is
+/// itself shared across workers. `fmt::Debug` is a supertrait for the
+/// same reason [`Strategy`](crate::pareto::Strategy) requires it:
+/// `Explorer` derives `Debug`.
+pub trait TraceSink: std::fmt::Debug + Send + Sync {
+    /// Record one event, optionally annotated with the evaluation time
+    /// of the design point it describes (`point.dispatch` only). The
+    /// annotation feeds the timing sidecar and never the trace.
+    fn record_with(&self, event: TraceEvent, eval_ns: Option<u64>);
+
+    /// Record one event with no timing annotation.
+    fn record(&self, event: TraceEvent) {
+        self.record_with(event, None);
+    }
+}
+
+/// The do-nothing sink: every call compiles to an empty function. Used
+/// by the overhead bench to price the instrumentation sites themselves.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn record_with(&self, _event: TraceEvent, _eval_ns: Option<u64>) {}
+}
+
+/// Recorder state behind one mutex so an event and its timing sample
+/// can never tear apart.
+#[derive(Debug, Default)]
+struct RecorderState {
+    trace: Trace,
+    samples: Vec<TimingSample>,
+}
+
+/// The collecting sink: buffers a [`Trace`] and its [`TimingSidecar`]
+/// in memory; the caller snapshots and saves both at end of run.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    origin: Instant,
+    state: Mutex<RecorderState>,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceRecorder {
+    /// A fresh recorder; wall-clock offsets are measured from now.
+    pub fn new() -> Self {
+        Self { origin: Instant::now(), state: Mutex::new(RecorderState::default()) }
+    }
+
+    /// Number of events recorded so far.
+    pub fn len(&self) -> usize {
+        lock_shared(&self.state).trace.len()
+    }
+
+    /// Whether nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Clone out the trace and timing sidecar accumulated so far. The
+    /// sidecar's host metadata is resolved here, from the environment
+    /// only (same policy as `qadam.bench`).
+    pub fn snapshot(&self) -> (Trace, TimingSidecar) {
+        let state = lock_shared(&self.state);
+        let mut sidecar = TimingSidecar::new(crate::bench::HostMeta::from_env());
+        sidecar.samples = state.samples.clone();
+        (state.trace.clone(), sidecar)
+    }
+}
+
+impl TraceSink for TraceRecorder {
+    fn record_with(&self, event: TraceEvent, eval_ns: Option<u64>) {
+        let at_ns = self.origin.elapsed().as_nanos() as u64;
+        let mut state = lock_shared(&self.state);
+        let seq = state.trace.push(event);
+        state.samples.push(TimingSample { seq, at_ns, eval_ns });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_pairs_every_event_with_a_sample() {
+        let recorder = TraceRecorder::new();
+        assert!(recorder.is_empty());
+        recorder.record(TraceEvent::ServeBegin { campaigns: 1 });
+        recorder.record_with(TraceEvent::PointDispatch { pos: 0, index: 0 }, Some(42));
+        let (trace, sidecar) = recorder.snapshot();
+        assert_eq!(trace.len(), 2);
+        assert_eq!(sidecar.samples.len(), 2);
+        assert_eq!(sidecar.samples[0].seq, 0);
+        assert_eq!(sidecar.samples[1].seq, 1);
+        assert_eq!(sidecar.samples[1].eval_ns, Some(42));
+        // Offsets are monotone: emission is single-threaded per site.
+        assert!(sidecar.samples[0].at_ns <= sidecar.samples[1].at_ns);
+    }
+
+    #[test]
+    fn null_sink_accepts_everything() {
+        NullSink.record(TraceEvent::ServeEnd { done: 0, failed: 0, skipped: 0 });
+    }
+}

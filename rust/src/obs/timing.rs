@@ -1,0 +1,228 @@
+//! The `qadam.timing` sidecar: wall-clock samples keyed to trace events
+//! by sequence number.
+//!
+//! This is the nondeterministic half of the observability split. Every
+//! recorded event gets one sample — nanoseconds since the recorder was
+//! created, plus (for `point.dispatch`) the point's evaluation time —
+//! and the document carries the same env-only host metadata policy as
+//! `qadam.bench` ([`HostMeta::from_env`]: the env var is the only
+//! ambient input). The sidecar is never read by golden or bit-identity
+//! checks; it exists solely for `qadam trace show`'s per-phase timing
+//! tables. A torn sidecar needs no recovery protocol: re-running the
+//! campaign atomically rewrites the whole file.
+
+use std::ffi::OsString;
+use std::path::{Path, PathBuf};
+
+use super::trace::Trace;
+use crate::bench::HostMeta;
+use crate::error::{Error, Result};
+use crate::explore::persist::{check_envelope_exact, envelope_at, field_arr, field_usize, write_atomic};
+use crate::util::json::{num, obj, Json};
+use crate::util::stats::Summary;
+
+/// Artifact kind tag in the `{"kind", "schema"}` envelope.
+pub const TIMING_KIND: &str = "qadam.timing";
+
+/// Timing sidecar schema version. History: v1 — per-event nanosecond
+/// offsets plus optional per-point evaluation durations.
+pub const TIMING_SCHEMA: usize = 1;
+
+/// One wall-clock sample, keyed to a trace event by sequence number.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingSample {
+    /// Sequence number of the trace event this sample annotates.
+    pub seq: u64,
+    /// Nanoseconds since the recorder's origin when the event fired.
+    pub at_ns: u64,
+    /// For `point.dispatch` events: how long the point's evaluation
+    /// took inside the worker (cache hits included — a hit is a fast
+    /// evaluation, and the gap is the point of measuring).
+    pub eval_ns: Option<u64>,
+}
+
+/// The timing sidecar document written next to a saved trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingSidecar {
+    /// Host metadata (env-only, same policy as `qadam.bench`).
+    pub host: HostMeta,
+    /// Samples in sequence order, one per recorded event.
+    pub samples: Vec<TimingSample>,
+}
+
+impl TimingSidecar {
+    /// An empty sidecar for the given host.
+    pub fn new(host: HostMeta) -> Self {
+        Self { host, samples: Vec::new() }
+    }
+
+    /// Canonical-JSON document form.
+    pub fn to_json(&self) -> Json {
+        let mut fields = envelope_at(TIMING_KIND, TIMING_SCHEMA);
+        fields.push(("host", self.host.to_json()));
+        let samples = self
+            .samples
+            .iter()
+            .map(|sample| {
+                let eval = match sample.eval_ns {
+                    Some(ns) => num(ns as f64),
+                    None => Json::Null,
+                };
+                obj(vec![
+                    ("seq", num(sample.seq as f64)),
+                    ("at_ns", num(sample.at_ns as f64)),
+                    ("eval_ns", eval),
+                ])
+            })
+            .collect();
+        fields.push(("samples", Json::Arr(samples)));
+        obj(fields)
+    }
+
+    /// Parse a sidecar document, validating the envelope.
+    pub fn from_json(json: &Json) -> Result<TimingSidecar> {
+        check_envelope_exact(json, TIMING_KIND, TIMING_SCHEMA)?;
+        let host = HostMeta::from_json(
+            json.get("host")
+                .ok_or_else(|| Error::ParseError("missing object field 'host'".into()))?,
+        )?;
+        let mut samples = Vec::new();
+        for entry in field_arr(json, "samples")? {
+            let eval_ns = match entry.get("eval_ns") {
+                Some(Json::Null) | None => None,
+                Some(value) => Some(value.as_f64().filter(|v| *v >= 0.0).ok_or_else(|| {
+                    Error::ParseError("timing sample eval_ns is not a number".into())
+                })? as u64),
+            };
+            samples.push(TimingSample {
+                seq: field_usize(entry, "seq")? as u64,
+                at_ns: field_usize(entry, "at_ns")? as u64,
+                eval_ns,
+            });
+        }
+        Ok(TimingSidecar { host, samples })
+    }
+
+    /// Save atomically as pretty-printed canonical JSON.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.to_json().to_string_pretty())
+    }
+
+    /// Load a sidecar document from disk.
+    pub fn load(path: &Path) -> Result<TimingSidecar> {
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text)?;
+        Self::from_json(&json)
+    }
+
+    /// Per-phase wall-clock breakdown against the trace the sidecar was
+    /// recorded for. Each event is charged the gap since the previous
+    /// sample (the recorder is single-threaded at emission, so gaps
+    /// partition the run); `point.dispatch` evaluation durations are
+    /// additionally summarized under the synthetic `evaluate` phase.
+    /// Samples whose seq falls outside the trace are ignored — that
+    /// only happens when show is pointed at a mismatched pair.
+    pub fn phase_summaries(&self, trace: &Trace) -> Vec<PhaseSummary> {
+        let mut per_phase: std::collections::BTreeMap<&'static str, Vec<f64>> = Default::default();
+        let mut prev_ns = 0u64;
+        for sample in &self.samples {
+            let Some(event) = trace.events().get(sample.seq as usize) else {
+                continue;
+            };
+            let gap_ms = sample.at_ns.saturating_sub(prev_ns) as f64 / 1e6;
+            prev_ns = sample.at_ns;
+            per_phase.entry(event.phase()).or_default().push(gap_ms);
+            if let Some(eval_ns) = sample.eval_ns {
+                per_phase.entry("evaluate").or_default().push(eval_ns as f64 / 1e6);
+            }
+        }
+        per_phase
+            .into_iter()
+            .map(|(phase, gaps_ms)| PhaseSummary {
+                phase: phase.to_string(),
+                events: gaps_ms.len(),
+                total_ms: gaps_ms.iter().sum(),
+                summary: Summary::of(&gaps_ms),
+            })
+            .collect()
+    }
+}
+
+/// One row of the per-phase timing table: total wall-clock charged to a
+/// phase plus the distribution of per-event gaps (milliseconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSummary {
+    /// Phase label ([`TraceEvent::phase`](super::TraceEvent::phase), or
+    /// the synthetic `evaluate` phase for per-point evaluation times).
+    pub phase: String,
+    /// Samples charged to this phase.
+    pub events: usize,
+    /// Total milliseconds charged to this phase.
+    pub total_ms: f64,
+    /// Distribution of per-event milliseconds.
+    pub summary: Summary,
+}
+
+/// The timing sidecar's on-disk location for a given trace path: the
+/// full trace filename with `.timing` appended (`trace.json` →
+/// `trace.json.timing`), the same sibling-suffix convention
+/// `write_atomic` uses for its temp files.
+pub fn sidecar_path(trace: &Path) -> PathBuf {
+    let mut path = OsString::from(trace.as_os_str());
+    path.push(".timing");
+    PathBuf::from(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceEvent;
+
+    fn sample() -> TimingSidecar {
+        let mut sidecar = TimingSidecar::new(HostMeta::with_label("test-host"));
+        sidecar.samples.push(TimingSample { seq: 0, at_ns: 10, eval_ns: None });
+        sidecar.samples.push(TimingSample { seq: 1, at_ns: 25, eval_ns: Some(12) });
+        sidecar
+    }
+
+    #[test]
+    fn sidecar_round_trips_to_a_fixed_point() {
+        let sidecar = sample();
+        let text = sidecar.to_json().to_string_pretty();
+        let back =
+            TimingSidecar::from_json(&Json::parse(&text).expect("parse")).expect("from_json");
+        assert_eq!(sidecar, back);
+        assert_eq!(text, back.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn sidecar_path_appends_to_the_full_filename() {
+        assert_eq!(
+            sidecar_path(Path::new("out/trace.json")),
+            PathBuf::from("out/trace.json.timing")
+        );
+    }
+
+    #[test]
+    fn phase_summaries_charge_gaps_and_evaluations() {
+        let mut trace = Trace::new();
+        trace.push(TraceEvent::ServeBegin { campaigns: 1 });
+        trace.push(TraceEvent::PointDispatch { pos: 0, index: 0 });
+        let rows = sample().phase_summaries(&trace);
+        let phases: Vec<&str> = rows.iter().map(|r| r.phase.as_str()).collect();
+        assert_eq!(phases, vec!["evaluate", "point", "serve"]);
+        let point = rows.iter().find(|r| r.phase == "point").expect("point row");
+        // Second sample at 25ns, first at 10ns: the point event is
+        // charged the 15ns gap.
+        assert!((point.total_ms - 15.0 / 1e6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wrong_envelope_is_rejected() {
+        let mut json = sample().to_json();
+        if let Json::Obj(map) = &mut json {
+            map.insert("schema".to_string(), num(2.0));
+        }
+        assert!(TimingSidecar::from_json(&json).is_err());
+    }
+}

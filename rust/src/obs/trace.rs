@@ -1,0 +1,257 @@
+//! The `qadam.trace` canonical-JSON document: a dense, monotonically
+//! sequenced list of [`TraceEvent`]s.
+//!
+//! A trace is the deterministic half of the observability split: it
+//! contains no wall-clock data, so two identical campaign runs — at any
+//! worker count, with or without a kill/resume in between — produce
+//! byte-identical trace files (enforced by `tests/obs.rs` and the fault
+//! suite). The document versions independently of the campaign artifact
+//! lineage: its envelope schema must equal [`TRACE_SCHEMA`] exactly.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::event::TraceEvent;
+use crate::error::{Error, Result};
+use crate::explore::persist::{check_envelope_exact, envelope_at, field_arr, field_usize, write_atomic};
+use crate::util::json::{num, Json};
+
+/// Artifact kind tag in the `{"kind", "schema"}` envelope.
+pub const TRACE_KIND: &str = "qadam.trace";
+
+/// Trace document schema version. History: v1 — initial event taxonomy
+/// (campaign lifecycle, strategy funnel, point stream, cache, frontier,
+/// journal flushes, serve phases).
+pub const TRACE_SCHEMA: usize = 1;
+
+/// A deterministic event trace: events in emission order, each carrying
+/// a dense sequence number derived from its position.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// An empty trace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one event; returns the sequence number it was assigned.
+    pub fn push(&mut self, event: TraceEvent) -> u64 {
+        self.events.push(event);
+        (self.events.len() - 1) as u64
+    }
+
+    /// The events in sequence order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Number of events recorded.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether the trace holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Event tallies by wire kind, sorted by kind name.
+    pub fn counts(&self) -> BTreeMap<&'static str, usize> {
+        let mut counts = BTreeMap::new();
+        for event in &self.events {
+            *counts.entry(event.kind()).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// Canonical-JSON document form. Each event object gains a `seq`
+    /// field equal to its position, making saved traces greppable and
+    /// letting the timing sidecar key samples back to events.
+    pub fn to_json(&self) -> Json {
+        let mut fields = envelope_at(TRACE_KIND, TRACE_SCHEMA);
+        let events = self
+            .events
+            .iter()
+            .enumerate()
+            .map(|(seq, event)| {
+                let mut json = event.to_json();
+                if let Json::Obj(map) = &mut json {
+                    map.insert("seq".to_string(), num(seq as f64));
+                }
+                json
+            })
+            .collect();
+        fields.push(("events", Json::Arr(events)));
+        crate::util::json::obj(fields)
+    }
+
+    /// Parse a trace document, validating the envelope and that the
+    /// recorded `seq` fields are dense and monotonic from zero — a gap
+    /// means the file was assembled by hand or truncated mid-edit.
+    pub fn from_json(json: &Json) -> Result<Trace> {
+        check_envelope_exact(json, TRACE_KIND, TRACE_SCHEMA)?;
+        let mut events = Vec::new();
+        for (expected, entry) in field_arr(json, "events")?.iter().enumerate() {
+            let seq = field_usize(entry, "seq")?;
+            if seq != expected {
+                return Err(Error::ParseError(format!(
+                    "trace event at position {expected} carries seq {seq}: \
+                     the sequence must be dense and start at 0"
+                )));
+            }
+            events.push(TraceEvent::from_json(entry)?);
+        }
+        Ok(Trace { events })
+    }
+
+    /// Save atomically (temp sibling + rename) as pretty-printed
+    /// canonical JSON. Traces are written once, at end of run, so a
+    /// torn write can never corrupt an existing trace — re-running the
+    /// campaign rewrites the whole file (DESIGN.md §11 recovery matrix).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.to_json().to_string_pretty())
+    }
+
+    /// Load a trace document from disk.
+    pub fn load(path: &Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text)?;
+        Self::from_json(&json)
+    }
+
+    /// Concatenate traces in order into one document; sequence numbers
+    /// are re-derived from the merged positions. Used by
+    /// `qadam trace merge` to study a serve batch's tenants side by
+    /// side (per-tenant cache-dedupe effectiveness).
+    pub fn merge<'a, I>(parts: I) -> Trace
+    where
+        I: IntoIterator<Item = &'a Trace>,
+    {
+        let mut merged = Trace::new();
+        for part in parts {
+            merged.events.extend(part.events.iter().cloned());
+        }
+        merged
+    }
+
+    /// Structural comparison against another trace: lengths and the
+    /// first sequence number where the two event streams diverge.
+    pub fn diff(&self, other: &Trace) -> TraceDiff {
+        let divergence = self
+            .events
+            .iter()
+            .zip(&other.events)
+            .position(|(a, b)| a != b)
+            .or_else(|| {
+                if self.events.len() == other.events.len() {
+                    None
+                } else {
+                    Some(self.events.len().min(other.events.len()))
+                }
+            });
+        TraceDiff { left: self.events.len(), right: other.events.len(), divergence }
+    }
+}
+
+/// Result of [`Trace::diff`]: where (if anywhere) two traces diverge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceDiff {
+    /// Event count of the left-hand trace.
+    pub left: usize,
+    /// Event count of the right-hand trace.
+    pub right: usize,
+    /// Sequence number of the first differing event (or, for a shared
+    /// prefix, the length of the shorter trace); `None` when identical.
+    pub divergence: Option<usize>,
+}
+
+impl TraceDiff {
+    /// Whether the two traces are event-for-event identical.
+    pub fn identical(&self) -> bool {
+        self.divergence.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{obj, s};
+
+    fn sample() -> Trace {
+        let mut trace = Trace::new();
+        trace.push(TraceEvent::ServeBegin { campaigns: 2 });
+        trace.push(TraceEvent::ServeTransition {
+            index: 0,
+            fingerprint: 0xabc,
+            state: "queued".into(),
+            detail: String::new(),
+        });
+        trace.push(TraceEvent::ServeEnd { done: 2, failed: 0, skipped: 0 });
+        trace
+    }
+
+    #[test]
+    fn document_round_trips_to_a_fixed_point() {
+        let trace = sample();
+        let text = trace.to_json().to_string_pretty();
+        let back = Trace::from_json(&Json::parse(&text).expect("parse")).expect("from_json");
+        assert_eq!(trace, back);
+        assert_eq!(text, back.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn sparse_or_shuffled_seq_is_rejected() {
+        let trace = sample();
+        let mut json = trace.to_json();
+        if let Json::Obj(map) = &mut json {
+            if let Some(Json::Arr(events)) = map.get_mut("events") {
+                if let Json::Obj(event) = &mut events[1] {
+                    event.insert("seq".to_string(), num(5.0));
+                }
+            }
+        }
+        assert!(Trace::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn wrong_schema_version_is_rejected() {
+        let mut json = sample().to_json();
+        if let Json::Obj(map) = &mut json {
+            map.insert("schema".to_string(), num(2.0));
+        }
+        let err = Trace::from_json(&json);
+        assert!(err.is_err(), "schema 2 must not parse as schema {TRACE_SCHEMA}");
+        let wrong_kind = obj(vec![("kind", s("qadam.evaldb")), ("schema", num(1.0))]);
+        assert!(Trace::from_json(&wrong_kind).is_err());
+    }
+
+    #[test]
+    fn merge_concatenates_and_diff_localizes() {
+        let a = sample();
+        let merged = Trace::merge([&a, &a]);
+        assert_eq!(merged.len(), 2 * a.len());
+        // Re-derived seqs stay dense: the merged doc round-trips.
+        let back = Trace::from_json(&merged.to_json()).expect("merged round trip");
+        assert_eq!(merged, back);
+
+        assert!(a.diff(&a).identical());
+        let mut b = sample();
+        b.push(TraceEvent::ServeEnd { done: 1, failed: 1, skipped: 0 });
+        let diff = a.diff(&b);
+        assert_eq!(diff.divergence, Some(a.len()));
+        let mut c = sample();
+        c.events[1] = TraceEvent::ServeBegin { campaigns: 9 };
+        assert_eq!(a.diff(&c).divergence, Some(1));
+    }
+
+    #[test]
+    fn counts_tally_by_kind() {
+        let counts = sample().counts();
+        assert_eq!(counts.get("serve.begin"), Some(&1));
+        assert_eq!(counts.get("serve.transition"), Some(&1));
+        assert_eq!(counts.get("serve.end"), Some(&1));
+    }
+}

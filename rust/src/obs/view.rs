@@ -1,0 +1,302 @@
+//! Terminal renderings for saved traces: `qadam trace show|merge|diff`.
+//!
+//! Everything here is read-only presentation over [`Trace`] /
+//! [`TimingSidecar`] documents — per-phase timing breakdowns, the
+//! strategy funnel, cache effectiveness, and per-tenant dedupe tables
+//! for merged serve batches.
+
+use std::collections::BTreeSet;
+
+use super::event::TraceEvent;
+use super::timing::TimingSidecar;
+use super::trace::Trace;
+use crate::util::table::Table;
+
+/// Percentage rendering shared by the cache and dedupe tables.
+fn percent(part: u64, whole: u64) -> String {
+    if whole == 0 {
+        "-".to_string()
+    } else {
+        format!("{:.1}%", 100.0 * part as f64 / whole as f64)
+    }
+}
+
+/// Render one trace: header, event tallies, strategy funnel, cache and
+/// frontier effectiveness, serve phase summary, and (when the timing
+/// sidecar is supplied) the per-phase wall-clock table.
+pub fn render_show(trace: &Trace, timing: Option<&TimingSidecar>) -> String {
+    let mut out = String::new();
+    match trace.events().first() {
+        Some(TraceEvent::CampaignBegin {
+            space_fingerprint,
+            seed,
+            shard,
+            num_shards,
+            strategy,
+            total,
+            models,
+            variants,
+            ..
+        }) => {
+            out.push_str(&format!(
+                "campaign space {space_fingerprint:016x} seed {seed} shard {shard}/{num_shards} \
+                 strategy {strategy}\n{total} design points x {models} models ({variants} model \
+                 variant(s)), {} events\n",
+                trace.len()
+            ));
+        }
+        Some(TraceEvent::ServeBegin { campaigns }) => {
+            out.push_str(&format!(
+                "serve batch: {campaigns} campaign(s), {} events\n",
+                trace.len()
+            ));
+        }
+        _ => out.push_str(&format!("trace: {} events\n", trace.len())),
+    }
+
+    let mut events = Table::new(&["event", "count"]);
+    for (kind, count) in trace.counts() {
+        events.row(&[kind.to_string(), count.to_string()]);
+    }
+    if !events.is_empty() {
+        out.push('\n');
+        out.push_str(&events.render());
+    }
+
+    let mut funnel = Table::new(&["round", "entered", "kept", "pruned"]);
+    for event in trace.events() {
+        if let TraceEvent::StrategyRound { round, entered, kept } = event {
+            funnel.row(&[
+                round.to_string(),
+                entered.to_string(),
+                kept.to_string(),
+                entered.saturating_sub(*kept).to_string(),
+            ]);
+        }
+    }
+    if !funnel.is_empty() {
+        out.push_str("\nstrategy funnel\n");
+        out.push_str(&funnel.render());
+    }
+    for event in trace.events() {
+        if let TraceEvent::StrategySelect { descriptor, selected, positions } = event {
+            out.push_str(&format!(
+                "selection: {descriptor} kept {selected} of {positions} positions\n"
+            ));
+        }
+    }
+
+    let (mut hits, mut misses) = (0u64, 0u64);
+    let mut outcome_tally: [u64; 4] = [0; 4];
+    for event in trace.events() {
+        match event {
+            TraceEvent::CacheHit { .. } => hits += 1,
+            TraceEvent::CacheMiss { .. } => misses += 1,
+            TraceEvent::FrontierObserve { outcomes, .. } => {
+                for outcome in outcomes {
+                    outcome_tally[*outcome as usize] += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    if hits + misses > 0 {
+        out.push_str(&format!(
+            "\ncache: {hits} hits / {misses} misses ({} hit rate)\n",
+            percent(hits, hits + misses)
+        ));
+    }
+    if outcome_tally.iter().any(|n| *n > 0) {
+        out.push_str(&format!(
+            "frontier inserts: {} added, {} dominated, {} evicted, {} invalid\n",
+            outcome_tally[0], outcome_tally[1], outcome_tally[2], outcome_tally[3]
+        ));
+    }
+    for event in trace.events() {
+        if let TraceEvent::CampaignEnd { points, evaluations, fronts, .. } = event {
+            let fronts: Vec<String> = fronts.iter().map(|n| n.to_string()).collect();
+            out.push_str(&format!(
+                "end: {points} points, {evaluations} evaluations, front sizes [{}]\n",
+                fronts.join(", ")
+            ));
+        }
+    }
+
+    let mut states = Table::new(&["campaign", "state", "detail"]);
+    let mut serve_end = None;
+    for event in trace.events() {
+        match event {
+            TraceEvent::ServeTransition { fingerprint, state, detail, .. } => {
+                states.row(&[format!("{fingerprint:016x}"), state.clone(), detail.clone()]);
+            }
+            TraceEvent::ServeEnd { done, failed, skipped } => {
+                serve_end = Some((done, failed, skipped));
+            }
+            _ => {}
+        }
+    }
+    if !states.is_empty() {
+        out.push_str("\nserve transitions\n");
+        out.push_str(&states.render());
+    }
+    if let Some((done, failed, skipped)) = serve_end {
+        out.push_str(&format!("serve: {done} done, {failed} failed, {skipped} skipped\n"));
+    }
+
+    match timing {
+        Some(sidecar) => {
+            let mut table = Table::new(&["phase", "events", "total_ms", "p50_ms", "p95_ms", "max_ms"]);
+            for row in sidecar.phase_summaries(trace) {
+                table.row(&[
+                    row.phase.clone(),
+                    row.events.to_string(),
+                    format!("{:.3}", row.total_ms),
+                    format!("{:.4}", row.summary.p50),
+                    format!("{:.4}", row.summary.p95),
+                    format!("{:.4}", row.summary.max),
+                ]);
+            }
+            if !table.is_empty() {
+                out.push_str(&format!("\ntiming ({} on {}/{})\n", sidecar.host.label, sidecar.host.os, sidecar.host.arch));
+                out.push_str(&table.render());
+            }
+        }
+        None => out.push_str("\n(no timing sidecar: deterministic trace only)\n"),
+    }
+    out
+}
+
+/// Render the per-tenant dedupe table for a set of traces merged in
+/// order — for each tenant, how many of its cache keys were already
+/// touched by an earlier tenant (the shared-cache effectiveness a serve
+/// batch gets from ordering that tenant later).
+pub fn render_merge(tenants: &[(String, Trace)]) -> String {
+    let mut out = String::new();
+    let mut table = Table::new(&["tenant", "points", "keys", "hits", "misses", "shared_earlier", "dedupe"]);
+    let mut earlier: BTreeSet<u64> = BTreeSet::new();
+    for (label, trace) in tenants {
+        let mut keys: BTreeSet<u64> = BTreeSet::new();
+        let (mut points, mut hits, mut misses) = (0u64, 0u64, 0u64);
+        for event in trace.events() {
+            match event {
+                TraceEvent::PointDeliver { .. } => points += 1,
+                TraceEvent::CacheHit { key, .. } => {
+                    hits += 1;
+                    keys.insert(*key);
+                }
+                TraceEvent::CacheMiss { key, .. } => {
+                    misses += 1;
+                    keys.insert(*key);
+                }
+                _ => {}
+            }
+        }
+        let shared = keys.iter().filter(|key| earlier.contains(key)).count() as u64;
+        table.row(&[
+            label.clone(),
+            points.to_string(),
+            keys.len().to_string(),
+            hits.to_string(),
+            misses.to_string(),
+            shared.to_string(),
+            percent(shared, keys.len() as u64),
+        ]);
+        earlier.extend(keys);
+    }
+    out.push_str(&table.render());
+    out
+}
+
+/// Render the comparison of two traces: identical, or the lengths plus
+/// the first divergent event from each side.
+pub fn render_diff(left_name: &str, right_name: &str, left: &Trace, right: &Trace) -> String {
+    let diff = left.diff(right);
+    let Some(seq) = diff.divergence else {
+        return format!("traces identical ({} events)\n", diff.left);
+    };
+    let mut out = format!(
+        "traces diverge at seq {seq} ({left_name}: {} events, {right_name}: {} events)\n",
+        diff.left, diff.right
+    );
+    for (name, trace) in [(left_name, left), (right_name, right)] {
+        match trace.events().get(seq) {
+            Some(event) => out.push_str(&format!(
+                "  {name}: {}\n",
+                event.to_json().to_string_canonical()
+            )),
+            None => out.push_str(&format!("  {name}: (no event at seq {seq})\n")),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn campaign_trace() -> Trace {
+        let mut trace = Trace::new();
+        trace.push(TraceEvent::CampaignBegin {
+            fingerprint: None,
+            space_fingerprint: 0xbeef,
+            seed: 7,
+            shard: 0,
+            num_shards: 1,
+            strategy: "halving(keep=2, rounds=1)".into(),
+            total: 2,
+            models: 1,
+            variants: 1,
+        });
+        trace.push(TraceEvent::StrategyRound { round: 0, entered: 4, kept: 2 });
+        trace.push(TraceEvent::StrategySelect {
+            descriptor: "halving(keep=2, rounds=1)".into(),
+            selected: 2,
+            positions: 4,
+        });
+        for pos in 0..2usize {
+            trace.push(TraceEvent::PointDispatch { pos, index: pos });
+            trace.push(if pos == 0 {
+                TraceEvent::CacheMiss { pos, key: 0x10 + pos as u64 }
+            } else {
+                TraceEvent::CacheHit { pos, key: 0x10 + pos as u64 }
+            });
+            trace.push(TraceEvent::PointDeliver { pos, index: pos });
+        }
+        trace.push(TraceEvent::CampaignEnd {
+            points: 2,
+            evaluations: 2,
+            cache_hits: 1,
+            cache_misses: 1,
+            fronts: vec![2],
+        });
+        trace
+    }
+
+    #[test]
+    fn show_renders_funnel_cache_and_header() {
+        let text = render_show(&campaign_trace(), None);
+        assert!(text.contains("strategy funnel"), "funnel missing:\n{text}");
+        assert!(text.contains("1 hits / 1 misses (50.0% hit rate)"), "cache line missing:\n{text}");
+        assert!(text.contains("campaign space 000000000000beef"), "header missing:\n{text}");
+        assert!(text.contains("no timing sidecar"), "sidecar note missing:\n{text}");
+    }
+
+    #[test]
+    fn merge_table_reports_shared_keys() {
+        let a = campaign_trace();
+        let b = campaign_trace();
+        let text = render_merge(&[("a".into(), a), ("b".into(), b)]);
+        // Tenant b touches exactly the keys tenant a did: 100% dedupe.
+        assert!(text.contains("100.0%"), "dedupe column missing:\n{text}");
+    }
+
+    #[test]
+    fn diff_renders_identity_and_divergence() {
+        let a = campaign_trace();
+        assert!(render_diff("a", "b", &a, &a).contains("traces identical"));
+        let mut b = campaign_trace();
+        b.push(TraceEvent::ServeEnd { done: 0, failed: 0, skipped: 0 });
+        let text = render_diff("a", "b", &a, &b);
+        assert!(text.contains("diverge at seq"), "divergence missing:\n{text}");
+    }
+}

@@ -102,6 +102,29 @@ pub enum InsertOutcome {
     Invalid,
 }
 
+impl InsertOutcome {
+    /// Stable lowercase label, used by the `qadam.trace` wire format.
+    pub fn label(self) -> &'static str {
+        match self {
+            InsertOutcome::Added => "added",
+            InsertOutcome::Dominated => "dominated",
+            InsertOutcome::Evicted => "evicted",
+            InsertOutcome::Invalid => "invalid",
+        }
+    }
+
+    /// Inverse of [`Self::label`]; `None` for unknown text.
+    pub fn parse(text: &str) -> Option<Self> {
+        match text {
+            "added" => Some(InsertOutcome::Added),
+            "dominated" => Some(InsertOutcome::Dominated),
+            "evicted" => Some(InsertOutcome::Evicted),
+            "invalid" => Some(InsertOutcome::Invalid),
+            _ => None,
+        }
+    }
+}
+
 /// Runtime-dimension online Pareto front.
 ///
 /// `insert` costs O(front) comparisons: a candidate dominated by any

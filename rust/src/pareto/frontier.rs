@@ -13,7 +13,7 @@
 
 use std::path::Path;
 
-use super::front::{Orientation, ParetoFront};
+use super::front::{InsertOutcome, Orientation, ParetoFront};
 use crate::dse::Evaluation;
 use crate::error::{Error, Result};
 use crate::explore::persist::{
@@ -235,10 +235,12 @@ impl CampaignFrontier {
     }
 
     /// Low-level insertion: feed one design point's evaluations (in the
-    /// campaign's model order) unconditionally. Does not advance the
-    /// [`Self::observed`] cursor — campaign code goes through
-    /// [`Self::observe_at`], which is what makes resumes idempotent.
-    pub fn observe(&mut self, index: usize, evals: &[Evaluation]) -> Result<()> {
+    /// campaign's model order) unconditionally, returning each model
+    /// front's [`InsertOutcome`] (in the same order) for tracing. Does
+    /// not advance the [`Self::observed`] cursor — campaign code goes
+    /// through [`Self::observe_at`], which is what makes resumes
+    /// idempotent.
+    pub fn observe(&mut self, index: usize, evals: &[Evaluation]) -> Result<Vec<InsertOutcome>> {
         if evals.len() != self.models.len() {
             return Err(Error::InvalidConfig(format!(
                 "frontier holds {} model fronts but the point carries {} evaluations",
@@ -246,13 +248,14 @@ impl CampaignFrontier {
                 evals.len()
             )));
         }
+        let mut outcomes = Vec::with_capacity(self.models.len());
         for (model, eval) in self.models.iter_mut().zip(evals) {
-            model.front.insert(
+            outcomes.push(model.front.insert(
                 [eval.perf_per_area, eval.energy_uj],
                 FrontSample { index, eval: eval.clone() },
-            );
+            ));
         }
-        Ok(())
+        Ok(outcomes)
     }
 
     /// Campaign-ordered observation of delivery position `pos` (the
@@ -262,10 +265,17 @@ impl CampaignFrontier {
     /// points whose journal lines were lost to a crash — re-offers
     /// bit-identical evaluations the frontier has already archived.
     /// A position *above* the cursor means the frontier is out of sync
-    /// with the campaign and is rejected.
-    pub fn observe_at(&mut self, pos: usize, index: usize, evals: &[Evaluation]) -> Result<()> {
+    /// with the campaign and is rejected. Skipped (already-archived)
+    /// positions return an empty outcome vector; freshly observed
+    /// positions return one [`InsertOutcome`] per model front.
+    pub fn observe_at(
+        &mut self,
+        pos: usize,
+        index: usize,
+        evals: &[Evaluation],
+    ) -> Result<Vec<InsertOutcome>> {
         if pos < self.observed {
-            return Ok(());
+            return Ok(Vec::new());
         }
         if pos > self.observed {
             return Err(Error::InvalidConfig(format!(

@@ -33,6 +33,6 @@ pub mod strategy;
 pub use front::{dominates, FrontCore, FrontEntry, InsertOutcome, Orientation, ParetoFront};
 pub use frontier::{CampaignFrontier, FrontierBinding, FrontSample, ModelFrontier, OBJECTIVES};
 pub use strategy::{
-    proxy_perf_per_area, Exhaustive, RandomSample, Selection, Strategy, StrategyContext,
-    SuccessiveHalving,
+    proxy_perf_per_area, Exhaustive, RandomSample, RoundReport, Selection, Strategy,
+    StrategyContext, SuccessiveHalving,
 };

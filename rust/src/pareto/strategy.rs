@@ -116,6 +116,19 @@ impl Selection {
     }
 }
 
+/// One pruning round of a multi-round strategy, as reported through
+/// [`Strategy::select_observed`] — the rows of the `qadam trace show`
+/// strategy funnel table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundReport {
+    /// Round index, starting at 0.
+    pub round: usize,
+    /// Candidate positions entering the round.
+    pub entered: usize,
+    /// Positions surviving the round's cut.
+    pub kept: usize,
+}
+
 /// A design-space search strategy. Implementations must be deterministic
 /// in their own fields: the same strategy over the same space always
 /// selects the same points (the checkpoint journal pins
@@ -128,6 +141,20 @@ pub trait Strategy: fmt::Debug + Send + Sync {
 
     /// Choose the shard positions to evaluate.
     fn select(&self, ctx: &StrategyContext<'_>) -> Result<Selection>;
+
+    /// [`Self::select`], additionally reporting each pruning round to
+    /// `observer` for tracing. The default forwards to `select` and
+    /// reports nothing (single-round strategies have no funnel);
+    /// multi-round strategies override it, and their `select` must stay
+    /// behaviorally identical — the observer only watches.
+    fn select_observed(
+        &self,
+        ctx: &StrategyContext<'_>,
+        observer: &mut dyn FnMut(RoundReport),
+    ) -> Result<Selection> {
+        let _ = observer;
+        self.select(ctx)
+    }
 }
 
 /// Evaluate every design point — the default campaign behavior, made
@@ -219,6 +246,14 @@ impl Strategy for SuccessiveHalving {
     }
 
     fn select(&self, ctx: &StrategyContext<'_>) -> Result<Selection> {
+        self.select_observed(ctx, &mut |_| {})
+    }
+
+    fn select_observed(
+        &self,
+        ctx: &StrategyContext<'_>,
+        observer: &mut dyn FnMut(RoundReport),
+    ) -> Result<Selection> {
         if self.keep == 0 || self.rounds == 0 {
             return Err(Error::InvalidConfig(
                 "halving strategy needs keep >= 1 and rounds >= 1".into(),
@@ -276,7 +311,9 @@ impl Strategy for SuccessiveHalving {
             } else {
                 (survivors.len() / 2).max(self.keep)
             };
+            let entered = survivors.len();
             survivors = scored.into_iter().take(target).map(|(_, pos)| pos).collect();
+            observer(RoundReport { round, entered, kept: survivors.len() });
         }
         survivors.truncate(self.keep);
         survivors.sort_unstable();

@@ -29,7 +29,14 @@
 //! Campaign artifacts (journal, db, frontier) are byte-deterministic in
 //! the campaign's identity alone — queue order, kill/resume timing, and
 //! cache warmth change none of their bytes. `cache.json` is excluded
-//! from that contract: its save generation counts completed saves.
+//! from that contract: its save generation counts completed saves. A
+//! per-campaign `trace.json` (when the spec sets `persist.trace`) is
+//! *warmth-honest* like the cache — its hit/miss events reflect the
+//! shared cache's actual state, so it too sits outside the kill/resume
+//! byte contract within a batch (solo campaigns carry that guarantee).
+//! The batch-level trace (`ServeConfig::trace`) records scheduler
+//! events in arrival order: deterministic at `--max-concurrent 1`, a
+//! faithful log otherwise.
 //!
 //! [`Explorer`]: crate::explore::Explorer
 
@@ -42,6 +49,7 @@ use super::queue::{BatchQueue, QueueEntry};
 use super::status::{BatchStatus, CampaignState};
 use crate::error::Result;
 use crate::explore::{lock_shared, PointCache};
+use crate::obs::{self, TraceEvent, TraceRecorder, TraceSink};
 use crate::spec::lint::{lint_campaign, Level, LintOptions};
 use crate::spec::PersistPlan;
 
@@ -59,17 +67,26 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Pre-flight lint configuration (deny findings skip the campaign).
     pub lint: LintOptions,
+    /// Suppress the live per-campaign transition stream on stderr.
+    /// Library embedders default to suppressed; `qadam serve` flips
+    /// this to `false` unless `--quiet` is passed.
+    pub quiet: bool,
+    /// Record a batch-level `qadam.trace` (plus `.timing` sidecar) of
+    /// every scheduler event to this path.
+    pub trace: Option<PathBuf>,
 }
 
 impl ServeConfig {
     /// Defaults: sequential, campaign-declared workers, default lint
-    /// levels.
+    /// levels, transition stream suppressed, no batch trace.
     pub fn new(out_dir: impl Into<PathBuf>) -> Self {
         Self {
             out_dir: out_dir.into(),
             max_concurrent: 1,
             workers: 0,
             lint: LintOptions::default(),
+            quiet: true,
+            trace: None,
         }
     }
 }
@@ -109,6 +126,9 @@ pub struct BatchOutcome {
     /// Whether a torn/corrupt cache file was found on startup and the
     /// batch started cold instead (correct, just not deduped).
     pub cache_recovered: bool,
+    /// Where the batch-level trace was saved, when
+    /// [`ServeConfig::trace`] was set (sidecar at `<path>.timing`).
+    pub trace: Option<PathBuf>,
 }
 
 impl BatchOutcome {
@@ -122,11 +142,46 @@ struct RunStats {
     points: usize,
     hits: u64,
     misses: u64,
+    /// Shared-cache size when this campaign saved it.
+    entries: usize,
+    /// Shared-cache save generation after this campaign's save.
+    generation: u64,
 }
 
 enum Event {
     Started(usize),
     Finished(usize, std::result::Result<RunStats, String>),
+}
+
+/// The scheduler's event fan-out: every state transition goes through
+/// here once, feeding both the live stderr stream (satellite of
+/// DESIGN.md §11: the stream *is* the trace, rendered) and the optional
+/// batch-level recorder.
+struct BatchTrace {
+    recorder: Option<TraceRecorder>,
+    quiet: bool,
+}
+
+impl BatchTrace {
+    fn emit(&self, event: TraceEvent) {
+        if !self.quiet {
+            if let Some(line) = event.announce() {
+                eprintln!("{line}");
+            }
+        }
+        if let Some(recorder) = &self.recorder {
+            recorder.record(event);
+        }
+    }
+
+    fn transition(&self, index: usize, fingerprint: u64, state: CampaignState, detail: &str) {
+        self.emit(TraceEvent::ServeTransition {
+            index,
+            fingerprint,
+            state: state.label().to_string(),
+            detail: detail.to_string(),
+        });
+    }
 }
 
 /// Run a batch. See the module docs for the full contract. Errors out
@@ -136,6 +191,12 @@ pub fn serve(queue: &BatchQueue, config: &ServeConfig) -> Result<BatchOutcome> {
     std::fs::create_dir_all(&config.out_dir)?;
     let status_path = config.out_dir.join("serve.status.json");
     let cache_path = config.out_dir.join("cache.json");
+
+    let batch_trace = BatchTrace {
+        recorder: config.trace.as_ref().map(|_| TraceRecorder::new()),
+        quiet: config.quiet,
+    };
+    batch_trace.emit(TraceEvent::ServeBegin { campaigns: queue.entries.len() });
 
     let mut status = BatchStatus::new();
     for entry in &queue.entries {
@@ -160,11 +221,9 @@ pub fn serve(queue: &BatchQueue, config: &ServeConfig) -> Result<BatchOutcome> {
     let mut seen: BTreeSet<u64> = BTreeSet::new();
     for (index, entry) in queue.entries.iter().enumerate() {
         if !seen.insert(entry.fingerprint) {
-            status.transition(
-                index,
-                CampaignState::Skipped,
-                "duplicate campaign fingerprint in this batch",
-            );
+            let detail = "duplicate campaign fingerprint in this batch";
+            status.transition(index, CampaignState::Skipped, detail);
+            batch_trace.transition(index, entry.fingerprint, CampaignState::Skipped, detail);
             status.save(&status_path)?;
             continue;
         }
@@ -172,18 +231,14 @@ pub fn serve(queue: &BatchQueue, config: &ServeConfig) -> Result<BatchOutcome> {
         let denials: Vec<&str> =
             findings.iter().filter(|f| f.level == Level::Deny).map(|f| f.code).collect();
         if denials.is_empty() {
-            status.transition(
-                index,
-                CampaignState::Linted,
-                format!("{} finding(s)", findings.len()),
-            );
+            let detail = format!("{} finding(s)", findings.len());
+            status.transition(index, CampaignState::Linted, &detail);
+            batch_trace.transition(index, entry.fingerprint, CampaignState::Linted, &detail);
             runnable.push(index);
         } else {
-            status.transition(
-                index,
-                CampaignState::Skipped,
-                format!("lint deny: {}", denials.join(", ")),
-            );
+            let detail = format!("lint deny: {}", denials.join(", "));
+            status.transition(index, CampaignState::Skipped, &detail);
+            batch_trace.transition(index, entry.fingerprint, CampaignState::Skipped, &detail);
         }
         status.save(&status_path)?;
     }
@@ -223,21 +278,29 @@ pub fn serve(queue: &BatchQueue, config: &ServeConfig) -> Result<BatchOutcome> {
             match event {
                 Event::Started(index) => {
                     status.transition(index, CampaignState::Running, "");
+                    let fp = queue.entries[index].fingerprint;
+                    batch_trace.transition(index, fp, CampaignState::Running, "");
                     status.save(&status_path)?;
                 }
                 Event::Finished(index, Ok(stats)) => {
                     status.set_counters(index, stats.hits, stats.misses);
-                    status.transition(
-                        index,
-                        CampaignState::Done,
-                        format!(
-                            "{} design points; {} cache hits / {} misses",
-                            stats.points, stats.hits, stats.misses
-                        ),
+                    let detail = format!(
+                        "{} design points; {} cache hits / {} misses",
+                        stats.points, stats.hits, stats.misses
                     );
+                    status.transition(index, CampaignState::Done, &detail);
+                    let fp = queue.entries[index].fingerprint;
+                    batch_trace.transition(index, fp, CampaignState::Done, &detail);
+                    batch_trace.emit(TraceEvent::ServeCacheSave {
+                        index,
+                        entries: stats.entries,
+                        generation: stats.generation,
+                    });
                     status.save(&status_path)?;
                 }
                 Event::Finished(index, Err(message)) => {
+                    let fp = queue.entries[index].fingerprint;
+                    batch_trace.transition(index, fp, CampaignState::Failed, &message);
                     status.transition(index, CampaignState::Failed, message);
                     status.save(&status_path)?;
                 }
@@ -247,6 +310,23 @@ pub fn serve(queue: &BatchQueue, config: &ServeConfig) -> Result<BatchOutcome> {
     })?;
 
     let cache_entries = lock_shared(&shared).len();
+    let tally = |state: CampaignState| {
+        status.campaigns().iter().filter(|c| c.state == state).count()
+    };
+    batch_trace.emit(TraceEvent::ServeEnd {
+        done: tally(CampaignState::Done),
+        failed: tally(CampaignState::Failed),
+        skipped: tally(CampaignState::Skipped),
+    });
+    let trace_path = match (&batch_trace.recorder, &config.trace) {
+        (Some(recorder), Some(path)) => {
+            let (trace, timing) = recorder.snapshot();
+            trace.save(path)?;
+            timing.save(&obs::sidecar_path(path))?;
+            Some(path.clone())
+        }
+        _ => None,
+    };
     let reports = status
         .campaigns()
         .iter()
@@ -262,7 +342,14 @@ pub fn serve(queue: &BatchQueue, config: &ServeConfig) -> Result<BatchOutcome> {
                 .then(|| campaign_dir(&config.out_dir, c.fingerprint)),
         })
         .collect();
-    Ok(BatchOutcome { reports, status_path, cache_path, cache_entries, cache_recovered })
+    Ok(BatchOutcome {
+        reports,
+        status_path,
+        cache_path,
+        cache_entries,
+        cache_recovered,
+        trace: trace_path,
+    })
 }
 
 /// The artifact directory of a campaign within a batch output dir.
@@ -282,12 +369,16 @@ fn run_campaign(
     // declares are superseded by the per-fingerprint directory (the
     // spec's `every` flush interval is honored). `plan.cache` stays
     // None — the shared cache is attached directly and saved below.
+    // `trace` is opt-in per spec: a per-campaign trace is warmth-honest
+    // (its cache events see the shared cache), so it is only written
+    // when the spec asked for one.
     let plan = PersistPlan {
         db: Some(dir.join("db.json")),
         cache: None,
         checkpoint: Some(dir.join("run.journal")),
         every: entry.campaign.persist.every,
         frontier: Some(dir.join("frontier.json")),
+        trace: entry.campaign.persist.trace.as_ref().map(|_| dir.join("trace.json")),
     };
     let mut campaign = entry.campaign.clone();
     if config.workers > 0 {
@@ -298,10 +389,15 @@ fn run_campaign(
         (cache.hits(), cache.misses())
     };
     let outcome = campaign.execute_with(&plan, Some(shared.clone()))?;
-    let (hits, misses) = {
+    let (hits, misses, entries, generation) = {
         let mut cache = lock_shared(shared);
         cache.save(cache_path)?;
-        (cache.hits() - hits_before, cache.misses() - misses_before)
+        (
+            cache.hits() - hits_before,
+            cache.misses() - misses_before,
+            cache.len(),
+            cache.generation(),
+        )
     };
-    Ok(RunStats { points: outcome.db.stats.design_points, hits, misses })
+    Ok(RunStats { points: outcome.db.stats.design_points, hits, misses, entries, generation })
 }

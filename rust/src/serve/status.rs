@@ -20,7 +20,7 @@ use std::path::Path;
 
 use crate::error::{Error, Result};
 use crate::explore::persist::{
-    check_envelope, envelope_at, field_arr, field_str, field_usize, write_atomic,
+    check_envelope_exact, envelope_at, field_arr, field_str, field_usize, write_atomic,
 };
 use crate::util::json::{num, obj, s, Json};
 
@@ -231,9 +231,12 @@ impl BatchStatus {
         obj(fields)
     }
 
-    /// Deserialize from [`Self::to_json`] output.
+    /// Deserialize from [`Self::to_json`] output. The status journal
+    /// versions independently of the campaign artifact lineage, so its
+    /// envelope is checked against [`STATUS_SCHEMA`] exactly — the
+    /// ranged `check_envelope` would reject every schema-1 document.
     pub fn from_json(json: &Json) -> Result<Self> {
-        check_envelope(json, "qadam.serve.status")?;
+        check_envelope_exact(json, "qadam.serve.status", STATUS_SCHEMA)?;
         let mut status = Self::new();
         for entry in field_arr(json, "campaigns")? {
             status.campaigns.push(CampaignStatus {

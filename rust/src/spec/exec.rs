@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex};
 use super::resolve::ResolvedCampaign;
 use crate::error::Result;
 use crate::explore::{lock_shared, EvalDatabase, Explorer, PointCache};
+use crate::obs::{self, TraceRecorder};
 use crate::pareto::CampaignFrontier;
 
 /// What a cache-backed campaign did to its cache.
@@ -25,9 +26,29 @@ pub struct CacheOutcome {
     /// Cached design points after the campaign.
     pub entries: usize,
     /// Lookups served from the cache during this run.
+    ///
+    /// Per-run delta: the cache's lifetime counters persist across
+    /// save/load, so this subtracts the count the cache arrived with.
     pub hits: u64,
-    /// Lookups that missed during this run.
+    /// Lookups that missed during this run (per-run delta, like
+    /// [`hits`](Self::hits)).
     pub misses: u64,
+    /// The cache lineage's save generation after this campaign saved it
+    /// (1 for a cache born this run).
+    pub generation: u64,
+}
+
+/// What a traced campaign recorded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceOutcome {
+    /// Where the deterministic event trace (`qadam.trace`) was saved.
+    pub path: PathBuf,
+    /// Events in the trace.
+    pub events: usize,
+    /// Where the wall-clock timing sidecar (`qadam.timing`) was saved —
+    /// always `<path>.timing`, and never consulted by determinism
+    /// checks.
+    pub timing: PathBuf,
 }
 
 /// What a frontier-tracking campaign archived.
@@ -50,6 +71,8 @@ pub struct CampaignOutcome {
     pub cache: Option<CacheOutcome>,
     /// Frontier statistics, when `persist.frontier` was set.
     pub frontier: Option<FrontierOutcome>,
+    /// Trace artifacts, when `persist.trace` was set.
+    pub trace: Option<TraceOutcome>,
 }
 
 impl ResolvedCampaign {
@@ -134,6 +157,19 @@ impl ResolvedCampaign {
         if let Some(cache) = &cache {
             explorer = explorer.cache(cache.clone());
         }
+        // Lifetime counters persist across save/load, so snapshot the
+        // warm baseline now and report per-run deltas below.
+        let warm = cache
+            .as_ref()
+            .map(|cache| {
+                let shared = lock_shared(cache);
+                (shared.hits(), shared.misses())
+            })
+            .unwrap_or((0, 0));
+        let recorder = plan.trace.as_ref().map(|_| Arc::new(TraceRecorder::new()));
+        if let Some(recorder) = &recorder {
+            explorer = explorer.trace_sink(recorder.clone());
+        }
         let db = explorer.run()?;
         let cache_outcome = match (&cache, &plan.cache) {
             (Some(cache), Some(path)) if !shared => {
@@ -142,9 +178,20 @@ impl ResolvedCampaign {
                 Some(CacheOutcome {
                     path: path.clone(),
                     entries: cache.len(),
-                    hits: cache.hits(),
-                    misses: cache.misses(),
+                    hits: cache.hits() - warm.0,
+                    misses: cache.misses() - warm.1,
+                    generation: cache.generation(),
                 })
+            }
+            _ => None,
+        };
+        let trace_outcome = match (&recorder, &plan.trace) {
+            (Some(recorder), Some(path)) => {
+                let (trace, timing) = recorder.snapshot();
+                trace.save(path)?;
+                let sidecar = obs::sidecar_path(path);
+                timing.save(&sidecar)?;
+                Some(TraceOutcome { path: path.clone(), events: trace.len(), timing: sidecar })
             }
             _ => None,
         };
@@ -170,6 +217,12 @@ impl ResolvedCampaign {
             }
             None => None,
         };
-        Ok(CampaignOutcome { db, saved_db, cache: cache_outcome, frontier: frontier_outcome })
+        Ok(CampaignOutcome {
+            db,
+            saved_db,
+            cache: cache_outcome,
+            frontier: frontier_outcome,
+            trace: trace_outcome,
+        })
     }
 }

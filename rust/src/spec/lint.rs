@@ -1005,15 +1005,25 @@ fn resume_mismatch(ctx: &LintContext<'_>) -> Vec<Draft> {
         }
     }
 
-    for (key, path, kind, loaded) in [
-        ("db", &persist.db, "qadam.evaldb", false),
-        ("cache", &persist.cache, "qadam.pointcache", true),
+    // The trace document versions independently of the campaign schema
+    // lineage (DESIGN.md §11), so its envelope is checked exactly — the
+    // ranged check would reject every healthy schema-1 trace.
+    let exact_schema = Some(crate::obs::TRACE_SCHEMA);
+    for (key, path, kind, exact, loaded) in [
+        ("db", &persist.db, "qadam.evaldb", None, false),
+        ("cache", &persist.cache, "qadam.pointcache", None, true),
+        ("trace", &persist.trace, crate::obs::TRACE_KIND, exact_schema, false),
     ] {
         let Some(path) = path else { continue };
         let Ok(text) = std::fs::read_to_string(path) else { continue };
         let is_kind = Json::parse(&text)
             .ok()
-            .map(|json| crate::explore::persist::check_envelope(&json, kind).is_ok())
+            .map(|json| match exact {
+                Some(version) => {
+                    crate::explore::persist::check_envelope_exact(&json, kind, version).is_ok()
+                }
+                None => crate::explore::persist::check_envelope(&json, kind).is_ok(),
+            })
             .unwrap_or(false);
         if is_kind {
             continue;

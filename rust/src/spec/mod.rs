@@ -77,7 +77,7 @@ pub mod parser;
 pub mod resolve;
 
 pub use diag::{Diagnostic, Diagnostics, Severity, Span};
-pub use exec::{CacheOutcome, CampaignOutcome, FrontierOutcome};
+pub use exec::{CacheOutcome, CampaignOutcome, FrontierOutcome, TraceOutcome};
 pub use expand::{expand_path, expand_source, ExpandedCampaign, Expansion};
 pub use lint::{Finding, Level, LintOptions, LintRule, RULES};
 pub use resolve::{
@@ -174,6 +174,7 @@ workload {
 #     checkpoint = "out/run.journal"  # resumable checkpoint journal
 #     every = 16                      # journal flush interval
 #     frontier = "out/frontier.json"  # streaming Pareto frontier
+#     trace = "out/trace.json"        # deterministic event trace (+ .timing sidecar)
 # }
 "#;
 

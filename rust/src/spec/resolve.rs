@@ -215,12 +215,16 @@ pub struct PersistPlan {
     pub every: usize,
     /// Streaming-frontier output path (`dse --frontier`).
     pub frontier: Option<PathBuf>,
+    /// Deterministic event-trace output path (`dse --trace`); the
+    /// wall-clock timing sidecar is written next to it
+    /// ([`sidecar_path`](crate::obs::sidecar_path)).
+    pub trace: Option<PathBuf>,
 }
 
 impl PersistPlan {
     /// An empty plan with the default flush interval.
     pub fn new() -> Self {
-        Self { db: None, cache: None, checkpoint: None, every: 16, frontier: None }
+        Self { db: None, cache: None, checkpoint: None, every: 16, frontier: None, trace: None }
     }
 }
 
@@ -299,7 +303,8 @@ impl ResolvedCampaign {
 
     /// Whether the spec explicitly set `key` (`"seed"`, `"workers"`,
     /// `"shard"`, `"strategy.seed"`, `"db"`, `"cache"`, `"checkpoint"`,
-    /// `"every"`, `"frontier"`). Flag-built campaigns set nothing.
+    /// `"every"`, `"frontier"`, `"trace"`). Flag-built campaigns set
+    /// nothing.
     pub fn sets(&self, key: &str) -> bool {
         self.set_keys.contains(key)
     }
@@ -451,6 +456,9 @@ impl ResolvedCampaign {
             if let Some(path) = &self.persist.frontier {
                 lines.push(format!("  frontier = {}", quote(path)));
             }
+            if let Some(path) = &self.persist.trace {
+                lines.push(format!("  trace = {}", quote(path)));
+            }
             if !lines.is_empty() {
                 out.push_str("\npersist {\n");
                 for line in lines {
@@ -535,6 +543,9 @@ impl ResolvedCampaign {
         }
         if let Some(p) = &self.persist.frontier {
             persisted.push(format!("frontier={}", p.display()));
+        }
+        if let Some(p) = &self.persist.trace {
+            persisted.push(format!("trace={}", p.display()));
         }
         if !persisted.is_empty() {
             out.push_str(&format!("  persist: {}\n", persisted.join(" ")));
@@ -1431,7 +1442,7 @@ fn resolve_persist_block(
     diags: &mut Diagnostics,
     set_keys: &mut BTreeSet<String>,
 ) -> PersistPlan {
-    const KEYS: [&str; 5] = ["db", "cache", "checkpoint", "every", "frontier"];
+    const KEYS: [&str; 6] = ["db", "cache", "checkpoint", "every", "frontier", "trace"];
     let mut plan = PersistPlan::new();
     let mut seen = BTreeSet::new();
     for kv in &block.entries {
@@ -1439,7 +1450,7 @@ fn resolve_persist_block(
             continue;
         }
         match kv.key.node.as_str() {
-            "db" | "cache" | "checkpoint" | "frontier" => {
+            "db" | "cache" | "checkpoint" | "frontier" | "trace" => {
                 let key = kv.key.node.as_str();
                 if let Some(text) = expect_string(diags, &kv.value, &format!("persist.{key}")) {
                     let path = Some(PathBuf::from(text));
@@ -1447,6 +1458,7 @@ fn resolve_persist_block(
                         "db" => plan.db = path,
                         "cache" => plan.cache = path,
                         "checkpoint" => plan.checkpoint = path,
+                        "trace" => plan.trace = path,
                         _ => plan.frontier = path,
                     }
                     set_keys.insert(key.to_string());

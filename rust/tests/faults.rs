@@ -18,6 +18,7 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
+use qadam::obs::{sidecar_path, TimingSidecar, Trace};
 use qadam::serve::{campaign_dir, serve, BatchOutcome, BatchQueue, BatchStatus, ServeConfig};
 
 fn temp_dir(tag: &str) -> PathBuf {
@@ -216,6 +217,58 @@ fn status_torn_at_every_byte_offset_loses_nothing() {
         let reloaded = BatchStatus::load(&reference.status_path)
             .unwrap_or_else(|e| panic!("offset {offset}: status not rewritten whole: {e}"));
         assert_eq!(reloaded.campaigns().len(), 1);
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------- trace / sidecar tearing
+
+/// Tear the deterministic event trace and its wall-clock sidecar at
+/// every byte offset. Both are write-only whole-file atomic rewrites,
+/// so a re-run (replaying the complete journal over a cold shared
+/// cache, exactly the reference's warmth) must restore `trace.json`
+/// byte-identically; the sidecar records fresh wall-clock samples, so
+/// its contract is weaker — whole and parseable, one sample per event.
+#[test]
+fn trace_and_sidecar_torn_at_every_byte_offset_recover() {
+    let dir = temp_dir("trace");
+    let spec = write(
+        &dir,
+        "solo.qsl",
+        &format!("{BASE}persist {{\n  trace = \"trace.json\"\n}}\n"),
+    );
+    let reference = reference_run(&[spec.clone()], &dir.join("ref"));
+    let ref_dir = reference.reports[0].dir.clone().unwrap();
+    let fingerprint = reference.reports[0].fingerprint;
+    let journal = fs::read(ref_dir.join("run.journal")).unwrap();
+    let trace_ref = fs::read(ref_dir.join("trace.json")).unwrap();
+    let sidecar_name = "trace.json.timing";
+    let sidecar_ref = fs::read(ref_dir.join(sidecar_name)).unwrap();
+    assert!(!trace_ref.is_empty() && !sidecar_ref.is_empty());
+
+    let queue = BatchQueue::build(&[spec]).unwrap();
+    for (artifact, bytes) in [("trace.json", &trace_ref), (sidecar_name, &sidecar_ref)] {
+        for offset in 0..bytes.len() {
+            let context = format!("{artifact} offset {offset}");
+            let out = dir.join("rerun");
+            let _ = fs::remove_dir_all(&out);
+            let campaign = campaign_dir(&out, fingerprint);
+            fs::create_dir_all(&campaign).unwrap();
+            // The kill window: journal finished, trace/sidecar save torn.
+            fs::write(campaign.join("run.journal"), &journal).unwrap();
+            tear(bytes, offset, &campaign.join(artifact));
+            let outcome = serve(&queue, &ServeConfig::new(&out)).unwrap();
+            assert_eq!(outcome.failures(), 0, "{context}");
+            assert_campaign_bytes_match(&ref_dir, &campaign, &context);
+            // The deterministic trace is byte-identical again.
+            let rerun_trace = fs::read(campaign.join("trace.json")).unwrap();
+            assert_eq!(rerun_trace, trace_ref, "{context}: trace.json differs");
+            // The sidecar is whole and paired 1:1 with the trace.
+            let trace = Trace::load(&campaign.join("trace.json")).unwrap();
+            let timing = TimingSidecar::load(&sidecar_path(&campaign.join("trace.json")))
+                .unwrap_or_else(|e| panic!("{context}: sidecar not rewritten whole: {e}"));
+            assert_eq!(timing.samples.len(), trace.len(), "{context}");
+        }
     }
     let _ = fs::remove_dir_all(&dir);
 }

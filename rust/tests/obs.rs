@@ -1,0 +1,298 @@
+//! Observability integration tests (DESIGN.md §11): the deterministic
+//! event trace must be byte-identical across worker counts and across
+//! kill/resume, a no-op sink must leave every campaign artifact
+//! untouched, the spec-level `persist.trace` key must write both the
+//! trace and its wall-clock sidecar (and only the sidecar may carry
+//! time), and the `trace show|merge|diff` surfaces must round-trip
+//! saved traces.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use qadam::arch::SweepSpec;
+use qadam::dnn::Dataset;
+use qadam::explore::{Explorer, PointCache};
+use qadam::obs::view::{render_diff, render_merge, render_show};
+use qadam::obs::{sidecar_path, NullSink, TimingSidecar, Trace, TraceEvent, TraceRecorder};
+use qadam::pareto::CampaignFrontier;
+use qadam::serve::{serve, BatchQueue, ServeConfig};
+use qadam::spec;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qadam_obs_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A fully instrumented tiny campaign: cache + frontier + checkpoint +
+/// recorder, returning the trace's canonical text.
+fn traced_run(workers: usize, journal: &Path, every: usize) -> (Trace, TimingSidecar) {
+    let recorder = Arc::new(TraceRecorder::new());
+    Explorer::over(SweepSpec::tiny())
+        .dataset(Dataset::Cifar10)
+        .workers(workers)
+        .seed(7)
+        .cache(Arc::new(Mutex::new(PointCache::new())))
+        .frontier(Arc::new(Mutex::new(CampaignFrontier::new())))
+        .checkpoint(journal, every)
+        .trace_sink(recorder.clone())
+        .run()
+        .unwrap();
+    recorder.snapshot()
+}
+
+// ------------------------------------------------------ byte determinism
+
+/// The acceptance criterion: identical campaigns at different worker
+/// counts produce byte-identical `qadam.trace` documents — only the
+/// timing sidecar may differ.
+#[test]
+fn trace_bytes_are_identical_across_worker_counts() {
+    let dir = temp_dir("workers");
+    let total = SweepSpec::tiny().len();
+    let (serial, serial_timing) = traced_run(1, &dir.join("serial.journal"), 2);
+    let (threaded, threaded_timing) = traced_run(4, &dir.join("threaded.journal"), 2);
+    assert_eq!(
+        serial.to_json().to_string_pretty(),
+        threaded.to_json().to_string_pretty(),
+        "worker count must not leak into the deterministic trace"
+    );
+    // Every event carries one timing sample, whatever the schedule was.
+    assert_eq!(serial_timing.samples.len(), serial.len());
+    assert_eq!(threaded_timing.samples.len(), threaded.len());
+    // A fresh cache misses once per point; every point is dispatched,
+    // observed by the frontier, and delivered exactly once.
+    let counts = serial.counts();
+    assert_eq!(counts.get("cache.miss"), Some(&total));
+    assert_eq!(counts.get("cache.hit"), None);
+    assert_eq!(counts.get("point.dispatch"), Some(&total));
+    assert_eq!(counts.get("frontier.observe"), Some(&total));
+    assert_eq!(counts.get("point.deliver"), Some(&total));
+    assert_eq!(counts.get("campaign.begin"), Some(&1));
+    assert_eq!(counts.get("campaign.end"), Some(&1));
+    match serial.events().first() {
+        Some(TraceEvent::CampaignBegin { strategy, total: t, seed, .. }) => {
+            assert_eq!(strategy, "exhaustive");
+            assert_eq!((*t, *seed), (total, 7));
+        }
+        other => panic!("trace must open with campaign.begin, got {other:?}"),
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Kill the campaign at a flush boundary and resume: the replayed
+/// prefix plus the recomputed tail must reproduce the uninterrupted
+/// trace byte for byte.
+#[test]
+fn resumed_run_reproduces_the_trace_byte_for_byte() {
+    let dir = temp_dir("resume");
+    let journal = dir.join("run.journal");
+    let (reference, _) = traced_run(3, &journal, 2);
+    let reference_text = reference.to_json().to_string_pretty();
+
+    // Keep the header plus the first two flushed entries — a kill at
+    // the first checkpoint boundary.
+    let text = fs::read_to_string(&journal).unwrap();
+    let lines: Vec<&str> = text.split_inclusive('\n').collect();
+    assert!(lines.len() > 3, "tiny campaign must journal several points");
+    fs::write(&journal, lines[..3].concat()).unwrap();
+
+    // Fresh recorder, fresh (cold) cache, fresh frontier: replay emits
+    // the prefix's events, live workers emit the tail's.
+    let (resumed, resumed_timing) = traced_run(3, &journal, 2);
+    assert_eq!(
+        resumed.to_json().to_string_pretty(),
+        reference_text,
+        "kill/resume must not leak into the deterministic trace"
+    );
+    assert_eq!(resumed_timing.samples.len(), resumed.len());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// A no-op sink must not perturb campaign results: the database bytes
+/// match an entirely untraced run.
+#[test]
+fn null_sink_run_matches_untraced_artifacts() {
+    let build = || Explorer::over(SweepSpec::tiny()).dataset(Dataset::Cifar10).workers(3).seed(7);
+    let untraced = build().run().unwrap();
+    let traced = build().trace_sink(Arc::new(NullSink)).run().unwrap();
+    assert_eq!(
+        traced.to_json().to_string_pretty(),
+        untraced.to_json().to_string_pretty(),
+        "a no-op sink must leave the database byte-identical"
+    );
+}
+
+// ------------------------------------------------------ spec-level wiring
+
+const SPEC_BODY: &str = "campaign { seed = 7 }\n\
+    sweep {\n  pe_type = [int16]\n  array = [8x8]\n  glb_kib = [64, 128]\n  \
+    spad = [spad(12, 224, 24)]\n  dram_gbps = [8]\n  clock_ghz = [2]\n}\n\
+    workload {\n  dataset = cifar10\n  models = [tiny]\n}\n\
+    model tiny {\n  fc head { in = 64, out = 10 }\n}\n";
+
+/// `persist { trace = ... }` writes the trace and its `.timing` sidecar;
+/// the trace itself must be wall-clock-free.
+#[test]
+fn spec_persist_trace_writes_trace_and_sidecar() {
+    let dir = temp_dir("spec");
+    let trace_path = dir.join("trace.json");
+    let source = format!(
+        "{SPEC_BODY}persist {{\n  db = \"{}\"\n  checkpoint = \"{}\"\n  every = 2\n  \
+         trace = \"{}\"\n}}\n",
+        dir.join("db.json").display(),
+        dir.join("run.journal").display(),
+        trace_path.display()
+    );
+    let campaign = spec::compile(&source, "obs.qsl").unwrap();
+    let outcome = campaign.execute().unwrap();
+    let trace_outcome = outcome.trace.expect("persist.trace must produce a trace outcome");
+    assert_eq!(trace_outcome.path, trace_path);
+    assert_eq!(trace_outcome.timing, sidecar_path(&trace_path));
+
+    let trace = Trace::load(&trace_path).unwrap();
+    assert_eq!(trace.len(), trace_outcome.events);
+    let text = fs::read_to_string(&trace_path).unwrap();
+    assert!(!text.contains("at_ns"), "wall-clock fields must stay out of qadam.trace");
+    assert!(!text.contains("eval_ns"), "eval timings must stay out of qadam.trace");
+
+    let timing = TimingSidecar::load(&sidecar_path(&trace_path)).unwrap();
+    assert_eq!(timing.samples.len(), trace.len());
+    // The spec fingerprint is pinned into the opening event.
+    match trace.events().first() {
+        Some(TraceEvent::CampaignBegin { fingerprint, .. }) => {
+            assert_eq!(*fingerprint, Some(campaign.fingerprint()));
+        }
+        other => panic!("trace must open with campaign.begin, got {other:?}"),
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------- show / merge / diff
+
+/// `trace show`/`merge`/`diff` surfaces round-trip a saved trace: the
+/// rendered views name what the campaign did, a self-merge doubles and
+/// reseqs cleanly, and diff localizes a divergence.
+#[test]
+fn show_merge_and_diff_round_trip_saved_traces() {
+    let dir = temp_dir("views");
+    let (trace, timing) = traced_run(2, &dir.join("run.journal"), 2);
+    let path = dir.join("trace.json");
+    trace.save(&path).unwrap();
+    timing.save(&sidecar_path(&path)).unwrap();
+
+    let loaded = Trace::load(&path).unwrap();
+    assert_eq!(loaded, trace, "save/load must round-trip the event stream");
+    let sidecar = TimingSidecar::load(&sidecar_path(&path)).unwrap();
+    let shown = render_show(&loaded, Some(&sidecar));
+    assert!(shown.contains("exhaustive"), "show must name the strategy:\n{shown}");
+    assert!(shown.contains("cache"), "show must report cache stats:\n{shown}");
+
+    // A self-merge concatenates with a dense reseq: the merged document
+    // still parses (from_json validates seq density).
+    let merged = Trace::merge([&loaded, &loaded]);
+    assert_eq!(merged.len(), 2 * loaded.len());
+    let reparsed =
+        Trace::from_json(&qadam::util::json::Json::parse(&merged.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+    assert_eq!(reparsed, merged);
+    let merge_view = render_merge(&[
+        ("a.json".to_string(), loaded.clone()),
+        ("b.json".to_string(), loaded.clone()),
+    ]);
+    assert!(merge_view.contains("a.json") && merge_view.contains("b.json"));
+
+    // Identical traces: no divergence. A truncated copy diverges where
+    // the events stop agreeing on campaign.end vs nothing.
+    assert!(loaded.diff(&trace).identical());
+    let diff_view = render_diff("left", "right", &loaded, &trace);
+    assert!(diff_view.contains("identical"), "{diff_view}");
+    let mut shorter = Trace::new();
+    for event in loaded.events().iter().take(loaded.len() - 1) {
+        shorter.push(event.clone());
+    }
+    let diff = loaded.diff(&shorter);
+    assert_eq!(diff.divergence, Some(loaded.len() - 1));
+    assert!(!render_diff("left", "short", &loaded, &shorter).contains("identical"));
+    let _ = fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------ serve trace
+
+/// The batch-level serve trace opens with `serve.begin`, walks every
+/// campaign linted → running → done, records one shared-cache save per
+/// completed campaign, and closes with tallies that match the reports.
+#[test]
+fn serve_batch_trace_records_every_transition() {
+    let dir = temp_dir("serve");
+    fs::write(dir.join("base.qsl"), SPEC_BODY).unwrap();
+    let specs = [
+        {
+            fs::write(dir.join("a.qsl"), "include \"base.qsl\"\n").unwrap();
+            dir.join("a.qsl")
+        },
+        {
+            fs::write(
+                dir.join("b.qsl"),
+                "include \"base.qsl\"\noverride sweep { glb_kib = [128, 192] }\n",
+            )
+            .unwrap();
+            dir.join("b.qsl")
+        },
+    ];
+    let queue = BatchQueue::build(&specs).unwrap();
+    let out = dir.join("out");
+    let mut config = ServeConfig::new(&out);
+    let trace_path = out.join("batch_trace.json");
+    config.trace = Some(trace_path.clone());
+    let outcome = serve(&queue, &config).unwrap();
+    assert_eq!(outcome.failures(), 0);
+    assert_eq!(outcome.trace.as_deref(), Some(trace_path.as_path()));
+
+    let trace = Trace::load(&trace_path).unwrap();
+    assert!(matches!(trace.events().first(), Some(TraceEvent::ServeBegin { campaigns: 2 })));
+    match trace.events().last() {
+        Some(TraceEvent::ServeEnd { done, failed, skipped }) => {
+            assert_eq!((*done, *failed, *skipped), (2, 0, 0));
+        }
+        other => panic!("serve trace must close with serve.end, got {other:?}"),
+    }
+    // Each campaign walks linted -> running -> done, in that order.
+    for (index, report) in outcome.reports.iter().enumerate() {
+        let states: Vec<&str> = trace
+            .events()
+            .iter()
+            .filter_map(|event| match event {
+                TraceEvent::ServeTransition { index: i, fingerprint, state, .. }
+                    if *i == index =>
+                {
+                    assert_eq!(*fingerprint, report.fingerprint);
+                    Some(state.as_str())
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(states, ["linted", "running", "done"], "campaign {index}");
+    }
+    // One shared-cache save per completed campaign; the last one holds
+    // the batch's final entry count.
+    let saves: Vec<(usize, u64)> = trace
+        .events()
+        .iter()
+        .filter_map(|event| match event {
+            TraceEvent::ServeCacheSave { entries, generation, .. } => {
+                Some((*entries, *generation))
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(saves.len(), 2);
+    assert_eq!(saves.last().map(|(entries, _)| *entries), Some(outcome.cache_entries));
+    assert!(saves.windows(2).all(|w| w[0].1 < w[1].1), "generations must increase: {saves:?}");
+    // The timing sidecar rides along.
+    let timing = TimingSidecar::load(&sidecar_path(&trace_path)).unwrap();
+    assert_eq!(timing.samples.len(), trace.len());
+    let _ = fs::remove_dir_all(&dir);
+}
