@@ -1,0 +1,153 @@
+//! Bench: evaluation-database persistence — canonical JSON vs the
+//! columnar binary `qadam.qdb` format — plus the million-point campaign
+//! smoke: streaming a 10⁶-evaluation space through `QdbWriter` while a
+//! sharded parallel fold maintains the Pareto front.
+//!
+//! The claim to quantify: the qdb path makes million-point campaigns
+//! practical — save/load cost scales with bytes moved (108 B/row, no
+//! string formatting or parsing), and the sharded frontier fold merges
+//! to a result bit-identical to sequential insertion.
+
+use std::path::PathBuf;
+
+use qadam::arch::AcceleratorConfig;
+use qadam::bench::{bench_with, section, BenchConfig};
+use qadam::dnn::Dataset;
+use qadam::dse::Evaluation;
+use qadam::explore::{CampaignStats, EvalDatabase, ModelSpace, QdbPlan, QdbSpacePlan, QdbWriter};
+use qadam::pareto::{FrontCore, OBJECTIVES};
+use qadam::quant::PeType;
+
+/// Deterministic synthetic evaluation `i` — a valid config plus scrambled
+/// metrics, cheap enough to generate 10⁶ of without dominating the bench.
+fn synth_eval(i: usize) -> Evaluation {
+    let mut x = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+    x ^= x >> 33;
+    let unit = |shift: u32| ((x >> shift) & 0xffff) as f64 / 65536.0;
+    let clock_ghz = 0.5 + (i % 16) as f64 * 0.25;
+    let config = AcceleratorConfig {
+        pe: PeType::ALL[i % PeType::ALL.len()],
+        rows: 1 + (i % 64),
+        cols: 1 + ((i / 64) % 64),
+        glb_kib: 32 + (i % 8) * 32,
+        dram_bw_gbps: 4.0 + (i % 4) as f64,
+        clock_ghz,
+        ..Default::default()
+    };
+    Evaluation {
+        config,
+        area_mm2: 1.0 + 30.0 * unit(0),
+        clock_ghz,
+        latency_ms: 0.1 + 10.0 * unit(8),
+        inf_per_s: 10.0 + 1000.0 * unit(16),
+        perf_per_area: 1.0 + 100.0 * unit(24),
+        energy_uj: 10.0 + 500.0 * unit(32),
+        dram_energy_uj: 1.0 + 50.0 * unit(40),
+        utilization: unit(48),
+    }
+}
+
+fn synthetic_db(n: usize) -> EvalDatabase {
+    EvalDatabase {
+        dataset: Dataset::Cifar10,
+        shard: (0, 1),
+        strategy: "exhaustive".into(),
+        spaces: vec![ModelSpace {
+            model_name: "synthetic".into(),
+            dataset: Dataset::Cifar10,
+            evals: (0..n).map(synth_eval).collect(),
+        }],
+        stats: CampaignStats {
+            design_points: n,
+            evaluations: n,
+            wall_seconds: 0.0,
+            workers: 0,
+        },
+    }
+}
+
+fn temp_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qadam_bench_db_format_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    dir
+}
+
+fn main() {
+    let dir = temp_dir();
+
+    section("database save/load: canonical JSON vs columnar qdb");
+    for &n in &[1_000usize, 100_000] {
+        let config = if n <= 1_000 {
+            BenchConfig { warmup_iters: 1, measure_iters: 3 }
+        } else {
+            BenchConfig { warmup_iters: 0, measure_iters: 2 }
+        };
+        let db = synthetic_db(n);
+        let json_path = dir.join(format!("db_{n}.json"));
+        let qdb_path = dir.join(format!("db_{n}.qdb"));
+        bench_with(&format!("json_save_{n}"), config, || {
+            db.save(&json_path).expect("json save");
+        });
+        bench_with(&format!("qdb_save_{n}"), config, || {
+            db.save_qdb(&qdb_path).expect("qdb save");
+        });
+        bench_with(&format!("json_load_{n}"), config, || {
+            EvalDatabase::load(&json_path).expect("json load").stats.evaluations
+        });
+        bench_with(&format!("qdb_load_{n}"), config, || {
+            EvalDatabase::load_qdb(&qdb_path).expect("qdb load").stats.evaluations
+        });
+    }
+
+    // The acceptance smoke: a 10⁶-point synthetic campaign never holds the
+    // database in RAM — evaluations stream straight into the QdbWriter
+    // while 8 shard folds maintain sub-fronts that tree-merge into the
+    // (bit-identical-to-sequential) campaign front.
+    section("million-point campaign: streamed qdb write + parallel frontier");
+    const MILLION: usize = 1_000_000;
+    const SHARDS: usize = 8;
+    bench_with("million_point_campaign", BenchConfig { warmup_iters: 0, measure_iters: 1 }, || {
+        let path = dir.join("million.qdb");
+        let plan = QdbPlan {
+            dataset: Dataset::Cifar10,
+            shard: (0, 1),
+            strategy: "synthetic".into(),
+            spaces: vec![QdbSpacePlan {
+                model_name: "synthetic".into(),
+                dataset: Dataset::Cifar10,
+                rows: MILLION,
+            }],
+            design_points: MILLION,
+            evaluations: MILLION,
+        };
+        let front = std::thread::scope(|scope| {
+            let writer = scope.spawn(|| {
+                let mut writer = QdbWriter::create(&path, &plan).expect("qdb create");
+                for i in 0..MILLION {
+                    writer.append(0, &synth_eval(i)).expect("qdb append");
+                }
+                writer.finish().expect("qdb finish");
+            });
+            let chunk = MILLION.div_ceil(SHARDS);
+            let folds: Vec<_> = (0..SHARDS)
+                .map(|shard| {
+                    scope.spawn(move || {
+                        let mut front = FrontCore::new(OBJECTIVES.to_vec());
+                        let hi = ((shard + 1) * chunk).min(MILLION);
+                        for i in (shard * chunk)..hi {
+                            let eval = synth_eval(i);
+                            front.offer_seq(i, vec![eval.perf_per_area, eval.energy_uj], ());
+                        }
+                        front
+                    })
+                })
+                .collect();
+            let shards = folds.into_iter().map(|h| h.join().expect("shard fold")).collect();
+            writer.join().expect("qdb stream");
+            FrontCore::merge_all(shards).expect("non-empty merge")
+        });
+        front.len()
+    });
+
+    qadam::bench::finish("db_format", &qadam::bench::HostMeta::from_env());
+}

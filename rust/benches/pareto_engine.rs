@@ -50,6 +50,49 @@ fn main() {
         }
     }
 
+    // The sharded fold produces a front bit-identical to the sequential
+    // insertion (global seq numbers preserve tie-breaks), so this section
+    // measures pure overhead/speedup, not a quality trade.
+    section("frontier merge: sequential fold vs sharded tree-merge");
+    let cloud = synthetic_cloud(100_000, 42);
+    let merge_config = BenchConfig { warmup_iters: 0, measure_iters: 2 };
+    bench_with("merge_sequential_100000", merge_config, || {
+        let mut front = FrontCore::new(orientations.to_vec());
+        for point in &cloud {
+            front.insert(point.clone(), ());
+        }
+        front.len()
+    });
+    let shard_fold = |shards: usize, parallel: bool| {
+        let chunk = cloud.len().div_ceil(shards).max(1);
+        let fold = |idx: usize, slice: &[Vec<f64>]| {
+            let mut front = FrontCore::new(orientations.to_vec());
+            for (off, point) in slice.iter().enumerate() {
+                front.offer_seq(idx * chunk + off, point.clone(), ());
+            }
+            front
+        };
+        let fronts: Vec<_> = if parallel {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = cloud
+                    .chunks(chunk)
+                    .enumerate()
+                    .map(|(idx, slice)| scope.spawn(move || fold(idx, slice)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("shard fold")).collect()
+            })
+        } else {
+            cloud.chunks(chunk).enumerate().map(|(idx, slice)| fold(idx, slice)).collect()
+        };
+        FrontCore::merge_all(fronts).map(|front| front.len()).unwrap_or(0)
+    };
+    for &shards in &[4usize, 16] {
+        bench_with(&format!("merge_sharded_{shards}x_100000"), merge_config, || {
+            shard_fold(shards, false)
+        });
+    }
+    bench_with("merge_parallel_4x_100000", merge_config, || shard_fold(4, true));
+
     section("campaign wall-clock: exhaustive vs strategy walks");
     let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
     let build = || {

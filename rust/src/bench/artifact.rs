@@ -241,7 +241,9 @@ impl BenchArtifact {
     }
 
     /// Compare `self` (old baseline) against `new`, flagging benches whose
-    /// p50 grew by more than `threshold_pct` percent.
+    /// p50 moved by more than `threshold_pct` percent in *either*
+    /// direction: growth is a regression, shrinkage an improvement (so
+    /// wins land in the trajectory instead of silently passing).
     pub fn diff(&self, new: &BenchArtifact, threshold_pct: f64) -> BenchDiff {
         let mut entries = Vec::new();
         let mut added = Vec::new();
@@ -260,6 +262,7 @@ impl BenchArtifact {
                         new_p50: record.summary.p50,
                         delta_pct,
                         regression: delta_pct > threshold_pct,
+                        improvement: delta_pct < -threshold_pct,
                     });
                 }
             }
@@ -285,8 +288,11 @@ pub struct DiffEntry {
     pub new_p50: f64,
     /// Relative p50 change in percent (positive = slower).
     pub delta_pct: f64,
-    /// Whether the change exceeds the diff threshold.
+    /// Whether the p50 grew beyond the diff threshold.
     pub regression: bool,
+    /// Whether the p50 shrank beyond the diff threshold (a speedup worth
+    /// recording in the trajectory).
+    pub improvement: bool,
 }
 
 /// Result of diffing two bench artifacts.
@@ -313,21 +319,38 @@ impl BenchDiff {
         self.entries.iter().filter(|e| e.regression).map(|e| e.name.as_str()).collect()
     }
 
+    /// Whether any compared bench sped up beyond the threshold.
+    pub fn has_improvements(&self) -> bool {
+        self.entries.iter().any(|e| e.improvement)
+    }
+
+    /// Names of the improved (sped-up) benches.
+    pub fn improvements(&self) -> Vec<&str> {
+        self.entries.iter().filter(|e| e.improvement).map(|e| e.name.as_str()).collect()
+    }
+
     /// Human-readable report (one line per compared bench).
     pub fn render(&self) -> String {
         let mut out = format!(
-            "bench diff: {} compared, threshold +{:.1}% p50\n",
+            "bench diff: {} compared, threshold ±{:.1}% p50\n",
             self.entries.len(),
             self.threshold_pct
         );
         for e in &self.entries {
+            let flag = if e.regression {
+                "  REGRESSION"
+            } else if e.improvement {
+                "  IMPROVEMENT"
+            } else {
+                ""
+            };
             out.push_str(&format!(
                 "  {:<44} p50 {:>10.3} ms -> {:>10.3} ms  ({:+.1}%){}\n",
                 e.name,
                 e.old_p50 * 1e3,
                 e.new_p50 * 1e3,
                 e.delta_pct,
-                if e.regression { "  REGRESSION" } else { "" },
+                flag,
             ));
         }
         if !self.added.is_empty() {
@@ -344,6 +367,13 @@ impl BenchDiff {
             ));
         } else {
             out.push_str("  no regressions beyond threshold\n");
+        }
+        if self.has_improvements() {
+            out.push_str(&format!(
+                "  {} improvement(s) beyond -{:.1}%\n",
+                self.improvements().len(),
+                self.threshold_pct
+            ));
         }
         out
     }
@@ -464,10 +494,29 @@ mod tests {
         assert!(diff.has_regressions());
         assert_eq!(diff.regressions(), vec!["alpha"]);
         assert!(diff.render().contains("REGRESSION"));
+        assert!(!diff.has_improvements());
         // Within threshold: clean.
         let diff = old.diff(&old, 10.0);
         assert!(!diff.has_regressions());
         assert!(diff.render().contains("no regressions"));
+    }
+
+    #[test]
+    fn diff_flags_p50_improvements_beyond_threshold() {
+        let old = sample_artifact();
+        let mut faster = old.clone();
+        faster.benches[0].summary.p50 *= 0.5; // alpha -50%
+        let diff = old.diff(&faster, 10.0);
+        assert!(diff.has_improvements());
+        assert_eq!(diff.improvements(), vec!["alpha"]);
+        assert!(diff.render().contains("IMPROVEMENT"));
+        // A speedup is not a regression: `--strict` semantics unaffected.
+        assert!(!diff.has_regressions());
+        assert!(diff.render().contains("no regressions"));
+        // Within threshold: neither flag set.
+        let diff = old.diff(&old, 10.0);
+        assert!(!diff.has_improvements());
+        assert!(!diff.render().contains("IMPROVEMENT"));
     }
 
     #[test]

@@ -60,9 +60,13 @@
 
 pub mod db;
 pub mod persist;
+pub mod qdb;
 
 pub use db::{CampaignStats, EvalDatabase, ModelSpace};
 pub use persist::{point_key, point_key_with, PointCache, BASE_SCHEMA_VERSION, SCHEMA_VERSION};
+pub use qdb::{
+    inspect_qdb, QdbInfo, QdbPlan, QdbSpacePlan, QdbWriter, QDB_MAGIC, QDB_SCHEMA_VERSION,
+};
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -639,19 +643,28 @@ impl Explorer {
             // deterministic cross-product order.
             let mut pending: BTreeMap<usize, Streamed> = BTreeMap::new();
             let mut next = start_pos;
+            let mut batch: Vec<Streamed> = Vec::new();
             'recv: for streamed in rx {
                 pending.insert(streamed.pos, streamed);
-                while let Some(Streamed { result: ready, cache_probe, eval_ns, .. }) =
-                    pending.remove(&next)
-                {
-                    if let Some(writer) = journal.as_mut() {
-                        if let Err(err) = writer.append(&ready) {
-                            // Abandon the campaign: the guard releases the
-                            // workers, and the error surfaces after join.
-                            abort_err = Some(err);
-                            break 'recv;
-                        }
+                // Drain every contiguously-ready position into one batch so
+                // the journal sees a single group append (one buffered write
+                // per flush boundary) instead of per-point write pairs.
+                batch.clear();
+                while let Some(streamed) = pending.remove(&(next + batch.len())) {
+                    batch.push(streamed);
+                }
+                if batch.is_empty() {
+                    continue;
+                }
+                if let Some(writer) = journal.as_mut() {
+                    if let Err(err) = writer.append_batch(batch.iter().map(|s| &s.result)) {
+                        // Abandon the campaign: the guard releases the
+                        // workers, and the error surfaces after join.
+                        abort_err = Some(err);
+                        break 'recv;
                     }
+                }
+                for Streamed { result: ready, cache_probe, eval_ns, .. } in batch.drain(..) {
                     let outcomes = if let Some(frontier) = &self.frontier {
                         match lock_shared(frontier).observe_at(next, ready.index, &ready.evals) {
                             Ok(outcomes) => Some(outcomes),
@@ -681,7 +694,7 @@ impl Explorer {
                 }
             }
             debug_assert!(
-                abort_err.is_some() || pending.is_empty(),
+                abort_err.is_some() || (pending.is_empty() && batch.is_empty()),
                 "all streamed points must be delivered"
             );
         });

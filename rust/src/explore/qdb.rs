@@ -1,0 +1,1109 @@
+//! Binary columnar `EvalDatabase` format (`qadam.qdb`).
+//!
+//! Canonical JSON (`EvalDatabase::save`/`load`) stays the diffable interchange
+//! format; `.qdb` is the campaign-scale companion for million-point sweeps
+//! where parsing and materializing JSON dominates wall time. The layout is a
+//! fixed little-endian header, a deduplicated string table, a per-space
+//! directory, column-major metric/config arrays, and a trailing FNV-1a
+//! integrity footer:
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------
+//!      0     8  magic "QADAMQDB"
+//!      8     4  schema version (u32, currently 1)
+//!     12     4  shard index (u32)
+//!     16     4  num shards (u32)
+//!     20     4  num spaces (u32)
+//!     24     4  num strings (u32)
+//!     28     4  dataset string index (u32)
+//!     32     4  strategy string index (u32)
+//!     36     4  reserved (u32, 0)
+//!     40     8  design points (u64)
+//!     48     8  evaluations (u64)
+//!     56     8  content fingerprint (u64, FNV-1a over identity)
+//!     64     —  string table: per string u32 length + UTF-8 bytes
+//!      —     —  directory: per space (name idx u32, dataset idx u32, rows u64)
+//!      —     —  per-space column data (see COLUMN_ELEM_BYTES)
+//!    end     8  FNV-1a 64 over all preceding bytes
+//! ```
+//!
+//! Within each space, columns are stored back to back in a fixed order:
+//! eight f64 metric columns (`area_mm2`, `clock_ghz`, `latency_ms`,
+//! `inf_per_s`, `perf_per_area`, `energy_uj`, `dram_energy_uj`,
+//! `utilization`), two f64 config columns (`clock_ghz`, `dram_bw_gbps`),
+//! six u32 config columns (`rows`, `cols`, `glb_kib`, `ifmap_spad`,
+//! `filter_spad`, `psum_spad`), and one u32 PE column holding a string-table
+//! index. f64 values are stored via `to_bits` so the JSON→qdb→JSON round trip
+//! is bit-exact.
+//!
+//! [`QdbWriter`] streams appends without ever holding a whole campaign in
+//! RAM: per-space row counts are fixed at [`QdbWriter::create`] time, so every
+//! column's byte range is known up front, and appends buffer into fixed-size
+//! per-column chunks that are flushed with positioned writes into a
+//! preallocated temp file. `finish` re-reads the file sequentially to compute
+//! the footer hash, then renames the temp file into place (same atomic
+//! discipline as the JSON artifact writers).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::arch::{AcceleratorConfig, ScratchpadCfg};
+use crate::dnn::Dataset;
+use crate::dse::Evaluation;
+use crate::explore::db::{CampaignStats, EvalDatabase, ModelSpace};
+use crate::quant::PeType;
+use crate::util::Fnv64;
+use crate::{Error, Result};
+
+/// Magic bytes at the start of every `.qdb` file.
+pub const QDB_MAGIC: [u8; 8] = *b"QADAMQDB";
+/// Schema version of the qdb container. Versioned independently of the JSON
+/// envelope lineage (`qadam.evaldb`): the binary layout evolves on its own.
+pub const QDB_SCHEMA_VERSION: u32 = 1;
+
+/// Fixed header length in bytes.
+const HEADER_BYTES: u64 = 64;
+/// Bytes per evaluation row across all columns (10 f64 + 7 u32).
+const ROW_BYTES: u64 = 10 * 8 + 7 * 4;
+/// Rows buffered per column before a positioned flush.
+const CHUNK_ROWS: usize = 1024;
+/// Number of columns per space.
+const NUM_COLUMNS: usize = 17;
+
+/// Element width of each column, in declaration order: eight metric f64s, two
+/// config f64s, six config u32s, one PE string-index u32.
+const COLUMN_ELEM_BYTES: [u8; NUM_COLUMNS] = [8, 8, 8, 8, 8, 8, 8, 8, 8, 8, 4, 4, 4, 4, 4, 4, 4];
+
+fn parse_dataset(name: &str, what: &str) -> Result<Dataset> {
+    Dataset::parse(name)
+        .ok_or_else(|| Error::ParseError(format!("qdb {what} names unknown dataset '{name}'")))
+}
+
+/// Immutable plan for a single space inside a [`QdbPlan`].
+#[derive(Debug, Clone)]
+pub struct QdbSpacePlan {
+    /// Model name (may carry an `@variant` suffix for joint campaigns).
+    pub model_name: String,
+    /// Dataset the space's evaluations ran against.
+    pub dataset: Dataset,
+    /// Exact number of evaluations that will be appended for this space.
+    pub rows: usize,
+}
+
+/// Everything a [`QdbWriter`] must know before the first append: the file
+/// layout is fully determined by the plan, which is what lets appends stream
+/// without buffering the campaign.
+#[derive(Debug, Clone)]
+pub struct QdbPlan {
+    /// Campaign-level dataset designator.
+    pub dataset: Dataset,
+    /// `(shard, num_shards)` designator, same semantics as [`EvalDatabase`].
+    pub shard: (usize, usize),
+    /// Selection strategy label (`"exhaustive"`, `"random"`, ...).
+    pub strategy: String,
+    /// Per-space plans, in output order.
+    pub spaces: Vec<QdbSpacePlan>,
+    /// Campaign stat: number of design points visited.
+    pub design_points: usize,
+    /// Campaign stat: total evaluations (must equal the sum of space rows).
+    pub evaluations: usize,
+}
+
+impl QdbPlan {
+    /// Derive a plan from a fully materialized database (the convert path).
+    pub fn from_database(db: &EvalDatabase) -> Self {
+        QdbPlan {
+            dataset: db.dataset,
+            shard: db.shard,
+            strategy: db.strategy.clone(),
+            spaces: db
+                .spaces
+                .iter()
+                .map(|space| QdbSpacePlan {
+                    model_name: space.model_name.clone(),
+                    dataset: space.dataset,
+                    rows: space.evals.len(),
+                })
+                .collect(),
+            design_points: db.stats.design_points,
+            evaluations: db.stats.evaluations,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.shard.1 == 0 || self.shard.0 >= self.shard.1 {
+            return Err(Error::InvalidConfig(format!(
+                "qdb plan has invalid shard designator {}/{}",
+                self.shard.0, self.shard.1
+            )));
+        }
+        let total: usize = self.spaces.iter().map(|space| space.rows).sum();
+        if total != self.evaluations {
+            return Err(Error::InvalidConfig(format!(
+                "qdb plan declares {} evaluations but space rows sum to {total}",
+                self.evaluations
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic identity fingerprint over the plan: campaign designators and
+/// per-space shapes, each field length-prefixed so adjacent fields cannot
+/// alias. Stored in the header and re-verified on load.
+fn plan_fingerprint(plan: &QdbPlan) -> u64 {
+    let mut hash = Fnv64::new();
+    let mut feed = |bytes: &[u8]| {
+        hash.update(&(bytes.len() as u64).to_le_bytes()).update(bytes);
+    };
+    feed(plan.dataset.name().as_bytes());
+    feed(&(plan.shard.0 as u64).to_le_bytes());
+    feed(&(plan.shard.1 as u64).to_le_bytes());
+    feed(plan.strategy.as_bytes());
+    feed(&(plan.design_points as u64).to_le_bytes());
+    feed(&(plan.evaluations as u64).to_le_bytes());
+    for space in &plan.spaces {
+        feed(space.model_name.as_bytes());
+        feed(space.dataset.name().as_bytes());
+        feed(&(space.rows as u64).to_le_bytes());
+    }
+    hash.finish()
+}
+
+/// Deduplicating string table with deterministic first-insertion order.
+struct StringTable {
+    strings: Vec<String>,
+    index: BTreeMap<String, u32>,
+}
+
+impl StringTable {
+    fn new() -> Self {
+        StringTable { strings: Vec::new(), index: BTreeMap::new() }
+    }
+
+    fn intern(&mut self, text: &str) -> u32 {
+        if let Some(&idx) = self.index.get(text) {
+            return idx;
+        }
+        let idx = self.strings.len() as u32;
+        self.strings.push(text.to_string());
+        self.index.insert(text.to_string(), idx);
+        idx
+    }
+
+    fn encoded(&self) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        for text in &self.strings {
+            bytes.extend_from_slice(&(text.len() as u32).to_le_bytes());
+            bytes.extend_from_slice(text.as_bytes());
+        }
+        bytes
+    }
+}
+
+/// One buffered column of the file being written.
+struct ColumnState {
+    /// Absolute byte offset of this column's first element.
+    base: u64,
+    /// Element width in bytes (4 or 8).
+    elem: u8,
+    /// Rows already flushed to the file.
+    flushed_rows: u64,
+    /// Pending encoded elements, at most `CHUNK_ROWS * elem` bytes.
+    buf: Vec<u8>,
+}
+
+fn flush_column(file: &mut fs::File, col: &mut ColumnState) -> Result<()> {
+    if col.buf.is_empty() {
+        return Ok(());
+    }
+    let offset = col.base + col.flushed_rows * u64::from(col.elem);
+    file.seek(SeekFrom::Start(offset))?;
+    file.write_all(&col.buf)?;
+    col.flushed_rows += (col.buf.len() / usize::from(col.elem)) as u64;
+    col.buf.clear();
+    Ok(())
+}
+
+struct SpaceState {
+    rows: u64,
+    appended: u64,
+    cols: Vec<ColumnState>,
+}
+
+/// Streaming `.qdb` writer: appends one evaluation at a time into a
+/// preallocated temp file and finalizes with an integrity footer plus an
+/// atomic rename. Buffered memory is bounded by
+/// `spaces × NUM_COLUMNS × CHUNK_ROWS × 8` bytes regardless of campaign size.
+pub struct QdbWriter {
+    file: fs::File,
+    final_path: PathBuf,
+    tmp_path: PathBuf,
+    spaces: Vec<SpaceState>,
+    pe_indices: [u32; PeType::ALL.len()],
+    data_end: u64,
+    finished: bool,
+}
+
+impl QdbWriter {
+    /// Create the temp file, write the header/string-table/directory prefix,
+    /// and preallocate the column region. Fails with
+    /// [`Error::InvalidConfig`] on an inconsistent plan.
+    pub fn create(path: &Path, plan: &QdbPlan) -> Result<Self> {
+        plan.validate()?;
+        let mut strings = StringTable::new();
+        let dataset_idx = strings.intern(plan.dataset.name());
+        let strategy_idx = strings.intern(&plan.strategy);
+        let space_indices: Vec<(u32, u32)> = plan
+            .spaces
+            .iter()
+            .map(|space| (strings.intern(&space.model_name), strings.intern(space.dataset.name())))
+            .collect();
+        // PE names are interned up front: the set is a closed enum, and a
+        // streaming writer cannot grow the table after the prefix is written.
+        let mut pe_indices = [0u32; PeType::ALL.len()];
+        for (slot, pe) in pe_indices.iter_mut().zip(PeType::ALL) {
+            *slot = strings.intern(pe.name());
+        }
+        let string_bytes = strings.encoded();
+        let dir_bytes_len = plan.spaces.len() as u64 * 16;
+        let data_start = HEADER_BYTES + string_bytes.len() as u64 + dir_bytes_len;
+
+        let mut header = Vec::with_capacity(HEADER_BYTES as usize);
+        header.extend_from_slice(&QDB_MAGIC);
+        header.extend_from_slice(&QDB_SCHEMA_VERSION.to_le_bytes());
+        header.extend_from_slice(&u32_of(plan.shard.0, "shard")?.to_le_bytes());
+        header.extend_from_slice(&u32_of(plan.shard.1, "num_shards")?.to_le_bytes());
+        header.extend_from_slice(&u32_of(plan.spaces.len(), "num_spaces")?.to_le_bytes());
+        header.extend_from_slice(&(strings.strings.len() as u32).to_le_bytes());
+        header.extend_from_slice(&dataset_idx.to_le_bytes());
+        header.extend_from_slice(&strategy_idx.to_le_bytes());
+        header.extend_from_slice(&0u32.to_le_bytes());
+        header.extend_from_slice(&(plan.design_points as u64).to_le_bytes());
+        header.extend_from_slice(&(plan.evaluations as u64).to_le_bytes());
+        header.extend_from_slice(&plan_fingerprint(plan).to_le_bytes());
+        debug_assert_eq!(header.len() as u64, HEADER_BYTES);
+
+        let mut dir_bytes = Vec::with_capacity(dir_bytes_len as usize);
+        let mut spaces = Vec::with_capacity(plan.spaces.len());
+        let mut cursor = data_start;
+        for (space, &(name_idx, ds_idx)) in plan.spaces.iter().zip(&space_indices) {
+            dir_bytes.extend_from_slice(&name_idx.to_le_bytes());
+            dir_bytes.extend_from_slice(&ds_idx.to_le_bytes());
+            dir_bytes.extend_from_slice(&(space.rows as u64).to_le_bytes());
+            let mut cols = Vec::with_capacity(NUM_COLUMNS);
+            for &elem in &COLUMN_ELEM_BYTES {
+                cols.push(ColumnState { base: cursor, elem, flushed_rows: 0, buf: Vec::new() });
+                cursor = cursor
+                    .checked_add(space.rows as u64 * u64::from(elem))
+                    .ok_or_else(|| {
+                        Error::InvalidConfig("qdb plan overflows the addressable file size".into())
+                    })?;
+            }
+            spaces.push(SpaceState { rows: space.rows as u64, appended: 0, cols });
+        }
+        let data_end = cursor;
+
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)?;
+            }
+        }
+        let tmp_path = tmp_sibling(path);
+        let mut file = fs::File::create(&tmp_path)?;
+        file.write_all(&header)?;
+        file.write_all(&string_bytes)?;
+        file.write_all(&dir_bytes)?;
+        file.set_len(data_end)?;
+        Ok(QdbWriter {
+            file,
+            final_path: path.to_path_buf(),
+            tmp_path,
+            spaces,
+            pe_indices,
+            data_end,
+            finished: false,
+        })
+    }
+
+    /// Append one evaluation to the given space. Errors with
+    /// [`Error::InvalidConfig`] when the space index is out of range, the
+    /// space is already full, or a config field exceeds the u32 column width.
+    pub fn append(&mut self, space: usize, eval: &Evaluation) -> Result<()> {
+        let num_spaces = self.spaces.len();
+        let state = self.spaces.get_mut(space).ok_or_else(|| {
+            Error::InvalidConfig(format!(
+                "qdb append to space {space} but the plan declares {num_spaces} space(s)"
+            ))
+        })?;
+        if state.appended >= state.rows {
+            return Err(Error::InvalidConfig(format!(
+                "qdb space {space} is full: plan declared {} row(s)",
+                state.rows
+            )));
+        }
+        let cfg = &eval.config;
+        let f64s = [
+            eval.area_mm2,
+            eval.clock_ghz,
+            eval.latency_ms,
+            eval.inf_per_s,
+            eval.perf_per_area,
+            eval.energy_uj,
+            eval.dram_energy_uj,
+            eval.utilization,
+            cfg.clock_ghz,
+            cfg.dram_bw_gbps,
+        ];
+        let u32s = [
+            u32_of(cfg.rows, "rows")?,
+            u32_of(cfg.cols, "cols")?,
+            u32_of(cfg.glb_kib, "glb_kib")?,
+            u32_of(cfg.spad.ifmap_entries, "ifmap_spad")?,
+            u32_of(cfg.spad.filter_entries, "filter_spad")?,
+            u32_of(cfg.spad.psum_entries, "psum_spad")?,
+            self.pe_indices[cfg.pe as usize],
+        ];
+        for (col, value) in state.cols.iter_mut().take(f64s.len()).zip(f64s) {
+            col.buf.extend_from_slice(&value.to_bits().to_le_bytes());
+        }
+        for (col, value) in state.cols.iter_mut().skip(f64s.len()).zip(u32s) {
+            col.buf.extend_from_slice(&value.to_le_bytes());
+        }
+        state.appended += 1;
+        for col in &mut state.cols {
+            if col.buf.len() >= CHUNK_ROWS * usize::from(col.elem) {
+                flush_column(&mut self.file, col)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush residual buffers, verify every space got exactly its planned row
+    /// count, compute and append the footer hash, and atomically rename the
+    /// temp file into place.
+    pub fn finish(mut self) -> Result<()> {
+        for (idx, state) in self.spaces.iter_mut().enumerate() {
+            if state.appended != state.rows {
+                return Err(Error::InvalidConfig(format!(
+                    "qdb space {idx} got {} of {} planned row(s)",
+                    state.appended, state.rows
+                )));
+            }
+            for col in &mut state.cols {
+                flush_column(&mut self.file, col)?;
+            }
+        }
+        self.file.flush()?;
+        // Positioned writes landed out of order, so the footer hash is
+        // computed with one sequential re-read of the finished byte range.
+        self.file.seek(SeekFrom::Start(0))?;
+        let mut hash = Fnv64::new();
+        let mut remaining = self.data_end;
+        let mut chunk = vec![0u8; 64 * 1024];
+        while remaining > 0 {
+            let want = remaining.min(chunk.len() as u64) as usize;
+            self.file.read_exact(&mut chunk[..want])?;
+            hash.update(&chunk[..want]);
+            remaining -= want as u64;
+        }
+        self.file.seek(SeekFrom::Start(self.data_end))?;
+        self.file.write_all(&hash.finish().to_le_bytes())?;
+        self.file.flush()?;
+        self.file.sync_all()?;
+        fs::rename(&self.tmp_path, &self.final_path)?;
+        self.finished = true;
+        Ok(())
+    }
+}
+
+impl Drop for QdbWriter {
+    fn drop(&mut self) {
+        if !self.finished {
+            let _ = fs::remove_file(&self.tmp_path);
+        }
+    }
+}
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+fn u32_of(value: usize, field: &str) -> Result<u32> {
+    u32::try_from(value).map_err(|_| {
+        Error::InvalidConfig(format!("qdb field {field} value {value} exceeds u32 range"))
+    })
+}
+
+/// Bounds-checked little-endian reader over a loaded byte buffer; every
+/// overrun becomes a typed [`Error::ParseError`] naming what was being read.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Cursor { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, len: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(len).ok_or_else(|| truncated(what, self.pos))?;
+        if end > self.bytes.len() {
+            return Err(truncated(what, self.pos));
+        }
+        let slice = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(slice)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let bytes = self.take(4, what)?;
+        let mut buf = [0u8; 4];
+        buf.copy_from_slice(bytes);
+        Ok(u32::from_le_bytes(buf))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let bytes = self.take(8, what)?;
+        let mut buf = [0u8; 8];
+        buf.copy_from_slice(bytes);
+        Ok(u64::from_le_bytes(buf))
+    }
+}
+
+fn truncated(what: &str, pos: usize) -> Error {
+    Error::ParseError(format!("qdb truncated reading {what} at byte {pos}"))
+}
+
+/// True when the buffer starts with the qdb magic. Used to sniff the format
+/// before committing to a binary or JSON parse.
+pub fn is_qdb_bytes(bytes: &[u8]) -> bool {
+    bytes.len() >= QDB_MAGIC.len() && bytes[..QDB_MAGIC.len()] == QDB_MAGIC
+}
+
+/// Check only the magic and schema version of a qdb buffer — the cheap
+/// envelope probe used by `qadam lint` (Q011), mirroring
+/// `check_envelope_exact` for the JSON lineages.
+pub fn check_qdb_envelope(bytes: &[u8]) -> Result<()> {
+    let mut cur = Cursor::new(bytes);
+    let magic = cur.take(QDB_MAGIC.len(), "magic")?;
+    if magic != QDB_MAGIC {
+        return Err(Error::ParseError("not a qadam.qdb file (bad magic)".into()));
+    }
+    let schema = cur.u32("schema version")?;
+    if schema != QDB_SCHEMA_VERSION {
+        return Err(Error::ParseError(format!(
+            "qadam.qdb schema version {schema} is not supported (expected {QDB_SCHEMA_VERSION})"
+        )));
+    }
+    Ok(())
+}
+
+struct ParsedHeader {
+    shard: (usize, usize),
+    num_spaces: usize,
+    num_strings: usize,
+    dataset_idx: u32,
+    strategy_idx: u32,
+    design_points: u64,
+    evaluations: u64,
+    fingerprint: u64,
+}
+
+fn parse_header(cur: &mut Cursor<'_>) -> Result<ParsedHeader> {
+    check_qdb_envelope(cur.bytes)?;
+    cur.pos = QDB_MAGIC.len() + 4; // past magic + schema, both validated above
+    let shard = cur.u32("shard index")? as usize;
+    let num_shards = cur.u32("num shards")? as usize;
+    let num_spaces = cur.u32("num spaces")? as usize;
+    let num_strings = cur.u32("num strings")? as usize;
+    let dataset_idx = cur.u32("dataset string index")?;
+    let strategy_idx = cur.u32("strategy string index")?;
+    let reserved = cur.u32("reserved field")?;
+    if reserved != 0 {
+        return Err(Error::ParseError(format!(
+            "qdb reserved header field is {reserved}, expected 0"
+        )));
+    }
+    let design_points = cur.u64("design points")?;
+    let evaluations = cur.u64("evaluations")?;
+    let fingerprint = cur.u64("fingerprint")?;
+    if num_shards == 0 || shard >= num_shards {
+        return Err(Error::ParseError(format!(
+            "database has invalid shard designator {shard}/{num_shards}"
+        )));
+    }
+    Ok(ParsedHeader {
+        shard: (shard, num_shards),
+        num_spaces,
+        num_strings,
+        dataset_idx,
+        strategy_idx,
+        design_points,
+        evaluations,
+        fingerprint,
+    })
+}
+
+fn parse_strings(cur: &mut Cursor<'_>, count: usize) -> Result<Vec<String>> {
+    // Each string costs at least 4 bytes, so a corrupt count cannot force a
+    // huge up-front allocation past the buffer it must be decoded from.
+    let mut strings = Vec::with_capacity(count.min(cur.bytes.len() / 4 + 1));
+    for idx in 0..count {
+        let len = cur.u32(&format!("string {idx} length"))? as usize;
+        let bytes = cur.take(len, &format!("string {idx} bytes"))?;
+        let text = std::str::from_utf8(bytes)
+            .map_err(|_| Error::ParseError(format!("qdb string {idx} is not valid UTF-8")))?;
+        strings.push(text.to_string());
+    }
+    Ok(strings)
+}
+
+fn string_at<'a>(strings: &'a [String], idx: u32, what: &str) -> Result<&'a str> {
+    strings.get(idx as usize).map(String::as_str).ok_or_else(|| {
+        Error::ParseError(format!(
+            "qdb {what} string index {idx} out of range ({} strings)",
+            strings.len()
+        ))
+    })
+}
+
+struct SpaceDir {
+    name_idx: u32,
+    dataset_idx: u32,
+    rows: usize,
+}
+
+/// Parsed and fully verified qdb metadata, as reported by `qadam db inspect`.
+#[derive(Debug)]
+pub struct QdbInfo {
+    /// Schema version from the header.
+    pub schema: u32,
+    /// Identity fingerprint from the header.
+    pub fingerprint: u64,
+    /// Campaign dataset designator.
+    pub dataset: Dataset,
+    /// `(shard, num_shards)` designator.
+    pub shard: (usize, usize),
+    /// Selection strategy label.
+    pub strategy: String,
+    /// Number of design points visited by the campaign.
+    pub design_points: usize,
+    /// Total evaluations stored.
+    pub evaluations: usize,
+    /// Per-space `(model_name, rows)` pairs, in file order.
+    pub spaces: Vec<(String, usize)>,
+    /// Total file size in bytes.
+    pub bytes: usize,
+}
+
+struct Parsed {
+    header: ParsedHeader,
+    strings: Vec<String>,
+    dirs: Vec<SpaceDir>,
+    data_start: usize,
+}
+
+/// Structural + integrity parse shared by `load_qdb` and `inspect_qdb`:
+/// validates magic, schema, exact file length, footer hash, and fingerprint
+/// before any column is decoded.
+fn parse_verified(bytes: &[u8]) -> Result<Parsed> {
+    let mut cur = Cursor::new(bytes);
+    let header = parse_header(&mut cur)?;
+    let strings = parse_strings(&mut cur, header.num_strings)?;
+    let mut dirs = Vec::with_capacity(header.num_spaces.min(bytes.len() / 16 + 1));
+    for idx in 0..header.num_spaces {
+        let name_idx = cur.u32(&format!("space {idx} name index"))?;
+        let dataset_idx = cur.u32(&format!("space {idx} dataset index"))?;
+        let rows = cur.u64(&format!("space {idx} row count"))?;
+        let rows = usize::try_from(rows).map_err(|_| {
+            Error::ParseError(format!("qdb space {idx} row count {rows} exceeds usize"))
+        })?;
+        dirs.push(SpaceDir { name_idx, dataset_idx, rows });
+    }
+    let data_start = cur.pos;
+    let mut data_end = data_start as u64;
+    for dir in &dirs {
+        data_end = data_end
+            .checked_add(dir.rows as u64 * ROW_BYTES)
+            .ok_or_else(|| Error::ParseError("qdb directory overflows file size".into()))?;
+    }
+    let expected_total = data_end
+        .checked_add(8)
+        .ok_or_else(|| Error::ParseError("qdb directory overflows file size".into()))?;
+    match (bytes.len() as u64).cmp(&expected_total) {
+        std::cmp::Ordering::Less => {
+            return Err(Error::ParseError(format!(
+                "qdb truncated: {} byte(s) but the directory requires {expected_total}",
+                bytes.len()
+            )));
+        }
+        std::cmp::Ordering::Greater => {
+            return Err(Error::ParseError(format!(
+                "qdb has {} trailing byte(s) past the footer",
+                bytes.len() as u64 - expected_total
+            )));
+        }
+        std::cmp::Ordering::Equal => {}
+    }
+    let stored = {
+        let mut buf = [0u8; 8];
+        buf.copy_from_slice(&bytes[data_end as usize..]);
+        u64::from_le_bytes(buf)
+    };
+    let computed = crate::util::fnv1a_64(&bytes[..data_end as usize]);
+    if stored != computed {
+        return Err(Error::ParseError(format!(
+            "qdb integrity footer mismatch: stored {stored:#018x}, computed {computed:#018x}"
+        )));
+    }
+    // Recompute the identity fingerprint from the decoded metadata.
+    let dataset = parse_dataset(string_at(&strings, header.dataset_idx, "dataset")?, "header")?;
+    let strategy = string_at(&strings, header.strategy_idx, "strategy")?.to_string();
+    let plan = QdbPlan {
+        dataset,
+        shard: header.shard,
+        strategy,
+        spaces: dirs
+            .iter()
+            .enumerate()
+            .map(|(idx, dir)| {
+                Ok(QdbSpacePlan {
+                    model_name: string_at(&strings, dir.name_idx, "space name")?.to_string(),
+                    dataset: parse_dataset(
+                        string_at(&strings, dir.dataset_idx, "space dataset")?,
+                        &format!("space {idx}"),
+                    )?,
+                    rows: dir.rows,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        design_points: usize::try_from(header.design_points)
+            .map_err(|_| Error::ParseError("qdb design point count exceeds usize".into()))?,
+        evaluations: usize::try_from(header.evaluations)
+            .map_err(|_| Error::ParseError("qdb evaluation count exceeds usize".into()))?,
+    };
+    let recomputed = plan_fingerprint(&plan);
+    if recomputed != header.fingerprint {
+        return Err(Error::ParseError(format!(
+            "qdb fingerprint mismatch: header {:#018x}, recomputed {recomputed:#018x}",
+            header.fingerprint
+        )));
+    }
+    let total_rows: usize = dirs.iter().map(|dir| dir.rows).sum();
+    if total_rows as u64 != header.evaluations {
+        return Err(Error::ParseError(format!(
+            "qdb header declares {} evaluation(s) but spaces hold {total_rows}",
+            header.evaluations
+        )));
+    }
+    Ok(Parsed { header, strings, dirs, data_start })
+}
+
+fn f64_column(bytes: &[u8], base: usize, row: usize) -> f64 {
+    let start = base + row * 8;
+    let mut buf = [0u8; 8];
+    buf.copy_from_slice(&bytes[start..start + 8]);
+    f64::from_bits(u64::from_le_bytes(buf))
+}
+
+fn u32_column(bytes: &[u8], base: usize, row: usize) -> u32 {
+    let start = base + row * 4;
+    let mut buf = [0u8; 4];
+    buf.copy_from_slice(&bytes[start..start + 4]);
+    u32::from_le_bytes(buf)
+}
+
+fn decode_space(
+    bytes: &[u8],
+    strings: &[String],
+    dir: &SpaceDir,
+    base: usize,
+    space_idx: usize,
+) -> Result<ModelSpace> {
+    let rows = dir.rows;
+    // Column base offsets within this space, in declaration order.
+    let mut bases = [0usize; NUM_COLUMNS];
+    let mut cursor = base;
+    for (slot, &elem) in bases.iter_mut().zip(&COLUMN_ELEM_BYTES) {
+        *slot = cursor;
+        cursor += rows * usize::from(elem);
+    }
+    let mut evals = Vec::with_capacity(rows);
+    for row in 0..rows {
+        let metric = |col: usize| f64_column(bytes, bases[col], row);
+        let digit = |col: usize| u32_column(bytes, bases[col], row) as usize;
+        let pe_idx = u32_column(bytes, bases[16], row);
+        let pe_name = string_at(strings, pe_idx, &format!("space {space_idx} pe"))?;
+        let pe = PeType::parse(pe_name).ok_or_else(|| {
+            Error::ParseError(format!(
+                "qdb space {space_idx} row {row} names unknown PE type '{pe_name}'"
+            ))
+        })?;
+        let config = AcceleratorConfig {
+            pe,
+            rows: digit(10),
+            cols: digit(11),
+            spad: ScratchpadCfg {
+                ifmap_entries: digit(13),
+                filter_entries: digit(14),
+                psum_entries: digit(15),
+            },
+            glb_kib: digit(12),
+            dram_bw_gbps: metric(9),
+            clock_ghz: metric(8),
+        };
+        config.validate().map_err(|err| {
+            Error::ParseError(format!(
+                "qdb space {space_idx} row {row} holds an invalid config: {err}"
+            ))
+        })?;
+        evals.push(Evaluation {
+            config,
+            area_mm2: metric(0),
+            clock_ghz: metric(1),
+            latency_ms: metric(2),
+            inf_per_s: metric(3),
+            perf_per_area: metric(4),
+            energy_uj: metric(5),
+            dram_energy_uj: metric(6),
+            utilization: metric(7),
+        });
+    }
+    Ok(ModelSpace {
+        model_name: string_at(strings, dir.name_idx, "space name")?.to_string(),
+        dataset: parse_dataset(
+            string_at(strings, dir.dataset_idx, "space dataset")?,
+            &format!("space {space_idx}"),
+        )?,
+        evals,
+    })
+}
+
+/// Parse and fully verify a qdb file's metadata without decoding any rows.
+pub fn inspect_qdb(path: &Path) -> Result<QdbInfo> {
+    let bytes = fs::read(path)?;
+    let parsed = parse_verified(&bytes)
+        .map_err(|err| Error::ParseError(format!("{}: {err}", path.display())))?;
+    let dataset =
+        parse_dataset(string_at(&parsed.strings, parsed.header.dataset_idx, "dataset")?, "header")?;
+    let strategy =
+        string_at(&parsed.strings, parsed.header.strategy_idx, "strategy")?.to_string();
+    let spaces = parsed
+        .dirs
+        .iter()
+        .map(|dir| {
+            Ok((string_at(&parsed.strings, dir.name_idx, "space name")?.to_string(), dir.rows))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(QdbInfo {
+        schema: QDB_SCHEMA_VERSION,
+        fingerprint: parsed.header.fingerprint,
+        dataset,
+        shard: parsed.header.shard,
+        strategy,
+        design_points: parsed.header.design_points as usize,
+        evaluations: parsed.header.evaluations as usize,
+        spaces,
+        bytes: bytes.len(),
+    })
+}
+
+impl EvalDatabase {
+    /// Write this database in the binary columnar `.qdb` format. Implemented
+    /// via [`QdbWriter`], so convert-path and stream-path files are
+    /// byte-identical for the same content.
+    pub fn save_qdb(&self, path: &Path) -> Result<()> {
+        let plan = QdbPlan::from_database(self);
+        let mut writer = QdbWriter::create(path, &plan)?;
+        for (idx, space) in self.spaces.iter().enumerate() {
+            for eval in &space.evals {
+                writer.append(idx, eval)?;
+            }
+        }
+        writer.finish()
+    }
+
+    /// Load a `.qdb` file, verifying the magic, schema, exact length, footer
+    /// hash, and identity fingerprint before decoding any column.
+    ///
+    /// The transient `wall_seconds`/`workers` stats are not carried by the
+    /// format (mirroring the JSON serializer, which drops them so identical
+    /// campaigns always produce byte-identical files).
+    pub fn load_qdb(path: &Path) -> Result<Self> {
+        let bytes = fs::read(path)?;
+        let parsed = parse_verified(&bytes)
+            .map_err(|err| Error::ParseError(format!("{}: {err}", path.display())))?;
+        let dataset = parse_dataset(
+            string_at(&parsed.strings, parsed.header.dataset_idx, "dataset")?,
+            "header",
+        )?;
+        let strategy =
+            string_at(&parsed.strings, parsed.header.strategy_idx, "strategy")?.to_string();
+        let mut spaces = Vec::with_capacity(parsed.dirs.len());
+        let mut base = parsed.data_start;
+        for (idx, dir) in parsed.dirs.iter().enumerate() {
+            let space = decode_space(&bytes, &parsed.strings, dir, base, idx)
+                .map_err(|err| Error::ParseError(format!("{}: {err}", path.display())))?;
+            base += dir.rows * ROW_BYTES as usize;
+            spaces.push(space);
+        }
+        Ok(EvalDatabase {
+            dataset,
+            shard: parsed.header.shard,
+            strategy,
+            spaces,
+            stats: CampaignStats {
+                design_points: parsed.header.design_points as usize,
+                evaluations: parsed.header.evaluations as usize,
+                wall_seconds: 0.0,
+                workers: 0,
+            },
+        })
+    }
+
+    /// Load a database from either format, sniffing the qdb magic first and
+    /// falling back to canonical JSON.
+    pub fn load_any(path: &Path) -> Result<Self> {
+        let mut probe = [0u8; QDB_MAGIC.len()];
+        let is_qdb = fs::File::open(path)
+            .and_then(|mut file| file.read_exact(&mut probe))
+            .map(|()| probe == QDB_MAGIC)
+            .unwrap_or(false);
+        if is_qdb {
+            EvalDatabase::load_qdb(path)
+        } else {
+            EvalDatabase::load(path)
+        }
+    }
+
+    /// Save in the format implied by the path extension: `.qdb` → binary
+    /// columnar, anything else → canonical JSON.
+    pub fn save_auto(&self, path: &Path) -> Result<()> {
+        if path.extension().is_some_and(|ext| ext == "qdb") {
+            self.save_qdb(path)
+        } else {
+            self.save(path)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::ModelKind;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("qadam_qdb_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_eval(seed: u64) -> Evaluation {
+        let config = AcceleratorConfig { rows: 8 + (seed as usize % 8), ..Default::default() };
+        crate::dse::evaluate(
+            &config,
+            &crate::dnn::model_for(ModelKind::ResNet20, Dataset::Cifar10),
+            seed,
+        )
+    }
+
+    fn sample_db(per_space: usize) -> EvalDatabase {
+        let spaces = vec![
+            ModelSpace {
+                model_name: "ResNet-20".into(),
+                dataset: Dataset::Cifar10,
+                evals: (0..per_space).map(|i| sample_eval(i as u64)).collect(),
+            },
+            ModelSpace {
+                model_name: "ResNet-20@w0.5d2".into(),
+                dataset: Dataset::Cifar10,
+                evals: (0..per_space).map(|i| sample_eval(100 + i as u64)).collect(),
+            },
+        ];
+        EvalDatabase {
+            dataset: Dataset::Cifar10,
+            shard: (0, 1),
+            strategy: "exhaustive".into(),
+            spaces,
+            stats: CampaignStats {
+                design_points: per_space,
+                evaluations: per_space * 2,
+                wall_seconds: 0.0,
+                workers: 0,
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_json_byte_identical() {
+        let dir = temp_dir("roundtrip");
+        let db = sample_db(5);
+        let json_path = dir.join("db.json");
+        let qdb_path = dir.join("db.qdb");
+        db.save(&json_path).unwrap();
+        db.save_qdb(&qdb_path).unwrap();
+        let reloaded = EvalDatabase::load_qdb(&qdb_path).unwrap();
+        let rt_path = dir.join("rt.json");
+        reloaded.save(&rt_path).unwrap();
+        // The JSON serializer drops the transient wall_seconds/workers stats,
+        // so JSON → qdb → JSON must reproduce the original file byte for byte.
+        let original = fs::read_to_string(&json_path).unwrap();
+        let round = fs::read_to_string(&rt_path).unwrap();
+        assert_eq!(original, round);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn odd_f64_values_survive_bit_exact() {
+        let dir = temp_dir("bits");
+        let mut db = sample_db(1);
+        {
+            let eval = &mut db.spaces[0].evals[0];
+            eval.energy_uj = f64::from_bits(0x3FF0_0000_0000_0001); // 1.0 + 1 ulp
+            eval.latency_ms = 1.0e-300;
+            eval.utilization = 0.1 + 0.2; // non-terminating in decimal
+        }
+        let bits_before: Vec<u64> = {
+            let eval = &db.spaces[0].evals[0];
+            [eval.energy_uj, eval.latency_ms, eval.utilization]
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        };
+        let path = dir.join("bits.qdb");
+        db.save_qdb(&path).unwrap();
+        let loaded = EvalDatabase::load_qdb(&path).unwrap();
+        let eval = &loaded.spaces[0].evals[0];
+        let bits_after: Vec<u64> = [eval.energy_uj, eval.latency_ms, eval.utilization]
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        assert_eq!(bits_before, bits_after);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn inspect_reports_shapes() {
+        let dir = temp_dir("inspect");
+        let db = sample_db(3);
+        let path = dir.join("db.qdb");
+        db.save_qdb(&path).unwrap();
+        let info = inspect_qdb(&path).unwrap();
+        assert_eq!(info.schema, QDB_SCHEMA_VERSION);
+        assert_eq!(info.evaluations, 6);
+        assert_eq!(info.design_points, 3);
+        assert_eq!(info.spaces.len(), 2);
+        assert_eq!(info.spaces[0], ("ResNet-20".to_string(), 3));
+        assert_eq!(info.spaces[1], ("ResNet-20@w0.5d2".to_string(), 3));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_any_sniffs_both_formats() {
+        let dir = temp_dir("sniff");
+        let db = sample_db(2);
+        let json_path = dir.join("db.json");
+        let qdb_path = dir.join("db.qdb");
+        db.save(&json_path).unwrap();
+        db.save_qdb(&qdb_path).unwrap();
+        let a = EvalDatabase::load_any(&json_path).unwrap();
+        let b = EvalDatabase::load_any(&qdb_path).unwrap();
+        assert_eq!(a, b);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_auto_picks_format_by_extension() {
+        let dir = temp_dir("auto");
+        let db = sample_db(1);
+        let qdb_path = dir.join("out.qdb");
+        let json_path = dir.join("out.json");
+        db.save_auto(&qdb_path).unwrap();
+        db.save_auto(&json_path).unwrap();
+        let qdb_bytes = fs::read(&qdb_path).unwrap();
+        assert!(is_qdb_bytes(&qdb_bytes));
+        let json_text = fs::read_to_string(&json_path).unwrap();
+        assert!(json_text.trim_start().starts_with('{'));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_byte_is_detected() {
+        let dir = temp_dir("corrupt");
+        let db = sample_db(2);
+        let path = dir.join("db.qdb");
+        db.save_qdb(&path).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        let flipped = dir.join("flipped.qdb");
+        fs::write(&flipped, &bytes).unwrap();
+        let err = EvalDatabase::load_qdb(&flipped).expect_err("corruption must be detected");
+        assert_eq!(err.kind(), "parse_error");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_rejects_overfill_and_underfill() {
+        let dir = temp_dir("fill");
+        let db = sample_db(1);
+        let plan = QdbPlan::from_database(&db);
+        let path = dir.join("fill.qdb");
+        let mut writer = QdbWriter::create(&path, &plan).unwrap();
+        let eval = sample_eval(1);
+        writer.append(0, &eval).unwrap();
+        let err = writer.append(0, &eval).expect_err("overfill must error");
+        assert_eq!(err.kind(), "invalid_config");
+        let err = writer.finish().expect_err("underfilled space 1 must fail finish");
+        assert_eq!(err.kind(), "invalid_config");
+        assert!(!path.exists(), "finish failure must not publish the file");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn streamed_write_matches_convert_path_bytes() {
+        let dir = temp_dir("stream_eq");
+        let db = sample_db(4);
+        let a = dir.join("a.qdb");
+        let b = dir.join("b.qdb");
+        db.save_qdb(&a).unwrap();
+        // Interleave appends across spaces — byte layout must not depend on
+        // append order, only on (space, row) position.
+        let plan = QdbPlan::from_database(&db);
+        let mut writer = QdbWriter::create(&b, &plan).unwrap();
+        for row in 0..4 {
+            for (idx, space) in db.spaces.iter().enumerate() {
+                writer.append(idx, &space.evals[row]).unwrap();
+            }
+        }
+        writer.finish().unwrap();
+        let bytes_a = fs::read(&a).unwrap();
+        let bytes_b = fs::read(&b).unwrap();
+        assert_eq!(bytes_a, bytes_b);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn envelope_probe_accepts_and_rejects() {
+        let dir = temp_dir("envelope");
+        let db = sample_db(1);
+        let path = dir.join("db.qdb");
+        db.save_qdb(&path).unwrap();
+        let bytes = fs::read(&path).unwrap();
+        check_qdb_envelope(&bytes).unwrap();
+        assert!(check_qdb_envelope(b"not a qdb").is_err());
+        let mut wrong_schema = bytes.clone();
+        wrong_schema[8] = 99;
+        let err = check_qdb_envelope(&wrong_schema).expect_err("schema must be exact");
+        assert_eq!(err.kind(), "parse_error");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

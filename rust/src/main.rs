@@ -20,7 +20,7 @@ use qadam::dataflow::{map_model, Dataflow};
 use qadam::dnn::{model_for, Dataset, ModelKind};
 use qadam::dse;
 use qadam::energy::energy_of;
-use qadam::explore::{EvalDatabase, PointCache};
+use qadam::explore::{inspect_qdb, EvalDatabase, PointCache};
 use qadam::obs::view::{render_diff, render_merge, render_show};
 use qadam::obs::{sidecar_path, TimingSidecar, Trace};
 use qadam::ppa::PpaModel;
@@ -73,8 +73,8 @@ fn cli() -> Command {
                 .opt("shard", "", "run only shard I of N (format: I/N)")
                 .opt("strategy", "exhaustive", "exhaustive|random:N[:SEED]|halving:KEEP[:ROUNDS]")
                 .opt("frontier", "", "write the streaming Pareto frontier to this JSON file")
-                .opt("save", "", "write the evaluation database to this JSON file")
-                .opt("load", "", "summarize a saved database instead of running")
+                .opt("save", "", "write the evaluation database here (.qdb = columnar binary)")
+                .opt("load", "", "summarize a saved database (JSON or .qdb) instead of running")
                 .opt("resume", "", "checkpoint journal path (resumes if present)")
                 .opt("every", "16", "flush the checkpoint journal every N points")
                 .opt("cache", "", "content-addressed point-cache file (reused & updated)")
@@ -123,17 +123,29 @@ fn cli() -> Command {
             ),
         )
         .sub(
+            Command::new("db", "evaluation-database utilities (canonical JSON <-> qadam.qdb)")
+                .sub(Command::new(
+                    "convert",
+                    "convert between formats: <in> <out> (a .qdb output extension selects \
+                     the columnar binary)",
+                ))
+                .sub(Command::new(
+                    "inspect",
+                    "print a .qdb file's header, space shapes, and integrity fingerprint",
+                )),
+        )
+        .sub(
             Command::new("bench", "bench-artifact utilities (see DESIGN.md §Bench artifacts)")
                 .sub(
                     Command::new(
                         "merge",
                         "merge per-target artifacts (files or dirs) into one trajectory file",
                     )
-                    .opt("out", "BENCH_PR7.json", "merged artifact output path"),
+                    .opt("out", "BENCH_PR10.json", "merged artifact output path"),
                 )
                 .sub(
                     Command::new("diff", "compare two artifacts: <old.json> <new.json>")
-                        .opt("threshold", "10", "p50 regression threshold, percent")
+                        .opt("threshold", "10", "p50 regression/improvement threshold, percent")
                         .flag("strict", "exit nonzero when a regression exceeds the threshold"),
                 )
                 .sub(Command::new("show", "print one artifact's records as a table")),
@@ -687,7 +699,7 @@ fn main() -> Result<()> {
                         )));
                     }
                 }
-                let db = EvalDatabase::load(Path::new(&load_path))?;
+                let db = EvalDatabase::load_any(Path::new(&load_path))?;
                 println!(
                     "loaded {} design points x {} models from {load_path}",
                     db.stats.design_points,
@@ -696,7 +708,7 @@ fn main() -> Result<()> {
                 summarize_db(&db)?;
                 let save_path = matches.get_str("save");
                 if !save_path.is_empty() {
-                    db.save(Path::new(save_path))?;
+                    db.save_auto(Path::new(save_path))?;
                     println!("saved evaluation database to {save_path}");
                 }
             } else {
@@ -937,6 +949,53 @@ fn main() -> Result<()> {
         }
         "spec" => {
             println!("qadam spec init [--out FILE]  — emit a commented starter spec");
+        }
+        "db" => {
+            println!(
+                "qadam db convert <in> <out>  — JSON <-> qadam.qdb (format by output extension)"
+            );
+            println!("qadam db inspect <file.qdb>  — header, space shapes, integrity fingerprint");
+        }
+        "convert" if parent == "db" => {
+            let [in_path, out_path] = matches.positional.as_slice() else {
+                return Err(Error::InvalidConfig(
+                    "usage: qadam db convert <in> <out> (a .qdb output extension selects the \
+                     columnar binary; anything else writes canonical JSON)"
+                        .into(),
+                ));
+            };
+            let db = EvalDatabase::load_any(Path::new(in_path))?;
+            db.save_auto(Path::new(out_path))?;
+            let bytes = std::fs::metadata(Path::new(out_path))?.len();
+            println!(
+                "converted {in_path} -> {out_path}: {} design points x {} spaces, {bytes} bytes",
+                db.stats.design_points,
+                db.spaces.len()
+            );
+        }
+        "inspect" if parent == "db" => {
+            let file = spec_path(&matches, "qadam db inspect <file.qdb>")?;
+            let info = inspect_qdb(Path::new(&file))?;
+            println!(
+                "{file}: qadam.qdb schema {}, fingerprint {:016x}, {} bytes",
+                info.schema, info.fingerprint, info.bytes
+            );
+            println!(
+                "  dataset {} — shard {}/{}, strategy '{}', {} design points, {} evaluations \
+                 across {} space(s)",
+                info.dataset.name(),
+                info.shard.0,
+                info.shard.1,
+                info.strategy,
+                info.design_points,
+                info.evaluations,
+                info.spaces.len()
+            );
+            let mut table = Table::new(&["space", "rows"]);
+            for (name, rows) in &info.spaces {
+                table.row(&[name.clone(), rows.to_string()]);
+            }
+            print!("{}", table.render());
         }
         "bench" => {
             println!("qadam bench merge <artifact|dir>... [--out FILE]  — build a trajectory file");
@@ -1198,7 +1257,7 @@ fn main() -> Result<()> {
             } else {
                 // Figures 4-6 consume only the persisted evaluations, so a
                 // saved database reproduces the live-run figure exactly.
-                let db = EvalDatabase::load(Path::new(load_path))?;
+                let db = EvalDatabase::load_any(Path::new(load_path))?;
                 match matches.get_str("fig") {
                     "4" => report::fig4_from_db(&db)?,
                     "5" => report::fig5_from_db_with(&db, &book)?,

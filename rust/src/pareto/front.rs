@@ -263,9 +263,28 @@ impl<P> FrontCore<P> {
     /// # Panics
     /// If `point` disagrees with the axis count.
     pub fn insert(&mut self, point: Vec<f64>, payload: P) -> InsertOutcome {
-        assert_eq!(point.len(), self.orientations.len());
         let seq = self.offered;
         self.offered += 1;
+        self.admit(seq, point, payload)
+    }
+
+    /// Offer one point under an explicit, caller-assigned sequence number —
+    /// the sharded building block of [`Self::merge`]. A worker folding a
+    /// contiguous slice of a larger point set offers each point with its
+    /// *global* index so that tie-breaks (`sorted`, `indices`, budget
+    /// eviction order) are decided exactly as the sequential fold would
+    /// decide them. [`Self::offered`] still counts offers, so summing it
+    /// across shards reproduces the sequential count.
+    ///
+    /// # Panics
+    /// If `point` disagrees with the axis count.
+    pub fn offer_seq(&mut self, seq: usize, point: Vec<f64>, payload: P) -> InsertOutcome {
+        self.offered += 1;
+        self.admit(seq, point, payload)
+    }
+
+    fn admit(&mut self, seq: usize, point: Vec<f64>, payload: P) -> InsertOutcome {
+        assert_eq!(point.len(), self.orientations.len());
         if point.iter().any(|v| v.is_nan()) {
             return InsertOutcome::Invalid;
         }
@@ -313,6 +332,95 @@ impl<P> FrontCore<P> {
         let seq = self.offered;
         self.offered += 1;
         self.entries.push(FrontEntry { point, seq, payload });
+    }
+
+    /// Merge two exact-mode sub-fronts built over disjoint shards of one
+    /// point set (each point offered via [`Self::offer_seq`] with its global
+    /// index). Dominance-front merge is associative: the result is the
+    /// non-dominated subset of the union, with entries in ascending global
+    /// sequence order — which in exact mode is **bit-identical** (entries,
+    /// `sorted`, `indices`, and `offered`) to folding the whole set through
+    /// one sequential [`Self::insert`] loop in ascending index order.
+    ///
+    /// `pruned` is the one counter that cannot be reproduced: the sequential
+    /// count depends on how long a doomed point sat on the front before a
+    /// dominator arrived, which sharding changes by construction. The merged
+    /// count (shard prunes + cross-merge drops) still totals "offers that
+    /// are not on the final front", but is not the sequential number.
+    ///
+    /// # Panics
+    /// If the two fronts disagree on orientations, or either uses the
+    /// epsilon or budget relaxation — epsilon acceptance and eviction are
+    /// order-dependent, so only exact mode merges deterministically.
+    pub fn merge(mut self, mut other: Self) -> Self {
+        assert_eq!(
+            self.orientations, other.orientations,
+            "merged fronts must share axis orientations"
+        );
+        assert!(
+            self.epsilon.is_none()
+                && other.epsilon.is_none()
+                && self.capacity.is_none()
+                && other.capacity.is_none(),
+            "only exact-mode fronts merge deterministically"
+        );
+        let orientations = &self.orientations;
+        let survives = |entry: &FrontEntry<P>, against: &[FrontEntry<P>]| {
+            !against.iter().any(|e| dominates(&e.point, &entry.point, orientations))
+        };
+        let before = self.entries.len() + other.entries.len();
+        // Cross-prune each side against the other, then interleave by global
+        // sequence number. Ties (exactly equal points) never dominate, so
+        // duplicates survive the merge exactly as they survive insertion.
+        let mut merged: Vec<FrontEntry<P>> = Vec::with_capacity(before);
+        let keep_self: Vec<bool> =
+            self.entries.iter().map(|e| survives(e, &other.entries)).collect();
+        let keep_other: Vec<bool> =
+            other.entries.iter().map(|e| survives(e, &self.entries)).collect();
+        merged.extend(
+            self.entries
+                .drain(..)
+                .zip(keep_self)
+                .filter_map(|(e, keep)| keep.then_some(e)),
+        );
+        merged.extend(
+            other
+                .entries
+                .drain(..)
+                .zip(keep_other)
+                .filter_map(|(e, keep)| keep.then_some(e)),
+        );
+        merged.sort_by_key(|e| e.seq);
+        let cross_pruned = before - merged.len();
+        Self {
+            orientations: std::mem::take(&mut self.orientations),
+            epsilon: None,
+            capacity: None,
+            entries: merged,
+            offered: self.offered + other.offered,
+            pruned: self.pruned + other.pruned + cross_pruned,
+            evicted: 0,
+        }
+    }
+
+    /// Reduce per-shard sub-fronts with a deterministic pairwise tree of
+    /// [`Self::merge`] calls (adjacent pairs per round). Associativity makes
+    /// the shape irrelevant to the result; the balanced tree keeps each
+    /// round's fronts small. Returns `None` for an empty shard list.
+    pub fn merge_all(shards: Vec<Self>) -> Option<Self> {
+        let mut round = shards;
+        while round.len() > 1 {
+            let mut next = Vec::with_capacity(round.len() / 2 + 1);
+            let mut iter = round.into_iter();
+            while let Some(left) = iter.next() {
+                match iter.next() {
+                    Some(right) => next.push(left.merge(right)),
+                    None => next.push(left),
+                }
+            }
+            round = next;
+        }
+        round.pop()
     }
 
     /// 2-D hypervolume dominated by the front relative to `reference`
@@ -466,6 +574,28 @@ impl<const K: usize, P> ParetoFront<K, P> {
     /// Offer one point — see [`FrontCore::insert`].
     pub fn insert(&mut self, point: [f64; K], payload: P) -> InsertOutcome {
         self.core.insert(point.to_vec(), payload)
+    }
+
+    /// Offer one point under an explicit global sequence number — see
+    /// [`FrontCore::offer_seq`].
+    pub fn offer_seq(&mut self, seq: usize, point: [f64; K], payload: P) -> InsertOutcome {
+        self.core.offer_seq(seq, point.to_vec(), payload)
+    }
+
+    /// Merge two exact-mode sub-fronts built over disjoint shards — see
+    /// [`FrontCore::merge`] for the determinism contract.
+    ///
+    /// # Panics
+    /// If either front uses the epsilon or budget relaxation.
+    pub fn merge(self, other: Self) -> Self {
+        Self { core: self.core.merge(other.core) }
+    }
+
+    /// Deterministic pairwise tree-reduce over per-shard sub-fronts — see
+    /// [`FrontCore::merge_all`].
+    pub fn merge_all(shards: Vec<Self>) -> Option<Self> {
+        FrontCore::merge_all(shards.into_iter().map(|s| s.core).collect())
+            .map(|core| Self { core })
     }
 
     /// Number of entries currently on the front.
@@ -648,5 +778,127 @@ mod tests {
         }
         let seqs: Vec<usize> = front.entries().iter().map(|e| e.seq).collect();
         assert_eq!(seqs, vec![1, 2], "both maxima survive, dominated values pruned");
+    }
+
+    /// Deterministic pseudo-random tie-heavy grid: small integer coordinates
+    /// force duplicates, ties, and dominated points in every shard.
+    fn tie_heavy_points(n: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut state = seed.max(1);
+        (0..n)
+            .map(|_| {
+                let mut next = || {
+                    state ^= state << 13;
+                    state ^= state >> 7;
+                    state ^= state << 17;
+                    (state % 7) as f64
+                };
+                vec![next(), next()]
+            })
+            .collect()
+    }
+
+    fn sequential_fold(points: &[Vec<f64>]) -> FrontCore<usize> {
+        let mut front = FrontCore::new(vec![Maximize, Minimize]);
+        for (i, p) in points.iter().enumerate() {
+            front.insert(p.clone(), i);
+        }
+        front
+    }
+
+    fn sharded_fold(points: &[Vec<f64>], shards: usize) -> FrontCore<usize> {
+        let chunk = points.len().div_ceil(shards).max(1);
+        let subs: Vec<FrontCore<usize>> = points
+            .chunks(chunk)
+            .enumerate()
+            .map(|(s, slice)| {
+                let mut front = FrontCore::new(vec![Maximize, Minimize]);
+                for (off, p) in slice.iter().enumerate() {
+                    front.offer_seq(s * chunk + off, p.clone(), s * chunk + off);
+                }
+                front
+            })
+            .collect();
+        FrontCore::merge_all(subs).unwrap_or_else(|| FrontCore::new(vec![Maximize, Minimize]))
+    }
+
+    fn assert_bit_identical(a: &FrontCore<usize>, b: &FrontCore<usize>) {
+        assert_eq!(a.offered(), b.offered());
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.indices(), b.indices());
+        for (x, y) in a.entries().iter().zip(b.entries()) {
+            assert_eq!(x.seq, y.seq);
+            assert_eq!(x.payload, y.payload);
+            let xb: Vec<u64> = x.point.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u64> = y.point.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb);
+        }
+    }
+
+    #[test]
+    fn merged_front_is_bit_identical_to_sequential_on_tie_heavy_grids() {
+        for seed in [1, 7, 99] {
+            let points = tie_heavy_points(500, seed);
+            let sequential = sequential_fold(&points);
+            for shards in [1, 2, 3, 8, 31] {
+                let merged = sharded_fold(&points, shards);
+                assert_bit_identical(&sequential, &merged);
+            }
+        }
+    }
+
+    #[test]
+    fn merged_indices_match_batch_reference() {
+        let points = tie_heavy_points(300, 42);
+        let merged = sharded_fold(&points, 4);
+        let reference = crate::dse::pareto_front_reference(&points, &[Maximize, Minimize]);
+        assert_eq!(merged.indices(), reference);
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let points = tie_heavy_points(120, 5);
+        let chunk = 40;
+        let make = |range: std::ops::Range<usize>| {
+            let mut front = FrontCore::new(vec![Maximize, Minimize]);
+            for i in range {
+                front.offer_seq(i, points[i].clone(), i);
+            }
+            front
+        };
+        let (a, b, c) = (make(0..chunk), make(chunk..2 * chunk), make(2 * chunk..points.len()));
+        let left = a.clone().merge(b.clone()).merge(c.clone());
+        let right = a.merge(b.merge(c));
+        assert_bit_identical(&left, &right);
+    }
+
+    #[test]
+    fn merge_keeps_cross_shard_duplicates() {
+        let mut a = FrontCore::new(vec![Maximize, Minimize]);
+        let mut b = FrontCore::new(vec![Maximize, Minimize]);
+        a.offer_seq(0, vec![1.0, 1.0], ());
+        b.offer_seq(1, vec![1.0, 1.0], ());
+        let merged = a.merge(b);
+        assert_eq!(merged.len(), 2, "exact ties never dominate, even across shards");
+        assert_eq!(merged.indices(), vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exact-mode")]
+    fn merge_rejects_epsilon_fronts() {
+        let a = FrontCore::<()>::new(vec![Maximize, Minimize]).with_epsilon(vec![0.1, 0.1]);
+        let b = FrontCore::<()>::new(vec![Maximize, Minimize]);
+        let _ = a.merge(b);
+    }
+
+    #[test]
+    fn typed_wrapper_merges() {
+        let mut a = ParetoFront::<2, usize>::new([Maximize, Minimize]);
+        let mut b = ParetoFront::<2, usize>::new([Maximize, Minimize]);
+        a.offer_seq(0, [1.0, 1.0], 0);
+        a.offer_seq(1, [2.0, 2.0], 1);
+        b.offer_seq(2, [1.5, 0.5], 2); // dominates (1.0, 1.0) across shards
+        let merged = ParetoFront::merge_all(vec![a, b]).unwrap();
+        assert_eq!(merged.indices(), vec![2, 1]);
+        assert_eq!(merged.offered(), 3);
     }
 }

@@ -12,10 +12,12 @@
 //! (`qadam dse --frontier front.json`), so saved fronts diff cleanly.
 
 use std::path::Path;
+use std::sync::{Mutex, PoisonError};
 
 use super::front::{InsertOutcome, Orientation, ParetoFront};
 use crate::dse::Evaluation;
 use crate::error::{Error, Result};
+use crate::explore::EvalDatabase;
 use crate::explore::persist::{
     check_envelope, envelope, field_arr, field_str, field_usize, write_atomic,
 };
@@ -119,6 +121,49 @@ pub struct FrontSample {
     pub index: usize,
     /// The complete evaluation that put this point on the front.
     pub eval: Evaluation,
+}
+
+/// Fold a slice of evaluations into the campaign's two-objective front
+/// (perf/area ↑, energy ↓) with sharded workers: each worker builds an
+/// exact-mode sub-front over a contiguous chunk, offering every point under
+/// its *global* slice index ([`ParetoFront::offer_seq`]), and a
+/// deterministic tree-merge ([`ParetoFront::merge_all`]) reduces the shards.
+/// The result is bit-identical — entries, plotting order, indices, and
+/// `offered` — to folding the slice through one sequential
+/// [`ParetoFront::insert`] loop, for any worker count.
+///
+/// Each archived [`FrontSample::index`] is the point's position in `evals`,
+/// which for a whole-space exhaustive campaign database equals the sweep's
+/// cross-product index.
+pub fn parallel_model_front(evals: &[Evaluation], workers: usize) -> ParetoFront<2, FrontSample> {
+    let workers = workers.clamp(1, evals.len().max(1));
+    let chunk = evals.len().div_ceil(workers).max(1);
+    let shards: Mutex<Vec<(usize, ParetoFront<2, FrontSample>)>> =
+        Mutex::new(Vec::with_capacity(workers));
+    std::thread::scope(|scope| {
+        for (shard_idx, slice) in evals.chunks(chunk).enumerate() {
+            let shards = &shards;
+            scope.spawn(move || {
+                let mut front = ParetoFront::new(OBJECTIVES);
+                let base = shard_idx * chunk;
+                for (off, eval) in slice.iter().enumerate() {
+                    let index = base + off;
+                    front.offer_seq(
+                        index,
+                        [eval.perf_per_area, eval.energy_uj],
+                        FrontSample { index, eval: eval.clone() },
+                    );
+                }
+                shards.lock().unwrap_or_else(PoisonError::into_inner).push((shard_idx, front));
+            });
+        }
+    });
+    let mut shards = shards.into_inner().unwrap_or_else(PoisonError::into_inner);
+    // Merge in shard order so the reduction tree (and every internal
+    // counter, not just the provably order-free entry set) is deterministic.
+    shards.sort_by_key(|(idx, _)| *idx);
+    ParetoFront::merge_all(shards.into_iter().map(|(_, front)| front).collect())
+        .unwrap_or_else(|| ParetoFront::new(OBJECTIVES))
 }
 
 /// One model's streaming front.
@@ -227,6 +272,34 @@ impl CampaignFrontier {
     /// The campaign this frontier is bound to, once [`Self::begin`] ran.
     pub fn binding(&self) -> Option<&FrontierBinding> {
         self.binding.as_ref()
+    }
+
+    /// Build a frontier post-hoc from a saved campaign database with
+    /// [`parallel_model_front`] workers — the batch companion to streaming a
+    /// campaign with a live frontier attached, for databases that were
+    /// swept without one (`qadam pareto` over a million-point `.qdb`).
+    ///
+    /// The result is unbound (no campaign identity is stored in a
+    /// database), exact-mode, and holds one front per database *space* —
+    /// which for a joint hardware × model campaign means one front per
+    /// scaled-model variant, a finer decomposition than the per-base-model
+    /// fronts a live frontier maintains.
+    pub fn from_database(db: &EvalDatabase, workers: usize) -> Self {
+        let models = db
+            .spaces
+            .iter()
+            .map(|space| ModelFrontier {
+                model_name: space.model_name.clone(),
+                front: parallel_model_front(&space.evals, workers),
+            })
+            .collect();
+        CampaignFrontier {
+            epsilon: None,
+            capacity: None,
+            binding: None,
+            observed: db.stats.design_points,
+            models,
+        }
     }
 
     /// Delivery positions consumed by [`Self::observe_at`] so far.
@@ -531,6 +604,92 @@ mod tests {
     fn wrong_kind_is_rejected() {
         let wrong = Json::parse(r#"{"kind": "qadam.evaldb", "schema": 3}"#).unwrap();
         assert_eq!(CampaignFrontier::from_json(&wrong).unwrap_err().kind(), "parse_error");
+    }
+
+    #[test]
+    fn parallel_front_matches_sequential_for_any_worker_count() {
+        // Real evaluations over a tie-heavy rows sweep (repeated rows give
+        // duplicate metric points via the shared synthesis seed).
+        let evals: Vec<Evaluation> =
+            (0..40).map(|i| eval_with(8 + (i % 5) * 4, 7)).collect();
+        let mut sequential = ParetoFront::new(OBJECTIVES);
+        for (i, eval) in evals.iter().enumerate() {
+            sequential.insert(
+                [eval.perf_per_area, eval.energy_uj],
+                FrontSample { index: i, eval: eval.clone() },
+            );
+        }
+        for workers in [1, 2, 3, 8, 64] {
+            let parallel = parallel_model_front(&evals, workers);
+            assert_eq!(parallel.offered(), sequential.offered(), "workers={workers}");
+            assert_eq!(parallel.indices(), sequential.indices(), "workers={workers}");
+            for (a, b) in parallel.entries().iter().zip(sequential.entries()) {
+                assert_eq!(a.seq, b.seq);
+                assert_eq!(a.payload.index, b.payload.index);
+                assert_eq!(a.point[0].to_bits(), b.point[0].to_bits());
+                assert_eq!(a.point[1].to_bits(), b.point[1].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_front_matches_batch_reference() {
+        let evals: Vec<Evaluation> = (0..30).map(|i| eval_with(4 + i, 3)).collect();
+        let points: Vec<Vec<f64>> =
+            evals.iter().map(|e| vec![e.perf_per_area, e.energy_uj]).collect();
+        let reference = crate::dse::pareto_front_reference(&points, &OBJECTIVES);
+        let parallel = parallel_model_front(&evals, 4);
+        assert_eq!(parallel.indices(), reference);
+    }
+
+    #[test]
+    fn parallel_front_of_empty_slice_is_empty() {
+        let front = parallel_model_front(&[], 8);
+        assert!(front.is_empty());
+        assert_eq!(front.offered(), 0);
+    }
+
+    #[test]
+    fn from_database_builds_per_space_fronts() {
+        use crate::explore::{CampaignStats, ModelSpace};
+        let db = EvalDatabase {
+            dataset: Dataset::Cifar10,
+            shard: (0, 1),
+            strategy: "exhaustive".into(),
+            spaces: vec![
+                ModelSpace {
+                    model_name: "A".into(),
+                    dataset: Dataset::Cifar10,
+                    evals: (0..12).map(|i| eval_with(8 + i, 7)).collect(),
+                },
+                ModelSpace {
+                    model_name: "B".into(),
+                    dataset: Dataset::Cifar10,
+                    evals: (0..12).map(|i| eval_with(8 + i, 9)).collect(),
+                },
+            ],
+            stats: CampaignStats {
+                design_points: 12,
+                evaluations: 24,
+                wall_seconds: 0.0,
+                workers: 0,
+            },
+        };
+        let frontier = CampaignFrontier::from_database(&db, 3);
+        assert_eq!(frontier.models().len(), 2);
+        assert_eq!(frontier.observed(), 12);
+        assert!(frontier.binding().is_none());
+        for (model, space) in frontier.models().iter().zip(&db.spaces) {
+            assert_eq!(model.model_name(), space.model_name);
+            let mut sequential = ParetoFront::new(OBJECTIVES);
+            for (i, eval) in space.evals.iter().enumerate() {
+                sequential.insert(
+                    [eval.perf_per_area, eval.energy_uj],
+                    FrontSample { index: i, eval: eval.clone() },
+                );
+            }
+            assert_eq!(model.front().indices(), sequential.indices());
+        }
     }
 
     #[test]

@@ -31,7 +31,10 @@ pub mod frontier;
 pub mod strategy;
 
 pub use front::{dominates, FrontCore, FrontEntry, InsertOutcome, Orientation, ParetoFront};
-pub use frontier::{CampaignFrontier, FrontierBinding, FrontSample, ModelFrontier, OBJECTIVES};
+pub use frontier::{
+    parallel_model_front, CampaignFrontier, FrontierBinding, FrontSample, ModelFrontier,
+    OBJECTIVES,
+};
 pub use strategy::{
     proxy_perf_per_area, Exhaustive, RandomSample, RoundReport, Selection, Strategy,
     StrategyContext, SuccessiveHalving,

@@ -212,7 +212,7 @@ impl ResolvedCampaign {
         };
         let saved_db = match &plan.db {
             Some(path) => {
-                db.save(path)?;
+                db.save_auto(path)?;
                 Some(path.clone())
             }
             None => None,

@@ -1009,22 +1009,30 @@ fn resume_mismatch(ctx: &LintContext<'_>) -> Vec<Draft> {
     // lineage (DESIGN.md §11), so its envelope is checked exactly — the
     // ranged check would reject every healthy schema-1 trace.
     let exact_schema = Some(crate::obs::TRACE_SCHEMA);
-    for (key, path, kind, exact, loaded) in [
+    for (key, path, mut kind, exact, loaded) in [
         ("db", &persist.db, "qadam.evaldb", None, false),
         ("cache", &persist.cache, "qadam.pointcache", None, true),
         ("trace", &persist.trace, crate::obs::TRACE_KIND, exact_schema, false),
     ] {
         let Some(path) = path else { continue };
-        let Ok(text) = std::fs::read_to_string(path) else { continue };
-        let is_kind = Json::parse(&text)
-            .ok()
-            .map(|json| match exact {
-                Some(version) => {
-                    crate::explore::persist::check_envelope_exact(&json, kind, version).is_ok()
-                }
-                None => crate::explore::persist::check_envelope(&json, kind).is_ok(),
-            })
-            .unwrap_or(false);
+        let Ok(bytes) = std::fs::read(path) else { continue };
+        // persist.db may be the columnar binary format (`qadam.qdb`);
+        // its magic + schema envelope stands in for the JSON kind header.
+        let is_kind = if key == "db" && crate::explore::qdb::is_qdb_bytes(&bytes) {
+            kind = "qadam.qdb";
+            crate::explore::qdb::check_qdb_envelope(&bytes).is_ok()
+        } else {
+            String::from_utf8(bytes)
+                .ok()
+                .and_then(|text| Json::parse(&text).ok())
+                .map(|json| match exact {
+                    Some(version) => {
+                        crate::explore::persist::check_envelope_exact(&json, kind, version).is_ok()
+                    }
+                    None => crate::explore::persist::check_envelope(&json, kind).is_ok(),
+                })
+                .unwrap_or(false)
+        };
         if is_kind {
             continue;
         }
@@ -1197,6 +1205,38 @@ mod tests {
         let finding = &json.get("findings").and_then(Json::as_arr).unwrap()[0];
         assert_eq!(finding.get("code").and_then(Json::as_str), Some("Q012"));
         assert_eq!(finding.get("line").and_then(Json::as_i64), Some(2));
+    }
+
+    #[test]
+    fn resume_mismatch_recognizes_qdb_databases() {
+        let dir = std::env::temp_dir().join(format!("qadam_lint_qdb_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let envelope = |schema: u32| {
+            let mut bytes = crate::explore::QDB_MAGIC.to_vec();
+            bytes.extend_from_slice(&schema.to_le_bytes());
+            bytes
+        };
+        let good = dir.join("db.qdb");
+        std::fs::write(&good, envelope(crate::explore::QDB_SCHEMA_VERSION)).unwrap();
+        let bad = dir.join("bad.qdb");
+        std::fs::write(&bad, envelope(99)).unwrap();
+        let spec_for = |path: &std::path::Path| {
+            format!(
+                "sweep {{\n  pe_type = [int16]\n  array = [8x8]\n  glb_kib = [64]\n}}\n\
+                 persist {{\n  db = \"{}\"\n}}\n",
+                path.display()
+            )
+        };
+        // A healthy qdb envelope passes the kind check (no JSON parse).
+        let (_, _, findings) = lint_source(&spec_for(&good), &LintOptions::default());
+        assert!(findings.iter().all(|f| f.code != "Q011"), "{findings:?}");
+        // A qdb with an unsupported schema is flagged as such.
+        let (_, _, findings) = lint_source(&spec_for(&bad), &LintOptions::default());
+        assert!(
+            findings.iter().any(|f| f.code == "Q011" && f.message.contains("qadam.qdb")),
+            "{findings:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

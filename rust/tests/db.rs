@@ -1,0 +1,175 @@
+//! Integration tests for million-point campaign storage: `qadam.qdb`
+//! round trips on real campaign databases (JSON → qdb → JSON is
+//! byte-identical, so every f64 survives bit-exactly), the parallel
+//! sharded frontier fold against sequential streaming and the quadratic
+//! batch oracle, and batched vs per-point checkpoint-journal writes.
+
+use std::fs;
+use std::path::PathBuf;
+
+use qadam::arch::{AcceleratorConfig, ModelAxes, ScratchpadCfg, SweepSpec};
+use qadam::dnn::{model_for, Dataset, ModelKind};
+use qadam::dse::pareto_front_reference;
+use qadam::explore::persist::{CampaignManifest, JournalWriter};
+use qadam::explore::{EvalDatabase, Explorer, PointResult};
+use qadam::pareto::{parallel_model_front, FrontSample, ParetoFront, OBJECTIVES};
+use qadam::quant::PeType;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qadam_db_test_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// 8-point hardware sweep: small enough for per-test campaigns, with two
+/// PE types so the spaces carry realistic metric spreads.
+fn tiny_sweep() -> SweepSpec {
+    SweepSpec {
+        pe_types: vec![PeType::Int16, PeType::LightPe1],
+        array_dims: vec![(8, 8), (16, 16)],
+        glb_kib: vec![64, 128],
+        spads: vec![ScratchpadCfg { ifmap_entries: 12, filter_entries: 224, psum_entries: 24 }],
+        dram_bw_gbps: vec![8.0],
+        clock_ghz: vec![2.0],
+    }
+}
+
+fn tiny_campaign() -> EvalDatabase {
+    Explorer::over(tiny_sweep())
+        .model(model_for(ModelKind::ResNet20, Dataset::Cifar10))
+        .workers(2)
+        .seed(7)
+        .run()
+        .unwrap()
+}
+
+#[test]
+fn qdb_round_trip_is_byte_lossless_for_a_real_campaign() {
+    let dir = temp_dir("roundtrip");
+    let db = tiny_campaign();
+    let json_before = dir.join("before.json");
+    db.save(&json_before).unwrap();
+    let qdb = dir.join("db.qdb");
+    db.save_qdb(&qdb).unwrap();
+    let reloaded = EvalDatabase::load_qdb(&qdb).unwrap();
+    let json_after = dir.join("after.json");
+    reloaded.save(&json_after).unwrap();
+    // JSON → qdb → JSON is byte-identical. The JSON layer prints
+    // shortest-round-trip floats, so byte equality implies bit equality
+    // of every metric and config field.
+    assert_eq!(fs::read(&json_before).unwrap(), fs::read(&json_after).unwrap());
+    // Format sniffing reads both representations into the same value.
+    assert_eq!(EvalDatabase::load_any(&qdb).unwrap(), reloaded);
+    assert_eq!(EvalDatabase::load_any(&json_before).unwrap(), reloaded);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn qdb_round_trip_preserves_joint_variant_spaces() {
+    let dir = temp_dir("joint");
+    let db = Explorer::over(tiny_sweep())
+        .model(model_for(ModelKind::ResNet20, Dataset::Cifar10))
+        .model_axes(ModelAxes { width_mults: vec![0.5, 1.0], depth_mults: vec![1] })
+        .workers(2)
+        .seed(7)
+        .run()
+        .unwrap();
+    assert!(db.has_model_variants());
+    assert!(db.spaces.iter().any(|s| s.model_name.contains('@')), "variant names expected");
+    let json_before = dir.join("before.json");
+    db.save(&json_before).unwrap();
+    let qdb = dir.join("db.qdb");
+    db.save_qdb(&qdb).unwrap();
+    let reloaded = EvalDatabase::load_qdb(&qdb).unwrap();
+    let json_after = dir.join("after.json");
+    reloaded.save(&json_after).unwrap();
+    assert_eq!(fs::read(&json_before).unwrap(), fs::read(&json_after).unwrap());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn parallel_front_matches_sequential_streaming_and_the_batch_oracle() {
+    let db = tiny_campaign();
+    assert!(!db.spaces.is_empty());
+    for space in &db.spaces {
+        // Sequential streaming front over the space's walk order.
+        let mut seq = ParetoFront::new(OBJECTIVES);
+        for (index, eval) in space.evals.iter().enumerate() {
+            seq.insert(
+                [eval.perf_per_area, eval.energy_uj],
+                FrontSample { index, eval: eval.clone() },
+            );
+        }
+        // Quadratic batch oracle over the same cloud.
+        let points: Vec<Vec<f64>> =
+            space.evals.iter().map(|e| vec![e.perf_per_area, e.energy_uj]).collect();
+        let mut oracle = pareto_front_reference(&points, &OBJECTIVES);
+        oracle.sort_unstable();
+        for workers in [1usize, 2, 3, 8] {
+            let merged = parallel_model_front(&space.evals, workers);
+            assert_eq!(merged.offered(), seq.offered(), "workers {workers}");
+            assert_eq!(merged.len(), seq.len(), "workers {workers}");
+            for (got, want) in merged.entries().iter().zip(seq.entries()) {
+                assert_eq!(got.seq, want.seq, "workers {workers}");
+                assert_eq!(got.payload.index, want.payload.index, "workers {workers}");
+                let got_bits: Vec<u64> = got.point.iter().map(|v| v.to_bits()).collect();
+                let want_bits: Vec<u64> = want.point.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "workers {workers}");
+            }
+            let mut indices: Vec<usize> =
+                merged.entries().iter().map(|e| e.payload.index).collect();
+            indices.sort_unstable();
+            assert_eq!(indices, oracle, "workers {workers}");
+        }
+    }
+}
+
+#[test]
+fn batched_journal_writes_are_byte_identical_to_per_point_appends() {
+    let dir = temp_dir("journal");
+    let model = model_for(ModelKind::ResNet20, Dataset::Cifar10);
+    let points: Vec<PointResult> = (0..7)
+        .map(|i| {
+            let config = AcceleratorConfig { rows: 8 + i, ..Default::default() };
+            let eval = qadam::dse::evaluate(&config, &model, 7);
+            PointResult { index: i, config, evals: vec![eval] }
+        })
+        .collect();
+    let manifest = CampaignManifest {
+        spec_fingerprint: 0x51ab,
+        seed: 7,
+        shard: 0,
+        num_shards: 1,
+        total: points.len(),
+        dataset: "CIFAR-10".into(),
+        models: vec!["ResNet-20".into()],
+        strategy: "exhaustive".into(),
+        model_axes: ModelAxes::default(),
+        campaign_fp: None,
+    };
+    let index_for = |pos: usize| pos;
+    // every_n = 3 puts flush boundaries both inside and across batches.
+    for group in [1usize, 2, 3, 7] {
+        let unbatched = dir.join(format!("unbatched_{group}.journal"));
+        let (mut writer, replay) =
+            JournalWriter::open(&unbatched, &manifest, 3, &index_for).unwrap();
+        assert!(replay.is_empty());
+        for point in &points {
+            writer.append(point).unwrap();
+        }
+        writer.finish().unwrap();
+        let batched = dir.join(format!("batched_{group}.journal"));
+        let (mut writer, _) = JournalWriter::open(&batched, &manifest, 3, &index_for).unwrap();
+        for chunk in points.chunks(group) {
+            writer.append_batch(chunk).unwrap();
+        }
+        writer.finish().unwrap();
+        assert_eq!(
+            fs::read(&unbatched).unwrap(),
+            fs::read(&batched).unwrap(),
+            "group size {group}: batched journal bytes diverge"
+        );
+    }
+    let _ = fs::remove_dir_all(&dir);
+}
